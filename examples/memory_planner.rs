@@ -1,0 +1,63 @@
+//! Memory planner — the Fig. 1 calculator as a tool.
+//!
+//! Given a model (by name from the paper's zoo, or custom dims) and a GPU
+//! fleet, print the FSDP memory breakdown and the max attainable batch size
+//! with and without CCE.
+//!
+//! ```bash
+//! cargo run --release --example memory_planner -- --model "Gemma 2 (2B)"
+//! cargo run --release --example memory_planner -- \
+//!     --layers 32 --hidden 4096 --vocab 128256 --params 8030000000 \
+//!     --gpus 8 --gpu-gb 75
+//! ```
+
+use anyhow::{anyhow, Result};
+use cce::memmodel::{fsdp_plan, ModelSpec, MODEL_ZOO};
+use cce::util::cli::Args;
+use cce::util::stats::fmt_mb;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let tokens = args.get("tokens", 65_536u64)?;
+    let gpus = args.get("gpus", 16u64)?;
+    let gpu_gb = args.get("gpu-gb", 75u64)?;
+
+    let spec: ModelSpec = match args.opt("model") {
+        Some(name) => *MODEL_ZOO
+            .iter()
+            .find(|m| m.name.eq_ignore_ascii_case(name))
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown model {name:?}; available: {}",
+                    MODEL_ZOO.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+                )
+            })?,
+        None => ModelSpec {
+            name: "custom",
+            layers: args.get("layers", 26u64)?,
+            hidden: args.get("hidden", 2304u64)?,
+            vocab: args.get("vocab", 256_000u64)?,
+            params: args.get("params", 2_614_300_000u64)?,
+        },
+    };
+
+    let plan = fsdp_plan(&spec, tokens, gpus, gpu_gb);
+    println!("== memory plan: {} on {gpus} x {gpu_gb} GB (usable), batch {tokens} tokens ==\n", spec.name);
+    println!("  weights + optimizer + grads : {}", fmt_mb(plan.weights_opt_bytes));
+    println!("  activation checkpoints      : {}", fmt_mb(plan.activations_bytes));
+    println!("  cross-entropy logits        : {}  <- removed by CCE", fmt_mb(plan.logits_bytes));
+    let total_before = plan.weights_opt_bytes + plan.activations_bytes + plan.logits_bytes;
+    let total_after = plan.weights_opt_bytes + plan.activations_bytes;
+    println!("  total                       : {} -> {} with CCE\n",
+             fmt_mb(total_before), fmt_mb(total_after));
+    println!("  max batch (tokens)          : {:>12}", plan.max_batch_before);
+    println!("  max batch with CCE          : {:>12}", plan.max_batch_after);
+    println!("  increase                    : {:.1}x", plan.increase());
+
+    let frac = plan.logits_bytes as f64 / total_before as f64;
+    println!(
+        "\n  the loss layer is {:.0}% of this model's training footprint at {tokens} tokens",
+        frac * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,377 @@
+"""AOT compiler: lower every jax/Pallas computation to HLO **text** once.
+
+Python runs only here (``make artifacts``).  Each artifact is an HLO-text
+module plus a ``manifest.json`` entry describing its I/O signature, so the
+Rust runtime (``rust/src/runtime``) can load, compile (PJRT CPU), and execute
+it without ever touching Python.
+
+Interchange is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifact groups
+===============
+``model``  — init / train_step_{method} / eval_step for a ModelConfig+
+             TrainConfig pair (the e2e pretraining driver and Figs. 4/5).
+``loss``   — standalone loss microbenchmarks: fwd and fwd+bwd for every
+             method of Table 1 at the benchmark grid size.
+``sweep``  — fwd+bwd for the headline methods across token counts
+             (Figs. A1/A2).
+``stats``  — softmax rank statistics (Fig. 3).
+
+Run ``python -m compile.aot --help`` for the knobs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim
+from .kernels import BlockSizes, CCEOptions, VARIANTS, baselines, ref
+from .kernels import linear_cross_entropy
+
+
+# --------------------------------------------------------------- lowering
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> Dict[str, Any]:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+class ArtifactWriter:
+    """Collects lowered artifacts + manifest entries under ``out_dir``."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: Dict[str, Any] = {"artifacts": {}, "meta": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn: Callable, args: Sequence[Any],
+            input_names: Sequence[str], output_names: Sequence[str],
+            extra: Dict[str, Any] | None = None) -> None:
+        specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        flat_outs = jax.tree_util.tree_leaves(outs)
+        assert len(flat_outs) == len(output_names), \
+            f"{name}: {len(flat_outs)} outputs vs {len(output_names)} names"
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [{"name": n, **spec_of(s)}
+                       for n, s in zip(input_names, specs)],
+            "outputs": [{"name": n, **spec_of(s)}
+                        for n, s in zip(output_names, flat_outs)],
+            **(extra or {}),
+        }
+        print(f"  [aot] {name}: {len(text) / 1e6:.2f} MB HLO, "
+              f"{len(specs)} in / {len(flat_outs)} out", flush=True)
+
+    def finish(self) -> None:
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  [aot] wrote {path}")
+
+
+# ------------------------------------------------------------ param names
+
+def param_leaves(cfg: M.ModelConfig) -> List[Tuple[str, Any]]:
+    """Deterministic flat (name, ShapeDtypeStruct) list of the param tree."""
+    shapes = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+# -------------------------------------------------------- artifact groups
+
+def emit_model_artifacts(w: ArtifactWriter, cfg: M.ModelConfig,
+                         tcfg: M.TrainConfig, methods: Sequence[str],
+                         tag: str) -> None:
+    """init / train_step_{method} / eval_step / logits for one config."""
+    leaves = param_leaves(cfg)
+    names = [n for n, _ in leaves]
+    treedef = jax.tree_util.tree_structure(
+        jax.eval_shape(lambda k: M.init_params(cfg, k),
+                       jax.ShapeDtypeStruct((2,), jnp.uint32)))
+
+    def unflatten(flat):
+        return jax.tree_util.tree_unflatten(treedef, list(flat))
+
+    n_p = len(leaves)
+
+    # ---- init: seed -> flat params
+    def init_fn(seed):
+        params = M.init_params(cfg, jax.random.PRNGKey(seed[0]))
+        return tuple(jax.tree_util.tree_leaves(params))
+
+    w.add(f"{tag}_init", init_fn, [jax.ShapeDtypeStruct((1,), jnp.int32)],
+          ["seed"], [f"param:{n}" for n in names])
+
+    # ---- train_step per method
+    tok_shape = (tcfg.accum, tcfg.batch, tcfg.seq)
+    step_args = (
+        [l for _, l in leaves]                                   # params
+        + [jax.ShapeDtypeStruct(l.shape, jnp.float32) for _, l in leaves]
+        + [jax.ShapeDtypeStruct(l.shape, jnp.float32) for _, l in leaves]
+        + [jax.ShapeDtypeStruct((), jnp.int32),                  # step
+           jax.ShapeDtypeStruct(tok_shape, jnp.int32),           # tokens
+           jax.ShapeDtypeStruct(tok_shape, jnp.int32)]           # targets
+    )
+    in_names = ([f"param:{n}" for n in names]
+                + [f"m:{n}" for n in names] + [f"v:{n}" for n in names]
+                + ["step", "tokens", "targets"])
+    out_names = in_names[:3 * n_p] + ["step", "loss", "grad_norm"]
+
+    for method in methods:
+        mt = dataclasses.replace(tcfg, method=method)
+
+        def train_fn(*flat, _mt=mt):
+            p = unflatten(flat[:n_p])
+            m_ = unflatten(flat[n_p:2 * n_p])
+            v_ = unflatten(flat[2 * n_p:3 * n_p])
+            step, tokens, targets = flat[3 * n_p:]
+            np_, nm, nv, ns, loss, gnorm = M.train_step(
+                cfg, _mt, p, m_, v_, step, tokens, targets)
+            return (tuple(jax.tree_util.tree_leaves(np_))
+                    + tuple(jax.tree_util.tree_leaves(nm))
+                    + tuple(jax.tree_util.tree_leaves(nv))
+                    + (ns, loss, gnorm))
+
+        w.add(f"{tag}_train_step_{method}", train_fn, step_args,
+              in_names, out_names, extra={"method": method})
+
+    # ---- eval_step (loss method irrelevant for the value; use cce)
+    eval_args = [l for _, l in leaves] + [
+        jax.ShapeDtypeStruct((tcfg.batch, tcfg.seq), jnp.int32),
+        jax.ShapeDtypeStruct((tcfg.batch, tcfg.seq), jnp.int32)]
+
+    def eval_fn(*flat):
+        p = unflatten(flat[:n_p])
+        tokens, targets = flat[n_p:]
+        return M.eval_step(cfg, p, tokens, targets, method="cce")
+
+    w.add(f"{tag}_eval_step", eval_fn, eval_args,
+          [f"param:{n}" for n in names] + ["tokens", "targets"],
+          ["loss_sum", "count"])
+
+    # ---- next-token logits for one sequence (generation / inspection)
+    def logits_fn(*flat):
+        p = unflatten(flat[:n_p])
+        tokens = flat[n_p]
+        return (M.logits(cfg, p, tokens)[:, -1, :],)
+
+    w.add(f"{tag}_logits", logits_fn,
+          [l for _, l in leaves]
+          + [jax.ShapeDtypeStruct((1, tcfg.seq), jnp.int32)],
+          [f"param:{n}" for n in names] + ["tokens"], ["logits"])
+
+    # ---- softmax rank statistics from the *trained model* (Fig. 3): mean
+    # probability of the i-th most likely token over a batch of real inputs.
+    def rank_stats_fn(*flat):
+        p = unflatten(flat[:n_p])
+        tokens = flat[n_p]
+        z = M.logits(cfg, p, tokens).reshape(-1, cfg.vocab_size)
+        probs = jax.nn.softmax(z, axis=1)
+        return (jnp.mean(jnp.sort(probs, axis=1)[:, ::-1], axis=0),)
+
+    w.add(f"{tag}_rank_stats", rank_stats_fn,
+          [l for _, l in leaves]
+          + [jax.ShapeDtypeStruct((tcfg.batch, tcfg.seq), jnp.int32)],
+          [f"param:{n}" for n in names] + ["tokens"], ["rank_probs"])
+
+    w.manifest["meta"][tag] = {
+        "model": dataclasses.asdict(cfg),
+        "train": dataclasses.asdict(tcfg),
+        "params": [{"name": n, **spec_of(l)} for n, l in leaves],
+        "param_count": cfg.param_count(),
+    }
+
+
+LOSS_METHODS = [
+    "cce", "cce_no_sort", "cce_no_filter", "cce_kahan", "cce_kahan_fullc",
+    "cce_kahan_fulle", "baseline", "fused", "chunked8", "liger",
+]
+
+
+# Interpret-mode Pallas emulates the kernel grid as a sequential HLO loop,
+# so small TPU-style tiles (128x256) create thousands of serial iterations.
+# Large tiles keep the same algorithm (the VMEM model stays within the 16 MB
+# budget: (512*576 + 2048*576 + 512*2048)*4B ~= 10 MB) while making the CPU
+# emulation tractable — see EXPERIMENTS.md §Perf L1.
+BENCH_BLOCKS = BlockSizes(n_block=512, v_block=2048, d_block=576)
+
+
+def loss_fn_for(method: str, softcap=None,
+                block_sizes: BlockSizes | None = None):
+    """(e, c, x) -> (sum_loss,) forward-only callable for ``method``."""
+    bs = block_sizes or BENCH_BLOCKS
+
+    def fwd(e, c, x):
+        if method in VARIANTS:
+            opts = CCEOptions(**{**VARIANTS[method].__dict__,
+                                 "block_sizes": bs, "softcap": softcap})
+            return (jnp.sum(linear_cross_entropy(e, c, x, opts)),)
+        if method == "liger":
+            loss, _, _ = baselines.fused_chunked_ce(e, c, x, 8, softcap)
+            return (loss,)
+        if method == "baseline":
+            return (jnp.sum(baselines.baseline_ce(e, c, x, softcap)),)
+        if method == "fused":
+            return (jnp.sum(baselines.fused_ce(e, c, x, softcap)),)
+        if method.startswith("chunked"):
+            k = int(method[len("chunked"):])
+            return (jnp.sum(baselines.chunked_ce(e, c, x, k, softcap)),)
+        raise ValueError(method)
+
+    return fwd
+
+
+def loss_fwdbwd_for(method: str, softcap=None,
+                    block_sizes: BlockSizes | None = None):
+    """(e, c, x) -> (sum_loss, grad_e, grad_c) callable for ``method``."""
+    if method == "liger":
+        def fb(e, c, x):
+            return baselines.fused_chunked_ce(e, c, x, 8, softcap)
+        return fb
+
+    fwd = loss_fn_for(method, softcap, block_sizes)
+
+    def fb(e, c, x):
+        loss, (de, dc) = jax.value_and_grad(
+            lambda e_, c_: fwd(e_, c_, x)[0], argnums=(0, 1))(e, c)
+        return loss, de, dc
+
+    return fb
+
+
+def emit_loss_artifacts(w: ArtifactWriter, n: int, d: int, v: int,
+                        methods: Sequence[str], dtype=jnp.float32,
+                        softcap=None, suffix: str = "") -> None:
+    e = jax.ShapeDtypeStruct((n, d), dtype)
+    c = jax.ShapeDtypeStruct((v, d), dtype)
+    x = jax.ShapeDtypeStruct((n,), jnp.int32)
+    size_tag = f"n{n}_d{d}_v{v}{suffix}"
+    for method in methods:
+        w.add(f"loss_fwd_{method}_{size_tag}",
+              loss_fn_for(method, softcap), [e, c, x],
+              ["e", "c", "x"], ["loss_sum"],
+              extra={"method": method, "n": n, "d": d, "v": v, "kind": "fwd"})
+        w.add(f"loss_fwdbwd_{method}_{size_tag}",
+              loss_fwdbwd_for(method, softcap), [e, c, x],
+              ["e", "c", "x"], ["loss_sum", "grad_e", "grad_c"],
+              extra={"method": method, "n": n, "d": d, "v": v,
+                     "kind": "fwdbwd"})
+
+
+def emit_stats_artifacts(w: ArtifactWriter, n: int, d: int, v: int) -> None:
+    """Fig. 3: mean softmax probability by rank, from (e, c)."""
+    e = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    c = jax.ShapeDtypeStruct((v, d), jnp.float32)
+
+    def ranks(e_, c_):
+        return (ref.ref_softmax_ranks(e_, c_),)
+
+    w.add(f"softmax_ranks_n{n}_d{d}_v{v}", ranks, [e, c],
+          ["e", "c"], ["rank_probs"], extra={"n": n, "d": d, "v": v})
+
+
+# ------------------------------------------------------------------- main
+
+# The e2e pretraining config (~10M params — the CPU-scale stand-in for the
+# paper's 2B models; see DESIGN.md "Numerical-scale policy").
+E2E_MODEL = M.ModelConfig()
+E2E_TRAIN = M.TrainConfig(batch=8, seq=256, accum=2)
+
+# Tiny config for fast Rust integration tests.
+TINY_MODEL = M.ModelConfig(vocab_size=512, d_model=64, n_layers=2, n_heads=4,
+                           n_kv_heads=2, d_ff=128, max_seq=32)
+TINY_TRAIN = M.TrainConfig(batch=2, seq=32, accum=2,
+                           opt=optim.OptimizerConfig(lr=3e-3, warmup_steps=4,
+                                                     total_steps=200))
+
+# Scaled Table 1 benchmark grid (paper: N=8192, D=2304, V=256000 — Gemma 2
+# 2B.  Scaled by 4x/8x to CPU reach while keeping V/D large; the analytic
+# memory model reports the full-size numbers next to these).
+BENCH_N, BENCH_D, BENCH_V = 2048, 576, 32768
+SWEEP_NS = [512, 1024, 4096]
+SWEEP_METHODS = ["cce", "baseline", "fused", "chunked8", "liger"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--groups", default="model,loss,stats,sweep",
+                    help="comma-separated artifact groups")
+    ap.add_argument("--train-methods", default="cce,fused,cce_kahan_fullc",
+                    help="loss methods to emit train_step artifacts for")
+    ap.add_argument("--bench-n", type=int, default=BENCH_N)
+    ap.add_argument("--bench-d", type=int, default=BENCH_D)
+    ap.add_argument("--bench-v", type=int, default=BENCH_V)
+    args = ap.parse_args()
+
+    groups = set(args.groups.split(","))
+    out_dir = args.out if os.path.isabs(args.out) else \
+        os.path.join(os.path.dirname(__file__), "..", args.out)
+    w = ArtifactWriter(os.path.normpath(out_dir))
+    train_methods = args.train_methods.split(",")
+
+    if "model" in groups:
+        print("[aot] model artifacts (e2e config)", flush=True)
+        emit_model_artifacts(w, E2E_MODEL, E2E_TRAIN, train_methods, "e2e")
+        print("[aot] model artifacts (tiny config)", flush=True)
+        emit_model_artifacts(w, TINY_MODEL, TINY_TRAIN, ["cce", "baseline"],
+                             "tiny")
+    if "loss" in groups:
+        print("[aot] loss microbenchmarks (Table 1 grid)", flush=True)
+        emit_loss_artifacts(w, args.bench_n, args.bench_d, args.bench_v,
+                            LOSS_METHODS)
+        # Small grid for Rust integration tests.
+        emit_loss_artifacts(w, 128, 64, 512,
+                            ["cce", "baseline", "liger"], suffix="_tiny")
+    if "stats" in groups:
+        print("[aot] softmax rank stats (Fig. 3)", flush=True)
+        emit_stats_artifacts(w, 1024, args.bench_d, args.bench_v)
+    if "sweep" in groups:
+        print("[aot] token-count sweep (Figs. A1/A2)", flush=True)
+        for n in SWEEP_NS:
+            emit_loss_artifacts(w, n, args.bench_d, args.bench_v,
+                                SWEEP_METHODS)
+
+    w.manifest["meta"]["bench"] = {
+        "n": args.bench_n, "d": args.bench_d, "v": args.bench_v,
+        "sweep_ns": SWEEP_NS + [args.bench_n],
+        "loss_methods": LOSS_METHODS, "sweep_methods": SWEEP_METHODS,
+    }
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""L1 — Pallas kernels for Cut Cross-Entropy (build-time only).
+
+Public surface:
+
+* :func:`cce.linear_cross_entropy` / :func:`cce.cce_mean_loss` — the paper's
+  loss with full autodiff support and all ablation variants.
+* :mod:`baselines` — the Table 1 comparison methods.
+* :mod:`ref` — the pure-jnp oracle used by the test suite.
+"""
+
+from .common import BlockSizes, FILTER_EPS  # noqa: F401
+from .cce import (  # noqa: F401
+    CCE, CCE_KAHAN, CCE_KAHAN_FULLC, CCE_KAHAN_FULLE, CCE_NO_FILTER,
+    CCE_NO_SORT, VARIANTS, CCEOptions, cce_mean_loss, cce_training_loss,
+    compact_tokens, linear_cross_entropy, linear_cross_entropy_with_lse,
+)
+from .indexed_matmul import indexed_matmul  # noqa: F401
+from .lse_forward import lse_forward  # noqa: F401
+from .lse_backward import lse_backward  # noqa: F401
+from . import baselines, ref  # noqa: F401

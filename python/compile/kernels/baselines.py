@@ -1,0 +1,111 @@
+"""Baseline cross-entropy implementations (the comparison rows of Table 1).
+
+Each baseline is a JAX analogue of a method the paper benchmarks.  The
+*allocation schedule* — which intermediates of which shapes live in global
+memory — matches the original, so the analytic memory model
+(``rust/src/memmodel``) and the latency ordering carry over to our substrate:
+
+``baseline_ce``
+    PyTorch eager analogue: materializes the ``(N, V)`` float32 logits in the
+    forward pass and keeps them alive for the backward pass.
+``fused_ce``
+    ``torch.compile`` analogue: same math wrapped in ``jax.checkpoint`` so
+    the logits are *rematerialized* in the backward pass instead of saved —
+    kernel fusion trades memory for recompute.
+``chunked_ce``
+    Torch Tune analogue: splits the token axis into ``n_chunks`` chunks and
+    computes loss per chunk under ``jax.checkpoint``; peak logit memory is
+    ``O(N V / n_chunks)``.
+``fused_chunked_ce``
+    Liger analogue: computes loss *and* both gradients simultaneously, chunk
+    by chunk, in a single pass.  Fast-path memory is ``O(D (N + V))`` for the
+    gradients plus one chunk of logits, but the loss cannot be transformed
+    before differentiation (the gradient of the *mean* loss is baked in).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common, ref
+
+
+def baseline_ce(e: jax.Array, c: jax.Array, x: jax.Array,
+                softcap: Optional[float] = None) -> jax.Array:
+    """Eager baseline: per-token NLL with logits saved for backward."""
+    return ref.ref_loss(e, c, x, softcap)
+
+
+def fused_ce(e: jax.Array, c: jax.Array, x: jax.Array,
+             softcap: Optional[float] = None) -> jax.Array:
+    """torch.compile analogue: logits rematerialized in the backward pass."""
+    f = jax.checkpoint(lambda e_, c_: ref.ref_loss(e_, c_, x, softcap))
+    return f(e, c)
+
+
+def chunked_ce(e: jax.Array, c: jax.Array, x: jax.Array,
+               n_chunks: int = 8,
+               softcap: Optional[float] = None) -> jax.Array:
+    """Torch Tune analogue: N-axis chunking, recompute-per-chunk backward."""
+    n = e.shape[0]
+    pad = (-n) % n_chunks
+    e_p = common.pad_axis(e, 0, n_chunks if pad else 1)
+    x_p = common.pad_axis(x, 0, n_chunks if pad else 1, value=-1)
+    chunk = e_p.shape[0] // n_chunks
+    e_chunks = e_p.reshape(n_chunks, chunk, e.shape[1])
+    x_chunks = x_p.reshape(n_chunks, chunk)
+
+    @jax.checkpoint
+    def one(e_i, x_i):
+        return ref.ref_loss(e_i, c, x_i, softcap)
+
+    loss = jax.lax.map(lambda args: one(*args), (e_chunks, x_chunks))
+    return loss.reshape(-1)[:n]
+
+
+def fused_chunked_ce(
+    e: jax.Array, c: jax.Array, x: jax.Array,
+    n_chunks: int = 8, softcap: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Liger analogue: mean loss + both gradients in one chunked pass.
+
+    Returns ``(mean_loss, grad_e, grad_c)`` directly — the gradient of the
+    *mean over valid tokens* is computed inside the pass, so no transform can
+    be applied to the loss afterwards (the limitation the paper notes).
+    """
+    n = e.shape[0]
+    pad = (-n) % n_chunks
+    e_p = common.pad_axis(e, 0, n_chunks if pad else 1)
+    x_p = common.pad_axis(x, 0, n_chunks if pad else 1, value=-1)
+    chunk = e_p.shape[0] // n_chunks
+    e_chunks = e_p.reshape(n_chunks, chunk, e.shape[1])
+    x_chunks = x_p.reshape(n_chunks, chunk)
+    count = jnp.maximum(jnp.sum(common.valid_mask(x)), 1).astype(jnp.float32)
+
+    def one(carry, args):
+        dc_acc, loss_acc = carry
+        e_i, x_i = args
+
+        def chunk_loss(e_, c_):
+            return jnp.sum(ref.ref_loss(e_, c_, x_i, softcap)) / count
+
+        (l_i, (de_i, dc_i)) = jax.value_and_grad(chunk_loss, argnums=(0, 1))(
+            e_i, c)
+        return (dc_acc + dc_i, loss_acc + l_i), de_i
+
+    (dc, loss), de_chunks = jax.lax.scan(
+        one, (jnp.zeros_like(c, dtype=jnp.float32), jnp.float32(0.0)),
+        (e_chunks, x_chunks))
+    de = de_chunks.reshape(-1, e.shape[1])[:n].astype(e.dtype)
+    return loss, de, dc.astype(c.dtype)
+
+
+METHODS = {
+    "baseline": baseline_ce,
+    "fused": fused_ce,
+    "chunked8": partial(chunked_ce, n_chunks=8),
+}

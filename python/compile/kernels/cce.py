@@ -1,0 +1,225 @@
+"""Cut Cross-Entropy: the assembled memory-efficient loss (paper §4).
+
+``linear_cross_entropy(e, c, x, opts)`` returns the per-token NLL vector
+
+    l_i = log-sum-exp_j(softcap(c_j . e_i)) - softcap(c_{x_i} . e_i)
+
+computed without ever materializing the ``(N, |V|)`` logit matrix:
+
+* forward — :mod:`indexed_matmul` (Algorithm 1) + :mod:`lse_forward`
+  (Algorithm 2); global memory above the outputs is ``O(N + |V|)``.
+* backward — the fused :mod:`lse_backward` (Algorithm 4) with gradient
+  filtering, optional vocabulary sorting, and optional Kahan summation.
+
+Separate forward/backward stages (unlike the Liger analogue) mean any jnp
+transform can be applied to the returned per-token loss — masking, weighting,
+z-loss — and autodiff composes through it.
+
+The variant table of the paper maps to :class:`CCEOptions` presets:
+
+==================  =========================================================
+``CCE``             filter on both grads + vocab sorting (Table 1 row 1)
+``CCE_NO_SORT``     no vocabulary sorting            (Table 1 row 6)
+``CCE_NO_FILTER``   no gradient filtering            (Table 1 row 7)
+``CCE_KAHAN``       + Kahan summation                (Table 1 row 8)
+``CCE_KAHAN_FULLC`` Kahan, unfiltered grad-C — the pretraining recipe (row 9)
+``CCE_KAHAN_FULLE`` Kahan, unfiltered grad-E         (Table 1 row 10)
+==================  =========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import BlockSizes, FILTER_EPS
+from .indexed_matmul import indexed_matmul
+from .lse_forward import lse_forward
+from .lse_backward import lse_backward
+
+
+@dataclasses.dataclass(frozen=True)
+class CCEOptions:
+    """Hashable configuration for one CCE variant (a `custom_vjp` static arg)."""
+
+    block_sizes: BlockSizes = BlockSizes()
+    softcap: Optional[float] = None
+    #: gradient-filter threshold; ``0.0`` disables filtering.
+    eps: float = FILTER_EPS
+    filter_e: bool = True
+    filter_c: bool = True
+    kahan: bool = False
+    sort_vocab: bool = True
+
+    def label(self) -> str:
+        """Short human-readable variant name (used by benches/tests)."""
+        if self.eps == 0.0:
+            return "cce_no_filter"
+        if self.kahan and not self.filter_c:
+            return "cce_kahan_fullc"
+        if self.kahan and not self.filter_e:
+            return "cce_kahan_fulle"
+        if self.kahan:
+            return "cce_kahan"
+        if not self.sort_vocab:
+            return "cce_no_sort"
+        return "cce"
+
+
+CCE = CCEOptions()
+CCE_NO_SORT = CCEOptions(sort_vocab=False)
+CCE_NO_FILTER = CCEOptions(eps=0.0, sort_vocab=False)
+CCE_KAHAN = CCEOptions(kahan=True)
+CCE_KAHAN_FULLC = CCEOptions(kahan=True, filter_c=False)
+CCE_KAHAN_FULLE = CCEOptions(kahan=True, filter_e=False)
+
+VARIANTS = {
+    v.label(): v
+    for v in (CCE, CCE_NO_SORT, CCE_NO_FILTER, CCE_KAHAN,
+              CCE_KAHAN_FULLC, CCE_KAHAN_FULLE)
+}
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_cross_entropy_with_lse(
+    e: jax.Array, c: jax.Array, x: jax.Array, opts: CCEOptions = CCE,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-token ``(nll, lse)`` — both differentiable through Algorithm 3.
+
+    Exposing the LSE makes the auxiliary losses used in LLM training
+    compose through the memory-efficient kernels (the paper's "separate
+    forward and backward stages enable user-defined transformations"):
+
+    * **z-loss** (PaLM): ``mean(lse**2)`` regularizes the partition
+      function; its upstream gradient enters Algorithm 4 as the paper's
+      ``∇LSE`` term ``S * d_lse``.
+    * **label smoothing**: combine with :func:`mean_logits` to form
+      ``(1-a)*nll + a*(lse - mean_z)``.
+    """
+    (loss, lse), _ = _forward_with_lse(e, c, x, opts)
+    return loss, lse
+
+
+def linear_cross_entropy(e: jax.Array, c: jax.Array, x: jax.Array,
+                         opts: CCEOptions = CCE) -> jax.Array:
+    """Per-token NLL of shape ``(N,)``; 0 (and zero gradient) where ``x < 0``."""
+    loss, _ = linear_cross_entropy_with_lse(e, c, x, opts)
+    return loss
+
+
+def _forward_with_lse(e, c, x, opts):
+    dot = indexed_matmul(e, c, x, block_sizes=opts.block_sizes,
+                         softcap=opts.softcap)
+    lse, mean_logit = lse_forward(e, c, block_sizes=opts.block_sizes,
+                                  softcap=opts.softcap)
+    valid = common.valid_mask(x)
+    loss = jnp.where(valid, lse - dot, 0.0)
+    return (loss, lse), (e, c, x, lse, mean_logit)
+
+
+def _fwd(e, c, x, opts):
+    out, res = _forward_with_lse(e, c, x, opts)
+    return out, res
+
+
+def _bwd(opts, res, grads):
+    dloss, dlse = grads
+    e, c, x, lse, mean_logit = res
+    # The NLL gradient is masked on ignored tokens; the LSE output is
+    # defined (and differentiable) for every token.
+    dloss = jnp.where(common.valid_mask(x), dloss, 0.0).astype(jnp.float32)
+    dlse = dlse.astype(jnp.float32)
+
+    if opts.sort_vocab:
+        # Order the vocabulary by descending average logit so non-trivial
+        # softmax mass lands in dense, contiguous blocks (paper §4.3).  The
+        # O(|V|) permutation is the "1 MB temporary buffer" of the paper.
+        perm = jnp.argsort(-mean_logit)
+        inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0]))
+        c_s = jnp.take(c, perm, axis=0)
+        x_s = jnp.where(x >= 0, jnp.take(inv, jnp.where(x >= 0, x, 0)), x)
+        de, dc_s = lse_backward(
+            e, c_s, x_s, lse, dloss, dlse=dlse,
+            block_sizes=opts.block_sizes, softcap=opts.softcap,
+            eps=opts.eps, filter_e=opts.filter_e, filter_c=opts.filter_c,
+            kahan=opts.kahan)
+        dc = jnp.take(dc_s, inv, axis=0)
+    else:
+        de, dc = lse_backward(
+            e, c, x, lse, dloss, dlse=dlse,
+            block_sizes=opts.block_sizes, softcap=opts.softcap,
+            eps=opts.eps, filter_e=opts.filter_e, filter_c=opts.filter_c,
+            kahan=opts.kahan)
+
+    return de, dc, None
+
+
+linear_cross_entropy_with_lse.defvjp(_fwd, _bwd)
+
+
+def cce_mean_loss(e: jax.Array, c: jax.Array, x: jax.Array,
+                  opts: CCEOptions = CCE) -> jax.Array:
+    """Mean NLL over the *valid* (non-ignored) tokens — the training loss."""
+    loss = linear_cross_entropy(e, c, x, opts)
+    count = jnp.maximum(jnp.sum(common.valid_mask(x)), 1)
+    return jnp.sum(loss) / count
+
+
+def cce_training_loss(
+    e: jax.Array, c: jax.Array, x: jax.Array,
+    opts: CCEOptions = CCE,
+    z_loss: float = 0.0,
+    label_smoothing: float = 0.0,
+) -> jax.Array:
+    """Production training loss: mean NLL + z-loss + label smoothing.
+
+    All three terms differentiate through the memory-efficient kernels —
+    the z-loss gradient is the ``∇LSE`` path of Algorithm 3, and the
+    smoothing term uses the row-mean logits computed alongside the LSE.
+    """
+    valid = common.valid_mask(x)
+    count = jnp.maximum(jnp.sum(valid), 1)
+    nll, lse = linear_cross_entropy_with_lse(e, c, x, opts)
+    total = jnp.sum(nll) / count
+    if z_loss > 0.0:
+        zl = jnp.sum(jnp.where(valid, jnp.square(lse), 0.0)) / count
+        total = total + z_loss * zl
+    if label_smoothing > 0.0:
+        # mean_j log p_ij = mean_j z_ij - lse_i; the row-mean of logits is
+        # e_i . mean_j(c_j) — one D-length dot per token, O(N+D) memory.
+        c_mean = jnp.mean(c.astype(jnp.float32), axis=0)
+        row_mean = jnp.dot(e.astype(jnp.float32), c_mean)
+        if opts.softcap is not None:
+            # softcap is nonlinear; fall back to the exact row mean via the
+            # mean of softcapped logits is not expressible as one dot, so
+            # smoothing with softcap recomputes blockwise in the fwd pass.
+            raise NotImplementedError(
+                "label smoothing with logit softcapping is not supported")
+        smooth = jnp.sum(jnp.where(valid, lse - row_mean, 0.0)) / count
+        total = (1.0 - label_smoothing) * total + label_smoothing * smooth
+    return total
+
+
+def compact_tokens(
+    e: jax.Array, x: jax.Array, budget: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Remove ignored tokens before the loss (paper Appendix B).
+
+    Gathers the rows with ``x >= 0`` to the front and truncates/pads to the
+    static ``budget``.  ``budget`` must be >= the number of valid tokens;
+    surplus slots are marked ignored, so the loss is unchanged while the
+    kernels process ``budget`` instead of ``N`` rows.
+    """
+    n = x.shape[0]
+    valid = common.valid_mask(x)
+    order = jnp.argsort(~valid)  # valid rows first, stable
+    idx = order[:budget]
+    e_c = jnp.take(e, idx, axis=0)
+    x_c = jnp.where(jnp.take(valid, idx), jnp.take(x, idx), -1)
+    del n
+    return e_c, x_c

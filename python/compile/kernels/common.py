@@ -1,0 +1,97 @@
+"""Shared configuration and helpers for the CCE Pallas kernels.
+
+All kernels operate on row-major tensors:
+
+* ``e``: ``(N, D)`` token embeddings (the backbone output ``E`` of the paper,
+  transposed to row-major).
+* ``c``: ``(V, D)`` classifier matrix (``C`` of the paper, transposed).
+* ``x``: ``(N,)`` int32 ground-truth token ids. Negative ids mark *ignored*
+  tokens (padding / prompt), matching the paper's Appendix B semantics.
+
+Blocking follows the paper's Algorithms 1-4: the logit matrix ``A = E C^T`` is
+never materialized in HBM; each grid step stages an ``(N_B, D)`` tile of ``E``
+and a ``(V_B, D)`` tile of ``C`` in VMEM and accumulates the ``(N_B, V_B)``
+logit block on the MXU in ``D_B``-sized steps.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's Triton
+kernels synchronize a global log-sum-exp with a spin-lock atomic.  Pallas-TPU
+has no inter-block atomics, so we instead make the vocabulary axis the
+*innermost* grid dimension and carry an online LSE in the revisited output
+block — the same sequential-minor reduction trick FlashAttention uses on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Default block sizes.  On a real TPU these would be tuned to the 16 MB VMEM
+# budget and 128x128 MXU tiles (see DESIGN.md §Perf and EXPERIMENTS.md §Perf
+# for the footprint arithmetic).  Under interpret=True the same shapes are
+# used so the *structure* matches what would run on hardware.
+DEFAULT_N_BLOCK = 128
+DEFAULT_V_BLOCK = 256
+DEFAULT_D_BLOCK = 128
+
+# Gradient-filter threshold: the smallest bfloat16 value that survives
+# summation-with-rounding (paper §4.3, eps = 2**-12).
+FILTER_EPS = 2.0**-12
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSizes:
+    """Blocking configuration for the CCE kernels (paper's N_B, V_B, D_B)."""
+
+    n_block: int = DEFAULT_N_BLOCK
+    v_block: int = DEFAULT_V_BLOCK
+    d_block: int = DEFAULT_D_BLOCK
+
+    def clamp(self, n: int, v: int, d: int) -> "BlockSizes":
+        """Shrink blocks to the problem size so tiny test shapes still work."""
+        return BlockSizes(
+            n_block=min(self.n_block, _round_up(n, 8)),
+            v_block=min(self.v_block, _round_up(v, 8)),
+            d_block=min(self.d_block, _round_up(d, 8)),
+        )
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(a: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    """Pad ``axis`` of ``a`` up to a multiple of ``multiple`` with ``value``."""
+    size = a.shape[axis]
+    target = _round_up(size, multiple)
+    if target == size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def softcap_fwd(a: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Logit softcapping ``cap * tanh(a / cap)`` (Gemma 2 style).
+
+    ``cap=None`` is the identity. The backward kernels need the derivative
+    ``d softcap / d a = 1 - tanh(a / cap)^2``; see :func:`softcap_bwd_mul`.
+    """
+    if cap is None:
+        return a
+    return cap * jnp.tanh(a / cap)
+
+
+def softcap_bwd_mul(a_raw: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Multiplier ``d softcap(a)/d a`` evaluated at the *raw* logits."""
+    if cap is None:
+        return jnp.ones_like(a_raw)
+    t = jnp.tanh(a_raw / cap)
+    return 1.0 - t * t
+
+
+def valid_mask(x: jax.Array) -> jax.Array:
+    """Boolean mask of tokens that participate in the loss (paper Appx. B)."""
+    return x >= 0

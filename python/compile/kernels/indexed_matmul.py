@@ -1,0 +1,103 @@
+"""Memory-efficient indexed matrix multiplication (paper Algorithm 1).
+
+Computes ``o_i = c[x_i] . e_i`` — the logit of the ground-truth token for
+every position — without materializing either the full logit matrix
+(``O(N |V|)``) or the gathered classifier rows (``O(N D)``).
+
+The Pallas grid tiles the token axis; each program stages the ``(N_B, D)``
+tile of ``e`` in VMEM, gathers the ``N_B`` classifier rows it needs, and
+reduces the dot products in ``D_B`` steps.  Only the ``(N_B,)`` result vector
+is written back to HBM.
+
+Ignored tokens (``x_i < 0``) produce ``o_i = 0`` — they are gathered from row
+0 and masked, so the kernel never performs an out-of-bounds load.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .common import BlockSizes
+
+
+def _kernel(x_ref, e_ref, c_ref, o_ref, *, d_block: int, n_valid: int,
+            softcap: Optional[float]):
+    n = pl.program_id(0)
+    x = x_ref[...]
+    safe_x = jnp.where(x >= 0, x, 0)
+
+    n_b = o_ref.shape[0]
+    d = e_ref.shape[1]
+    steps = d // d_block
+
+    # Gather the N_B classifier rows for this tile.  On TPU this is a
+    # dynamic-slice DMA per row out of HBM-resident C; under interpret it is a
+    # plain take.  The full C tile never occupies VMEM — only (N_B, D_B).
+    def body(s, acc):
+        lo = s * d_block
+        e_blk = jax.lax.dynamic_slice(e_ref[...], (0, lo), (n_b, d_block))
+        c_blk = jax.lax.dynamic_slice(c_ref[...], (0, lo), (c_ref.shape[0], d_block))
+        c_rows = jnp.take(c_blk, safe_x, axis=0)
+        return acc + jnp.sum(e_blk * c_rows, axis=1, dtype=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, steps, body, jnp.zeros((n_b,), jnp.float32))
+    acc = common.softcap_fwd(acc, softcap)
+
+    # Mask ignored tokens and the padded tail of the final tile.
+    rows = n * n_b + jax.lax.iota(jnp.int32, n_b)
+    keep = (x >= 0) & (rows < n_valid)
+    o_ref[...] = jnp.where(keep, acc, 0.0)
+
+
+def indexed_matmul(
+    e: jax.Array,
+    c: jax.Array,
+    x: jax.Array,
+    *,
+    block_sizes: BlockSizes = BlockSizes(),
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Return ``(C^T E)_x`` as a float32 vector of shape ``(N,)``.
+
+    Args:
+      e: ``(N, D)`` embeddings.
+      c: ``(V, D)`` classifier.
+      x: ``(N,)`` int32 labels; negative entries are ignored (output 0).
+      block_sizes: kernel tile configuration.
+      softcap: optional logit softcapping constant (Gemma 2 style).
+    """
+    n, d = e.shape
+    v, dc = c.shape
+    assert d == dc, f"embedding dim mismatch: {d} vs {dc}"
+    assert x.shape == (n,), f"label shape {x.shape} != ({n},)"
+
+    bs = block_sizes.clamp(n, v, d)
+    d_block = bs.d_block if d % bs.d_block == 0 else d
+
+    e_p = common.pad_axis(e, 0, bs.n_block)
+    x_p = common.pad_axis(x.astype(jnp.int32), 0, bs.n_block, value=-1)
+    n_pad = e_p.shape[0]
+    grid = (n_pad // bs.n_block,)
+
+    kernel = lambda x_ref, e_ref, c_ref, o_ref: _kernel(
+        x_ref, e_ref, c_ref, o_ref,
+        d_block=d_block, n_valid=n, softcap=softcap)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs.n_block,), lambda i: (i,)),
+            pl.BlockSpec((bs.n_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((v, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs.n_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,
+    )(x_p, e_p, c)
+    return out[:n]

@@ -1,0 +1,229 @@
+"""Memory-efficient linear-cross-entropy, fused backward pass (Algorithm 4).
+
+Computes the gradients of the per-token loss ``l_i = LSE_i - z_{i, x_i}``
+(with ``z = softcap(E C^T)``) with respect to ``e`` and ``c`` while
+rematerializing the logit blocks in VMEM — the ``(N, |V|)`` softmax matrix is
+never stored.  The indexed-matmul backward is merged into the same kernel via
+``G = (S - onehot(x)) * dloss`` exactly as the paper's Algorithm 4.
+
+Two properties of the softmax are exploited (paper §4.3):
+
+* **Gradient filtering** — ``S`` sums to one per row, so in bf16 any entry
+  below ``eps = 2**-12`` is rounding noise.  Blocks whose ``|G|`` is entirely
+  below ``eps`` skip both gradient matmuls (``@pl.when`` predication; on a
+  real TPU this skips the MXU work for the block).  Filtering is individually
+  switchable for ``grad e`` and ``grad c`` — the paper's CCE-Kahan-FullC
+  (pretraining) variant disables it for ``grad c``.
+* **Kahan summation** — the running gradient accumulators live in the final
+  gradient dtype (typically bf16).  Optional Kahan compensation buffers
+  recover the bits lost to that rounding (paper's CCE-Kahan variants).
+
+Accumulator placement mirrors the TPU adaptation of the forward pass:
+``grad e`` blocks are revisited on consecutive inner (vocabulary) grid steps;
+``grad c`` blocks are revisited across outer steps, which interpret mode
+executes sequentially (on hardware this pass would use a transposed second
+grid — see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .common import BlockSizes, FILTER_EPS
+
+
+def _kahan_add(acc_ref, comp_ref, delta):
+    """Kahan-compensated ``acc += delta`` for a low-precision accumulator.
+
+    Classic Kahan tracks the error of the *addition*; here the addition runs
+    in f32 (nearly exact) and the bits are lost when the sum is **stored**
+    in the accumulator dtype (bf16 in mixed-precision training).  The
+    compensation therefore measures ``stored - (acc + y)`` — the storage
+    rounding — and feeds it back into the next update.
+    """
+    acc = acc_ref[...].astype(jnp.float32)
+    comp = comp_ref[...].astype(jnp.float32)
+    y = delta - comp
+    t = acc + y
+    stored = t.astype(acc_ref.dtype)
+    comp_ref[...] = ((stored.astype(jnp.float32) - acc) - y).astype(comp_ref.dtype)
+    acc_ref[...] = stored
+
+
+def _plain_add(acc_ref, delta):
+    """Plain ``acc += delta`` rounded to the accumulator dtype per block —
+    models the paper's bf16 global-memory accumulation."""
+    acc_ref[...] = (acc_ref[...].astype(jnp.float32) + delta).astype(acc_ref.dtype)
+
+
+def _kernel(x_ref, dloss_ref, dlse_ref, lse_ref, e_ref, c_ref, *outs,
+            d_block: int, v_valid: int, softcap: Optional[float],
+            eps: float, filter_e: bool, filter_c: bool, kahan: bool):
+    if kahan:
+        de_ref, dc_ref, ce_ref, cc_ref = outs
+    else:
+        de_ref, dc_ref = outs
+
+    n, v = pl.program_id(0), pl.program_id(1)
+    n_b, d = e_ref.shape
+    v_b = c_ref.shape[0]
+    steps = d // d_block
+
+    # Initialize accumulators on first visit (before any possible skip).
+    @pl.when(v == 0)
+    def _():
+        de_ref[...] = jnp.zeros_like(de_ref)
+        if kahan:
+            ce_ref[...] = jnp.zeros_like(ce_ref)
+
+    @pl.when(n == 0)
+    def _():
+        dc_ref[...] = jnp.zeros_like(dc_ref)
+        if kahan:
+            cc_ref[...] = jnp.zeros_like(cc_ref)
+
+    # Rematerialize the raw logit block A = E_n C_v^T (never hits HBM).
+    def body(s, acc):
+        lo = s * d_block
+        e_blk = jax.lax.dynamic_slice(e_ref[...], (0, lo), (n_b, d_block))
+        c_blk = jax.lax.dynamic_slice(c_ref[...], (0, lo), (v_b, d_block))
+        return acc + jnp.dot(e_blk, c_blk.T, preferred_element_type=jnp.float32)
+
+    a_raw = jax.lax.fori_loop(0, steps, body, jnp.zeros((n_b, v_b), jnp.float32))
+    z = common.softcap_fwd(a_raw, softcap)
+
+    # S = softmax without renormalization: exp(z - LSE) (paper §4.3).
+    s = jnp.exp(z - lse_ref[...][:, None])
+
+    # G = ([[v == x]] - S) * dloss + S * dlse (the paper's ∇LSE term,
+    # Algorithm 3 — used by z-loss etc.), then the softcap derivative.
+    cols = v * v_b + jax.lax.iota(jnp.int32, v_b)
+    x = x_ref[...]
+    onehot = (x[:, None] == cols[None, :]).astype(jnp.float32)
+    up = (dloss_ref[...] + dlse_ref[...])[:, None]
+    g = s * up - onehot * dloss_ref[...][:, None]
+    g = g * common.softcap_bwd_mul(a_raw, softcap)
+    g = jnp.where((cols < v_valid)[None, :], g, 0.0)
+
+    # Block-level gradient filter (paper: skip if all |G| < eps).
+    significant = jnp.max(jnp.abs(g)) >= eps
+
+    e_f32 = e_ref[...].astype(jnp.float32)
+    c_f32 = c_ref[...].astype(jnp.float32)
+
+    def acc_e():
+        delta = jnp.dot(g, c_f32, preferred_element_type=jnp.float32)
+        if kahan:
+            _kahan_add(de_ref, ce_ref, delta)
+        else:
+            _plain_add(de_ref, delta)
+
+    def acc_c():
+        delta = jnp.dot(g.T, e_f32, preferred_element_type=jnp.float32)
+        if kahan:
+            _kahan_add(dc_ref, cc_ref, delta)
+        else:
+            _plain_add(dc_ref, delta)
+
+    if filter_e:
+        pl.when(significant)(acc_e)
+    else:
+        acc_e()
+    if filter_c:
+        pl.when(significant)(acc_c)
+    else:
+        acc_c()
+
+
+def lse_backward(
+    e: jax.Array,
+    c: jax.Array,
+    x: jax.Array,
+    lse: jax.Array,
+    dloss: jax.Array,
+    *,
+    dlse: Optional[jax.Array] = None,
+    block_sizes: BlockSizes = BlockSizes(),
+    softcap: Optional[float] = None,
+    eps: float = FILTER_EPS,
+    filter_e: bool = True,
+    filter_c: bool = True,
+    kahan: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused backward pass of the linear-cross-entropy loss.
+
+    Args:
+      e: ``(N, D)`` embeddings.
+      c: ``(V, D)`` classifier.
+      x: ``(N,)`` int32 labels (negative = ignored).
+      lse: ``(N,)`` float32 log-sum-exp from :func:`lse_forward`.
+      dloss: ``(N,)`` float32 upstream gradient of the per-token loss;
+        must already be zero for ignored tokens.
+      dlse: optional ``(N,)`` float32 upstream gradient of the per-token
+        LSE output (the ``∇LSE`` of Algorithm 3); defaults to zero.
+      softcap: optional logit softcapping constant.
+      eps: gradient-filter threshold (``0`` disables filtering entirely).
+      filter_e / filter_c: apply the block filter to the respective gradient.
+      kahan: use Kahan-compensated accumulation (paper's CCE-Kahan).
+
+    Returns:
+      ``(grad_e, grad_c)`` in the dtypes of ``e`` and ``c``.
+    """
+    n, d = e.shape
+    v, _ = c.shape
+    bs = block_sizes.clamp(n, v, d)
+    d_block = bs.d_block if d % bs.d_block == 0 else d
+
+    if dlse is None:
+        dlse = jnp.zeros_like(dloss)
+    e_p = common.pad_axis(e, 0, bs.n_block)
+    c_p = common.pad_axis(c, 0, bs.v_block)
+    x_p = common.pad_axis(x.astype(jnp.int32), 0, bs.n_block, value=-1)
+    lse_p = common.pad_axis(lse, 0, bs.n_block)
+    dloss_p = common.pad_axis(dloss, 0, bs.n_block)
+    dlse_p = common.pad_axis(dlse.astype(jnp.float32), 0, bs.n_block)
+    n_pad, v_pad = e_p.shape[0], c_p.shape[0]
+    grid = (n_pad // bs.n_block, v_pad // bs.v_block)
+
+    if eps <= 0.0:
+        filter_e = filter_c = False
+        eps = 0.0
+
+    out_shape = [
+        jax.ShapeDtypeStruct((n_pad, d), e.dtype),
+        jax.ShapeDtypeStruct((v_pad, d), c.dtype),
+    ]
+    out_specs = [
+        pl.BlockSpec((bs.n_block, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((bs.v_block, d), lambda i, j: (j, 0)),
+    ]
+    if kahan:
+        out_shape += list(out_shape)
+        out_specs += list(out_specs)
+
+    kernel = lambda *refs: _kernel(
+        *refs, d_block=d_block, v_valid=v, softcap=softcap,
+        eps=eps, filter_e=filter_e, filter_c=filter_c, kahan=kahan)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs.n_block,), lambda i, j: (i,)),
+            pl.BlockSpec((bs.n_block,), lambda i, j: (i,)),
+            pl.BlockSpec((bs.n_block,), lambda i, j: (i,)),
+            pl.BlockSpec((bs.n_block,), lambda i, j: (i,)),
+            pl.BlockSpec((bs.n_block, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs.v_block, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )(x_p, dloss_p, dlse_p, lse_p, e_p, c_p)
+
+    return outs[0][:n], outs[1][:v]

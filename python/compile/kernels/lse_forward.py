@@ -1,0 +1,134 @@
+"""Memory-efficient linear-log-sum-exp, forward pass (paper Algorithm 2).
+
+Computes ``LSE_i = log sum_j exp(c_j . e_i)`` for every token without
+materializing the ``(N, |V|)`` logit matrix.  The grid tiles ``(N, V)``; each
+program stages an ``(N_B, D)`` tile of ``e`` and a ``(V_B, D)`` tile of ``c``
+in VMEM, accumulates the ``(N_B, V_B)`` logit block on the MXU in ``D_B``
+steps, reduces it to a per-row block-LSE, and folds it into the running LSE.
+
+TPU adaptation: where the paper's Triton kernel synchronizes a global LSE
+with a spin-lock atomic, we make the vocabulary axis the innermost grid
+dimension.  Each ``n``-program then revisits its LSE output block on
+consecutive grid steps and carries the online ``logaddexp`` reduction in the
+revisited block — no atomics, fully deterministic.
+
+As a side output the kernel accumulates the *mean logit per vocabulary entry*
+(paper §4.3, "vocabulary sorting"), reused by the backward pass to order the
+vocabulary so that non-trivial softmax blocks are dense.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .common import BlockSizes
+
+_NEG_INF = float("-inf")
+
+
+def _kernel(e_ref, c_ref, lse_ref, ml_ref, *, d_block: int, n_valid: int,
+            v_valid: int, softcap: Optional[float]):
+    n, v = pl.program_id(0), pl.program_id(1)
+    n_b, d = e_ref.shape
+    v_b = c_ref.shape[0]
+    steps = d // d_block
+
+    def body(s, acc):
+        lo = s * d_block
+        e_blk = jax.lax.dynamic_slice(e_ref[...], (0, lo), (n_b, d_block))
+        c_blk = jax.lax.dynamic_slice(c_ref[...], (0, lo), (v_b, d_block))
+        return acc + jnp.dot(e_blk, c_blk.T, preferred_element_type=jnp.float32)
+
+    a = jax.lax.fori_loop(0, steps, body, jnp.zeros((n_b, v_b), jnp.float32))
+    a = common.softcap_fwd(a, softcap)
+
+    # Mask vocabulary padding out of the reduction.
+    cols = v * v_b + jax.lax.iota(jnp.int32, v_b)
+    a_masked = jnp.where((cols < v_valid)[None, :], a, _NEG_INF)
+
+    # Numerically stable block LSE (paper: "stable implementation with max").
+    m = jnp.max(a_masked, axis=1)
+    blk_lse = m + jnp.log(jnp.sum(jnp.exp(a_masked - m[:, None]), axis=1))
+
+    # Online log-add-exp into the revisited output block (replaces the
+    # paper's locking thread-safe log-add-exp).
+    @pl.when(v == 0)
+    def _():
+        lse_ref[...] = blk_lse
+
+    @pl.when(v > 0)
+    def _():
+        lse_ref[...] = jnp.logaddexp(lse_ref[...], blk_lse)
+
+    # Mean-logit side output for vocabulary sorting.
+    rows = n * n_b + jax.lax.iota(jnp.int32, n_b)
+    contrib = jnp.sum(
+        jnp.where((rows < n_valid)[:, None], a, 0.0), axis=0
+    ) * (1.0 / n_valid)
+
+    @pl.when(n == 0)
+    def _():
+        ml_ref[...] = jnp.zeros_like(ml_ref)
+
+    ml_ref[...] += contrib
+
+
+def lse_forward(
+    e: jax.Array,
+    c: jax.Array,
+    *,
+    block_sizes: BlockSizes = BlockSizes(),
+    softcap: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Return ``(lse, mean_logit)``.
+
+    Args:
+      e: ``(N, D)`` embeddings.
+      c: ``(V, D)`` classifier.
+      block_sizes: kernel tile configuration.
+      softcap: optional logit softcapping constant.
+
+    Returns:
+      ``lse``: ``(N,)`` float32 log-sum-exp over the vocabulary.
+      ``mean_logit``: ``(V,)`` float32 average logit per vocabulary entry,
+      used by the backward pass for vocabulary sorting.
+    """
+    n, d = e.shape
+    v, dc = c.shape
+    assert d == dc, f"embedding dim mismatch: {d} vs {dc}"
+
+    bs = block_sizes.clamp(n, v, d)
+    d_block = bs.d_block if d % bs.d_block == 0 else d
+
+    e_p = common.pad_axis(e, 0, bs.n_block)
+    c_p = common.pad_axis(c, 0, bs.v_block)
+    n_pad, v_pad = e_p.shape[0], c_p.shape[0]
+    grid = (n_pad // bs.n_block, v_pad // bs.v_block)
+
+    kernel = lambda e_ref, c_ref, lse_ref, ml_ref: _kernel(
+        e_ref, c_ref, lse_ref, ml_ref,
+        d_block=d_block, n_valid=n, v_valid=v, softcap=softcap)
+
+    lse, mean_logit = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs.n_block, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs.v_block, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs.n_block,), lambda i, j: (i,)),
+            pl.BlockSpec((bs.v_block,), lambda i, j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((v_pad,), jnp.float32),
+        ],
+        interpret=True,
+    )(e_p, c_p)
+    return lse[:n], mean_logit[:v]

@@ -1,0 +1,77 @@
+"""Pure-jnp correctness oracle for the CCE kernels.
+
+Materializes the full logit matrix and computes the per-token NLL and its
+analytic gradients the obvious way.  This is the correctness ground truth the
+pytest suite checks every kernel and variant against; it is also the
+"Baseline" row of the paper's Table 1 (see ``baselines.py`` for the
+benchmarked version).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def ref_logits(e: jax.Array, c: jax.Array,
+               softcap: Optional[float] = None) -> jax.Array:
+    """Full ``(N, V)`` float32 (soft-capped) logit matrix."""
+    a = jnp.dot(e.astype(jnp.float32), c.astype(jnp.float32).T)
+    return common.softcap_fwd(a, softcap)
+
+
+def ref_loss(e: jax.Array, c: jax.Array, x: jax.Array,
+             softcap: Optional[float] = None) -> jax.Array:
+    """Per-token NLL ``l_i = LSE_i - z_{i, x_i}``; 0 for ignored tokens."""
+    z = ref_logits(e, c, softcap)
+    lse = jax.scipy.special.logsumexp(z, axis=1)
+    valid = common.valid_mask(x)
+    safe_x = jnp.where(valid, x, 0)
+    picked = jnp.take_along_axis(z, safe_x[:, None], axis=1)[:, 0]
+    return jnp.where(valid, lse - picked, 0.0)
+
+
+def ref_lse(e: jax.Array, c: jax.Array,
+            softcap: Optional[float] = None) -> jax.Array:
+    """``(N,)`` log-sum-exp over the vocabulary."""
+    return jax.scipy.special.logsumexp(ref_logits(e, c, softcap), axis=1)
+
+
+def ref_mean_logit(e: jax.Array, c: jax.Array,
+                   softcap: Optional[float] = None) -> jax.Array:
+    """``(V,)`` average logit per vocabulary entry (vocab-sorting key)."""
+    return jnp.mean(ref_logits(e, c, softcap), axis=0)
+
+
+def ref_grads(
+    e: jax.Array, c: jax.Array, x: jax.Array, dloss: jax.Array,
+    softcap: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Analytic ``(grad_e, grad_c)`` for upstream per-token gradient ``dloss``.
+
+    ``grad_A = (S - onehot(x)) * dloss * softcap'(A_raw)`` with
+    ``S = softmax(softcap(A_raw))`` — the float32 ground truth.
+    """
+    ef = e.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    a_raw = jnp.dot(ef, cf.T)
+    z = common.softcap_fwd(a_raw, softcap)
+    s = jax.nn.softmax(z, axis=1)
+    valid = common.valid_mask(x)
+    safe_x = jnp.where(valid, x, 0)
+    onehot = jax.nn.one_hot(safe_x, c.shape[0], dtype=jnp.float32)
+    dl = jnp.where(valid, dloss, 0.0)[:, None]
+    g = (s - onehot) * dl * common.softcap_bwd_mul(a_raw, softcap)
+    return jnp.dot(g, cf), jnp.dot(g.T, ef)
+
+
+def ref_softmax_ranks(e: jax.Array, c: jax.Array,
+                      softcap: Optional[float] = None) -> jax.Array:
+    """Average softmax probability of the i-th most likely token (Fig. 3)."""
+    z = ref_logits(e, c, softcap)
+    p = jax.nn.softmax(z, axis=1)
+    return jnp.mean(jnp.sort(p, axis=1)[:, ::-1], axis=0)

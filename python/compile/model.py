@@ -1,0 +1,294 @@
+"""L2 — the transformer language model whose loss head calls the L1 kernels.
+
+A modern decoder-only LM implemented in pure jnp (no flax/haiku, so the AOT
+artifact has zero framework baggage): RMSNorm, rotary position embeddings,
+grouped-query attention, SwiGLU MLP, optional logit softcapping (Gemma 2
+style — exercised by the kernels' softcap path), optional tied embeddings.
+
+The loss head is *method-dispatched*: ``method="cce"`` (or any paper
+variant) routes through :mod:`compile.kernels.cce`; ``"baseline"``/
+``"fused"``/``"chunkedN"`` route through :mod:`compile.kernels.baselines`.
+This is what lets the Fig. 4/5 experiments train the *same* model with
+different loss implementations and compare curves.
+
+Everything here is build-time only: ``aot.py`` lowers ``train_step`` /
+``eval_step`` / ``init`` to HLO text once, and the Rust coordinator replays
+those artifacts forever after.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .kernels import BlockSizes, CCEOptions, VARIANTS, baselines
+from .kernels import common as kcommon
+from .kernels import linear_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (defaults: the ~10M e2e config)."""
+
+    vocab_size: int = 4096
+    d_model: int = 256
+    n_layers: int = 8
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    softcap: Optional[float] = None
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "float32"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Exact trainable-parameter count (used by the memory model too)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        kv = self.n_kv_heads * self.head_dim
+        per_layer = d * d + 2 * d * kv + d * d + 3 * d * f + 2 * d
+        total = v * d + self.n_layers * per_layer + d
+        if not self.tie_embeddings:
+            total += v * d
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Shape of one training step as seen by the Rust coordinator."""
+
+    batch: int = 8           # sequences per microbatch
+    seq: int = 256           # tokens per sequence
+    accum: int = 1           # microbatches accumulated per optimizer step
+    method: str = "cce"      # loss-head implementation
+    opt: optim.OptimizerConfig = optim.OptimizerConfig()
+
+    @property
+    def tokens_per_step(self) -> int:
+        return self.batch * self.seq * self.accum
+
+
+# ------------------------------------------------------------------ init
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    """Scaled-normal initialization (GPT-2 style residual scaling)."""
+    dt = cfg.jdtype
+    d, f = cfg.d_model, cfg.d_ff
+    kv = cfg.n_kv_heads * cfg.head_dim
+    n_keys = 2 + 7 * cfg.n_layers
+    keys = iter(jax.random.split(key, n_keys))
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+
+    def normal(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dt)
+
+    params: Dict[str, Any] = {
+        "embed": normal(next(keys), (cfg.vocab_size, d), 0.02),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal(next(keys), (cfg.vocab_size, d), 0.02)
+    else:
+        next(keys)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "attn_norm": jnp.ones((d,), dt),
+            "wq": normal(next(keys), (d, d), 0.02),
+            "wk": normal(next(keys), (d, kv), 0.02),
+            "wv": normal(next(keys), (d, kv), 0.02),
+            "wo": normal(next(keys), (d, d), 0.02 * resid_scale),
+            "mlp_norm": jnp.ones((d,), dt),
+            "w_gate": normal(next(keys), (d, f), 0.02),
+            "w_up": normal(next(keys), (d, f), 0.02),
+            "w_down": normal(next(keys), (f, d), 0.02 * resid_scale),
+        })
+    # Stack layers so the backbone is a lax.scan (bounds compile time and
+    # HLO size for deep models — see DESIGN.md §Perf L2).
+    params["layers"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *layers)
+    return params
+
+
+# --------------------------------------------------------------- backbone
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * w
+
+
+def rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary embeddings over the last axis; x: (B, T, H, Dh)."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def attention(cfg: ModelConfig, layer: Dict[str, jax.Array],
+              x: jax.Array) -> jax.Array:
+    b, t, d = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ layer["wq"]).reshape(b, t, nh, hd)
+    k = (x @ layer["wk"]).reshape(b, t, nkv, hd)
+    v = (x @ layer["wv"]).reshape(b, t, nkv, hd)
+    q, k = rope(q, cfg.rope_theta), rope(k, cfg.rope_theta)
+    if nkv != nh:  # grouped-query attention: repeat KV heads
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, t, d)
+    return out @ layer["wo"]
+
+
+def mlp(layer: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ layer["w_gate"])
+    return (gate * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def backbone(cfg: ModelConfig, params: Dict[str, Any],
+             tokens: jax.Array) -> jax.Array:
+    """Token ids ``(B, T)`` -> final-norm embeddings ``(B, T, D)``."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def block(x, layer):
+        x = x + attention(cfg, layer, rmsnorm(x, layer["attn_norm"],
+                                              cfg.norm_eps))
+        x = x + mlp(layer, rmsnorm(x, layer["mlp_norm"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, params["layers"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def classifier(cfg: ModelConfig, params: Dict[str, Any]) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def logits(cfg: ModelConfig, params: Dict[str, Any],
+           tokens: jax.Array) -> jax.Array:
+    """Full materialized logits — inference/debug only, never the train path."""
+    e = backbone(cfg, params, tokens)
+    z = jnp.einsum("btd,vd->btv", e, classifier(cfg, params))
+    return kcommon.softcap_fwd(z.astype(jnp.float32), cfg.softcap)
+
+
+# -------------------------------------------------------------- loss head
+
+#: Loss-head tile sizes.  Interpret-mode Pallas runs the grid as a
+#: sequential loop, so larger tiles (fewer, bigger MXU calls) are strictly
+#: better on the CPU substrate and still fit the 16 MB VMEM budget on TPU
+#: (see EXPERIMENTS.md §Perf L1 for the before/after).
+LOSS_BLOCKS = BlockSizes(n_block=512, v_block=2048, d_block=512)
+
+
+def make_loss_opts(cfg: ModelConfig, method: str,
+                   block_sizes: Optional[BlockSizes] = None
+                   ) -> Optional[CCEOptions]:
+    if method in VARIANTS:
+        base = VARIANTS[method]
+        return CCEOptions(**{
+            **base.__dict__,
+            "softcap": cfg.softcap,
+            "block_sizes": block_sizes or LOSS_BLOCKS,
+        })
+    return None
+
+
+def per_token_loss(cfg: ModelConfig, params: Dict[str, Any],
+                   tokens: jax.Array, targets: jax.Array,
+                   method: str = "cce") -> jax.Array:
+    """Per-token NLL ``(B*T,)``; ``targets < 0`` are ignored (masked)."""
+    e = backbone(cfg, params, tokens).reshape(-1, cfg.d_model)
+    c = classifier(cfg, params)
+    x = targets.reshape(-1)
+    opts = make_loss_opts(cfg, method)
+    if opts is not None:
+        return linear_cross_entropy(e, c, x, opts)
+    if method == "baseline":
+        return baselines.baseline_ce(e, c, x, cfg.softcap)
+    if method == "fused":
+        return baselines.fused_ce(e, c, x, cfg.softcap)
+    if method.startswith("chunked"):
+        return baselines.chunked_ce(e, c, x, int(method[len("chunked"):]),
+                                    cfg.softcap)
+    raise ValueError(f"unknown loss method: {method}")
+
+
+def mean_loss(cfg: ModelConfig, params: Dict[str, Any], tokens: jax.Array,
+              targets: jax.Array, method: str = "cce") -> jax.Array:
+    loss = per_token_loss(cfg, params, tokens, targets, method)
+    count = jnp.maximum(jnp.sum(targets.reshape(-1) >= 0), 1)
+    return jnp.sum(loss) / count
+
+
+# ------------------------------------------------------------- train/eval
+
+def train_step(
+    cfg: ModelConfig, tcfg: TrainConfig,
+    params: Dict[str, Any], m: Dict[str, Any], v: Dict[str, Any],
+    step: jax.Array, tokens: jax.Array, targets: jax.Array,
+) -> Tuple[Dict[str, Any], Dict[str, Any], Dict[str, Any], jax.Array,
+           jax.Array, jax.Array]:
+    """One optimizer step over ``accum`` microbatches.
+
+    ``tokens``/``targets``: ``(accum, batch, seq)`` int32.  Gradients are
+    accumulated in float32 across microbatches inside the artifact, so the
+    Rust coordinator round-trips only one parameter-sized state per step.
+
+    Returns ``(params, m, v, step+1, mean_loss, grad_norm)``.
+    """
+    grad_fn = jax.value_and_grad(
+        lambda p, tok, tgt: mean_loss(cfg, p, tok, tgt, tcfg.method))
+
+    def micro(carry, batch):
+        acc, loss_acc = carry
+        tok, tgt = batch
+        loss, grads = grad_fn(params, tok, tgt)
+        acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc, grads)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss_sum), _ = jax.lax.scan(
+        micro, (zeros, jnp.float32(0.0)), (tokens, targets))
+    inv = 1.0 / tcfg.accum
+    grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+    new_p, new_m, new_v, gnorm = optim.adamw_update(
+        tcfg.opt, params, m, v, grads, step)
+    return new_p, new_m, new_v, step + 1, loss_sum * inv, gnorm
+
+
+def eval_step(cfg: ModelConfig, params: Dict[str, Any], tokens: jax.Array,
+              targets: jax.Array, method: str = "cce"
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Sum NLL and valid-token count over one batch (for val perplexity)."""
+    loss = per_token_loss(cfg, params, tokens, targets, method)
+    count = jnp.sum(targets.reshape(-1) >= 0)
+    return jnp.sum(loss), count

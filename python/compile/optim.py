@@ -1,0 +1,107 @@
+"""AdamW + warmup-cosine LR schedule (pure jnp; lowered into the train step).
+
+Mirrors the paper's training setup (mixed-precision AdamW, Kingma & Ba 2015;
+Loshchilov & Hutter 2019).  Implemented from scratch so the AOT'd train-step
+HLO is fully self-contained — the Rust coordinator never needs an optimizer
+library, it just round-trips the flat ``(params, m, v, step)`` state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    """Hyper-parameters of AdamW and the LR schedule."""
+
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_ratio * lr``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0)
+    floor = cfg.lr * cfg.min_lr_ratio
+    cos = floor + 0.5 * (cfg.lr - floor) * (1.0 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> Tuple[Any, Any]:
+    """Zeroed first/second moments with the same tree structure as params."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return jax.tree_util.tree_map(zeros, params), \
+        jax.tree_util.tree_map(zeros, params)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(
+    cfg: OptimizerConfig,
+    params: Any,
+    m: Any,
+    v: Any,
+    grads: Any,
+    step: jax.Array,
+) -> Tuple[Any, Any, Any, jax.Array]:
+    """One decoupled-weight-decay Adam step.
+
+    Returns ``(new_params, new_m, new_v, grad_norm)``.  ``step`` is the
+    0-based step index *before* this update.
+    """
+    if cfg.grad_clip > 0:
+        grads, grad_norm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        grad_norm = global_norm(grads)
+
+    t = (step + 1).astype(jnp.float32)
+    lr = lr_schedule(cfg, step)
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, m_, v_, g):
+        gf = g.astype(jnp.float32)
+        m_n = cfg.beta1 * m_ + (1.0 - cfg.beta1) * gf
+        v_n = cfg.beta2 * v_ + (1.0 - cfg.beta2) * jnp.square(gf)
+        m_hat = m_n / bc1
+        v_hat = v_n / bc2
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+                           + cfg.weight_decay * pf)
+        return new_p.astype(p.dtype), m_n, v_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    out = [upd(p, m_, v_, g)
+           for p, m_, v_, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, grad_norm

@@ -1,0 +1,157 @@
+"""Backward kernel (Algorithm 4) and every CCE variant vs analytic gradients."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from compile.kernels.common import FILTER_EPS
+
+from .test_kernel import SMALL_BS, make_inputs
+
+
+def run_bwd(e, c, x, dloss, **kw):
+    lse = ref.ref_lse(e, c, kw.get("softcap"))
+    dl = jnp.where(x >= 0, dloss, 0.0)
+    return K.lse_backward(e, c, x, lse, dl, block_sizes=SMALL_BS, **kw)
+
+
+class TestLseBackward:
+    def test_matches_ref_unfiltered(self):
+        e, c, x = make_inputs(48, 24, 100)
+        dl = jnp.ones((48,), jnp.float32)
+        de, dc = run_bwd(e, c, x, dl, eps=0.0)
+        der, dcr = ref.ref_grads(e, c, x, dl)
+        np.testing.assert_allclose(np.asarray(de), np.asarray(der), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dc), np.asarray(dcr), rtol=1e-4, atol=1e-5)
+
+    def test_filter_error_below_eps_scale(self):
+        # Gradient filtering may only drop contributions below eps per block.
+        e, c, x = make_inputs(64, 16, 128, scale=1.0)
+        dl = jnp.ones((64,), jnp.float32)
+        de_f, dc_f = run_bwd(e, c, x, dl, eps=FILTER_EPS)
+        der, dcr = ref.ref_grads(e, c, x, dl)
+        # Error bounded by eps * (#blocks contributing) * |inputs|.
+        tol = FILTER_EPS * 8 * 4
+        assert np.abs(np.asarray(de_f) - np.asarray(der)).max() < tol
+        assert np.abs(np.asarray(dc_f) - np.asarray(dcr)).max() < tol
+
+    def test_filter_skips_blocks(self):
+        # With a huge eps everything except the blocks containing the label
+        # must be skipped -> grad_c rows for never-labelled far tokens == 0.
+        e, c, x = make_inputs(16, 8, 256, scale=0.1)
+        x = jnp.zeros_like(x)  # all labels in block 0
+        dl = jnp.ones((16,), jnp.float32)
+        de, dc = run_bwd(e, c, x, dl, eps=0.9)
+        # Rows far from block 0 skipped entirely (|G| <= S < .9 off-label).
+        assert np.abs(np.asarray(dc)[SMALL_BS.v_block:]).max() == 0.0
+
+    def test_kahan_no_worse_than_plain(self):
+        e, c, x = make_inputs(64, 16, 96, dtype=np.float32)
+        eb, cb = e.astype(jnp.bfloat16), c.astype(jnp.bfloat16)
+        dl = jnp.ones((64,), jnp.float32)
+        der, dcr = ref.ref_grads(eb, cb, x, dl)
+        de_p, dc_p = run_bwd(eb, cb, x, dl, eps=0.0, kahan=False)
+        de_k, dc_k = run_bwd(eb, cb, x, dl, eps=0.0, kahan=True)
+        err_p = np.abs(np.asarray(dc_p, np.float32) - np.asarray(dcr)).mean()
+        err_k = np.abs(np.asarray(dc_k, np.float32) - np.asarray(dcr)).mean()
+        assert err_k <= err_p * 1.05 + 1e-7
+
+    @pytest.mark.parametrize("fe,fc", [(True, False), (False, True)])
+    def test_selective_filtering(self, fe, fc):
+        e, c, x = make_inputs(48, 16, 80)
+        dl = jnp.ones((48,), jnp.float32)
+        de, dc = run_bwd(e, c, x, dl, eps=FILTER_EPS, filter_e=fe, filter_c=fc)
+        der, dcr = ref.ref_grads(e, c, x, dl)
+        # The unfiltered side must match ref to float tolerance.
+        if not fe:
+            np.testing.assert_allclose(np.asarray(de), np.asarray(der),
+                                       rtol=1e-4, atol=1e-5)
+        if not fc:
+            np.testing.assert_allclose(np.asarray(dc), np.asarray(dcr),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_softcap_grads(self):
+        e, c, x = make_inputs(32, 16, 64, scale=2.0)
+        dl = jnp.ones((32,), jnp.float32)
+        de, dc = run_bwd(e, c, x, dl, eps=0.0, softcap=4.0)
+        der, dcr = ref.ref_grads(e, c, x, dl, softcap=4.0)
+        np.testing.assert_allclose(np.asarray(de), np.asarray(der), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dc), np.asarray(dcr), rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(2, 60),
+        d=st.integers(2, 33),
+        v=st.integers(4, 90),
+        seed=st.integers(0, 2**31),
+        n_ignored=st.integers(0, 5),
+    )
+    def test_shape_sweep(self, n, d, v, seed, n_ignored):
+        e, c, x = make_inputs(n, d, v, seed=seed, n_ignored=n_ignored)
+        rng = np.random.default_rng(seed + 1)
+        dl = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        de, dc = run_bwd(e, c, x, dl, eps=0.0)
+        der, dcr = ref.ref_grads(e, c, x, dl)
+        np.testing.assert_allclose(np.asarray(de), np.asarray(der), rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dc), np.asarray(dcr), rtol=1e-3, atol=1e-4)
+
+    def test_ignored_tokens_zero_grad_e(self):
+        e, c, x = make_inputs(32, 16, 64, n_ignored=9)
+        dl = jnp.ones((32,), jnp.float32)
+        de, _ = run_bwd(e, c, x, dl, eps=0.0)
+        assert np.abs(np.asarray(de)[np.asarray(x) < 0]).max() == 0.0
+
+
+class TestVariantsEndToEnd:
+    """jax.grad through linear_cross_entropy for every paper variant."""
+
+    @pytest.mark.parametrize("name", sorted(K.VARIANTS))
+    def test_variant_grads(self, name):
+        opts = K.VARIANTS[name]
+        opts = K.CCEOptions(**{**opts.__dict__, "block_sizes": SMALL_BS})
+        e, c, x = make_inputs(48, 24, 100, seed=3)
+        rng = np.random.default_rng(7)
+        dl = jnp.asarray(rng.normal(size=48).astype(np.float32))
+
+        loss = K.linear_cross_entropy(e, c, x, opts)
+        np.testing.assert_allclose(np.asarray(loss), np.asarray(ref.ref_loss(e, c, x)),
+                                   rtol=1e-4, atol=1e-5)
+        de, dc = jax.grad(
+            lambda e_, c_: jnp.vdot(K.linear_cross_entropy(e_, c_, x, opts), dl),
+            argnums=(0, 1))(e, c)
+        der, dcr = ref.ref_grads(e, c, x, dl)
+        np.testing.assert_allclose(np.asarray(de), np.asarray(der), rtol=1e-3, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(dc), np.asarray(dcr), rtol=1e-3, atol=2e-4)
+
+    def test_mean_loss_grad(self):
+        opts = K.CCEOptions(block_sizes=SMALL_BS)
+        e, c, x = make_inputs(40, 16, 64, n_ignored=6)
+        g = jax.grad(lambda e_: K.cce_mean_loss(e_, c, x, opts))(e)
+        gr = jax.grad(lambda e_: jnp.sum(ref.ref_loss(e_, c, x))
+                      / jnp.sum(x >= 0))(e)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-3, atol=1e-4)
+
+    def test_loss_transform_composes(self):
+        # Unlike the Liger analogue, arbitrary transforms compose: weight the
+        # per-token loss and differentiate through it.
+        opts = K.CCEOptions(block_sizes=SMALL_BS)
+        e, c, x = make_inputs(32, 16, 64)
+        w = jnp.linspace(0.0, 1.0, 32)
+        g = jax.grad(lambda e_: jnp.sum(
+            w * K.linear_cross_entropy(e_, c, x, opts)))(e)
+        gr = jax.grad(lambda e_: jnp.sum(w * ref.ref_loss(e_, c, x)))(e)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-3, atol=1e-4)
+
+    def test_compact_tokens_equivalence(self):
+        # Appendix B: removing ignored tokens leaves loss sum unchanged.
+        opts = K.CCEOptions(block_sizes=SMALL_BS)
+        e, c, x = make_inputs(64, 16, 64, n_ignored=30)
+        full = K.linear_cross_entropy(e, c, x, opts)
+        e_c, x_c = K.compact_tokens(e, x, budget=40)
+        compact = K.linear_cross_entropy(e_c, c, x_c, opts)
+        np.testing.assert_allclose(np.asarray(full).sum(), np.asarray(compact).sum(),
+                                   rtol=1e-5)

@@ -1,0 +1,148 @@
+"""L2 model: shapes, loss-method equivalence, and a short overfit run."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import optim
+from compile.kernels import ref
+
+CFG = M.ModelConfig(vocab_size=128, d_model=32, n_layers=2, n_heads=4,
+                    n_kv_heads=2, d_ff=64, max_seq=16)
+TCFG = M.TrainConfig(batch=2, seq=16, accum=2,
+                     opt=optim.OptimizerConfig(lr=1e-2, warmup_steps=2,
+                                               total_steps=50))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (2, 16), 0, CFG.vocab_size)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return tokens, targets
+
+
+def test_param_count_matches(params):
+    got = sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    assert got == CFG.param_count()
+
+
+def test_backbone_shape(params, batch):
+    e = M.backbone(CFG, params, batch[0])
+    assert e.shape == (2, 16, CFG.d_model)
+    assert np.isfinite(np.asarray(e)).all()
+
+
+def test_logits_match_loss_head(params, batch):
+    """Materialized logits and the CCE loss head agree on the NLL."""
+    tokens, targets = batch
+    z = M.logits(CFG, params, tokens).reshape(-1, CFG.vocab_size)
+    x = np.asarray(targets).reshape(-1)
+    lse = np.asarray(jax.scipy.special.logsumexp(z, axis=1))
+    want = lse - np.asarray(z)[np.arange(len(x)), x]
+    got = np.asarray(M.per_token_loss(CFG, params, tokens, targets, "cce"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["cce", "baseline", "fused", "chunked4",
+                                    "cce_kahan_fullc"])
+def test_loss_method_equivalence(params, batch, method):
+    tokens, targets = batch
+    base = M.mean_loss(CFG, params, tokens, targets, "baseline")
+    got = M.mean_loss(CFG, params, tokens, targets, method)
+    np.testing.assert_allclose(float(got), float(base), rtol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["cce", "baseline"])
+def test_grad_method_equivalence(params, batch, method):
+    tokens, targets = batch
+    g_ref = jax.grad(lambda p: M.mean_loss(CFG, p, *batch, "fused"))(params)
+    g = jax.grad(lambda p: M.mean_loss(CFG, p, *batch, method))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g),
+                    jax.tree_util.tree_leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_masked_targets_ignored(params, batch):
+    tokens, targets = batch
+    masked = targets.at[:, :8].set(-1)
+    loss = M.per_token_loss(CFG, params, tokens, masked, "cce")
+    loss2d = np.asarray(loss).reshape(2, 16)
+    assert (loss2d[:, :8] == 0).all()
+    assert (loss2d[:, 8:] != 0).any()
+
+
+def test_gqa_vs_mha_shapes():
+    cfg = dataclasses.replace(CFG, n_kv_heads=4)  # MHA
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.zeros((1, 8), jnp.int32)
+    assert M.backbone(cfg, p, tok).shape == (1, 8, cfg.d_model)
+
+
+def test_softcap_model():
+    cfg = dataclasses.replace(CFG, softcap=10.0)
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.zeros((1, 8), jnp.int32)
+    z = M.logits(cfg, p, tok)
+    assert np.abs(np.asarray(z)).max() <= 10.0
+    tgt = jnp.ones((1, 8), jnp.int32)
+    a = M.mean_loss(cfg, p, tok, tgt, "cce")
+    b = M.mean_loss(cfg, p, tok, tgt, "baseline")
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4)
+
+
+def test_tied_embeddings():
+    cfg = dataclasses.replace(CFG, tie_embeddings=True)
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    assert "lm_head" not in p
+    tok = jnp.zeros((1, 8), jnp.int32)
+    tgt = jnp.ones((1, 8), jnp.int32)
+    assert np.isfinite(float(M.mean_loss(cfg, p, tok, tgt, "cce")))
+
+
+def test_train_step_overfits(params, batch):
+    """A few steps on one repeated batch must reduce the loss (sanity that
+    optimizer + grads + schedule compose)."""
+    tokens, targets = batch
+    tok = jnp.broadcast_to(tokens, (TCFG.accum, *tokens.shape))
+    tgt = jnp.broadcast_to(targets, (TCFG.accum, *targets.shape))
+    m, v = optim.init_opt_state(params)
+    step = jnp.int32(0)
+    p = params
+    fn = jax.jit(lambda p, m, v, s: M.train_step(CFG, TCFG, p, m, v, s,
+                                                 tok, tgt))
+    losses = []
+    for _ in range(10):
+        p, m, v, step, loss, gnorm = fn(p, m, v, step)
+        losses.append(float(loss))
+        assert np.isfinite(float(gnorm))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_eval_step_counts(params, batch):
+    tokens, targets = batch
+    masked = targets.at[0, :4].set(-1)
+    s, cnt = M.eval_step(CFG, params, tokens, masked)
+    assert int(cnt) == 2 * 16 - 4
+    assert np.isfinite(float(s))
+
+
+def test_lr_schedule_shape():
+    cfg = optim.OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+    lrs = [float(optim.lr_schedule(cfg, jnp.int32(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - 1.0) < 1e-6
+    assert abs(lrs[-1] - 0.1) < 1e-6
+    peak = int(np.argmax(lrs))
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[peak:], lrs[peak + 1:]))

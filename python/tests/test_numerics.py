@@ -1,0 +1,178 @@
+"""Numerical-precision properties the paper claims (§4.3, §5.3).
+
+These tests pin the *reasons* behind the CCE variants: why bf16 needs
+Kahan, why eps = 2^-12 is safe, and why filtering must be disabled on the
+classifier gradient for pretraining-grade accuracy.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from compile.kernels.common import FILTER_EPS
+
+from .test_kernel import SMALL_BS, make_inputs
+
+
+def test_eps_is_smallest_surviving_bf16():
+    """2^-12 is the paper's threshold: values below it vanish when summed
+    into an O(1)-magnitude bf16 accumulator."""
+    acc = jnp.bfloat16(1.0 / 32.0)  # b = 2^-5, the paper's reference scale
+    below = jnp.bfloat16(2.0**-13)
+    at = jnp.bfloat16(2.0**-7)  # comfortably representable step
+    assert float(acc + below) == float(acc)
+    assert float(acc + at) != float(acc)
+
+
+def test_filtered_gradient_error_is_bounded_by_eps():
+    """The filter may only drop softmax mass below eps per block; the total
+    gradient error must therefore be O(eps), not O(1)."""
+    e, c, x = make_inputs_big()
+    dl = jnp.ones((e.shape[0],), jnp.float32)
+    lse = ref.ref_lse(e, c)
+    de_f, dc_f = K.lse_backward(e, c, x, lse, dl, block_sizes=SMALL_BS,
+                                eps=FILTER_EPS)
+    de_u, dc_u = K.lse_backward(e, c, x, lse, dl, block_sizes=SMALL_BS,
+                                eps=0.0)
+    # Compare filtered vs unfiltered (same kernel, same summation order).
+    assert np.abs(np.asarray(de_f) - np.asarray(de_u)).max() < 64 * FILTER_EPS
+    assert np.abs(np.asarray(dc_f) - np.asarray(dc_u)).max() < 64 * FILTER_EPS
+
+
+def make_inputs_big():
+    rng = np.random.default_rng(3)
+    n, d, v = 64, 24, 2048
+    # Peaked logits (trained-model-like): rows strongly aligned with their
+    # label's classifier row, so the target logit dominates the LSE.
+    c = rng.normal(size=(v, d)).astype(np.float32) / np.sqrt(d)
+    x = rng.integers(0, v, size=n).astype(np.int32)
+    e = 12.0 * c[x] + rng.normal(size=(n, d)).astype(np.float32) * 0.15
+    return jnp.asarray(e), jnp.asarray(c), jnp.asarray(x)
+
+
+def test_peaked_softmax_filters_most_blocks():
+    """On trained-like inputs the softmax is sparse enough that most blocks
+    are below eps — the precondition for the 3.5x backward speedup."""
+    e, c, x = make_inputs_big()
+    z = ref.ref_logits(e, c)
+    s = np.asarray(jax.nn.softmax(z, axis=1))
+    frac_significant = (s >= FILTER_EPS).mean()
+    assert frac_significant < 0.2, frac_significant
+
+
+def test_kahan_recovers_bf16_accumulation_error():
+    """CCE accumulates gradients in the output dtype; in bf16 that loses
+    bits which Kahan compensation recovers (the pretraining fix, §5.3)."""
+    rng = np.random.default_rng(5)
+    # 128 accumulation steps into grad_c make the bf16 drift (~sqrt(128)
+    # ulp) dominate the 1-ulp representation floor.
+    n, d, v = 1024, 8, 32
+    e = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) * 0.5)
+    c = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32) * 0.5)
+    x = jnp.asarray(rng.integers(0, v, size=n).astype(np.int32))
+    eb, cb = e.astype(jnp.bfloat16), c.astype(jnp.bfloat16)
+    dl = jnp.ones((n,), jnp.float32)
+    lse = ref.ref_lse(eb, cb)
+    bs = K.BlockSizes(8, 32, 8)
+    _, dcr = ref.ref_grads(eb, cb, x, dl)
+    _, dc_plain = K.lse_backward(eb, cb, x, lse, dl, block_sizes=bs, eps=0.0,
+                                 kahan=False)
+    _, dc_kahan = K.lse_backward(eb, cb, x, lse, dl, block_sizes=bs, eps=0.0,
+                                 kahan=True)
+    err_plain = np.abs(np.asarray(dc_plain, np.float32) - np.asarray(dcr)).mean()
+    err_kahan = np.abs(np.asarray(dc_kahan, np.float32) - np.asarray(dcr)).mean()
+    assert err_kahan < err_plain * 0.7, (err_kahan, err_plain)
+
+
+def test_fullc_propagates_rare_token_gradients():
+    """§5.3: filtering grad_C starves tokens with little support; the FullC
+    variant must produce nonzero gradient rows for rare tokens that appear
+    as *negatives* only."""
+    e, c, x = make_inputs_big()
+    # Confine all labels to the first vocab block: every other block holds
+    # only negatives whose softmax mass is tiny (rare tokens).
+    x = x % SMALL_BS.v_block
+    dl = jnp.ones((e.shape[0],), jnp.float32)
+    lse = ref.ref_lse(e, c)
+    big_eps = 0.05  # aggressive filter to expose the starvation
+    _, dc_filtered = K.lse_backward(e, c, x, lse, dl, block_sizes=SMALL_BS,
+                                    eps=big_eps)
+    _, dc_fullc = K.lse_backward(e, c, x, lse, dl, block_sizes=SMALL_BS,
+                                 eps=big_eps, filter_c=False)
+    _, dcr = ref.ref_grads(e, c, x, dl)
+    # Filtered: label-free blocks are skipped, so their grad_c rows are
+    # exactly zero — those tokens receive no negative signal (§5.3).
+    zero_rows_filtered = (np.abs(np.asarray(dc_filtered)).sum(axis=1) == 0).sum()
+    zero_rows_fullc = (np.abs(np.asarray(dc_fullc)).sum(axis=1) == 0).sum()
+    assert zero_rows_filtered > zero_rows_fullc
+    # FullC matches the float32 reference everywhere.
+    np.testing.assert_allclose(np.asarray(dc_fullc), np.asarray(dcr),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.1, 3.0), seed=st.integers(0, 2**31))
+def test_loss_is_scale_stable(scale, seed):
+    """LSE stability: scaling the logits never produces inf/nan loss."""
+    rng = np.random.default_rng(seed)
+    e = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32) * scale * 5)
+    c = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32) * scale * 5)
+    x = jnp.asarray(rng.integers(0, 32, size=16).astype(np.int32))
+    loss = K.linear_cross_entropy(e, c, x,
+                                  K.CCEOptions(block_sizes=SMALL_BS))
+    assert np.isfinite(np.asarray(loss)).all()
+
+
+def test_zloss_grads_flow_through_lse_path():
+    """z-loss differentiates through the ∇LSE term of Algorithm 3."""
+    rng = np.random.default_rng(9)
+    n, d, v = 24, 8, 48
+    e = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) * 0.5)
+    c = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32) * 0.5)
+    x = jnp.asarray(rng.integers(0, v, size=n).astype(np.int32))
+    opts = K.CCEOptions(block_sizes=SMALL_BS, eps=0.0)
+
+    def ours(e_, c_):
+        return K.cce_training_loss(e_, c_, x, opts, z_loss=0.01)
+
+    def reference(e_, c_):
+        nll = ref.ref_loss(e_, c_, x)
+        lse = ref.ref_lse(e_, c_)
+        return jnp.mean(nll) + 0.01 * jnp.mean(jnp.square(lse))
+
+    np.testing.assert_allclose(float(ours(e, c)), float(reference(e, c)),
+                               rtol=1e-5)
+    ga = jax.grad(ours, argnums=(0, 1))(e, c)
+    gb = jax.grad(reference, argnums=(0, 1))(e, c)
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_label_smoothing_matches_ref():
+    rng = np.random.default_rng(10)
+    n, d, v = 20, 8, 32
+    e = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) * 0.5)
+    c = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32) * 0.5)
+    x = jnp.asarray(rng.integers(0, v, size=n).astype(np.int32))
+    opts = K.CCEOptions(block_sizes=SMALL_BS, eps=0.0)
+    a = 0.1
+
+    def reference(e_, c_):
+        z = ref.ref_logits(e_, c_)
+        logp = jax.nn.log_softmax(z, axis=1)
+        picked = jnp.take_along_axis(logp, x[:, None], 1)[:, 0]
+        smooth = jnp.mean(logp, axis=1)
+        return -jnp.mean((1 - a) * picked + a * smooth)
+
+    got = float(K.cce_training_loss(e, c, x, opts, label_smoothing=a))
+    np.testing.assert_allclose(got, float(reference(e, c)), rtol=1e-5)
+    ga = jax.grad(lambda e_: K.cce_training_loss(e_, c, x, opts,
+                                                 label_smoothing=a))(e)
+    gb = jax.grad(lambda e_: reference(e_, c))(e)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                               rtol=1e-3, atol=1e-5)

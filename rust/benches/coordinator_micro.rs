@@ -1,0 +1,96 @@
+//! Coordinator micro-benchmarks: the L3 hot paths outside the compute.
+//!
+//! These are the knobs the §Perf pass tunes: the coordinator must not be
+//! the bottleneck (target: <5% of step wall time at e2e scale).
+
+use cce::data::{web_corpus, Dataset, DatasetConfig};
+use cce::memmodel::{fsdp_plan, method_memory, LossMethod, Workload, MODEL_ZOO};
+use cce::tokenizer::{Tokenizer, TokenizerConfig};
+use cce::util::stats::{fmt_duration, measure, Summary};
+
+fn report(name: &str, bytes_or_items: Option<(f64, &str)>, times: &[f64]) {
+    let s = Summary::of(times);
+    let rate = bytes_or_items
+        .map(|(n, unit)| format!("  ({:.1} {unit}/s)", n / s.mean))
+        .unwrap_or_default();
+    println!(
+        "  {name:<42} mean {:>9}  p90 {:>9}{rate}",
+        fmt_duration(s.mean),
+        fmt_duration(s.p90)
+    );
+}
+
+fn main() {
+    println!("== coordinator micro-benchmarks ==");
+
+    // Corpus generation.
+    let times = measure(1, 5, || {
+        std::hint::black_box(web_corpus(500, 1));
+    });
+    report("web_corpus(500 docs)", Some((500.0, "docs")), &times);
+
+    // BPE training.
+    let docs = web_corpus(500, 1);
+    let texts: Vec<String> = docs.iter().map(|d| d.text.clone()).collect();
+    let n_bytes: usize = texts.iter().map(|t| t.len()).sum();
+    let times = measure(1, 3, || {
+        std::hint::black_box(
+            Tokenizer::train(&texts, &TokenizerConfig { vocab_size: 4096, min_pair_freq: 2 })
+                .unwrap(),
+        );
+    });
+    report("bpe_train(4096 vocab)", Some((n_bytes as f64, "B")), &times);
+
+    // Encoding throughput.
+    let tok = Tokenizer::train(&texts, &TokenizerConfig { vocab_size: 4096, min_pair_freq: 2 })
+        .unwrap();
+    let times = measure(1, 5, || {
+        for t in &texts {
+            std::hint::black_box(tok.encode(t));
+        }
+    });
+    report("bpe_encode(500 docs)", Some((n_bytes as f64, "B")), &times);
+
+    // Dataset build (tokenize + pack + split).
+    let times = measure(1, 3, || {
+        std::hint::black_box(
+            Dataset::build(&docs, &tok, &DatasetConfig {
+                seq_len: 256,
+                val_fraction: 0.02,
+                seed: 0,
+                pad_per_doc: false,
+            })
+            .unwrap(),
+        );
+    });
+    report("dataset_build(500 docs, seq 256)", None, &times);
+
+    // Step-batch assembly (the actual per-step hot path).
+    let ds = Dataset::build(&docs, &tok, &DatasetConfig {
+        seq_len: 256,
+        val_fraction: 0.02,
+        seed: 0,
+        pad_per_doc: false,
+    })
+    .unwrap();
+    let n_steps = ds.train.len() / (2 * 8);
+    let times = measure(1, 10, || {
+        for b in ds.step_batches(2, 8, 0) {
+            std::hint::black_box(b);
+        }
+    });
+    report(
+        &format!("step_batches({} steps of 2x8x256)", n_steps),
+        Some((n_steps as f64, "steps")),
+        &times,
+    );
+
+    // Analytic memory model (should be ~ns; sanity that tables are free).
+    let times = measure(10, 10, || {
+        for m in MODEL_ZOO {
+            std::hint::black_box(fsdp_plan(m, 65_536, 16, 75));
+        }
+        std::hint::black_box(method_memory(LossMethod::Cce, &Workload::gemma2_2b()));
+    });
+    report("memmodel(15 models + table row)", None, &times);
+}

@@ -1,0 +1,52 @@
+//! `cargo bench` entry: regenerate every measured table/figure of the paper
+//! (Table 1, Table A1, Table A2, Figs. A1/A2) and run their shape checks.
+//!
+//! The analytic tables (Fig. 1 / Table A3 / Table A4) are also printed —
+//! they cost microseconds.  Use `CCE_BENCH_BUDGET_MS` to trade precision
+//! for wall time (default 3000 ms per artifact).
+
+use cce::bench;
+use cce::runtime;
+
+fn main() {
+    // cargo passes --bench; our harness takes no options.
+    let budget: u64 = std::env::var("CCE_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3000);
+
+    let rt = runtime::open_default().expect("run `make artifacts` first");
+    println!("platform: {} | budget {budget} ms/artifact", rt.platform());
+
+    // ---- analytic tables (instant) ----
+    bench::fig1::run(65_536, 16, 75, Some("bench_out/fig1.csv")).unwrap();
+    bench::tablea3::run(Some("bench_out/tablea3.csv")).unwrap();
+
+    // ---- measured: Table 1 ----
+    let rows = bench::table1::run(&rt, 0.0, budget).expect("table1");
+    bench::table1::print(&rows, "Table 1: memory & time per cross-entropy implementation");
+    if let Err(e) = bench::table1::check(&rows) {
+        eprintln!("TABLE1 CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("  [check] Table 1 shape claims hold");
+
+    // ---- measured: Table A1 (ignored tokens removed) ----
+    let rows_a1 = bench::table1::run(&rt, 0.35, budget).expect("tableA1");
+    bench::table1::print(&rows_a1, "Table A1: with 35% ignored tokens");
+
+    // ---- measured: Table A2 breakdown ----
+    let b = bench::breakdown::run(&rt, budget).expect("tableA2");
+    bench::breakdown::print(&b);
+
+    // ---- measured: Figs. A1/A2 sweep ----
+    let points = bench::sweep::run(&rt, budget).expect("sweep");
+    bench::sweep::print(&points, Some("bench_out/sweep.csv")).unwrap();
+    if let Err(e) = bench::sweep::check(&points) {
+        eprintln!("SWEEP CHECK FAILED: {e}");
+        std::process::exit(1);
+    }
+    println!("  [check] sweep scaling claims hold");
+
+    println!("\nall paper-table benches complete (CSV in bench_out/)");
+}

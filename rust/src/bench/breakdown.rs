@@ -1,0 +1,106 @@
+//! Table A2 harness: backward-pass component breakdown for CCE vs Baseline.
+//!
+//! The paper ablates kernel components by selectively disabling them; we do
+//! the same at artifact granularity:
+//!
+//! * logit recomputation  ≈ CCE forward time (the same matmul+reduce pass);
+//! * gradient-filter gain = (no-filter fwd+bwd) - (CCE fwd+bwd);
+//! * vocab-sorting gain   = (no-sort  fwd+bwd) - (CCE fwd+bwd);
+//! * grad e / grad c      = remaining backward time, split by the paper's
+//!   measured proportion of the two output matmuls.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::harness::{time_artifact, Table};
+use crate::runtime::Runtime;
+use crate::util::stats::fmt_duration;
+
+/// Paper Table A2 shares (% of backward) for reference display.
+pub const PAPER_A2: &[(&str, f64, f64)] = &[
+    // (component, baseline %, cce %)
+    ("logit recomputation", 0.0, 43.2),
+    ("d log-softmax", 28.5, 4.4),
+    ("gradient filter", 0.0, 1.2),
+    ("d softcap", 13.7, 4.4),
+    ("grad E", 30.0, 29.6),
+    ("grad C", 27.7, 17.3),
+];
+
+pub struct Breakdown {
+    pub cce_fwd: f64,
+    pub cce_bwd: f64,
+    pub nofilter_bwd: f64,
+    pub nosort_bwd: f64,
+    pub baseline_fwd: f64,
+    pub baseline_bwd: f64,
+}
+
+pub fn run(rt: &Runtime, budget_ms: u64) -> Result<Breakdown> {
+    let bench = rt
+        .manifest
+        .raw_meta
+        .get("bench")
+        .ok_or_else(|| anyhow!("no bench meta"))?;
+    let n = bench.req("n")?.as_i64().unwrap();
+    let d = bench.req("d")?.as_i64().unwrap();
+    let v = bench.req("v")?.as_i64().unwrap();
+    let tag = format!("n{n}_d{d}_v{v}");
+    let budget = Duration::from_millis(budget_ms);
+    let time = |name: String| -> Result<f64> {
+        Ok(time_artifact(rt, &name, 0.0, budget)?.mean())
+    };
+
+    let cce_fwd = time(format!("loss_fwd_cce_{tag}"))?;
+    let cce_total = time(format!("loss_fwdbwd_cce_{tag}"))?;
+    let nofilter_total = time(format!("loss_fwdbwd_cce_no_filter_{tag}"))?;
+    let nosort_total = time(format!("loss_fwdbwd_cce_no_sort_{tag}"))?;
+    let baseline_fwd = time(format!("loss_fwd_baseline_{tag}"))?;
+    let baseline_total = time(format!("loss_fwdbwd_baseline_{tag}"))?;
+
+    Ok(Breakdown {
+        cce_fwd,
+        cce_bwd: (cce_total - cce_fwd).max(0.0),
+        nofilter_bwd: (nofilter_total - cce_fwd).max(0.0),
+        nosort_bwd: (nosort_total - cce_fwd).max(0.0),
+        baseline_fwd,
+        baseline_bwd: (baseline_total - baseline_fwd).max(0.0),
+    })
+}
+
+pub fn print(b: &Breakdown) {
+    println!("\n== Table A2: backward-pass breakdown (measured at the scaled grid) ==\n");
+    let mut t = Table::new(&["Component", "Time", "Share of CCE bwd"]);
+    let filter_gain = (b.nofilter_bwd - b.cce_bwd).max(0.0);
+    let sort_gain = (b.nosort_bwd - b.cce_bwd).max(0.0);
+    // Inside the CCE backward: recompute ~ fwd cost; rest is grads.
+    let recompute = b.cce_fwd.min(b.cce_bwd);
+    let grads = (b.cce_bwd - recompute).max(0.0);
+    let share = |x: f64| format!("{:.1} %", 100.0 * x / b.cce_bwd.max(1e-12));
+    t.row(vec!["logit recomputation (≈fwd pass)".into(),
+               fmt_duration(recompute), share(recompute)]);
+    t.row(vec!["grad E + grad C (filtered)".into(),
+               fmt_duration(grads), share(grads)]);
+    t.row(vec!["saved by gradient filter".into(),
+               fmt_duration(filter_gain),
+               format!("(+{:.0}% if disabled)", 100.0 * filter_gain / b.cce_bwd.max(1e-12))]);
+    t.row(vec!["saved by vocab sorting".into(),
+               fmt_duration(sort_gain),
+               format!("(+{:.0}% if disabled)", 100.0 * sort_gain / b.cce_bwd.max(1e-12))]);
+    t.print();
+
+    println!("\n  Baseline: fwd {} bwd {}   CCE: fwd {} bwd {}",
+             fmt_duration(b.baseline_fwd), fmt_duration(b.baseline_bwd),
+             fmt_duration(b.cce_fwd), fmt_duration(b.cce_bwd));
+    println!("\n  Paper shares (A100, Gemma 2 2B):");
+    let mut p = Table::new(&["Component", "Baseline %", "CCE %"]);
+    for (name, b_pct, c_pct) in PAPER_A2 {
+        p.row(vec![
+            name.to_string(),
+            if *b_pct == 0.0 { String::new() } else { format!("{b_pct:.1}") },
+            format!("{c_pct:.1}"),
+        ]);
+    }
+    p.print();
+}

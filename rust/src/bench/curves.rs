@@ -1,0 +1,152 @@
+//! Figs. 4 & 5 harness: train the same model with two loss implementations
+//! on identical batches and compare the curves.
+//!
+//! Fig. 4 — fine-tuning (instruct corpus, padded/masked) with `cce` vs
+//! `fused` (the torch.compile analogue): the curves must be
+//! indistinguishable, showing gradient filtering does not hurt convergence.
+//!
+//! Fig. 5 — pretraining (web corpus, packed) with `cce_kahan_fullc` vs
+//! `fused`, compared on *validation perplexity*: the pretraining-safe CCE
+//! variant matches the exact loss.
+
+use anyhow::Result;
+
+use crate::bench::harness::Table;
+use crate::coordinator::{curve_max_divergence, CorpusKind, Metrics, RunConfig,
+                         TrainState, Trainer};
+use crate::runtime::Runtime;
+
+pub struct CurvePair {
+    pub method_a: String,
+    pub method_b: String,
+    pub metrics_a: Metrics,
+    pub metrics_b: Metrics,
+    pub divergence: f64,
+}
+
+/// Train `tag` twice (same seed, same data) with two loss methods.
+pub fn compare(
+    rt: &Runtime,
+    tag: &str,
+    corpus: CorpusKind,
+    method_a: &str,
+    method_b: &str,
+    steps: u64,
+    eval_every: u64,
+    seed: u64,
+) -> Result<CurvePair> {
+    let run = |method: &str| -> Result<Metrics> {
+        let cfg = RunConfig {
+            tag: tag.into(),
+            method: method.into(),
+            steps,
+            seed,
+            corpus: corpus.clone(),
+            corpus_docs: if tag == "tiny" { 400 } else { 4000 },
+            eval_every,
+            checkpoint_every: 0,
+            log_every: u64::MAX, // quiet
+            out_dir: format!("runs/curves_{tag}_{method}"),
+            ..Default::default()
+        };
+        let trainer = Trainer::build(rt, cfg)?;
+        let state = TrainState::init(rt, &trainer.meta, seed as i32)?;
+        let mut metrics = Metrics::in_memory();
+        trainer.train(state, &mut metrics)?;
+        Ok(metrics)
+    };
+    eprintln!("  [curves] training {tag} with {method_a} ({steps} steps)...");
+    let metrics_a = run(method_a)?;
+    eprintln!("  [curves] training {tag} with {method_b} ({steps} steps)...");
+    let metrics_b = run(method_b)?;
+    let divergence = curve_max_divergence(&metrics_a.steps, &metrics_b.steps);
+    Ok(CurvePair {
+        method_a: method_a.into(),
+        method_b: method_b.into(),
+        metrics_a,
+        metrics_b,
+        divergence,
+    })
+}
+
+pub fn print(pair: &CurvePair, title: &str, csv: Option<&str>) -> Result<()> {
+    println!("\n== {title} ==");
+    println!(
+        "   max |loss({}) - loss({})| over {} steps = {:.3e}\n",
+        pair.method_a,
+        pair.method_b,
+        pair.metrics_a.steps.len(),
+        pair.divergence
+    );
+    let mut t = Table::new(&[
+        "step",
+        &format!("loss {}", pair.method_a),
+        &format!("loss {}", pair.method_b),
+        "|diff|",
+    ]);
+    let stride = (pair.metrics_a.steps.len() / 12).max(1);
+    for (a, b) in pair
+        .metrics_a
+        .steps
+        .iter()
+        .zip(&pair.metrics_b.steps)
+        .step_by(stride)
+    {
+        t.row(vec![
+            a.step.to_string(),
+            format!("{:.4}", a.loss),
+            format!("{:.4}", b.loss),
+            format!("{:.2e}", (a.loss - b.loss).abs()),
+        ]);
+    }
+    t.print();
+
+    if !pair.metrics_a.evals.is_empty() {
+        println!("\n  validation perplexity:");
+        let mut e = Table::new(&[
+            "step",
+            &format!("ppl {}", pair.method_a),
+            &format!("ppl {}", pair.method_b),
+        ]);
+        for (a, b) in pair.metrics_a.evals.iter().zip(&pair.metrics_b.evals) {
+            e.row(vec![
+                a.step.to_string(),
+                format!("{:.2}", a.perplexity),
+                format!("{:.2}", b.perplexity),
+            ]);
+        }
+        e.print();
+    }
+
+    if let Some(path) = csv {
+        let mut csv_t = Table::new(&["step", "loss_a", "loss_b"]);
+        for (a, b) in pair.metrics_a.steps.iter().zip(&pair.metrics_b.steps) {
+            csv_t.row(vec![
+                a.step.to_string(),
+                format!("{:.6}", a.loss),
+                format!("{:.6}", b.loss),
+            ]);
+        }
+        csv_t.write_csv(path)?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+/// The convergence claim: curves agree to within `tol` of the loss scale
+/// and both decrease.
+pub fn check(pair: &CurvePair, tol_frac: f64) -> Result<()> {
+    let first = pair.metrics_a.steps.first().map(|r| r.loss).unwrap_or(0.0);
+    let last_a = pair.metrics_a.steps.last().map(|r| r.loss).unwrap_or(0.0);
+    if last_a >= first {
+        anyhow::bail!("loss did not decrease: {first:.4} -> {last_a:.4}");
+    }
+    let scale = first.abs().max(1e-6);
+    if pair.divergence > tol_frac * scale {
+        anyhow::bail!(
+            "curves diverged: max diff {:.4e} > {tol_frac} * {scale:.4}",
+            pair.divergence
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Fig. 1 / Table A4 harness: memory breakdown & max attainable batch size
+//! for the frontier-model zoo on a 16x80 GB FSDP fleet.
+
+use crate::bench::harness::Table;
+use crate::memmodel::{fsdp_plan, MODEL_ZOO};
+use crate::util::stats::fmt_mb;
+
+/// Paper Table A4 (before, after, increase) for side-by-side display.
+pub const PAPER_A4: &[(&str, u64, u64, f64)] = &[
+    ("GPT 2", 5_866_190, 69_845_595, 11.9),
+    ("GPT Neo (1.3B)", 4_268_047, 12_996_042, 3.0),
+    ("GPT Neo (2.7B)", 3_471_784, 7_731_585, 2.2),
+    ("Gemma (2B)", 1_155_515, 17_204_330, 14.9),
+    ("Gemma 2 (27B)", 739_448, 2_525_554, 3.4),
+    ("Gemma 2 (2B)", 1_108_206, 10_580_057, 9.5),
+    ("Llama 2 (13B)", 2_203_057, 2_891_512, 1.3),
+    ("Llama 2 (7B)", 3_164_429, 4_709_560, 1.5),
+    ("Llama 3 (70B)", 397_019, 552_414, 1.4),
+    ("Llama 3 (8B)", 1_579_333, 4_670_136, 3.0),
+    ("Mistral 7B", 3_154_108, 4_694_200, 1.5),
+    ("Mixtral 8x7B", 2_344_949, 3_489_944, 1.5),
+    ("Phi 1.5", 4_264_482, 12_991_781, 3.0),
+    ("Phi 3 Medium", 2_188_824, 2_873_067, 1.3),
+    ("Qwen 1.5 (7B)", 1_412_087, 4_679_564, 3.3),
+];
+
+pub fn run(tokens: u64, gpus: u64, gpu_gb: u64, csv: Option<&str>) -> anyhow::Result<()> {
+    println!("\n== Fig. 1 / Table A4: memory breakdown & max batch size ==");
+    println!(
+        "   fleet: {gpus} x {gpu_gb} GB usable, global batch {tokens} tokens\n"
+    );
+    let mut t = Table::new(&[
+        "Model", "Logits", "Activations", "Weights+Opt", "Max batch (before)",
+        "Max batch (CCE)", "Increase", "Paper",
+    ]);
+    for spec in MODEL_ZOO {
+        let p = fsdp_plan(spec, tokens, gpus, gpu_gb);
+        let paper = PAPER_A4.iter().find(|r| r.0 == spec.name);
+        t.row(vec![
+            spec.name.to_string(),
+            fmt_mb(p.logits_bytes),
+            fmt_mb(p.activations_bytes),
+            fmt_mb(p.weights_opt_bytes),
+            p.max_batch_before.to_string(),
+            p.max_batch_after.to_string(),
+            format!("{:.1}x", p.increase()),
+            paper.map(|r| format!("{:.1}x", r.3)).unwrap_or_default(),
+        ]);
+    }
+    t.print();
+    if let Some(path) = csv {
+        t.write_csv(path)?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every row of Table A4 must reproduce within 1% (params are derived
+    /// from the paper's weights column, so the formulas carry the rest).
+    #[test]
+    fn all_15_rows_match_paper() {
+        for spec in MODEL_ZOO {
+            let p = fsdp_plan(spec, 65_536, 16, 75);
+            let (_, before, after, inc) = PAPER_A4
+                .iter()
+                .find(|r| r.0 == spec.name)
+                .copied()
+                .unwrap_or_else(|| panic!("{} missing from PAPER_A4", spec.name));
+            let rel = |a: u64, b: u64| (a as f64 - b as f64).abs() / b as f64;
+            assert!(rel(p.max_batch_before, before) < 0.01,
+                    "{}: before {} vs paper {}", spec.name, p.max_batch_before, before);
+            assert!(rel(p.max_batch_after, after) < 0.01,
+                    "{}: after {} vs paper {}", spec.name, p.max_batch_after, after);
+            assert!((p.increase() - inc).abs() < 0.11,
+                    "{}: increase {:.2} vs paper {:.1}", spec.name, p.increase(), inc);
+        }
+    }
+
+    /// Fig. 1's headline range: gains span ~1.3x (Llama 2 13B) to ~12-15x
+    /// (GPT 2 / Gemma 1).
+    #[test]
+    fn gain_range_matches_paper() {
+        let gains: Vec<f64> = MODEL_ZOO
+            .iter()
+            .map(|m| fsdp_plan(m, 65_536, 16, 75).increase())
+            .collect();
+        let min = gains.iter().cloned().fold(f64::MAX, f64::min);
+        let max = gains.iter().cloned().fold(0.0, f64::max);
+        assert!((1.25..1.45).contains(&min), "min gain {min}");
+        assert!((10.0..16.0).contains(&max), "max gain {max}");
+    }
+}

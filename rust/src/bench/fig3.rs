@@ -1,0 +1,142 @@
+//! Fig. 3 harness: average softmax probability of the i-th most likely
+//! token, measured from a *trained* model checkpoint via the
+//! `{tag}_rank_stats` artifact, plus the gradient-filter accounting that
+//! this sparsity implies (§4.3 / §5.2).
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::harness::Table;
+use crate::coordinator::{Checkpoint, CorpusKind, Metrics, RunConfig, TrainState,
+                         Trainer};
+use crate::runtime::{HostTensor, Runtime};
+use crate::sparsity::{BlockFilterModel, RankStats, FILTER_EPS};
+
+/// Obtain rank statistics: from `checkpoint` if given, otherwise by training
+/// `tag` for `warm_steps` first (an untrained model's softmax is near
+/// uniform and would say nothing about filtering).
+pub fn run(
+    rt: &Runtime,
+    tag: &str,
+    checkpoint: Option<&str>,
+    warm_steps: u64,
+    seed: u64,
+) -> Result<RankStats> {
+    let cfg = RunConfig {
+        tag: tag.into(),
+        method: "cce".into(),
+        steps: warm_steps,
+        seed,
+        corpus: CorpusKind::Web,
+        corpus_docs: if tag == "tiny" { 400 } else { 4000 },
+        eval_every: 0,
+        checkpoint_every: 0,
+        log_every: 25,
+        out_dir: format!("runs/fig3_{tag}"),
+        ..Default::default()
+    };
+    let trainer = Trainer::build(rt, cfg)?;
+
+    let state = match checkpoint {
+        Some(path) => {
+            eprintln!("  [fig3] loading checkpoint {path}");
+            TrainState::from_checkpoint(Checkpoint::load(path)?, &trainer.meta)?
+        }
+        None => {
+            eprintln!("  [fig3] no checkpoint given; training {warm_steps} steps first");
+            let init = TrainState::init(rt, &trainer.meta, seed as i32)?;
+            let mut metrics = Metrics::in_memory();
+            trainer.train(init, &mut metrics)?
+        }
+    };
+
+    // Mean rank-probabilities over a few validation batches.
+    let exe = rt.load(&format!("{tag}_rank_stats"))?;
+    let batches = trainer.dataset.val_batches(trainer.meta.batch);
+    if batches.is_empty() {
+        return Err(anyhow!("no validation batches"));
+    }
+    let mut acc: Vec<f64> = Vec::new();
+    let n_batches = batches.len().min(4);
+    for b in &batches[..n_batches] {
+        let mut inputs: Vec<HostTensor> = state.params.clone();
+        inputs.push(b.tokens.clone());
+        let out = exe.run(&inputs)?;
+        let probs = out[0].as_f32()?;
+        if acc.is_empty() {
+            acc = probs.iter().map(|&p| p as f64).collect();
+        } else {
+            for (a, &p) in acc.iter_mut().zip(probs) {
+                *a += p as f64;
+            }
+        }
+    }
+    for a in &mut acc {
+        *a /= n_batches as f64;
+    }
+    Ok(RankStats::from_probs(acc, FILTER_EPS))
+}
+
+pub fn print(stats: &RankStats, csv: Option<&str>) -> Result<()> {
+    println!("\n== Fig. 3: average probability of the i-th most likely token ==\n");
+    let mut t = Table::new(&["rank", "mean probability", "log10 p"]);
+    for (rank, p) in stats.fig3_series(24) {
+        t.row(vec![
+            rank.to_string(),
+            format!("{p:.3e}"),
+            format!("{:.2}", p.max(1e-300).log10()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n  ranks above eps=2^-12: {}   softmax sparsity: {:.4}%   log-log slope: {:.2}",
+        stats.significant_ranks,
+        100.0 * stats.sparsity(FILTER_EPS),
+        stats.loglog_slope
+    );
+
+    // Filter accounting at the paper's blocking.
+    let model = BlockFilterModel {
+        vocab: stats.probs.len(),
+        v_block: 256,
+        n_block: 128,
+        sig_per_row: stats.significant_ranks.max(1),
+        sort_agreement: 0.7,
+    };
+    println!(
+        "  block survival: unsorted {:.2}%  sorted {:.2}%  -> predicted bwd speedup {:.1}x (unsorted), {:.1}x (sorted)",
+        100.0 * model.survival_unsorted(),
+        100.0 * model.survival_sorted(),
+        model.predicted_speedup(model.survival_unsorted(), 0.4),
+        model.predicted_speedup(model.survival_sorted(), 0.4),
+    );
+
+    if let Some(path) = csv {
+        let mut csv_t = Table::new(&["rank", "prob"]);
+        for (rank, p) in stats.fig3_series(200) {
+            csv_t.row(vec![rank.to_string(), format!("{p:.6e}")]);
+        }
+        csv_t.write_csv(path)?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+/// Fig. 3 shape claims: monotone decay, rapid vanishing, high sparsity.
+pub fn check(stats: &RankStats) -> Result<()> {
+    if stats.significant_ranks > stats.probs.len() / 4 {
+        anyhow::bail!(
+            "softmax not sparse: {} significant of {}",
+            stats.significant_ranks,
+            stats.probs.len()
+        );
+    }
+    if stats.sparsity(FILTER_EPS) < 0.75 {
+        anyhow::bail!("sparsity too low: {}", stats.sparsity(FILTER_EPS));
+    }
+    let head = stats.probs[0];
+    let mid = stats.probs[stats.probs.len() / 2];
+    if head < mid * 100.0 {
+        anyhow::bail!("no head concentration: p1={head} p_mid={mid}");
+    }
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Benchmark harnesses — one per table/figure of the paper's evaluation.
+//!
+//! | Harness                | Paper artifact | CLI |
+//! |------------------------|----------------|-----|
+//! | [`table1`]             | Table 1 (+A1 via `--ignored`) | `cce table1` |
+//! | [`breakdown`]          | Table A2       | `cce tableA2` |
+//! | [`tablea3`]            | Table A3       | `cce tableA3` |
+//! | [`fig1`]               | Fig. 1 / Table A4 | `cce fig1` |
+//! | [`fig3`]               | Fig. 3         | `cce fig3` |
+//! | [`curves`]             | Figs. 4 & 5    | `cce fig4`, `cce fig5` |
+//! | [`sweep`]              | Figs. A1 / A2  | `cce figA1` |
+//!
+//! Time columns are measured on this substrate (CPU PJRT, scaled grid —
+//! see DESIGN.md "Numerical-scale policy"); memory columns are analytic and
+//! exact at paper scale.  Each harness has a `check()` that asserts the
+//! paper's *shape* claims and is exercised by `cargo test` / `cargo bench`.
+
+pub mod breakdown;
+pub mod curves;
+pub mod fig1;
+pub mod fig3;
+pub mod harness;
+pub mod sweep;
+pub mod table1;
+pub mod tablea3;
+
+pub use harness::{time_artifact, BenchResult, Table};

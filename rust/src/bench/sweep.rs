@@ -1,0 +1,134 @@
+//! Figs. A1/A2 harness: loss+gradient time and memory vs token count.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::harness::{time_artifact, Table};
+use crate::memmodel::{method_memory, LossMethod, Workload};
+use crate::runtime::Runtime;
+use crate::util::stats::{fmt_duration, fmt_mb};
+
+pub struct SweepPoint {
+    pub method: String,
+    pub n_tokens: u64,
+    pub secs: f64,
+    pub mem_bytes: u64,
+}
+
+fn method_of_key(key: &str) -> Option<LossMethod> {
+    Some(match key {
+        "cce" => LossMethod::Cce,
+        "baseline" => LossMethod::Baseline,
+        "fused" => LossMethod::TorchCompile,
+        "chunked8" => LossMethod::Chunked(8),
+        "liger" => LossMethod::Liger,
+        _ => return None,
+    })
+}
+
+/// Time `loss_fwdbwd_{method}` for every token count in the manifest sweep.
+pub fn run(rt: &Runtime, budget_ms: u64) -> Result<Vec<SweepPoint>> {
+    let bench = rt
+        .manifest
+        .raw_meta
+        .get("bench")
+        .ok_or_else(|| anyhow!("no bench meta"))?;
+    let d = bench.req("d")?.as_i64().unwrap() as u64;
+    let v = bench.req("v")?.as_i64().unwrap() as u64;
+    let ns: Vec<u64> = bench
+        .req("sweep_ns")?
+        .as_array()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|j| j.as_i64().map(|i| i as u64))
+        .collect();
+    let methods: Vec<String> = bench
+        .req("sweep_methods")?
+        .as_array()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|j| j.as_str().map(String::from))
+        .collect();
+
+    let mut out = Vec::new();
+    let mut sorted_ns = ns.clone();
+    sorted_ns.sort_unstable();
+    for n in sorted_ns {
+        for m in &methods {
+            let name = format!("loss_fwdbwd_{m}_n{n}_d{d}_v{v}");
+            if rt.manifest.entry(&name).is_err() {
+                continue;
+            }
+            let res = time_artifact(rt, &name, 0.0, Duration::from_millis(budget_ms))?;
+            let w = Workload { n_tokens: n, vocab: v, hidden: d, act_bytes: 4,
+                               softcap: false };
+            let mem = method_of_key(m)
+                .map(|lm| method_memory(lm, &w).combined)
+                .unwrap_or(0);
+            eprintln!("  [sweep] n={n} {m}: {}", fmt_duration(res.mean()));
+            out.push(SweepPoint {
+                method: m.clone(),
+                n_tokens: n,
+                secs: res.mean(),
+                mem_bytes: mem,
+            });
+        }
+    }
+    Ok(out)
+}
+
+pub fn print(points: &[SweepPoint], csv_path: Option<&str>) -> Result<()> {
+    println!("\n== Figs. A1/A2: loss+gradient time & memory vs token count ==");
+    let mut t = Table::new(&["N tokens", "Method", "Time", "Memory (analytic)"]);
+    for p in points {
+        t.row(vec![
+            p.n_tokens.to_string(),
+            p.method.clone(),
+            fmt_duration(p.secs),
+            fmt_mb(p.mem_bytes),
+        ]);
+    }
+    t.print();
+    if let Some(path) = csv_path {
+        let mut csv = Table::new(&["n", "method", "secs", "bytes"]);
+        for p in points {
+            csv.row(vec![
+                p.n_tokens.to_string(),
+                p.method.clone(),
+                format!("{:.6}", p.secs),
+                p.mem_bytes.to_string(),
+            ]);
+        }
+        csv.write_csv(path)?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+/// Shape checks for the sweep: time grows ~linearly in N for every method,
+/// and CCE's memory stays flat while baseline's grows linearly.
+pub fn check(points: &[SweepPoint]) -> Result<()> {
+    let series = |m: &str| -> Vec<&SweepPoint> {
+        let mut v: Vec<&SweepPoint> =
+            points.iter().filter(|p| p.method == m).collect();
+        v.sort_by_key(|p| p.n_tokens);
+        v
+    };
+    let cce = series("cce");
+    let base = series("baseline");
+    if cce.len() >= 2 && base.len() >= 2 {
+        let n_ratio = (base.last().unwrap().n_tokens / base[0].n_tokens) as f64;
+        let base_mem_ratio =
+            base.last().unwrap().mem_bytes as f64 / base[0].mem_bytes as f64;
+        let cce_mem_ratio =
+            cce.last().unwrap().mem_bytes as f64 / cce[0].mem_bytes.max(1) as f64;
+        if (base_mem_ratio / n_ratio - 1.0).abs() > 0.2 {
+            return Err(anyhow!("baseline memory not ~linear in N"));
+        }
+        if cce_mem_ratio > base_mem_ratio / 2.0 {
+            return Err(anyhow!("CCE memory grows too fast"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Table 1 / Table A1 harness: per-method memory and time for the loss, the
+//! gradient, and their combination.
+//!
+//! Memory is analytic (exact at the paper's scale — [`crate::memmodel`]);
+//! time is measured on this substrate by executing the AOT loss artifacts.
+//! Gradient time is reported as `fwdbwd - fwd` (the artifacts expose the
+//! forward and the differentiated computation; the paper's kernel-level
+//! split is approximated by the difference).
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::harness::{time_artifact, Table};
+use crate::memmodel::{method_memory, LossMethod, Workload};
+use crate::runtime::Runtime;
+use crate::util::stats::{fmt_duration, fmt_mb};
+
+/// Paper Table 1 values (Gemma 2 2B, A100) for side-by-side display:
+/// (method key, loss MB, grad MB, combined MB, loss ms, grad ms, comb ms).
+pub const PAPER_TABLE1: &[(&str, u64, u64, u64, u64, u64, u64)] = &[
+    ("cce", 1, 1_163, 1_164, 46, 100, 145),
+    ("liger", 1_474, 0, 1_474, 304, 0, 304),
+    ("chunked8", 8_000, 1_630, 9_631, 55, 115, 169),
+    ("fused", 4_000, 12_000, 16_000, 49, 92, 143),
+    ("baseline", 24_000, 16_000, 28_000, 82, 122, 208),
+    ("cce_no_sort", 0, 1_162, 1_162, 45, 115, 159),
+    ("cce_no_filter", 0, 1_163, 1_162, 45, 314, 357),
+    ("cce_kahan", 1, 2_325, 2_326, 47, 114, 160),
+    ("cce_kahan_fullc", 1, 2_326, 2_326, 47, 268, 313),
+    ("cce_kahan_fulle", 1, 2_326, 2_326, 47, 247, 292),
+];
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub method: LossMethod,
+    pub fwd_secs: f64,
+    pub fwdbwd_secs: f64,
+    pub mem_scaled: crate::memmodel::MethodMemory,
+    pub mem_paper: crate::memmodel::MethodMemory,
+}
+
+/// Measure all methods at the benchmark grid in the manifest.
+pub fn run(rt: &Runtime, ignored_frac: f64, budget_ms: u64) -> Result<Vec<Row>> {
+    let bench = rt
+        .manifest
+        .raw_meta
+        .get("bench")
+        .ok_or_else(|| anyhow!("no bench meta in manifest"))?;
+    let n = bench.req("n")?.as_i64().unwrap() as u64;
+    let d = bench.req("d")?.as_i64().unwrap() as u64;
+    let v = bench.req("v")?.as_i64().unwrap() as u64;
+    let size_tag = format!("n{n}_d{d}_v{v}");
+    // Our substrate runs f32 (act_bytes 4); the paper column uses bf16.
+    let scaled = Workload { n_tokens: n, vocab: v, hidden: d, act_bytes: 4,
+                            softcap: false };
+    let paper = Workload::gemma2_2b();
+    let budget = Duration::from_millis(budget_ms);
+
+    let mut rows = Vec::new();
+    for method in LossMethod::table1_order() {
+        let key = method.key();
+        let fwd = time_artifact(rt, &format!("loss_fwd_{key}_{size_tag}"),
+                                ignored_frac, budget)?;
+        let fwdbwd = time_artifact(rt, &format!("loss_fwdbwd_{key}_{size_tag}"),
+                                   ignored_frac, budget)?;
+        eprintln!(
+            "  [table1] {key}: fwd {} fwd+bwd {}",
+            fmt_duration(fwd.mean()),
+            fmt_duration(fwdbwd.mean())
+        );
+        rows.push(Row {
+            method,
+            fwd_secs: fwd.mean(),
+            fwdbwd_secs: fwdbwd.mean(),
+            mem_scaled: method_memory(method, &scaled),
+            mem_paper: method_memory(method, &paper),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the table (measured time at the scaled grid + analytic memory at
+/// both scales + the paper's published numbers).
+pub fn print(rows: &[Row], title: &str) {
+    println!("\n== {title} ==");
+    println!("   time: measured on this substrate (CPU PJRT, f32, scaled grid)");
+    println!("   memory: analytic model — 'scaled' at the measured grid, 'paper' at Gemma 2 2B (N=8192, |V|=256000, D=2304, bf16)\n");
+    let mut t = Table::new(&[
+        "Method", "Loss t", "Grad t", "L+G t", "Mem scaled", "Mem paper",
+        "Paper mem", "Paper t",
+    ]);
+    for r in rows {
+        let paper_row = PAPER_TABLE1
+            .iter()
+            .find(|p| p.0 == r.method.key());
+        t.row(vec![
+            r.method.label(),
+            fmt_duration(r.fwd_secs),
+            fmt_duration((r.fwdbwd_secs - r.fwd_secs).max(0.0)),
+            fmt_duration(r.fwdbwd_secs),
+            fmt_mb(r.mem_scaled.combined),
+            fmt_mb(r.mem_paper.combined),
+            paper_row.map(|p| format!("{} MB", p.3)).unwrap_or_default(),
+            paper_row.map(|p| format!("{} ms", p.6)).unwrap_or_default(),
+        ]);
+    }
+    t.print();
+}
+
+/// Shape assertions behind the headline claims (used by `cce table1
+/// --check` and the integration tests):
+///
+/// 1. CCE's analytic memory is >=20x below Baseline's at paper scale.
+/// 2. gradient filtering adds no measurable overhead (see inline note on
+///    why the paper's 3.4x *gain* needs finer blocks than this substrate).
+/// 3. CCE fwd+bwd is within 10x of the fused (compile) baseline.  The
+///    paper's parity claim holds on GPU where the blockwise tiles live in
+///    SRAM next to the tensor cores; interpret-mode Pallas emulates each
+///    grid step as a sequential HLO loop iteration, so a constant-factor
+///    emulation overhead over the single-GEMM baseline is expected on this
+///    substrate (see DESIGN.md §Hardware-Adaptation).
+pub fn check(rows: &[Row]) -> Result<()> {
+    let get = |m: &LossMethod| -> Option<&Row> {
+        rows.iter().find(|r| &r.method == m)
+    };
+    let cce = get(&LossMethod::Cce).ok_or_else(|| anyhow!("no cce row"))?;
+    let base = get(&LossMethod::Baseline).ok_or_else(|| anyhow!("no baseline"))?;
+    let fused = get(&LossMethod::TorchCompile).ok_or_else(|| anyhow!("no fused"))?;
+    let nofilter = get(&LossMethod::CceNoFilter);
+
+    if base.mem_paper.combined < 20 * cce.mem_paper.combined {
+        return Err(anyhow!(
+            "memory claim failed: baseline {} vs cce {}",
+            base.mem_paper.combined,
+            cce.mem_paper.combined
+        ));
+    }
+    if let Some(nf) = nofilter {
+        // On this substrate the bench tiles are 512x2048 (required to make
+        // interpret-mode tractable), which leaves only 16 vocabulary blocks
+        // — too coarse for the eps-filter to skip whole blocks, so the
+        // paper's 3.4x no-filter gap does not reproduce in wall time here.
+        // The mechanism itself is validated at kernel granularity by
+        // python/tests/test_numerics.py (blocks below eps are provably
+        // skipped and the error bound holds) and by the block-survival
+        // model in `sparsity`.  The wall-clock claim checked here is the
+        // weaker one that filtering costs nothing: cce bwd within 25% of
+        // the unfiltered backward.
+        let bwd_nf = nf.fwdbwd_secs - nf.fwd_secs;
+        let bwd_cce = cce.fwdbwd_secs - cce.fwd_secs;
+        if bwd_cce > 1.25 * bwd_nf {
+            return Err(anyhow!(
+                "filter overhead claim failed: cce bwd {bwd_cce:.3}s >> no-filter bwd {bwd_nf:.3}s"
+            ));
+        }
+    }
+    if cce.fwdbwd_secs > 10.0 * fused.fwdbwd_secs {
+        return Err(anyhow!(
+            "latency claim failed: cce {:.3}s vs fused {:.3}s",
+            cce.fwdbwd_secs,
+            fused.fwdbwd_secs
+        ));
+    }
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Table A3 harness: memory (analytic, full scale) for the additional
+//! models of Appendix C.2, all methods.
+//!
+//! Wall-clock at each model's full dims is out of reach for the CPU
+//! substrate, so this table reports the analytic memory model per model —
+//! which is what changes across Table A3's blocks — alongside the paper's
+//! published values; the latency ordering is measured once at the scaled
+//! grid by `cce table1`.
+
+use crate::bench::harness::Table;
+use crate::memmodel::models::BENCH_MODELS;
+use crate::memmodel::{method_memory, LossMethod, Workload};
+use crate::util::stats::fmt_mb;
+
+/// Paper Table A3 loss+gradient memory (MB) per (model, method key).
+pub const PAPER_A3_COMBINED_MB: &[(&str, &[(&str, u64)])] = &[
+    ("Gemma 2 (9B)", &[("cce", 1_809), ("liger", 2_119), ("chunked8", 11_264),
+                       ("fused", 16_000), ("baseline", 28_000), ("cce_kahan_fullc", 3_559)]),
+    ("Gemma 2 (27B)", &[("cce", 2_325), ("liger", 2_948), ("chunked8", 12_768),
+                        ("fused", 16_000), ("baseline", 28_000), ("cce_kahan_fullc", 4_575)]),
+    ("Mistral NeMo", &[("cce", 1_362), ("liger", 1_872), ("chunked8", 5_396),
+                       // the baseline combined cell is garbled in the paper's
+                       // Table A3; 12_288 = 12 B/elem is the derived value
+                       ("fused", 8_192), ("baseline", 12_288), ("cce_kahan_fullc", 2_642)]),
+    ("Phi 3.5 Mini", &[("cce", 236), ("liger", 488), ("chunked8", 953),
+                       ("fused", 2_006), ("baseline", 3_006), ("cce_kahan_fullc", 424)]),
+    ("Qwen 2.5 (7B)", &[("cce", 1_097), ("liger", 1_394), ("chunked8", 4_921),
+                        ("fused", 9_504), ("baseline", 14_256), ("cce_kahan_fullc", 2_138)]),
+    ("Qwen 2.5 (32B)", &[("cce", 1_567), ("liger", 2_161), ("chunked8", 6_259),
+                         ("fused", 9_504), ("baseline", 14_256), ("cce_kahan_fullc", 3_053)]),
+];
+
+const METHODS: &[LossMethod] = &[
+    LossMethod::Cce,
+    LossMethod::Liger,
+    LossMethod::Chunked(8),
+    LossMethod::TorchCompile,
+    LossMethod::Baseline,
+    LossMethod::CceKahanFullC,
+];
+
+pub fn run(csv: Option<&str>) -> anyhow::Result<()> {
+    println!("\n== Table A3: loss+gradient memory for additional models ==");
+    println!("   analytic model at full scale (N=8192 tokens, bf16 grads)\n");
+    let mut t = Table::new(&["Model", "Method", "Memory (ours)", "Memory (paper)"]);
+    for &(name, vocab, hidden) in BENCH_MODELS {
+        if name == "Gemma 2 (2B)" {
+            continue; // that column is Table 1
+        }
+        let w = Workload { n_tokens: 8192, vocab, hidden, act_bytes: 2,
+                           softcap: vocab == 256_000 };
+        for method in METHODS {
+            let mem = method_memory(*method, &w).combined;
+            let paper = PAPER_A3_COMBINED_MB
+                .iter()
+                .find(|(m, _)| *m == name)
+                .and_then(|(_, rows)| {
+                    rows.iter().find(|(k, _)| *k == method.key())
+                })
+                .map(|(_, mb)| format!("{mb} MB"))
+                .unwrap_or_default();
+            t.row(vec![
+                name.to_string(),
+                method.label(),
+                fmt_mb(mem),
+                paper,
+            ]);
+        }
+    }
+    t.print();
+    if let Some(path) = csv {
+        t.write_csv(path)?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Our analytic model should land within 25% of the paper's A3 cells
+    /// for the structural methods (baseline / fused / CCE-class).  The
+    /// chunked rows (Torch Tune, Liger) depend on PyTorch allocator
+    /// behaviour the paper doesn't specify; they are displayed but checked
+    /// only loosely (within 2.5x).
+    #[test]
+    fn within_tolerance_of_paper() {
+        for &(name, rows) in PAPER_A3_COMBINED_MB {
+            let &(_, vocab, hidden) = BENCH_MODELS
+                .iter()
+                .find(|(n, _, _)| *n == name)
+                .unwrap();
+            let w = Workload { n_tokens: 8192, vocab, hidden, act_bytes: 2,
+                               softcap: vocab == 256_000 };
+            for &(key, paper_mb) in rows {
+                let method = METHODS.iter().find(|m| m.key() == key).unwrap();
+                let ours_mb = method_memory(*method, &w).combined / crate::memmodel::MB;
+                let rel = (ours_mb as f64 - paper_mb as f64).abs() / paper_mb as f64;
+                let tol = match key {
+                    "chunked8" | "liger" => 1.5,
+                    _ => 0.25,
+                };
+                assert!(
+                    rel < tol,
+                    "{name}/{key}: ours {ours_mb} MB vs paper {paper_mb} MB ({rel:.2})"
+                );
+            }
+        }
+    }
+}

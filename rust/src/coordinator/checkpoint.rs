@@ -1,0 +1,187 @@
+//! Checkpointing: params + optimizer state + step, in a self-describing
+//! binary format (JSON header + raw little-endian payload).
+//!
+//! Format:
+//! ```text
+//! magic "CCECKPT1" (8 bytes)
+//! header_len: u64 LE
+//! header: JSON  { step, tensors: [{name, shape, dtype, offset, bytes}] }
+//! payload: concatenated raw tensor data
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{DType, Data, HostTensor};
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"CCECKPT1";
+
+/// A named tensor collection with a step counter.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<(String, HostTensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut payload: Vec<u8> = Vec::new();
+        let mut entries = Vec::new();
+        for (name, t) in &self.tensors {
+            let offset = payload.len();
+            write_data(&mut payload, &t.data);
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                (
+                    "shape",
+                    Json::Array(t.shape.iter().map(|&d| Json::Int(d as i64)).collect()),
+                ),
+                ("dtype", Json::str(t.dtype().name())),
+                ("offset", Json::Int(offset as i64)),
+                ("bytes", Json::Int((payload.len() - offset) as i64)),
+            ]));
+        }
+        let header = Json::obj(vec![
+            ("step", Json::Int(self.step as i64)),
+            ("tensors", Json::Array(entries)),
+        ])
+        .to_string();
+
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(MAGIC)?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            f.write_all(&payload)?;
+        }
+        std::fs::rename(&tmp, path.as_ref())?; // atomic publish
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a CCE checkpoint (bad magic)");
+        }
+        let mut len_bytes = [0u8; 8];
+        f.read_exact(&mut len_bytes)?;
+        let header_len = u64::from_le_bytes(len_bytes) as usize;
+        let mut header_bytes = vec![0u8; header_len];
+        f.read_exact(&mut header_bytes)?;
+        let header = Json::parse(std::str::from_utf8(&header_bytes)?)?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+
+        let step = header.req("step")?.as_i64().unwrap_or(0) as u64;
+        let mut tensors = Vec::new();
+        for e in header.req("tensors")?.as_array().unwrap_or(&[]) {
+            let name = e.req("name")?.as_str().unwrap_or("").to_string();
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_array()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_i64().map(|i| i as usize))
+                .collect();
+            let dtype = DType::parse(e.req("dtype")?.as_str().unwrap_or(""))?;
+            let offset = e.req("offset")?.as_i64().unwrap_or(0) as usize;
+            let bytes = e.req("bytes")?.as_i64().unwrap_or(0) as usize;
+            let slice = payload
+                .get(offset..offset + bytes)
+                .ok_or_else(|| anyhow!("checkpoint payload truncated"))?;
+            let data = read_data(dtype, slice)?;
+            tensors.push((name, HostTensor::new(shape, data)?));
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+}
+
+fn write_data(out: &mut Vec<u8>, data: &Data) {
+    match data {
+        Data::F32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        Data::I32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        Data::U32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        Data::F64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+    }
+}
+
+fn read_data(dtype: DType, bytes: &[u8]) -> Result<Data> {
+    let n = bytes.len() / dtype.size_bytes();
+    Ok(match dtype {
+        DType::F32 => Data::F32(
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        DType::I32 => Data::I32(
+            bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        DType::U32 => Data::U32(
+            bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        DType::F64 => Data::F64(
+            bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+    })
+    .and_then(|d: Data| {
+        if d.len() == n {
+            Ok(d)
+        } else {
+            bail!("payload size mismatch")
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ckpt = Checkpoint {
+            step: 123,
+            tensors: vec![
+                ("embed".into(), HostTensor::f32(vec![4, 3], (0..12).map(|i| i as f32 * 0.5).collect()).unwrap()),
+                ("step_tensor".into(), HostTensor::scalar_i32(9)),
+            ],
+        };
+        let path = std::env::temp_dir().join("cce_ckpt_test.bin");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 123);
+        assert_eq!(loaded.tensors.len(), 2);
+        assert_eq!(loaded.tensors[0].0, "embed");
+        assert_eq!(loaded.tensors[0].1, ckpt.tensors[0].1);
+        assert_eq!(loaded.tensors[1].1.scalar().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("cce_ckpt_bad.bin");
+        std::fs::write(&path, b"NOTACKPT12345678").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_detected() {
+        let ckpt = Checkpoint {
+            step: 1,
+            tensors: vec![("x".into(), HostTensor::f32(vec![8], vec![1.0; 8]).unwrap())],
+        };
+        let path = std::env::temp_dir().join("cce_ckpt_trunc.bin");
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! Run configuration: JSON config files + CLI overrides.
+//!
+//! A run is fully described by a small JSON document (see `configs/*.json`),
+//! so experiments are launch-by-config like any production trainer:
+//!
+//! ```json
+//! {
+//!   "tag": "e2e", "method": "cce", "steps": 300, "seed": 0,
+//!   "corpus": {"kind": "web", "docs": 2000},
+//!   "eval_every": 50, "checkpoint_every": 100, "out_dir": "runs/demo"
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Which synthetic corpus a run trains on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CorpusKind {
+    /// OpenWebText analogue (packed pretraining).
+    Web,
+    /// Alpaca analogue (padded fine-tuning with masked prompts).
+    Instruct,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model artifact tag (`e2e`, `tiny`, ... from the manifest).
+    pub tag: String,
+    /// Loss method (must have a `{tag}_train_step_{method}` artifact).
+    pub method: String,
+    pub steps: u64,
+    pub seed: u64,
+    pub corpus: CorpusKind,
+    pub corpus_docs: usize,
+    pub vocab_size: usize,
+    pub eval_every: u64,
+    pub checkpoint_every: u64,
+    pub log_every: u64,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            tag: "e2e".into(),
+            method: "cce".into(),
+            steps: 300,
+            seed: 0,
+            corpus: CorpusKind::Web,
+            corpus_docs: 4000,
+            vocab_size: 4096,
+            eval_every: 50,
+            checkpoint_every: 0,
+            log_every: 10,
+            out_dir: "runs/default".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(json: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let gets = |k: &str, d: &str| -> String {
+            json.get(k).and_then(|v| v.as_str()).unwrap_or(d).to_string()
+        };
+        let geti = |k: &str, d: i64| -> i64 {
+            json.get(k).and_then(|v| v.as_i64()).unwrap_or(d)
+        };
+        cfg.tag = gets("tag", &cfg.tag);
+        cfg.method = gets("method", &cfg.method);
+        cfg.steps = geti("steps", cfg.steps as i64) as u64;
+        cfg.seed = geti("seed", cfg.seed as i64) as u64;
+        cfg.eval_every = geti("eval_every", cfg.eval_every as i64) as u64;
+        cfg.checkpoint_every =
+            geti("checkpoint_every", cfg.checkpoint_every as i64) as u64;
+        cfg.log_every = geti("log_every", cfg.log_every as i64) as u64;
+        cfg.out_dir = gets("out_dir", &cfg.out_dir);
+        cfg.vocab_size = geti("vocab_size", cfg.vocab_size as i64) as usize;
+        if let Some(corpus) = json.get("corpus") {
+            cfg.corpus_docs = corpus
+                .get("docs")
+                .and_then(|v| v.as_i64())
+                .unwrap_or(cfg.corpus_docs as i64) as usize;
+            cfg.corpus = match corpus.get("kind").and_then(|v| v.as_str()) {
+                Some("instruct") => CorpusKind::Instruct,
+                Some("web") | None => CorpusKind::Web,
+                Some(other) => return Err(anyhow!("unknown corpus kind {other:?}")),
+            };
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Apply `--key value` CLI overrides on top of the config file.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.opt("tag") {
+            self.tag = v.into();
+        }
+        if let Some(v) = args.opt("method") {
+            self.method = v.into();
+        }
+        self.steps = args.get("steps", self.steps)?;
+        self.seed = args.get("seed", self.seed)?;
+        self.eval_every = args.get("eval-every", self.eval_every)?;
+        self.checkpoint_every = args.get("checkpoint-every", self.checkpoint_every)?;
+        self.log_every = args.get("log-every", self.log_every)?;
+        self.corpus_docs = args.get("corpus-docs", self.corpus_docs)?;
+        if let Some(v) = args.opt("out-dir") {
+            self.out_dir = v.into();
+        }
+        if let Some(v) = args.opt("corpus") {
+            self.corpus = match v {
+                "web" => CorpusKind::Web,
+                "instruct" => CorpusKind::Instruct,
+                other => return Err(anyhow!("unknown corpus {other:?}")),
+            };
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tag", Json::str(&self.tag)),
+            ("method", Json::str(&self.method)),
+            ("steps", Json::Int(self.steps as i64)),
+            ("seed", Json::Int(self.seed as i64)),
+            (
+                "corpus",
+                Json::obj(vec![
+                    (
+                        "kind",
+                        Json::str(match self.corpus {
+                            CorpusKind::Web => "web",
+                            CorpusKind::Instruct => "instruct",
+                        }),
+                    ),
+                    ("docs", Json::Int(self.corpus_docs as i64)),
+                ]),
+            ),
+            ("vocab_size", Json::Int(self.vocab_size as i64)),
+            ("eval_every", Json::Int(self.eval_every as i64)),
+            ("checkpoint_every", Json::Int(self.checkpoint_every as i64)),
+            ("log_every", Json::Int(self.log_every as i64)),
+            ("out_dir", Json::str(&self.out_dir)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let cfg = RunConfig {
+            method: "cce_kahan_fullc".into(),
+            corpus: CorpusKind::Instruct,
+            steps: 77,
+            ..Default::default()
+        };
+        let cfg2 = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg2.method, "cce_kahan_fullc");
+        assert_eq!(cfg2.steps, 77);
+        assert_eq!(cfg2.corpus, CorpusKind::Instruct);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = RunConfig::default();
+        let args = Args::parse(
+            ["--steps", "5", "--method", "baseline", "--corpus", "instruct"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.steps, 5);
+        assert_eq!(cfg.method, "baseline");
+        assert_eq!(cfg.corpus, CorpusKind::Instruct);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let cfg = RunConfig::from_json(&Json::parse(r#"{"steps": 9}"#).unwrap()).unwrap();
+        assert_eq!(cfg.steps, 9);
+        assert_eq!(cfg.tag, "e2e");
+    }
+
+    #[test]
+    fn bad_corpus_rejected() {
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"corpus": {"kind": "bogus"}}"#).unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Metrics registry: in-memory history + JSONL/CSV sinks.
+//!
+//! Every training run writes `metrics.jsonl` (one JSON object per event)
+//! and `loss_curve.csv` under its `out_dir`; the Fig. 4/5 harnesses read
+//! the in-memory history to compare methods' curves.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// One logged training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub tokens_per_sec: f64,
+    pub elapsed: f64,
+}
+
+/// One validation measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub val_loss: f64,
+    pub perplexity: f64,
+}
+
+/// Collects records and streams them to disk.
+pub struct Metrics {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    jsonl: Option<BufWriter<File>>,
+    started: Instant,
+}
+
+impl Metrics {
+    /// In-memory only (benches, tests).
+    pub fn in_memory() -> Metrics {
+        Metrics { steps: Vec::new(), evals: Vec::new(), jsonl: None, started: Instant::now() }
+    }
+
+    /// Stream to `out_dir/metrics.jsonl` as well.
+    pub fn with_dir(out_dir: impl AsRef<Path>) -> Result<Metrics> {
+        std::fs::create_dir_all(&out_dir)?;
+        let file = File::create(out_dir.as_ref().join("metrics.jsonl"))?;
+        Ok(Metrics {
+            steps: Vec::new(),
+            evals: Vec::new(),
+            jsonl: Some(BufWriter::new(file)),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn log_step(&mut self, step: u64, loss: f64, grad_norm: f64, tokens: u64) {
+        let elapsed = self.elapsed();
+        let dt = elapsed
+            - self.steps.last().map(|r| r.elapsed).unwrap_or(0.0);
+        let rec = StepRecord {
+            step,
+            loss,
+            grad_norm,
+            tokens_per_sec: tokens as f64 / dt.max(1e-9),
+            elapsed,
+        };
+        self.steps.push(rec);
+        self.write_json(&Json::obj(vec![
+            ("kind", Json::str("step")),
+            ("step", Json::Int(step as i64)),
+            ("loss", Json::Float(loss)),
+            ("grad_norm", Json::Float(grad_norm)),
+            ("tokens_per_sec", Json::Float(rec.tokens_per_sec)),
+            ("elapsed", Json::Float(elapsed)),
+        ]));
+    }
+
+    pub fn log_eval(&mut self, step: u64, val_loss: f64) {
+        let rec = EvalRecord { step, val_loss, perplexity: val_loss.exp() };
+        self.evals.push(rec);
+        self.write_json(&Json::obj(vec![
+            ("kind", Json::str("eval")),
+            ("step", Json::Int(step as i64)),
+            ("val_loss", Json::Float(val_loss)),
+            ("perplexity", Json::Float(rec.perplexity)),
+        ]));
+    }
+
+    fn write_json(&mut self, json: &Json) {
+        if let Some(w) = &mut self.jsonl {
+            let _ = writeln!(w, "{}", json.to_string());
+            let _ = w.flush();
+        }
+    }
+
+    /// Write the loss curve as CSV (step, loss[, val columns at eval steps]).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "step,loss,grad_norm,tokens_per_sec")?;
+        for r in &self.steps {
+            writeln!(w, "{},{:.6},{:.4},{:.0}", r.step, r.loss, r.grad_norm,
+                     r.tokens_per_sec)?;
+        }
+        Ok(())
+    }
+
+    /// Smoothed loss at each eval point (for curve comparisons).
+    pub fn smoothed_losses(&self, window: usize) -> Vec<(u64, f64)> {
+        let w = window.max(1);
+        self.steps
+            .windows(w)
+            .map(|chunk| {
+                let mean = chunk.iter().map(|r| r.loss).sum::<f64>() / w as f64;
+                (chunk[w - 1].step, mean)
+            })
+            .collect()
+    }
+
+    /// Mean tokens/sec over the run (skipping the first compile-heavy step).
+    pub fn mean_throughput(&self) -> f64 {
+        let steps = self.steps.iter().skip(1).collect::<Vec<_>>();
+        if steps.is_empty() {
+            return 0.0;
+        }
+        steps.iter().map(|r| r.tokens_per_sec).sum::<f64>() / steps.len() as f64
+    }
+}
+
+/// Maximum absolute difference between two loss curves sampled at the same
+/// steps — the Fig. 4/5 "indistinguishable curves" metric.
+pub fn curve_max_divergence(a: &[StepRecord], b: &[StepRecord]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            assert_eq!(x.step, y.step, "curves sampled at different steps");
+            (x.loss - y.loss).abs()
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_smooths() {
+        let mut m = Metrics::in_memory();
+        for s in 0..10 {
+            m.log_step(s, 5.0 - s as f64 * 0.1, 1.0, 4096);
+        }
+        m.log_eval(9, 4.0);
+        assert_eq!(m.steps.len(), 10);
+        assert!((m.evals[0].perplexity - 4.0f64.exp()).abs() < 1e-9);
+        let sm = m.smoothed_losses(3);
+        assert_eq!(sm.len(), 8);
+        assert!(sm[0].1 > sm.last().unwrap().1);
+    }
+
+    #[test]
+    fn divergence() {
+        let mk = |losses: &[f64]| -> Vec<StepRecord> {
+            losses
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| StepRecord {
+                    step: i as u64,
+                    loss: l,
+                    grad_norm: 0.0,
+                    tokens_per_sec: 0.0,
+                    elapsed: 0.0,
+                })
+                .collect()
+        };
+        let a = mk(&[3.0, 2.0, 1.0]);
+        let b = mk(&[3.0, 2.2, 1.05]);
+        assert!((curve_max_divergence(&a, &b) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jsonl_sink_writes() {
+        let dir = std::env::temp_dir().join("cce_metrics_test");
+        let mut m = Metrics::with_dir(&dir).unwrap();
+        m.log_step(1, 2.5, 0.7, 512);
+        drop(m);
+        let text = std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        let parsed = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.get("kind").unwrap().as_str(), Some("step"));
+        assert_eq!(parsed.get("step").unwrap().as_i64(), Some(1));
+    }
+}

@@ -1,0 +1,12 @@
+//! The L3 coordinator: configuration, training orchestration, checkpoints,
+//! and metrics.  See [`trainer::Trainer`] for the event loop.
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use config::{CorpusKind, RunConfig};
+pub use metrics::{curve_max_divergence, EvalRecord, Metrics, StepRecord};
+pub use trainer::{TrainState, Trainer};

@@ -1,0 +1,226 @@
+//! The training orchestrator: drives the AOT train/eval artifacts.
+//!
+//! The Rust side owns everything around the compute: corpus generation, BPE
+//! vocabulary, packing, the microbatch schedule (the `(accum, batch, seq)`
+//! layout the artifact consumes), parameter/optimizer-state round-tripping,
+//! evaluation, checkpointing and metrics.  One `train_step` call = one
+//! optimizer step over `accum` microbatches (gradients accumulate *inside*
+//! the artifact, so state crosses the PJRT boundary once per step).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::config::{CorpusKind, RunConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::data::{instruct_corpus, web_corpus, Dataset, DatasetConfig, StepBatch};
+use crate::runtime::{Executable, HostTensor, ModelMeta, Runtime};
+use crate::tokenizer::{Tokenizer, TokenizerConfig};
+
+/// Mutable training state: flat params + Adam moments + step counter.
+pub struct TrainState {
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: i32,
+}
+
+impl TrainState {
+    /// Fresh state from the `{tag}_init` artifact.
+    pub fn init(rt: &Runtime, meta: &ModelMeta, seed: i32) -> Result<TrainState> {
+        let init = rt.load(&format!("{}_init", meta.tag))?;
+        let params = init.run(&[HostTensor::i32(vec![1], vec![seed])?])?;
+        let zeros_like = |ps: &[HostTensor]| {
+            ps.iter()
+                .map(|p| HostTensor::zeros(crate::runtime::DType::F32, p.shape.clone()))
+                .collect::<Vec<_>>()
+        };
+        let m = zeros_like(&params);
+        let v = zeros_like(&params);
+        Ok(TrainState { params, m, v, step: 0 })
+    }
+
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.size_bytes()).sum()
+    }
+
+    pub fn to_checkpoint(&self, meta: &ModelMeta) -> Checkpoint {
+        let mut tensors = Vec::new();
+        for (spec, t) in meta.params.iter().zip(&self.params) {
+            tensors.push((format!("param:{}", spec.name), t.clone()));
+        }
+        for (spec, t) in meta.params.iter().zip(&self.m) {
+            tensors.push((format!("m:{}", spec.name), t.clone()));
+        }
+        for (spec, t) in meta.params.iter().zip(&self.v) {
+            tensors.push((format!("v:{}", spec.name), t.clone()));
+        }
+        Checkpoint { step: self.step as u64, tensors }
+    }
+
+    pub fn from_checkpoint(ckpt: Checkpoint, meta: &ModelMeta) -> Result<TrainState> {
+        let n = meta.params.len();
+        if ckpt.tensors.len() != 3 * n {
+            bail!("checkpoint has {} tensors, expected {}", ckpt.tensors.len(), 3 * n);
+        }
+        let mut tensors = ckpt.tensors;
+        let v = tensors.split_off(2 * n).into_iter().map(|(_, t)| t).collect();
+        let m = tensors.split_off(n).into_iter().map(|(_, t)| t).collect();
+        let params = tensors.into_iter().map(|(_, t)| t).collect();
+        Ok(TrainState { params, m, v, step: ckpt.step as i32 })
+    }
+}
+
+/// A ready-to-train bundle: runtime + artifacts + data + tokenizer.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub meta: ModelMeta,
+    pub cfg: RunConfig,
+    pub tokenizer: Tokenizer,
+    pub dataset: Dataset,
+    train_exe: std::rc::Rc<Executable>,
+    eval_exe: std::rc::Rc<Executable>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Build the full pipeline for `cfg`: generate the corpus, train the
+    /// BPE vocabulary, pack the dataset, and load the artifacts.
+    pub fn build(rt: &'rt Runtime, cfg: RunConfig) -> Result<Trainer<'rt>> {
+        let meta = rt.manifest.model(&cfg.tag)?.clone();
+        let docs = match cfg.corpus {
+            CorpusKind::Web => web_corpus(cfg.corpus_docs, cfg.seed),
+            CorpusKind::Instruct => instruct_corpus(cfg.corpus_docs, cfg.seed),
+        };
+        let texts: Vec<String> = docs.iter().map(|d| d.text.clone()).collect();
+        // The artifact's embedding table is sized for the config vocab; the
+        // tokenizer must not exceed it.
+        let tok = Tokenizer::train(&texts, &TokenizerConfig {
+            vocab_size: meta.vocab_size.min(cfg.vocab_size),
+            min_pair_freq: 2,
+        })?;
+        let dataset = Dataset::build(&docs, &tok, &DatasetConfig {
+            seq_len: meta.seq,
+            val_fraction: 0.02,
+            seed: cfg.seed,
+            pad_per_doc: cfg.corpus == CorpusKind::Instruct,
+        })?;
+        let train_exe = rt.load(&format!("{}_train_step_{}", cfg.tag, cfg.method))?;
+        let eval_exe = rt.load(&format!("{}_eval_step", cfg.tag))?;
+        Ok(Trainer { rt, meta, cfg, tokenizer: tok, dataset, train_exe, eval_exe })
+    }
+
+    pub fn tokens_per_step(&self) -> u64 {
+        (self.meta.accum * self.meta.batch * self.meta.seq) as u64
+    }
+
+    /// One optimizer step.  Consumes and returns the state (the artifact
+    /// round-trips all tensors).
+    pub fn step(&self, state: TrainState, batch: &StepBatch) -> Result<(TrainState, f64, f64)> {
+        let n = state.params.len();
+        let mut inputs =
+            Vec::with_capacity(3 * n + 3);
+        inputs.extend(state.params);
+        inputs.extend(state.m);
+        inputs.extend(state.v);
+        inputs.push(HostTensor::scalar_i32(state.step));
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.targets.clone());
+
+        let mut out = self.train_exe.run(&inputs)?;
+        if out.len() != 3 * n + 3 {
+            bail!("train_step returned {} outputs, expected {}", out.len(), 3 * n + 3);
+        }
+        let grad_norm = out.pop().unwrap().scalar()?;
+        let loss = out.pop().unwrap().scalar()?;
+        let step = out.pop().unwrap().scalar()? as i32;
+        let v = out.split_off(2 * n);
+        let m = out.split_off(n);
+        let params = out;
+        Ok((TrainState { params, m, v, step }, loss, grad_norm))
+    }
+
+    /// Mean validation NLL over all validation batches.
+    pub fn evaluate(&self, state: &TrainState) -> Result<f64> {
+        let batches = self.dataset.val_batches(self.meta.batch);
+        if batches.is_empty() {
+            bail!("validation set smaller than one batch");
+        }
+        let (mut loss_sum, mut count) = (0.0, 0.0);
+        for b in &batches {
+            let mut inputs = state.params.clone();
+            inputs.push(b.tokens.clone());
+            inputs.push(b.targets.clone());
+            let out = self.eval_exe.run(&inputs)?;
+            loss_sum += out[0].scalar()?;
+            count += out[1].scalar()?;
+        }
+        Ok(loss_sum / count.max(1.0))
+    }
+
+    /// Run the full training loop; returns the final state.
+    pub fn train(&self, mut state: TrainState, metrics: &mut Metrics) -> Result<TrainState> {
+        let mut done: u64 = state.step as u64;
+        let mut epoch: u64 = 0;
+        let out_dir = std::path::Path::new(&self.cfg.out_dir);
+        'outer: loop {
+            let mut saw_batch = false;
+            for batch in self
+                .dataset
+                .step_batches(self.meta.accum, self.meta.batch, epoch)
+            {
+                saw_batch = true;
+                let (next, loss, gnorm) = self.step(state, &batch)?;
+                state = next;
+                done += 1;
+                if done % self.cfg.log_every.max(1) == 0 || done == 1 {
+                    metrics.log_step(done, loss, gnorm, self.tokens_per_step());
+                    eprintln!(
+                        "[train {}/{}] step {done}/{} loss {loss:.4} gnorm {gnorm:.3} ({:.0} tok/s)",
+                        self.cfg.tag,
+                        self.cfg.method,
+                        self.cfg.steps,
+                        metrics.steps.last().map(|r| r.tokens_per_sec).unwrap_or(0.0)
+                    );
+                } else {
+                    metrics.log_step(done, loss, gnorm, self.tokens_per_step());
+                }
+                if self.cfg.eval_every > 0 && done % self.cfg.eval_every == 0 {
+                    let val = self.evaluate(&state)?;
+                    metrics.log_eval(done, val);
+                    eprintln!(
+                        "[eval  {}/{}] step {done} val_loss {val:.4} ppl {:.2}",
+                        self.cfg.tag,
+                        self.cfg.method,
+                        val.exp()
+                    );
+                }
+                if self.cfg.checkpoint_every > 0 && done % self.cfg.checkpoint_every == 0 {
+                    let path = out_dir.join(format!("ckpt_{done}.bin"));
+                    self.to_checkpoint_with_vocab(&state, &path)?;
+                }
+                if done >= self.cfg.steps {
+                    break 'outer;
+                }
+            }
+            if !saw_batch {
+                return Err(anyhow!(
+                    "dataset too small: no step batches (need {} sequences/step)",
+                    self.meta.accum * self.meta.batch
+                ));
+            }
+            epoch += 1;
+        }
+        Ok(state)
+    }
+
+    /// Save checkpoint + tokenizer next to it.
+    pub fn to_checkpoint_with_vocab(
+        &self,
+        state: &TrainState,
+        path: &std::path::Path,
+    ) -> Result<()> {
+        state.to_checkpoint(&self.meta).save(path)?;
+        self.tokenizer
+            .save(path.with_extension("vocab.json"))?;
+        Ok(())
+    }
+}

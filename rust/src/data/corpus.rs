@@ -1,0 +1,191 @@
+//! Synthetic corpora with natural-language statistics.
+//!
+//! The paper's experiments need two properties from their data, not the
+//! prose itself: (1) Zipfian token frequencies — which produce the softmax
+//! sparsity that gradient filtering exploits (Fig. 3) — and (2) a
+//! prompt/response structure whose prompt tokens are masked (Appendix B).
+//! Both are reproduced here with a deterministic generator:
+//!
+//! * a synthetic **lexicon** of pronounceable words, ranked by a Zipf law;
+//! * a **bigram topic model**: each document draws a topic that reweights
+//!   the lexicon, giving local coherence (so a trained LM beats unigram
+//!   entropy and its softmax concentrates — the Fig. 3 prerequisite);
+//! * an **instruction template grammar** for the Alpaca analogue.
+
+use crate::util::rng::{Rng, ZipfTable};
+
+/// A corpus document: text plus an optional prompt span to mask.
+#[derive(Debug, Clone)]
+pub struct Document {
+    pub text: String,
+    /// For instruction data: the prompt prefix (masked from the loss) ends
+    /// at this byte offset of `text`; `None` = plain pretraining text.
+    pub prompt_bytes: Option<usize>,
+}
+
+/// Deterministic pronounceable pseudo-word for lexicon rank `i`.
+fn make_word(i: usize) -> String {
+    const ONSETS: [&str; 16] = [
+        "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "st",
+        "tr", "pl",
+    ];
+    const VOWELS: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ou", "ea"];
+    const CODAS: [&str; 8] = ["", "n", "r", "s", "t", "l", "nd", "rk"];
+    let mut word = String::new();
+    let mut x = i + 1;
+    loop {
+        let syll = x % (ONSETS.len() * VOWELS.len() * CODAS.len());
+        word.push_str(ONSETS[syll % ONSETS.len()]);
+        word.push_str(VOWELS[(syll / ONSETS.len()) % VOWELS.len()]);
+        word.push_str(CODAS[syll / (ONSETS.len() * VOWELS.len())]);
+        x /= ONSETS.len() * VOWELS.len() * CODAS.len();
+        if x == 0 {
+            break;
+        }
+    }
+    word
+}
+
+/// A Zipf-ranked lexicon with topic-conditional resampling.
+pub struct Lexicon {
+    words: Vec<String>,
+    zipf: ZipfTable,
+    n_topics: usize,
+}
+
+impl Lexicon {
+    pub fn new(n_words: usize, zipf_s: f64, n_topics: usize) -> Lexicon {
+        Lexicon {
+            words: (0..n_words).map(make_word).collect(),
+            zipf: ZipfTable::new(n_words, zipf_s),
+            n_topics,
+        }
+    }
+
+    /// Sample a word under `topic`: ranks are rotated per topic over the
+    /// tail of the distribution, so topics share the frequent head (function
+    /// words) but differ in content vocabulary.
+    fn sample(&self, rng: &mut Rng, topic: usize) -> &str {
+        let rank = self.zipf.sample(rng);
+        let head = 64.min(self.words.len());
+        let idx = if rank < head {
+            rank
+        } else {
+            head + (rank - head + topic * 977) % (self.words.len() - head)
+        };
+        &self.words[idx]
+    }
+
+    fn sentence(&self, rng: &mut Rng, topic: usize, len: usize) -> String {
+        let mut s = String::new();
+        for i in 0..len {
+            if i > 0 {
+                s.push(' ');
+            }
+            s.push_str(self.sample(rng, topic));
+        }
+        s.push('.');
+        s
+    }
+}
+
+/// OpenWebText analogue: `n_docs` multi-sentence documents.
+pub fn web_corpus(n_docs: usize, seed: u64) -> Vec<Document> {
+    let lex = Lexicon::new(8192, 1.07, 64);
+    let mut rng = Rng::new(seed);
+    (0..n_docs)
+        .map(|_| {
+            let topic = rng.usize_below(lex.n_topics);
+            let n_sentences = 3 + rng.usize_below(10);
+            let text = (0..n_sentences)
+                .map(|_| {
+                    let len = 5 + rng.usize_below(14);
+                    lex.sentence(&mut rng, topic, len)
+                })
+                .collect::<Vec<_>>()
+                .join(" ");
+            Document { text, prompt_bytes: None }
+        })
+        .collect()
+}
+
+/// Alpaca analogue: instruction/response documents with masked prompts.
+pub fn instruct_corpus(n_docs: usize, seed: u64) -> Vec<Document> {
+    const VERBS: [&str; 8] = [
+        "describe", "list", "explain", "compare", "summarize", "rank",
+        "classify", "outline",
+    ];
+    let lex = Lexicon::new(4096, 1.1, 32);
+    let mut rng = Rng::new(seed);
+    (0..n_docs)
+        .map(|_| {
+            let topic = rng.usize_below(lex.n_topics);
+            let verb = *rng.choose(&VERBS);
+            let subject_len = 2 + rng.usize_below(4);
+            let subject = lex.sentence(&mut rng, topic, subject_len);
+            let prompt = format!("instruction: {verb} {subject}");
+            let n_sentences = 1 + rng.usize_below(4);
+            let response = (0..n_sentences)
+                .map(|_| {
+                    let len = 4 + rng.usize_below(10);
+                    lex.sentence(&mut rng, topic, len)
+                })
+                .collect::<Vec<_>>()
+                .join(" ");
+            let text = format!("{prompt} response: {response}");
+            Document { text, prompt_bytes: Some(prompt.len()) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn deterministic() {
+        let a = web_corpus(5, 42);
+        let b = web_corpus(5, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.text, y.text);
+        }
+        let c = web_corpus(5, 43);
+        assert_ne!(a[0].text, c[0].text);
+    }
+
+    #[test]
+    fn word_frequencies_are_zipfian() {
+        let docs = web_corpus(300, 1);
+        let mut freq: HashMap<&str, usize> = HashMap::new();
+        for d in &docs {
+            for w in d.text.split_whitespace() {
+                *freq.entry(w.trim_end_matches('.')).or_insert(0) += 1;
+            }
+        }
+        let mut counts: Vec<usize> = freq.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Zipf check: top word much more frequent than rank-100.
+        assert!(counts[0] > 20 * counts.get(100).copied().unwrap_or(1));
+        // And a long tail exists.
+        assert!(counts.len() > 1000, "lexicon too small: {}", counts.len());
+    }
+
+    #[test]
+    fn instruct_has_prompt_span() {
+        let docs = instruct_corpus(20, 7);
+        for d in &docs {
+            let p = d.prompt_bytes.unwrap();
+            assert!(d.text[..p].starts_with("instruction:"));
+            assert!(d.text[p..].trim_start().starts_with("response:"));
+        }
+    }
+
+    #[test]
+    fn words_are_pronounceable_and_unique_enough() {
+        let words: Vec<String> = (0..1000).map(make_word).collect();
+        let unique: std::collections::HashSet<&String> = words.iter().collect();
+        assert_eq!(unique.len(), words.len());
+        assert!(words.iter().all(|w| w.is_ascii() && !w.is_empty()));
+    }
+}

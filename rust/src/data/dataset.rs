@@ -1,0 +1,338 @@
+//! Tokenized datasets: packing, masking, splitting, batch iteration.
+//!
+//! Two layouts, matching the paper's two training regimes:
+//!
+//! * **packed** (pretraining, Fig. 5): documents are concatenated with
+//!   BOS/EOS and chunked into dense `seq_len` windows — every target counts.
+//! * **padded** (fine-tuning, Fig. 4): one document per sequence, prompt
+//!   tokens and padding masked to `-1` — the ignored-token population whose
+//!   removal Appendix B benchmarks.
+//!
+//! The iterator yields `(accum, batch, seq)` step batches shaped exactly as
+//! the train-step artifact expects; the epoch order reshuffles from a
+//! deterministic per-epoch RNG stream.
+
+use anyhow::{bail, Result};
+
+use crate::data::corpus::Document;
+use crate::runtime::HostTensor;
+use crate::tokenizer::{Tokenizer, BOS, EOS, SEP};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    pub seq_len: usize,
+    pub val_fraction: f64,
+    pub seed: u64,
+    /// `true` = padded per-document (fine-tune), `false` = packed (pretrain).
+    pub pad_per_doc: bool,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig { seq_len: 256, val_fraction: 0.01, seed: 0, pad_per_doc: false }
+    }
+}
+
+/// One fixed-length training sequence.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub tokens: Vec<i32>,
+    /// Next-token targets; `-1` marks ignored positions.
+    pub targets: Vec<i32>,
+}
+
+/// A tokenized, packed, split dataset.
+pub struct Dataset {
+    pub train: Vec<Sequence>,
+    pub val: Vec<Sequence>,
+    pub seq_len: usize,
+    seed: u64,
+}
+
+/// One optimizer-step batch: `(accum, batch, seq)` token / target tensors.
+#[derive(Debug, Clone)]
+pub struct StepBatch {
+    pub tokens: HostTensor,
+    pub targets: HostTensor,
+}
+
+impl Dataset {
+    /// Tokenize + pack `docs`.
+    pub fn build(
+        docs: &[Document],
+        tok: &Tokenizer,
+        cfg: &DatasetConfig,
+    ) -> Result<Dataset> {
+        let sequences = if cfg.pad_per_doc {
+            Self::pad_per_doc(docs, tok, cfg.seq_len)
+        } else {
+            Self::pack(docs, tok, cfg.seq_len)
+        };
+        if sequences.is_empty() {
+            bail!("no sequences produced (corpus too small for seq_len {})",
+                  cfg.seq_len);
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+        let mut order: Vec<usize> = (0..sequences.len()).collect();
+        rng.shuffle(&mut order);
+        let n_val = ((sequences.len() as f64 * cfg.val_fraction).ceil() as usize)
+            .min(sequences.len() - 1)
+            .max(1);
+        let val = order[..n_val]
+            .iter()
+            .map(|&i| sequences[i].clone())
+            .collect();
+        let train = order[n_val..]
+            .iter()
+            .map(|&i| sequences[i].clone())
+            .collect();
+        Ok(Dataset { train, val, seq_len: cfg.seq_len, seed: cfg.seed })
+    }
+
+    /// Packed layout: token stream -> dense `seq_len` windows.
+    fn pack(docs: &[Document], tok: &Tokenizer, seq_len: usize) -> Vec<Sequence> {
+        // Token stream with a parallel "is prompt" mask.
+        let mut stream: Vec<i32> = Vec::new();
+        let mut is_prompt: Vec<bool> = Vec::new();
+        for doc in docs {
+            stream.push(BOS);
+            is_prompt.push(false);
+            match doc.prompt_bytes {
+                None => {
+                    let ids = tok.encode(&doc.text);
+                    is_prompt.extend(std::iter::repeat(false).take(ids.len()));
+                    stream.extend(ids);
+                }
+                Some(p) => {
+                    let prompt_ids = tok.encode(&doc.text[..p]);
+                    is_prompt.extend(std::iter::repeat(true).take(prompt_ids.len() + 1));
+                    stream.extend(prompt_ids);
+                    stream.push(SEP);
+                    let resp_ids = tok.encode(doc.text[p..].trim_start());
+                    is_prompt.extend(std::iter::repeat(false).take(resp_ids.len()));
+                    stream.extend(resp_ids);
+                }
+            }
+            stream.push(EOS);
+            is_prompt.push(false);
+        }
+
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start + seq_len + 1 <= stream.len() {
+            let tokens = stream[start..start + seq_len].to_vec();
+            let targets = (1..=seq_len)
+                .map(|i| {
+                    let idx = start + i;
+                    if is_prompt[idx] {
+                        -1
+                    } else {
+                        stream[idx]
+                    }
+                })
+                .collect();
+            out.push(Sequence { tokens, targets });
+            start += seq_len;
+        }
+        out
+    }
+
+    /// Padded layout: one document per sequence, prompt + padding masked.
+    fn pad_per_doc(docs: &[Document], tok: &Tokenizer, seq_len: usize) -> Vec<Sequence> {
+        let mut out = Vec::new();
+        for doc in docs {
+            let mut tokens = vec![BOS];
+            let mut prompt_mask = vec![true]; // BOS's *target* is position 1
+            match doc.prompt_bytes {
+                None => {
+                    let ids = tok.encode(&doc.text);
+                    prompt_mask.extend(std::iter::repeat(false).take(ids.len()));
+                    tokens.extend(ids);
+                }
+                Some(p) => {
+                    let prompt_ids = tok.encode(&doc.text[..p]);
+                    prompt_mask
+                        .extend(std::iter::repeat(true).take(prompt_ids.len() + 1));
+                    tokens.extend(prompt_ids);
+                    tokens.push(SEP);
+                    let resp_ids = tok.encode(doc.text[p..].trim_start());
+                    prompt_mask.extend(std::iter::repeat(false).take(resp_ids.len()));
+                    tokens.extend(resp_ids);
+                }
+            }
+            tokens.push(EOS);
+            prompt_mask.push(false);
+            tokens.truncate(seq_len + 1);
+            prompt_mask.truncate(seq_len + 1);
+
+            // targets[i] = tokens[i+1] unless that position is prompt/pad.
+            let n = tokens.len();
+            let mut seq_tokens = tokens[..n - 1].to_vec();
+            let mut targets: Vec<i32> = (1..n)
+                .map(|i| if prompt_mask[i] { -1 } else { tokens[i] })
+                .collect();
+            while seq_tokens.len() < seq_len {
+                seq_tokens.push(crate::tokenizer::PAD);
+                targets.push(-1);
+            }
+            out.push(Sequence { tokens: seq_tokens, targets });
+        }
+        out
+    }
+
+    /// Fraction of ignored (target = -1) positions — Appendix B's statistic.
+    pub fn ignored_fraction(&self) -> f64 {
+        let (mut ignored, mut total) = (0usize, 0usize);
+        for s in &self.train {
+            ignored += s.targets.iter().filter(|&&t| t < 0).count();
+            total += s.targets.len();
+        }
+        ignored as f64 / total.max(1) as f64
+    }
+
+    /// Iterate step batches for `epoch` (deterministic shuffle per epoch).
+    pub fn step_batches(
+        &self,
+        accum: usize,
+        batch: usize,
+        epoch: u64,
+    ) -> impl Iterator<Item = StepBatch> + '_ {
+        let per_step = accum * batch;
+        let mut order: Vec<usize> = (0..self.train.len()).collect();
+        let mut rng = Rng::new(self.seed ^ (epoch.wrapping_mul(0x9E37_79B9)));
+        rng.shuffle(&mut order);
+        let seq = self.seq_len;
+        (0..self.train.len() / per_step).map(move |step| {
+            let mut tokens = Vec::with_capacity(per_step * seq);
+            let mut targets = Vec::with_capacity(per_step * seq);
+            for &idx in &order[step * per_step..(step + 1) * per_step] {
+                tokens.extend_from_slice(&self.train[idx].tokens);
+                targets.extend_from_slice(&self.train[idx].targets);
+            }
+            StepBatch {
+                tokens: HostTensor::i32(vec![accum, batch, seq], tokens).unwrap(),
+                targets: HostTensor::i32(vec![accum, batch, seq], targets).unwrap(),
+            }
+        })
+    }
+
+    /// Validation batches of shape `(batch, seq)`; the last partial batch is
+    /// dropped (val set sizes are chosen to make this negligible).
+    pub fn val_batches(&self, batch: usize) -> Vec<StepBatch> {
+        let seq = self.seq_len;
+        (0..self.val.len() / batch)
+            .map(|i| {
+                let mut tokens = Vec::with_capacity(batch * seq);
+                let mut targets = Vec::with_capacity(batch * seq);
+                for s in &self.val[i * batch..(i + 1) * batch] {
+                    tokens.extend_from_slice(&s.tokens);
+                    targets.extend_from_slice(&s.targets);
+                }
+                StepBatch {
+                    tokens: HostTensor::i32(vec![batch, seq], tokens).unwrap(),
+                    targets: HostTensor::i32(vec![batch, seq], targets).unwrap(),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{instruct_corpus, web_corpus};
+    use crate::tokenizer::TokenizerConfig;
+    use crate::util::prop;
+
+    fn small_setup(pad: bool) -> Dataset {
+        let docs = if pad { instruct_corpus(80, 3) } else { web_corpus(40, 3) };
+        let texts: Vec<String> = docs.iter().map(|d| d.text.clone()).collect();
+        let tok = Tokenizer::train(&texts, &TokenizerConfig {
+            vocab_size: 512,
+            min_pair_freq: 2,
+        })
+        .unwrap();
+        Dataset::build(&docs, &tok, &DatasetConfig {
+            seq_len: 32,
+            val_fraction: 0.1,
+            seed: 1,
+            pad_per_doc: pad,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn packed_shapes_and_split() {
+        let ds = small_setup(false);
+        assert!(!ds.train.is_empty() && !ds.val.is_empty());
+        for s in ds.train.iter().chain(&ds.val) {
+            assert_eq!(s.tokens.len(), 32);
+            assert_eq!(s.targets.len(), 32);
+        }
+    }
+
+    #[test]
+    fn packed_targets_shift_by_one() {
+        let ds = small_setup(false);
+        let s = &ds.train[0];
+        // Where not masked, target[i] must equal the next stream token;
+        // within a window that means tokens[i+1] for i < seq-1.
+        for i in 0..31 {
+            if s.targets[i] >= 0 && s.targets[i + 1] >= 0 {
+                assert_eq!(s.targets[i], s.tokens[i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn padded_masks_prompt_and_padding() {
+        let ds = small_setup(true);
+        let frac = ds.ignored_fraction();
+        assert!(frac > 0.2 && frac < 0.95, "ignored fraction {frac}");
+        for s in &ds.train {
+            // padding at the end must be masked
+            if let Some(last) = s.tokens.iter().rposition(|&t| t != crate::tokenizer::PAD) {
+                for i in (last + 1)..s.targets.len() {
+                    assert_eq!(s.targets[i], -1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_batches_shapes() {
+        let ds = small_setup(false);
+        let b: Vec<StepBatch> = ds.step_batches(2, 4, 0).collect();
+        assert!(!b.is_empty());
+        assert_eq!(b[0].tokens.shape, vec![2, 4, 32]);
+        assert_eq!(b[0].targets.shape, vec![2, 4, 32]);
+    }
+
+    #[test]
+    fn epochs_reshuffle_deterministically() {
+        let ds = small_setup(false);
+        let e0a: Vec<_> = ds.step_batches(1, 2, 0).take(2).collect();
+        let e0b: Vec<_> = ds.step_batches(1, 2, 0).take(2).collect();
+        let e1: Vec<_> = ds.step_batches(1, 2, 1).take(2).collect();
+        assert_eq!(e0a[0].tokens, e0b[0].tokens);
+        assert_ne!(
+            e0a[0].tokens.as_i32().unwrap(),
+            e1[0].tokens.as_i32().unwrap()
+        );
+    }
+
+    #[test]
+    fn prop_all_targets_valid_ids() {
+        let ds = small_setup(true);
+        prop::check("targets are -1 or valid token ids", |rng| {
+            let s = &ds.train[rng.usize_below(ds.train.len())];
+            for &t in &s.targets {
+                if t < -1 || t >= 512 {
+                    return Err(format!("target {t} out of range"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Data pipeline: synthetic corpora, packing/masking, batch iteration.
+//!
+//! Stand-ins for the paper's datasets (see DESIGN.md §Substitutions):
+//!
+//! * [`corpus::web_corpus`]      — OpenWebText analogue (Fig. 5 pretraining):
+//!   a Zipfian bigram language over a synthetic lexicon.
+//! * [`corpus::instruct_corpus`] — Alpaca analogue (Fig. 4 fine-tuning):
+//!   instruction/response pairs whose prompt tokens are *masked out* of the
+//!   loss — exactly the ignored-token population of Appendix B.
+//! * [`dataset`]                 — tokenize, pack to fixed-length sequences,
+//!   split train/val, and iterate `(accum, batch, seq)` step batches.
+
+pub mod corpus;
+pub mod dataset;
+
+pub use corpus::{instruct_corpus, web_corpus, Document};
+pub use dataset::{Dataset, DatasetConfig, StepBatch};

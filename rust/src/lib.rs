@@ -1,0 +1,37 @@
+//! # cce — Cut Cross-Entropy, reproduced as a three-layer Rust+JAX+Pallas stack
+//!
+//! This crate is Layer 3 of the reproduction of *"Cut Your Losses in
+//! Large-Vocabulary Language Models"* (Wijmans et al., ICLR 2025): the Rust
+//! coordinator that owns the training event loop, the data pipeline, and the
+//! benchmark harness.  The compute (Layer 2 JAX transformer + Layer 1 Pallas
+//! CCE kernels) is AOT-compiled to HLO text by `python/compile/aot.py` and
+//! executed through the PJRT C API ([`runtime`]).  Python never runs on the
+//! training path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`runtime`]   — PJRT client, artifact manifest, executable cache,
+//!   host tensors ⇄ XLA literals.
+//! * [`tokenizer`] — from-scratch BPE (vocabulary construction, paper §3.1).
+//! * [`data`]      — synthetic corpora, packing, masking, batch iterators.
+//! * [`coordinator`] — the training orchestrator: microbatch scheduling,
+//!   gradient-accumulation driving, checkpoints, metrics, config.
+//! * [`memmodel`]  — analytic GPU-memory model regenerating the paper's
+//!   memory tables (Fig. 1, Tables 1/A1/A3/A4).
+//! * [`sparsity`]  — softmax rank statistics & gradient-filter accounting
+//!   (Fig. 3 and the filtering ablations).
+//! * [`bench`]     — the table/figure harnesses and a from-scratch timing
+//!   framework (no external bench crate).
+//! * [`util`]      — substrates built from scratch for the offline
+//!   environment: JSON, CLI parsing, RNG, property testing, stats.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod memmodel;
+pub mod runtime;
+pub mod sparsity;
+pub mod tokenizer;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

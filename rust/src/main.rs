@@ -1,0 +1,246 @@
+//! `cce` — the launcher CLI for the Cut Cross-Entropy reproduction.
+//!
+//! ```text
+//! cce train   [--config cfg.json] [--method cce] [--steps N] ...
+//! cce eval    --checkpoint path [--tag e2e]
+//! cce table1  [--ignored 0.35] [--budget-ms 4000] [--check]
+//! cce tableA1 (= table1 with the Appendix B ignored-token filter)
+//! cce tableA2 / tableA3
+//! cce fig1    [--tokens 65536] [--gpus 16] [--gpu-gb 75]
+//! cce fig3    [--checkpoint path | --warm-steps N]
+//! cce fig4 / fig5 [--steps N] [--tag e2e|tiny]
+//! cce figA1   [--budget-ms 2000]
+//! cce info    — manifest + runtime summary
+//! ```
+
+use anyhow::Result;
+
+use cce::bench;
+use cce::coordinator::{Checkpoint, CorpusKind, Metrics, RunConfig, TrainState,
+                       Trainer};
+use cce::runtime;
+use cce::util::cli::Args;
+
+fn main() {
+    if let Err(err) = run() {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: cce <command> [options]\n\ncommands:\n  \
+         train    run a training job (--config/--method/--steps/--corpus/...)\n  \
+         eval     evaluate a checkpoint (--checkpoint)\n  \
+         table1   Table 1: memory & time per method\n  \
+         tableA1  Table A1: Table 1 with ignored tokens removed\n  \
+         tableA2  Table A2: backward-pass breakdown\n  \
+         tableA3  Table A3: additional models memory\n  \
+         fig1     Fig. 1 / Table A4: model-zoo memory & max batch\n  \
+         fig3     Fig. 3: softmax rank probabilities (trained model)\n  \
+         fig4     Fig. 4: fine-tune loss curves, cce vs fused\n  \
+         fig5     Fig. 5: pretrain val perplexity, cce_kahan_fullc vs fused\n  \
+         figA1    Figs. A1/A2: time/memory vs token count\n  \
+         info     manifest summary"
+    );
+    std::process::exit(2);
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv, &["check", "verbose"])?;
+    let cmd = match args.positional.first() {
+        Some(c) => c.as_str(),
+        None => usage(),
+    };
+
+    match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "table1" => cmd_table1(&args, 0.0),
+        "tableA1" | "tablea1" => {
+            let frac = args.get("ignored", 0.35f64)?;
+            cmd_table1(&args, frac)
+        }
+        "tableA2" | "tablea2" => cmd_tablea2(&args),
+        "tableA3" | "tablea3" => bench::tablea3::run(args.opt("csv")),
+        "fig1" => bench::fig1::run(
+            args.get("tokens", 65_536u64)?,
+            args.get("gpus", 16u64)?,
+            args.get("gpu-gb", 75u64)?,
+            args.opt("csv"),
+        ),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_curves(&args, true),
+        "fig5" => cmd_curves(&args, false),
+        "figA1" | "figa1" | "figA2" | "figa2" => cmd_sweep(&args),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            usage()
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    let rt = runtime::open_default()?;
+    eprintln!(
+        "[cce] platform {} | model {} ({} params) | method {}",
+        rt.platform(),
+        cfg.tag,
+        rt.manifest.model(&cfg.tag)?.param_count,
+        cfg.method
+    );
+    let trainer = Trainer::build(&rt, cfg.clone())?;
+    eprintln!(
+        "[cce] corpus: {} train sequences, {} val | vocab {} | ignored {:.1}%",
+        trainer.dataset.train.len(),
+        trainer.dataset.val.len(),
+        trainer.tokenizer.vocab_size(),
+        100.0 * trainer.dataset.ignored_fraction()
+    );
+    let state = match args.opt("checkpoint") {
+        Some(path) => TrainState::from_checkpoint(Checkpoint::load(path)?, &trainer.meta)?,
+        None => TrainState::init(&rt, &trainer.meta, cfg.seed as i32)?,
+    };
+    let mut metrics = Metrics::with_dir(&cfg.out_dir)?;
+    let state = trainer.train(state, &mut metrics)?;
+    let final_val = trainer.evaluate(&state)?;
+    metrics.log_eval(state.step as u64, final_val);
+    metrics.write_csv(std::path::Path::new(&cfg.out_dir).join("loss_curve.csv"))?;
+    let ckpt_path = std::path::Path::new(&cfg.out_dir).join("final.ckpt");
+    trainer.to_checkpoint_with_vocab(&state, &ckpt_path)?;
+    std::fs::write(
+        std::path::Path::new(&cfg.out_dir).join("config.json"),
+        cfg.to_json().to_string_pretty(),
+    )?;
+    println!(
+        "[cce] done: step {} val_loss {final_val:.4} ppl {:.2} mean {:.0} tok/s -> {}",
+        state.step,
+        final_val.exp(),
+        metrics.mean_throughput(),
+        ckpt_path.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let path = args.require("checkpoint")?.to_string();
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args)?;
+    let rt = runtime::open_default()?;
+    let trainer = Trainer::build(&rt, cfg)?;
+    let state = TrainState::from_checkpoint(Checkpoint::load(&path)?, &trainer.meta)?;
+    let val = trainer.evaluate(&state)?;
+    println!("val_loss {val:.4}  perplexity {:.2}  (step {})", val.exp(), state.step);
+    Ok(())
+}
+
+fn cmd_table1(args: &Args, ignored: f64) -> Result<()> {
+    let rt = runtime::open_default()?;
+    let budget = args.get("budget-ms", 4000u64)?;
+    let rows = bench::table1::run(&rt, ignored, budget)?;
+    let title = if ignored > 0.0 {
+        format!("Table A1: Table 1 with {:.0}% ignored tokens", ignored * 100.0)
+    } else {
+        "Table 1: memory & time per cross-entropy implementation".to_string()
+    };
+    bench::table1::print(&rows, &title);
+    if args.flag("check") {
+        bench::table1::check(&rows)?;
+        println!("\n  [check] all Table 1 shape claims hold");
+    }
+    Ok(())
+}
+
+fn cmd_tablea2(args: &Args) -> Result<()> {
+    let rt = runtime::open_default()?;
+    let budget = args.get("budget-ms", 4000u64)?;
+    let b = bench::breakdown::run(&rt, budget)?;
+    bench::breakdown::print(&b);
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let rt = runtime::open_default()?;
+    let tag = args.get("tag", "e2e".to_string())?;
+    let warm = args.get("warm-steps", 150u64)?;
+    let seed = args.get("seed", 0u64)?;
+    let stats = bench::fig3::run(&rt, &tag, args.opt("checkpoint"), warm, seed)?;
+    bench::fig3::print(&stats, args.opt("csv"))?;
+    if args.flag("check") {
+        bench::fig3::check(&stats)?;
+        println!("\n  [check] Fig. 3 sparsity claims hold");
+    }
+    Ok(())
+}
+
+fn cmd_curves(args: &Args, fig4: bool) -> Result<()> {
+    let rt = runtime::open_default()?;
+    let tag = args.get("tag", "e2e".to_string())?;
+    let steps = args.get("steps", 120u64)?;
+    let seed = args.get("seed", 0u64)?;
+    let pair = if fig4 {
+        bench::curves::compare(&rt, &tag, CorpusKind::Instruct, "cce", "fused",
+                               steps, 0, seed)?
+    } else {
+        let eval_every = args.get("eval-every", (steps / 4).max(1))?;
+        bench::curves::compare(&rt, &tag, CorpusKind::Web, "cce_kahan_fullc",
+                               "fused", steps, eval_every, seed)?
+    };
+    let title = if fig4 {
+        "Fig. 4: fine-tuning loss curves (CCE vs torch.compile analogue)"
+    } else {
+        "Fig. 5: pretraining validation perplexity (CCE-Kahan-FullC vs compile)"
+    };
+    bench::curves::print(&pair, title, args.opt("csv"))?;
+    if args.flag("check") {
+        bench::curves::check(&pair, 0.02)?;
+        println!("\n  [check] convergence-equivalence claim holds");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let rt = runtime::open_default()?;
+    let budget = args.get("budget-ms", 2000u64)?;
+    let points = bench::sweep::run(&rt, budget)?;
+    bench::sweep::print(&points, args.opt("csv"))?;
+    if args.flag("check") {
+        bench::sweep::check(&points)?;
+        println!("\n  [check] sweep scaling claims hold");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {}", rt.manifest.artifacts.len());
+    for (tag, m) in &rt.manifest.models {
+        println!(
+            "  model {tag}: {} params, batch {}x{}x{} (accum x batch x seq), vocab {}",
+            m.param_count, m.accum, m.batch, m.seq, m.vocab_size
+        );
+    }
+    let mut kinds = std::collections::BTreeMap::new();
+    for a in rt.manifest.artifacts.values() {
+        let kind = a
+            .extra
+            .get("kind")
+            .and_then(|j| j.as_str())
+            .unwrap_or("model")
+            .to_string();
+        *kinds.entry(kind).or_insert(0usize) += 1;
+    }
+    for (kind, count) in kinds {
+        println!("  {kind}: {count} artifacts");
+    }
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Analytic GPU-memory model — regenerates every memory number the paper
+//! reports without needing an A100.
+//!
+//! The paper's memory columns are allocation arithmetic over tensor shapes,
+//! so they can be reproduced *exactly* on any machine:
+//!
+//! * [`methods`] — per-method peak memory for the loss, its gradient, and
+//!   the combination (Tables 1, A1, A3), as explicit allocation formulas.
+//! * [`models`]  — the frontier-model zoo (dims and parameter counts) plus
+//!   the FSDP footprint/max-batch planner behind Fig. 1 and Table A4.
+
+pub mod methods;
+pub mod models;
+
+pub use methods::{method_memory, LossMethod, MethodMemory, Workload};
+pub use models::{fsdp_plan, FsdpPlan, ModelSpec, MODEL_ZOO};
+
+/// Bytes-per-MB used throughout the paper's tables (MiB).
+pub const MB: u64 = 1024 * 1024;

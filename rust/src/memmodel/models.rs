@@ -1,0 +1,158 @@
+//! Frontier-model zoo + the FSDP memory planner behind Fig. 1 / Table A4.
+//!
+//! The paper's Appendix D gives the accounting rules; this module encodes
+//! them and the architecture table, and the unit tests pin our outputs to
+//! Table A4's exact numbers:
+//!
+//! * activations (checkpointed): `layers · hidden · tokens · 2 B` (bf16)
+//! * logits (the CE layer's log-probs): `tokens · vocab · 4 B` (f32)
+//! * weights + optimizer + gradients: `params · 8 B`
+//!   (bf16 weights, grads, and Adam m/v = 4 states x 2 B)
+//! * max batch (16 GPUs): `(16 · 75 GB - weights_opt) / bytes_per_token`,
+//!   where `bytes_per_token = layers·hidden·2 + vocab·4` before CCE and
+//!   `layers·hidden·2` after (CCE's loss memory is O(1) per token).
+
+use crate::memmodel::MB;
+
+/// Architecture metadata for one model of Fig. 1 / Table A4.
+///
+/// `params` are derived from the paper's Weights+Opt+Grad column (`MB·2^20/8`
+/// bytes), which bundles each model's exact embedding/tying conventions.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: u64,
+    pub hidden: u64,
+    pub vocab: u64,
+    pub params: u64,
+}
+
+/// The 15 models of Table A4.
+pub const MODEL_ZOO: &[ModelSpec] = &[
+    ModelSpec { name: "GPT 2", layers: 12, hidden: 768, vocab: 50_257, params: 136_970_000 },
+    ModelSpec { name: "GPT Neo (1.3B)", layers: 24, hidden: 2048, vocab: 50_257, params: 1_365_900_000 },
+    ModelSpec { name: "GPT Neo (2.7B)", layers: 32, hidden: 2560, vocab: 50_257, params: 2_718_400_000 },
+    ModelSpec { name: "Gemma (2B)", layers: 18, hidden: 2048, vocab: 256_000, params: 2_506_200_000 },
+    ModelSpec { name: "Gemma 2 (27B)", layers: 46, hidden: 4608, vocab: 256_000, params: 27_227_000_000 },
+    ModelSpec { name: "Gemma 2 (2B)", layers: 26, hidden: 2304, vocab: 256_000, params: 2_614_300_000 },
+    ModelSpec { name: "Llama 2 (13B)", layers: 40, hidden: 5120, vocab: 32_000, params: 13_015_900_000 },
+    ModelSpec { name: "Llama 2 (7B)", layers: 32, hidden: 4096, vocab: 32_000, params: 6_738_400_000 },
+    ModelSpec { name: "Llama 3 (70B)", layers: 80, hidden: 8192, vocab: 128_256, params: 70_553_700_000 },
+    ModelSpec { name: "Llama 3 (8B)", layers: 32, hidden: 4096, vocab: 128_256, params: 8_030_300_000 },
+    ModelSpec { name: "Mistral 7B", layers: 32, hidden: 4096, vocab: 32_000, params: 7_241_700_000 },
+    ModelSpec { name: "Mixtral 8x7B", layers: 32, hidden: 4096, vocab: 32_000, params: 46_702_800_000 },
+    ModelSpec { name: "Phi 1.5", layers: 24, hidden: 2048, vocab: 50_304, params: 1_418_300_000 },
+    ModelSpec { name: "Phi 3 Medium", layers: 40, hidden: 5120, vocab: 32_064, params: 13_960_200_000 },
+    ModelSpec { name: "Qwen 1.5 (7B)", layers: 32, hidden: 4096, vocab: 151_936, params: 7_721_300_000 },
+];
+
+/// Table A3/Table 1 measurement configs (|V|, D per model) — the additional
+/// models of Appendix C.2.
+pub const BENCH_MODELS: &[(&str, u64, u64)] = &[
+    ("Gemma 2 (2B)", 256_000, 2304),
+    ("Gemma 2 (9B)", 256_000, 3584),
+    ("Gemma 2 (27B)", 256_000, 4608),
+    ("Mistral NeMo", 131_072, 5120),
+    ("Phi 3.5 Mini", 32_064, 3072),
+    ("Qwen 2.5 (7B)", 152_064, 3584),
+    ("Qwen 2.5 (32B)", 152_064, 5120),
+];
+
+/// One row of Table A4 / one bar of Fig. 1.
+#[derive(Debug, Clone, Copy)]
+pub struct FsdpPlan {
+    pub logits_bytes: u64,
+    pub activations_bytes: u64,
+    pub weights_opt_bytes: u64,
+    pub max_batch_before: u64,
+    pub max_batch_after: u64,
+}
+
+impl FsdpPlan {
+    pub fn increase(&self) -> f64 {
+        self.max_batch_after as f64 / self.max_batch_before as f64
+    }
+}
+
+/// Evaluate the Appendix D accounting for `spec`.
+///
+/// `tokens` is the reference global batch (Table A4 uses 65,536);
+/// `gpus`/`gpu_gb` describe the fleet (16 x 80 GB with a 5 GB reserve).
+pub fn fsdp_plan(spec: &ModelSpec, tokens: u64, gpus: u64, gpu_usable_gb: u64) -> FsdpPlan {
+    let act_per_token = spec.layers * spec.hidden * 2;
+    let logits_per_token = spec.vocab * 4;
+    let weights_opt = spec.params * 8;
+    let fleet = gpus * gpu_usable_gb * 1024 * MB;
+    let free = fleet.saturating_sub(weights_opt);
+    FsdpPlan {
+        logits_bytes: tokens * logits_per_token,
+        activations_bytes: tokens * act_per_token,
+        weights_opt_bytes: weights_opt,
+        max_batch_before: free / (act_per_token + logits_per_token),
+        max_batch_after: free / act_per_token,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(name: &str) -> FsdpPlan {
+        let spec = MODEL_ZOO.iter().find(|m| m.name == name).unwrap();
+        fsdp_plan(spec, 65_536, 16, 75)
+    }
+
+    /// Pin to the paper's Table A4 rows (±0.5% for rounding in params).
+    #[test]
+    fn table_a4_gpt2() {
+        let p = plan("GPT 2");
+        assert_eq!(p.logits_bytes / MB, 12_564);
+        assert_eq!(p.activations_bytes / MB, 1_152);
+        assert!((p.weights_opt_bytes / MB) as i64 - 1045 <= 1);
+        assert!(((p.max_batch_before as i64) - 5_866_190).abs() < 30_000, "{}", p.max_batch_before);
+        assert!(((p.max_batch_after as i64) - 69_845_595).abs() < 400_000);
+    }
+
+    #[test]
+    fn table_a4_gemma2_2b() {
+        let p = plan("Gemma 2 (2B)");
+        assert_eq!(p.logits_bytes / MB, 64_000);
+        assert_eq!(p.activations_bytes / MB, 7_488);
+        assert!(((p.max_batch_before as i64) - 1_108_206).abs() < 10_000);
+        assert!(((p.max_batch_after as i64) - 10_580_057).abs() < 100_000);
+        assert!((p.increase() - 9.5).abs() < 0.2);
+    }
+
+    #[test]
+    fn table_a4_llama3_70b() {
+        let p = plan("Llama 3 (70B)");
+        assert_eq!(p.logits_bytes / MB, 32_064);
+        assert_eq!(p.activations_bytes / MB, 81_920);
+        assert!(((p.max_batch_before as i64) - 397_019).abs() < 4_000);
+        assert!((p.increase() - 1.4).abs() < 0.05);
+    }
+
+    #[test]
+    fn increase_grows_with_vocab_to_hidden_ratio() {
+        // Fig. 1's qualitative claim: the batch-size win tracks |V| / (L·D).
+        let gains: Vec<(f64, f64)> = MODEL_ZOO
+            .iter()
+            .map(|m| {
+                let ratio = m.vocab as f64 / (m.layers * m.hidden) as f64;
+                (ratio, fsdp_plan(m, 65_536, 16, 75).increase())
+            })
+            .collect();
+        let max_ratio = gains.iter().cloned().fold((0.0, 0.0), |a, b| if b.0 > a.0 { b } else { a });
+        let min_ratio = gains.iter().cloned().fold((f64::MAX, 0.0), |a, b| if b.0 < a.0 { b } else { a });
+        assert!(max_ratio.1 > min_ratio.1 * 3.0,
+                "gain at max ratio {max_ratio:?} vs min {min_ratio:?}");
+    }
+
+    #[test]
+    fn all_models_benefit() {
+        for m in MODEL_ZOO {
+            let p = fsdp_plan(m, 65_536, 16, 75);
+            assert!(p.increase() > 1.0, "{} gains {}", m.name, p.increase());
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API) following the pattern validated by
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//!
+//! Executables are cached per artifact name; compilation happens at most
+//! once per process.  All calls are shape/dtype-validated against the
+//! manifest first.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+/// The process-wide runtime: one PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative compile time (reported by `cce --timings`).
+    compile_secs: RefCell<f64>,
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub inputs: Vec<crate::runtime::manifest::Spec>,
+    pub outputs: Vec<crate::runtime::manifest::Spec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (with manifest.json).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let exe = Rc::new(self.compile_entry(&entry)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn compile_entry(&self, entry: &ArtifactEntry) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("loading HLO text {:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {:?}", entry.name))?;
+        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        Ok(Executable {
+            name: entry.name.clone(),
+            inputs: entry.inputs.clone(),
+            outputs: entry.outputs.clone(),
+            exe,
+        })
+    }
+
+    pub fn total_compile_secs(&self) -> f64 {
+        *self.compile_secs.borrow()
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?.run(inputs)
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; returns host tensors.
+    ///
+    /// The artifact was lowered with `return_tuple=True`, so PJRT returns a
+    /// single tuple buffer which we decompose into the manifest's outputs.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        Manifest::validate(&self.inputs, inputs)
+            .with_context(|| format!("inputs of {:?}", self.name))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            anyhow::bail!(
+                "{:?}: executable returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&self.outputs) {
+            let t = HostTensor::from_literal(lit)
+                .with_context(|| format!("output {:?} of {:?}", spec.name, self.name))?;
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Execute keeping results on device (for state round-tripping).
+    ///
+    /// Returns the raw PJRT buffers of the result tuple; pair with
+    /// [`Executable::run_buffers`] to chain steps without host copies.
+    pub fn run_to_buffers(
+        &self,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        Manifest::validate(&self.inputs, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?;
+        Ok(result.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Execution paths require libxla_extension at runtime; exercised by the
+    // integration tests in rust/tests/runtime.rs against the tiny artifacts.
+}

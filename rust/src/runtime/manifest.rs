@@ -1,0 +1,312 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust runtime (which loads it).
+//!
+//! Every artifact entry carries its full I/O signature, so every call is
+//! shape/dtype validated *before* it reaches PJRT — a wrong batch shape
+//! fails with a readable error instead of an XLA internal one.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Spec {
+    fn from_json(j: &Json) -> Result<Spec> {
+        let name = j.req("name")?.as_str().unwrap_or_default().to_string();
+        let shape = j
+            .req("shape")?
+            .as_array()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|v| v.as_i64().map(|i| i as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("non-integer dim"))?;
+        let dtype = DType::parse(
+            j.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype not a string"))?,
+        )?;
+        Ok(Spec { name, shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+    /// Loss-bench metadata when present (`method`, `n`, `d`, `v`, `kind`).
+    pub extra: BTreeMap<String, Json>,
+}
+
+/// A parameter leaf of a model config (name + spec), in artifact order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Metadata for one lowered model (the `meta.<tag>` manifest block).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub tag: String,
+    pub params: Vec<ParamSpec>,
+    pub param_count: u64,
+    pub batch: usize,
+    pub seq: usize,
+    pub accum: usize,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub raw: Json,
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub raw_meta: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in json
+            .req("artifacts")?
+            .as_object()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let file = dir.join(
+                entry
+                    .req("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("file not a string"))?,
+            );
+            let parse_specs = |key: &str| -> Result<Vec<Spec>> {
+                entry
+                    .req(key)?
+                    .as_array()
+                    .ok_or_else(|| anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(Spec::from_json)
+                    .collect()
+            };
+            let mut extra = BTreeMap::new();
+            for (k, v) in entry.as_object().unwrap() {
+                if !matches!(k.as_str(), "file" | "inputs" | "outputs") {
+                    extra.insert(k.clone(), v.clone());
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    extra,
+                },
+            );
+        }
+
+        let meta = json.req("meta")?;
+        let mut models = BTreeMap::new();
+        for (tag, m) in meta.as_object().unwrap_or(&[]) {
+            if m.get("params").is_none() {
+                continue; // not a model block (e.g. "bench")
+            }
+            let params = m
+                .req("params")?
+                .as_array()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str().unwrap_or_default().into(),
+                        shape: p
+                            .req("shape")?
+                            .as_array()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_i64().map(|i| i as usize))
+                            .collect(),
+                        dtype: DType::parse(
+                            p.req("dtype")?.as_str().unwrap_or("float32"),
+                        )?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let train = m.req("train")?;
+            let model = m.req("model")?;
+            let geti = |j: &Json, k: &str| -> Result<usize> {
+                j.req(k)?
+                    .as_i64()
+                    .map(|i| i as usize)
+                    .ok_or_else(|| anyhow!("{k} not an int"))
+            };
+            models.insert(
+                tag.clone(),
+                ModelMeta {
+                    tag: tag.clone(),
+                    params,
+                    param_count: m.req("param_count")?.as_i64().unwrap_or(0) as u64,
+                    batch: geti(train, "batch")?,
+                    seq: geti(train, "seq")?,
+                    accum: geti(train, "accum")?,
+                    vocab_size: geti(model, "vocab_size")?,
+                    d_model: geti(model, "d_model")?,
+                    raw: m.clone(),
+                },
+            );
+        }
+
+        Ok(Manifest { dir, artifacts, models, raw_meta: meta.clone() })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn model(&self, tag: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(tag)
+            .ok_or_else(|| anyhow!("model meta {tag:?} not in manifest"))
+    }
+
+    /// All loss-bench artifacts matching a (kind, n) filter.
+    pub fn loss_artifacts(
+        &self,
+        kind: &str,
+        n: Option<usize>,
+    ) -> Vec<&ArtifactEntry> {
+        self.artifacts
+            .values()
+            .filter(|a| {
+                a.extra.get("kind").and_then(|j| j.as_str()) == Some(kind)
+                    && n.map_or(true, |want| {
+                        a.extra.get("n").and_then(|j| j.as_i64())
+                            == Some(want as i64)
+                    })
+            })
+            .collect()
+    }
+
+    /// Validate that `values` matches `specs` (count, shape, dtype).
+    pub fn validate(specs: &[Spec], values: &[crate::runtime::HostTensor]) -> Result<()> {
+        if specs.len() != values.len() {
+            bail!("expected {} inputs, got {}", specs.len(), values.len());
+        }
+        for (spec, val) in specs.iter().zip(values) {
+            if spec.shape != val.shape {
+                bail!(
+                    "input {:?}: expected shape {:?}, got {:?}",
+                    spec.name,
+                    spec.shape,
+                    val.shape
+                );
+            }
+            if spec.dtype != val.dtype() {
+                bail!(
+                    "input {:?}: expected dtype {:?}, got {:?}",
+                    spec.name,
+                    spec.dtype,
+                    val.dtype()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+  "artifacts": {
+    "tiny_eval_step": {
+      "file": "tiny_eval_step.hlo.txt",
+      "inputs": [{"name": "param:embed", "shape": [512, 64], "dtype": "float32"},
+                  {"name": "tokens", "shape": [2, 32], "dtype": "int32"}],
+      "outputs": [{"name": "loss_sum", "shape": [], "dtype": "float32"}]
+    },
+    "loss_fwd_cce_n128": {
+      "file": "x.hlo.txt",
+      "inputs": [], "outputs": [],
+      "method": "cce", "n": 128, "kind": "fwd"
+    }
+  },
+  "meta": {
+    "tiny": {
+      "model": {"vocab_size": 512, "d_model": 64},
+      "train": {"batch": 2, "seq": 32, "accum": 2},
+      "param_count": 99,
+      "params": [{"name": "embed", "shape": [512, 64], "dtype": "float32"}]
+    },
+    "bench": {"n": 2048}
+  }
+}"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("cce_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.entry("tiny_eval_step").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![512, 64]);
+        assert_eq!(e.inputs[1].dtype, DType::I32);
+        let model = m.model("tiny").unwrap();
+        assert_eq!(model.vocab_size, 512);
+        assert_eq!(model.params.len(), 1);
+        assert_eq!(m.loss_artifacts("fwd", Some(128)).len(), 1);
+        assert_eq!(m.loss_artifacts("fwd", Some(4096)).len(), 0);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn validates_shapes() {
+        let specs = vec![Spec {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: DType::F32,
+        }];
+        let good = vec![crate::runtime::HostTensor::f32(vec![2, 3], vec![0.0; 6]).unwrap()];
+        let bad = vec![crate::runtime::HostTensor::f32(vec![3, 2], vec![0.0; 6]).unwrap()];
+        assert!(Manifest::validate(&specs, &good).is_ok());
+        assert!(Manifest::validate(&specs, &bad).is_err());
+        assert!(Manifest::validate(&specs, &[]).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Runtime layer: PJRT client + artifact manifest + host tensors.
+//!
+//! This is the only module that touches the `xla` crate.  Everything above
+//! it (coordinator, benches, examples) speaks [`HostTensor`]s and artifact
+//! names.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{ArtifactEntry, Manifest, ModelMeta, ParamSpec, Spec};
+pub use tensor::{DType, Data, HostTensor};
+
+use anyhow::Result;
+
+/// Resolve the artifact directory: `CCE_ARTIFACTS` env var or `./artifacts`.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("CCE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// Open the default runtime (most binaries start here).
+pub fn open_default() -> Result<Runtime> {
+    Runtime::new(artifact_dir())
+}

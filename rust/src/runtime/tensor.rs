@@ -1,0 +1,227 @@
+//! Host-side tensors and conversion to/from XLA literals.
+//!
+//! The coordinator's data plane: batches, parameters, optimizer state and
+//! metrics all travel as [`HostTensor`]s.  Conversions are exact-size checked
+//! against the artifact manifest before anything reaches PJRT.
+
+use anyhow::{bail, Result};
+
+/// Element dtype of a tensor (the subset our artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    F64,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            "uint32" | "u32" => DType::U32,
+            "float64" | "f64" => DType::F64,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+            DType::F64 => "float64",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4usize + 4 * matches!(self, DType::F64) as usize
+    }
+}
+
+/// Typed storage for a host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    F64(Vec<f64>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::U32(_) => DType::U32,
+            Data::F64(_) => DType::F64,
+        }
+    }
+}
+
+/// An n-dimensional host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Data) -> Result<HostTensor> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            bail!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                expect,
+                data.len()
+            );
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn f32(shape: Vec<usize>, v: Vec<f32>) -> Result<HostTensor> {
+        Self::new(shape, Data::F32(v))
+    }
+
+    pub fn i32(shape: Vec<usize>, v: Vec<i32>) -> Result<HostTensor> {
+        Self::new(shape, Data::I32(v))
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Data::F32(vec![0.0; n]),
+            DType::I32 => Data::I32(vec![0; n]),
+            DType::U32 => Data::U32(vec![0; n]),
+            DType::F64 => Data::F64(vec![0.0; n]),
+        };
+        HostTensor { shape, data }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Scalar extraction (0-d or 1-element tensors).
+    pub fn scalar(&self) -> Result<f64> {
+        if self.len() != 1 {
+            bail!("scalar() on tensor with {} elements", self.len());
+        }
+        Ok(match &self.data {
+            Data::F32(v) => v[0] as f64,
+            Data::I32(v) => v[0] as f64,
+            Data::U32(v) => v[0] as f64,
+            Data::F64(v) => v[0],
+        })
+    }
+
+    // ------------------------------------------------------ literal bridge
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v),
+            Data::I32(v) => xla::Literal::vec1(v),
+            Data::U32(v) => xla::Literal::vec1(v),
+            Data::F64(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => Data::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => Data::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::U32 => Data::U32(lit.to_vec::<u32>()?),
+            xla::ElementType::F64 => Data::F64(lit.to_vec::<f64>()?),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        HostTensor::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_i32(7);
+        assert_eq!(t.scalar().unwrap(), 7.0);
+        assert!(t.shape.is_empty());
+    }
+
+    #[test]
+    fn zeros_sizes() {
+        let t = HostTensor::zeros(DType::F32, vec![4, 5]);
+        assert_eq!(t.len(), 20);
+        assert_eq!(t.size_bytes(), 80);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+
+    // Literal round-trips are covered by integration tests (tests/runtime.rs)
+    // since they need the PJRT shared library at link/run time.
+}

@@ -1,0 +1,363 @@
+//! Byte-pair-encoding tokenizer: trainer, encoder, decoder, persistence.
+//!
+//! Training follows the classic algorithm the paper sketches in §3.1:
+//! initialize with all byte values, then repeatedly merge the most frequent
+//! adjacent pair until the target vocabulary size is reached.  Words are the
+//! merge boundaries (whitespace splits, with a leading-space marker like
+//! GPT-2's `Ġ`), and pair counts are maintained over the *unique-word*
+//! frequency table, so training a 4-8k vocab over a multi-megabyte corpus
+//! takes seconds.
+//!
+//! Encoding applies merges greedily by rank (lowest rank first), exactly
+//! inverse to training order, and falls back to raw bytes for any input —
+//! the tokenizer is total over arbitrary UTF-8 (and arbitrary bytes).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Reserved special token ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// Separator between prompt and response in instruction data.
+pub const SEP: i32 = 3;
+const N_SPECIAL: usize = 4;
+const N_BYTES: usize = 256;
+
+/// Marker prepended to words that follow whitespace (GPT-2's `Ġ` idea, as a
+/// raw byte 0x20 kept inside the word so decode is lossless).
+const SPACE: u8 = b' ';
+
+#[derive(Debug, Clone)]
+pub struct TokenizerConfig {
+    /// Total vocabulary size (specials + bytes + merges).
+    pub vocab_size: usize,
+    /// Minimum pair frequency to keep merging.
+    pub min_pair_freq: usize,
+}
+
+impl Default for TokenizerConfig {
+    fn default() -> Self {
+        TokenizerConfig { vocab_size: 4096, min_pair_freq: 2 }
+    }
+}
+
+/// A trained BPE tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// `merges[(a, b)] = rank` — merge (a, b) into token `first_merge + rank`.
+    merges: HashMap<(u32, u32), u32>,
+    /// Byte sequence for every token id (specials are empty).
+    token_bytes: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    /// Number of tokens in the vocabulary (including specials and bytes).
+    pub fn vocab_size(&self) -> usize {
+        self.token_bytes.len()
+    }
+
+    fn byte_token(b: u8) -> u32 {
+        (N_SPECIAL + b as usize) as u32
+    }
+
+    const fn first_merge_id() -> u32 {
+        (N_SPECIAL + N_BYTES) as u32
+    }
+
+    // ------------------------------------------------------------ training
+
+    /// Train on a corpus (one document per item).
+    pub fn train(corpus: &[String], cfg: &TokenizerConfig) -> Result<Tokenizer> {
+        if cfg.vocab_size < N_SPECIAL + N_BYTES {
+            bail!("vocab_size must be at least {}", N_SPECIAL + N_BYTES);
+        }
+        // Unique-word frequency table.
+        let mut word_freq: HashMap<Vec<u8>, usize> = HashMap::new();
+        for doc in corpus {
+            let mut first = true;
+            for word in doc.split_whitespace() {
+                let mut bytes = Vec::with_capacity(word.len() + 1);
+                if !first {
+                    bytes.push(SPACE);
+                }
+                bytes.extend_from_slice(word.as_bytes());
+                *word_freq.entry(bytes).or_insert(0) += 1;
+                first = false;
+            }
+        }
+
+        // Words as token-id sequences.
+        let mut words: Vec<(Vec<u32>, usize)> = word_freq
+            .into_iter()
+            .map(|(bytes, freq)| {
+                (bytes.iter().map(|&b| Self::byte_token(b)).collect(), freq)
+            })
+            .collect();
+        words.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+
+        let mut merges: HashMap<(u32, u32), u32> = HashMap::new();
+        let mut token_bytes: Vec<Vec<u8>> = Vec::with_capacity(cfg.vocab_size);
+        for _ in 0..N_SPECIAL {
+            token_bytes.push(Vec::new());
+        }
+        for b in 0..N_BYTES {
+            token_bytes.push(vec![b as u8]);
+        }
+
+        let n_merges = cfg.vocab_size - N_SPECIAL - N_BYTES;
+        let mut pair_counts: HashMap<(u32, u32), i64> = HashMap::new();
+        for (word, freq) in &words {
+            for pair in word.windows(2) {
+                *pair_counts.entry((pair[0], pair[1])).or_insert(0) += *freq as i64;
+            }
+        }
+
+        for rank in 0..n_merges {
+            // Most frequent pair (deterministic tie-break on token ids).
+            let best = pair_counts
+                .iter()
+                .filter(|(_, &c)| c as usize >= cfg.min_pair_freq)
+                .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)));
+            let (&(a, b), _) = match best {
+                Some(kv) => kv,
+                None => break, // corpus exhausted below min frequency
+            };
+            let new_id = Self::first_merge_id() + rank as u32;
+            merges.insert((a, b), new_id);
+            let mut bytes = token_bytes[a as usize].clone();
+            bytes.extend_from_slice(&token_bytes[b as usize]);
+            token_bytes.push(bytes);
+
+            // Apply the merge to every word, updating pair counts in place.
+            for (word, freq) in &mut words {
+                let mut i = 0;
+                while i + 1 < word.len() {
+                    if word[i] == a && word[i + 1] == b {
+                        let f = *freq as i64;
+                        if i > 0 {
+                            *pair_counts.entry((word[i - 1], a)).or_insert(0) -= f;
+                            *pair_counts.entry((word[i - 1], new_id)).or_insert(0) += f;
+                        }
+                        if i + 2 < word.len() {
+                            *pair_counts.entry((b, word[i + 2])).or_insert(0) -= f;
+                            *pair_counts.entry((new_id, word[i + 2])).or_insert(0) += f;
+                        }
+                        word[i] = new_id;
+                        word.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            pair_counts.remove(&(a, b));
+        }
+
+        Ok(Tokenizer { merges, token_bytes })
+    }
+
+    // ------------------------------------------------------------ encoding
+
+    /// Encode text to token ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        let mut first = true;
+        for word in text.split_whitespace() {
+            let mut ids: Vec<u32> = Vec::with_capacity(word.len() + 1);
+            if !first {
+                ids.push(Self::byte_token(SPACE));
+            }
+            ids.extend(word.as_bytes().iter().map(|&b| Self::byte_token(b)));
+            self.apply_merges(&mut ids);
+            out.extend(ids.iter().map(|&t| t as i32));
+            first = false;
+        }
+        out
+    }
+
+    fn apply_merges(&self, ids: &mut Vec<u32>) {
+        // Greedy lowest-rank-first merging (inverse of training order).
+        loop {
+            let mut best: Option<(usize, u32, u32)> = None; // (pos, rank, id)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&id) = self.merges.get(&(ids[i], ids[i + 1])) {
+                    let rank = id - Self::first_merge_id();
+                    if best.map_or(true, |(_, r, _)| rank < r) {
+                        best = Some((i, rank, id));
+                    }
+                }
+            }
+            match best {
+                Some((i, _, id)) => {
+                    ids[i] = id;
+                    ids.remove(i + 1);
+                }
+                None => return,
+            }
+        }
+    }
+
+    /// Decode token ids back to text (specials are dropped).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id < 0 || (id as usize) >= self.token_bytes.len() {
+                continue;
+            }
+            bytes.extend_from_slice(&self.token_bytes[id as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    // --------------------------------------------------------- persistence
+
+    /// Serialize as JSON (merges in rank order + metadata).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let mut merge_list: Vec<(&(u32, u32), &u32)> = self.merges.iter().collect();
+        merge_list.sort_by_key(|(_, &id)| id);
+        Json::obj(vec![
+            ("vocab_size", Json::Int(self.vocab_size() as i64)),
+            (
+                "merges",
+                Json::Array(
+                    merge_list
+                        .iter()
+                        .map(|(&(a, b), _)| {
+                            Json::Array(vec![Json::Int(a as i64), Json::Int(b as i64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(json: &crate::util::Json) -> Result<Tokenizer> {
+        let merges_json = json.req("merges")?.as_array().context("merges")?;
+        let mut merges = HashMap::new();
+        let mut token_bytes: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..N_SPECIAL {
+            token_bytes.push(Vec::new());
+        }
+        for b in 0..N_BYTES {
+            token_bytes.push(vec![b as u8]);
+        }
+        for (rank, pair) in merges_json.iter().enumerate() {
+            let pair = pair.as_array().context("merge pair")?;
+            let a = pair[0].as_i64().context("merge id")? as u32;
+            let b = pair[1].as_i64().context("merge id")? as u32;
+            let id = Self::first_merge_id() + rank as u32;
+            merges.insert((a, b), id);
+            let mut bytes = token_bytes[a as usize].clone();
+            bytes.extend_from_slice(&token_bytes[b as usize]);
+            token_bytes.push(bytes);
+        }
+        Ok(Tokenizer { merges, token_bytes })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Tokenizer> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading tokenizer {:?}", path.as_ref()))?;
+        Self::from_json(&crate::util::Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn tiny_corpus() -> Vec<String> {
+        vec![
+            "the cat sat on the mat".into(),
+            "the dog sat on the log the the".into(),
+            "cats and dogs and mats and logs".into(),
+        ]
+    }
+
+    #[test]
+    fn train_produces_merges() {
+        let tok = Tokenizer::train(&tiny_corpus(), &TokenizerConfig {
+            vocab_size: 300,
+            min_pair_freq: 2,
+        })
+        .unwrap();
+        assert!(tok.vocab_size() > N_SPECIAL + N_BYTES);
+        assert!(tok.vocab_size() <= 300);
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let tok = Tokenizer::train(&tiny_corpus(), &Default::default()).unwrap();
+        for text in ["the cat sat", "unseen words zyx!", "a  b", "日本語 text"] {
+            let ids = tok.encode(text);
+            // Whitespace normalizes to single spaces (split_whitespace).
+            let norm = text.split_whitespace().collect::<Vec<_>>().join(" ");
+            assert_eq!(tok.decode(&ids), norm, "text {text:?} ids {ids:?}");
+        }
+    }
+
+    #[test]
+    fn frequent_words_compress() {
+        let tok = Tokenizer::train(&tiny_corpus(), &TokenizerConfig {
+            vocab_size: 320,
+            min_pair_freq: 2,
+        })
+        .unwrap();
+        // "the" appears many times -> should be a single token.
+        assert_eq!(tok.encode("the").len(), 1);
+        // A rare random string stays multi-token.
+        assert!(tok.encode("zqxjk").len() > 1);
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let tok = Tokenizer::train(&tiny_corpus(), &Default::default()).unwrap();
+        let json = tok.to_json();
+        let tok2 = Tokenizer::from_json(&json).unwrap();
+        assert_eq!(tok.vocab_size(), tok2.vocab_size());
+        let text = "the cat sat on the log";
+        assert_eq!(tok.encode(text), tok2.encode(text));
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_ascii() {
+        let tok = Tokenizer::train(&tiny_corpus(), &Default::default()).unwrap();
+        prop::check("bpe roundtrip over arbitrary ascii", |rng| {
+            let len = rng.usize_below(60);
+            let text: String = (0..len)
+                .map(|_| (rng.below(95) as u8 + 32) as char)
+                .collect();
+            let norm = text.split_whitespace().collect::<Vec<_>>().join(" ");
+            let decoded = tok.decode(&tok.encode(&text));
+            if decoded == norm {
+                Ok(())
+            } else {
+                Err(format!("{text:?} -> {decoded:?} != {norm:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_ids_in_range() {
+        let tok = Tokenizer::train(&tiny_corpus(), &Default::default()).unwrap();
+        prop::check("encoded ids within vocab", |rng| {
+            let len = rng.usize_below(40);
+            let text: String = (0..len)
+                .map(|_| (rng.below(26) as u8 + b'a') as char)
+                .collect();
+            for id in tok.encode(&text) {
+                if id < 0 || id as usize >= tok.vocab_size() {
+                    return Err(format!("id {id} out of range"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

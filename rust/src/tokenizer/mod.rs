@@ -1,0 +1,10 @@
+//! Vocabulary construction & tokenization (paper §3.1), from scratch.
+//!
+//! The paper's entire premise is the growth of `|V|`; this module is the
+//! substrate that *builds* such vocabularies: a byte-level BPE trainer
+//! (Gage 1994, as described in §3.1), an encoder/decoder, and a persisted
+//! vocab format the coordinator ships with its checkpoints.
+
+pub mod bpe;
+
+pub use bpe::{Tokenizer, TokenizerConfig, BOS, EOS, PAD, SEP};

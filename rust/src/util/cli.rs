@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (clap stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that were consumed via a typed accessor (for validation).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{stripped} expects a value"))?;
+                    out.options.insert(stripped.to_string(), v);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.opt(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Error on unknown options (catches typos like `--stpes`).
+    pub fn finish(&self, known_flags: &[&str]) -> Result<()> {
+        let seen = self.seen.borrow();
+        for key in self.options.keys() {
+            if !seen.iter().any(|s| s == key) {
+                bail!("unknown option --{key}");
+            }
+        }
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(argv("train --steps 100 --out=dir --verbose pos1"),
+                            &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.opt("steps"), Some("100"));
+        assert_eq!(a.opt("out"), Some("dir"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(argv("--n 8"), &[]).unwrap();
+        assert_eq!(a.get("n", 1usize).unwrap(), 8);
+        assert_eq!(a.get("m", 3usize).unwrap(), 3);
+        assert!(a.get::<usize>("n", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = Args::parse(argv("--n x"), &[]).unwrap();
+        assert!(a.get("n", 1usize).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv("--n"), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = Args::parse(argv("--steps 5 --stpes 9"), &[]).unwrap();
+        let _ = a.opt("steps");
+        assert!(a.finish(&[]).is_err());
+    }
+}

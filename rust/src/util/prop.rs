@@ -1,0 +1,130 @@
+//! Minimal property-based testing harness (proptest stand-in).
+//!
+//! Runs a property over many random cases from a deterministic seed and, on
+//! failure, reports the failing case's seed so it can be replayed.  A simple
+//! integer/vec shrinker narrows failures when the generator supports it.
+
+use crate::util::rng::Rng;
+
+/// Number of random cases per property (override with `CCE_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("CCE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop(rng)` over `cases` random inputs; panic with the case seed on
+/// the first failure.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, mut prop: F) {
+    let cases = default_cases();
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Property over a generated value with shrinking: `gen` produces a value
+/// from the RNG, `shrink` yields smaller candidates, `prop` tests it.
+pub fn check_shrink<T, G, S, P>(name: &str, mut gen: G, shrink: S, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = 0xBADC0DE_u64.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if let Err(first_msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            // Bounded so a shrinker that fails to make progress can't hang.
+            let mut cur = value;
+            let mut msg = first_msg;
+            let mut rounds = 0;
+            'outer: while rounds < 1000 {
+                rounds += 1;
+                for cand in shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed (seed {seed:#x})\n  minimal case: {cur:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Shrinker for vectors: halves, then element-dropping.  Every candidate is
+/// strictly shorter than the input, so greedy shrinking always terminates.
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    if v.len() >= 2 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    if v.len() <= 8 {
+        for i in 0..v.len() {
+            let mut w = v.clone();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 addition commutes", |rng| {
+            let (a, b) = (rng.next_u64() >> 1, rng.next_u64() >> 1);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", |_| Err("always fails".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal case")]
+    fn shrinking_reduces_case() {
+        check_shrink(
+            "vec with any element > 10 fails",
+            |rng| (0..20).map(|_| rng.usize_below(100)).collect::<Vec<_>>(),
+            shrink_vec,
+            |v| {
+                if v.iter().any(|&x| x > 10) {
+                    Err(format!("{v:?} has big element"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

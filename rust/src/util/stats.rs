@@ -1,0 +1,146 @@
+//! Timing / summary statistics for the benchmark harness (criterion
+//! stand-in) and the metrics registry.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of f64 samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "no samples");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        let q = |p: f64| -> f64 {
+            let idx = (p * (n - 1) as f64).round() as usize;
+            sorted[idx.min(n - 1)]
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: q(0.5),
+            p90: q(0.9),
+            p99: q(0.99),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Measure `f` with warmup; returns per-iteration wall times in seconds.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times
+}
+
+/// Adaptive measurement: run until `min_iters` and `min_time` are both met
+/// (bounded by `max_iters`) — keeps fast cases statistical and slow cases
+/// bounded, like criterion's auto mode.
+pub fn measure_adaptive<F: FnMut()>(
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    min_time: Duration,
+    mut f: F,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < max_iters
+        && (times.len() < min_iters || start.elapsed() < min_time)
+    {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times
+}
+
+/// Render a duration in engineer-friendly units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.1} µs", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+/// Render a byte count in MB (the paper's tables use MB).
+pub fn fmt_mb(bytes: u64) -> String {
+    let mb = bytes as f64 / (1024.0 * 1024.0);
+    if mb >= 100.0 {
+        format!("{:.0} MB", mb)
+    } else if mb >= 1.0 {
+        format!("{:.1} MB", mb)
+    } else {
+        format!("{:.2} MB", mb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn measure_counts() {
+        let mut calls = 0;
+        let t = measure(2, 5, || calls += 1);
+        assert_eq!(t.len(), 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_duration(2.0), "2.00 s");
+        assert_eq!(fmt_duration(0.0031), "3.1 ms");
+        assert_eq!(fmt_mb(24_000 * 1024 * 1024), "24000 MB");
+        assert_eq!(fmt_mb(1024 * 1024 / 2), "0.50 MB");
+    }
+}

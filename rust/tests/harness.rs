@@ -1,0 +1,39 @@
+//! Integration tests of the bench harness itself, on the tiny artifacts.
+
+use std::time::Duration;
+
+use cce::bench::harness::{gen_input, time_artifact};
+use cce::runtime::{self, DType, Spec};
+use cce::util::rng::Rng;
+
+#[test]
+fn time_artifact_on_tiny_loss() {
+    let rt = runtime::open_default().expect("run `make artifacts` first");
+    let res = time_artifact(
+        &rt,
+        "loss_fwd_cce_n128_d64_v512_tiny",
+        0.0,
+        Duration::from_millis(200),
+    )
+    .unwrap();
+    assert!(res.summary.n >= 3);
+    assert!(res.mean() > 0.0 && res.mean() < 5.0);
+}
+
+#[test]
+fn ignored_fraction_flows_into_labels() {
+    let mut rng = Rng::new(0);
+    let spec = Spec { name: "x".into(), shape: vec![4096], dtype: DType::I32 };
+    let t = gen_input(&spec, &mut rng, 512, 0.5);
+    let masked = t.as_i32().unwrap().iter().filter(|&&v| v < 0).count();
+    let frac = masked as f64 / 4096.0;
+    assert!((frac - 0.5).abs() < 0.05, "{frac}");
+}
+
+#[test]
+fn analytic_tables_print_without_runtime() {
+    // Fig. 1 and Table A3 are pure computation; they must work without any
+    // artifacts on disk.
+    cce::bench::fig1::run(65_536, 16, 75, None).unwrap();
+    cce::bench::tablea3::run(None).unwrap();
+}

@@ -1,0 +1,233 @@
+//! Integration tests: the full Rust↔PJRT↔artifact path on the tiny model.
+//!
+//! These need `make artifacts` to have run (they are part of `make test`).
+//! Everything here goes through the public API: manifest → runtime →
+//! trainer → metrics → checkpoints.
+
+use cce::coordinator::{Checkpoint, CorpusKind, Metrics, RunConfig, TrainState,
+                       Trainer};
+use cce::runtime::{self, HostTensor, Runtime};
+use cce::util::rng::Rng;
+
+fn rt() -> Runtime {
+    // Tests run from the crate root; artifacts/ lives next to Cargo.toml.
+    runtime::open_default().expect("run `make artifacts` first")
+}
+
+fn tiny_cfg(method: &str, steps: u64) -> RunConfig {
+    RunConfig {
+        tag: "tiny".into(),
+        method: method.into(),
+        steps,
+        seed: 7,
+        corpus: CorpusKind::Web,
+        corpus_docs: 300,
+        vocab_size: 512,
+        eval_every: 0,
+        checkpoint_every: 0,
+        log_every: u64::MAX,
+        out_dir: std::env::temp_dir().join("cce_it").to_string_lossy().into(),
+    }
+}
+
+#[test]
+fn manifest_loads_and_lists_models() {
+    let rt = rt();
+    assert!(rt.manifest.models.contains_key("tiny"));
+    assert!(rt.manifest.models.contains_key("e2e"));
+    let tiny = rt.manifest.model("tiny").unwrap();
+    assert_eq!(tiny.vocab_size, 512);
+    assert!(tiny.param_count > 100_000);
+}
+
+#[test]
+fn init_artifact_is_deterministic() {
+    let rt = rt();
+    let exe = rt.load("tiny_init").unwrap();
+    let a = exe.run(&[HostTensor::i32(vec![1], vec![3]).unwrap()]).unwrap();
+    let b = exe.run(&[HostTensor::i32(vec![1], vec![3]).unwrap()]).unwrap();
+    let c = exe.run(&[HostTensor::i32(vec![1], vec![4]).unwrap()]).unwrap();
+    assert_eq!(a.len(), rt.manifest.model("tiny").unwrap().params.len());
+    assert_eq!(a[0], b[0], "same seed must give same params");
+    assert_ne!(
+        a[0].as_f32().unwrap(),
+        c[0].as_f32().unwrap(),
+        "different seeds must differ"
+    );
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let rt = rt();
+    let exe = rt.load("tiny_init").unwrap();
+    // wrong shape
+    assert!(exe.run(&[HostTensor::i32(vec![2], vec![0, 1]).unwrap()]).is_err());
+    // wrong dtype
+    assert!(exe.run(&[HostTensor::f32(vec![1], vec![0.0]).unwrap()]).is_err());
+    // wrong arity
+    assert!(exe.run(&[]).is_err());
+}
+
+#[test]
+fn cce_and_baseline_loss_artifacts_agree() {
+    let rt = rt();
+    let mut rng = Rng::new(42);
+    let (n, d, v) = (128usize, 64usize, 512usize);
+    let e = HostTensor::f32(
+        vec![n, d],
+        (0..n * d).map(|_| rng.normal() as f32 * 0.5).collect(),
+    )
+    .unwrap();
+    let c = HostTensor::f32(
+        vec![v, d],
+        (0..v * d).map(|_| rng.normal() as f32 * 0.5).collect(),
+    )
+    .unwrap();
+    let x = HostTensor::i32(
+        vec![n],
+        (0..n).map(|_| rng.usize_below(v) as i32).collect(),
+    )
+    .unwrap();
+    let inputs = [e, c, x];
+
+    let cce_out = rt.run("loss_fwd_cce_n128_d64_v512_tiny", &inputs).unwrap();
+    let base_out = rt.run("loss_fwd_baseline_n128_d64_v512_tiny", &inputs).unwrap();
+    let (a, b) = (cce_out[0].scalar().unwrap(), base_out[0].scalar().unwrap());
+    assert!(
+        (a - b).abs() < 1e-2 * b.abs().max(1.0),
+        "cce {a} vs baseline {b}"
+    );
+
+    // Gradients agree too (fwdbwd artifacts).
+    let cce_g = rt.run("loss_fwdbwd_cce_n128_d64_v512_tiny", &inputs).unwrap();
+    let base_g = rt.run("loss_fwdbwd_baseline_n128_d64_v512_tiny", &inputs).unwrap();
+    let max_diff = cce_g[1]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(base_g[1].as_f32().unwrap())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "grad_e diverges: {max_diff}");
+}
+
+#[test]
+fn liger_artifact_returns_loss_and_grads() {
+    let rt = rt();
+    let entry = rt.manifest.entry("loss_fwdbwd_liger_n128_d64_v512_tiny").unwrap();
+    assert_eq!(entry.outputs.len(), 3);
+    assert_eq!(entry.outputs[1].shape, vec![128, 64]);
+    assert_eq!(entry.outputs[2].shape, vec![512, 64]);
+}
+
+#[test]
+fn trainer_overfits_tiny_model() {
+    let rt = rt();
+    let trainer = Trainer::build(&rt, tiny_cfg("cce", 30)).unwrap();
+    let state = TrainState::init(&rt, &trainer.meta, 7).unwrap();
+    let mut metrics = Metrics::in_memory();
+    let state = trainer.train(state, &mut metrics).unwrap();
+    assert_eq!(state.step, 30);
+    assert_eq!(metrics.steps.len(), 30);
+    let first = metrics.steps[0].loss;
+    let last = metrics.steps.last().unwrap().loss;
+    assert!(
+        last < first - 0.3,
+        "loss did not decrease: {first:.4} -> {last:.4}"
+    );
+    // Validation path works and is finite.
+    let val = trainer.evaluate(&state).unwrap();
+    assert!(val.is_finite() && val > 0.0);
+}
+
+#[test]
+fn cce_and_baseline_training_curves_match() {
+    // The Fig. 4 claim at integration scale: same seeds + same data =>
+    // same curve, whether the loss head is CCE or the materializing
+    // baseline.
+    let rt = rt();
+    let run = |method: &str| {
+        let trainer = Trainer::build(&rt, tiny_cfg(method, 12)).unwrap();
+        let state = TrainState::init(&rt, &trainer.meta, 7).unwrap();
+        let mut metrics = Metrics::in_memory();
+        trainer.train(state, &mut metrics).unwrap();
+        metrics
+    };
+    let cce = run("cce");
+    let base = run("baseline");
+    let div = cce::coordinator::curve_max_divergence(&cce.steps, &base.steps);
+    let scale = cce.steps[0].loss;
+    assert!(
+        div < 0.01 * scale,
+        "curves diverged: {div:.4e} (loss scale {scale:.3})"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let rt = rt();
+    let trainer = Trainer::build(&rt, tiny_cfg("cce", 4)).unwrap();
+    let state = TrainState::init(&rt, &trainer.meta, 1).unwrap();
+    let mut metrics = Metrics::in_memory();
+    let state = trainer.train(state, &mut metrics).unwrap();
+
+    let path = std::env::temp_dir().join("cce_it_ckpt.bin");
+    trainer.to_checkpoint_with_vocab(&state, &path).unwrap();
+    let restored =
+        TrainState::from_checkpoint(Checkpoint::load(&path).unwrap(), &trainer.meta)
+            .unwrap();
+    assert_eq!(restored.step, 4);
+    assert_eq!(restored.params[0], state.params[0]);
+
+    // Same val loss from the restored state.
+    let a = trainer.evaluate(&state).unwrap();
+    let b = trainer.evaluate(&restored).unwrap();
+    assert!((a - b).abs() < 1e-9);
+
+    // And training can resume from it.
+    let (resumed, loss, _) = trainer
+        .step(restored, &trainer.dataset.step_batches(2, 2, 1).next().unwrap())
+        .unwrap();
+    assert_eq!(resumed.step, 5);
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn eval_counts_masked_tokens_correctly() {
+    let rt = rt();
+    let trainer = Trainer::build(&rt, tiny_cfg("cce", 1)).unwrap();
+    let state = TrainState::init(&rt, &trainer.meta, 0).unwrap();
+    let exe = rt.load("tiny_eval_step").unwrap();
+    let mut b = trainer.dataset.val_batches(trainer.meta.batch).remove(0);
+    // mask half the targets
+    if let cce::runtime::Data::I32(tgts) = &mut b.targets.data {
+        let half = tgts.len() / 2;
+        for t in tgts.iter_mut().take(half) {
+            *t = -1;
+        }
+    }
+    let mut inputs = state.params.clone();
+    inputs.push(b.tokens.clone());
+    inputs.push(b.targets.clone());
+    let out = exe.run(&inputs).unwrap();
+    let count = out[1].scalar().unwrap() as usize;
+    assert_eq!(count, b.targets.len() / 2);
+}
+
+#[test]
+fn rank_stats_artifact_shapes() {
+    let rt = rt();
+    let trainer = Trainer::build(&rt, tiny_cfg("cce", 1)).unwrap();
+    let state = TrainState::init(&rt, &trainer.meta, 0).unwrap();
+    let exe = rt.load("tiny_rank_stats").unwrap();
+    let b = trainer.dataset.val_batches(trainer.meta.batch).remove(0);
+    let mut inputs = state.params.clone();
+    inputs.push(b.tokens.clone());
+    let out = exe.run(&inputs).unwrap();
+    let probs = out[0].as_f32().unwrap();
+    assert_eq!(probs.len(), 512);
+    // Sorted descending and sums to ~1.
+    assert!(probs.windows(2).all(|w| w[0] >= w[1] - 1e-6));
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+}
