@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, and the tier-1 build/test cycle.
+#
+#   ./ci.sh            # fmt check + clippy + build + test (default features)
+#   ./ci.sh --pjrt     # additionally lint/build the pjrt feature (stub xla)
+#
+# The default pipeline needs no network, no libxla, and no artifacts: the
+# native backend (`rust/src/exec/`) covers the hot path and every default
+# test.  Lints are scoped to the `cce` package; the vendored stand-in
+# crates under rust/vendor/ are exercised by `cargo test` but not held to
+# the same lint bar.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+cargo fmt -p cce -- --check
+
+echo "== cargo clippy (-D warnings) =="
+cargo clippy -p cce --all-targets -- -D warnings
+
+if [[ "${1:-}" == "--pjrt" ]]; then
+    echo "== cargo clippy --features pjrt =="
+    cargo clippy -p cce --all-targets --features pjrt -- -D warnings
+fi
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo "CI OK"

@@ -3,25 +3,33 @@
 //! | Harness                | Paper artifact | CLI |
 //! |------------------------|----------------|-----|
 //! | [`table1`]             | Table 1 (+A1 via `--ignored`) | `cce table1` |
-//! | [`breakdown`]          | Table A2       | `cce tableA2` |
+//! | [`breakdown`]          | Table A2       | `cce tableA2` (pjrt) |
 //! | [`tablea3`]            | Table A3       | `cce tableA3` |
 //! | [`fig1`]               | Fig. 1 / Table A4 | `cce fig1` |
-//! | [`fig3`]               | Fig. 3         | `cce fig3` |
-//! | [`curves`]             | Figs. 4 & 5    | `cce fig4`, `cce fig5` |
+//! | [`fig3`]               | Fig. 3         | `cce fig3` (pjrt) |
+//! | [`curves`]             | Figs. 4 & 5    | `cce fig4`, `cce fig5` (pjrt) |
 //! | [`sweep`]              | Figs. A1 / A2  | `cce figA1` |
 //!
-//! Time columns are measured on this substrate (CPU PJRT, scaled grid —
-//! see DESIGN.md "Numerical-scale policy"); memory columns are analytic and
-//! exact at paper scale.  Each harness has a `check()` that asserts the
-//! paper's *shape* claims and is exercised by `cargo test` / `cargo bench`.
+//! `table1` and `sweep` run on either backend: `--backend native` measures
+//! the multi-threaded Rust kernels in [`crate::exec`] with zero artifacts
+//! (and `table1 --json` emits `BENCH_table1.json` for cross-PR tracking);
+//! `--backend pjrt` times the AOT artifacts.  The artifact-only harnesses
+//! (`breakdown`, `fig3`, `curves`) need the `pjrt` feature.  Memory columns
+//! are analytic and exact at paper scale; each harness has a `check()` that
+//! asserts the paper's *shape* claims.
 
+#[cfg(feature = "pjrt")]
 pub mod breakdown;
+#[cfg(feature = "pjrt")]
 pub mod curves;
 pub mod fig1;
+#[cfg(feature = "pjrt")]
 pub mod fig3;
 pub mod harness;
 pub mod sweep;
 pub mod table1;
 pub mod tablea3;
 
-pub use harness::{time_artifact, BenchResult, Table};
+#[cfg(feature = "pjrt")]
+pub use harness::time_artifact;
+pub use harness::{BenchResult, Table};

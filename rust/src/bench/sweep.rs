@@ -1,13 +1,20 @@
 //! Figs. A1/A2 harness: loss+gradient time and memory vs token count.
+//!
+//! `run_native` sweeps the native kernels over a list of token counts with
+//! zero artifacts; `run` (pjrt) times the AOT artifacts in the manifest.
 
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::bench::harness::{time_artifact, Table};
+use crate::bench::harness::Table;
 use crate::memmodel::{method_memory, LossMethod, Workload};
-use crate::runtime::Runtime;
 use crate::util::stats::{fmt_duration, fmt_mb};
+
+#[cfg(feature = "pjrt")]
+use crate::bench::harness::time_artifact;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Runtime;
 
 pub struct SweepPoint {
     pub method: String,
@@ -27,7 +34,59 @@ fn method_of_key(key: &str) -> Option<LossMethod> {
     })
 }
 
+/// Sweep the native kernels over `ns` token counts at a fixed `(d, v)`
+/// grid — the Fig. A1/A2 time/memory-vs-N curves with zero artifacts.
+pub fn run_native(
+    d: usize,
+    v: usize,
+    ns: &[usize],
+    budget_ms: u64,
+    opts: crate::exec::KernelOptions,
+    seed: u64,
+) -> Result<Vec<SweepPoint>> {
+    use crate::bench::harness::{gen_loss_inputs, time_fn};
+    use crate::exec::{Backend, NativeBackend, Problem};
+    use crate::util::rng::Rng;
+
+    let budget = Duration::from_millis(budget_ms);
+    let mut out = Vec::new();
+    let mut sorted_ns = ns.to_vec();
+    sorted_ns.sort_unstable();
+    for &n in &sorted_ns {
+        let mut rng = Rng::new(seed ^ (n as u64).wrapping_mul(0x9E37_79B9));
+        let inputs = gen_loss_inputs(n, d, v, &mut rng, 0.0);
+        let problem = Problem::from_tensors(&inputs)?;
+        for key in ["baseline", "cce"] {
+            let backend = NativeBackend::from_key(key, opts)?;
+            let res = time_fn(&format!("sweep_{key}_n{n}"), budget, || {
+                std::hint::black_box(
+                    backend.forward_backward(&problem).expect("native sweep"),
+                );
+            });
+            let w = Workload {
+                n_tokens: n as u64,
+                vocab: v as u64,
+                hidden: d as u64,
+                act_bytes: 4,
+                softcap: false,
+            };
+            let mem = method_of_key(key)
+                .map(|lm| method_memory(lm, &w).combined)
+                .unwrap_or(0);
+            eprintln!("  [sweep/native] n={n} {key}: {}", fmt_duration(res.mean()));
+            out.push(SweepPoint {
+                method: key.to_string(),
+                n_tokens: n as u64,
+                secs: res.mean(),
+                mem_bytes: mem,
+            });
+        }
+    }
+    Ok(out)
+}
+
 /// Time `loss_fwdbwd_{method}` for every token count in the manifest sweep.
+#[cfg(feature = "pjrt")]
 pub fn run(rt: &Runtime, budget_ms: u64) -> Result<Vec<SweepPoint>> {
     let bench = rt
         .manifest

@@ -1,12 +1,24 @@
 //! The L3 coordinator: configuration, training orchestration, checkpoints,
-//! and metrics.  See [`trainer::Trainer`] for the event loop.
+//! and metrics.
+//!
+//! Two trainers share the data pipeline and metrics:
+//!
+//! * [`trainer::Trainer`] (behind the `pjrt` feature) drives the AOT
+//!   transformer train-step artifacts through the PJRT runtime.
+//! * [`native::NativeTrainer`] trains a bag-of-context classifier head
+//!   end-to-end with the native CCE kernels ([`crate::exec`]) — zero
+//!   artifacts, zero shared libraries.  `cce train --backend native`.
 
 pub mod checkpoint;
 pub mod config;
 pub mod metrics;
+pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use config::{CorpusKind, RunConfig};
 pub use metrics::{curve_max_divergence, EvalRecord, Metrics, StepRecord};
+pub use native::{NativeModelConfig, NativeState, NativeTrainer};
+#[cfg(feature = "pjrt")]
 pub use trainer::{TrainState, Trainer};

@@ -1,0 +1,296 @@
+//! The [`Backend`] trait: one contract over every way this repo can compute
+//! the cross-entropy loss and its gradients.
+//!
+//! * [`NativeBackend`] — the pure-Rust kernels in this module tree; runs
+//!   anywhere, zero artifacts.  Selected with `--backend native`.
+//! * `PjrtBackend` (behind the `pjrt` feature) — adapter over the AOT
+//!   artifact runtime, so the same call sites can execute the
+//!   Pallas-lowered kernels when `libxla` + artifacts are present.
+//!   Selected with `--backend pjrt`.
+//!
+//! Contract: `forward` returns the mean NLL over non-ignored tokens;
+//! `forward_backward` additionally returns `dE`/`dC` of that mean.  Both
+//! validate shapes up front and are deterministic for fixed inputs.
+
+use anyhow::{anyhow, Result};
+
+use super::{
+    baseline_forward, baseline_forward_backward, cce_backward, cce_forward, BackwardOut,
+    ForwardOut, KernelOptions, Problem,
+};
+
+/// A loss-layer compute backend.
+pub trait Backend {
+    /// Human-readable identifier, e.g. `native/cce`.
+    fn name(&self) -> String;
+    /// Mean NLL over non-ignored tokens.
+    fn forward(&self, p: &Problem) -> Result<ForwardOut>;
+    /// Forward plus `dE`/`dC` gradients.
+    fn forward_backward(&self, p: &Problem) -> Result<(ForwardOut, BackwardOut)>;
+}
+
+/// Which native kernel family computes the loss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeMethod {
+    /// Materialize the full `N×V` logit matrix (Table 1 "Baseline").
+    Baseline,
+    /// Row-chunked materialization with `k` chunks ("Torch Tune" analogue):
+    /// the blocked kernel with `N_B = ⌈N/k⌉`, `V_B = V`, no filtering.
+    Chunked(usize),
+    /// Cut cross-entropy: blocked online-LSE forward, filtered/sorted
+    /// blockwise backward per the `filter`/`sort` kernel options.
+    Cce,
+}
+
+impl NativeMethod {
+    /// Artifact-style key (matches [`crate::memmodel::LossMethod::key`]).
+    pub fn key(&self, opts: &KernelOptions) -> String {
+        match self {
+            NativeMethod::Baseline => "baseline".into(),
+            NativeMethod::Chunked(k) => format!("chunked{k}"),
+            NativeMethod::Cce => match (opts.filter, opts.sort) {
+                (true, true) => "cce".into(),
+                (true, false) => "cce_no_sort".into(),
+                (false, _) => "cce_no_filter".into(),
+            },
+        }
+    }
+}
+
+/// The native multi-threaded CPU backend.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeBackend {
+    pub method: NativeMethod,
+    pub opts: KernelOptions,
+}
+
+impl NativeBackend {
+    pub fn new(method: NativeMethod, opts: KernelOptions) -> NativeBackend {
+        NativeBackend { method, opts }
+    }
+
+    /// Build from a Table-1 method key (`baseline`, `chunked8`, `cce`,
+    /// `cce_no_filter`, `cce_no_sort`).  `fused`/`liger`/`cce_kahan*` have
+    /// no native implementation and are rejected.
+    pub fn from_key(key: &str, mut opts: KernelOptions) -> Result<NativeBackend> {
+        let method = match key {
+            "baseline" => NativeMethod::Baseline,
+            "cce" => {
+                opts.filter = true;
+                opts.sort = true;
+                NativeMethod::Cce
+            }
+            "cce_no_sort" => {
+                opts.filter = true;
+                opts.sort = false;
+                NativeMethod::Cce
+            }
+            "cce_no_filter" => {
+                opts.filter = false;
+                opts.sort = false;
+                NativeMethod::Cce
+            }
+            _ => match key.strip_prefix("chunked").and_then(|k| k.parse::<usize>().ok()) {
+                Some(k) if k > 0 => NativeMethod::Chunked(k),
+                _ => return Err(anyhow!("no native implementation for method {key:?}")),
+            },
+        };
+        Ok(NativeBackend { method, opts })
+    }
+
+    /// Effective kernel options for a problem of `n` rows / `v` columns
+    /// (chunked mode derives its blocking from the chunk count).
+    pub fn effective_opts(&self, n: usize, v: usize) -> KernelOptions {
+        match self.method {
+            NativeMethod::Chunked(k) => KernelOptions {
+                n_block: crate::exec::ceil_div(n, k),
+                v_block: v,
+                filter: false,
+                sort: false,
+                ..self.opts
+            },
+            _ => self.opts,
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        format!("native/{}", self.method.key(&self.opts))
+    }
+
+    fn forward(&self, p: &Problem) -> Result<ForwardOut> {
+        Ok(match self.method {
+            NativeMethod::Baseline => baseline_forward(p, &self.opts),
+            NativeMethod::Chunked(_) | NativeMethod::Cce => {
+                cce_forward(p, &self.effective_opts(p.n, p.v))
+            }
+        })
+    }
+
+    fn forward_backward(&self, p: &Problem) -> Result<(ForwardOut, BackwardOut)> {
+        Ok(match self.method {
+            NativeMethod::Baseline => baseline_forward_backward(p, &self.opts),
+            NativeMethod::Chunked(_) | NativeMethod::Cce => {
+                let opts = self.effective_opts(p.n, p.v);
+                let fwd = cce_forward(p, &opts);
+                let bwd = cce_backward(p, &opts, &fwd.lse);
+                (fwd, bwd)
+            }
+        })
+    }
+}
+
+// ------------------------------------------------------------- PJRT adapter
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_adapter::PjrtBackend;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_adapter {
+    use anyhow::{anyhow, Result};
+
+    use super::{Backend, BackwardOut, ForwardOut, Problem};
+    use crate::exec::FilterStats;
+    use crate::runtime::{HostTensor, Runtime};
+
+    /// [`Backend`] adapter over the AOT artifact runtime: method keys map
+    /// to `loss_fwd_{key}_{grid}` / `loss_fwdbwd_{key}_{grid}` artifacts.
+    pub struct PjrtBackend<'rt> {
+        pub rt: &'rt Runtime,
+        pub key: String,
+    }
+
+    impl<'rt> PjrtBackend<'rt> {
+        pub fn new(rt: &'rt Runtime, key: impl Into<String>) -> PjrtBackend<'rt> {
+            PjrtBackend { rt, key: key.into() }
+        }
+
+        fn artifact(&self, kind: &str, p: &Problem) -> String {
+            format!("loss_{kind}_{}_n{}_d{}_v{}", self.key, p.n, p.d, p.v)
+        }
+
+        fn tensors(p: &Problem) -> Result<Vec<HostTensor>> {
+            Ok(vec![
+                HostTensor::f32(vec![p.n, p.d], p.e.to_vec())?,
+                HostTensor::f32(vec![p.v, p.d], p.c.to_vec())?,
+                HostTensor::i32(vec![p.n], p.x.to_vec())?,
+            ])
+        }
+    }
+
+    impl Backend for PjrtBackend<'_> {
+        fn name(&self) -> String {
+            format!("pjrt/{}", self.key)
+        }
+
+        fn forward(&self, p: &Problem) -> Result<ForwardOut> {
+            let out = self.rt.run(&self.artifact("fwd", p), &Self::tensors(p)?)?;
+            let loss = out
+                .first()
+                .ok_or_else(|| anyhow!("loss artifact returned no outputs"))?
+                .scalar()?;
+            Ok(ForwardOut {
+                loss,
+                count: p.active_count(),
+                lse: Vec::new(),
+                target_logit: Vec::new(),
+                workspace_bytes: 0,
+            })
+        }
+
+        fn forward_backward(&self, p: &Problem) -> Result<(ForwardOut, BackwardOut)> {
+            let out = self.rt.run(&self.artifact("fwdbwd", p), &Self::tensors(p)?)?;
+            if out.len() < 3 {
+                return Err(anyhow!(
+                    "fwdbwd artifact returned {} outputs, want [loss, d_e, d_c]",
+                    out.len()
+                ));
+            }
+            let loss = out[0].scalar()?;
+            let fwd = ForwardOut {
+                loss,
+                count: p.active_count(),
+                lse: Vec::new(),
+                target_logit: Vec::new(),
+                workspace_bytes: 0,
+            };
+            let bwd = BackwardOut {
+                d_e: out[1].as_f32()?.to_vec(),
+                d_c: out[2].as_f32()?.to_vec(),
+                stats: FilterStats::default(),
+                workspace_bytes: 0,
+            };
+            Ok((fwd, bwd))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::random_problem;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_key_maps_methods() {
+        let o = KernelOptions::default();
+        assert_eq!(NativeBackend::from_key("baseline", o).unwrap().method, NativeMethod::Baseline);
+        assert_eq!(
+            NativeBackend::from_key("chunked8", o).unwrap().method,
+            NativeMethod::Chunked(8)
+        );
+        let cce = NativeBackend::from_key("cce", o).unwrap();
+        assert!(cce.opts.filter && cce.opts.sort);
+        let nf = NativeBackend::from_key("cce_no_filter", o).unwrap();
+        assert!(!nf.opts.filter);
+        let ns = NativeBackend::from_key("cce_no_sort", o).unwrap();
+        assert!(ns.opts.filter && !ns.opts.sort);
+        assert!(NativeBackend::from_key("fused", o).is_err());
+        assert!(NativeBackend::from_key("liger", o).is_err());
+        assert!(NativeBackend::from_key("chunked0", o).is_err());
+    }
+
+    #[test]
+    fn all_native_methods_agree_on_loss_and_grads() {
+        let mut rng = Rng::new(23);
+        let (n, d, v) = (40, 10, 96);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.15);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let opts = KernelOptions { n_block: 16, v_block: 32, ..KernelOptions::default() };
+        let reference = NativeBackend::from_key("baseline", opts)
+            .unwrap()
+            .forward_backward(&p)
+            .unwrap();
+        for key in ["chunked8", "cce", "cce_no_filter", "cce_no_sort"] {
+            let be = NativeBackend::from_key(key, opts).unwrap();
+            assert_eq!(be.name(), format!("native/{key}"));
+            let fwd = be.forward(&p).unwrap();
+            assert!(
+                (fwd.loss - reference.0.loss).abs() < 1e-4,
+                "{key} loss {} vs {}",
+                fwd.loss,
+                reference.0.loss
+            );
+            let (_, bwd) = be.forward_backward(&p).unwrap();
+            let max_de = bwd
+                .d_e
+                .iter()
+                .zip(&reference.1.d_e)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // Near-uniform random softmax: nothing is sub-eps, so even the
+            // filtered variants must agree to round-off.
+            assert!(max_de < 1e-5, "{key} d_e diverges by {max_de}");
+        }
+    }
+
+    #[test]
+    fn chunked_blocking_follows_chunk_count() {
+        let be = NativeBackend::from_key("chunked4", KernelOptions::default()).unwrap();
+        let eff = be.effective_opts(100, 64);
+        assert_eq!(eff.n_block, 25);
+        assert_eq!(eff.v_block, 64);
+        assert!(!eff.filter);
+    }
+}

@@ -1,0 +1,341 @@
+//! CCE backward: blockwise logit rematerialization with the §4.3 gradient
+//! filter and optional vocabulary sorting.
+//!
+//! The gradient of the mean NLL splits into a dense indicator part and a
+//! softmax part:
+//!
+//! ```text
+//! dE_i = (Σ_j p_ij · c_j − c_{x_i}) / count
+//! dC_j = (Σ_i p_ij · e_i − Σ_{i: x_i=j} e_i) / count      p_ij = exp(z_ij − lse_i)
+//! ```
+//!
+//! The indicator terms are applied once per token up front (they can never
+//! be filtered away).  The softmax part is computed per `(N_B, V_B)` block:
+//! rematerialize the block's logits (one matmul-sized pass), form
+//! `p = exp(z − lse)`, and — when filtering is on — **skip the two
+//! accumulation passes** whenever every `p` of every active row is below
+//! `eps = 2^-12` ([`crate::sparsity::FILTER_EPS`]).  Since each skipped
+//! entry contributes `< eps/count` to any gradient element, the error is
+//! bounded far below f32 round-off of the surviving terms (the paper's
+//! bf16-truncation argument).
+//!
+//! **Vocabulary sorting** visits columns through a permutation ordered by
+//! descending label frequency, concentrating the Zipf head — the entries
+//! that survive filtering — into a few leading column blocks so the
+//! remaining blocks die wholesale (§4.3 "sorted gradient filtering"; the
+//! survival geometry is modelled by [`crate::sparsity::BlockFilterModel`]).
+
+use super::{dot, span_rows, BackwardOut, FilterStats, KernelOptions, Problem};
+use crate::sparsity::FILTER_EPS;
+
+/// Vocabulary permutation ordered by descending label frequency (stable by
+/// token id for reproducibility).  Identity when labels are uniform.
+pub fn frequency_permutation(x: &[i32], v: usize) -> Vec<u32> {
+    let mut freq = vec![0u32; v];
+    for &t in x {
+        if t >= 0 {
+            freq[t as usize] += 1;
+        }
+    }
+    let mut perm: Vec<u32> = (0..v as u32).collect();
+    perm.sort_by(|&a, &b| freq[b as usize].cmp(&freq[a as usize]).then(a.cmp(&b)));
+    perm
+}
+
+/// Run the backward pass.  `lse` is the per-row log-sum-exp from
+/// [`super::cce_forward`].  Multi-threaded over contiguous row spans; each
+/// worker accumulates its own `dC` shard, reduced at the end.
+pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardOut {
+    assert_eq!(lse.len(), p.n, "lse length mismatch");
+    let (n, d, v) = (p.n, p.d, p.v);
+    let count = p.active_count();
+    let inv_count = if count == 0 { 0.0f32 } else { 1.0 / count as f32 };
+    let perm: Vec<u32> = if opts.sort {
+        frequency_permutation(p.x, v)
+    } else {
+        (0..v as u32).collect()
+    };
+
+    let mut d_e = vec![0f32; n * d];
+    let mut d_c = vec![0f32; v * d];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    let results: Vec<(Vec<f32>, FilterStats, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = d_e
+            .chunks_mut(span * d)
+            .enumerate()
+            .map(|(ti, de_chunk)| {
+                let row0 = ti * span;
+                let opts = *opts;
+                let perm = &perm;
+                scope.spawn(move || {
+                    backward_span(p, &opts, perm, lse, inv_count, row0, de_chunk)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("backward worker")).collect()
+    });
+
+    let mut stats = FilterStats::default();
+    // Working memory beyond the dE/dC outputs: per-thread logit-block
+    // buffers plus the per-thread dC shards.
+    let mut workspace = 0usize;
+    for (shard, worker_stats, ws) in &results {
+        for (acc, val) in d_c.iter_mut().zip(shard) {
+            *acc += *val;
+        }
+        stats.merge(worker_stats);
+        workspace += ws + shard.len() * 4;
+    }
+    BackwardOut { d_e, d_c, stats, workspace_bytes: workspace }
+}
+
+/// Process rows `[row0, row0 + rows_total)`.  Returns this worker's `dC`
+/// shard, its filter stats, and its block-buffer bytes.
+fn backward_span(
+    p: &Problem,
+    opts: &KernelOptions,
+    perm: &[u32],
+    lse: &[f32],
+    inv_count: f32,
+    row0: usize,
+    de_chunk: &mut [f32],
+) -> (Vec<f32>, FilterStats, usize) {
+    let d = p.d;
+    let v = p.v;
+    let eps = FILTER_EPS as f32;
+    let rows_total = de_chunk.len() / d;
+    let n_block = opts.n_block.clamp(1, rows_total.max(1));
+    let v_block = opts.v_block.clamp(1, v);
+    let mut probs = vec![0f32; n_block * v_block];
+    let mut dc_local = vec![0f32; v * d];
+    let mut stats = FilterStats::default();
+
+    // Indicator part: dE_i -= c_{x_i}/count, dC_{x_i} -= e_i/count.
+    for r in 0..rows_total {
+        let i = row0 + r;
+        let t = p.x[i];
+        if t < 0 {
+            continue;
+        }
+        let t = t as usize;
+        let e_row = &p.e[i * d..(i + 1) * d];
+        let c_row = &p.c[t * d..(t + 1) * d];
+        let de_row = &mut de_chunk[r * d..(r + 1) * d];
+        let dc_row = &mut dc_local[t * d..(t + 1) * d];
+        for k in 0..d {
+            de_row[k] -= inv_count * c_row[k];
+            dc_row[k] -= inv_count * e_row[k];
+        }
+    }
+
+    // Softmax part, blockwise with filtering.
+    let mut block_start = 0;
+    while block_start < rows_total {
+        let rows = n_block.min(rows_total - block_start);
+        let mut j0 = 0;
+        while j0 < v {
+            let cols = v_block.min(v - j0);
+            // Rematerialize the block's logits as probabilities.
+            let mut sig = 0u64;
+            for r in 0..rows {
+                let i = row0 + block_start + r;
+                let active = p.x[i] >= 0;
+                let e_row = &p.e[i * d..(i + 1) * d];
+                let p_row = &mut probs[r * cols..(r + 1) * cols];
+                if !active {
+                    p_row.fill(0.0);
+                    continue;
+                }
+                let row_lse = lse[i];
+                for (jj, out) in p_row.iter_mut().enumerate() {
+                    let j = perm[j0 + jj] as usize;
+                    let z = dot(e_row, &p.c[j * d..(j + 1) * d]);
+                    let prob = (z - row_lse).exp();
+                    *out = prob;
+                    sig += (prob >= eps) as u64;
+                }
+            }
+            stats.blocks_total += 1;
+            stats.sig_entries += sig;
+            if opts.filter && sig == 0 {
+                // Every softmax entry of every active row is sub-eps: the
+                // block's two accumulation matmuls are skipped entirely.
+                stats.blocks_skipped += 1;
+                j0 += cols;
+                continue;
+            }
+            // Accumulation: dE rows and the local dC shard, fused.
+            for r in 0..rows {
+                let i = row0 + block_start + r;
+                if p.x[i] < 0 {
+                    continue;
+                }
+                let e_row = &p.e[i * d..(i + 1) * d];
+                let de_row = &mut de_chunk[(block_start + r) * d..(block_start + r + 1) * d];
+                for jj in 0..cols {
+                    let g = probs[r * cols + jj] * inv_count;
+                    let j = perm[j0 + jj] as usize;
+                    let c_row = &p.c[j * d..(j + 1) * d];
+                    let dc_row = &mut dc_local[j * d..(j + 1) * d];
+                    for k in 0..d {
+                        de_row[k] += g * c_row[k];
+                        dc_row[k] += g * e_row[k];
+                    }
+                }
+            }
+            j0 += cols;
+        }
+        block_start += rows;
+    }
+    let buffer_bytes = probs.len() * 4;
+    (dc_local, stats, buffer_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{baseline_forward_backward, cce_forward, random_problem};
+    use crate::util::rng::Rng;
+
+    fn opts(filter: bool, sort: bool) -> KernelOptions {
+        KernelOptions { n_block: 8, v_block: 16, threads: 2, filter, sort }
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn unfiltered_matches_baseline() {
+        let mut rng = Rng::new(11);
+        let (n, d, v) = (24, 12, 60);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.2);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let (_, reference) = baseline_forward_backward(&p, &KernelOptions::default());
+        for sort in [false, true] {
+            let o = opts(false, sort);
+            let fwd = cce_forward(&p, &o);
+            let bwd = cce_backward(&p, &o, &fwd.lse);
+            assert!(
+                max_abs_diff(&bwd.d_e, &reference.d_e) < 1e-5,
+                "d_e diverges (sort={sort})"
+            );
+            assert!(
+                max_abs_diff(&bwd.d_c, &reference.d_c) < 1e-5,
+                "d_c diverges (sort={sort})"
+            );
+            assert_eq!(bwd.stats.blocks_skipped, 0);
+        }
+    }
+
+    #[test]
+    fn frequency_permutation_orders_hot_tokens_first() {
+        let x = vec![3, 3, 3, 1, 1, 7, -1, -1];
+        let perm = frequency_permutation(&x, 8);
+        assert_eq!(perm[0], 3);
+        assert_eq!(perm[1], 1);
+        assert_eq!(perm[2], 7);
+        // Remaining ids in stable (ascending) order.
+        assert_eq!(&perm[3..], &[0, 2, 4, 5, 6]);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn filtered_error_is_within_eps_bound() {
+        // Deterministically peaked softmax: token 0 is a strong shared
+        // direction, every label is 0, so every column block except the one
+        // holding column 0 is provably sub-eps and must be skipped.
+        let mut rng = Rng::new(13);
+        let (n, d, v) = (32, 4, 256);
+        let mut c: Vec<f32> = (0..v * d).map(|_| (rng.normal() * 0.1) as f32).collect();
+        c[0] = 10.0; // c_0 ≈ 10·u_0
+        let mut e = vec![0f32; n * d];
+        let mut x = vec![0i32; n];
+        for i in 0..n {
+            e[i * d] = 1.5 + rng.f32() * 0.2; // z_{i,0} ≈ 15..17, others |z| ≲ 1
+            if i % 8 == 7 {
+                x[i] = -1; // a few ignored rows in the mix
+            }
+        }
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let o = opts(true, true);
+        let fwd = cce_forward(&p, &o);
+        let filtered = cce_backward(&p, &o, &fwd.lse);
+        let exact = cce_backward(&p, &opts(false, true), &fwd.lse);
+        assert!(
+            filtered.stats.blocks_skipped > 0,
+            "peaked input skipped no blocks: {:?}",
+            filtered.stats
+        );
+        // Per-element bound: each skipped entry contributes < eps/count
+        // times a bounded factor; V·eps·max|input|/count is a loose cap.
+        let count = fwd.count as f32;
+        let max_in = e
+            .iter()
+            .chain(c.iter())
+            .map(|z| z.abs())
+            .fold(0.0f32, f32::max);
+        let bound = (v as f32) * (FILTER_EPS as f32) * max_in / count;
+        assert!(
+            max_abs_diff(&filtered.d_e, &exact.d_e) <= bound,
+            "d_e filter error above bound {bound}"
+        );
+        assert!(
+            max_abs_diff(&filtered.d_c, &exact.d_c) <= bound,
+            "d_c filter error above bound {bound}"
+        );
+    }
+
+    #[test]
+    fn sorting_skips_more_blocks_on_shuffled_zipf() {
+        // Hot tokens with *shuffled ids*: each row's softmax concentrates
+        // on its target (an id scattered anywhere in the vocabulary), so
+        // unsorted filtering keeps every block that holds some row's
+        // target, while frequency sorting pulls all hot ids into the
+        // leading column block (the cce vs cce_no_sort ablation).
+        let mut rng = Rng::new(17);
+        let (n, d, v) = (64, 16, 512);
+        let n_hot = 8;
+        let mut ids: Vec<usize> = (0..v).collect();
+        rng.shuffle(&mut ids);
+        let hot: Vec<usize> = ids[..n_hot].to_vec();
+        // Hot token r gets classifier row 6·u_r; cold rows are tiny noise.
+        let mut c: Vec<f32> = (0..v * d).map(|_| (rng.normal() * 0.05) as f32).collect();
+        for (r, &id) in hot.iter().enumerate() {
+            c[id * d + r] = 6.0;
+        }
+        // Row i picks hot rank (Zipf-ish via modulo bias) and aligns with it.
+        let mut e = vec![0f32; n * d];
+        let mut x = vec![0i32; n];
+        for i in 0..n {
+            let r = (i % (n_hot + 4)).min(n_hot - 1); // ranks 0..8, head-heavy
+            x[i] = hot[r] as i32;
+            e[i * d + r] = 2.0; // z_target = 12, every other |z| ≲ 1
+        }
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let o = KernelOptions { n_block: 16, v_block: 32, threads: 2, filter: true, sort: true };
+        let fwd = cce_forward(&p, &o);
+        let sorted = cce_backward(&p, &o, &fwd.lse);
+        let unsorted = cce_backward(&p, &KernelOptions { sort: false, ..o }, &fwd.lse);
+        assert!(
+            sorted.stats.blocks_skipped >= unsorted.stats.blocks_skipped,
+            "sorting should not reduce skips: {:?} vs {:?}",
+            sorted.stats,
+            unsorted.stats
+        );
+        // Sorted: the significant set is exactly the n_hot hot tokens, all
+        // in the first permuted block => at most one surviving vocab block
+        // per row-block.
+        let total = sorted.stats.blocks_total;
+        assert!(
+            sorted.stats.blocks_skipped * 2 > total,
+            "sorted filtering should skip most blocks: {:?}",
+            sorted.stats
+        );
+        // Both runs compute the same gradients despite different skip sets.
+        assert!(max_abs_diff(&sorted.d_e, &unsorted.d_e) < 1e-3);
+        assert!(max_abs_diff(&sorted.d_c, &unsorted.d_c) < 1e-3);
+    }
+}

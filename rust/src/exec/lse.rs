@@ -1,0 +1,187 @@
+//! CCE forward: blocked indexed-matmul fused with an online log-sum-exp.
+//!
+//! For each row-block of `N_B` tokens the kernel walks the vocabulary in
+//! `V_B`-column tiles, computing the tile's logits into a single reusable
+//! `(N_B, V_B)` buffer and folding them into a running `(max, rescaled sum)`
+//! pair per row — the standard online-LSE recurrence
+//!
+//! ```text
+//! m' = max(m, max_j z_j)        s' = s·exp(m − m') + Σ_j exp(z_j − m')
+//! ```
+//!
+//! The target logit `e_i · c_{x_i}` is captured in the same sweep when the
+//! tile containing column `x_i` passes by, so the whole forward is one scan
+//! over `C` with `O(N + threads·N_B·V_B)` working floats — the `N×V` logit
+//! matrix never exists (the paper's §4.2 kernel, adapted from flash-memory
+//! tiles to cache blocks).
+
+use super::{dot, span_rows, ForwardOut, KernelOptions, Problem};
+
+/// Run the forward pass.  Multi-threaded over contiguous row spans.
+pub fn cce_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
+    let n = p.n;
+    let mut lse = vec![0f32; n];
+    let mut tgt = vec![0f32; n];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    let buffer_bytes: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = lse
+            .chunks_mut(span)
+            .zip(tgt.chunks_mut(span))
+            .enumerate()
+            .map(|(ti, (lse_chunk, tgt_chunk))| {
+                let row0 = ti * span;
+                let opts = *opts;
+                scope.spawn(move || forward_span(p, &opts, row0, lse_chunk, tgt_chunk))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("forward worker")).sum()
+    });
+    let count = p.active_count();
+    let loss_sum: f64 = p
+        .x
+        .iter()
+        .enumerate()
+        .filter(|(_, &t)| t >= 0)
+        .map(|(i, _)| (lse[i] - tgt[i]) as f64)
+        .sum();
+    let loss = if count == 0 { 0.0 } else { loss_sum / count as f64 };
+    let workspace_bytes = n * 8 + buffer_bytes;
+    ForwardOut { loss, count, lse, target_logit: tgt, workspace_bytes }
+}
+
+/// Process rows `[row0, row0 + lse_out.len())`; returns the bytes of block
+/// buffers this worker allocated (for the O(N_B·V_B) memory assertion).
+fn forward_span(
+    p: &Problem,
+    opts: &KernelOptions,
+    row0: usize,
+    lse_out: &mut [f32],
+    tgt_out: &mut [f32],
+) -> usize {
+    let d = p.d;
+    let v = p.v;
+    let rows_total = lse_out.len();
+    let n_block = opts.n_block.clamp(1, rows_total.max(1));
+    let v_block = opts.v_block.clamp(1, v);
+    let mut logits = vec![0f32; n_block * v_block];
+    let mut run_max = vec![f32::NEG_INFINITY; n_block];
+    let mut run_sum = vec![0f32; n_block];
+
+    let mut block_start = 0;
+    while block_start < rows_total {
+        let rows = n_block.min(rows_total - block_start);
+        run_max[..rows].fill(f32::NEG_INFINITY);
+        run_sum[..rows].fill(0.0);
+
+        let mut j0 = 0;
+        while j0 < v {
+            let cols = v_block.min(v - j0);
+            // Tile logits: one (rows, cols) blocked matmul.
+            for r in 0..rows {
+                let i = row0 + block_start + r;
+                let e_row = &p.e[i * d..(i + 1) * d];
+                let z_row = &mut logits[r * cols..(r + 1) * cols];
+                for (jj, z) in z_row.iter_mut().enumerate() {
+                    *z = dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
+                }
+            }
+            // Online LSE fold + target-logit capture.
+            for r in 0..rows {
+                let i = row0 + block_start + r;
+                let z_row = &logits[r * cols..(r + 1) * cols];
+                let tile_max = z_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let m_old = run_max[r];
+                let m_new = m_old.max(tile_max);
+                let mut s = if m_old == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    run_sum[r] * (m_old - m_new).exp()
+                };
+                for &z in z_row {
+                    s += (z - m_new).exp();
+                }
+                run_max[r] = m_new;
+                run_sum[r] = s;
+                let t = p.x[i];
+                if t >= 0 {
+                    let t = t as usize;
+                    if t >= j0 && t < j0 + cols {
+                        tgt_out[block_start + r] = z_row[t - j0];
+                    }
+                }
+            }
+            j0 += cols;
+        }
+        for r in 0..rows {
+            lse_out[block_start + r] = run_max[r] + run_sum[r].ln();
+        }
+        block_start += rows;
+    }
+    (logits.len() + run_max.len() + run_sum.len()) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{baseline_forward, random_problem};
+    use crate::util::rng::Rng;
+
+    fn opts(n_block: usize, v_block: usize, threads: usize) -> KernelOptions {
+        KernelOptions { n_block, v_block, threads, filter: true, sort: true }
+    }
+
+    #[test]
+    fn matches_baseline_across_blockings() {
+        let mut rng = Rng::new(7);
+        let (n, d, v) = (48, 16, 100);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.2);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let reference = baseline_forward(&p, &KernelOptions::default());
+        for (nb, vb, th) in [(8, 32, 1), (16, 7, 2), (64, 128, 3), (1, 1, 4)] {
+            let out = cce_forward(&p, &opts(nb, vb, th));
+            assert!(
+                (out.loss - reference.loss).abs() < 1e-5,
+                "nb={nb} vb={vb} th={th}: {} vs {}",
+                out.loss,
+                reference.loss
+            );
+            assert_eq!(out.count, reference.count);
+            for i in 0..n {
+                assert!(
+                    (out.lse[i] - reference.lse[i]).abs() < 1e-4,
+                    "lse[{i}]: {} vs {}",
+                    out.lse[i],
+                    reference.lse[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_is_blocked_not_nv() {
+        let mut rng = Rng::new(8);
+        let (n, d, v) = (256, 8, 4096);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let o = opts(64, 128, 2);
+        let out = cce_forward(&p, &o);
+        // O(N) vectors + per-thread (N_B·V_B + 2·N_B) floats.
+        let span = crate::exec::span_rows(n, o.n_block, o.threads);
+        let workers = crate::exec::ceil_div(n, span);
+        let expected = n * 8 + workers * (o.n_block * o.v_block + 2 * o.n_block) * 4;
+        assert_eq!(out.workspace_bytes, expected);
+        assert!(out.workspace_bytes < n * v * 4 / 4, "{}", out.workspace_bytes);
+    }
+
+    #[test]
+    fn all_ignored_rows_give_zero_loss() {
+        let mut rng = Rng::new(9);
+        let (n, d, v) = (8, 4, 16);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let x = vec![-1i32; n];
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let out = cce_forward(&p, &KernelOptions::default());
+        assert_eq!(out.count, 0);
+        assert_eq!(out.loss, 0.0);
+    }
+}

@@ -1,0 +1,443 @@
+//! Native compute backend: the paper's kernel suite as cache-blocked,
+//! multi-threaded f32 CPU kernels — no XLA, no artifacts, no external
+//! crates.
+//!
+//! This is the "owns the hot path" counterpart to the AOT/PJRT [`crate::runtime`]:
+//!
+//! * [`lse`]      — CCE forward: per-token indexed dot `x_i · W[y_i]` fused
+//!   with a blockwise **online log-sum-exp** over `V_B`-column tiles
+//!   (running max + rescaled accumulator).  The `N×V` logit matrix is never
+//!   materialized; peak working memory is `O(N + threads·N_B·V_B)` floats.
+//! * [`backward`] — CCE backward: rematerializes one `(N_B, V_B)` logit
+//!   block at a time, applies the §4.3 **gradient filter** (skip blocks in
+//!   which every softmax entry is below `2^-12`) with optional
+//!   **vocabulary sorting** by token frequency, and accumulates `dE`/`dC`.
+//!   The indicator term of the target column is applied separately per
+//!   token, so filtering never drops the `−1[j=y_i]` contribution.
+//! * [`backend`]  — the [`Backend`] trait over loss implementations, with
+//!   [`NativeBackend`] (this module) and, behind the `pjrt` feature, a
+//!   `PjrtBackend` adapter over the artifact runtime.
+//! * this module — the materialized-logits [`baseline_forward`] /
+//!   [`baseline_forward_backward`] reference (the Table-1 "Baseline" row)
+//!   and the shared [`Problem`] / [`KernelOptions`] / output types.
+//!   The "Torch Tune (k chunks)" row is the blocked kernel run with
+//!   `N_B = ⌈N/k⌉`, `V_B = V`, and no filtering.
+//!
+//! Parallelism is `std::thread::scope` over contiguous row spans (each a
+//! whole number of `N_B` row-blocks), selected by `--threads` (default:
+//! available parallelism).  Kernel loops index by position on purpose — the
+//! blocked layouts don't map onto iterator chains cleanly.
+#![allow(clippy::needless_range_loop)]
+
+pub mod backend;
+pub mod backward;
+pub mod lse;
+
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{Backend, NativeBackend, NativeMethod};
+pub use backward::{cce_backward, frequency_permutation};
+pub use lse::cce_forward;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+
+/// One loss-layer problem instance: embeddings `E (N×D)`, classifier
+/// `C (V×D)`, labels `x (N)` with `-1` marking ignored tokens.
+#[derive(Debug, Clone, Copy)]
+pub struct Problem<'a> {
+    pub e: &'a [f32],
+    pub c: &'a [f32],
+    pub x: &'a [i32],
+    pub n: usize,
+    pub d: usize,
+    pub v: usize,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(
+        e: &'a [f32],
+        c: &'a [f32],
+        x: &'a [i32],
+        n: usize,
+        d: usize,
+        v: usize,
+    ) -> Result<Problem<'a>> {
+        let p = Problem { e, c, x, n, d, v };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Borrow a problem from `[e (N,D), c (V,D), x (N)]` host tensors — the
+    /// input layout of the loss artifacts and of `gen_loss_inputs`.
+    pub fn from_tensors(tensors: &'a [HostTensor]) -> Result<Problem<'a>> {
+        if tensors.len() != 3 {
+            bail!("expected [e, c, x] tensors, got {}", tensors.len());
+        }
+        let (et, ct, xt) = (&tensors[0], &tensors[1], &tensors[2]);
+        if et.shape.len() != 2 || ct.shape.len() != 2 {
+            bail!("e/c must be rank-2, got {:?} / {:?}", et.shape, ct.shape);
+        }
+        Problem::new(
+            et.as_f32()?,
+            ct.as_f32()?,
+            xt.as_i32()?,
+            et.shape[0],
+            et.shape[1],
+            ct.shape[0],
+        )
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.d == 0 || self.v == 0 {
+            bail!("empty problem: n={} d={} v={}", self.n, self.d, self.v);
+        }
+        if self.e.len() != self.n * self.d {
+            bail!("e has {} elements, want {}x{}", self.e.len(), self.n, self.d);
+        }
+        if self.c.len() != self.v * self.d {
+            bail!("c has {} elements, want {}x{}", self.c.len(), self.v, self.d);
+        }
+        if self.x.len() != self.n {
+            bail!("x has {} labels, want {}", self.x.len(), self.n);
+        }
+        if let Some(&bad) = self.x.iter().find(|&&t| t >= self.v as i32) {
+            bail!("label {bad} out of range for vocab {}", self.v);
+        }
+        Ok(())
+    }
+
+    /// Non-ignored token count (the loss denominator).
+    pub fn active_count(&self) -> usize {
+        self.x.iter().filter(|&&t| t >= 0).count()
+    }
+}
+
+/// Blocking / threading configuration of the native kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelOptions {
+    /// Rows per block (`N_B`).
+    pub n_block: usize,
+    /// Vocabulary columns per tile (`V_B`).
+    pub v_block: usize,
+    /// Worker threads (contiguous row spans).
+    pub threads: usize,
+    /// Apply the §4.3 gradient filter in the backward pass.
+    pub filter: bool,
+    /// Sort vocabulary blocks by token frequency in the backward pass.
+    pub sort: bool,
+}
+
+impl Default for KernelOptions {
+    fn default() -> KernelOptions {
+        KernelOptions {
+            // 32×128 f32 tiles: small enough that the eps-filter skips at
+            // whole-block granularity on realistic softmax sparsity, big
+            // enough that the dot-product loops dominate the fold overhead.
+            n_block: 32,
+            v_block: 128,
+            threads: default_threads(),
+            filter: true,
+            sort: true,
+        }
+    }
+}
+
+/// Default worker count: the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Forward-pass result.
+#[derive(Debug, Clone)]
+pub struct ForwardOut {
+    /// Mean NLL over non-ignored tokens.
+    pub loss: f64,
+    /// Non-ignored token count.
+    pub count: usize,
+    /// Per-row log-sum-exp (length N) — consumed by the backward pass.
+    pub lse: Vec<f32>,
+    /// Per-row target logit `e_i · c_{x_i}` (0 where ignored).
+    pub target_logit: Vec<f32>,
+    /// Peak working memory allocated by the kernel: the `O(N)` lse/target
+    /// vectors plus the per-thread logit block buffers.  Inputs excluded.
+    pub workspace_bytes: usize,
+}
+
+/// Backward-pass result.
+#[derive(Debug, Clone)]
+pub struct BackwardOut {
+    /// `dE` — gradient of the mean loss wrt the embeddings (N×D).
+    pub d_e: Vec<f32>,
+    /// `dC` — gradient wrt the classifier (V×D).
+    pub d_c: Vec<f32>,
+    pub stats: FilterStats,
+    /// Peak working memory (logit block buffers + per-thread `dC` shards).
+    pub workspace_bytes: usize,
+}
+
+/// Gradient-filter accounting, comparable to
+/// [`crate::sparsity::BlockFilterModel`]'s predictions.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FilterStats {
+    /// `(N_B, V_B)` blocks visited.
+    pub blocks_total: u64,
+    /// Blocks whose accumulation matmuls were skipped (all softmax entries
+    /// of active rows below the `2^-12` threshold).
+    pub blocks_skipped: u64,
+    /// Softmax entries at or above the threshold (over active rows).
+    pub sig_entries: u64,
+}
+
+impl FilterStats {
+    /// Fraction of blocks that ran their accumulation matmuls.
+    pub fn survival(&self) -> f64 {
+        if self.blocks_total == 0 {
+            return 1.0;
+        }
+        1.0 - self.blocks_skipped as f64 / self.blocks_total as f64
+    }
+
+    pub fn merge(&mut self, other: &FilterStats) {
+        self.blocks_total += other.blocks_total;
+        self.blocks_skipped += other.blocks_skipped;
+        self.sig_entries += other.sig_entries;
+    }
+}
+
+/// Ceiling division (formulated to be toolchain-neutral: no `div_ceil`
+/// MSRV requirement, no `(a + b - 1) / b` lint pattern).
+pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
+    let b = b.max(1);
+    a / b + usize::from(a % b != 0)
+}
+
+/// Rows per worker span: a whole number of `n_block` row-blocks, sized so
+/// at most `threads` spans cover `n` rows.
+pub(crate) fn span_rows(n: usize, n_block: usize, threads: usize) -> usize {
+    let nb = n_block.clamp(1, n.max(1));
+    let per = ceil_div(ceil_div(n, nb), threads.max(1));
+    (per.max(1)) * nb
+}
+
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+// ---------------------------------------------------------------- baseline
+
+/// Materialized-logits reference forward (the Table-1 "Baseline" row): the
+/// full `N×V` logit matrix is allocated, which is exactly the allocation
+/// CCE removes.  Multi-threaded over row spans for a fair time comparison.
+pub fn baseline_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
+    let (logits, fwd) = baseline_logits_and_forward(p, opts);
+    drop(logits);
+    fwd
+}
+
+/// Baseline forward + backward from the stored logits.
+pub fn baseline_forward_backward(p: &Problem, opts: &KernelOptions) -> (ForwardOut, BackwardOut) {
+    let (logits, fwd) = baseline_logits_and_forward(p, opts);
+    let (n, d, v) = (p.n, p.d, p.v);
+    let count = fwd.count;
+    let inv_count = if count == 0 { 0.0f32 } else { 1.0 / count as f32 };
+    let mut d_e = vec![0f32; n * d];
+    let mut d_c = vec![0f32; v * d];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    let lse = &fwd.lse;
+    let shards: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = d_e
+            .chunks_mut(span * d)
+            .enumerate()
+            .map(|(ti, de_chunk)| {
+                let row0 = ti * span;
+                let logits = &logits;
+                scope.spawn(move || {
+                    let rows = de_chunk.len() / d;
+                    let mut dc_local = vec![0f32; v * d];
+                    for r in 0..rows {
+                        let i = row0 + r;
+                        if p.x[i] < 0 {
+                            continue;
+                        }
+                        let t = p.x[i] as usize;
+                        let e_row = &p.e[i * d..(i + 1) * d];
+                        let de_row = &mut de_chunk[r * d..(r + 1) * d];
+                        for j in 0..v {
+                            let z = logits[i * v + j];
+                            let mut g = (z - lse[i]).exp() * inv_count;
+                            if j == t {
+                                g -= inv_count;
+                            }
+                            let c_row = &p.c[j * d..(j + 1) * d];
+                            let dc_row = &mut dc_local[j * d..(j + 1) * d];
+                            for k in 0..d {
+                                de_row[k] += g * c_row[k];
+                                dc_row[k] += g * e_row[k];
+                            }
+                        }
+                    }
+                    dc_local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("baseline backward worker")).collect()
+    });
+    let n_shards = shards.len();
+    for shard in shards {
+        for (acc, val) in d_c.iter_mut().zip(&shard) {
+            *acc += *val;
+        }
+    }
+    let workspace = logits.len() * 4 + n_shards * v * d * 4;
+    (
+        fwd,
+        BackwardOut {
+            d_e,
+            d_c,
+            stats: FilterStats::default(),
+            workspace_bytes: workspace,
+        },
+    )
+}
+
+fn baseline_logits_and_forward(p: &Problem, opts: &KernelOptions) -> (Vec<f32>, ForwardOut) {
+    let (n, d, v) = (p.n, p.d, p.v);
+    let mut logits = vec![0f32; n * v];
+    let mut lse = vec![0f32; n];
+    let mut tgt = vec![0f32; n];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = logits
+            .chunks_mut(span * v)
+            .zip(lse.chunks_mut(span))
+            .zip(tgt.chunks_mut(span))
+            .enumerate()
+            .map(|(ti, ((lchunk, lse_chunk), tgt_chunk))| {
+                let row0 = ti * span;
+                scope.spawn(move || {
+                    let rows = lse_chunk.len();
+                    for r in 0..rows {
+                        let i = row0 + r;
+                        let e_row = &p.e[i * d..(i + 1) * d];
+                        let z_row = &mut lchunk[r * v..(r + 1) * v];
+                        for j in 0..v {
+                            z_row[j] = dot(e_row, &p.c[j * d..(j + 1) * d]);
+                        }
+                        let m = z_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                        let s: f32 = z_row.iter().map(|&z| (z - m).exp()).sum();
+                        lse_chunk[r] = m + s.ln();
+                        if p.x[i] >= 0 {
+                            tgt_chunk[r] = z_row[p.x[i] as usize];
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("baseline forward worker");
+        }
+    });
+    let count = p.active_count();
+    let loss_sum: f64 = p
+        .x
+        .iter()
+        .enumerate()
+        .filter(|(_, &t)| t >= 0)
+        .map(|(i, _)| (lse[i] - tgt[i]) as f64)
+        .sum();
+    let loss = if count == 0 { 0.0 } else { loss_sum / count as f64 };
+    let workspace = logits.len() * 4 + n * 8;
+    (
+        logits,
+        ForwardOut { loss, count, lse, target_logit: tgt, workspace_bytes: workspace },
+    )
+}
+
+/// Deterministic random problem data for unit tests (shared across the
+/// exec submodules' test modules).
+#[cfg(test)]
+pub(crate) fn random_problem(
+    rng: &mut crate::util::rng::Rng,
+    n: usize,
+    d: usize,
+    v: usize,
+    ignored_frac: f64,
+) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    let e: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.5).collect();
+    let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.5).collect();
+    let x: Vec<i32> = (0..n)
+        .map(|_| {
+            if rng.bool(ignored_frac) {
+                -1
+            } else {
+                rng.usize_below(v) as i32
+            }
+        })
+        .collect();
+    (e, c, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn problem_validation() {
+        let e = vec![0f32; 8];
+        let c = vec![0f32; 12];
+        let x = vec![0i32, 1];
+        assert!(Problem::new(&e, &c, &x, 2, 4, 3).is_ok());
+        assert!(Problem::new(&e, &c, &x, 2, 4, 4).is_err()); // c too small
+        assert!(Problem::new(&e, &c, &[0, 3], 2, 4, 3).is_err()); // label oob
+        assert!(Problem::new(&e, &c, &[0, -1], 2, 4, 3).is_ok()); // ignored ok
+    }
+
+    #[test]
+    fn baseline_uniform_logits_give_ln_v() {
+        // Zero embeddings => uniform softmax => loss = ln(V) exactly.
+        let (n, d, v) = (16, 8, 32);
+        let e = vec![0f32; n * d];
+        let mut rng = Rng::new(1);
+        let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32).collect();
+        let x: Vec<i32> = (0..n).map(|i| (i % v) as i32).collect();
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let fwd = baseline_forward(&p, &KernelOptions::default());
+        assert!((fwd.loss - (v as f64).ln()).abs() < 1e-5, "{}", fwd.loss);
+        assert_eq!(fwd.count, n);
+    }
+
+    #[test]
+    fn baseline_grads_sum_to_zero_over_vocab() {
+        // Sum_j dC_j = sum_i (sum_j p_ij - 1) e_i / count = 0.
+        let mut rng = Rng::new(2);
+        let (n, d, v) = (12, 6, 20);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.25);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let (_, bwd) = baseline_forward_backward(&p, &KernelOptions::default());
+        for k in 0..d {
+            let col_sum: f32 = (0..v).map(|j| bwd.d_c[j * d + k]).sum();
+            assert!(col_sum.abs() < 1e-4, "col {k}: {col_sum}");
+        }
+        // Ignored rows get exactly zero dE.
+        for (i, &t) in x.iter().enumerate() {
+            if t < 0 {
+                assert!(bwd.d_e[i * d..(i + 1) * d].iter().all(|&g| g == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn span_rows_covers_and_aligns() {
+        assert_eq!(span_rows(1024, 64, 4), 256);
+        assert_eq!(span_rows(100, 64, 4), 64); // 2 blocks over 4 threads
+        assert_eq!(span_rows(64, 64, 1), 64);
+        assert!(span_rows(7, 64, 3) >= 7); // n_block clamped to n
+        let span = span_rows(1000, 64, 3);
+        assert_eq!(span % 64, 0);
+        assert!(span * 3 >= 1000);
+    }
+}

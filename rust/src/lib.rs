@@ -2,32 +2,52 @@
 //!
 //! This crate is Layer 3 of the reproduction of *"Cut Your Losses in
 //! Large-Vocabulary Language Models"* (Wijmans et al., ICLR 2025): the Rust
-//! coordinator that owns the training event loop, the data pipeline, and the
-//! benchmark harness.  The compute (Layer 2 JAX transformer + Layer 1 Pallas
-//! CCE kernels) is AOT-compiled to HLO text by `python/compile/aot.py` and
-//! executed through the PJRT C API ([`runtime`]).  Python never runs on the
-//! training path.
+//! coordinator that owns the training event loop, the data pipeline, the
+//! benchmark harness — and, since the `exec` backend landed, the hot path
+//! itself.  Compute runs through the [`exec::Backend`] trait:
+//!
+//! * **native** ([`exec`]) — cache-blocked, multi-threaded f32 kernels
+//!   implementing the paper's suite (indexed matmul + online LSE forward;
+//!   filtered/sorted blockwise backward) directly in Rust.  Zero
+//!   artifacts, zero shared libraries; the default in plain builds.
+//! * **pjrt** ([`runtime`], behind the `pjrt` cargo feature) — the Layer 2
+//!   JAX transformer + Layer 1 Pallas CCE kernels, AOT-compiled to HLO
+//!   text by `python/compile/aot.py` and executed through the PJRT C API.
+//!   Python never runs on the training path.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
-//! * [`runtime`]   — PJRT client, artifact manifest, executable cache,
-//!   host tensors ⇄ XLA literals.
+//! * [`exec`]      — native compute backend: blocked online-LSE forward,
+//!   §4.3 filtered/sorted backward, baseline/chunked references, the
+//!   `Backend` trait (`forward`, `forward_backward`, `name`), selected by
+//!   `--backend native|pjrt` with `--threads N` workers.
+//! * [`runtime`]   — artifact manifest + host tensors; with the `pjrt`
+//!   feature also the PJRT client and executable cache.
 //! * [`tokenizer`] — from-scratch BPE (vocabulary construction, paper §3.1).
 //! * [`data`]      — synthetic corpora, packing, masking, batch iterators.
-//! * [`coordinator`] — the training orchestrator: microbatch scheduling,
-//!   gradient-accumulation driving, checkpoints, metrics, config.
+//! * [`coordinator`] — the training orchestrators: the artifact-driven
+//!   [`coordinator::Trainer`] (pjrt) and the zero-artifact
+//!   [`coordinator::NativeTrainer`] (bag-of-context head over the native
+//!   kernels), plus checkpoints, metrics, config.
 //! * [`memmodel`]  — analytic GPU-memory model regenerating the paper's
 //!   memory tables (Fig. 1, Tables 1/A1/A3/A4).
 //! * [`sparsity`]  — softmax rank statistics & gradient-filter accounting
-//!   (Fig. 3 and the filtering ablations).
+//!   (Fig. 3 and the filtering ablations); `BlockFilterModel` predicts the
+//!   backward speedup that `cce table1 --backend native` measures.
 //! * [`bench`]     — the table/figure harnesses and a from-scratch timing
-//!   framework (no external bench crate).
+//!   framework (no external bench crate); `table1 --json` emits
+//!   `BENCH_table1.json` for cross-PR perf tracking.
 //! * [`util`]      — substrates built from scratch for the offline
 //!   environment: JSON, CLI parsing, RNG, property testing, stats.
+//!
+//! The only dependencies are the two vendored crates under `rust/vendor/`:
+//! an offline `anyhow` stand-in and (pjrt builds only) a link-free `xla`
+//! API stub that deployments replace with the real bindings.
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod memmodel;
 pub mod runtime;
 pub mod sparsity;

@@ -1,25 +1,36 @@
 //! `cce` — the launcher CLI for the Cut Cross-Entropy reproduction.
 //!
 //! ```text
-//! cce train   [--config cfg.json] [--method cce] [--steps N] ...
-//! cce eval    --checkpoint path [--tag e2e]
-//! cce table1  [--ignored 0.35] [--budget-ms 4000] [--check]
+//! cce train   [--backend native|pjrt] [--method cce] [--steps N] ...
+//! cce eval    --checkpoint path [--backend native|pjrt] [--tag e2e]
+//! cce table1  [--backend native|pjrt] [--json BENCH_table1.json]
+//!             [--n 1024 --d 256 --v 4096] [--threads N] [--check]
 //! cce tableA1 (= table1 with the Appendix B ignored-token filter)
 //! cce tableA2 / tableA3
 //! cce fig1    [--tokens 65536] [--gpus 16] [--gpu-gb 75]
 //! cce fig3    [--checkpoint path | --warm-steps N]
 //! cce fig4 / fig5 [--steps N] [--tag e2e|tiny]
-//! cce figA1   [--budget-ms 2000]
-//! cce info    — manifest + runtime summary
+//! cce figA1   [--backend native|pjrt] [--budget-ms 2000]
+//! cce info    — backend + manifest summary
 //! ```
+//!
+//! `--backend native` (the default in builds without the `pjrt` feature)
+//! runs the multi-threaded Rust kernels with zero artifacts; `--backend
+//! pjrt` replays the AOT HLO artifacts and needs the `pjrt` feature plus
+//! `make artifacts`.  `--threads N` sizes the native worker pool (default:
+//! available parallelism).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use cce::bench;
-use cce::coordinator::{Checkpoint, CorpusKind, Metrics, RunConfig, TrainState,
-                       Trainer};
-use cce::runtime;
+use cce::coordinator::{Metrics, NativeModelConfig, NativeTrainer, RunConfig};
+use cce::exec::{self, KernelOptions};
 use cce::util::cli::Args;
+
+#[cfg(feature = "pjrt")]
+use cce::coordinator::{Checkpoint, CorpusKind, TrainState, Trainer};
+#[cfg(feature = "pjrt")]
+use cce::runtime;
 
 fn main() {
     if let Err(err) = run() {
@@ -31,20 +42,66 @@ fn main() {
 fn usage() -> ! {
     eprintln!(
         "usage: cce <command> [options]\n\ncommands:\n  \
-         train    run a training job (--config/--method/--steps/--corpus/...)\n  \
-         eval     evaluate a checkpoint (--checkpoint)\n  \
-         table1   Table 1: memory & time per method\n  \
+         train    run a training job (--backend/--method/--steps/--corpus/...)\n  \
+         eval     evaluate a checkpoint (--checkpoint) [--backend]\n  \
+         table1   Table 1: memory & time per method [--backend/--json]\n  \
          tableA1  Table A1: Table 1 with ignored tokens removed\n  \
-         tableA2  Table A2: backward-pass breakdown\n  \
+         tableA2  Table A2: backward-pass breakdown (pjrt)\n  \
          tableA3  Table A3: additional models memory\n  \
          fig1     Fig. 1 / Table A4: model-zoo memory & max batch\n  \
-         fig3     Fig. 3: softmax rank probabilities (trained model)\n  \
-         fig4     Fig. 4: fine-tune loss curves, cce vs fused\n  \
-         fig5     Fig. 5: pretrain val perplexity, cce_kahan_fullc vs fused\n  \
-         figA1    Figs. A1/A2: time/memory vs token count\n  \
-         info     manifest summary"
+         fig3     Fig. 3: softmax rank probabilities (pjrt)\n  \
+         fig4     Fig. 4: fine-tune loss curves, cce vs fused (pjrt)\n  \
+         fig5     Fig. 5: pretrain val perplexity (pjrt)\n  \
+         figA1    Figs. A1/A2: time/memory vs token count [--backend]\n  \
+         info     backend + manifest summary"
     );
     std::process::exit(2);
+}
+
+/// Which compute backend a command should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BackendChoice {
+    Native,
+    Pjrt,
+}
+
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    let default = if cfg!(feature = "pjrt") { "pjrt" } else { "native" };
+    match args.get("backend", default.to_string())?.as_str() {
+        "native" => Ok(BackendChoice::Native),
+        "pjrt" => {
+            if cfg!(feature = "pjrt") {
+                Ok(BackendChoice::Pjrt)
+            } else {
+                bail!(
+                    "this binary was built without the `pjrt` feature; \
+                     rebuild with `cargo build --features pjrt` (needs the \
+                     real xla bindings) or use --backend native"
+                )
+            }
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// Native kernel options from the shared CLI flags.
+fn kernel_options(args: &Args) -> Result<KernelOptions> {
+    let defaults = KernelOptions::default();
+    Ok(KernelOptions {
+        threads: args.get("threads", exec::default_threads())?,
+        n_block: args.get("n-block", defaults.n_block)?,
+        v_block: args.get("v-block", defaults.v_block)?,
+        ..defaults
+    })
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> Result<()> {
+    bail!(
+        "`cce {cmd}` drives AOT artifacts and needs the `pjrt` feature \
+         (cargo build --features pjrt, plus `make artifacts`); the native \
+         backend covers train/table1/figA1/info"
+    )
 }
 
 fn run() -> Result<()> {
@@ -75,7 +132,7 @@ fn run() -> Result<()> {
         "fig4" => cmd_curves(&args, true),
         "fig5" => cmd_curves(&args, false),
         "figA1" | "figa1" | "figA2" | "figa2" => cmd_sweep(&args),
-        "info" => cmd_info(),
+        "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command {other:?}\n");
             usage()
@@ -83,7 +140,73 @@ fn run() -> Result<()> {
     }
 }
 
+// ------------------------------------------------------------------- train
+
 fn cmd_train(args: &Args) -> Result<()> {
+    match backend_choice(args)? {
+        BackendChoice::Native => cmd_train_native(args),
+        BackendChoice::Pjrt => cmd_train_pjrt(args),
+    }
+}
+
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    cfg.vocab_size = args.get("vocab-size", cfg.vocab_size.min(4096))?;
+    let model = NativeModelConfig {
+        d_model: args.get("dim", NativeModelConfig::default().d_model)?,
+        window: args.get("window", NativeModelConfig::default().window)?,
+        lr: args.get("lr", NativeModelConfig::default().lr)?,
+        batch: args.get("batch", NativeModelConfig::default().batch)?,
+        seq_len: args.get("seq", NativeModelConfig::default().seq_len)?,
+    };
+    let opts = kernel_options(args)?;
+    let trainer = NativeTrainer::build(cfg.clone(), model, opts)?;
+    eprintln!(
+        "[cce] backend native ({} threads) | bag-of-context head d={} | method {}",
+        opts.threads, model.d_model, cfg.method
+    );
+    eprintln!(
+        "[cce] corpus: {} train sequences, {} val | vocab {} | ignored {:.1}%",
+        trainer.dataset.train.len(),
+        trainer.dataset.val.len(),
+        trainer.tokenizer.vocab_size(),
+        100.0 * trainer.dataset.ignored_fraction()
+    );
+    let state = match args.opt("checkpoint") {
+        Some(path) => cce::coordinator::NativeState::from_checkpoint(
+            cce::coordinator::Checkpoint::load(path)?,
+            trainer.vocab,
+            trainer.model.d_model,
+        )?,
+        None => trainer.init(cfg.seed),
+    };
+    let mut metrics = Metrics::with_dir(&cfg.out_dir)?;
+    let state = trainer.train(state, &mut metrics)?;
+    let final_val = trainer.evaluate(&state)?;
+    metrics.log_eval(state.step, final_val);
+    metrics.write_csv(std::path::Path::new(&cfg.out_dir).join("loss_curve.csv"))?;
+    let ckpt_path = std::path::Path::new(&cfg.out_dir).join("final.ckpt");
+    trainer.save_checkpoint(&state, &ckpt_path)?;
+    std::fs::write(
+        std::path::Path::new(&cfg.out_dir).join("config.json"),
+        cfg.to_json().to_string_pretty(),
+    )?;
+    println!(
+        "[cce] done: step {} val_loss {final_val:.4} ppl {:.2} mean {:.0} tok/s -> {}",
+        state.step,
+        final_val.exp(),
+        metrics.mean_throughput(),
+        ckpt_path.display()
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_train_pjrt(args: &Args) -> Result<()> {
     let mut cfg = match args.opt("config") {
         Some(path) => RunConfig::load(path)?,
         None => RunConfig::default(),
@@ -130,7 +253,45 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_pjrt(_args: &Args) -> Result<()> {
+    pjrt_unavailable("train --backend pjrt")
+}
+
+// -------------------------------------------------------------------- eval
+
 fn cmd_eval(args: &Args) -> Result<()> {
+    match backend_choice(args)? {
+        BackendChoice::Native => cmd_eval_native(args),
+        BackendChoice::Pjrt => cmd_eval_pjrt(args),
+    }
+}
+
+fn cmd_eval_native(args: &Args) -> Result<()> {
+    let path = args.require("checkpoint")?.to_string();
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(args)?;
+    cfg.vocab_size = args.get("vocab-size", cfg.vocab_size.min(4096))?;
+    let model = NativeModelConfig {
+        d_model: args.get("dim", NativeModelConfig::default().d_model)?,
+        window: args.get("window", NativeModelConfig::default().window)?,
+        lr: args.get("lr", NativeModelConfig::default().lr)?,
+        batch: args.get("batch", NativeModelConfig::default().batch)?,
+        seq_len: args.get("seq", NativeModelConfig::default().seq_len)?,
+    };
+    let trainer = NativeTrainer::build(cfg, model, kernel_options(args)?)?;
+    let state = cce::coordinator::NativeState::from_checkpoint(
+        cce::coordinator::Checkpoint::load(&path)?,
+        trainer.vocab,
+        trainer.model.d_model,
+    )?;
+    let val = trainer.evaluate(&state)?;
+    println!("val_loss {val:.4}  perplexity {:.2}  (step {})", val.exp(), state.step);
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_eval_pjrt(args: &Args) -> Result<()> {
     let path = args.require("checkpoint")?.to_string();
     let mut cfg = RunConfig::default();
     cfg.apply_args(args)?;
@@ -142,16 +303,60 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval_pjrt(_args: &Args) -> Result<()> {
+    pjrt_unavailable("eval --backend pjrt")
+}
+
+// ------------------------------------------------------------------ table1
+
 fn cmd_table1(args: &Args, ignored: f64) -> Result<()> {
-    let rt = runtime::open_default()?;
-    let budget = args.get("budget-ms", 4000u64)?;
-    let rows = bench::table1::run(&rt, ignored, budget)?;
-    let title = if ignored > 0.0 {
+    let title_suffix = if ignored > 0.0 {
         format!("Table A1: Table 1 with {:.0}% ignored tokens", ignored * 100.0)
     } else {
         "Table 1: memory & time per cross-entropy implementation".to_string()
     };
-    bench::table1::print(&rows, &title);
+    match backend_choice(args)? {
+        BackendChoice::Native => {
+            let n = args.get("n", 1024usize)?;
+            let d = args.get("d", 256usize)?;
+            let v = args.get("v", 4096usize)?;
+            let budget = args.get("budget-ms", 2000u64)?;
+            let seed = args.get("seed", 0u64)?;
+            let opts = kernel_options(args)?;
+            let rows = bench::table1::run_native(n, d, v, ignored, budget, opts, seed)?;
+            bench::table1::print(&rows, &format!("{title_suffix} — native, N={n} D={d} V={v}"));
+            if let Some(path) = args.opt("json") {
+                bench::table1::write_json(&rows, (n, d, v), opts.threads, path)?;
+                println!("  wrote {path}");
+            }
+            if args.flag("check") {
+                bench::table1::check_native(&rows)?;
+                println!("\n  [check] native Table 1 claims hold (incl. filter speedup)");
+            }
+            Ok(())
+        }
+        BackendChoice::Pjrt => cmd_table1_pjrt(args, ignored, &title_suffix),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_table1_pjrt(args: &Args, ignored: f64, title: &str) -> Result<()> {
+    let rt = runtime::open_default()?;
+    let budget = args.get("budget-ms", 4000u64)?;
+    let rows = bench::table1::run(&rt, ignored, budget)?;
+    bench::table1::print(&rows, title);
+    if let Some(path) = args.opt("json") {
+        let bench_meta = rt.manifest.raw_meta.get("bench");
+        let get = |k: &str| -> usize {
+            bench_meta
+                .and_then(|b| b.get(k))
+                .and_then(|j| j.as_i64())
+                .unwrap_or(0) as usize
+        };
+        bench::table1::write_json(&rows, (get("n"), get("d"), get("v")), 1, path)?;
+        println!("  wrote {path}");
+    }
     if args.flag("check") {
         bench::table1::check(&rows)?;
         println!("\n  [check] all Table 1 shape claims hold");
@@ -159,6 +364,14 @@ fn cmd_table1(args: &Args, ignored: f64) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_table1_pjrt(_args: &Args, _ignored: f64, _title: &str) -> Result<()> {
+    pjrt_unavailable("table1 --backend pjrt")
+}
+
+// ------------------------------------------------- artifact-only harnesses
+
+#[cfg(feature = "pjrt")]
 fn cmd_tablea2(args: &Args) -> Result<()> {
     let rt = runtime::open_default()?;
     let budget = args.get("budget-ms", 4000u64)?;
@@ -167,6 +380,12 @@ fn cmd_tablea2(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_tablea2(_args: &Args) -> Result<()> {
+    pjrt_unavailable("tableA2")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_fig3(args: &Args) -> Result<()> {
     let rt = runtime::open_default()?;
     let tag = args.get("tag", "e2e".to_string())?;
@@ -181,6 +400,12 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_fig3(_args: &Args) -> Result<()> {
+    pjrt_unavailable("fig3")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_curves(args: &Args, fig4: bool) -> Result<()> {
     let rt = runtime::open_default()?;
     let tag = args.get("tag", "e2e".to_string())?;
@@ -207,7 +432,44 @@ fn cmd_curves(args: &Args, fig4: bool) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_curves(args: &Args, fig4: bool) -> Result<()> {
+    let _ = args;
+    pjrt_unavailable(if fig4 { "fig4" } else { "fig5" })
+}
+
+// ------------------------------------------------------------------- sweep
+
 fn cmd_sweep(args: &Args) -> Result<()> {
+    match backend_choice(args)? {
+        BackendChoice::Native => {
+            let d = args.get("d", 256usize)?;
+            let v = args.get("v", 4096usize)?;
+            let budget = args.get("budget-ms", 1000u64)?;
+            let seed = args.get("seed", 0u64)?;
+            let ns: Vec<usize> = match args.opt("ns") {
+                Some(list) => list
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("--ns: {e}"))?,
+                None => vec![256, 512, 1024, 2048],
+            };
+            let points =
+                bench::sweep::run_native(d, v, &ns, budget, kernel_options(args)?, seed)?;
+            bench::sweep::print(&points, args.opt("csv"))?;
+            if args.flag("check") {
+                bench::sweep::check(&points)?;
+                println!("\n  [check] sweep scaling claims hold");
+            }
+            Ok(())
+        }
+        BackendChoice::Pjrt => cmd_sweep_pjrt(args),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_sweep_pjrt(args: &Args) -> Result<()> {
     let rt = runtime::open_default()?;
     let budget = args.get("budget-ms", 2000u64)?;
     let points = bench::sweep::run(&rt, budget)?;
@@ -219,10 +481,40 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
-    let rt = runtime::open_default()?;
-    println!("platform: {}", rt.platform());
-    println!("artifacts: {}", rt.manifest.artifacts.len());
+#[cfg(not(feature = "pjrt"))]
+fn cmd_sweep_pjrt(_args: &Args) -> Result<()> {
+    pjrt_unavailable("figA1 --backend pjrt")
+}
+
+// -------------------------------------------------------------------- info
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let opts = kernel_options(args)?;
+    println!("native backend: available");
+    println!(
+        "  threads: {} (default: available parallelism = {})",
+        opts.threads,
+        exec::default_threads()
+    );
+    println!("  blocking: N_B={} V_B={}", opts.n_block, opts.v_block);
+    println!(
+        "  methods: baseline, chunked<k>, cce, cce_no_filter, cce_no_sort"
+    );
+    print_pjrt_info()
+}
+
+#[cfg(feature = "pjrt")]
+fn print_pjrt_info() -> Result<()> {
+    println!("pjrt backend: compiled in");
+    let rt = match runtime::open_default() {
+        Ok(rt) => rt,
+        Err(err) => {
+            println!("  (artifacts unavailable: {err:#})");
+            return Ok(());
+        }
+    };
+    println!("  platform: {}", rt.platform());
+    println!("  artifacts: {}", rt.manifest.artifacts.len());
     for (tag, m) in &rt.manifest.models {
         println!(
             "  model {tag}: {} params, batch {}x{}x{} (accum x batch x seq), vocab {}",
@@ -242,5 +534,13 @@ fn cmd_info() -> Result<()> {
     for (kind, count) in kinds {
         println!("  {kind}: {count} artifacts");
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_pjrt_info() -> Result<()> {
+    println!(
+        "pjrt backend: not compiled (enable with `cargo build --features pjrt`)"
+    );
     Ok(())
 }

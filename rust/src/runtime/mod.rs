@@ -1,17 +1,23 @@
-//! Runtime layer: PJRT client + artifact manifest + host tensors.
+//! Runtime layer: artifact manifest + host tensors, plus (behind the
+//! `pjrt` feature) the PJRT client that executes AOT artifacts.
 //!
-//! This is the only module that touches the `xla` crate.  Everything above
+//! [`client`] is the only module in the crate that touches the `xla` crate,
+//! and it only exists when the `pjrt` feature is enabled.  Everything above
 //! it (coordinator, benches, examples) speaks [`HostTensor`]s and artifact
-//! names.
+//! names; without the feature, the native backend ([`crate::exec`]) is the
+//! compute path and nothing here needs a shared library.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime};
 pub use manifest::{ArtifactEntry, Manifest, ModelMeta, ParamSpec, Spec};
 pub use tensor::{DType, Data, HostTensor};
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// Resolve the artifact directory: `CCE_ARTIFACTS` env var or `./artifacts`.
@@ -21,7 +27,8 @@ pub fn artifact_dir() -> std::path::PathBuf {
         .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
 }
 
-/// Open the default runtime (most binaries start here).
+/// Open the default runtime (most PJRT-backed binaries start here).
+#[cfg(feature = "pjrt")]
 pub fn open_default() -> Result<Runtime> {
     Runtime::new(artifact_dir())
 }

@@ -165,7 +165,9 @@ impl HostTensor {
     }
 
     // ------------------------------------------------------ literal bridge
+    // (only meaningful when the PJRT client is compiled in)
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -177,6 +179,7 @@ impl HostTensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

@@ -133,8 +133,16 @@ impl BlockFilterModel {
     /// computing every block: `1 / survival`, capped by the non-matmul work
     /// fraction `overhead` (the logit rematerialization is never skipped).
     pub fn predicted_speedup(&self, survival: f64, overhead: f64) -> f64 {
-        1.0 / (overhead + (1.0 - overhead) * survival)
+        speedup_at_survival(survival, overhead)
     }
+}
+
+/// Amdahl form of the filter speedup at a given block-survival fraction:
+/// `1 / (overhead + (1 − overhead)·survival)`.  Used both for the model's
+/// predictions and to convert a *measured* survival (from
+/// `exec::FilterStats`) into an expected wall-clock gain.
+pub fn speedup_at_survival(survival: f64, overhead: f64) -> f64 {
+    1.0 / (overhead + (1.0 - overhead) * survival)
 }
 
 #[cfg(test)]

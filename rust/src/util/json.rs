@@ -118,6 +118,9 @@ impl Json {
 
     // ------------------------------------------------------------ writing
 
+    // An inherent `to_string` (rather than a Display impl) is deliberate:
+    // serialization is an explicit act here, not formatting.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);

@@ -1,23 +1,26 @@
-//! Integration tests of the bench harness itself, on the tiny artifacts.
+//! Integration tests of the bench harness itself.
+//!
+//! The artifact-timing path (`time_artifact` on the tiny artifacts) lives
+//! in tests/runtime.rs behind the `pjrt` feature; everything here runs with
+//! no artifacts and no shared libraries.
 
 use std::time::Duration;
 
-use cce::bench::harness::{gen_input, time_artifact};
-use cce::runtime::{self, DType, Spec};
+use cce::bench::harness::{gen_input, gen_loss_inputs, time_fn};
+use cce::runtime::{DType, Spec};
 use cce::util::rng::Rng;
 
 #[test]
-fn time_artifact_on_tiny_loss() {
-    let rt = runtime::open_default().expect("run `make artifacts` first");
-    let res = time_artifact(
-        &rt,
-        "loss_fwd_cce_n128_d64_v512_tiny",
-        0.0,
-        Duration::from_millis(200),
-    )
-    .unwrap();
-    assert!(res.summary.n >= 3);
-    assert!(res.mean() > 0.0 && res.mean() < 5.0);
+fn time_fn_measures_and_summarizes() {
+    let mut calls = 0u32;
+    let res = time_fn("spin", Duration::from_millis(20), || {
+        calls += 1;
+        std::hint::black_box((0..2000).sum::<u64>());
+    });
+    assert!(calls >= 1);
+    assert_eq!(res.name, "spin");
+    assert!(res.mean() >= 0.0 && res.mean() < 1.0);
+    assert_eq!(res.summary.n as u32, calls);
 }
 
 #[test]
@@ -28,6 +31,29 @@ fn ignored_fraction_flows_into_labels() {
     let masked = t.as_i32().unwrap().iter().filter(|&&v| v < 0).count();
     let frac = masked as f64 / 4096.0;
     assert!((frac - 0.5).abs() < 0.05, "{frac}");
+}
+
+#[test]
+fn loss_inputs_have_zipf_peaked_softmax_structure() {
+    // The trained-like generator must produce the sparsity the gradient
+    // filter exploits: Zipf-headed labels and embeddings aligned with
+    // their target's classifier row.
+    let mut rng = Rng::new(1);
+    let (n, d, v) = (512usize, 32usize, 2048usize);
+    let inputs = gen_loss_inputs(n, d, v, &mut rng, 0.1);
+    assert_eq!(inputs[0].shape, vec![n, d]);
+    assert_eq!(inputs[1].shape, vec![v, d]);
+    assert_eq!(inputs[2].shape, vec![n]);
+    let x = inputs[2].as_i32().unwrap();
+    let low_rank = x.iter().filter(|&&t| (0..64).contains(&t)).count();
+    let active = x.iter().filter(|&&t| t >= 0).count();
+    assert!(active > n / 2);
+    // Zipf(1.4) head: the top 64 of 2048 token ids carry ~85% of the
+    // label mass, so a strict majority is a safe floor.
+    assert!(
+        low_rank * 2 > active,
+        "labels not Zipf-headed: {low_rank}/{active}"
+    );
 }
 
 #[test]

@@ -1,0 +1,249 @@
+//! Integration + property tests for the native CCE backend: numerical
+//! equivalence with the materialized baseline, gradient-filter error
+//! bounds, finite-difference gradient checks, and the O(N·D + N_B·V_B)
+//! working-memory claim.  Runs with zero artifacts.
+
+use cce::exec::{
+    baseline_forward, baseline_forward_backward, cce_backward, cce_forward, Backend,
+    KernelOptions, NativeBackend, Problem,
+};
+use cce::sparsity::FILTER_EPS;
+use cce::util::prop;
+use cce::util::rng::Rng;
+
+fn random_problem(
+    rng: &mut Rng,
+    n: usize,
+    d: usize,
+    v: usize,
+    ignored_frac: f64,
+) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    let e: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.5).collect();
+    let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.5).collect();
+    let x: Vec<i32> = (0..n)
+        .map(|_| if rng.bool(ignored_frac) { -1 } else { rng.usize_below(v) as i32 })
+        .collect();
+    (e, c, x)
+}
+
+fn rand_opts(rng: &mut Rng, filter: bool, sort: bool) -> KernelOptions {
+    KernelOptions {
+        n_block: 1 + rng.usize_below(48),
+        v_block: 1 + rng.usize_below(96),
+        threads: 1 + rng.usize_below(4),
+        filter,
+        sort,
+    }
+}
+
+#[test]
+fn prop_native_forward_matches_baseline() {
+    // Native CCE forward loss ≡ materialized-baseline loss within 1e-4,
+    // for random shapes, blockings, thread counts, and ignored fractions.
+    prop::check("native forward == baseline", |rng| {
+        let n = 1 + rng.usize_below(48);
+        let d = 2 + rng.usize_below(24);
+        let v = 2 + rng.usize_below(160);
+        let ignored = [0.0, 0.25, 0.9][rng.usize_below(3)];
+        let (e, c, x) = random_problem(rng, n, d, v, ignored);
+        let p = Problem::new(&e, &c, &x, n, d, v).map_err(|err| format!("{err:#}"))?;
+        let opts = rand_opts(rng, true, true);
+        let native = cce_forward(&p, &opts);
+        let baseline = baseline_forward(&p, &KernelOptions::default());
+        if (native.loss - baseline.loss).abs() > 1e-4 {
+            return Err(format!(
+                "loss mismatch: native {} vs baseline {} (n={n} d={d} v={v} opts={opts:?})",
+                native.loss, baseline.loss
+            ));
+        }
+        if native.count != baseline.count {
+            return Err(format!("count {} vs {}", native.count, baseline.count));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_filtered_backward_within_filter_tolerance() {
+    // Filtered backward ≡ unfiltered backward within the eps bound: every
+    // skipped softmax entry is < eps, contributes < eps·|input|/count.
+    prop::check("filtered bwd ~= unfiltered bwd", |rng| {
+        let n = 4 + rng.usize_below(32);
+        let d = 2 + rng.usize_below(16);
+        let v = 8 + rng.usize_below(128);
+        let (mut e, c, x) = random_problem(rng, n, d, v, 0.2);
+        // Sharpen some rows so filtering has something to skip.
+        for i in 0..n {
+            if x[i] >= 0 && i % 2 == 0 {
+                let t = x[i] as usize;
+                for k in 0..d {
+                    e[i * d + k] = 6.0 * c[t * d + k];
+                }
+            }
+        }
+        let p = Problem::new(&e, &c, &x, n, d, v).map_err(|err| format!("{err:#}"))?;
+        let opts = rand_opts(rng, true, rng.bool(0.5));
+        let fwd = cce_forward(&p, &opts);
+        let filtered = cce_backward(&p, &opts, &fwd.lse);
+        let exact = cce_backward(&p, &KernelOptions { filter: false, ..opts }, &fwd.lse);
+        let count = fwd.count.max(1) as f32;
+        let max_in = e.iter().chain(c.iter()).map(|z| z.abs()).fold(0.0f32, f32::max);
+        // dE error sums over ≤ v skipped columns, dC error over ≤ n skipped
+        // rows; each skipped softmax entry is < eps.
+        let bound = (n.max(v) as f32) * (FILTER_EPS as f32) * max_in / count + 1e-5;
+        let check = |a: &[f32], b: &[f32], what: &str| -> Result<(), String> {
+            let diff = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            if diff > bound {
+                Err(format!("{what} filter error {diff} > bound {bound} ({opts:?})"))
+            } else {
+                Ok(())
+            }
+        };
+        check(&filtered.d_e, &exact.d_e, "d_e")?;
+        check(&filtered.d_c, &exact.d_c, "d_c")
+    });
+}
+
+#[test]
+fn prop_backward_matches_baseline_exactly_when_unfiltered() {
+    prop::check("unfiltered bwd == baseline bwd", |rng| {
+        let n = 2 + rng.usize_below(24);
+        let d = 2 + rng.usize_below(12);
+        let v = 4 + rng.usize_below(64);
+        let (e, c, x) = random_problem(rng, n, d, v, 0.3);
+        let p = Problem::new(&e, &c, &x, n, d, v).map_err(|err| format!("{err:#}"))?;
+        let opts = rand_opts(rng, false, rng.bool(0.5));
+        let fwd = cce_forward(&p, &opts);
+        let bwd = cce_backward(&p, &opts, &fwd.lse);
+        let (_, reference) = baseline_forward_backward(&p, &KernelOptions::default());
+        let diff_e = bwd
+            .d_e
+            .iter()
+            .zip(&reference.d_e)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let diff_c = bwd
+            .d_c
+            .iter()
+            .zip(&reference.d_c)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        if diff_e > 1e-5 || diff_c > 1e-5 {
+            return Err(format!("grad mismatch: d_e {diff_e} d_c {diff_c} ({opts:?})"));
+        }
+        Ok(())
+    });
+}
+
+/// Central-difference gradient check of `dX`/`dW` on tiny shapes.
+#[test]
+fn gradcheck_against_finite_differences() {
+    let mut rng = Rng::new(0xF1D);
+    let (n, d, v) = (5, 4, 9);
+    let (e, c, x) = random_problem(&mut rng, n, d, v, 0.2);
+    let opts = KernelOptions { n_block: 2, v_block: 3, threads: 2, filter: false, sort: true };
+    let loss_of = |e: &[f32], c: &[f32]| -> f64 {
+        let p = Problem::new(e, c, &x, n, d, v).unwrap();
+        cce_forward(&p, &opts).loss
+    };
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let fwd = cce_forward(&p, &opts);
+    let bwd = cce_backward(&p, &opts, &fwd.lse);
+
+    let h = 1e-2f32;
+    let tol = 2e-2;
+    for idx in 0..n * d {
+        let mut e_hi = e.clone();
+        let mut e_lo = e.clone();
+        e_hi[idx] += h;
+        e_lo[idx] -= h;
+        let fd = (loss_of(&e_hi, &c) - loss_of(&e_lo, &c)) / (2.0 * h as f64);
+        let an = bwd.d_e[idx] as f64;
+        assert!(
+            (fd - an).abs() < tol * fd.abs().max(1.0),
+            "d_e[{idx}]: finite-diff {fd} vs analytic {an}"
+        );
+    }
+    for idx in 0..v * d {
+        let mut c_hi = c.clone();
+        let mut c_lo = c.clone();
+        c_hi[idx] += h;
+        c_lo[idx] -= h;
+        let fd = (loss_of(&e, &c_hi) - loss_of(&e, &c_lo)) / (2.0 * h as f64);
+        let an = bwd.d_c[idx] as f64;
+        assert!(
+            (fd - an).abs() < tol * fd.abs().max(1.0),
+            "d_c[{idx}]: finite-diff {fd} vs analytic {an}"
+        );
+    }
+}
+
+/// The acceptance-criteria memory assertion: the native CCE forward's peak
+/// working memory is O(N·D + N_B·V_B) — block buffers, never an N×V
+/// allocation — while the baseline's really is N×V.
+#[test]
+fn forward_working_memory_is_blocked() {
+    let mut rng = Rng::new(42);
+    let (n, d, v) = (512, 16, 8192);
+    let (e, c, x) = random_problem(&mut rng, n, d, v, 0.0);
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let opts = KernelOptions { n_block: 64, v_block: 128, threads: 2, filter: true, sort: true };
+
+    let native = cce_forward(&p, &opts);
+    let ceil = |a: usize, b: usize| a / b + usize::from(a % b != 0);
+    // Mirror of exec::span_rows: whole row-blocks per worker.
+    let span = ceil(ceil(n, opts.n_block), opts.threads) * opts.n_block;
+    let workers = ceil(n, span);
+    // lse + target vectors (O(N)) plus per-worker (N_B·V_B + 2·N_B) floats.
+    let expected = n * 8 + workers * (opts.n_block * opts.v_block + 2 * opts.n_block) * 4;
+    assert_eq!(native.workspace_bytes, expected, "workspace formula drifted");
+
+    let nv_bytes = n * v * 4;
+    assert!(
+        native.workspace_bytes < nv_bytes / 10,
+        "native workspace {} should be far below N×V = {nv_bytes}",
+        native.workspace_bytes
+    );
+    let baseline = baseline_forward(&p, &KernelOptions::default());
+    assert!(baseline.workspace_bytes >= nv_bytes, "baseline must materialize N×V");
+
+    // Growing V at fixed blocking must not grow the native block buffers
+    // (only the O(N) vectors and the input itself scale).
+    let (e2, c2, x2) = random_problem(&mut rng, n, d, 2 * v, 0.0);
+    let p2 = Problem::new(&e2, &c2, &x2, n, d, 2 * v).unwrap();
+    let native2 = cce_forward(&p2, &opts);
+    assert_eq!(
+        native2.workspace_bytes, native.workspace_bytes,
+        "forward workspace must be independent of V at fixed blocking"
+    );
+}
+
+#[test]
+fn backend_trait_is_object_safe_and_uniform() {
+    let mut rng = Rng::new(7);
+    let (n, d, v) = (32, 8, 64);
+    let (e, c, x) = random_problem(&mut rng, n, d, v, 0.1);
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let opts = KernelOptions { threads: 2, ..KernelOptions::default() };
+    let backends: Vec<Box<dyn Backend>> = vec![
+        Box::new(NativeBackend::from_key("baseline", opts).unwrap()),
+        Box::new(NativeBackend::from_key("cce", opts).unwrap()),
+        Box::new(NativeBackend::from_key("chunked4", opts).unwrap()),
+    ];
+    let losses: Vec<f64> = backends
+        .iter()
+        .map(|b| b.forward(&p).unwrap().loss)
+        .collect();
+    for (b, loss) in backends.iter().zip(&losses) {
+        assert!(
+            (loss - losses[0]).abs() < 1e-4,
+            "{} disagrees: {loss} vs {}",
+            b.name(),
+            losses[0]
+        );
+        let (fwd, bwd) = b.forward_backward(&p).unwrap();
+        assert!((fwd.loss - losses[0]).abs() < 1e-4);
+        assert_eq!(bwd.d_e.len(), n * d);
+        assert_eq!(bwd.d_c.len(), v * d);
+    }
+}

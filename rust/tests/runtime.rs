@@ -1,8 +1,10 @@
 //! Integration tests: the full Rust↔PJRT↔artifact path on the tiny model.
 //!
-//! These need `make artifacts` to have run (they are part of `make test`).
-//! Everything here goes through the public API: manifest → runtime →
-//! trainer → metrics → checkpoints.
+//! These need the `pjrt` feature, the real `xla` bindings, and `make
+//! artifacts` to have run (they are part of `make test`).  Everything here
+//! goes through the public API: manifest → runtime → trainer → metrics →
+//! checkpoints.
+#![cfg(feature = "pjrt")]
 
 use cce::coordinator::{Checkpoint, CorpusKind, Metrics, RunConfig, TrainState,
                        Trainer};
@@ -230,4 +232,18 @@ fn rank_stats_artifact_shapes() {
     assert!(probs.windows(2).all(|w| w[0] >= w[1] - 1e-6));
     let sum: f32 = probs.iter().sum();
     assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+}
+
+#[test]
+fn time_artifact_on_tiny_loss() {
+    let rt = rt();
+    let res = cce::bench::harness::time_artifact(
+        &rt,
+        "loss_fwd_cce_n128_d64_v512_tiny",
+        0.0,
+        std::time::Duration::from_millis(200),
+    )
+    .unwrap();
+    assert!(res.summary.n >= 3);
+    assert!(res.mean() > 0.0 && res.mean() < 5.0);
 }
