@@ -28,4 +28,42 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
+echo "== serve self-test: train -> serve (ephemeral port) -> roundtrip -> shutdown =="
+CCE=target/release/cce
+SMOKE_DIR=$(mktemp -d)
+SERVE_PID=""
+# On any failure: kill the background server (if spawned), then clean up.
+trap '{ [[ -z "$SERVE_PID" ]] || kill "$SERVE_PID" 2>/dev/null || true; } ; rm -rf "$SMOKE_DIR"' EXIT
+
+# A real NativeTrainer checkpoint (tiny: ~seconds), then serve it.
+"$CCE" train --backend native --steps 2 --corpus-docs 200 --vocab-size 384 \
+    --dim 32 --seq 64 --batch 4 --out-dir "$SMOKE_DIR/run" >/dev/null
+
+"$CCE" serve --checkpoint "$SMOKE_DIR/run/final.ckpt" --port 0 \
+    --max-batch 4 --max-wait-ms 2 > "$SMOKE_DIR/serve.log" 2>"$SMOKE_DIR/serve.err" &
+SERVE_PID=$!
+
+# Wait for the bound (ephemeral) port to appear on stdout.
+PORT=""
+for _ in $(seq 1 100); do
+    PORT=$(sed -n 's/.*listening on .*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve.log" | head -1)
+    [[ -n "$PORT" ]] && break
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "serve exited early:"; cat "$SMOKE_DIR/serve.err"; exit 1
+    fi
+    sleep 0.1
+done
+[[ -n "$PORT" ]] || { echo "serve never bound a port"; cat "$SMOKE_DIR/serve.err"; exit 1; }
+
+"$CCE" client --port "$PORT" --op generate --prompt "the cat" --max-tokens 4 \
+    | grep -q '"ok":true' || { echo "generate roundtrip failed"; exit 1; }
+"$CCE" client --port "$PORT" --op score --text "the cat sat on the mat" \
+    | grep -q '"ok":true' || { echo "score roundtrip failed"; exit 1; }
+"$CCE" client --port "$PORT" --op shutdown >/dev/null
+
+# Clean shutdown: the server process must exit 0 on its own.
+wait "$SERVE_PID" || { echo "serve did not shut down cleanly"; cat "$SMOKE_DIR/serve.err"; exit 1; }
+grep -q "shut down cleanly" "$SMOKE_DIR/serve.log" || { echo "missing clean-shutdown marker"; exit 1; }
+echo "   serve self-test OK (port $PORT)"
+
 echo "CI OK"

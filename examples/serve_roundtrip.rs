@@ -1,0 +1,70 @@
+//! Serve roundtrip — the inference subsystem end to end, in one process.
+//!
+//! Starts a server on an ephemeral port (demo model by default, or a real
+//! `cce train --backend native` checkpoint via `--checkpoint`), then runs
+//! the full client protocol against it: `info`, greedy and sampled
+//! `generate`, `score`, and a clean `shutdown`.
+//!
+//! ```bash
+//! cargo run --release --example serve_roundtrip
+//! cargo run --release --example serve_roundtrip -- \
+//!     --checkpoint runs/web/final.ckpt --prompt "the cat"
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use cce::exec::KernelOptions;
+use cce::serve::{serve, Client, Engine, GenParams, Response, ServeConfig};
+use cce::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let opts = KernelOptions::default();
+    let engine = match args.opt("checkpoint") {
+        Some(path) => Engine::from_checkpoint(std::path::Path::new(path), None, opts)?,
+        None => {
+            eprintln!("[example] no --checkpoint: training a tiny demo model first");
+            Engine::demo(512, 32, 8, opts)?
+        }
+    };
+    let prompt = args.get("prompt", "the cat sat".to_string())?;
+
+    // Ephemeral port: ServeConfig::default() binds 127.0.0.1:0.
+    let server = serve(Arc::new(engine), &ServeConfig::default())?;
+    println!("[example] server on {}", server.addr);
+    let mut client = Client::connect(server.addr)?;
+
+    if let Response::Info(fields) = client.info()? {
+        println!("[example] info: {}", fields.to_string());
+    }
+
+    let greedy = client.generate(GenParams {
+        prompt: prompt.clone(),
+        max_tokens: 12,
+        ..GenParams::default()
+    })?;
+    if let Response::Generate { text, tokens, .. } = greedy {
+        println!("[example] greedy   {prompt:?} -> {text:?} ({} tokens)", tokens.len());
+    }
+
+    let sampled = client.generate(GenParams {
+        prompt: prompt.clone(),
+        max_tokens: 12,
+        top_k: 8,
+        temperature: 0.8,
+        seed: 42,
+    })?;
+    if let Response::Generate { text, .. } = sampled {
+        println!("[example] top-k@.8 {prompt:?} -> {text:?}");
+    }
+
+    if let Response::Score { nll, perplexity, count, .. } = client.score(&prompt)? {
+        println!("[example] score    {prompt:?}: nll {nll:.4} ppl {perplexity:.2} over {count} tokens");
+    }
+
+    client.shutdown()?;
+    server.join()?;
+    println!("[example] clean shutdown");
+    Ok(())
+}

@@ -1,19 +1,162 @@
 //! Fig. 3 harness: average softmax probability of the i-th most likely
-//! token, measured from a *trained* model checkpoint via the
-//! `{tag}_rank_stats` artifact, plus the gradient-filter accounting that
-//! this sparsity implies (§4.3 / §5.2).
+//! token, measured from a *trained* model, plus the gradient-filter
+//! accounting that this sparsity implies (§4.3 / §5.2).
+//!
+//! Two measurement paths share [`RankStats`] and the printers:
+//!
+//! * [`run_native`] — zero artifacts: train (or load) a native
+//!   bag-of-context checkpoint and probe its softmax on validation rows.
+//!   Materializing one `V`-vector per row here is the *measurement*, not
+//!   the hot path — rank statistics are a full-distribution property.
+//! * [`run`] (behind the `pjrt` feature) — the `{tag}_rank_stats` AOT
+//!   artifact on the transformer.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::bench::harness::Table;
-use crate::coordinator::{Checkpoint, CorpusKind, Metrics, RunConfig, TrainState,
-                         Trainer};
-use crate::runtime::{HostTensor, Runtime};
 use crate::sparsity::{BlockFilterModel, RankStats, FILTER_EPS};
 
-/// Obtain rank statistics: from `checkpoint` if given, otherwise by training
-/// `tag` for `warm_steps` first (an untrained model's softmax is near
+#[cfg(feature = "pjrt")]
+use crate::coordinator::{Checkpoint, CorpusKind, Metrics, RunConfig, TrainState,
+                         Trainer};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{HostTensor, Runtime};
+
+/// Obtain rank statistics natively: from `checkpoint` if given (a `cce
+/// train --backend native` checkpoint — its tokenizer, dims, and window
+/// come from the checkpoint bundle, not from CLI flags), otherwise by
+/// training for `warm_steps` first (an untrained model's softmax is near
 /// uniform and would say nothing about filtering).
+pub fn run_native(
+    checkpoint: Option<&str>,
+    warm_steps: u64,
+    seed: u64,
+    vocab_size: usize,
+    corpus_docs: usize,
+    opts: crate::exec::KernelOptions,
+) -> Result<RankStats> {
+    use crate::coordinator::{
+        CorpusKind as Corpus, Metrics as M, NativeModelConfig, NativeState, NativeTrainer,
+        RunConfig as Cfg,
+    };
+    let model = NativeModelConfig::default();
+    if let Some(path) = checkpoint {
+        eprintln!("  [fig3] loading native checkpoint bundle {path}");
+        let bundle = NativeState::load_bundle(std::path::Path::new(path))?;
+        // Hyperparameters come from the checkpoint's .model.json sidecar,
+        // not from CLI flags (pre-sidecar checkpoints fall back to the
+        // trainer defaults).
+        let window = bundle.window.unwrap_or(model.window);
+        let seq_len = bundle.seq_len.unwrap_or(model.seq_len);
+        // Fresh measurement corpus, tokenized with the *checkpoint's* own
+        // vocabulary so token identities line up with the trained head.
+        let docs = crate::data::web_corpus(corpus_docs, seed);
+        let dataset = crate::data::Dataset::build(&docs, &bundle.tokenizer, &crate::data::DatasetConfig {
+            seq_len,
+            val_fraction: 0.02,
+            seed,
+            pad_per_doc: false,
+        })?;
+        return rank_stats_native(
+            &dataset,
+            &bundle.state,
+            bundle.vocab,
+            bundle.d_model,
+            window,
+            seq_len,
+            model.batch,
+        );
+    }
+    let cfg = Cfg {
+        tag: "fig3-native".into(),
+        method: "cce".into(),
+        steps: warm_steps,
+        seed,
+        corpus: Corpus::Web,
+        corpus_docs,
+        vocab_size,
+        eval_every: 0,
+        checkpoint_every: 0,
+        log_every: 25,
+        out_dir: std::env::temp_dir().join("cce_fig3_native").to_string_lossy().into(),
+    };
+    let trainer = NativeTrainer::build(cfg, model, opts)?;
+    eprintln!("  [fig3] no checkpoint given; training {warm_steps} native steps first");
+    let mut metrics = M::in_memory();
+    let state = trainer.train(trainer.init(seed), &mut metrics)?;
+    rank_stats_native(
+        &trainer.dataset,
+        &state,
+        trainer.vocab,
+        trainer.model.d_model,
+        trainer.model.window,
+        trainer.model.seq_len,
+        trainer.model.batch,
+    )
+}
+
+/// Mean rank-probability curve of a trained bag-of-context head over up to
+/// four validation batches.
+fn rank_stats_native(
+    dataset: &crate::data::Dataset,
+    state: &crate::coordinator::NativeState,
+    v: usize,
+    d: usize,
+    window: usize,
+    seq_len: usize,
+    batch: usize,
+) -> Result<RankStats> {
+    // Measurement batch: bounded by the val split so small corpora still
+    // yield at least one batch (val_batches drops partial batches).
+    let eval_batch = batch.min(dataset.val.len()).max(1);
+    let batches = dataset.val_batches(eval_batch);
+    if batches.is_empty() {
+        anyhow::bail!("no validation batches");
+    }
+    let max_batches = 4usize;
+    let mut acc = vec![0f64; v];
+    let mut rows: u64 = 0;
+    let mut probs = vec![0f64; v];
+    for b in batches.iter().take(max_batches) {
+        let tokens = b.tokens.as_i32()?;
+        let h = crate::coordinator::bag_hidden(tokens, &state.emb, d, window, seq_len);
+        for h_row in h.chunks(d) {
+            // One V-vector of logits -> softmax -> sorted descending.
+            let mut m = f64::NEG_INFINITY;
+            for (j, slot) in probs.iter_mut().enumerate() {
+                let z = h_row
+                    .iter()
+                    .zip(&state.cls[j * d..(j + 1) * d])
+                    .map(|(&a, &b)| (a as f64) * b as f64)
+                    .sum::<f64>();
+                *slot = z;
+                m = m.max(z);
+            }
+            let mut total = 0.0;
+            for p in probs.iter_mut() {
+                *p = (*p - m).exp();
+                total += *p;
+            }
+            for p in probs.iter_mut() {
+                *p /= total;
+            }
+            probs.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+            for (slot, &p) in acc.iter_mut().zip(probs.iter()) {
+                *slot += p;
+            }
+            rows += 1;
+        }
+    }
+    for slot in acc.iter_mut() {
+        *slot /= rows.max(1) as f64;
+    }
+    Ok(RankStats::from_probs(acc, FILTER_EPS))
+}
+
+/// Obtain rank statistics via the `{tag}_rank_stats` artifact: from
+/// `checkpoint` if given, otherwise by training `tag` for `warm_steps`
+/// first.
+#[cfg(feature = "pjrt")]
 pub fn run(
     rt: &Runtime,
     tag: &str,
@@ -21,6 +164,7 @@ pub fn run(
     warm_steps: u64,
     seed: u64,
 ) -> Result<RankStats> {
+    use anyhow::anyhow;
     let cfg = RunConfig {
         tag: tag.into(),
         method: "cce".into(),
@@ -139,4 +283,30 @@ pub fn check(stats: &RankStats) -> Result<()> {
         anyhow::bail!("no head concentration: p1={head} p_mid={mid}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::KernelOptions;
+
+    #[test]
+    fn native_rank_stats_are_a_distribution() {
+        let opts = KernelOptions { n_block: 32, v_block: 128, threads: 2, filter: true, sort: true };
+        let stats = run_native(None, 12, 5, 512, 200, opts).unwrap();
+        // Mean of per-row softmax distributions is itself a distribution.
+        let total: f64 = stats.probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "probs sum to {total}");
+        // Sorted descending by construction.
+        for w in stats.probs.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // Even 12 warm steps concentrate the head well above uniform.
+        assert!(
+            stats.probs[0] > 4.0 / stats.probs.len() as f64,
+            "head {} vs uniform {}",
+            stats.probs[0],
+            1.0 / stats.probs.len() as f64
+        );
+    }
 }

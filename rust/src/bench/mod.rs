@@ -6,26 +6,30 @@
 //! | [`breakdown`]          | Table A2       | `cce tableA2` (pjrt) |
 //! | [`tablea3`]            | Table A3       | `cce tableA3` |
 //! | [`fig1`]               | Fig. 1 / Table A4 | `cce fig1` |
-//! | [`fig3`]               | Fig. 3         | `cce fig3` (pjrt) |
+//! | [`fig3`]               | Fig. 3         | `cce fig3` |
 //! | [`curves`]             | Figs. 4 & 5    | `cce fig4`, `cce fig5` (pjrt) |
 //! | [`sweep`]              | Figs. A1 / A2  | `cce figA1` |
+//! | [`serve`]              | — (serving workload) | `cce servebench` |
 //!
-//! `table1` and `sweep` run on either backend: `--backend native` measures
-//! the multi-threaded Rust kernels in [`crate::exec`] with zero artifacts
-//! (and `table1 --json` emits `BENCH_table1.json` for cross-PR tracking);
-//! `--backend pjrt` times the AOT artifacts.  The artifact-only harnesses
-//! (`breakdown`, `fig3`, `curves`) need the `pjrt` feature.  Memory columns
-//! are analytic and exact at paper scale; each harness has a `check()` that
-//! asserts the paper's *shape* claims.
+//! `table1`, `sweep`, and `fig3` run on either backend: `--backend native`
+//! measures the multi-threaded Rust kernels in [`crate::exec`] with zero
+//! artifacts (and `table1 --json` / `servebench --json` emit
+//! `BENCH_*.json` for cross-PR tracking); `--backend pjrt` times the AOT
+//! artifacts.  The artifact-only harnesses (`breakdown`, `curves`) need
+//! the `pjrt` feature.  [`serve`] drives the full inference stack (TCP →
+//! micro-batcher → blocked kernels) and reports req/s + latency
+//! percentiles + peak inference workspace.  Memory columns are analytic
+//! and exact at paper scale; each harness has a `check()` that asserts the
+//! paper's *shape* claims.
 
 #[cfg(feature = "pjrt")]
 pub mod breakdown;
 #[cfg(feature = "pjrt")]
 pub mod curves;
 pub mod fig1;
-#[cfg(feature = "pjrt")]
 pub mod fig3;
 pub mod harness;
+pub mod serve;
 pub mod sweep;
 pub mod table1;
 pub mod tablea3;

@@ -1,0 +1,284 @@
+//! Serving throughput/latency harness: drive a real server (TCP + batcher
+//! + kernels) with concurrent clients and report requests/s, latency
+//! percentiles, micro-batch occupancy, and the engine's peak inference
+//! workspace.  `--json BENCH_serve.json` persists machine-readable rows for
+//! cross-PR perf tracking, like `table1 --json`.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::harness::Table;
+use crate::serve::{serve, Client, Engine, GenParams, Response, ServeConfig};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Harness knobs.
+#[derive(Debug, Clone)]
+pub struct ServeBenchConfig {
+    /// Total requests (split evenly across clients; generate/score
+    /// alternate per request).
+    pub requests: usize,
+    /// Concurrent client connections.
+    pub concurrency: usize,
+    /// Tokens per generate request.
+    pub max_tokens: usize,
+    pub serve: ServeConfig,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> ServeBenchConfig {
+        ServeBenchConfig {
+            requests: 64,
+            concurrency: 8,
+            max_tokens: 16,
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+/// One measured run.
+#[derive(Debug, Clone)]
+pub struct ServeBench {
+    pub requests: usize,
+    pub concurrency: usize,
+    pub elapsed_secs: f64,
+    pub generate: Summary,
+    pub score: Summary,
+    pub peak_workspace_bytes: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub max_batch_observed: u64,
+}
+
+impl ServeBench {
+    pub fn requests_per_sec(&self) -> f64 {
+        self.requests as f64 / self.elapsed_secs.max(1e-9)
+    }
+
+    /// Mean jobs per micro-batch — > 1 means batching actually happened.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_jobs as f64 / self.batches as f64
+    }
+}
+
+/// Run the harness against `engine`: start a server on an ephemeral port,
+/// fire `requests` requests from `concurrency` client threads, read the
+/// server-side counters, and shut the server down.
+pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.port = 0; // never collide
+    let server = serve(engine, &serve_cfg)?;
+    let addr = server.addr;
+    let concurrency = cfg.concurrency.max(1);
+    let total_requests = cfg.requests.max(1);
+
+    let gen_lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let score_lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        for worker in 0..concurrency {
+            // Split `total_requests` exactly: the first `remainder` clients
+            // take one extra request.
+            let per_client =
+                total_requests / concurrency + usize::from(worker < total_requests % concurrency);
+            if per_client == 0 {
+                continue;
+            }
+            let gen_lat = gen_lat.clone();
+            let score_lat = score_lat.clone();
+            let errors = errors.clone();
+            scope.spawn(move || {
+                let mut client = match Client::connect(addr) {
+                    Ok(client) => client,
+                    Err(err) => {
+                        errors.lock().unwrap().push(format!("{err:#}"));
+                        return;
+                    }
+                };
+                for i in 0..per_client {
+                    let is_generate = (worker + i) % 2 == 0;
+                    let t0 = Instant::now();
+                    let result = if is_generate {
+                        client.generate(GenParams {
+                            prompt: "the cat sat on".into(),
+                            max_tokens: cfg.max_tokens,
+                            top_k: 0,
+                            temperature: 1.0,
+                            seed: (worker * 1000 + i) as u64,
+                        })
+                    } else {
+                        client.score("the cat sat on the mat and the dog sat on the log")
+                    };
+                    let dt = t0.elapsed().as_secs_f64();
+                    match result {
+                        Ok(_) => {
+                            if is_generate {
+                                gen_lat.lock().unwrap().push(dt);
+                            } else {
+                                score_lat.lock().unwrap().push(dt);
+                            }
+                        }
+                        Err(err) => errors.lock().unwrap().push(format!("{err:#}")),
+                    }
+                }
+            });
+        }
+    });
+    let elapsed_secs = started.elapsed().as_secs_f64();
+
+    // Server-side counters, then clean shutdown.  On any admin-path error
+    // the server must still come down — never leak the accept loop.
+    let info = (|| -> Result<Json> {
+        let mut admin = Client::connect(addr)?;
+        let info = match admin.info()? {
+            Response::Info(fields) => fields,
+            other => return Err(anyhow!("unexpected info response: {other:?}")),
+        };
+        admin.shutdown()?;
+        Ok(info)
+    })();
+    let info = match info {
+        Ok(info) => {
+            server.join()?;
+            info
+        }
+        Err(err) => {
+            server.stop();
+            let _ = server.join();
+            return Err(err);
+        }
+    };
+
+    let errors = errors.lock().unwrap();
+    if !errors.is_empty() {
+        return Err(anyhow!(
+            "{} of {total_requests} requests failed; first: {}",
+            errors.len(),
+            errors[0]
+        ));
+    }
+    let get_u64 = |key: &str| -> u64 {
+        info.get(key).and_then(|v| v.as_i64()).unwrap_or(0) as u64
+    };
+    let gen_lat = gen_lat.lock().unwrap();
+    let score_lat = score_lat.lock().unwrap();
+    // Tiny runs can leave one endpoint unexercised; Summary needs >= 1.
+    let summarize = |lat: &[f64]| {
+        if lat.is_empty() {
+            Summary::of(&[0.0])
+        } else {
+            Summary::of(lat)
+        }
+    };
+    Ok(ServeBench {
+        requests: gen_lat.len() + score_lat.len(),
+        concurrency,
+        elapsed_secs,
+        generate: summarize(&gen_lat),
+        score: summarize(&score_lat),
+        peak_workspace_bytes: get_u64("peak_workspace_bytes"),
+        batches: get_u64("batches"),
+        batched_jobs: get_u64("batched_jobs"),
+        max_batch_observed: get_u64("max_batch_observed"),
+    })
+}
+
+pub fn print(bench: &ServeBench) {
+    println!("\n== serve: throughput & latency (native kernels, micro-batched) ==\n");
+    let ms = |secs: f64| format!("{:.2} ms", secs * 1e3);
+    let mut t = Table::new(&["Endpoint", "Requests", "p50", "p90", "p99", "Max"]);
+    for (name, s) in [("generate", &bench.generate), ("score", &bench.score)] {
+        t.row(vec![
+            name.to_string(),
+            s.n.to_string(),
+            ms(s.p50),
+            ms(s.p90),
+            ms(s.p99),
+            ms(s.max),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n  {} requests over {} clients in {:.2} s -> {:.1} req/s",
+        bench.requests,
+        bench.concurrency,
+        bench.elapsed_secs,
+        bench.requests_per_sec()
+    );
+    println!(
+        "  micro-batches: {} (mean {:.1} jobs/batch, max {})   peak inference workspace: {:.2} MB",
+        bench.batches,
+        bench.mean_batch(),
+        bench.max_batch_observed,
+        bench.peak_workspace_bytes as f64 / (1024.0 * 1024.0)
+    );
+}
+
+/// Persist as `BENCH_serve.json` (one row per endpoint + run meta).
+pub fn write_json(bench: &ServeBench, path: impl AsRef<std::path::Path>) -> Result<()> {
+    let row = |name: &str, s: &Summary| {
+        Json::obj(vec![
+            ("endpoint", Json::str(name)),
+            ("requests", Json::Int(s.n as i64)),
+            ("p50_ms", Json::Float(s.p50 * 1e3)),
+            ("p90_ms", Json::Float(s.p90 * 1e3)),
+            ("p99_ms", Json::Float(s.p99 * 1e3)),
+            ("mean_ms", Json::Float(s.mean * 1e3)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("requests", Json::Int(bench.requests as i64)),
+        ("concurrency", Json::Int(bench.concurrency as i64)),
+        ("elapsed_secs", Json::Float(bench.elapsed_secs)),
+        ("requests_per_sec", Json::Float(bench.requests_per_sec())),
+        ("batches", Json::Int(bench.batches as i64)),
+        ("mean_batch", Json::Float(bench.mean_batch())),
+        ("max_batch_observed", Json::Int(bench.max_batch_observed as i64)),
+        ("peak_workspace_bytes", Json::Int(bench.peak_workspace_bytes as i64)),
+        ("rows", Json::arr([row("generate", &bench.generate), row("score", &bench.score)])),
+    ]);
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::KernelOptions;
+
+    #[test]
+    fn tiny_bench_runs_end_to_end() {
+        let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, filter: true, sort: true };
+        let engine = Arc::new(Engine::demo(384, 16, 2, opts).unwrap());
+        let cfg = ServeBenchConfig {
+            requests: 8,
+            concurrency: 2,
+            max_tokens: 3,
+            serve: ServeConfig { max_batch: 4, ..ServeConfig::default() },
+        };
+        let bench = run(engine, &cfg).unwrap();
+        assert_eq!(bench.requests, 8);
+        assert!(bench.generate.n >= 1 && bench.score.n >= 1);
+        assert!(bench.requests_per_sec() > 0.0);
+        assert!(bench.batches >= 1 && bench.batched_jobs == 8);
+        assert!(bench.peak_workspace_bytes > 0);
+
+        let path = std::env::temp_dir().join("cce_bench_serve_test.json");
+        write_json(&bench, &path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
+        assert_eq!(parsed.get("rows").unwrap().as_array().unwrap().len(), 2);
+    }
+}

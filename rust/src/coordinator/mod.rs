@@ -19,6 +19,6 @@ pub mod trainer;
 pub use checkpoint::Checkpoint;
 pub use config::{CorpusKind, RunConfig};
 pub use metrics::{curve_max_divergence, EvalRecord, Metrics, StepRecord};
-pub use native::{NativeModelConfig, NativeState, NativeTrainer};
+pub use native::{bag_hidden, NativeBundle, NativeModelConfig, NativeState, NativeTrainer};
 #[cfg(feature = "pjrt")]
 pub use trainer::{TrainState, Trainer};

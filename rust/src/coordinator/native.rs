@@ -71,6 +71,39 @@ impl NativeState {
         })
     }
 
+    /// Load a state plus its sibling tokenizer (`<path>.vocab.json`) and
+    /// model hyperparameters (`<path>.model.json`), as written by
+    /// [`NativeTrainer::save_checkpoint`].  `(vocab, d)` come from the
+    /// checkpoint's own tensor shapes — the serving path needs no run
+    /// config to open a trained model.  `window` is `None` for pre-PR-2
+    /// checkpoints without the model sidecar.
+    pub fn load_bundle(path: &std::path::Path) -> Result<NativeBundle> {
+        let ckpt = Checkpoint::load(path)?;
+        let (vocab, d_model) = ckpt
+            .tensors
+            .iter()
+            .find(|(name, t)| name == "emb" && t.shape.len() == 2)
+            .map(|(_, t)| (t.shape[0], t.shape[1]))
+            .ok_or_else(|| anyhow!("checkpoint {path:?} has no rank-2 emb tensor"))?;
+        let state = NativeState::from_checkpoint(ckpt, vocab, d_model)?;
+        let tokenizer = Tokenizer::load(path.with_extension("vocab.json"))?;
+        if tokenizer.vocab_size() != vocab {
+            bail!(
+                "tokenizer vocab {} does not match checkpoint vocab {vocab}",
+                tokenizer.vocab_size()
+            );
+        }
+        let (window, seq_len) = match std::fs::read_to_string(path.with_extension("model.json")) {
+            Err(_) => (None, None), // older checkpoint without the sidecar
+            Ok(text) => {
+                let meta = crate::util::Json::parse(&text)?;
+                let field = |key: &str| meta.get(key).and_then(|v| v.as_i64()).map(|x| x as usize);
+                (field("window"), field("seq_len"))
+            }
+        };
+        Ok(NativeBundle { state, tokenizer, vocab, d_model, window, seq_len })
+    }
+
     pub fn from_checkpoint(ckpt: Checkpoint, vocab: usize, d: usize) -> Result<NativeState> {
         let mut emb = None;
         let mut cls = None;
@@ -90,6 +123,50 @@ impl NativeState {
             step: ckpt.step,
         })
     }
+}
+
+/// Everything a serving/measurement path needs from a saved native run:
+/// the weights, the tokenizer, the shape inferred from the tensors, and
+/// (when the `.model.json` sidecar exists) the training context window.
+pub struct NativeBundle {
+    pub state: NativeState,
+    pub tokenizer: Tokenizer,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub window: Option<usize>,
+    pub seq_len: Option<usize>,
+}
+
+/// Bag-of-context hidden states for packed sequences: position `i`
+/// averages the embeddings of the last `window` tokens within its
+/// `seq_len`-aligned sequence.  Shared by the trainer, the fig3 native
+/// harness, and (per-context, without the sequence resets) the serving
+/// engine's decode path.
+pub fn bag_hidden(
+    tokens: &[i32],
+    emb: &[f32],
+    d: usize,
+    window: usize,
+    seq_len: usize,
+) -> Vec<f32> {
+    let w = window.max(1);
+    let seq = seq_len.max(1);
+    let mut h = vec![0f32; tokens.len() * d];
+    for (i, chunk) in h.chunks_mut(d).enumerate() {
+        let q = i % seq;
+        let lo = i - q.min(w - 1);
+        let len = (i - lo + 1) as f32;
+        for &tok in &tokens[lo..=i] {
+            let row = &emb[tok as usize * d..(tok as usize + 1) * d];
+            for (acc, &val) in chunk.iter_mut().zip(row) {
+                *acc += val;
+            }
+        }
+        for val in chunk.iter_mut() {
+            *val /= len;
+        }
+    }
+    h
 }
 
 /// A ready-to-train native bundle: data + tokenizer + kernel backend.
@@ -145,27 +222,11 @@ impl NativeTrainer {
         (self.model.batch * self.model.seq_len) as u64
     }
 
-    /// Hidden states for a flat token buffer of `rows` sequences.
-    fn hidden(&self, tokens: &[i32], state: &NativeState) -> Vec<f32> {
-        let d = self.model.d_model;
-        let w = self.model.window.max(1);
-        let seq = self.model.seq_len;
-        let mut h = vec![0f32; tokens.len() * d];
-        for (i, chunk) in h.chunks_mut(d).enumerate() {
-            let q = i % seq;
-            let lo = i - q.min(w - 1);
-            let len = (i - lo + 1) as f32;
-            for &tok in &tokens[lo..=i] {
-                let row = &state.emb[tok as usize * d..(tok as usize + 1) * d];
-                for k in 0..d {
-                    chunk[k] += row[k];
-                }
-            }
-            for val in chunk.iter_mut() {
-                *val /= len;
-            }
-        }
-        h
+    /// Hidden states for a flat token buffer of `rows` sequences.  Public
+    /// so measurement harnesses (`fig3 --backend native`) can probe the
+    /// model head directly.
+    pub fn hidden(&self, tokens: &[i32], state: &NativeState) -> Vec<f32> {
+        bag_hidden(tokens, &state.emb, self.model.d_model, self.model.window, self.model.seq_len)
     }
 
     /// One SGD step on a batch; returns `(loss, grad_norm)`.
@@ -269,10 +330,18 @@ impl NativeTrainer {
         Ok(state)
     }
 
-    /// Save checkpoint + tokenizer vocabulary next to it.
+    /// Save checkpoint + tokenizer vocabulary + model hyperparameters
+    /// (`.model.json` sidecar, so serving needs no training flags).
     pub fn save_checkpoint(&self, state: &NativeState, path: &std::path::Path) -> Result<()> {
         state.to_checkpoint(self.vocab, self.model.d_model)?.save(path)?;
         self.tokenizer.save(path.with_extension("vocab.json"))?;
+        let meta = crate::util::Json::obj(vec![
+            ("d_model", crate::util::Json::Int(self.model.d_model as i64)),
+            ("window", crate::util::Json::Int(self.model.window as i64)),
+            ("seq_len", crate::util::Json::Int(self.model.seq_len as i64)),
+            ("vocab", crate::util::Json::Int(self.vocab as i64)),
+        ]);
+        std::fs::write(path.with_extension("model.json"), meta.to_string_pretty())?;
         Ok(())
     }
 }
@@ -361,6 +430,27 @@ mod tests {
         let a = trainer.evaluate(&state).unwrap();
         let b = trainer.evaluate(&restored).unwrap();
         assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_bundle_infers_shape_and_loads_tokenizer() {
+        let trainer = NativeTrainer::build(tiny_cfg("cce", 1), tiny_model(), fast_opts()).unwrap();
+        let state = trainer.init(3);
+        let path = std::env::temp_dir().join("cce_native_bundle.ckpt");
+        trainer.save_checkpoint(&state, &path).unwrap();
+        let bundle = NativeState::load_bundle(&path).unwrap();
+        assert_eq!(bundle.vocab, trainer.vocab);
+        assert_eq!(bundle.d_model, trainer.model.d_model);
+        assert_eq!(bundle.window, Some(trainer.model.window));
+        assert_eq!(bundle.seq_len, Some(trainer.model.seq_len));
+        assert_eq!(bundle.tokenizer.vocab_size(), trainer.vocab);
+        assert_eq!(bundle.state.emb, state.emb);
+        assert_eq!(bundle.state.cls, state.cls);
+        // A pre-sidecar checkpoint still loads, with unknown window.
+        std::fs::remove_file(path.with_extension("model.json")).unwrap();
+        let old = NativeState::load_bundle(&path).unwrap();
+        assert_eq!(old.window, None);
+        assert_eq!(old.state.emb, state.emb);
     }
 
     #[test]

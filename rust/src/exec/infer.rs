@@ -1,0 +1,673 @@
+//! Logit-free inference kernels: per-token top-k, sampling, and scoring
+//! with the same `(N_B, V_B)` tiling as the training kernels.
+//!
+//! The paper's blocked online-LSE trick is not training-only.  At inference
+//! time the same single sweep over `C` that computes the log-sum-exp can
+//! simultaneously maintain, per row:
+//!
+//! * a **bounded top-k heap** of `(logit, token)` pairs — argmax/top-k
+//!   decoding without ever holding more than `k` candidates per row;
+//! * an **online Gumbel-max sampler** — temperature sampling via
+//!   `argmax_j (z_j/T + g_j)` where `g_j` is deterministic Gumbel noise
+//!   hashed from `(seed, j)`, so no `N×V` noise tensor exists either;
+//! * the running `(max, rescaled sum)` LSE pair, which converts the winning
+//!   logit into a proper log-probability at the end of the sweep.
+//!
+//! All three paths keep the training kernels' workspace guarantee: peak
+//! working memory is `O(N + threads·N_B·(V_B + k))` floats — the `N×V`
+//! logit matrix is never materialized.  [`score`] is the third serving
+//! path: per-token log-probabilities / perplexity of a forced continuation,
+//! a thin wrapper over [`cce_forward`] (loss ≡ mean NLL).
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{bail, Result};
+
+use super::lse::cce_forward;
+use super::{dot, span_rows, KernelOptions, Problem};
+
+/// One inference problem: hidden states `E (N×D)` against a classifier
+/// `C (V×D)` — a [`Problem`] without labels.
+#[derive(Debug, Clone, Copy)]
+pub struct InferProblem<'a> {
+    pub e: &'a [f32],
+    pub c: &'a [f32],
+    pub n: usize,
+    pub d: usize,
+    pub v: usize,
+}
+
+impl<'a> InferProblem<'a> {
+    pub fn new(e: &'a [f32], c: &'a [f32], n: usize, d: usize, v: usize) -> Result<Self> {
+        if n == 0 || d == 0 || v == 0 {
+            bail!("empty inference problem: n={n} d={d} v={v}");
+        }
+        if e.len() != n * d {
+            bail!("e has {} elements, want {n}x{d}", e.len());
+        }
+        if c.len() != v * d {
+            bail!("c has {} elements, want {v}x{d}", c.len());
+        }
+        Ok(InferProblem { e, c, n, d, v })
+    }
+}
+
+// ------------------------------------------------------------------- top-k
+
+/// Top-k result for one row, sorted best-first.  `logprobs[r] =
+/// z_{tokens[r]} − lse` are full-softmax log-probabilities.
+#[derive(Debug, Clone, Default)]
+pub struct TopKRow {
+    pub tokens: Vec<i32>,
+    pub logprobs: Vec<f32>,
+    pub lse: f32,
+}
+
+/// [`topk`] output.
+#[derive(Debug, Clone)]
+pub struct TopKOut {
+    pub rows: Vec<TopKRow>,
+    /// Peak working memory allocated by the kernel (inputs excluded).
+    pub workspace_bytes: usize,
+}
+
+/// Blocked top-k: one sweep over `C` per row span, folding each `(N_B,
+/// V_B)` logit tile into a bounded min-heap of the `k` best candidates and
+/// the online LSE.  Ties break toward the smaller token id, so the result
+/// is deterministic across blockings and thread counts.
+pub fn topk(p: &InferProblem, opts: &KernelOptions, k: usize) -> Result<TopKOut> {
+    if k == 0 || k > p.v {
+        bail!("top-k k={k} out of range for vocab {}", p.v);
+    }
+    let n = p.n;
+    let mut rows: Vec<TopKRow> = vec![TopKRow::default(); n];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    let buffer_bytes: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = rows
+            .chunks_mut(span)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                let row0 = ti * span;
+                let opts = *opts;
+                scope.spawn(move || topk_span(p, &opts, k, row0, chunk))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("topk worker")).sum()
+    });
+    // O(N) output rows (k entries each) + per-thread block buffers.
+    let workspace_bytes = n * k * 8 + buffer_bytes;
+    Ok(TopKOut { rows, workspace_bytes })
+}
+
+/// Per-kernel accumulation hooks over the shared [`tile_sweep`].  The
+/// sweep owns the tile matmul and the online-LSE fold — the part that must
+/// stay numerically identical across the inference kernels (and to
+/// [`cce_forward`]'s recurrence) for the blocking-invariance guarantees
+/// the tests pin.  Visitors only see finished logit tiles.
+trait TileVisitor {
+    /// A new row block of `rows` rows begins; reset per-row state.
+    fn begin_block(&mut self, rows: usize);
+    /// Block-local row `r` (global row `i`) produced logits `z_row` for
+    /// columns `[j0, j0 + z_row.len())`.
+    fn visit_tile_row(&mut self, r: usize, i: usize, j0: usize, z_row: &[f32]);
+    /// Block-local row `r` (span-local row `span_row`) finished its sweep
+    /// with log-sum-exp `lse`.
+    fn end_row(&mut self, r: usize, span_row: usize, lse: f32);
+}
+
+/// One `(N_B, V_B)`-tiled sweep over the classifier for a contiguous span
+/// of rows: compute each logit tile once, fold the online LSE, and hand
+/// the tile to the visitor.  Returns the bytes of tile/LSE buffers this
+/// span allocated (visitor state is accounted by the caller).
+fn tile_sweep<V: TileVisitor>(
+    p: &InferProblem,
+    opts: &KernelOptions,
+    row0: usize,
+    rows_total: usize,
+    visitor: &mut V,
+) -> usize {
+    let d = p.d;
+    let v = p.v;
+    let n_block = opts.n_block.clamp(1, rows_total.max(1));
+    let v_block = opts.v_block.clamp(1, v);
+    let mut logits = vec![0f32; n_block * v_block];
+    let mut run_max = vec![f32::NEG_INFINITY; n_block];
+    let mut run_sum = vec![0f32; n_block];
+
+    let mut block_start = 0;
+    while block_start < rows_total {
+        let rows = n_block.min(rows_total - block_start);
+        run_max[..rows].fill(f32::NEG_INFINITY);
+        run_sum[..rows].fill(0.0);
+        visitor.begin_block(rows);
+
+        let mut j0 = 0;
+        while j0 < v {
+            let cols = v_block.min(v - j0);
+            for r in 0..rows {
+                let i = row0 + block_start + r;
+                let e_row = &p.e[i * d..(i + 1) * d];
+                let z_row = &mut logits[r * cols..(r + 1) * cols];
+                for (jj, z) in z_row.iter_mut().enumerate() {
+                    *z = dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
+                }
+            }
+            for r in 0..rows {
+                let i = row0 + block_start + r;
+                let z_row = &logits[r * cols..(r + 1) * cols];
+                let tile_max = z_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let m_old = run_max[r];
+                let m_new = m_old.max(tile_max);
+                let mut s = if m_old == f32::NEG_INFINITY {
+                    0.0
+                } else {
+                    run_sum[r] * (m_old - m_new).exp()
+                };
+                for &z in z_row {
+                    s += (z - m_new).exp();
+                }
+                run_max[r] = m_new;
+                run_sum[r] = s;
+                visitor.visit_tile_row(r, i, j0, z_row);
+            }
+            j0 += cols;
+        }
+        for r in 0..rows {
+            visitor.end_row(r, block_start + r, run_max[r] + run_sum[r].ln());
+        }
+        block_start += rows;
+    }
+    (logits.len() + run_max.len() + run_sum.len()) * 4
+}
+
+struct TopKVisitor<'a> {
+    heaps: Vec<BoundedTopK>,
+    out: &'a mut [TopKRow],
+}
+
+impl TileVisitor for TopKVisitor<'_> {
+    fn begin_block(&mut self, rows: usize) {
+        for heap in self.heaps[..rows].iter_mut() {
+            heap.clear();
+        }
+    }
+
+    fn visit_tile_row(&mut self, r: usize, _i: usize, j0: usize, z_row: &[f32]) {
+        for (jj, &z) in z_row.iter().enumerate() {
+            self.heaps[r].push(z, (j0 + jj) as i32);
+        }
+    }
+
+    fn end_row(&mut self, r: usize, span_row: usize, lse: f32) {
+        let best = self.heaps[r].sorted_desc();
+        let row = &mut self.out[span_row];
+        row.lse = lse;
+        row.tokens = best.iter().map(|&(_, t)| t).collect();
+        row.logprobs = best.iter().map(|&(z, _)| z - lse).collect();
+    }
+}
+
+fn topk_span(
+    p: &InferProblem,
+    opts: &KernelOptions,
+    k: usize,
+    row0: usize,
+    out: &mut [TopKRow],
+) -> usize {
+    let rows_total = out.len();
+    let n_block = opts.n_block.clamp(1, rows_total.max(1));
+    let mut visitor = TopKVisitor {
+        heaps: (0..n_block).map(|_| BoundedTopK::new(k)).collect(),
+        out,
+    };
+    let sweep_bytes = tile_sweep(p, opts, row0, rows_total, &mut visitor);
+    sweep_bytes + visitor.heaps.len() * k * 8
+}
+
+/// Bounded min-heap of the `k` best `(logit, token)` pairs: the root is the
+/// worst kept candidate.  Ordering prefers higher logit, then smaller token
+/// id — a total order, so results are blocking-invariant.
+struct BoundedTopK {
+    k: usize,
+    heap: Vec<(f32, i32)>,
+}
+
+impl BoundedTopK {
+    fn new(k: usize) -> BoundedTopK {
+        BoundedTopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    /// `a` strictly worse than `b`?
+    fn worse(a: (f32, i32), b: (f32, i32)) -> bool {
+        a.0 < b.0 || (a.0 == b.0 && a.1 > b.1)
+    }
+
+    fn push(&mut self, z: f32, token: i32) {
+        let cand = (z, token);
+        if self.heap.len() < self.k {
+            self.heap.push(cand);
+            self.sift_up(self.heap.len() - 1);
+        } else if Self::worse(self.heap[0], cand) {
+            self.heap[0] = cand;
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::worse(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut worst = i;
+            if l < self.heap.len() && Self::worse(self.heap[l], self.heap[worst]) {
+                worst = l;
+            }
+            if r < self.heap.len() && Self::worse(self.heap[r], self.heap[worst]) {
+                worst = r;
+            }
+            if worst == i {
+                return;
+            }
+            self.heap.swap(i, worst);
+            i = worst;
+        }
+    }
+
+    /// Kept candidates, best first.
+    fn sorted_desc(&self) -> Vec<(f32, i32)> {
+        let mut out = self.heap.clone();
+        out.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        out
+    }
+}
+
+// ----------------------------------------------------------------- sampler
+
+/// [`sample`] output: one token per row plus its full-softmax (T=1)
+/// log-probability.
+#[derive(Debug, Clone)]
+pub struct SampleOut {
+    pub tokens: Vec<i32>,
+    pub logprobs: Vec<f32>,
+    pub workspace_bytes: usize,
+}
+
+/// Online softmax sampling via the Gumbel-max trick, blocked: the sampled
+/// token is `argmax_j (z_j/T + g_j)` with `g_j = −ln(−ln u_j)` and `u_j`
+/// hashed deterministically from `(seeds[i], j)`, which is distributed as
+/// `Categorical(softmax(z/T))` — no `N×V` logits, no `N×V` noise.
+/// `temperature == 0` degenerates to exact argmax (greedy).
+///
+/// The same sweep folds the *untempered* online LSE so the returned
+/// log-probability is the model's T=1 `log p(token)`, comparable across
+/// temperatures and with [`topk`] / [`score`].
+pub fn sample(
+    p: &InferProblem,
+    opts: &KernelOptions,
+    temperature: f32,
+    seeds: &[u64],
+) -> Result<SampleOut> {
+    if seeds.len() != p.n {
+        bail!("sample needs one seed per row: {} seeds for n={}", seeds.len(), p.n);
+    }
+    if !temperature.is_finite() || temperature < 0.0 {
+        bail!("temperature must be finite and >= 0, got {temperature}");
+    }
+    let n = p.n;
+    let mut tokens = vec![0i32; n];
+    let mut logprobs = vec![0f32; n];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    let buffer_bytes: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = tokens
+            .chunks_mut(span)
+            .zip(logprobs.chunks_mut(span))
+            .enumerate()
+            .map(|(ti, (tok_chunk, lp_chunk))| {
+                let row0 = ti * span;
+                let opts = *opts;
+                scope.spawn(move || {
+                    sample_span(p, &opts, temperature, seeds, row0, tok_chunk, lp_chunk)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sample worker")).sum()
+    });
+    let workspace_bytes = n * 8 + buffer_bytes;
+    Ok(SampleOut { tokens, logprobs, workspace_bytes })
+}
+
+struct SampleVisitor<'a> {
+    temperature: f32,
+    seeds: &'a [u64],
+    // Per-row perturbed-argmax state: (best score, best token, best raw z).
+    best_score: Vec<f32>,
+    best_token: Vec<i32>,
+    best_logit: Vec<f32>,
+    tok_out: &'a mut [i32],
+    lp_out: &'a mut [f32],
+}
+
+impl TileVisitor for SampleVisitor<'_> {
+    fn begin_block(&mut self, rows: usize) {
+        self.best_score[..rows].fill(f32::NEG_INFINITY);
+    }
+
+    fn visit_tile_row(&mut self, r: usize, i: usize, j0: usize, z_row: &[f32]) {
+        let seed = self.seeds[i];
+        for (jj, &z) in z_row.iter().enumerate() {
+            let j = j0 + jj;
+            let score = if self.temperature == 0.0 {
+                z
+            } else {
+                z / self.temperature + gumbel_noise(seed, j as u64)
+            };
+            // Strict > keeps the first (smallest j) on exact ties, making
+            // greedy deterministic across blockings.
+            if score > self.best_score[r] {
+                self.best_score[r] = score;
+                self.best_token[r] = j as i32;
+                self.best_logit[r] = z;
+            }
+        }
+    }
+
+    fn end_row(&mut self, r: usize, span_row: usize, lse: f32) {
+        self.tok_out[span_row] = self.best_token[r];
+        self.lp_out[span_row] = self.best_logit[r] - lse;
+    }
+}
+
+fn sample_span(
+    p: &InferProblem,
+    opts: &KernelOptions,
+    temperature: f32,
+    seeds: &[u64],
+    row0: usize,
+    tok_out: &mut [i32],
+    lp_out: &mut [f32],
+) -> usize {
+    let rows_total = tok_out.len();
+    let n_block = opts.n_block.clamp(1, rows_total.max(1));
+    let mut visitor = SampleVisitor {
+        temperature,
+        seeds,
+        best_score: vec![f32::NEG_INFINITY; n_block],
+        best_token: vec![0i32; n_block],
+        best_logit: vec![0f32; n_block],
+        tok_out,
+        lp_out,
+    };
+    let sweep_bytes = tile_sweep(p, opts, row0, rows_total, &mut visitor);
+    sweep_bytes
+        + visitor.best_score.len() * 4
+        + visitor.best_token.len() * 4
+        + visitor.best_logit.len() * 4
+}
+
+/// splitmix64 finalizer.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic standard Gumbel noise for `(seed, j)`: hash to a uniform
+/// in (0, 1), then `g = −ln(−ln u)`.
+fn gumbel_noise(seed: u64, j: u64) -> f32 {
+    let h = mix64(seed ^ j.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15));
+    // 53-bit mantissa, offset by 0.5 so u is never exactly 0 or 1.
+    let u = ((h >> 11) as f64 + 0.5) * (1.0 / 9_007_199_254_740_992.0);
+    (-(-u.ln()).ln()) as f32
+}
+
+// ------------------------------------------------------------------- score
+
+/// [`score`] output: per-token log-probabilities of the forced labels.
+#[derive(Debug, Clone)]
+pub struct ScoreOut {
+    /// `log p(x_i)` per row; `0.0` where the label is ignored (`-1`).
+    pub logprobs: Vec<f32>,
+    /// Mean NLL over non-ignored tokens (== [`cce_forward`] loss).
+    pub nll: f64,
+    /// `exp(nll)`.
+    pub perplexity: f64,
+    pub count: usize,
+    pub workspace_bytes: usize,
+}
+
+/// Teacher-forced scoring: per-token `log p(x_i) = z_{x_i} − lse_i` from
+/// one blocked forward sweep.  The mean NLL is definitionally the CCE loss,
+/// which the tests pin against [`cce_forward`].
+pub fn score(p: &Problem, opts: &KernelOptions) -> ScoreOut {
+    let fwd = cce_forward(p, opts);
+    let logprobs: Vec<f32> = (0..p.n)
+        .map(|i| {
+            if p.x[i] >= 0 {
+                fwd.target_logit[i] - fwd.lse[i]
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    ScoreOut {
+        logprobs,
+        nll: fwd.loss,
+        perplexity: fwd.loss.exp(),
+        count: fwd.count,
+        // The O(N) logprob vector rides on the forward's workspace.
+        workspace_bytes: fwd.workspace_bytes + p.n * 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{random_problem, KernelOptions};
+    use crate::util::rng::Rng;
+
+    fn opts(n_block: usize, v_block: usize, threads: usize) -> KernelOptions {
+        KernelOptions { n_block, v_block, threads, filter: true, sort: true }
+    }
+
+    /// Materialized reference: full logits, argsort descending.
+    fn reference_topk(e: &[f32], c: &[f32], n: usize, d: usize, v: usize, k: usize)
+        -> Vec<Vec<(f32, i32)>> {
+        (0..n)
+            .map(|i| {
+                let mut z: Vec<(f32, i32)> = (0..v)
+                    .map(|j| (dot(&e[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]), j as i32))
+                    .collect();
+                z.sort_by(|a, b| {
+                    b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+                });
+                z.truncate(k);
+                z
+            })
+            .collect()
+    }
+
+    #[test]
+    fn topk_matches_materialized_argsort() {
+        let mut rng = Rng::new(31);
+        let (n, d, v) = (20, 8, 70);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        for (k, nb, vb, th) in [(1, 4, 16, 1), (5, 8, 7, 2), (70, 32, 128, 3)] {
+            let out = topk(&p, &opts(nb, vb, th), k).unwrap();
+            let reference = reference_topk(&e, &c, n, d, v, k);
+            for i in 0..n {
+                let row = &out.rows[i];
+                assert_eq!(row.tokens.len(), k);
+                for (r, &(z, t)) in reference[i].iter().enumerate() {
+                    assert_eq!(row.tokens[r], t, "row {i} rank {r} (k={k})");
+                    let lp = row.logprobs[r];
+                    assert!(
+                        (lp - (z - row.lse)).abs() < 1e-4,
+                        "row {i} rank {r}: lp {lp} vs {}",
+                        z - row.lse
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_rejects_bad_k() {
+        let mut rng = Rng::new(32);
+        let (n, d, v) = (4, 4, 16);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        assert!(topk(&p, &KernelOptions::default(), 0).is_err());
+        assert!(topk(&p, &KernelOptions::default(), 17).is_err());
+        assert!(topk(&p, &KernelOptions::default(), 16).is_ok());
+    }
+
+    #[test]
+    fn greedy_sample_is_argmax_across_blockings() {
+        let mut rng = Rng::new(33);
+        let (n, d, v) = (24, 6, 90);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        let seeds = vec![7u64; n];
+        let reference = reference_topk(&e, &c, n, d, v, 1);
+        for (nb, vb, th) in [(4, 8, 1), (16, 33, 2), (32, 128, 4)] {
+            let out = sample(&p, &opts(nb, vb, th), 0.0, &seeds).unwrap();
+            for i in 0..n {
+                assert_eq!(out.tokens[i], reference[i][0].1, "nb={nb} vb={vb}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_logprob_is_full_softmax_logprob() {
+        let mut rng = Rng::new(34);
+        let (n, d, v) = (10, 5, 40);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        let seeds: Vec<u64> = (0..n as u64).collect();
+        let out = sample(&p, &opts(8, 16, 2), 0.8, &seeds).unwrap();
+        for i in 0..n {
+            let t = out.tokens[i] as usize;
+            // Materialized log softmax of the chosen token.
+            let z: Vec<f32> = (0..v)
+                .map(|j| dot(&e[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]))
+                .collect();
+            let m = z.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let lse = m + z.iter().map(|&x| (x - m).exp()).sum::<f32>().ln();
+            assert!(
+                (out.logprobs[i] - (z[t] - lse)).abs() < 1e-4,
+                "row {i}: {} vs {}",
+                out.logprobs[i],
+                z[t] - lse
+            );
+        }
+    }
+
+    #[test]
+    fn sample_is_deterministic_in_seed_and_blocking() {
+        let mut rng = Rng::new(35);
+        let (n, d, v) = (12, 4, 64);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        let seeds: Vec<u64> = (100..100 + n as u64).collect();
+        let a = sample(&p, &opts(4, 16, 1), 1.0, &seeds).unwrap();
+        let b = sample(&p, &opts(32, 5, 3), 1.0, &seeds).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        let other = sample(&p, &opts(4, 16, 1), 1.0, &vec![999u64; n]).unwrap();
+        assert_ne!(a.tokens, other.tokens, "different seeds should move some row");
+    }
+
+    #[test]
+    fn sample_validates_inputs() {
+        let mut rng = Rng::new(36);
+        let (n, d, v) = (4, 4, 8);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        assert!(sample(&p, &KernelOptions::default(), 1.0, &[1, 2]).is_err());
+        assert!(sample(&p, &KernelOptions::default(), -1.0, &vec![0; n]).is_err());
+        assert!(sample(&p, &KernelOptions::default(), f32::NAN, &vec![0; n]).is_err());
+    }
+
+    #[test]
+    fn score_matches_forward_loss() {
+        let mut rng = Rng::new(37);
+        let (n, d, v) = (30, 8, 50);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.3);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let o = opts(8, 16, 2);
+        let out = score(&p, &o);
+        let fwd = cce_forward(&p, &o);
+        assert_eq!(out.count, fwd.count);
+        assert!((out.nll - fwd.loss).abs() < 1e-12);
+        assert!((out.perplexity - fwd.loss.exp()).abs() < 1e-9);
+        // Mean of per-token logprobs == -nll.
+        let mean_lp: f64 = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t >= 0)
+            .map(|(i, _)| out.logprobs[i] as f64)
+            .sum::<f64>()
+            / out.count as f64;
+        assert!((mean_lp + out.nll).abs() < 1e-4, "{mean_lp} vs {}", -out.nll);
+        for (i, &t) in x.iter().enumerate() {
+            if t < 0 {
+                assert_eq!(out.logprobs[i], 0.0);
+            } else {
+                assert!(out.logprobs[i] <= 0.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_is_blocked_not_nv() {
+        let mut rng = Rng::new(38);
+        let (n, d, v) = (128, 8, 4096);
+        let (e, c, _) = random_problem(&mut rng, n, d, v, 0.0);
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        let o = opts(32, 128, 2);
+        let k = 8;
+        let span = crate::exec::span_rows(n, o.n_block, o.threads);
+        let workers = crate::exec::ceil_div(n, span);
+
+        let out = topk(&p, &o, k).unwrap();
+        let expected = n * k * 8
+            + workers * ((o.n_block * o.v_block + 2 * o.n_block) * 4 + o.n_block * k * 8);
+        assert_eq!(out.workspace_bytes, expected);
+        assert!(out.workspace_bytes < n * v * 4 / 4, "{}", out.workspace_bytes);
+
+        let s = sample(&p, &o, 1.0, &vec![1u64; n]).unwrap();
+        let expected_s =
+            n * 8 + workers * (o.n_block * o.v_block + 2 * o.n_block + 3 * o.n_block) * 4;
+        assert_eq!(s.workspace_bytes, expected_s);
+        assert!(s.workspace_bytes < n * v * 4 / 4, "{}", s.workspace_bytes);
+    }
+
+    #[test]
+    fn bounded_heap_keeps_k_best() {
+        let mut h = BoundedTopK::new(3);
+        for (z, t) in [(1.0, 0), (5.0, 1), (2.0, 2), (5.0, 3), (0.5, 4), (4.0, 5)] {
+            h.push(z, t);
+        }
+        let best = h.sorted_desc();
+        assert_eq!(best.len(), 3);
+        // 5.0@1 beats 5.0@3 on the token tie-break.
+        assert_eq!(best[0], (5.0, 1));
+        assert_eq!(best[1], (5.0, 3));
+        assert_eq!(best[2], (4.0, 5));
+    }
+}

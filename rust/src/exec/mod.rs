@@ -14,6 +14,10 @@
 //!   **vocabulary sorting** by token frequency, and accumulates `dE`/`dC`.
 //!   The indicator term of the target column is applied separately per
 //!   token, so filtering never drops the `−1[j=y_i]` contribution.
+//! * [`infer`]    — the logit-free *inference* kernels built on the same
+//!   tiling: blocked top-k (bounded per-row heap + online LSE), online
+//!   Gumbel-max temperature sampling, and teacher-forced scoring — the
+//!   compute layer of [`crate::serve`].
 //! * [`backend`]  — the [`Backend`] trait over loss implementations, with
 //!   [`NativeBackend`] (this module) and, behind the `pjrt` feature, a
 //!   `PjrtBackend` adapter over the artifact runtime.
@@ -31,12 +35,14 @@
 
 pub mod backend;
 pub mod backward;
+pub mod infer;
 pub mod lse;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{Backend, NativeBackend, NativeMethod};
 pub use backward::{cce_backward, frequency_permutation};
+pub use infer::{sample, score, topk, InferProblem, SampleOut, ScoreOut, TopKOut, TopKRow};
 pub use lse::cce_forward;
 
 use anyhow::{bail, Result};
@@ -102,8 +108,12 @@ impl<'a> Problem<'a> {
         if self.x.len() != self.n {
             bail!("x has {} labels, want {}", self.x.len(), self.n);
         }
-        if let Some(&bad) = self.x.iter().find(|&&t| t >= self.v as i32) {
-            bail!("label {bad} out of range for vocab {}", self.v);
+        if let Some(&bad) = self.x.iter().find(|&&t| t >= self.v as i32 || t < -1) {
+            bail!(
+                "label {bad} out of range for vocab {} (valid: -1 for ignored, or 0..{})",
+                self.v,
+                self.v
+            );
         }
         Ok(())
     }
@@ -394,6 +404,8 @@ mod tests {
         assert!(Problem::new(&e, &c, &x, 2, 4, 4).is_err()); // c too small
         assert!(Problem::new(&e, &c, &[0, 3], 2, 4, 3).is_err()); // label oob
         assert!(Problem::new(&e, &c, &[0, -1], 2, 4, 3).is_ok()); // ignored ok
+        assert!(Problem::new(&e, &c, &[0, -5], 2, 4, 3).is_err()); // below -1
+        assert!(Problem::new(&e, &c, &[0, -2], 2, 4, 3).is_err()); // below -1
     }
 
     #[test]

@@ -20,7 +20,14 @@
 //! * [`exec`]      — native compute backend: blocked online-LSE forward,
 //!   §4.3 filtered/sorted backward, baseline/chunked references, the
 //!   `Backend` trait (`forward`, `forward_backward`, `name`), selected by
-//!   `--backend native|pjrt` with `--threads N` workers.
+//!   `--backend native|pjrt` with `--threads N` workers; plus the
+//!   logit-free inference kernels ([`exec::infer`]): blocked top-k,
+//!   online Gumbel-max sampling, and teacher-forced scoring.
+//! * [`serve`]     — the inference subsystem: micro-batching scheduler
+//!   (bounded queue, deadline/size batch assembly), line-delimited JSON
+//!   protocol over `TcpListener`, lockstep batched decoding from
+//!   `NativeTrainer` checkpoints.  `cce serve` / `cce client` /
+//!   `cce servebench`.
 //! * [`runtime`]   — artifact manifest + host tensors; with the `pjrt`
 //!   feature also the PJRT client and executable cache.
 //! * [`tokenizer`] — from-scratch BPE (vocabulary construction, paper §3.1).
@@ -50,6 +57,7 @@ pub mod data;
 pub mod exec;
 pub mod memmodel;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod tokenizer;
 pub mod util;

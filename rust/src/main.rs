@@ -3,12 +3,18 @@
 //! ```text
 //! cce train   [--backend native|pjrt] [--method cce] [--steps N] ...
 //! cce eval    --checkpoint path [--backend native|pjrt] [--tag e2e]
+//! cce serve   --checkpoint path | --demo  [--port 7343, 0 = ephemeral]
+//!             [--max-batch 8] [--max-wait-ms 3] [--queue-depth 64]
+//! cce client  --port P [--op generate|score|info|shutdown]
+//!             [--prompt "..."] [--text "..."] [--top-k K] [--temperature T]
+//! cce servebench [--demo | --checkpoint path] [--requests 64]
+//!             [--concurrency 8] [--json BENCH_serve.json]
 //! cce table1  [--backend native|pjrt] [--json BENCH_table1.json]
 //!             [--n 1024 --d 256 --v 4096] [--threads N] [--check]
 //! cce tableA1 (= table1 with the Appendix B ignored-token filter)
 //! cce tableA2 / tableA3
 //! cce fig1    [--tokens 65536] [--gpus 16] [--gpu-gb 75]
-//! cce fig3    [--checkpoint path | --warm-steps N]
+//! cce fig3    [--backend native|pjrt] [--checkpoint path | --warm-steps N]
 //! cce fig4 / fig5 [--steps N] [--tag e2e|tiny]
 //! cce figA1   [--backend native|pjrt] [--budget-ms 2000]
 //! cce info    — backend + manifest summary
@@ -42,18 +48,21 @@ fn main() {
 fn usage() -> ! {
     eprintln!(
         "usage: cce <command> [options]\n\ncommands:\n  \
-         train    run a training job (--backend/--method/--steps/--corpus/...)\n  \
-         eval     evaluate a checkpoint (--checkpoint) [--backend]\n  \
-         table1   Table 1: memory & time per method [--backend/--json]\n  \
-         tableA1  Table A1: Table 1 with ignored tokens removed\n  \
-         tableA2  Table A2: backward-pass breakdown (pjrt)\n  \
-         tableA3  Table A3: additional models memory\n  \
-         fig1     Fig. 1 / Table A4: model-zoo memory & max batch\n  \
-         fig3     Fig. 3: softmax rank probabilities (pjrt)\n  \
-         fig4     Fig. 4: fine-tune loss curves, cce vs fused (pjrt)\n  \
-         fig5     Fig. 5: pretrain val perplexity (pjrt)\n  \
-         figA1    Figs. A1/A2: time/memory vs token count [--backend]\n  \
-         info     backend + manifest summary"
+         train      run a training job (--backend/--method/--steps/--corpus/...)\n  \
+         eval       evaluate a checkpoint (--checkpoint) [--backend]\n  \
+         serve      serve a checkpoint over TCP (--checkpoint|--demo, --port)\n  \
+         client     one-shot client for a running server (--port, --op)\n  \
+         servebench serving throughput/latency harness [--json]\n  \
+         table1     Table 1: memory & time per method [--backend/--json]\n  \
+         tableA1    Table A1: Table 1 with ignored tokens removed\n  \
+         tableA2    Table A2: backward-pass breakdown (pjrt)\n  \
+         tableA3    Table A3: additional models memory\n  \
+         fig1       Fig. 1 / Table A4: model-zoo memory & max batch\n  \
+         fig3       Fig. 3: softmax rank probabilities [--backend]\n  \
+         fig4       Fig. 4: fine-tune loss curves, cce vs fused (pjrt)\n  \
+         fig5       Fig. 5: pretrain val perplexity (pjrt)\n  \
+         figA1      Figs. A1/A2: time/memory vs token count [--backend]\n  \
+         info       backend + manifest summary"
     );
     std::process::exit(2);
 }
@@ -100,13 +109,13 @@ fn pjrt_unavailable(cmd: &str) -> Result<()> {
     bail!(
         "`cce {cmd}` drives AOT artifacts and needs the `pjrt` feature \
          (cargo build --features pjrt, plus `make artifacts`); the native \
-         backend covers train/table1/figA1/info"
+         backend covers train/eval/serve/table1/fig3/figA1/info"
     )
 }
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["check", "verbose"])?;
+    let args = Args::parse(argv, &["check", "verbose", "demo"])?;
     let cmd = match args.positional.first() {
         Some(c) => c.as_str(),
         None => usage(),
@@ -115,6 +124,9 @@ fn run() -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "servebench" | "serve-bench" => cmd_servebench(&args),
         "table1" => cmd_table1(&args, 0.0),
         "tableA1" | "tablea1" => {
             let frac = args.get("ignored", 0.35f64)?;
@@ -308,6 +320,120 @@ fn cmd_eval_pjrt(_args: &Args) -> Result<()> {
     pjrt_unavailable("eval --backend pjrt")
 }
 
+// ------------------------------------------------------------------- serve
+
+/// Build the serving engine from `--checkpoint` or `--demo`.  With
+/// `default_demo`, a missing `--checkpoint` implies `--demo` (used by
+/// `servebench`, which should run out of the box) — one construction path,
+/// so `serve --demo` and `servebench` always agree on the demo model.
+fn build_engine(args: &Args, opts: KernelOptions, default_demo: bool) -> Result<cce::serve::Engine> {
+    if args.flag("demo") || (default_demo && args.opt("checkpoint").is_none()) {
+        let vocab = args.get("vocab-size", 512usize)?;
+        let dim = args.get("dim", 32usize)?;
+        let steps = args.get("demo-steps", 4u64)?;
+        eprintln!(
+            "[serve] --demo: training a tiny bag-of-context model \
+             ({steps} steps, vocab {vocab}, d {dim}) — no checkpoint needed"
+        );
+        cce::serve::Engine::demo(vocab, dim, steps, opts)
+    } else {
+        let path = args.require("checkpoint").map_err(|_| {
+            anyhow::anyhow!("serve needs --checkpoint <path> (or --demo for a throwaway model)")
+        })?;
+        // No --window flag: trust the checkpoint's .model.json sidecar.
+        let window = match args.opt("window") {
+            Some(w) => Some(w.parse::<usize>().map_err(|e| anyhow::anyhow!("--window={w}: {e}"))?),
+            None => None,
+        };
+        cce::serve::Engine::from_checkpoint(std::path::Path::new(path), window, opts)
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = kernel_options(args)?;
+    let engine = std::sync::Arc::new(build_engine(args, opts, false)?);
+    let cfg = cce::serve::ServeConfig {
+        host: args.get("host", "127.0.0.1".to_string())?,
+        port: args.get("port", 7343u16)?,
+        workers: args.get("workers", 2usize)?,
+        max_batch: args.get("max-batch", 8usize)?,
+        max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 3u64)?),
+        queue_depth: args.get("queue-depth", 64usize)?,
+    };
+    eprintln!(
+        "[serve] model: vocab {} d {} window {} step {} | {} kernel threads, \
+         {} batch workers, max batch {}",
+        engine.vocab,
+        engine.d_model,
+        engine.window,
+        engine.step(),
+        opts.threads,
+        cfg.workers,
+        cfg.max_batch
+    );
+    let server = cce::serve::serve(engine, &cfg)?;
+    // One parseable line on stdout: the CI smoke test and scripts read the
+    // bound (possibly ephemeral) port from it.
+    println!("[serve] listening on {}", server.addr);
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    server.join()?;
+    println!("[serve] shut down cleanly");
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    use cce::serve::{Client, GenParams};
+    let host = args.get("host", "127.0.0.1".to_string())?;
+    let port: u16 = args.get("port", 7343u16)?;
+    let mut client = Client::connect((host.as_str(), port))?;
+    let op = args.get("op", "generate".to_string())?;
+    let response = match op.as_str() {
+        "generate" => client.generate(GenParams {
+            prompt: args.get("prompt", String::new())?,
+            max_tokens: args.get("max-tokens", 32usize)?,
+            top_k: args.get("top-k", 0usize)?,
+            temperature: args.get("temperature", 0.0f32)?,
+            seed: args.get("seed", 0u64)?,
+        })?,
+        "score" => {
+            let text = args.get("text", "the cat sat on the mat".to_string())?;
+            client.score(&text)?
+        }
+        "info" => client.info()?,
+        "shutdown" => client.shutdown()?,
+        other => bail!("unknown --op {other:?} (generate|score|info|shutdown)"),
+    };
+    println!("{}", response.to_line());
+    Ok(())
+}
+
+fn cmd_servebench(args: &Args) -> Result<()> {
+    use cce::bench::serve as sb;
+    let opts = kernel_options(args)?;
+    // No checkpoint: same demo engine `cce serve --demo` would run.
+    let engine = build_engine(args, opts, true)?;
+    let cfg = sb::ServeBenchConfig {
+        requests: args.get("requests", 64usize)?,
+        concurrency: args.get("concurrency", 8usize)?,
+        max_tokens: args.get("max-tokens", 16usize)?,
+        serve: cce::serve::ServeConfig {
+            workers: args.get("workers", 2usize)?,
+            max_batch: args.get("max-batch", 8usize)?,
+            max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 3u64)?),
+            queue_depth: args.get("queue-depth", 64usize)?,
+            ..cce::serve::ServeConfig::default()
+        },
+    };
+    let bench = sb::run(std::sync::Arc::new(engine), &cfg)?;
+    sb::print(&bench);
+    if let Some(path) = args.opt("json") {
+        sb::write_json(&bench, path)?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
 // ------------------------------------------------------------------ table1
 
 fn cmd_table1(args: &Args, ignored: f64) -> Result<()> {
@@ -385,8 +511,34 @@ fn cmd_tablea2(_args: &Args) -> Result<()> {
     pjrt_unavailable("tableA2")
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_fig3(args: &Args) -> Result<()> {
+    match backend_choice(args)? {
+        BackendChoice::Native => {
+            let warm = args.get("warm-steps", 120u64)?;
+            let seed = args.get("seed", 0u64)?;
+            let vocab = args.get("vocab-size", 1024usize)?;
+            let docs = args.get("corpus-docs", 800usize)?;
+            let stats = bench::fig3::run_native(
+                args.opt("checkpoint"),
+                warm,
+                seed,
+                vocab,
+                docs,
+                kernel_options(args)?,
+            )?;
+            bench::fig3::print(&stats, args.opt("csv"))?;
+            if args.flag("check") {
+                bench::fig3::check(&stats)?;
+                println!("\n  [check] Fig. 3 sparsity claims hold (native, zero artifacts)");
+            }
+            Ok(())
+        }
+        BackendChoice::Pjrt => cmd_fig3_pjrt(args),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_fig3_pjrt(args: &Args) -> Result<()> {
     let rt = runtime::open_default()?;
     let tag = args.get("tag", "e2e".to_string())?;
     let warm = args.get("warm-steps", 150u64)?;
@@ -401,8 +553,8 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_fig3(_args: &Args) -> Result<()> {
-    pjrt_unavailable("fig3")
+fn cmd_fig3_pjrt(_args: &Args) -> Result<()> {
+    pjrt_unavailable("fig3 --backend pjrt")
 }
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,276 @@
+//! Micro-batching scheduler: request queue → batch assembly by
+//! deadline/size → kernel dispatch → response routing.
+//!
+//! Architecture (all `std`, no async runtime):
+//!
+//! * submission goes through a **bounded** [`std::sync::mpsc::sync_channel`]
+//!   — when `queue_depth` jobs are already waiting, [`Batcher::submit`]
+//!   fails immediately and the server surfaces backpressure to the client
+//!   instead of buffering unboundedly;
+//! * `workers` threads share the receiver behind a mutex.  A worker blocks
+//!   for the first job, then keeps the lock only while it drains up to
+//!   `max_batch − 1` more jobs or until `max_wait` elapses (the
+//!   latency/throughput knob), then releases the queue and executes the
+//!   batch — so one worker assembles while the others run kernels;
+//! * each job carries its own response [`std::sync::mpsc::Sender`]; results
+//!   route back to exactly the connection that asked.
+//!
+//! Generate jobs in one batch decode in lockstep through a single blocked
+//! kernel per step ([`Engine::generate_batch`]); score jobs fuse into a
+//! single teacher-forced problem ([`Engine::score_batch`]).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serve::engine::Engine;
+use crate::serve::protocol::{GenParams, Request, Response};
+
+/// How long an idle worker waits on the queue before re-checking the stop
+/// flag (bounds shutdown latency).
+const IDLE_POLL: Duration = Duration::from_millis(25);
+
+/// One queued request plus its response channel.
+pub struct Job {
+    pub request: Request,
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// Batcher counters, exposed by the `info` endpoint.
+#[derive(Debug, Default)]
+pub struct BatchStats {
+    pub batches: AtomicU64,
+    pub jobs: AtomicU64,
+    pub max_batch: AtomicU64,
+}
+
+impl BatchStats {
+    fn record(&self, batch_len: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.jobs.fetch_add(batch_len as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(batch_len as u64, Ordering::Relaxed);
+    }
+}
+
+/// The micro-batching scheduler.
+pub struct Batcher {
+    tx: mpsc::SyncSender<Job>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    stats: Arc<BatchStats>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Batcher {
+    /// Spawn `workers` batch workers over a queue of depth `queue_depth`.
+    pub fn start(
+        engine: Arc<Engine>,
+        workers: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+    ) -> Batcher {
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(BatchStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let max_batch = max_batch.max(1);
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let engine = engine.clone();
+                let rx = rx.clone();
+                let stats = stats.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    worker_loop(&engine, &rx, &stats, &stop, max_batch, max_wait)
+                })
+            })
+            .collect();
+        Batcher { tx, workers: Mutex::new(handles), stats, stop }
+    }
+
+    /// Enqueue a job.  `Err(job)` means the queue is full (backpressure) or
+    /// the batcher has shut down; the job is handed back so the caller can
+    /// answer the client.
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        if self.stop.load(Ordering::SeqCst) {
+            return Err(job);
+        }
+        self.tx.try_send(job).map_err(|err| match err {
+            mpsc::TrySendError::Full(job) => job,
+            mpsc::TrySendError::Disconnected(job) => job,
+        })
+    }
+
+    pub fn stats(&self) -> &BatchStats {
+        &self.stats
+    }
+
+    /// Stop the workers.  Queued-but-unprocessed jobs are dropped, which
+    /// closes their response channels — waiting connections observe the
+    /// hangup and answer "shutting down".
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let mut workers = match self.workers.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for handle in workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: &Engine,
+    rx: &Mutex<mpsc::Receiver<Job>>,
+    stats: &BatchStats,
+    stop: &AtomicBool,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut jobs: Vec<Job> = Vec::new();
+        {
+            let guard = match rx.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            match guard.recv_timeout(IDLE_POLL) {
+                Ok(job) => jobs.push(job),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+            let deadline = Instant::now() + max_wait;
+            while jobs.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match guard.recv_timeout(deadline - now) {
+                    Ok(job) => jobs.push(job),
+                    Err(_) => break,
+                }
+            }
+        }
+        stats.record(jobs.len());
+        run_batch(engine, jobs);
+    }
+}
+
+/// Execute one assembled batch and route the responses.
+fn run_batch(engine: &Engine, jobs: Vec<Job>) {
+    let mut gens: Vec<(GenParams, mpsc::Sender<Response>)> = Vec::new();
+    let mut scores: Vec<(String, mpsc::Sender<Response>)> = Vec::new();
+    for job in jobs {
+        match job.request {
+            Request::Generate(params) => gens.push((params, job.respond)),
+            Request::Score { text } => scores.push((text, job.respond)),
+            // Info/shutdown are answered inline by the connection; they
+            // never enter the queue.
+            other => {
+                let _ = job
+                    .respond
+                    .send(Response::error(format!("op {other:?} is not batchable")));
+            }
+        }
+    }
+    if !gens.is_empty() {
+        let params: Vec<GenParams> = gens.iter().map(|(p, _)| p.clone()).collect();
+        for ((_, respond), result) in gens.iter().zip(engine.generate_batch(&params)) {
+            let response = match result {
+                Ok(out) => Response::Generate {
+                    text: out.text,
+                    tokens: out.tokens,
+                    logprobs: out.logprobs,
+                },
+                Err(err) => Response::error(format!("{err:#}")),
+            };
+            let _ = respond.send(response); // client may have hung up
+        }
+    }
+    if !scores.is_empty() {
+        let texts: Vec<String> = scores.iter().map(|(t, _)| t.clone()).collect();
+        for ((_, respond), result) in scores.iter().zip(engine.score_batch(&texts)) {
+            let response = match result {
+                Ok(res) => Response::Score {
+                    nll: res.nll,
+                    perplexity: res.perplexity,
+                    count: res.count,
+                    logprobs: res.logprobs,
+                },
+                Err(err) => Response::error(format!("{err:#}")),
+            };
+            let _ = respond.send(response);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::KernelOptions;
+
+    fn tiny_engine() -> Arc<Engine> {
+        let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, filter: true, sort: true };
+        Arc::new(Engine::demo(384, 16, 2, opts).unwrap())
+    }
+
+    #[test]
+    fn jobs_roundtrip_through_workers() {
+        let batcher = Batcher::start(
+            tiny_engine(),
+            2,
+            4,
+            Duration::from_millis(2),
+            16,
+        );
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let (tx, rx) = mpsc::channel();
+            let request = if i % 2 == 0 {
+                Request::Generate(GenParams {
+                    prompt: "the".into(),
+                    max_tokens: 3,
+                    ..GenParams::default()
+                })
+            } else {
+                Request::Score { text: "the cat sat".into() }
+            };
+            batcher.submit(Job { request, respond: tx }).map_err(|_| ()).unwrap();
+            rxs.push((i, rx));
+        }
+        for (i, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            match (i % 2, resp) {
+                (0, Response::Generate { tokens, .. }) => assert!(!tokens.is_empty()),
+                (1, Response::Score { count, .. }) => assert!(count > 0),
+                (_, other) => panic!("unexpected response: {other:?}"),
+            }
+        }
+        let stats = batcher.stats();
+        assert_eq!(stats.jobs.load(Ordering::Relaxed), 6);
+        assert!(stats.batches.load(Ordering::Relaxed) >= 1);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn backpressure_bounds_the_queue() {
+        // No workers consuming fast enough: depth-1 queue + a stopped
+        // batcher cannot accept a second job.
+        let batcher = Batcher::start(
+            tiny_engine(),
+            1,
+            1,
+            Duration::from_millis(1),
+            1,
+        );
+        batcher.shutdown(); // workers gone; queue still bounded
+        let (tx, _rx) = mpsc::channel();
+        let job = Job { request: Request::Info, respond: tx };
+        assert!(batcher.submit(job).is_err(), "submit after shutdown must fail");
+    }
+}

@@ -1,0 +1,63 @@
+//! Blocking line-protocol client — used by `cce client`, the serve bench,
+//! the roundtrip example, and the integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::serve::protocol::{GenParams, Request, Response};
+
+/// One connection to a serve instance.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Client> {
+        let stream = TcpStream::connect(&addr)
+            .with_context(|| format!("connecting to {addr:?}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// One request/response roundtrip.
+    pub fn call(&mut self, request: &Request) -> Result<Response> {
+        let mut line = request.to_line();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Response::parse(&reply)
+    }
+
+    /// `call` that promotes protocol-level errors to `Err`.
+    pub fn call_ok(&mut self, request: &Request) -> Result<Response> {
+        match self.call(request)? {
+            Response::Error { message } => Err(anyhow!("server error: {message}")),
+            response => Ok(response),
+        }
+    }
+
+    pub fn generate(&mut self, params: GenParams) -> Result<Response> {
+        self.call_ok(&Request::Generate(params))
+    }
+
+    pub fn score(&mut self, text: &str) -> Result<Response> {
+        self.call_ok(&Request::Score { text: text.to_string() })
+    }
+
+    pub fn info(&mut self) -> Result<Response> {
+        self.call_ok(&Request::Info)
+    }
+
+    pub fn shutdown(&mut self) -> Result<Response> {
+        self.call_ok(&Request::Shutdown)
+    }
+}

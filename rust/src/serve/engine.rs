@@ -1,0 +1,575 @@
+//! The inference engine: a [`NativeState`] checkpoint + BPE tokenizer +
+//! the logit-free kernels of [`crate::exec::infer`], behind thread-safe
+//! batch entry points the micro-batcher calls.
+//!
+//! The model is the trainer's bag-of-context head: the hidden state for a
+//! context is the mean of its last `window` token embeddings, and the next
+//! token distribution is `softmax(h · clsᵀ)`.  Decoding never materializes
+//! an `N×V` logit matrix:
+//!
+//! * **generate** — requests decode in *lockstep*: each step builds one
+//!   hidden row per active request and runs ONE blocked kernel over the
+//!   whole batch (top-k heap for greedy/top-k rows, online Gumbel-max for
+//!   full-vocabulary sampling rows), so micro-batching reaches the kernel,
+//!   not just the queue.
+//! * **score** — all texts of a batch concatenate into a single
+//!   teacher-forced [`exec::score`] problem, then split per request.
+//!
+//! The engine tracks its peak kernel + hidden-buffer working set
+//! (`peak_workspace_bytes`), which `tests/serve.rs` pins to the
+//! `O(N·D + threads·N_B·V_B)` bound.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{
+    CorpusKind, Metrics, NativeModelConfig, NativeState, NativeTrainer, RunConfig,
+};
+use crate::exec::{self, InferProblem, KernelOptions, Problem};
+use crate::serve::protocol::GenParams;
+use crate::tokenizer::{Tokenizer, BOS, EOS};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One generation result.
+#[derive(Debug, Clone)]
+pub struct GenOut {
+    /// Generated token ids (EOS included when the model emitted it).
+    pub tokens: Vec<i32>,
+    /// Full-softmax (T=1) log-probability of each generated token.
+    pub logprobs: Vec<f32>,
+    /// Decoded text (specials dropped).
+    pub text: String,
+}
+
+/// One scoring result.
+#[derive(Debug, Clone)]
+pub struct ScoreRes {
+    /// Mean NLL over the text's next-token predictions.
+    pub nll: f64,
+    pub perplexity: f64,
+    /// Number of scored (next-token) positions.
+    pub count: usize,
+    /// Per-position `log p(token_{i+1} | tokens_{..=i})`.
+    pub logprobs: Vec<f32>,
+}
+
+/// The serving engine.  All entry points take `&self`; the engine is shared
+/// across batcher workers behind an `Arc`.
+pub struct Engine {
+    state: NativeState,
+    tokenizer: Tokenizer,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub window: usize,
+    pub opts: KernelOptions,
+    /// Hard per-request cap on generated tokens.
+    pub max_gen_tokens: usize,
+    /// Hard per-request cap on scored positions — without it a single huge
+    /// `score` text would allocate an unbounded `N×D` hidden buffer before
+    /// any blocked kernel runs, voiding the workspace guarantee.
+    pub max_score_tokens: usize,
+    peak_workspace: AtomicU64,
+    served: AtomicU64,
+}
+
+impl Engine {
+    /// Wrap a state + tokenizer, validating shapes.
+    pub fn new(
+        state: NativeState,
+        tokenizer: Tokenizer,
+        d_model: usize,
+        window: usize,
+        opts: KernelOptions,
+    ) -> Result<Engine> {
+        let vocab = tokenizer.vocab_size();
+        if d_model == 0 || window == 0 {
+            bail!("d_model and window must be positive");
+        }
+        if state.emb.len() != vocab * d_model || state.cls.len() != vocab * d_model {
+            bail!(
+                "state shapes ({} emb, {} cls) do not match vocab {vocab} x d {d_model}",
+                state.emb.len(),
+                state.cls.len()
+            );
+        }
+        Ok(Engine {
+            state,
+            tokenizer,
+            vocab,
+            d_model,
+            window,
+            opts,
+            max_gen_tokens: 256,
+            max_score_tokens: 4096,
+            peak_workspace: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+        })
+    }
+
+    /// Open a `cce train --backend native` checkpoint (+ its `.vocab.json`
+    /// / `.model.json` siblings).  `(vocab, d)` come from the tensors and
+    /// `window` from the model sidecar; `window_override` (an explicit
+    /// `--window` flag) wins over both, and pre-sidecar checkpoints fall
+    /// back to the trainer default.
+    pub fn from_checkpoint(
+        path: &std::path::Path,
+        window_override: Option<usize>,
+        opts: KernelOptions,
+    ) -> Result<Engine> {
+        let bundle = NativeState::load_bundle(path)?;
+        let window = window_override
+            .or(bundle.window)
+            .unwrap_or(NativeModelConfig::default().window);
+        Engine::new(bundle.state, bundle.tokenizer, bundle.d_model, window, opts)
+    }
+
+    /// Self-contained demo engine: build the trainer pipeline on the
+    /// synthetic web corpus and (optionally) train a few steps — no
+    /// artifacts, no files.  Used by `cce serve --demo`, the benches, and
+    /// the integration tests.
+    pub fn demo(vocab_size: usize, d_model: usize, steps: u64, opts: KernelOptions) -> Result<Engine> {
+        let cfg = RunConfig {
+            tag: "serve-demo".into(),
+            method: "cce".into(),
+            steps: steps.max(1),
+            seed: 7,
+            corpus: CorpusKind::Web,
+            corpus_docs: 160,
+            vocab_size,
+            eval_every: 0,
+            checkpoint_every: 0,
+            log_every: u64::MAX,
+            out_dir: std::env::temp_dir().join("cce_serve_demo").to_string_lossy().into(),
+        };
+        let model = NativeModelConfig { d_model, window: 4, lr: 0.5, batch: 4, seq_len: 64 };
+        let trainer = NativeTrainer::build(cfg, model, opts)?;
+        let mut state = trainer.init(7);
+        if steps > 0 {
+            let mut metrics = Metrics::in_memory();
+            state = trainer.train(state, &mut metrics)?;
+        }
+        Engine::new(state, trainer.tokenizer.clone(), d_model, model.window, opts)
+    }
+
+    pub fn step(&self) -> u64 {
+        self.state.step
+    }
+
+    pub fn peak_workspace_bytes(&self) -> u64 {
+        self.peak_workspace.load(Ordering::Relaxed)
+    }
+
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Model half of the `info` endpoint.
+    pub fn info_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str("bag-of-context")),
+            ("vocab", Json::Int(self.vocab as i64)),
+            ("d_model", Json::Int(self.d_model as i64)),
+            ("window", Json::Int(self.window as i64)),
+            ("step", Json::Int(self.state.step as i64)),
+            ("threads", Json::Int(self.opts.threads as i64)),
+            ("n_block", Json::Int(self.opts.n_block as i64)),
+            ("v_block", Json::Int(self.opts.v_block as i64)),
+            ("max_gen_tokens", Json::Int(self.max_gen_tokens as i64)),
+            ("max_score_tokens", Json::Int(self.max_score_tokens as i64)),
+            ("peak_workspace_bytes", Json::Int(self.peak_workspace_bytes() as i64)),
+            ("served", Json::Int(self.served() as i64)),
+        ])
+    }
+
+    fn note_workspace(&self, bytes: usize) {
+        self.peak_workspace.fetch_max(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Hidden row for one context: mean embedding of its last `window`
+    /// tokens (same recurrence the trainer uses within a sequence).
+    fn context_row(&self, ctx: &[i32], out: &mut [f32]) {
+        let d = self.d_model;
+        let lo = ctx.len().saturating_sub(self.window);
+        let tail = &ctx[lo..];
+        out.fill(0.0);
+        for &tok in tail {
+            let row = &self.state.emb[tok as usize * d..(tok as usize + 1) * d];
+            for (acc, &val) in out.iter_mut().zip(row) {
+                *acc += val;
+            }
+        }
+        let len = tail.len().max(1) as f32;
+        for val in out.iter_mut() {
+            *val /= len;
+        }
+    }
+
+    /// Tokenize a request text into a decoding context: BOS + BPE ids.
+    fn context_tokens(&self, text: &str) -> Vec<i32> {
+        let mut ctx = vec![BOS];
+        ctx.extend(self.tokenizer.encode(text));
+        ctx
+    }
+
+    // ------------------------------------------------------------ generate
+
+    /// Decode a batch of requests in lockstep.  Returns one result per
+    /// request, in order.
+    pub fn generate_batch(&self, reqs: &[GenParams]) -> Vec<Result<GenOut>> {
+        let mut slots: Vec<Slot> = reqs.iter().map(|p| self.open_slot(p)).collect();
+        loop {
+            let active: Vec<usize> = slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.err.is_none() && !s.done)
+                .map(|(i, _)| i)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            // Partition by kernel: bounded top-k heap vs full-vocab Gumbel.
+            let heap_rows: Vec<usize> = active
+                .iter()
+                .copied()
+                .filter(|&i| slots[i].params.temperature == 0.0 || slots[i].params.top_k >= 1)
+                .collect();
+            let gumbel_rows: Vec<usize> =
+                active.iter().copied().filter(|&i| !heap_rows.contains(&i)).collect();
+            if !heap_rows.is_empty() {
+                if let Err(err) = self.step_heap_rows(&mut slots, &heap_rows) {
+                    for &i in &heap_rows {
+                        slots[i].err = Some(format!("{err:#}"));
+                    }
+                }
+            }
+            if !gumbel_rows.is_empty() {
+                if let Err(err) = self.step_gumbel_rows(&mut slots, &gumbel_rows) {
+                    for &i in &gumbel_rows {
+                        slots[i].err = Some(format!("{err:#}"));
+                    }
+                }
+            }
+        }
+        self.served.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        slots
+            .into_iter()
+            .map(|s| match s.err {
+                Some(msg) => Err(anyhow!("{msg}")),
+                None => Ok(GenOut {
+                    text: self.tokenizer.decode(&s.out_tokens),
+                    tokens: s.out_tokens,
+                    logprobs: s.out_logprobs,
+                }),
+            })
+            .collect()
+    }
+
+    fn open_slot<'a>(&self, params: &'a GenParams) -> Slot<'a> {
+        let mut slot = Slot {
+            params,
+            budget: params.max_tokens.min(self.max_gen_tokens),
+            ctx: self.context_tokens(&params.prompt),
+            out_tokens: Vec::new(),
+            out_logprobs: Vec::new(),
+            rng: Rng::new(params.seed ^ 0x5E12_7E57),
+            done: false,
+            err: None,
+        };
+        if !params.temperature.is_finite() || params.temperature < 0.0 {
+            slot.err = Some(format!(
+                "temperature must be finite and >= 0, got {}",
+                params.temperature
+            ));
+        } else if params.top_k > self.vocab {
+            slot.err = Some(format!("top_k {} exceeds vocab {}", params.top_k, self.vocab));
+        } else if slot.budget == 0 {
+            slot.done = true;
+        }
+        slot
+    }
+
+    /// Hidden-state matrix for the listed slots; returns the buffer.
+    fn hidden_for(&self, slots: &[Slot], rows: &[usize]) -> Vec<f32> {
+        let d = self.d_model;
+        let mut h = vec![0f32; rows.len() * d];
+        for (r, &i) in rows.iter().enumerate() {
+            self.context_row(&slots[i].ctx, &mut h[r * d..(r + 1) * d]);
+        }
+        h
+    }
+
+    fn step_heap_rows(&self, slots: &mut [Slot], rows: &[usize]) -> Result<()> {
+        let k_max = rows
+            .iter()
+            .map(|&i| {
+                let p = slots[i].params;
+                if p.temperature == 0.0 {
+                    1
+                } else {
+                    p.top_k.clamp(1, self.vocab)
+                }
+            })
+            .max()
+            .unwrap_or(1);
+        let h = self.hidden_for(slots, rows);
+        let p = InferProblem::new(&h, &self.state.cls, rows.len(), self.d_model, self.vocab)?;
+        let out = exec::topk(&p, &self.opts, k_max)?;
+        self.note_workspace(out.workspace_bytes + h.len() * 4);
+        for (r, &i) in rows.iter().enumerate() {
+            let slot = &mut slots[i];
+            let row = &out.rows[r];
+            let (token, logprob) = if slot.params.temperature == 0.0 {
+                (row.tokens[0], row.logprobs[0])
+            } else {
+                let k = slot.params.top_k.clamp(1, self.vocab).min(row.tokens.len());
+                let t_inv = 1.0 / slot.params.temperature as f64;
+                // Renormalized softmax over the k candidates at temperature
+                // T (constant shifts cancel; logprobs are already z − lse).
+                let weights: Vec<f64> = row.logprobs[..k]
+                    .iter()
+                    .map(|&lp| ((lp - row.logprobs[0]) as f64 * t_inv).exp())
+                    .collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = slot.rng.f64() * total;
+                let mut pick = k - 1;
+                for (c, &w) in weights.iter().enumerate() {
+                    if u < w {
+                        pick = c;
+                        break;
+                    }
+                    u -= w;
+                }
+                (row.tokens[pick], row.logprobs[pick])
+            };
+            slot.emit(token, logprob);
+        }
+        Ok(())
+    }
+
+    fn step_gumbel_rows(&self, slots: &mut [Slot], rows: &[usize]) -> Result<()> {
+        // `exec::sample` takes one temperature per call; group rows that
+        // share a temperature (bitwise, so grouping is exact).
+        let mut groups: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        for &i in rows {
+            groups.entry(slots[i].params.temperature.to_bits()).or_default().push(i);
+        }
+        for (t_bits, group) in groups {
+            let temperature = f32::from_bits(t_bits);
+            let h = self.hidden_for(slots, &group);
+            let p =
+                InferProblem::new(&h, &self.state.cls, group.len(), self.d_model, self.vocab)?;
+            let seeds: Vec<u64> = group.iter().map(|&i| slots[i].rng.next_u64()).collect();
+            let out = exec::sample(&p, &self.opts, temperature, &seeds)?;
+            self.note_workspace(out.workspace_bytes + h.len() * 4);
+            for (r, &i) in group.iter().enumerate() {
+                slots[i].emit(out.tokens[r], out.logprobs[r]);
+            }
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------------- score
+
+    /// Score a batch of texts: all rows concatenate into ONE blocked
+    /// teacher-forced problem, then split per request.
+    pub fn score_batch(&self, texts: &[String]) -> Vec<Result<ScoreRes>> {
+        // Per-text token streams and their row spans in the fused problem.
+        let mut h_all: Vec<f32> = Vec::new();
+        let mut targets: Vec<i32> = Vec::new();
+        let mut spans: Vec<Result<(usize, usize), String>> = Vec::with_capacity(texts.len());
+        let d = self.d_model;
+        let too_large =
+            |n: usize| format!("text too large to score: {n} > cap {}", self.max_score_tokens);
+        for text in texts {
+            // Byte pre-check before tokenizing (< 1 token per byte, so
+            // bytes bound the row count from above).
+            if text.len() > self.max_score_tokens.saturating_mul(8) {
+                spans.push(Err(format!(
+                    "text too large to score: {} bytes (cap {} tokens)",
+                    text.len(),
+                    self.max_score_tokens
+                )));
+                continue;
+            }
+            let tokens = self.context_tokens(text);
+            if tokens.len() < 2 {
+                spans.push(Err("text tokenizes to < 2 tokens; nothing to score".into()));
+                continue;
+            }
+            if tokens.len() - 1 > self.max_score_tokens {
+                spans.push(Err(too_large(tokens.len() - 1)));
+                continue;
+            }
+            let rows = tokens.len() - 1;
+            let start = targets.len();
+            let mut row = vec![0f32; d];
+            for i in 0..rows {
+                self.context_row(&tokens[..=i], &mut row);
+                h_all.extend_from_slice(&row);
+                targets.push(tokens[i + 1]);
+            }
+            spans.push(Ok((start, rows)));
+        }
+        let scored = if targets.is_empty() {
+            None
+        } else {
+            let run = || -> Result<exec::ScoreOut> {
+                let p = Problem::new(
+                    &h_all,
+                    &self.state.cls,
+                    &targets,
+                    targets.len(),
+                    d,
+                    self.vocab,
+                )?;
+                let out = exec::score(&p, &self.opts);
+                self.note_workspace(out.workspace_bytes + h_all.len() * 4);
+                Ok(out)
+            };
+            Some(run())
+        };
+        self.served.fetch_add(texts.len() as u64, Ordering::Relaxed);
+        spans
+            .into_iter()
+            .map(|span| match span {
+                Err(msg) => Err(anyhow!("{msg}")),
+                Ok((start, rows)) => match &scored {
+                    Some(Ok(out)) => {
+                        let lps = &out.logprobs[start..start + rows];
+                        let nll = -(lps.iter().map(|&lp| lp as f64).sum::<f64>())
+                            / rows as f64;
+                        Ok(ScoreRes {
+                            nll,
+                            perplexity: nll.exp(),
+                            count: rows,
+                            logprobs: lps.to_vec(),
+                        })
+                    }
+                    Some(Err(err)) => Err(anyhow!("{err:#}")),
+                    None => unreachable!("spans exist only when targets exist"),
+                },
+            })
+            .collect()
+    }
+}
+
+/// Decoding state of one in-flight generate request.
+struct Slot<'a> {
+    params: &'a GenParams,
+    budget: usize,
+    ctx: Vec<i32>,
+    out_tokens: Vec<i32>,
+    out_logprobs: Vec<f32>,
+    rng: Rng,
+    done: bool,
+    err: Option<String>,
+}
+
+impl Slot<'_> {
+    fn emit(&mut self, token: i32, logprob: f32) {
+        self.out_tokens.push(token);
+        self.out_logprobs.push(logprob);
+        self.ctx.push(token);
+        if token == EOS || self.out_tokens.len() >= self.budget {
+            self.done = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_engine() -> Engine {
+        let opts = KernelOptions { n_block: 16, v_block: 64, threads: 2, filter: true, sort: true };
+        Engine::demo(384, 24, 6, opts).unwrap()
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic_and_batch_invariant() {
+        let engine = tiny_engine();
+        let req = GenParams { prompt: "the".into(), max_tokens: 6, ..GenParams::default() };
+        let solo = engine.generate_batch(std::slice::from_ref(&req));
+        let batch = engine.generate_batch(&[req.clone(), req.clone(), req.clone()]);
+        let solo_out = solo[0].as_ref().unwrap();
+        assert!(!solo_out.tokens.is_empty());
+        assert!(solo_out.tokens.len() <= 6);
+        for out in &batch {
+            let out = out.as_ref().unwrap();
+            assert_eq!(out.tokens, solo_out.tokens, "lockstep batching changed greedy output");
+            assert_eq!(out.text, solo_out.text);
+        }
+        // Greedy logprobs are the max-probability tokens: all <= 0.
+        assert!(solo_out.logprobs.iter().all(|&lp| lp <= 1e-6));
+    }
+
+    #[test]
+    fn sampling_modes_and_validation() {
+        let engine = tiny_engine();
+        let mk = |top_k, temperature, seed| GenParams {
+            prompt: "the cat".into(),
+            max_tokens: 4,
+            top_k,
+            temperature,
+            seed,
+        };
+        let outs = engine.generate_batch(&[
+            mk(0, 0.0, 0),  // greedy
+            mk(4, 0.9, 1),  // top-k sampling
+            mk(0, 1.0, 2),  // full-vocab Gumbel sampling
+            mk(0, -1.0, 3), // invalid temperature
+        ]);
+        assert!(outs[0].is_ok() && outs[1].is_ok() && outs[2].is_ok());
+        assert!(outs[3].is_err(), "negative temperature must be rejected");
+        // Same seed => identical sampled output; different seed may differ.
+        let a = engine.generate_batch(&[mk(0, 1.0, 9)]);
+        let b = engine.generate_batch(&[mk(0, 1.0, 9)]);
+        assert_eq!(
+            a[0].as_ref().unwrap().tokens,
+            b[0].as_ref().unwrap().tokens,
+            "sampling must be reproducible from the seed"
+        );
+    }
+
+    #[test]
+    fn score_batch_splits_correctly() {
+        let engine = tiny_engine();
+        let texts = vec!["the cat sat on the mat".to_string(), "a dog".to_string()];
+        let batch = engine.score_batch(&texts);
+        let solo: Vec<_> = texts
+            .iter()
+            .map(|t| engine.score_batch(std::slice::from_ref(t)).remove(0).unwrap())
+            .collect();
+        for (b, s) in batch.iter().zip(&solo) {
+            let b = b.as_ref().unwrap();
+            assert_eq!(b.count, s.count);
+            assert!((b.nll - s.nll).abs() < 1e-5, "{} vs {}", b.nll, s.nll);
+            assert_eq!(b.logprobs.len(), s.logprobs.len());
+        }
+        assert!(solo[0].nll > 0.0 && solo[0].perplexity > 1.0);
+        // Empty text has nothing to predict.
+        let empty = engine.score_batch(&[String::new()]);
+        assert!(empty[0].is_err());
+        // Oversized text is rejected before any allocation, and does not
+        // poison the rest of the batch.
+        let huge = "word ".repeat(engine.max_score_tokens * 2);
+        let mixed = engine.score_batch(&[huge, "the cat".to_string()]);
+        let err = format!("{:#}", mixed[0].as_ref().err().expect("oversized must fail"));
+        assert!(err.contains("too large"), "{err}");
+        assert!(mixed[1].is_ok());
+    }
+
+    #[test]
+    fn max_tokens_zero_returns_empty() {
+        let engine = tiny_engine();
+        let out = engine
+            .generate_batch(&[GenParams { max_tokens: 0, ..GenParams::default() }])
+            .remove(0)
+            .unwrap();
+        assert!(out.tokens.is_empty());
+        assert!(out.text.is_empty());
+    }
+}

@@ -1,0 +1,36 @@
+//! `serve` — the logit-free inference subsystem.
+//!
+//! The paper's blocked online-LSE trick gives serving the same memory
+//! property it gives training: per-token log-probabilities, argmax, top-k,
+//! and temperature sampling all come out of one `(N_B, V_B)`-tiled sweep
+//! over the classifier, so the `N×V` logit matrix never exists at
+//! inference either (kernels: [`crate::exec::infer`]).  This module is the
+//! system around those kernels:
+//!
+//! * [`engine`]   — checkpoint + tokenizer + kernels: lockstep batched
+//!   decoding (greedy / top-k / temperature) and fused batch scoring, with
+//!   peak-workspace accounting.
+//! * [`batcher`]  — micro-batching scheduler: bounded queue (backpressure),
+//!   batch assembly by deadline/size, `std::thread` workers, per-request
+//!   response routing.
+//! * [`protocol`] — line-delimited JSON over TCP (`generate` / `score` /
+//!   `info` / `shutdown`), built on [`crate::util::json`].
+//! * [`server`]   — `std::net::TcpListener` front end; [`client`] — the
+//!   matching blocking client.
+//!
+//! CLI: `cce serve --checkpoint runs/web/final.ckpt --port 7343`, then
+//! `cce client --port 7343 --prompt "the"`.  `cce servebench` drives a
+//! throughput/latency harness over the full stack
+//! ([`crate::bench::serve`]).
+
+pub mod batcher;
+pub mod client;
+pub mod engine;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{BatchStats, Batcher, Job};
+pub use client::Client;
+pub use engine::{Engine, GenOut, ScoreRes};
+pub use protocol::{GenParams, Request, Response};
+pub use server::{serve, ServeConfig, Server};

@@ -1,0 +1,357 @@
+//! Line-delimited JSON wire protocol: one request object per line in, one
+//! response object per line out, over a plain TCP stream.
+//!
+//! Requests (`op` selects the endpoint):
+//!
+//! ```text
+//! {"op":"generate","prompt":"...","max_tokens":32,"top_k":8,"temperature":0.7,"seed":1}
+//! {"op":"score","text":"..."}
+//! {"op":"info"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Responses always carry `"ok"`; successes echo `"op"`:
+//!
+//! ```text
+//! {"ok":true,"op":"generate","text":"...","tokens":[...],"logprobs":[...]}
+//! {"ok":true,"op":"score","nll":2.1,"perplexity":8.2,"count":12,"logprobs":[...]}
+//! {"ok":true,"op":"info", ...model/server fields...}
+//! {"ok":true,"op":"shutdown"}
+//! {"ok":false,"error":"..."}
+//! ```
+//!
+//! Everything is built on [`crate::util::json`] — no external crates, and
+//! the same parser both sides of the wire.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Sampling parameters of one `generate` request.
+///
+/// `temperature == 0` is greedy argmax; `top_k == 0` with a positive
+/// temperature samples the full vocabulary (blocked Gumbel-max); `top_k >=
+/// 1` restricts sampling to the k best tokens.  `seed` makes the request
+/// reproducible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenParams {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub top_k: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams { prompt: String::new(), max_tokens: 32, top_k: 0, temperature: 0.0, seed: 0 }
+    }
+}
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Generate(GenParams),
+    Score { text: String },
+    Info,
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Generate(p) => Json::obj(vec![
+                ("op", Json::str("generate")),
+                ("prompt", Json::str(&p.prompt)),
+                ("max_tokens", Json::Int(p.max_tokens as i64)),
+                ("top_k", Json::Int(p.top_k as i64)),
+                ("temperature", Json::Float(p.temperature as f64)),
+                ("seed", Json::Int(p.seed as i64)),
+            ]),
+            Request::Score { text } => {
+                Json::obj(vec![("op", Json::str("score")), ("text", Json::str(text))])
+            }
+            Request::Info => Json::obj(vec![("op", Json::str("info"))]),
+            Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let op = j.req("op")?.as_str().ok_or_else(|| anyhow!("op must be a string"))?;
+        match op {
+            "generate" => {
+                let defaults = GenParams::default();
+                Ok(Request::Generate(GenParams {
+                    prompt: j
+                        .get("prompt")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    max_tokens: get_usize(j, "max_tokens", defaults.max_tokens)?,
+                    top_k: get_usize(j, "top_k", defaults.top_k)?,
+                    temperature: match j.get("temperature") {
+                        None => defaults.temperature,
+                        Some(v) => v
+                            .as_f64()
+                            .ok_or_else(|| anyhow!("temperature must be a number"))?
+                            as f32,
+                    },
+                    seed: get_u64_wire(j, "seed", 0)?,
+                }))
+            }
+            "score" => {
+                let text = j
+                    .req("text")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("text must be a string"))?;
+                Ok(Request::Score { text: text.to_string() })
+            }
+            "info" => Ok(Request::Info),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown op {other:?} (generate|score|info|shutdown)"),
+        }
+    }
+
+    /// Parse one wire line.
+    pub fn parse(line: &str) -> Result<Request> {
+        Request::from_json(&Json::parse(line.trim())?)
+    }
+
+    /// Serialize as one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Generate { text: String, tokens: Vec<i32>, logprobs: Vec<f32> },
+    Score { nll: f64, perplexity: f64, count: usize, logprobs: Vec<f32> },
+    /// `info` payload: an open field set (model dims, step, peak workspace,
+    /// batcher counters) so the endpoint can grow without protocol breaks.
+    Info(Json),
+    /// Shutdown acknowledged.
+    Shutdown,
+    Error { message: String },
+}
+
+impl Response {
+    pub fn error(message: impl Into<String>) -> Response {
+        Response::Error { message: message.into() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Generate { text, tokens, logprobs } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::str("generate")),
+                ("text", Json::str(text)),
+                ("tokens", Json::arr(tokens.iter().map(|&t| Json::Int(t as i64)))),
+                ("logprobs", Json::arr(logprobs.iter().map(|&p| Json::Float(p as f64)))),
+            ]),
+            Response::Score { nll, perplexity, count, logprobs } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::str("score")),
+                ("nll", Json::Float(*nll)),
+                ("perplexity", Json::Float(*perplexity)),
+                ("count", Json::Int(*count as i64)),
+                ("logprobs", Json::arr(logprobs.iter().map(|&p| Json::Float(p as f64)))),
+            ]),
+            Response::Info(fields) => {
+                let mut entries = vec![
+                    ("ok".to_string(), Json::Bool(true)),
+                    ("op".to_string(), Json::str("info")),
+                ];
+                if let Some(obj) = fields.as_object() {
+                    entries.extend(obj.iter().cloned());
+                }
+                Json::Object(entries)
+            }
+            Response::Shutdown => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::str("shutdown")),
+            ]),
+            Response::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(message)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response> {
+        let ok = j.req("ok")?.as_bool().ok_or_else(|| anyhow!("ok must be a bool"))?;
+        if !ok {
+            return Ok(Response::Error {
+                message: j
+                    .get("error")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unspecified error")
+                    .to_string(),
+            });
+        }
+        let op = j.req("op")?.as_str().ok_or_else(|| anyhow!("op must be a string"))?;
+        match op {
+            "generate" => Ok(Response::Generate {
+                text: j
+                    .get("text")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                tokens: get_i32_array(j, "tokens")?,
+                logprobs: get_f32_array(j, "logprobs")?,
+            }),
+            "score" => Ok(Response::Score {
+                nll: j.req("nll")?.as_f64().ok_or_else(|| anyhow!("nll must be a number"))?,
+                perplexity: j
+                    .req("perplexity")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("perplexity must be a number"))?,
+                count: get_usize(j, "count", 0)?,
+                logprobs: get_f32_array(j, "logprobs")?,
+            }),
+            "info" => {
+                let fields: Vec<(String, Json)> = j
+                    .as_object()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter(|(k, _)| k != "ok" && k != "op")
+                    .cloned()
+                    .collect();
+                Ok(Response::Info(Json::Object(fields)))
+            }
+            "shutdown" => Ok(Response::Shutdown),
+            other => bail!("unknown response op {other:?}"),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        Response::from_json(&Json::parse(line.trim())?)
+    }
+
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// u64 carried over a JSON int: values above `i64::MAX` travel as their
+/// two's-complement negative and wrap back losslessly here, so the full
+/// seed space round-trips (matches `Json::Int(seed as i64)` on the way
+/// out).
+fn get_u64_wire(j: &Json, key: &str, default: u64) -> Result<u64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => Ok(v.as_i64().ok_or_else(|| anyhow!("{key} must be an integer"))? as u64),
+    }
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let i = v.as_i64().ok_or_else(|| anyhow!("{key} must be an integer"))?;
+            if i < 0 {
+                bail!("{key} must be >= 0, got {i}");
+            }
+            Ok(i as usize)
+        }
+    }
+}
+
+fn get_f32_array(j: &Json, key: &str) -> Result<Vec<f32>> {
+    Ok(j.get(key)
+        .and_then(|v| v.as_array())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_f64().map(|f| f as f32))
+        .collect())
+}
+
+fn get_i32_array(j: &Json, key: &str) -> Result<Vec<i32>> {
+    Ok(j.get(key)
+        .and_then(|v| v.as_array())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_i64().map(|i| i as i32))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            Request::Generate(GenParams {
+                prompt: "the cat".into(),
+                max_tokens: 8,
+                top_k: 4,
+                temperature: 0.7,
+                seed: 42,
+            }),
+            Request::Score { text: "hello \"world\"\n".into() },
+            Request::Info,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            assert!(!line.contains('\n'), "line framing broken: {line:?}");
+            assert_eq!(Request::parse(&line).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn generate_defaults_fill_in() {
+        let req = Request::parse(r#"{"op":"generate","prompt":"hi"}"#).unwrap();
+        match req {
+            Request::Generate(p) => {
+                assert_eq!(p.prompt, "hi");
+                assert_eq!(p.max_tokens, GenParams::default().max_tokens);
+                assert_eq!(p.top_k, 0);
+                assert_eq!(p.temperature, 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = vec![
+            Response::Generate {
+                text: "out".into(),
+                tokens: vec![5, 6, 2],
+                logprobs: vec![-0.5, -1.25, -2.0],
+            },
+            Response::Score { nll: 2.5, perplexity: 12.18, count: 3, logprobs: vec![-2.5] },
+            Response::Info(Json::obj(vec![("vocab", Json::Int(512))])),
+            Response::Shutdown,
+            Response::error("queue full"),
+        ];
+        for resp in resps {
+            let line = resp.to_line();
+            assert!(!line.contains('\n'));
+            assert_eq!(Response::parse(&line).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn full_seed_space_roundtrips() {
+        for seed in [0u64, 1, i64::MAX as u64, i64::MAX as u64 + 1, u64::MAX] {
+            let req = Request::Generate(GenParams { seed, ..GenParams::default() });
+            match Request::parse(&req.to_line()).unwrap() {
+                Request::Generate(p) => assert_eq!(p.seed, seed),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        assert!(Request::parse("{}").is_err());
+        assert!(Request::parse(r#"{"op":"evaporate"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"score"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"generate","max_tokens":-3}"#).is_err());
+        assert!(Request::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! TCP front end: accept loop, per-connection line protocol, graceful
+//! shutdown.
+//!
+//! Dependency-free: [`std::net::TcpListener`] + one thread per connection
+//! reading newline-delimited JSON ([`super::protocol`]).  `generate` and
+//! `score` go through the micro-batcher ([`super::batcher`]); `info` and
+//! `shutdown` are answered inline.  Binding port 0 picks an ephemeral port
+//! (the bound address is reported on [`Server::addr`]) — which is how the
+//! CI smoke test and the integration tests avoid port collisions.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::batcher::{Batcher, Job};
+use crate::serve::engine::Engine;
+use crate::serve::protocol::{Request, Response};
+use crate::util::json::Json;
+
+/// Server + batcher knobs (`cce serve` flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub host: String,
+    /// 0 = ephemeral.
+    pub port: u16,
+    /// Batch workers (kernel threads are a separate knob:
+    /// [`crate::exec::KernelOptions::threads`]).
+    pub workers: usize,
+    /// Largest micro-batch.
+    pub max_batch: usize,
+    /// How long batch assembly waits for stragglers.
+    pub max_wait: Duration,
+    /// Bounded request-queue depth (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(3),
+            queue_depth: 64,
+        }
+    }
+}
+
+/// A running server.  Dropping the handle does NOT stop it; call
+/// [`Server::stop`] or send a `shutdown` request, then [`Server::join`].
+pub struct Server {
+    pub addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    batcher: Arc<Batcher>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Bind, spawn the batcher + accept loop, and return immediately.
+pub fn serve(engine: Arc<Engine>, cfg: &ServeConfig) -> Result<Server> {
+    let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+        .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let batcher = Arc::new(Batcher::start(
+        engine.clone(),
+        cfg.workers,
+        cfg.max_batch,
+        cfg.max_wait,
+        cfg.queue_depth,
+    ));
+    let accept = {
+        let batcher = batcher.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || accept_loop(listener, addr, engine, batcher, stop))
+    };
+    Ok(Server { addr, accept: Some(accept), batcher, stop })
+}
+
+impl Server {
+    /// Request shutdown from this process (equivalent to a client sending
+    /// `{"op":"shutdown"}`).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() so the loop observes the flag.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Wait for the accept loop to exit, then stop the batch workers.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(handle) = self.accept.take() {
+            handle.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        self.batcher.shutdown();
+        Ok(())
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    addr: SocketAddr,
+    engine: Arc<Engine>,
+    batcher: Arc<Batcher>,
+    stop: Arc<AtomicBool>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(stream) => stream,
+            Err(_) => continue,
+        };
+        let engine = engine.clone();
+        let batcher = batcher.clone();
+        let stop = stop.clone();
+        // One thread per connection: connections are long-lived and few at
+        // this substrate's scale; concurrency inside a connection comes
+        // from the batcher, not from here.
+        std::thread::spawn(move || connection(stream, addr, &engine, &batcher, &stop));
+    }
+}
+
+/// Serve one connection until EOF, error, or shutdown.
+fn connection(
+    stream: TcpStream,
+    addr: SocketAddr,
+    engine: &Engine,
+    batcher: &Batcher,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    let reader = match stream.try_clone() {
+        Ok(clone) => BufReader::new(clone),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(line) => line,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Err(err) => Response::error(format!("bad request: {err:#}")),
+            Ok(Request::Info) => Response::Info(info_fields(engine, batcher)),
+            Ok(Request::Shutdown) => {
+                let _ = write_line(&mut writer, &Response::Shutdown);
+                stop.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(addr); // wake accept()
+                return;
+            }
+            Ok(request) => dispatch(request, batcher, stop),
+        };
+        if write_line(&mut writer, &response).is_err() {
+            break;
+        }
+    }
+}
+
+/// Route a batchable request through the micro-batcher and wait for its
+/// response.
+fn dispatch(request: Request, batcher: &Batcher, stop: &AtomicBool) -> Response {
+    if stop.load(Ordering::SeqCst) {
+        return Response::error("server is shutting down");
+    }
+    let (tx, rx) = mpsc::channel();
+    match batcher.submit(Job { request, respond: tx }) {
+        Err(_) => Response::error("queue full (backpressure): retry later"),
+        Ok(()) => match rx.recv_timeout(Duration::from_secs(300)) {
+            Ok(response) => response,
+            // Sender dropped (shutdown raced the job) or server wedged.
+            Err(_) => Response::error("request dropped: server shutting down or timed out"),
+        },
+    }
+}
+
+fn info_fields(engine: &Engine, batcher: &Batcher) -> Json {
+    let stats = batcher.stats();
+    let mut fields: Vec<(String, Json)> = match engine.info_json() {
+        Json::Object(entries) => entries,
+        other => vec![("model_info".into(), other)],
+    };
+    fields.push((
+        "batches".into(),
+        Json::Int(stats.batches.load(Ordering::Relaxed) as i64),
+    ));
+    fields.push((
+        "batched_jobs".into(),
+        Json::Int(stats.jobs.load(Ordering::Relaxed) as i64),
+    ));
+    fields.push((
+        "max_batch_observed".into(),
+        Json::Int(stats.max_batch.load(Ordering::Relaxed) as i64),
+    ));
+    Json::Object(fields)
+}
+
+fn write_line(writer: &mut TcpStream, response: &Response) -> std::io::Result<()> {
+    let mut line = response.to_line();
+    line.push('\n');
+    writer.write_all(line.as_bytes())?;
+    writer.flush()
+}
