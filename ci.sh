@@ -1,17 +1,39 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, and the tier-1 build/test cycle.
+# CI gate: formatting, lints, the tier-1 build/test cycle, the serve smoke,
+# and the perf-tracking bench stage.
 #
-#   ./ci.sh            # fmt check + clippy + build + test (default features)
-#   ./ci.sh --pjrt     # additionally lint/build the pjrt feature (stub xla)
+#   ./ci.sh            # full pipeline (fmt, clippy incl. --features pjrt,
+#                      #   release build, tests, serve smoke, benches +
+#                      #   regression check against the committed BENCH files)
+#   ./ci.sh --quick    # fmt + clippy + `cargo test -q` only — fast iteration
+#                      #   (skips the release build, serve smoke, and benches)
+#   BENCH_UPDATE=1 ./ci.sh   # accept a bench regression as the new baseline
 #
-# The default pipeline needs no network, no libxla, and no artifacts: the
-# native backend (`rust/src/exec/`) covers the hot path and every default
-# test.  Lints are scoped to the `cce` package; the vendored stand-in
-# crates under rust/vendor/ are exercised by `cargo test` but not held to
-# the same lint bar.
+# The pipeline needs no network, no libxla, and no artifacts: the native
+# backend (`rust/src/exec/`) covers the hot path and every default test, and
+# the vendored link-free xla stub keeps the `--features pjrt` lint honest
+# without the real bindings.  Lints are scoped to the `cce` package; the
+# vendored stand-in crates under rust/vendor/ are exercised by `cargo test`
+# but not held to the same lint bar.
+#
+# The bench stage runs `cce table1 --backend native` and `cce servebench` at
+# a small fixed grid and refreshes BENCH_table1.json / BENCH_serve.json in
+# the repo root — commit both with your PR so the perf trajectory exists.
+# tools/check_bench.sh fails the build on a >25% regression in the
+# filtered-vs-unfiltered backward gap or in the cce forward time (see
+# docs/benchmarks.md).
 
 set -euo pipefail
 cd "$(dirname "$0")"
+
+QUICK=0
+for arg in "$@"; do
+    case "$arg" in
+        --quick) QUICK=1 ;;
+        --pjrt)  echo "note: --pjrt is now implied (the pjrt lint always runs)" ;;
+        *) echo "usage: ./ci.sh [--quick]"; exit 2 ;;
+    esac
+done
 
 echo "== cargo fmt --check =="
 cargo fmt -p cce -- --check
@@ -19,9 +41,16 @@ cargo fmt -p cce -- --check
 echo "== cargo clippy (-D warnings) =="
 cargo clippy -p cce --all-targets -- -D warnings
 
-if [[ "${1:-}" == "--pjrt" ]]; then
-    echo "== cargo clippy --features pjrt =="
-    cargo clippy -p cce --all-targets --features pjrt -- -D warnings
+# The pjrt feature path compiles against the vendored link-free xla stub, so
+# this lint needs no libxla and runs unconditionally.
+echo "== cargo clippy --features pjrt (-D warnings) =="
+cargo clippy -p cce --all-targets --features pjrt -- -D warnings
+
+if [[ "$QUICK" == "1" ]]; then
+    echo "== quick: cargo test -q (debug) =="
+    cargo test -q
+    echo "CI OK (quick: release build, serve smoke, and benches skipped)"
+    exit 0
 fi
 
 echo "== tier-1: cargo build --release && cargo test -q =="
@@ -43,13 +72,29 @@ trap '{ [[ -z "$SERVE_PID" ]] || kill "$SERVE_PID" 2>/dev/null || true; } ; rm -
     --max-batch 4 --max-wait-ms 2 > "$SMOKE_DIR/serve.log" 2>"$SMOKE_DIR/serve.err" &
 SERVE_PID=$!
 
-# Wait for the bound (ephemeral) port to appear on stdout.
+# True when the (still unreaped) server child is alive and not a zombie.
+# `kill -0` alone stays true for a crashed-but-unreaped child, which used to
+# burn the whole poll budget before anyone noticed the crash; the ps state
+# probe catches that.  If ps is missing or does not understand `-o state`
+# (busybox), the probe yields "" and we fall back to plain kill -0 liveness
+# rather than declaring a healthy server dead.
+serve_alive() {
+    kill -0 "$SERVE_PID" 2>/dev/null || return 1
+    local state
+    state=$(ps -o state= -p "$SERVE_PID" 2>/dev/null | tr -d '[:space:]') || state=""
+    [[ "$state" != Z* ]]
+}
+
+# Wait for the bound (ephemeral) port to appear on stdout; bail out the
+# moment the server dies, propagating its real exit status.
 PORT=""
 for _ in $(seq 1 100); do
     PORT=$(sed -n 's/.*listening on .*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve.log" | head -1)
     [[ -n "$PORT" ]] && break
-    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
-        echo "serve exited early:"; cat "$SMOKE_DIR/serve.err"; exit 1
+    if ! serve_alive; then
+        RC=0; wait "$SERVE_PID" || RC=$?
+        echo "serve exited early (status $RC):"; cat "$SMOKE_DIR/serve.err"
+        exit $(( RC == 0 ? 1 : RC ))
     fi
     sleep 0.1
 done
@@ -61,9 +106,47 @@ done
     | grep -q '"ok":true' || { echo "score roundtrip failed"; exit 1; }
 "$CCE" client --port "$PORT" --op shutdown >/dev/null
 
-# Clean shutdown: the server process must exit 0 on its own.
-wait "$SERVE_PID" || { echo "serve did not shut down cleanly"; cat "$SMOKE_DIR/serve.err"; exit 1; }
+# Clean shutdown: the server process must exit 0 on its own; a non-zero
+# status is propagated instead of being flattened to `exit 1`.
+RC=0; wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+if [[ "$RC" -ne 0 ]]; then
+    echo "serve did not shut down cleanly (status $RC):"; cat "$SMOKE_DIR/serve.err"
+    exit "$RC"
+fi
 grep -q "shut down cleanly" "$SMOKE_DIR/serve.log" || { echo "missing clean-shutdown marker"; exit 1; }
 echo "   serve self-test OK (port $PORT)"
+
+echo "== bench: table1 (native) + servebench at the fixed CI grid =="
+# Fixed grid (see docs/benchmarks.md): d >= 128 keeps gen_loss_inputs'
+# softmax peaked enough for real block skipping; threads pinned to 2 so
+# numbers are comparable across differently-sized runners.
+"$CCE" table1 --backend native --n 512 --d 128 --v 2048 --threads 2 \
+    --budget-ms 400 --seed 0 --json "$SMOKE_DIR/BENCH_table1.json"
+"$CCE" servebench --requests 48 --concurrency 4 --max-tokens 8 --threads 2 \
+    --json "$SMOKE_DIR/BENCH_serve.json"
+
+UPDATE_FLAG=""
+[[ "${BENCH_UPDATE:-0}" == "1" ]] && UPDATE_FLAG="--update"
+tools/check_bench.sh $UPDATE_FLAG "$SMOKE_DIR/BENCH_table1.json" BENCH_table1.json
+
+# BENCH_serve.json is not regression-gated (latency percentiles are too
+# machine-sensitive), but it must at least be well-formed before we commit
+# it as the trajectory file.
+python3 - "$SMOKE_DIR/BENCH_serve.json" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc.get("bench") == "serve" and doc.get("schema") == 1, "bad serve bench header"
+endpoints = {r["endpoint"] for r in doc["rows"]}
+assert endpoints == {"generate", "score"}, f"unexpected endpoints {endpoints}"
+assert doc["requests_per_sec"] > 0, "no throughput measured"
+print(f"   BENCH_serve.json OK ({doc['requests']} requests, "
+      f"{doc['requests_per_sec']:.1f} req/s)")
+PY
+
+# Refresh the committed trajectory files (commit them with the PR).
+cp "$SMOKE_DIR/BENCH_table1.json" BENCH_table1.json
+cp "$SMOKE_DIR/BENCH_serve.json" BENCH_serve.json
+echo "   wrote BENCH_table1.json + BENCH_serve.json (commit them with this PR)"
 
 echo "CI OK"

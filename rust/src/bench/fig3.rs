@@ -292,7 +292,8 @@ mod tests {
 
     #[test]
     fn native_rank_stats_are_a_distribution() {
-        let opts = KernelOptions { n_block: 32, v_block: 128, threads: 2, filter: true, sort: true };
+        let opts =
+            KernelOptions { n_block: 32, v_block: 128, threads: 2, ..KernelOptions::default() };
         let stats = run_native(None, 12, 5, 512, 200, opts).unwrap();
         // Mean of per-row softmax distributions is itself a distribution.
         let total: f64 = stats.probs.iter().sum();

@@ -65,6 +65,12 @@ impl BenchResult {
     pub fn mean(&self) -> f64 {
         self.summary.mean
     }
+
+    /// Median per-iteration time — what the cross-PR regression gate
+    /// compares (robust to scheduling outliers on shared CI runners).
+    pub fn median(&self) -> f64 {
+        self.summary.p50
+    }
 }
 
 /// Trained-like inputs for a loss benchmark: the paper benchmarks with

@@ -50,6 +50,10 @@ pub struct ServeBench {
     pub batches: u64,
     pub batched_jobs: u64,
     pub max_batch_observed: u64,
+    /// Model shape the run was measured on — persisted so cross-PR
+    /// comparisons of `BENCH_serve.json` only compare like with like.
+    pub vocab: usize,
+    pub d_model: usize,
 }
 
 impl ServeBench {
@@ -72,6 +76,7 @@ impl ServeBench {
 pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.port = 0; // never collide
+    let (vocab, d_model) = (engine.vocab, engine.d_model);
     let server = serve(engine, &serve_cfg)?;
     let addr = server.addr;
     let concurrency = cfg.concurrency.max(1);
@@ -186,6 +191,8 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
         batches: get_u64("batches"),
         batched_jobs: get_u64("batched_jobs"),
         max_batch_observed: get_u64("max_batch_observed"),
+        vocab,
+        d_model,
     })
 }
 
@@ -234,6 +241,9 @@ pub fn write_json(bench: &ServeBench, path: impl AsRef<std::path::Path>) -> Resu
     };
     let doc = Json::obj(vec![
         ("bench", Json::str("serve")),
+        ("schema", Json::Int(1)),
+        ("vocab", Json::Int(bench.vocab as i64)),
+        ("d_model", Json::Int(bench.d_model as i64)),
         ("requests", Json::Int(bench.requests as i64)),
         ("concurrency", Json::Int(bench.concurrency as i64)),
         ("elapsed_secs", Json::Float(bench.elapsed_secs)),
@@ -260,7 +270,8 @@ mod tests {
 
     #[test]
     fn tiny_bench_runs_end_to_end() {
-        let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, filter: true, sort: true };
+        let opts =
+            KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
         let engine = Arc::new(Engine::demo(384, 16, 2, opts).unwrap());
         let cfg = ServeBenchConfig {
             requests: 8,
@@ -280,5 +291,7 @@ mod tests {
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
         assert_eq!(parsed.get("rows").unwrap().as_array().unwrap().len(), 2);
+        assert_eq!(parsed.get("vocab").unwrap().as_i64(), Some(384));
+        assert_eq!(parsed.get("d_model").unwrap().as_i64(), Some(16));
     }
 }

@@ -15,6 +15,9 @@
 //! trainer exists to exercise the hot path end-to-end and to measure the
 //! loss-method ablations on a real training loop, not to be a transformer:
 //! the transformer lives in the AOT artifacts behind the `pjrt` feature.
+//! The bag reduction, the dH scatter, and the SGD update all run on the
+//! same SIMD layer as the kernels (`crate::exec::simd`); `--method`
+//! accepts every native key, including the `cce_kahan*` variants.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -158,13 +161,9 @@ pub fn bag_hidden(
         let len = (i - lo + 1) as f32;
         for &tok in &tokens[lo..=i] {
             let row = &emb[tok as usize * d..(tok as usize + 1) * d];
-            for (acc, &val) in chunk.iter_mut().zip(row) {
-                *acc += val;
-            }
+            crate::exec::simd::add_assign(chunk, row);
         }
-        for val in chunk.iter_mut() {
-            *val /= len;
-        }
+        crate::exec::simd::scale(chunk, 1.0 / len);
     }
     h
 }
@@ -250,20 +249,14 @@ impl NativeTrainer {
             let dh_row = &bwd.d_e[i * d..(i + 1) * d];
             for &tok in &tokens[lo..=i] {
                 let row = &mut d_emb[tok as usize * d..(tok as usize + 1) * d];
-                for k in 0..d {
-                    row[k] += dh_row[k] / len;
-                }
+                crate::exec::simd::axpy(row, 1.0 / len, dh_row);
             }
         }
         let sq: f64 = bwd.d_c.iter().chain(d_emb.iter()).map(|&g| (g as f64) * g as f64).sum();
         let grad_norm = sq.sqrt();
         let lr = self.model.lr;
-        for (p, g) in state.cls.iter_mut().zip(&bwd.d_c) {
-            *p -= lr * g;
-        }
-        for (p, g) in state.emb.iter_mut().zip(&d_emb) {
-            *p -= lr * g;
-        }
+        crate::exec::simd::axpy(&mut state.cls, -lr, &bwd.d_c);
+        crate::exec::simd::axpy(&mut state.emb, -lr, &d_emb);
         state.step += 1;
         Ok((fwd.loss, grad_norm))
     }
@@ -371,7 +364,7 @@ mod tests {
     }
 
     fn fast_opts() -> KernelOptions {
-        KernelOptions { n_block: 32, v_block: 128, threads: 2, filter: true, sort: true }
+        KernelOptions { n_block: 32, v_block: 128, threads: 2, ..KernelOptions::default() }
     }
 
     #[test]

@@ -38,7 +38,8 @@ pub enum NativeMethod {
     /// the blocked kernel with `N_B = ⌈N/k⌉`, `V_B = V`, no filtering.
     Chunked(usize),
     /// Cut cross-entropy: blocked online-LSE forward, filtered/sorted
-    /// blockwise backward per the `filter`/`sort` kernel options.
+    /// blockwise backward per the `filter`/`sort`/`kahan`/`full_*` kernel
+    /// options (which also encode the `cce_kahan*` Table-1 variants).
     Cce,
 }
 
@@ -48,6 +49,11 @@ impl NativeMethod {
         match self {
             NativeMethod::Baseline => "baseline".into(),
             NativeMethod::Chunked(k) => format!("chunked{k}"),
+            NativeMethod::Cce if opts.kahan => match (opts.full_c, opts.full_e) {
+                (true, _) => "cce_kahan_fullc".into(),
+                (false, true) => "cce_kahan_fulle".into(),
+                (false, false) => "cce_kahan".into(),
+            },
             NativeMethod::Cce => match (opts.filter, opts.sort) {
                 (true, true) => "cce".into(),
                 (true, false) => "cce_no_sort".into(),
@@ -70,9 +76,13 @@ impl NativeBackend {
     }
 
     /// Build from a Table-1 method key (`baseline`, `chunked8`, `cce`,
-    /// `cce_no_filter`, `cce_no_sort`).  `fused`/`liger`/`cce_kahan*` have
-    /// no native implementation and are rejected.
+    /// `cce_no_filter`, `cce_no_sort`, `cce_kahan`, `cce_kahan_fullc`,
+    /// `cce_kahan_fulle`).  `fused`/`liger` are third-party GPU
+    /// implementations with no native analogue and are rejected.
     pub fn from_key(key: &str, mut opts: KernelOptions) -> Result<NativeBackend> {
+        opts.kahan = false;
+        opts.full_c = false;
+        opts.full_e = false;
         let method = match key {
             "baseline" => NativeMethod::Baseline,
             "cce" => {
@@ -88,6 +98,14 @@ impl NativeBackend {
             "cce_no_filter" => {
                 opts.filter = false;
                 opts.sort = false;
+                NativeMethod::Cce
+            }
+            "cce_kahan" | "cce_kahan_fullc" | "cce_kahan_fulle" => {
+                opts.filter = true;
+                opts.sort = true;
+                opts.kahan = true;
+                opts.full_c = key == "cce_kahan_fullc";
+                opts.full_e = key == "cce_kahan_fulle";
                 NativeMethod::Cce
             }
             _ => match key.strip_prefix("chunked").and_then(|k| k.parse::<usize>().ok()) {
@@ -246,6 +264,19 @@ mod tests {
         assert!(!nf.opts.filter);
         let ns = NativeBackend::from_key("cce_no_sort", o).unwrap();
         assert!(ns.opts.filter && !ns.opts.sort);
+        let k = NativeBackend::from_key("cce_kahan", o).unwrap();
+        assert!(k.opts.kahan && k.opts.filter && k.opts.sort && !k.opts.full_c && !k.opts.full_e);
+        assert_eq!(k.name(), "native/cce_kahan");
+        let kc = NativeBackend::from_key("cce_kahan_fullc", o).unwrap();
+        assert!(kc.opts.kahan && kc.opts.full_c && !kc.opts.full_e);
+        assert_eq!(kc.name(), "native/cce_kahan_fullc");
+        let ke = NativeBackend::from_key("cce_kahan_fulle", o).unwrap();
+        assert!(ke.opts.kahan && ke.opts.full_e && !ke.opts.full_c);
+        assert_eq!(ke.name(), "native/cce_kahan_fulle");
+        // A stray kahan flag in the caller's opts never leaks into a
+        // non-kahan method key.
+        let stray = KernelOptions { kahan: true, full_c: true, ..o };
+        assert_eq!(NativeBackend::from_key("cce", stray).unwrap().name(), "native/cce");
         assert!(NativeBackend::from_key("fused", o).is_err());
         assert!(NativeBackend::from_key("liger", o).is_err());
         assert!(NativeBackend::from_key("chunked0", o).is_err());
@@ -262,7 +293,15 @@ mod tests {
             .unwrap()
             .forward_backward(&p)
             .unwrap();
-        for key in ["chunked8", "cce", "cce_no_filter", "cce_no_sort"] {
+        for key in [
+            "chunked8",
+            "cce",
+            "cce_no_filter",
+            "cce_no_sort",
+            "cce_kahan",
+            "cce_kahan_fullc",
+            "cce_kahan_fulle",
+        ] {
             let be = NativeBackend::from_key(key, opts).unwrap();
             assert_eq!(be.name(), format!("native/{key}"));
             let fwd = be.forward(&p).unwrap();

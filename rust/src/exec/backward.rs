@@ -1,5 +1,6 @@
 //! CCE backward: blockwise logit rematerialization with the §4.3 gradient
-//! filter and optional vocabulary sorting.
+//! filter, optional vocabulary sorting, and **column-parallel** `dC`
+//! accumulation.
 //!
 //! The gradient of the mean NLL splits into a dense indicator part and a
 //! softmax part:
@@ -9,23 +10,50 @@
 //! dC_j = (Σ_i p_ij · e_i − Σ_{i: x_i=j} e_i) / count      p_ij = exp(z_ij − lse_i)
 //! ```
 //!
-//! The indicator terms are applied once per token up front (they can never
-//! be filtered away).  The softmax part is computed per `(N_B, V_B)` block:
-//! rematerialize the block's logits (one matmul-sized pass), form
-//! `p = exp(z − lse)`, and — when filtering is on — **skip the two
-//! accumulation passes** whenever every `p` of every active row is below
-//! `eps = 2^-12` ([`crate::sparsity::FILTER_EPS`]).  Since each skipped
-//! entry contributes `< eps/count` to any gradient element, the error is
-//! bounded far below f32 round-off of the surviving terms (the paper's
-//! bf16-truncation argument).
+//! The pass runs in two phases over the same global `(N_B, V_B)` block
+//! grid:
+//!
+//! * **Phase A — `dE`, row-parallel.**  Threads own contiguous row spans
+//!   (whole row-blocks).  Each block's logits are rematerialized once (one
+//!   SIMD-matmul-sized pass), turned into probabilities, and — when
+//!   filtering is on — the block records whether *every* softmax entry of
+//!   every active row is below `eps = 2^-12`
+//!   ([`crate::sparsity::FILTER_EPS`]) into a shared **skip mask**; sub-eps
+//!   blocks skip the `dE` accumulation.  Since each skipped entry
+//!   contributes `< eps/count` to any gradient element, the error is
+//!   bounded far below f32 round-off of the surviving terms (the paper's
+//!   bf16-truncation argument).
+//! * **Phase B — `dC`, column-parallel.**  Threads own disjoint spans of
+//!   *permuted vocabulary columns* and accumulate straight into a single
+//!   shared `V×D` buffer — no atomics (spans are disjoint) and no
+//!   per-thread `V×D` shards, so the backward workspace is `O(V·D)`
+//!   *total* instead of `threads·V·D`; with sorting off the permutation
+//!   is the identity and phase B writes directly into the `dC` output
+//!   (no buffer, no gather — workspace is tiles + mask only).  Sub-eps blocks are consulted from
+//!   the phase-A mask, so they skip the rematerialization *and* the
+//!   accumulation.  Spans are weighted by surviving-block counts
+//!   (`balance_spans`), which counters the head-heavy concentration that
+//!   sorting creates.
+//!
+//! The indicator terms are applied once per token in the phase that owns
+//! the output (they can never be filtered away).  Because every output
+//! element is accumulated by exactly one thread in a fixed order, `dE` and
+//! `dC` are **bitwise invariant in the thread count** (the old
+//! shard-reduction changed summation order with `--threads`).
 //!
 //! **Vocabulary sorting** visits columns through a permutation ordered by
 //! descending label frequency, concentrating the Zipf head — the entries
 //! that survive filtering — into a few leading column blocks so the
 //! remaining blocks die wholesale (§4.3 "sorted gradient filtering"; the
 //! survival geometry is modelled by [`crate::sparsity::BlockFilterModel`]).
+//!
+//! With [`KernelOptions::kahan`] both phases accumulate through
+//! `simd::axpy_kahan` with per-element compensation buffers (doubling
+//! the gradient working set, as the paper's CCE-Kahan memory column
+//! records); `full_c` / `full_e` disable filtering for the corresponding
+//! phase only (the `CCE-Kahan-FullC` / `-FullE` rows).
 
-use super::{dot, span_rows, BackwardOut, FilterStats, KernelOptions, Problem};
+use super::{ceil_div, simd, span_rows, BackwardOut, FilterStats, KernelOptions, Problem};
 use crate::sparsity::FILTER_EPS;
 
 /// Vocabulary permutation ordered by descending label frequency (stable by
@@ -42,9 +70,57 @@ pub fn frequency_permutation(x: &[i32], v: usize) -> Vec<u32> {
     perm
 }
 
+/// Inverse of a permutation: `inv[perm[q]] = q`.
+fn invert_permutation(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (q, &j) in perm.iter().enumerate() {
+        inv[j as usize] = q as u32;
+    }
+    inv
+}
+
+/// Split `weights.len()` blocks into at most `threads` contiguous spans of
+/// roughly equal total weight (boundary `k` sits at the first prefix that
+/// reaches `k/threads` of the total).  Deterministic; spans may be empty.
+pub(crate) fn balance_spans(weights: &[u64], threads: usize) -> Vec<usize> {
+    let t = threads.max(1);
+    let total: u64 = weights.iter().sum::<u64>().max(1);
+    let mut bounds = vec![0usize; t + 1];
+    bounds[t] = weights.len();
+    let mut acc = 0u64;
+    let mut k = 1;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        while k < t && acc * t as u64 >= total * k as u64 {
+            bounds[k] = i + 1;
+            k += 1;
+        }
+    }
+    while k < t {
+        bounds[k] = weights.len();
+        k += 1;
+    }
+    bounds
+}
+
+/// Shared read-only state of one backward invocation.
+struct BwdCtx<'a> {
+    p: &'a Problem<'a>,
+    opts: &'a KernelOptions,
+    /// Column visit order (frequency-sorted or identity).
+    perm: &'a [u32],
+    /// `inv_perm[token] = permuted position`.
+    inv_perm: &'a [u32],
+    lse: &'a [f32],
+    inv_count: f32,
+    /// Clamped row / column blocking (the global block grid).
+    nb: usize,
+    vb: usize,
+    n_vblocks: usize,
+}
+
 /// Run the backward pass.  `lse` is the per-row log-sum-exp from
-/// [`super::cce_forward`].  Multi-threaded over contiguous row spans; each
-/// worker accumulates its own `dC` shard, reduced at the end.
+/// [`super::cce_forward`].
 pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardOut {
     assert_eq!(lse.len(), p.n, "lse length mismatch");
     let (n, d, v) = (p.n, p.d, p.v);
@@ -55,101 +131,167 @@ pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardO
     } else {
         (0..v as u32).collect()
     };
+    let inv_perm = invert_permutation(&perm);
+    let nb = opts.n_block.clamp(1, n);
+    let vb = opts.v_block.clamp(1, v);
+    let n_rblocks = ceil_div(n, nb);
+    let n_vblocks = ceil_div(v, vb);
 
     let mut d_e = vec![0f32; n * d];
     let mut d_c = vec![0f32; v * d];
+    // The shared dC accumulator, laid out in *permuted* column order so
+    // phase-B threads own contiguous disjoint slices.  With sorting off
+    // the permutation is the identity, so phase B writes straight into
+    // `d_c` — no extra buffer and no gather.
+    let identity = !opts.sort;
+    let mut dc_perm = if identity { Vec::new() } else { vec![0f32; v * d] };
+    // Skip mask: 1 = every softmax entry of every active row is sub-eps.
+    let mut mask = vec![0u8; n_rblocks * n_vblocks];
+    let ctx = BwdCtx {
+        p,
+        opts,
+        perm: &perm,
+        inv_perm: &inv_perm,
+        lse,
+        inv_count,
+        nb,
+        vb,
+        n_vblocks,
+    };
+
+    // Phase A: row-parallel dE + skip-mask fill.
     let span = span_rows(n, opts.n_block, opts.threads);
-    let results: Vec<(Vec<f32>, FilterStats, usize)> = std::thread::scope(|scope| {
+    let a_results: Vec<(FilterStats, usize)> = std::thread::scope(|scope| {
         let handles: Vec<_> = d_e
             .chunks_mut(span * d)
+            .zip(mask.chunks_mut((span / nb) * n_vblocks))
             .enumerate()
-            .map(|(ti, de_chunk)| {
-                let row0 = ti * span;
-                let opts = *opts;
-                let perm = &perm;
-                scope.spawn(move || {
-                    backward_span(p, &opts, perm, lse, inv_count, row0, de_chunk)
-                })
+            .map(|(ti, (de_chunk, mask_chunk))| {
+                let ctx = &ctx;
+                scope.spawn(move || de_phase(ctx, ti * span, de_chunk, mask_chunk))
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("backward worker")).collect()
+        handles.into_iter().map(|h| h.join().expect("backward dE worker")).collect()
     });
 
-    let mut stats = FilterStats::default();
-    // Working memory beyond the dE/dC outputs: per-thread logit-block
-    // buffers plus the per-thread dC shards.
-    let mut workspace = 0usize;
-    for (shard, worker_stats, ws) in &results {
-        for (acc, val) in d_c.iter_mut().zip(shard) {
-            *acc += *val;
+    // Phase B: column-parallel dC over contiguous permuted-column spans.
+    // Spans are balanced at *column* granularity (weighted per column by
+    // its block's surviving row-blocks), so neither v_block >= V (the
+    // chunked methods) nor a sorting-concentrated hot head can serialize
+    // the phase onto one thread.
+    let surviving: Vec<u64> = (0..n_vblocks)
+        .map(|vb_idx| {
+            if opts.filter && !opts.full_c {
+                (0..n_rblocks).filter(|rb| mask[rb * n_vblocks + vb_idx] == 0).count() as u64
+            } else {
+                n_rblocks as u64
+            }
+        })
+        .collect();
+    let col_weights: Vec<u64> = (0..v).map(|q| surviving[q / vb]).collect();
+    let bounds = balance_spans(&col_weights, opts.threads);
+    let b_results: Vec<usize> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        let mut rest: &mut [f32] = if identity { &mut d_c } else { &mut dc_perm };
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let (chunk, tail) = rest.split_at_mut((hi - lo) * d);
+            rest = tail;
+            if hi > lo {
+                let ctx = &ctx;
+                let mask = &mask;
+                handles.push(scope.spawn(move || dc_phase(ctx, lo, hi, chunk, mask)));
+            }
         }
+        handles.into_iter().map(|h| h.join().expect("backward dC worker")).collect()
+    });
+
+    // Un-permute: every original column was accumulated by exactly one
+    // phase-B thread, so this is a straight gather (skipped entirely when
+    // the permutation is the identity — phase B already wrote `d_c`).
+    if !identity {
+        for (q, &j) in perm.iter().enumerate() {
+            let j = j as usize;
+            d_c[j * d..(j + 1) * d].copy_from_slice(&dc_perm[q * d..(q + 1) * d]);
+        }
+    }
+
+    let mut stats = FilterStats::default();
+    // Working memory beyond the dE/dC outputs: the shared permuted dC
+    // accumulator (O(V·D) total — the former per-thread V×D shards are
+    // gone), the skip mask, the per-thread probability tiles, and the
+    // Kahan compensation buffers.
+    let mut workspace = dc_perm.len() * 4 + mask.len();
+    for (worker_stats, ws) in &a_results {
         stats.merge(worker_stats);
-        workspace += ws + shard.len() * 4;
+        workspace += ws;
+    }
+    for ws in &b_results {
+        workspace += ws;
     }
     BackwardOut { d_e, d_c, stats, workspace_bytes: workspace }
 }
 
-/// Process rows `[row0, row0 + rows_total)`.  Returns this worker's `dC`
-/// shard, its filter stats, and its block-buffer bytes.
-fn backward_span(
-    p: &Problem,
-    opts: &KernelOptions,
-    perm: &[u32],
-    lse: &[f32],
-    inv_count: f32,
+/// Phase A over rows `[row0, row0 + de_chunk.len()/d)`: indicator + softmax
+/// `dE`, filling this span's rows of the skip mask.  Returns the span's
+/// filter stats and its buffer bytes (probability tile + Kahan comp).
+fn de_phase(
+    ctx: &BwdCtx,
     row0: usize,
     de_chunk: &mut [f32],
-) -> (Vec<f32>, FilterStats, usize) {
+    mask_chunk: &mut [u8],
+) -> (FilterStats, usize) {
+    let p = ctx.p;
     let d = p.d;
     let v = p.v;
     let eps = FILTER_EPS as f32;
+    let (nb, vb) = (ctx.nb, ctx.vb);
     let rows_total = de_chunk.len() / d;
-    let n_block = opts.n_block.clamp(1, rows_total.max(1));
-    let v_block = opts.v_block.clamp(1, v);
-    let mut probs = vec![0f32; n_block * v_block];
-    let mut dc_local = vec![0f32; v * d];
+    let mut probs = vec![0f32; nb * vb];
+    let mut comp = if ctx.opts.kahan {
+        vec![0f32; de_chunk.len()]
+    } else {
+        Vec::new()
+    };
     let mut stats = FilterStats::default();
 
-    // Indicator part: dE_i -= c_{x_i}/count, dC_{x_i} -= e_i/count.
+    // Indicator part: dE_i -= c_{x_i} / count.
     for r in 0..rows_total {
-        let i = row0 + r;
-        let t = p.x[i];
+        let t = p.x[row0 + r];
         if t < 0 {
             continue;
         }
-        let t = t as usize;
-        let e_row = &p.e[i * d..(i + 1) * d];
-        let c_row = &p.c[t * d..(t + 1) * d];
+        let c_row = &p.c[t as usize * d..(t as usize + 1) * d];
         let de_row = &mut de_chunk[r * d..(r + 1) * d];
-        let dc_row = &mut dc_local[t * d..(t + 1) * d];
-        for k in 0..d {
-            de_row[k] -= inv_count * c_row[k];
-            dc_row[k] -= inv_count * e_row[k];
+        if ctx.opts.kahan {
+            simd::axpy_kahan(de_row, &mut comp[r * d..(r + 1) * d], -ctx.inv_count, c_row);
+        } else {
+            simd::axpy(de_row, -ctx.inv_count, c_row);
         }
     }
 
-    // Softmax part, blockwise with filtering.
+    // Softmax part, blockwise.
     let mut block_start = 0;
     while block_start < rows_total {
-        let rows = n_block.min(rows_total - block_start);
+        let rows = nb.min(rows_total - block_start);
         let mut j0 = 0;
+        let mut vb_idx = 0;
         while j0 < v {
-            let cols = v_block.min(v - j0);
-            // Rematerialize the block's logits as probabilities.
+            let cols = vb.min(v - j0);
+            // Rematerialize the block's logits as probabilities (SIMD dot).
             let mut sig = 0u64;
             for r in 0..rows {
                 let i = row0 + block_start + r;
-                let active = p.x[i] >= 0;
-                let e_row = &p.e[i * d..(i + 1) * d];
                 let p_row = &mut probs[r * cols..(r + 1) * cols];
-                if !active {
+                if p.x[i] < 0 {
                     p_row.fill(0.0);
                     continue;
                 }
-                let row_lse = lse[i];
+                let e_row = &p.e[i * d..(i + 1) * d];
+                let row_lse = ctx.lse[i];
                 for (jj, out) in p_row.iter_mut().enumerate() {
-                    let j = perm[j0 + jj] as usize;
-                    let z = dot(e_row, &p.c[j * d..(j + 1) * d]);
+                    let j = ctx.perm[j0 + jj] as usize;
+                    let z = simd::dot(e_row, &p.c[j * d..(j + 1) * d]);
                     let prob = (z - row_lse).exp();
                     *out = prob;
                     sig += (prob >= eps) as u64;
@@ -157,38 +299,146 @@ fn backward_span(
             }
             stats.blocks_total += 1;
             stats.sig_entries += sig;
-            if opts.filter && sig == 0 {
-                // Every softmax entry of every active row is sub-eps: the
-                // block's two accumulation matmuls are skipped entirely.
+            let sub_eps = sig == 0;
+            mask_chunk[(block_start / nb) * ctx.n_vblocks + vb_idx] = sub_eps as u8;
+            if ctx.opts.filter && sub_eps {
                 stats.blocks_skipped += 1;
-                j0 += cols;
-                continue;
+                if !ctx.opts.full_e {
+                    j0 += cols;
+                    vb_idx += 1;
+                    continue;
+                }
             }
-            // Accumulation: dE rows and the local dC shard, fused.
+            // dE accumulation: de_row += Σ_jj p·c_perm[jj] / count.
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 if p.x[i] < 0 {
                     continue;
                 }
-                let e_row = &p.e[i * d..(i + 1) * d];
-                let de_row = &mut de_chunk[(block_start + r) * d..(block_start + r + 1) * d];
+                let out_row = block_start + r;
+                let de_row = &mut de_chunk[out_row * d..(out_row + 1) * d];
                 for jj in 0..cols {
-                    let g = probs[r * cols + jj] * inv_count;
-                    let j = perm[j0 + jj] as usize;
+                    let g = probs[r * cols + jj] * ctx.inv_count;
+                    let j = ctx.perm[j0 + jj] as usize;
                     let c_row = &p.c[j * d..(j + 1) * d];
-                    let dc_row = &mut dc_local[j * d..(j + 1) * d];
-                    for k in 0..d {
-                        de_row[k] += g * c_row[k];
-                        dc_row[k] += g * e_row[k];
+                    if ctx.opts.kahan {
+                        simd::axpy_kahan(
+                            de_row,
+                            &mut comp[out_row * d..(out_row + 1) * d],
+                            g,
+                            c_row,
+                        );
+                    } else {
+                        simd::axpy(de_row, g, c_row);
                     }
                 }
             }
             j0 += cols;
+            vb_idx += 1;
         }
         block_start += rows;
     }
-    let buffer_bytes = probs.len() * 4;
-    (dc_local, stats, buffer_bytes)
+    (stats, (probs.len() + comp.len()) * 4)
+}
+
+/// Phase B over permuted vocabulary columns `[col_lo, col_hi)` (any
+/// contiguous range — spans need not align to `V_B` blocks): indicator +
+/// softmax `dC`, accumulated directly into this thread's disjoint slice of
+/// the shared permuted accumulator.  Skipped blocks (per the phase-A mask)
+/// are never rematerialized.  Returns the buffer bytes (Kahan comp only —
+/// this phase streams logits without a tile buffer).
+fn dc_phase(
+    ctx: &BwdCtx,
+    col_lo: usize,
+    col_hi: usize,
+    dc_chunk: &mut [f32],
+    mask: &[u8],
+) -> usize {
+    let p = ctx.p;
+    let (n, d) = (p.n, p.d);
+    let (nb, vb) = (ctx.nb, ctx.vb);
+    let col0 = col_lo;
+    let cols_owned = dc_chunk.len() / d;
+    let mut comp = if ctx.opts.kahan {
+        vec![0f32; dc_chunk.len()]
+    } else {
+        Vec::new()
+    };
+
+    // Indicator part: dC_{x_i} -= e_i / count for targets this span owns.
+    for i in 0..n {
+        let t = p.x[i];
+        if t < 0 {
+            continue;
+        }
+        let q = ctx.inv_perm[t as usize] as usize;
+        if q < col0 || q >= col0 + cols_owned {
+            continue;
+        }
+        let e_row = &p.e[i * d..(i + 1) * d];
+        let dc_row = &mut dc_chunk[(q - col0) * d..(q - col0 + 1) * d];
+        if ctx.opts.kahan {
+            simd::axpy_kahan(
+                dc_row,
+                &mut comp[(q - col0) * d..(q - col0 + 1) * d],
+                -ctx.inv_count,
+                e_row,
+            );
+        } else {
+            simd::axpy(dc_row, -ctx.inv_count, e_row);
+        }
+    }
+
+    // Softmax part: stream surviving row blocks with the block loop
+    // *outside* the column loop, so the row-block's E tile (nb×D) stays
+    // cache-resident across every column this span owns instead of
+    // re-streaming all of E once per column.  Each column still receives
+    // its contributions in blocks-ascending, rows-ascending order, so dC
+    // stays bitwise identical to the column-outer nest (and bitwise
+    // thread-count invariant even though span boundaries move with
+    // `--threads`).  `q0..q1` walks the span one V_B-block-aligned
+    // segment at a time (a span may start or end mid-block).
+    let mut q0 = col_lo;
+    while q0 < col_hi {
+        let vb_idx = q0 / vb;
+        let q1 = ((vb_idx + 1) * vb).min(col_hi);
+        let mut block_start = 0;
+        while block_start < n {
+            let rows = nb.min(n - block_start);
+            let rb = block_start / nb;
+            if ctx.opts.filter && !ctx.opts.full_c && mask[rb * ctx.n_vblocks + vb_idx] != 0 {
+                block_start += rows;
+                continue;
+            }
+            for q in q0..q1 {
+                let j = ctx.perm[q] as usize;
+                let c_row = &p.c[j * d..(j + 1) * d];
+                let dc_row = &mut dc_chunk[(q - col0) * d..(q - col0 + 1) * d];
+                for r in 0..rows {
+                    let i = block_start + r;
+                    if p.x[i] < 0 {
+                        continue;
+                    }
+                    let e_row = &p.e[i * d..(i + 1) * d];
+                    let z = simd::dot(e_row, c_row);
+                    let g = (z - ctx.lse[i]).exp() * ctx.inv_count;
+                    if ctx.opts.kahan {
+                        simd::axpy_kahan(
+                            dc_row,
+                            &mut comp[(q - col0) * d..(q - col0 + 1) * d],
+                            g,
+                            e_row,
+                        );
+                    } else {
+                        simd::axpy(dc_row, g, e_row);
+                    }
+                }
+            }
+            block_start += rows;
+        }
+        q0 = q1;
+    }
+    comp.len() * 4
 }
 
 #[cfg(test)]
@@ -198,7 +448,14 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn opts(filter: bool, sort: bool) -> KernelOptions {
-        KernelOptions { n_block: 8, v_block: 16, threads: 2, filter, sort }
+        KernelOptions {
+            n_block: 8,
+            v_block: 16,
+            threads: 2,
+            filter,
+            sort,
+            ..KernelOptions::default()
+        }
     }
 
     fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -229,6 +486,50 @@ mod tests {
     }
 
     #[test]
+    fn kahan_backward_matches_plain_on_benign_inputs() {
+        let mut rng = Rng::new(12);
+        let (n, d, v) = (20, 10, 48);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.2);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let o = opts(true, true);
+        let ok = KernelOptions { kahan: true, ..o };
+        let fwd = cce_forward(&p, &o);
+        let plain = cce_backward(&p, &o, &fwd.lse);
+        let kahan = cce_backward(&p, &ok, &fwd.lse);
+        assert!(max_abs_diff(&plain.d_e, &kahan.d_e) < 1e-5);
+        assert!(max_abs_diff(&plain.d_c, &kahan.d_c) < 1e-5);
+        // Compensation buffers are accounted: ~double the gradient-sized
+        // working set on top of the shared accumulator.
+        assert!(kahan.workspace_bytes > plain.workspace_bytes);
+    }
+
+    #[test]
+    fn full_variants_disable_filtering_per_output() {
+        // Peaked softmax (target 0 dominant) => real skippable blocks.
+        let mut rng = Rng::new(14);
+        let (n, d, v) = (32, 4, 256);
+        let mut c: Vec<f32> = (0..v * d).map(|_| (rng.normal() * 0.1) as f32).collect();
+        c[0] = 10.0;
+        let mut e = vec![0f32; n * d];
+        let x = vec![0i32; n];
+        for i in 0..n {
+            e[i * d] = 1.5 + rng.f32() * 0.2;
+        }
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let base = KernelOptions { kahan: true, ..opts(true, true) };
+        let fwd = cce_forward(&p, &base);
+        let exact = cce_backward(&p, &KernelOptions { filter: false, ..base }, &fwd.lse);
+        let full_c = cce_backward(&p, &KernelOptions { full_c: true, ..base }, &fwd.lse);
+        let full_e = cce_backward(&p, &KernelOptions { full_e: true, ..base }, &fwd.lse);
+        // full_c: dC is exact (unfiltered) even though blocks were skipped.
+        assert!(full_c.stats.blocks_skipped > 0);
+        assert!(max_abs_diff(&full_c.d_c, &exact.d_c) < 1e-6, "full_c dC must be unfiltered");
+        // full_e: dE is exact (unfiltered).
+        assert!(full_e.stats.blocks_skipped > 0);
+        assert!(max_abs_diff(&full_e.d_e, &exact.d_e) < 1e-6, "full_e dE must be unfiltered");
+    }
+
+    #[test]
     fn frequency_permutation_orders_hot_tokens_first() {
         let x = vec![3, 3, 3, 1, 1, 7, -1, -1];
         let perm = frequency_permutation(&x, 8);
@@ -240,6 +541,31 @@ mod tests {
         let mut sorted = perm.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..8).collect::<Vec<u32>>());
+        // And the inverse really inverts.
+        let inv = invert_permutation(&perm);
+        for (q, &j) in perm.iter().enumerate() {
+            assert_eq!(inv[j as usize] as usize, q);
+        }
+    }
+
+    #[test]
+    fn balance_spans_tracks_weight() {
+        // Uniform weights: near-even contiguous split.
+        let bounds = balance_spans(&[1; 8], 4);
+        assert_eq!(bounds, vec![0, 2, 4, 6, 8]);
+        // Head-heavy weights (the sorted-filter shape): the first span
+        // stays small so one thread does not own the whole hot head.
+        let bounds = balance_spans(&[12, 4, 0, 0, 0, 0, 0, 0], 4);
+        assert_eq!(*bounds.first().unwrap(), 0);
+        assert_eq!(*bounds.last().unwrap(), 8);
+        assert!(bounds[1] <= 2, "hot head must close the first span early: {bounds:?}");
+        for w in bounds.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // More threads than blocks: spans stay in range, some empty.
+        let bounds = balance_spans(&[5, 5], 8);
+        assert_eq!(*bounds.last().unwrap(), 2);
+        assert!(bounds.iter().all(|&b| b <= 2));
     }
 
     #[test]
@@ -315,7 +641,7 @@ mod tests {
             e[i * d + r] = 2.0; // z_target = 12, every other |z| ≲ 1
         }
         let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
-        let o = KernelOptions { n_block: 16, v_block: 32, threads: 2, filter: true, sort: true };
+        let o = KernelOptions { n_block: 16, v_block: 32, threads: 2, ..KernelOptions::default() };
         let fwd = cce_forward(&p, &o);
         let sorted = cce_backward(&p, &o, &fwd.lse);
         let unsorted = cce_backward(&p, &KernelOptions { sort: false, ..o }, &fwd.lse);

@@ -23,7 +23,7 @@
 use anyhow::{bail, Result};
 
 use super::lse::cce_forward;
-use super::{dot, span_rows, KernelOptions, Problem};
+use super::{dot, simd, span_rows, KernelOptions, Problem};
 
 /// One inference problem: hidden states `E (N×D)` against a classifier
 /// `C (V×D)` — a [`Problem`] without labels.
@@ -154,7 +154,7 @@ fn tile_sweep<V: TileVisitor>(
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 let z_row = &logits[r * cols..(r + 1) * cols];
-                let tile_max = z_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let tile_max = simd::vmax(z_row);
                 let m_old = run_max[r];
                 let m_new = m_old.max(tile_max);
                 let mut s = if m_old == f32::NEG_INFINITY {
@@ -481,7 +481,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn opts(n_block: usize, v_block: usize, threads: usize) -> KernelOptions {
-        KernelOptions { n_block, v_block, threads, filter: true, sort: true }
+        KernelOptions { n_block, v_block, threads, ..KernelOptions::default() }
     }
 
     /// Materialized reference: full logits, argsort descending.

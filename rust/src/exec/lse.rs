@@ -14,8 +14,16 @@
 //! over `C` with `O(N + threads·N_B·V_B)` working floats — the `N×V` logit
 //! matrix never exists (the paper's §4.2 kernel, adapted from flash-memory
 //! tiles to cache blocks).
+//!
+//! The tile matmul and the max reduction run on the SIMD layer
+//! (`super::simd`); the exp-accumulate stays sequential per row so the
+//! recurrence is identical across blockings and thread counts.  With
+//! [`KernelOptions::kahan`] the running sum `s` (and the final loss
+//! reduction) carry Kahan compensation terms — the `cce_kahan` long-tail
+//! rows of Table 1, for softmaxes whose mass hides below f32 round-off of
+//! the head.
 
-use super::{dot, span_rows, ForwardOut, KernelOptions, Problem};
+use super::{dot, simd, span_rows, ForwardOut, KernelOptions, Problem};
 
 /// Run the forward pass.  Multi-threaded over contiguous row spans.
 pub fn cce_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
@@ -37,16 +45,29 @@ pub fn cce_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
         handles.into_iter().map(|h| h.join().expect("forward worker")).sum()
     });
     let count = p.active_count();
-    let loss_sum: f64 = p
+    let terms = p
         .x
         .iter()
         .enumerate()
         .filter(|(_, &t)| t >= 0)
-        .map(|(i, _)| (lse[i] - tgt[i]) as f64)
-        .sum();
+        .map(|(i, _)| (lse[i] - tgt[i]) as f64);
+    let loss_sum: f64 = if opts.kahan { kahan_sum(terms) } else { terms.sum() };
     let loss = if count == 0 { 0.0 } else { loss_sum / count as f64 };
     let workspace_bytes = n * 8 + buffer_bytes;
     ForwardOut { loss, count, lse, target_logit: tgt, workspace_bytes }
+}
+
+/// Kahan-compensated sum (used for the loss reduction when
+/// [`KernelOptions::kahan`] is set).
+fn kahan_sum(terms: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut comp) = (0.0f64, 0.0f64);
+    for term in terms {
+        let t = term - comp;
+        let s = sum + t;
+        comp = (s - sum) - t;
+        sum = s;
+    }
+    sum
 }
 
 /// Process rows `[row0, row0 + lse_out.len())`; returns the bytes of block
@@ -66,17 +87,26 @@ fn forward_span(
     let mut logits = vec![0f32; n_block * v_block];
     let mut run_max = vec![f32::NEG_INFINITY; n_block];
     let mut run_sum = vec![0f32; n_block];
+    // Per-row compensation of `run_sum` (Kahan variants only).
+    let mut run_comp = if opts.kahan {
+        vec![0f32; n_block]
+    } else {
+        Vec::new()
+    };
 
     let mut block_start = 0;
     while block_start < rows_total {
         let rows = n_block.min(rows_total - block_start);
         run_max[..rows].fill(f32::NEG_INFINITY);
         run_sum[..rows].fill(0.0);
+        if opts.kahan {
+            run_comp[..rows].fill(0.0);
+        }
 
         let mut j0 = 0;
         while j0 < v {
             let cols = v_block.min(v - j0);
-            // Tile logits: one (rows, cols) blocked matmul.
+            // Tile logits: one (rows, cols) blocked matmul (SIMD dot).
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 let e_row = &p.e[i * d..(i + 1) * d];
@@ -89,19 +119,35 @@ fn forward_span(
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 let z_row = &logits[r * cols..(r + 1) * cols];
-                let tile_max = z_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let tile_max = simd::vmax(z_row);
                 let m_old = run_max[r];
                 let m_new = m_old.max(tile_max);
-                let mut s = if m_old == f32::NEG_INFINITY {
+                let rescale = if m_old == f32::NEG_INFINITY {
                     0.0
                 } else {
-                    run_sum[r] * (m_old - m_new).exp()
+                    (m_old - m_new).exp()
                 };
-                for &z in z_row {
-                    s += (z - m_new).exp();
+                if opts.kahan {
+                    // Rescale the compensated pair, then Kahan-add each
+                    // exp term so sub-eps tails are not truncated.
+                    let mut s = run_sum[r] * rescale;
+                    let mut comp = run_comp[r] * rescale;
+                    for &z in z_row {
+                        let t = (z - m_new).exp() - comp;
+                        let s_new = s + t;
+                        comp = (s_new - s) - t;
+                        s = s_new;
+                    }
+                    run_sum[r] = s;
+                    run_comp[r] = comp;
+                } else {
+                    let mut s = run_sum[r] * rescale;
+                    for &z in z_row {
+                        s += (z - m_new).exp();
+                    }
+                    run_sum[r] = s;
                 }
                 run_max[r] = m_new;
-                run_sum[r] = s;
                 let t = p.x[i];
                 if t >= 0 {
                     let t = t as usize;
@@ -117,7 +163,7 @@ fn forward_span(
         }
         block_start += rows;
     }
-    (logits.len() + run_max.len() + run_sum.len()) * 4
+    (logits.len() + run_max.len() + run_sum.len() + run_comp.len()) * 4
 }
 
 #[cfg(test)]
@@ -127,7 +173,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn opts(n_block: usize, v_block: usize, threads: usize) -> KernelOptions {
-        KernelOptions { n_block, v_block, threads, filter: true, sort: true }
+        KernelOptions { n_block, v_block, threads, ..KernelOptions::default() }
     }
 
     #[test]
@@ -171,6 +217,26 @@ mod tests {
         let expected = n * 8 + workers * (o.n_block * o.v_block + 2 * o.n_block) * 4;
         assert_eq!(out.workspace_bytes, expected);
         assert!(out.workspace_bytes < n * v * 4 / 4, "{}", out.workspace_bytes);
+    }
+
+    #[test]
+    fn kahan_forward_matches_plain_on_benign_inputs() {
+        // On well-conditioned softmaxes the compensated recurrence is the
+        // same sum, just with the round-off carried — losses must agree to
+        // round-off (the long-tail divergence test lives in tests/native.rs).
+        let mut rng = Rng::new(21);
+        let (n, d, v) = (40, 12, 200);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.1);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let plain = cce_forward(&p, &opts(16, 33, 2));
+        let kahan = cce_forward(&p, &KernelOptions { kahan: true, ..opts(16, 33, 2) });
+        assert_eq!(plain.count, kahan.count);
+        assert!((plain.loss - kahan.loss).abs() < 1e-5, "{} vs {}", plain.loss, kahan.loss);
+        for i in 0..n {
+            assert!((plain.lse[i] - kahan.lse[i]).abs() < 1e-4);
+        }
+        // The compensation vector is accounted in the workspace.
+        assert!(kahan.workspace_bytes > plain.workspace_bytes);
     }
 
     #[test]

@@ -11,13 +11,19 @@
 //! * [`backward`] — CCE backward: rematerializes one `(N_B, V_B)` logit
 //!   block at a time, applies the §4.3 **gradient filter** (skip blocks in
 //!   which every softmax entry is below `2^-12`) with optional
-//!   **vocabulary sorting** by token frequency, and accumulates `dE`/`dC`.
-//!   The indicator term of the target column is applied separately per
-//!   token, so filtering never drops the `−1[j=y_i]` contribution.
+//!   **vocabulary sorting** by token frequency, and accumulates `dE`
+//!   (row-parallel) and `dC` (**column-parallel**: threads own disjoint
+//!   vocabulary column spans of one shared `V×D` accumulator, so the
+//!   workspace is `O(V·D)` total, not `threads·V·D`).  The indicator term
+//!   of the target column is applied separately per token, so filtering
+//!   never drops the `−1[j=y_i]` contribution.
 //! * [`infer`]    — the logit-free *inference* kernels built on the same
 //!   tiling: blocked top-k (bounded per-row heap + online LSE), online
 //!   Gumbel-max temperature sampling, and teacher-forced scoring — the
 //!   compute layer of [`crate::serve`].
+//! * `simd`       — the 8-lane f32 vector layer under all of the above:
+//!   runtime-dispatched AVX2+FMA intrinsics with a portable autovectorized
+//!   fallback behind one trait (dot / axpy / Kahan-axpy / max).
 //! * [`backend`]  — the [`Backend`] trait over loss implementations, with
 //!   [`NativeBackend`] (this module) and, behind the `pjrt` feature, a
 //!   `PjrtBackend` adapter over the artifact runtime.
@@ -37,6 +43,7 @@ pub mod backend;
 pub mod backward;
 pub mod infer;
 pub mod lse;
+pub(crate) mod simd;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
@@ -137,6 +144,17 @@ pub struct KernelOptions {
     pub filter: bool,
     /// Sort vocabulary blocks by token frequency in the backward pass.
     pub sort: bool,
+    /// Kahan-compensated accumulation: the forward's online LSE and loss
+    /// sums, and the backward's `dE`/`dC` accumulation, carry per-element
+    /// compensation terms (the paper's `CCE-Kahan` rows; doubles the
+    /// gradient working buffers, see [`crate::memmodel`]).
+    pub kahan: bool,
+    /// Compute `dC` without the gradient filter even when `filter` is on
+    /// (the paper's `CCE-Kahan-FullC`: the full classifier gradient).
+    pub full_c: bool,
+    /// Compute `dE` without the gradient filter even when `filter` is on
+    /// (the paper's `CCE-Kahan-FullE`: the full embedding gradient).
+    pub full_e: bool,
 }
 
 impl Default for KernelOptions {
@@ -150,6 +168,9 @@ impl Default for KernelOptions {
             threads: default_threads(),
             filter: true,
             sort: true,
+            kahan: false,
+            full_c: false,
+            full_e: false,
         }
     }
 }
@@ -157,6 +178,14 @@ impl Default for KernelOptions {
 /// Default worker count: the machine's available parallelism.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolved SIMD dispatch level of this process (`"avx2+fma"` or
+/// `"portable"`) — surfaced by `cce info` and stamped into
+/// `BENCH_table1.json` so perf baselines are only compared within one
+/// dispatch level.
+pub fn simd_dispatch() -> &'static str {
+    simd::dispatch_name()
 }
 
 /// Forward-pass result.
@@ -183,7 +212,10 @@ pub struct BackwardOut {
     /// `dC` — gradient wrt the classifier (V×D).
     pub d_c: Vec<f32>,
     pub stats: FilterStats,
-    /// Peak working memory (logit block buffers + per-thread `dC` shards).
+    /// Peak working memory: the shared permuted `dC` accumulator (`O(V·D)`
+    /// total — column-parallel, no per-thread shards), the block skip
+    /// mask, per-thread probability tiles, and (Kahan) compensation
+    /// buffers.
     pub workspace_bytes: usize,
 }
 
@@ -193,8 +225,10 @@ pub struct BackwardOut {
 pub struct FilterStats {
     /// `(N_B, V_B)` blocks visited.
     pub blocks_total: u64,
-    /// Blocks whose accumulation matmuls were skipped (all softmax entries
-    /// of active rows below the `2^-12` threshold).
+    /// Sub-eps blocks (all softmax entries of active rows below the
+    /// `2^-12` threshold) — skipped wholesale by every filter-eligible
+    /// phase (`full_c`/`full_e` exempt their phase from the skip but not
+    /// from this count).
     pub blocks_skipped: u64,
     /// Softmax entries at or above the threshold (over active rows).
     pub sig_entries: u64,
@@ -231,10 +265,9 @@ pub(crate) fn span_rows(n: usize, n_block: usize, threads: usize) -> usize {
     (per.max(1)) * nb
 }
 
-#[inline]
-pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
-}
+// The matmul primitive every kernel builds on: the runtime-dispatched
+// SIMD dot (AVX2+FMA where available, autovectorized 8-lane otherwise).
+pub(crate) use simd::dot;
 
 // ---------------------------------------------------------------- baseline
 
@@ -283,10 +316,8 @@ pub fn baseline_forward_backward(p: &Problem, opts: &KernelOptions) -> (ForwardO
                             }
                             let c_row = &p.c[j * d..(j + 1) * d];
                             let dc_row = &mut dc_local[j * d..(j + 1) * d];
-                            for k in 0..d {
-                                de_row[k] += g * c_row[k];
-                                dc_row[k] += g * e_row[k];
-                            }
+                            simd::axpy(de_row, g, c_row);
+                            simd::axpy(dc_row, g, e_row);
                         }
                     }
                     dc_local
@@ -336,7 +367,7 @@ fn baseline_logits_and_forward(p: &Problem, opts: &KernelOptions) -> (Vec<f32>, 
                         for j in 0..v {
                             z_row[j] = dot(e_row, &p.c[j * d..(j + 1) * d]);
                         }
-                        let m = z_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                        let m = simd::vmax(z_row);
                         let s: f32 = z_row.iter().map(|&z| (z - m).exp()).sum();
                         lse_chunk[r] = m + s.ln();
                         if p.x[i] >= 0 {

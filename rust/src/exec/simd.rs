@@ -1,0 +1,549 @@
+//! Portable 8-lane f32 SIMD for the exec kernels.
+//!
+//! One trait ([`Lanes`]) abstracts the vector operations the hot loops
+//! need — dot products, `y += a·x` accumulation (plain and
+//! Kahan-compensated), horizontal max, and the bag-of-context reductions.
+//! Two implementations exist:
+//!
+//! * [`Avx2`] — explicit `std::arch` AVX2 + FMA intrinsics (x86_64 only):
+//!   8 f32 lanes, two-way unrolled dot accumulators, fused multiply-add.
+//! * [`Portable`] — 8-lane scalar chunks that LLVM autovectorizes to
+//!   SSE2 / NEON / whatever the target offers; also the semantics
+//!   reference that the parity tests compare the AVX2 path against.
+//!
+//! Dispatch happens once per process (a `OnceLock`'d CPUID probe): the
+//! AVX2 path is taken only when the CPU reports both `avx2` and `fma`,
+//! everything else (and every non-x86_64 target) uses the portable path.
+//! No nightly features, no `std::simd`.
+//!
+//! Numerics: both paths keep 8 independent partial accumulators reduced
+//! pairwise at the end, so they differ from a sequential scalar sum only
+//! by f32 reassociation round-off (and by FMA's single product rounding
+//! on the AVX2 path).  Kernel-level tolerances (1e-4..1e-5 on losses and
+//! gradients) absorb this; `tests/native.rs` pins it across
+//! remainder-lane shapes (D, V not multiples of 8).  [`Lanes::vmax`] is
+//! exact (max is order-independent), and [`Lanes::axpy_kahan`] uses the
+//! same `mul → compensated add` sequence on both paths, so the Kahan
+//! kernels are bitwise identical across dispatch levels.
+
+#[cfg(target_arch = "x86_64")]
+use std::sync::OnceLock;
+
+/// The vector operations the kernels are written against.
+pub(crate) trait Lanes {
+    /// `Σ a[i]·b[i]` over the common prefix of `a` and `b`.
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32;
+    /// `y[i] += a·x[i]` over the common prefix.
+    fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]);
+    /// Kahan-compensated `y[i] += a·x[i]` with per-element compensation
+    /// carried in `c` (same length as `y`; zero-initialized by the caller
+    /// and reused across calls so the compensation persists over a sweep).
+    fn axpy_kahan(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]);
+    /// `max_i z[i]` (`NEG_INFINITY` for an empty slice).  Exact: max is
+    /// order-independent, so every path returns the same bits.
+    fn vmax(&self, z: &[f32]) -> f32;
+    /// `y[i] += x[i]` over the common prefix.
+    fn add_assign(&self, y: &mut [f32], x: &[f32]);
+    /// `y[i] *= a`.
+    fn scale(&self, y: &mut [f32], a: f32);
+}
+
+/// 8-lane scalar fallback; the shape LLVM autovectorizes on any target.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Portable;
+
+impl Lanes for Portable {
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (a, b) = (&a[..n], &b[..n]);
+        // Two 8-lane accumulator banks, 16 elements per iteration —
+        // mirrors the AVX2 path's unroll so the reduction trees match.
+        let mut lo = [0f32; 8];
+        let mut hi = [0f32; 8];
+        let mut ca = a.chunks_exact(16);
+        let mut cb = b.chunks_exact(16);
+        for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+            for k in 0..8 {
+                lo[k] += xa[k] * xb[k];
+                hi[k] += xa[k + 8] * xb[k + 8];
+            }
+        }
+        let (mut ra, mut rb) = (ca.remainder(), cb.remainder());
+        if ra.len() >= 8 {
+            for k in 0..8 {
+                lo[k] += ra[k] * rb[k];
+            }
+            ra = &ra[8..];
+            rb = &rb[8..];
+        }
+        let mut lanes = [0f32; 8];
+        for k in 0..8 {
+            lanes[k] = lo[k] + hi[k];
+        }
+        // Pairwise reduction in the same order as the AVX2 horizontal sum:
+        // fold the upper half onto the lower, then (s0+s1) + (s2+s3).
+        let s0 = lanes[0] + lanes[4];
+        let s1 = lanes[1] + lanes[5];
+        let s2 = lanes[2] + lanes[6];
+        let s3 = lanes[3] + lanes[7];
+        let mut sum = (s0 + s1) + (s2 + s3);
+        for (xa, xb) in ra.iter().zip(rb) {
+            sum += xa * xb;
+        }
+        sum
+    }
+
+    fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
+        for (yk, xk) in y.iter_mut().zip(x) {
+            *yk += a * *xk;
+        }
+    }
+
+    fn axpy_kahan(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len().min(c.len()).min(x.len());
+        for k in 0..n {
+            // Classic Kahan: the product is rounded once (plain mul, no
+            // FMA, so every dispatch level computes identical bits), then
+            // added with the running compensation.
+            let t = a * x[k] - c[k];
+            let s = y[k] + t;
+            c[k] = (s - y[k]) - t;
+            y[k] = s;
+        }
+    }
+
+    fn vmax(&self, z: &[f32]) -> f32 {
+        let mut lanes = [f32::NEG_INFINITY; 8];
+        let mut cz = z.chunks_exact(8);
+        for chunk in cz.by_ref() {
+            for k in 0..8 {
+                lanes[k] = lanes[k].max(chunk[k]);
+            }
+        }
+        let mut m = lanes.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        for &v in cz.remainder() {
+            m = m.max(v);
+        }
+        m
+    }
+
+    fn add_assign(&self, y: &mut [f32], x: &[f32]) {
+        for (yk, xk) in y.iter_mut().zip(x) {
+            *yk += *xk;
+        }
+    }
+
+    fn scale(&self, y: &mut [f32], a: f32) {
+        for yk in y.iter_mut() {
+            *yk *= a;
+        }
+    }
+}
+
+/// Token type proving `avx2` + `fma` were detected at runtime; the only
+/// way to reach the intrinsic paths.
+#[cfg(target_arch = "x86_64")]
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Avx2(());
+
+#[cfg(target_arch = "x86_64")]
+impl Avx2 {
+    pub(crate) fn detect() -> Option<Avx2> {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            Some(Avx2(()))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+impl Lanes for Avx2 {
+    fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: constructing `Avx2` requires runtime detection of
+        // avx2+fma (see `Avx2::detect`).
+        unsafe { avx2::dot(a, b) }
+    }
+
+    fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::axpy(y, a, x) }
+    }
+
+    fn axpy_kahan(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::axpy_kahan(y, c, a, x) }
+    }
+
+    fn vmax(&self, z: &[f32]) -> f32 {
+        // SAFETY: as above.
+        unsafe { avx2::vmax(z) }
+    }
+
+    fn add_assign(&self, y: &mut [f32], x: &[f32]) {
+        // SAFETY: as above.
+        unsafe { avx2::add_assign(y, x) }
+    }
+
+    fn scale(&self, y: &mut [f32], a: f32) {
+        // SAFETY: as above.
+        unsafe { avx2::scale(y, a) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_token() -> Option<Avx2> {
+    static DETECTED: OnceLock<Option<Avx2>> = OnceLock::new();
+    *DETECTED.get_or_init(Avx2::detect)
+}
+
+/// Name of the resolved dispatch level — bench metadata and diagnostics
+/// (timings from different levels are not comparable, so
+/// `BENCH_table1.json` carries this and `tools/check_bench.sh` refuses to
+/// diff across levels).
+pub(crate) fn dispatch_name() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_token().is_some() {
+        return "avx2+fma";
+    }
+    "portable"
+}
+
+// ---------------------------------------------------- dispatched entry points
+
+/// `Σ a[i]·b[i]` — the kernels' matmul primitive.
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(t) = avx2_token() {
+        return t.dot(a, b);
+    }
+    Portable.dot(a, b)
+}
+
+/// `y[i] += a·x[i]` — the gradient accumulation primitive.
+#[inline]
+pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(t) = avx2_token() {
+        return t.axpy(y, a, x);
+    }
+    Portable.axpy(y, a, x)
+}
+
+/// Kahan-compensated `y[i] += a·x[i]` (compensation in `c`).
+#[inline]
+pub(crate) fn axpy_kahan(y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(t) = avx2_token() {
+        return t.axpy_kahan(y, c, a, x);
+    }
+    Portable.axpy_kahan(y, c, a, x)
+}
+
+/// `max_i z[i]` (`NEG_INFINITY` when empty).
+#[inline]
+pub(crate) fn vmax(z: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(t) = avx2_token() {
+        return t.vmax(z);
+    }
+    Portable.vmax(z)
+}
+
+/// `y[i] += x[i]`.
+#[inline]
+pub(crate) fn add_assign(y: &mut [f32], x: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(t) = avx2_token() {
+        return t.add_assign(y, x);
+    }
+    Portable.add_assign(y, x)
+}
+
+/// `y[i] *= a`.
+#[inline]
+pub(crate) fn scale(y: &mut [f32], a: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(t) = avx2_token() {
+        return t.scale(y, a);
+    }
+    Portable.scale(y, a)
+}
+
+// ------------------------------------------------------------- AVX2 kernels
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum: fold the upper 128-bit half onto the lower, then
+    /// (s0+s1) + (s2+s3) — mirrored exactly by `Portable::dot`.
+    ///
+    /// # Safety
+    /// Caller must have verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi); // [s0, s1, s2, s3]
+        let odd = _mm_movehdup_ps(s); // [s1, s1, s3, s3]
+        let pair = _mm_add_ps(s, odd); // [s0+s1, _, s2+s3, _]
+        let upper = _mm_movehl_ps(pair, pair); // [s2+s3, _, _, _]
+        _mm_cvtss_f32(_mm_add_ss(pair, upper))
+    }
+
+    /// # Safety
+    /// Caller must have verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let mut sum = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller must have verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len().min(x.len());
+        let va = _mm256_set1_ps(a);
+        let (yp, xp) = (y.as_mut_ptr(), x.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// Plain mul (no FMA) so the compensation algebra — and therefore the
+    /// bits — match `Portable::axpy_kahan` exactly.
+    ///
+    /// # Safety
+    /// Caller must have verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_kahan(y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len().min(c.len()).min(x.len());
+        let va = _mm256_set1_ps(a);
+        let (yp, cp, xp) = (y.as_mut_ptr(), c.as_mut_ptr(), x.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let yi = _mm256_loadu_ps(yp.add(i));
+            let ci = _mm256_loadu_ps(cp.add(i));
+            let t = _mm256_sub_ps(_mm256_mul_ps(va, _mm256_loadu_ps(xp.add(i))), ci);
+            let s = _mm256_add_ps(yi, t);
+            let cn = _mm256_sub_ps(_mm256_sub_ps(s, yi), t);
+            _mm256_storeu_ps(yp.add(i), s);
+            _mm256_storeu_ps(cp.add(i), cn);
+            i += 8;
+        }
+        while i < n {
+            let t = a * x[i] - c[i];
+            let s = y[i] + t;
+            c[i] = (s - y[i]) - t;
+            y[i] = s;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn vmax(z: &[f32]) -> f32 {
+        let n = z.len();
+        let mut m = f32::NEG_INFINITY;
+        let mut i = 0usize;
+        if n >= 8 {
+            let mut vm = _mm256_loadu_ps(z.as_ptr());
+            i = 8;
+            while i + 8 <= n {
+                vm = _mm256_max_ps(vm, _mm256_loadu_ps(z.as_ptr().add(i)));
+                i += 8;
+            }
+            let lo = _mm256_castps256_ps128(vm);
+            let hi = _mm256_extractf128_ps(vm, 1);
+            let m4 = _mm_max_ps(lo, hi);
+            let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+            let m1 = _mm_max_ss(m2, _mm_shuffle_ps(m2, m2, 0b01));
+            m = _mm_cvtss_f32(m1);
+        }
+        while i < n {
+            m = m.max(z[i]);
+            i += 1;
+        }
+        m
+    }
+
+    /// # Safety
+    /// Caller must have verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(y: &mut [f32], x: &[f32]) {
+        let n = y.len().min(x.len());
+        let (yp, xp) = (y.as_mut_ptr(), x.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_add_ps(_mm256_loadu_ps(yp.add(i)), _mm256_loadu_ps(xp.add(i)));
+            _mm256_storeu_ps(yp.add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(y: &mut [f32], a: f32) {
+        let va = _mm256_set1_ps(a);
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(yp.add(i), _mm256_mul_ps(va, _mm256_loadu_ps(yp.add(i))));
+            i += 8;
+        }
+        while i < n {
+            y[i] *= a;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Sequential scalar reference (the pre-SIMD kernel semantics).
+    fn ref_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Every remainder-lane shape around the 8/16 boundaries.
+    fn shapes() -> Vec<usize> {
+        vec![0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 23, 24, 31, 33, 64, 100, 257]
+    }
+
+    #[test]
+    fn dot_matches_f64_reference_on_remainder_shapes() {
+        let mut rng = Rng::new(0x51D);
+        for n in shapes() {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let exact = ref_dot(&a, &b);
+            let got = dot(&a, &b) as f64;
+            let tol = 1e-5 * (1.0 + exact.abs()) * (1.0 + (n as f64).sqrt());
+            assert!((got - exact).abs() < tol, "n={n}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn dispatched_paths_agree_with_portable() {
+        // On AVX2 machines this compares the intrinsic path against the
+        // portable one; elsewhere it is trivially true (same path twice).
+        let mut rng = Rng::new(0x51D2);
+        for n in shapes() {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let p = Portable.dot(&a, &b) as f64;
+            let d = dot(&a, &b) as f64;
+            assert!((p - d).abs() < 1e-4 * (1.0 + p.abs()), "n={n}: {d} vs portable {p}");
+
+            let mut y1 = rand_vec(&mut rng, n);
+            let mut y2 = y1.clone();
+            Portable.axpy(&mut y1, 0.37, &a);
+            axpy(&mut y2, 0.37, &a);
+            for (u, v) in y1.iter().zip(&y2) {
+                assert!((u - v).abs() <= 1e-6 * (1.0 + u.abs()), "axpy n={n}");
+            }
+
+            assert_eq!(Portable.vmax(&a).to_bits(), vmax(&a).to_bits(), "vmax n={n}");
+
+            // Kahan is specified bitwise-identical across paths.
+            let mut yk1 = rand_vec(&mut rng, n);
+            let mut yk2 = yk1.clone();
+            let mut c1 = vec![0f32; n];
+            let mut c2 = vec![0f32; n];
+            Portable.axpy_kahan(&mut yk1, &mut c1, -1.25, &b);
+            axpy_kahan(&mut yk2, &mut c2, -1.25, &b);
+            assert_eq!(yk1, yk2, "axpy_kahan y n={n}");
+            assert_eq!(c1, c2, "axpy_kahan c n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_kahan_recovers_tiny_increments() {
+        // 100k additions of 1e-8 into 1.0: plain f32 accumulation loses
+        // every term (1e-8 < eps(1.0)/2); Kahan keeps them all.
+        let x = [1.0f32];
+        let mut plain = [1.0f32];
+        let mut kahan = [1.0f32];
+        let mut comp = [0.0f32];
+        for _ in 0..100_000 {
+            axpy(&mut plain, 1e-8, &x);
+            axpy_kahan(&mut kahan, &mut comp, 1e-8, &x);
+        }
+        let exact = 1.0 + 100_000.0 * 1e-8; // 1.001
+        assert_eq!(plain[0], 1.0, "plain f32 should drop sub-eps terms");
+        assert!(
+            (kahan[0] as f64 - exact).abs() < 1e-6,
+            "kahan {} vs exact {exact}",
+            kahan[0]
+        );
+    }
+
+    #[test]
+    fn vmax_and_scale_basics() {
+        assert_eq!(vmax(&[]), f32::NEG_INFINITY);
+        assert_eq!(vmax(&[-3.0]), -3.0);
+        let mut rng = Rng::new(9);
+        for n in shapes() {
+            let z = rand_vec(&mut rng, n);
+            let expect = z.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            assert_eq!(vmax(&z), expect, "n={n}");
+
+            let mut y = z.clone();
+            scale(&mut y, 2.0);
+            for (a, b) in y.iter().zip(&z) {
+                assert_eq!(*a, b * 2.0);
+            }
+            let mut s = z.clone();
+            add_assign(&mut s, &z);
+            for (a, b) in s.iter().zip(&y) {
+                assert_eq!(a.to_bits(), b.to_bits(), "x+x == 2x bitwise");
+            }
+        }
+    }
+}

@@ -21,10 +21,12 @@
 //! ```
 //!
 //! `--backend native` (the default in builds without the `pjrt` feature)
-//! runs the multi-threaded Rust kernels with zero artifacts; `--backend
-//! pjrt` replays the AOT HLO artifacts and needs the `pjrt` feature plus
-//! `make artifacts`.  `--threads N` sizes the native worker pool (default:
-//! available parallelism).
+//! runs the multi-threaded SIMD Rust kernels with zero artifacts;
+//! `--backend pjrt` replays the AOT HLO artifacts and needs the `pjrt`
+//! feature plus `make artifacts`.  `--threads N` sizes the native worker
+//! pool (default: available parallelism).  Native `--method` keys:
+//! `cce`, `cce_no_sort`, `cce_no_filter`, `cce_kahan`, `cce_kahan_fullc`,
+//! `cce_kahan_fulle`, `chunked<k>`, `baseline`.
 
 use anyhow::{bail, Result};
 
@@ -650,8 +652,10 @@ fn cmd_info(args: &Args) -> Result<()> {
     );
     println!("  blocking: N_B={} V_B={}", opts.n_block, opts.v_block);
     println!(
-        "  methods: baseline, chunked<k>, cce, cce_no_filter, cce_no_sort"
+        "  methods: baseline, chunked<k>, cce, cce_no_filter, cce_no_sort, \
+         cce_kahan, cce_kahan_fullc, cce_kahan_fulle"
     );
+    println!("  simd: 8-lane f32, dispatch: {}", exec::simd_dispatch());
     print_pjrt_info()
 }
 

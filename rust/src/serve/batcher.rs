@@ -215,7 +215,8 @@ mod tests {
     use crate::exec::KernelOptions;
 
     fn tiny_engine() -> Arc<Engine> {
-        let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, filter: true, sort: true };
+        let opts =
+            KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
         Arc::new(Engine::demo(384, 16, 2, opts).unwrap())
     }
 

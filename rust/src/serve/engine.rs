@@ -484,7 +484,8 @@ mod tests {
     use super::*;
 
     fn tiny_engine() -> Engine {
-        let opts = KernelOptions { n_block: 16, v_block: 64, threads: 2, filter: true, sort: true };
+        let opts =
+            KernelOptions { n_block: 16, v_block: 64, threads: 2, ..KernelOptions::default() };
         Engine::demo(384, 24, 6, opts).unwrap()
     }
 

@@ -33,6 +33,7 @@ fn rand_opts(rng: &mut Rng, filter: bool, sort: bool) -> KernelOptions {
         threads: 1 + rng.usize_below(4),
         filter,
         sort,
+        ..KernelOptions::default()
     }
 }
 
@@ -141,7 +142,13 @@ fn gradcheck_against_finite_differences() {
     let mut rng = Rng::new(0xF1D);
     let (n, d, v) = (5, 4, 9);
     let (e, c, x) = random_problem(&mut rng, n, d, v, 0.2);
-    let opts = KernelOptions { n_block: 2, v_block: 3, threads: 2, filter: false, sort: true };
+    let opts = KernelOptions {
+        n_block: 2,
+        v_block: 3,
+        threads: 2,
+        filter: false,
+        ..KernelOptions::default()
+    };
     let loss_of = |e: &[f32], c: &[f32]| -> f64 {
         let p = Problem::new(e, c, &x, n, d, v).unwrap();
         cce_forward(&p, &opts).loss
@@ -187,7 +194,7 @@ fn forward_working_memory_is_blocked() {
     let (n, d, v) = (512, 16, 8192);
     let (e, c, x) = random_problem(&mut rng, n, d, v, 0.0);
     let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
-    let opts = KernelOptions { n_block: 64, v_block: 128, threads: 2, filter: true, sort: true };
+    let opts = KernelOptions { n_block: 64, v_block: 128, threads: 2, ..KernelOptions::default() };
 
     let native = cce_forward(&p, &opts);
     let ceil = |a: usize, b: usize| a / b + usize::from(a % b != 0);
@@ -216,6 +223,255 @@ fn forward_working_memory_is_blocked() {
         native2.workspace_bytes, native.workspace_bytes,
         "forward workspace must be independent of V at fixed blocking"
     );
+}
+
+// ----------------------------------------------------- SIMD / Kahan / dW
+
+/// SIMD forward vs a sequential f64 scalar reference, at shapes chosen to
+/// exercise every remainder-lane path (D and V not multiples of 8/16).
+#[test]
+fn prop_simd_forward_lse_matches_scalar_reference_at_remainder_shapes() {
+    prop::check("simd forward == f64 scalar reference", |rng| {
+        // Odd dimensions on purpose: 1..=19 hits the scalar tail, the
+        // single-8 block, and the 16-wide unroll boundary of the dot.
+        let d = 1 + rng.usize_below(19);
+        let n = 1 + rng.usize_below(24);
+        let v = 1 + rng.usize_below(130);
+        let e: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.5).collect();
+        let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.5).collect();
+        let x: Vec<i32> = (0..n).map(|_| rng.usize_below(v) as i32).collect();
+        let p = Problem::new(&e, &c, &x, n, d, v).map_err(|err| format!("{err:#}"))?;
+        let opts = rand_opts(rng, true, true);
+        let out = cce_forward(&p, &opts);
+        for i in 0..n {
+            // Scalar reference: sequential f64 dot + f64 log-sum-exp.
+            let zs: Vec<f64> = (0..v)
+                .map(|j| (0..d).map(|k| e[i * d + k] as f64 * c[j * d + k] as f64).sum())
+                .collect();
+            let m = zs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = m + zs.iter().map(|z| (z - m).exp()).sum::<f64>().ln();
+            if (out.lse[i] as f64 - lse).abs() > 1e-4 * (1.0 + lse.abs()) {
+                return Err(format!(
+                    "lse[{i}] {} vs scalar {lse} (n={n} d={d} v={v} {opts:?})",
+                    out.lse[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// SIMD backward vs the materialized baseline at remainder-lane shapes.
+#[test]
+fn prop_simd_backward_grads_match_baseline_at_remainder_shapes() {
+    prop::check("simd bwd == baseline at odd D/V", |rng| {
+        let d = 1 + rng.usize_below(19);
+        let n = 1 + rng.usize_below(20);
+        let v = 2 + rng.usize_below(90);
+        let (e, c, x) = random_problem(rng, n, d, v, 0.2);
+        let p = Problem::new(&e, &c, &x, n, d, v).map_err(|err| format!("{err:#}"))?;
+        let opts = rand_opts(rng, false, rng.bool(0.5));
+        let fwd = cce_forward(&p, &opts);
+        let bwd = cce_backward(&p, &opts, &fwd.lse);
+        let (_, reference) = baseline_forward_backward(&p, &KernelOptions::default());
+        let diff = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+        };
+        if diff(&bwd.d_e, &reference.d_e) > 1e-4 || diff(&bwd.d_c, &reference.d_c) > 1e-4 {
+            return Err(format!("grad mismatch at n={n} d={d} v={v} ({opts:?})"));
+        }
+        Ok(())
+    });
+}
+
+/// Blocked top-k vs an f64 scalar reference at remainder-lane D: every
+/// returned token's log-probability must match the reference, and every
+/// returned token must belong to the reference top-k up to an ambiguity
+/// margin (SIMD and scalar dots may legitimately swap near-ties).
+#[test]
+fn topk_order_matches_scalar_reference_at_remainder_shapes() {
+    use cce::exec::{topk, InferProblem};
+    let mut rng = Rng::new(0x70B);
+    for (n, d, v, k) in [(12, 7, 61, 5), (8, 13, 100, 9), (6, 17, 33, 33)] {
+        let e: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.5).collect();
+        let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.5).collect();
+        let p = InferProblem::new(&e, &c, n, d, v).unwrap();
+        let opts = KernelOptions { n_block: 4, v_block: 9, threads: 2, ..KernelOptions::default() };
+        let out = topk(&p, &opts, k).unwrap();
+        for i in 0..n {
+            let zs: Vec<f64> = (0..v)
+                .map(|j| (0..d).map(|q| e[i * d + q] as f64 * c[j * d + q] as f64).sum())
+                .collect();
+            let m = zs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = m + zs.iter().map(|z| (z - m).exp()).sum::<f64>().ln();
+            let mut ranked: Vec<f64> = zs.clone();
+            ranked.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let kth = ranked[k - 1];
+            let row = &out.rows[i];
+            assert_eq!(row.tokens.len(), k, "row {i}");
+            for (r, &tok) in row.tokens.iter().enumerate() {
+                let z_ref = zs[tok as usize];
+                // Membership in the true top-k (ambiguity margin 1e-4).
+                assert!(
+                    z_ref >= kth - 1e-4,
+                    "row {i} rank {r}: token {tok} (z {z_ref}) below kth {kth}"
+                );
+                // And the reported logprob is the true one for that token.
+                assert!(
+                    (row.logprobs[r] as f64 - (z_ref - lse)).abs() < 1e-4,
+                    "row {i} rank {r}: lp {} vs {}",
+                    row.logprobs[r],
+                    z_ref - lse
+                );
+                // Best-first order up to the same margin.
+                if r > 0 {
+                    assert!(
+                        row.logprobs[r - 1] as f64 >= row.logprobs[r] as f64 - 1e-6,
+                        "row {i}: descending order violated at rank {r}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The ill-conditioned summation fixture of the `cce_kahan` rows: one
+/// dominant logit plus a sea of tiny equal tail terms whose f32 addition
+/// rounds up by ~6% each — plain CCE inflates the loss measurably, the
+/// Kahan variant stays at f64-reference accuracy.
+#[test]
+fn kahan_beats_plain_cce_on_ill_conditioned_tail() {
+    let (n, d, v) = (4usize, 2usize, 40_000usize);
+    // Column 0 carries logit 16, every other column logit 0; e = [1, 0]
+    // makes z_j = c[j*d] exactly.
+    let mut c = vec![0f32; v * d];
+    c[0] = 16.0;
+    let mut e = vec![0f32; n * d];
+    for i in 0..n {
+        e[i * d] = 1.0;
+    }
+    let x = vec![0i32; n]; // target = the dominant token
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+
+    // f64 reference: loss = ln(1 + (V-1)·exp(-16)).
+    let exact = (1.0f64 + (v as f64 - 1.0) * (-16.0f64).exp()).ln();
+
+    let base = KernelOptions { threads: 2, ..KernelOptions::default() };
+    let plain = NativeBackend::from_key("cce", base).unwrap().forward(&p).unwrap();
+    let kahan = NativeBackend::from_key("cce_kahan", base).unwrap().forward(&p).unwrap();
+
+    let plain_err = (plain.loss - exact).abs();
+    let kahan_err = (kahan.loss - exact).abs();
+    // The plain f32 recurrence really does lose the tail at this fixture…
+    assert!(
+        plain_err > 1e-4,
+        "fixture is not ill-conditioned enough: plain err {plain_err:.2e}"
+    );
+    // …and compensation recovers it by more than an order of magnitude.
+    assert!(
+        kahan_err * 10.0 < plain_err,
+        "kahan err {kahan_err:.2e} not << plain err {plain_err:.2e}"
+    );
+}
+
+/// The acceptance-criteria dW assertion: the backward's workspace is
+/// `O(V·D)` *total* (one shared permuted accumulator), not `threads·V·D`
+/// per-thread shards — growing the thread count adds only probability
+/// tiles.
+#[test]
+fn backward_workspace_is_column_parallel_not_per_thread() {
+    let mut rng = Rng::new(77);
+    let (n, d, v) = (128, 16, 2048);
+    let (e, c, x) = random_problem(&mut rng, n, d, v, 0.0);
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let base = KernelOptions {
+        n_block: 32,
+        v_block: 128,
+        threads: 1,
+        filter: false,
+        sort: false,
+        ..KernelOptions::default()
+    };
+    let ceil = |a: usize, b: usize| a / b + usize::from(a % b != 0);
+    let ws_of = |threads: usize| {
+        let o = KernelOptions { threads, ..base };
+        let fwd = cce_forward(&p, &o);
+        cce_backward(&p, &o, &fwd.lse).workspace_bytes
+    };
+    // Exact formula: skip mask + per-A-worker probability tile.  With
+    // sorting off the permutation is the identity, so phase B accumulates
+    // directly into the dC output — no shared buffer and no dC shards.
+    let (n_rb, n_vb) = (ceil(n, base.n_block), ceil(v, base.v_block));
+    let expect = |threads: usize| {
+        let span = ceil(ceil(n, base.n_block), threads) * base.n_block;
+        let workers_a = ceil(n, span);
+        n_rb * n_vb + workers_a * base.n_block * base.v_block * 4
+    };
+    for threads in [1, 2, 4] {
+        assert_eq!(ws_of(threads), expect(threads), "threads={threads}");
+    }
+    // Sorting pays exactly one shared V×D permuted accumulator on top —
+    // still O(V·D) total, still no per-thread shards.
+    let sorted = KernelOptions { sort: true, ..base };
+    let fwd_s = cce_forward(&p, &sorted);
+    let sorted_ws = cce_backward(&p, &sorted, &fwd_s.lse).workspace_bytes;
+    assert_eq!(sorted_ws, expect(1) + v * d * 4);
+    // The old per-thread shards added a V×D·4 = 128 KB shard per extra
+    // thread (384 KB for +3); the new growth is one 16 KB tile each.
+    let growth = ws_of(4) - ws_of(1);
+    assert_eq!(growth, 3 * base.n_block * base.v_block * 4, "growth must be tiles only");
+    assert!(
+        growth < v * d * 4 / 2,
+        "workspace grew by {growth} B across threads — dW shards are back?"
+    );
+    // Kahan doubles the gradient-sized working set, exactly:
+    // one N×D compensation (dE phase) + one V×D compensation (dC phase).
+    let fwd = cce_forward(&p, &KernelOptions { kahan: true, ..base });
+    let kahan_ws =
+        cce_backward(&p, &KernelOptions { kahan: true, ..base }, &fwd.lse).workspace_bytes;
+    assert_eq!(kahan_ws, expect(1) + (n * d + v * d) * 4);
+}
+
+/// Every output element is accumulated by exactly one thread in a fixed
+/// order, so gradients are bitwise identical across `--threads` (the old
+/// shard reduction reassociated the dC sum per thread count).
+#[test]
+fn backward_is_thread_count_invariant_bitwise() {
+    let mut rng = Rng::new(78);
+    let (n, d, v) = (96, 12, 512);
+    let (mut e, c, x) = random_problem(&mut rng, n, d, v, 0.15);
+    // Sharpen some rows so the filter actually skips blocks in this run.
+    for i in 0..n {
+        if x[i] >= 0 && i % 3 == 0 {
+            let t = x[i] as usize;
+            for k in 0..d {
+                e[i * d + k] = 6.0 * c[t * d + k];
+            }
+        }
+    }
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    for kahan in [false, true] {
+        let opts1 = KernelOptions {
+            n_block: 16,
+            v_block: 64,
+            threads: 1,
+            kahan,
+            ..KernelOptions::default()
+        };
+        let fwd = cce_forward(&p, &opts1);
+        let b1 = cce_backward(&p, &opts1, &fwd.lse);
+        for threads in [2, 3, 4] {
+            let o = KernelOptions { threads, ..opts1 };
+            let fwd_t = cce_forward(&p, &o);
+            assert_eq!(fwd.lse, fwd_t.lse, "lse not thread-invariant (kahan={kahan})");
+            let bt = cce_backward(&p, &o, &fwd_t.lse);
+            assert_eq!(b1.d_e, bt.d_e, "d_e not bitwise thread-invariant (kahan={kahan})");
+            assert_eq!(b1.d_c, bt.d_c, "d_c not bitwise thread-invariant (kahan={kahan})");
+            assert_eq!(b1.stats.blocks_skipped, bt.stats.blocks_skipped);
+            assert_eq!(b1.stats.blocks_total, bt.stats.blocks_total);
+            assert_eq!(b1.stats.sig_entries, bt.stats.sig_entries);
+        }
+    }
 }
 
 #[test]

@@ -22,8 +22,7 @@ fn rand_opts(rng: &mut Rng) -> KernelOptions {
         n_block: 1 + rng.usize_below(48),
         v_block: 1 + rng.usize_below(96),
         threads: 1 + rng.usize_below(4),
-        filter: true,
-        sort: true,
+        ..KernelOptions::default()
     }
 }
 
@@ -31,8 +30,14 @@ fn rand_opts(rng: &mut Rng) -> KernelOptions {
 
 #[test]
 fn prop_blocked_topk_matches_materialized_argsort() {
-    // Blocked top-k ≡ full-logits argsort (same tokens, same order, same
-    // logprobs) for random shapes, blockings, thread counts, and k.
+    // Blocked top-k ≡ full-logits argsort for random shapes, blockings,
+    // thread counts, and k.  The kernel's logits come from the SIMD dot
+    // (pairwise/FMA rounding) while this reference sums sequentially, so
+    // near-ties within a few ulps may legitimately swap ranks — token
+    // identity is enforced only when the reference separates adjacent
+    // ranks by more than an ambiguity margin, and logprobs are always
+    // checked against the returned token's own reference value.
+    const MARGIN: f32 = 1e-4;
     prop::check("blocked topk == materialized argsort", |rng| {
         let n = 1 + rng.usize_below(24);
         let d = 2 + rng.usize_below(16);
@@ -56,14 +61,27 @@ fn prop_blocked_topk_matches_materialized_argsort() {
             if row.tokens.len() != k {
                 return Err(format!("row {i}: {} tokens, want {k}", row.tokens.len()));
             }
+            let kth = z[order[k - 1]];
             for r in 0..k {
-                if row.tokens[r] != order[r] as i32 {
+                let tok = row.tokens[r] as usize;
+                let unambiguous = row.tokens[r] != order[r] as i32
+                    && (z[order[r]] - z[tok]).abs() > MARGIN;
+                if unambiguous {
                     return Err(format!(
                         "row {i} rank {r}: token {} vs reference {} (n={n} d={d} v={v} k={k})",
                         row.tokens[r], order[r]
                     ));
                 }
-                let want = z[order[r]] - lse;
+                // Every returned token must belong to the true top-k up
+                // to the same margin…
+                if z[tok] < kth - MARGIN {
+                    return Err(format!(
+                        "row {i} rank {r}: token {tok} (z {}) below kth {kth}",
+                        z[tok]
+                    ));
+                }
+                // …and carry its own correct full-softmax logprob.
+                let want = z[tok] - lse;
                 if (row.logprobs[r] - want).abs() > 1e-4 {
                     return Err(format!(
                         "row {i} rank {r}: logprob {} vs {want}",
@@ -91,7 +109,7 @@ fn sampler_matches_materialized_softmax_distribution() {
     let mut rng = Rng::new(0xC417);
     let e: Vec<f32> = (0..rows * d).map(|_| (rng.f64() * 3.0 - 1.5) as f32).collect();
     let p = InferProblem::new(&e, &c, rows, d, v).unwrap();
-    let opts = KernelOptions { n_block: 2, v_block: 5, threads: 2, filter: true, sort: true };
+    let opts = KernelOptions { n_block: 2, v_block: 5, threads: 2, ..KernelOptions::default() };
 
     let draws = 3000usize;
     for temperature in [1.0f32, 0.7] {
@@ -175,7 +193,7 @@ fn inference_workspace_stays_blocked() {
     // The acceptance claim: peak serving workspace is
     // O(N·D + threads·N_B·V_B) — asserted against a closed-form bound, and
     // strictly below the N×V logit matrix the kernels refuse to build.
-    let opts = KernelOptions { n_block: 32, v_block: 128, threads: 2, filter: true, sort: true };
+    let opts = KernelOptions { n_block: 32, v_block: 128, threads: 2, ..KernelOptions::default() };
     let engine = Engine::demo(512, 32, 0, opts).unwrap();
     let (v, d) = (engine.vocab, engine.d_model);
 
@@ -222,7 +240,7 @@ fn inference_workspace_stays_blocked() {
 
 #[test]
 fn server_answers_concurrent_clients_through_the_batcher() {
-    let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, filter: true, sort: true };
+    let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
     let engine = Arc::new(Engine::demo(384, 16, 2, opts).unwrap());
 
     // Expected answers, computed directly on the engine (deterministic).
@@ -293,7 +311,7 @@ fn server_answers_concurrent_clients_through_the_batcher() {
 
 #[test]
 fn server_rejects_malformed_and_survives() {
-    let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, filter: true, sort: true };
+    let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
     let engine = Arc::new(Engine::demo(384, 16, 0, opts).unwrap());
     let server = serve(engine, &ServeConfig::default()).unwrap();
     let addr = server.addr;

@@ -1,0 +1,203 @@
+#!/usr/bin/env bash
+# Cross-PR perf regression gate for the native Table-1 bench.
+#
+#   tools/check_bench.sh [--update] <fresh.json> [baseline.json]
+#
+# Compares a freshly measured BENCH_table1.json against the committed
+# baseline (default: BENCH_table1.json in the repo root) and prints a
+# per-method fwd/bwd delta table.  The build FAILS on a >25% regression in
+# either headline metric:
+#
+#   * the filtered-vs-unfiltered backward gap
+#     (bwd_ms[cce_no_filter] / bwd_ms[cce] — the paper's §4.3 win, and the
+#     first thing to look at per ROADMAP's perf-tracking section).  The
+#     ratio alone also shrinks when the unfiltered reference simply got
+#     faster, so the gate only fires when cce's own bwd_ms worsened too;
+#   * the cce forward and backward times (fwd_ms[cce] / bwd_ms[cce]),
+#     gated absolutely — the ratio is blind to uniform slowdowns.
+#
+# Exit codes: 0 = OK/bootstrap, 1 = regression (suppressible), 2 =
+# structural failure (unreadable fresh file, missing gate rows/fields —
+# never suppressible).
+#
+# A missing baseline, or one measured at a different grid/thread count, is
+# accepted as a bootstrap (exit 0).  `--update` (or BENCH_UPDATE=1 through
+# ci.sh) suppresses a *regression* verdict only, so a deliberate slowdown
+# can land — put the justification in the commit message.  Installing the
+# accepted numbers as the committed baseline is ci.sh's job (it refreshes
+# both BENCH files after the gate).
+#
+# Timing medians still wobble on shared runners; 25% is chosen to be well
+# above normal jitter at the CI budget (see docs/benchmarks.md).
+
+set -euo pipefail
+
+UPDATE=0
+if [[ "${1:-}" == "--update" ]]; then
+    UPDATE=1
+    shift
+fi
+FRESH="${1:?usage: tools/check_bench.sh [--update] <fresh.json> [baseline.json]}"
+BASELINE="${2:-BENCH_table1.json}"
+
+if ! command -v python3 >/dev/null 2>&1; then
+    # Fail hard: a silently skipped gate would let regressions land green.
+    echo "[check_bench] ERROR: python3 not found — the regression gate cannot run." >&2
+    echo "[check_bench] Install python3 on the CI image (the repo's python/ tooling needs it anyway)." >&2
+    exit 2
+fi
+
+STATUS=0
+python3 - "$FRESH" "$BASELINE" <<'PY' || STATUS=$?
+import json, sys
+
+THRESHOLD = 1.25     # >25% regression fails
+NOISE = 1.05         # median jitter allowance for the gap gate's cce guard
+EXIT_REGRESSION = 1  # suppressible via --update
+EXIT_STRUCTURAL = 2  # never suppressible
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {r["method"]: r for r in doc.get("rows", []) if "method" in r}
+    return doc, rows
+
+
+def gap(rows):
+    """Filtered-vs-unfiltered backward gap (higher is better)."""
+    try:
+        cce = rows["cce"]["bwd_ms"]
+        nof = rows["cce_no_filter"]["bwd_ms"]
+    except KeyError:
+        return None
+    if cce <= 0:
+        return None
+    return nof / cce
+
+
+def main(fresh_path, base_path):
+    try:
+        fresh_doc, fresh = load(fresh_path)
+    except (OSError, json.JSONDecodeError, TypeError) as err:
+        print(f"[check_bench] STRUCTURAL: fresh bench {fresh_path} unreadable ({err})")
+        return EXIT_STRUCTURAL
+
+    try:
+        base_doc, base = load(base_path)
+    except FileNotFoundError:
+        print(f"[check_bench] no committed baseline at {base_path} — "
+              "accepting the fresh run as the first data point")
+        return 0
+    except (OSError, json.JSONDecodeError, TypeError) as err:
+        print(f"[check_bench] baseline {base_path} unreadable ({err}) — "
+              "accepting the fresh run as the new baseline")
+        return 0
+
+    # Comparability key: grid, thread count, schema, and the resolved SIMD
+    # dispatch level — a baseline measured on an AVX2 machine must not gate
+    # a portable-path runner (or vice versa); such pairs bootstrap instead.
+    key = lambda doc: (doc.get("grid"), doc.get("threads"), doc.get("schema"),
+                       doc.get("simd"))
+    if key(fresh_doc) != key(base_doc):
+        print(f"[check_bench] baseline grid/threads/schema/simd {key(base_doc)} "
+              f"!= fresh {key(fresh_doc)} — not comparable, accepting fresh run")
+        return 0
+
+    # Per-method delta table (always printed).  Missing timing fields show
+    # as 0 here; the gates below treat them as structural failures.
+    hdr = (f"{'method':<18}{'fwd ms':>10}{'(base)':>10}{'Δ%':>8}"
+           f"{'bwd ms':>10}{'(base)':>10}{'Δ%':>8}")
+    print(f"[check_bench] {fresh_path} vs {base_path}")
+    print("  " + hdr)
+    print("  " + "-" * len(hdr))
+
+    def pct(new, old):
+        return f"{100.0 * (new - old) / old:+.0f}%" if old > 0 else "n/a"
+
+    for method, row in fresh.items():
+        fwd, bwd = row.get("fwd_ms", 0.0), row.get("bwd_ms", 0.0)
+        b = base.get(method)
+        if b is None:
+            print(f"  {method:<18}{fwd:>10.2f}{'new':>10}{'':>8}"
+                  f"{bwd:>10.2f}{'new':>10}{'':>8}")
+            continue
+        bf, bb = b.get("fwd_ms", 0.0), b.get("bwd_ms", 0.0)
+        print(f"  {method:<18}{fwd:>10.2f}{bf:>10.2f}{pct(fwd, bf):>8}"
+              f"{bwd:>10.2f}{bb:>10.2f}{pct(bwd, bb):>8}")
+
+    failures = []
+    structural = []
+
+    # The fresh file must carry the gate rows — a bench run that cannot
+    # compute the headline metrics is an error, never a silent pass.
+    fresh_gap, base_gap = gap(fresh), gap(base)
+    if fresh_gap is None:
+        structural.append("fresh bench is missing the cce/cce_no_filter rows "
+                          "(or their bwd_ms) — the filter-gap gate cannot run")
+    elif base_gap is None:
+        print("  baseline lacks cce/cce_no_filter rows — taking the fresh gap "
+              f"({fresh_gap:.2f}x) as the new reference")
+    else:
+        print(f"  filter gap (no_filter/cce bwd): {fresh_gap:.2f}x "
+              f"(baseline {base_gap:.2f}x)")
+        if fresh_gap * THRESHOLD < base_gap:
+            # The ratio also shrinks when cce_no_filter simply got *faster*
+            # — a pure improvement.  Only fail when cce's own backward
+            # worsened beyond median jitter (a real cce slowdown past 25%
+            # is caught by the absolute gate below regardless); otherwise
+            # note the narrower gap and move on.
+            cce_worse = (fresh["cce"]["bwd_ms"] > base["cce"]["bwd_ms"] * NOISE)
+            if cce_worse:
+                failures.append(
+                    f"filtered-vs-unfiltered bwd gap regressed: "
+                    f"{fresh_gap:.2f}x vs baseline {base_gap:.2f}x "
+                    f"(>{(THRESHOLD - 1) * 100:.0f}%) with cce bwd itself slower")
+            else:
+                print("  gap narrowed but cce bwd did not slow down "
+                      "(the unfiltered reference got faster) — not a regression")
+
+    # Absolute gates on cce itself: the gap ratio is blind to a *uniform*
+    # slowdown (cce and cce_no_filter both regressing by the same factor),
+    # so fwd and bwd are each gated against the baseline directly.
+    for metric, label in [("fwd_ms", "forward"), ("bwd_ms", "backward")]:
+        fresh_ms = fresh.get("cce", {}).get(metric)
+        base_ms = base.get("cce", {}).get(metric)
+        if fresh_ms is None:
+            structural.append(f"fresh bench is missing the cce row (or its "
+                              f"{metric}) — the {label}-time gate cannot run")
+        elif base_ms is not None and base_ms > 0 and fresh_ms > base_ms * THRESHOLD:
+            failures.append(
+                f"cce {label} regressed: {fresh_ms:.2f} ms vs baseline "
+                f"{base_ms:.2f} ms (>{(THRESHOLD - 1) * 100:.0f}%)")
+
+    if structural:
+        for f in structural:
+            print(f"[check_bench] STRUCTURAL: {f}")
+        return EXIT_STRUCTURAL
+    if failures:
+        for f in failures:
+            print(f"[check_bench] REGRESSION: {f}")
+        print("[check_bench] rerun with BENCH_UPDATE=1 ./ci.sh (or "
+              "tools/check_bench.sh --update) to accept deliberately")
+        return EXIT_REGRESSION
+    print("[check_bench] OK — no regression beyond the 25% threshold")
+    return 0
+
+
+try:
+    sys.exit(main(sys.argv[1], sys.argv[2]))
+except SystemExit:
+    raise
+except Exception as err:  # anything unforeseen is structural, not a "regression"
+    print(f"[check_bench] STRUCTURAL: unexpected error: {err!r}")
+    sys.exit(EXIT_STRUCTURAL)
+PY
+
+# --update forgives a regression verdict only; structural failures (a bench
+# that could not even be compared) always propagate.
+if [[ "$UPDATE" == "1" && "$STATUS" -eq 1 ]]; then
+    echo "[check_bench] --update: regression accepted deliberately"
+    STATUS=0
+fi
+exit "$STATUS"
