@@ -47,6 +47,9 @@ echo "== cargo clippy --features pjrt (-D warnings) =="
 cargo clippy -p cce --all-targets --features pjrt -- -D warnings
 
 if [[ "$QUICK" == "1" ]]; then
+    # Includes the exec::pool leak/panic/drop-join tests (unit + the
+    # tests/native.rs integration pair) — the fast loop still covers the
+    # worker-pool invariants.
     echo "== quick: cargo test -q (debug) =="
     cargo test -q
     echo "CI OK (quick: release build, serve smoke, and benches skipped)"
@@ -120,9 +123,12 @@ echo "   serve self-test OK (port $PORT)"
 echo "== bench: table1 (native) + servebench at the fixed CI grid =="
 # Fixed grid (see docs/benchmarks.md): d >= 128 keeps gen_loss_inputs'
 # softmax peaked enough for real block skipping; threads pinned to 2 so
-# numbers are comparable across differently-sized runners.
+# numbers are comparable across differently-sized runners.  --small-n 8
+# adds the decode-shape row (N=8), where per-call orchestration overhead —
+# not FLOPs — dominates; check_bench gates it so thread-churn regressions
+# cannot silently creep back.
 "$CCE" table1 --backend native --n 512 --d 128 --v 2048 --threads 2 \
-    --budget-ms 400 --seed 0 --json "$SMOKE_DIR/BENCH_table1.json"
+    --small-n 8 --budget-ms 400 --seed 0 --json "$SMOKE_DIR/BENCH_table1.json"
 "$CCE" servebench --requests 48 --concurrency 4 --max-tokens 8 --threads 2 \
     --json "$SMOKE_DIR/BENCH_serve.json"
 

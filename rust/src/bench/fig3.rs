@@ -119,7 +119,7 @@ fn rank_stats_native(
     let mut probs = vec![0f64; v];
     for b in batches.iter().take(max_batches) {
         let tokens = b.tokens.as_i32()?;
-        let h = crate::coordinator::bag_hidden(tokens, &state.emb, d, window, seq_len);
+        let h = crate::coordinator::bag_hidden(tokens, &state.emb, d, window, seq_len, 0);
         for h_row in h.chunks(d) {
             // One V-vector of logits -> softmax -> sorted descending.
             let mut m = f64::NEG_INFINITY;

@@ -54,6 +54,12 @@ pub struct ServeBench {
     /// comparisons of `BENCH_serve.json` only compare like with like.
     pub vocab: usize,
     pub d_model: usize,
+    /// Resolved kernel worker count (`--threads 0` = auto applied).
+    pub threads: usize,
+    /// Spawned workers of the shared kernel pool after the run.
+    pub pool_workers: usize,
+    /// Resolved SIMD dispatch level of the run.
+    pub simd: &'static str,
 }
 
 impl ServeBench {
@@ -77,6 +83,7 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.port = 0; // never collide
     let (vocab, d_model) = (engine.vocab, engine.d_model);
+    let threads = engine.opts.resolved_threads();
     let server = serve(engine, &serve_cfg)?;
     let addr = server.addr;
     let concurrency = cfg.concurrency.max(1);
@@ -193,6 +200,9 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
         max_batch_observed: get_u64("max_batch_observed"),
         vocab,
         d_model,
+        threads,
+        pool_workers: crate::exec::pool_workers(),
+        simd: crate::exec::simd_dispatch(),
     })
 }
 
@@ -225,6 +235,10 @@ pub fn print(bench: &ServeBench) {
         bench.max_batch_observed,
         bench.peak_workspace_bytes as f64 / (1024.0 * 1024.0)
     );
+    println!(
+        "  kernel threads: {}   pool workers: {}   simd: {}",
+        bench.threads, bench.pool_workers, bench.simd
+    );
 }
 
 /// Persist as `BENCH_serve.json` (one row per endpoint + run meta).
@@ -244,6 +258,9 @@ pub fn write_json(bench: &ServeBench, path: impl AsRef<std::path::Path>) -> Resu
         ("schema", Json::Int(1)),
         ("vocab", Json::Int(bench.vocab as i64)),
         ("d_model", Json::Int(bench.d_model as i64)),
+        ("threads", Json::Int(bench.threads as i64)),
+        ("pool_workers", Json::Int(bench.pool_workers as i64)),
+        ("simd", Json::str(bench.simd)),
         ("requests", Json::Int(bench.requests as i64)),
         ("concurrency", Json::Int(bench.concurrency as i64)),
         ("elapsed_secs", Json::Float(bench.elapsed_secs)),
@@ -293,5 +310,8 @@ mod tests {
         assert_eq!(parsed.get("rows").unwrap().as_array().unwrap().len(), 2);
         assert_eq!(parsed.get("vocab").unwrap().as_i64(), Some(384));
         assert_eq!(parsed.get("d_model").unwrap().as_i64(), Some(16));
+        assert_eq!(parsed.get("threads").unwrap().as_i64(), Some(1));
+        assert!(parsed.get("pool_workers").and_then(Json::as_i64).is_some());
+        assert!(parsed.get("simd").and_then(Json::as_str).is_some());
     }
 }

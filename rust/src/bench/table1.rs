@@ -187,6 +187,57 @@ pub fn run_native(
     Ok(rows)
 }
 
+/// The decode-shape measurement: `cce` forward / forward+backward at a
+/// small N (CI uses 8 — one lockstep micro-batch of decode steps) on the
+/// same `(D, V)` grid.  At this shape per-call *orchestration* cost —
+/// thread spawn/join, dispatch probes — dominates the FLOPs, which is
+/// exactly what the persistent pool and the once-per-sweep SIMD token
+/// remove; `tools/check_bench.sh` gates this row so that overhead cannot
+/// silently creep back.
+#[derive(Debug, Clone, Copy)]
+pub struct SmallN {
+    pub n: usize,
+    pub fwd_secs: f64,
+    pub fwdbwd_secs: f64,
+}
+
+impl SmallN {
+    pub fn bwd_secs(&self) -> f64 {
+        (self.fwdbwd_secs - self.fwd_secs).max(0.0)
+    }
+}
+
+/// Measure the small-N decode-shape row (native `cce` only).
+pub fn run_native_small(
+    n: usize,
+    d: usize,
+    v: usize,
+    ignored_frac: f64,
+    budget_ms: u64,
+    opts: KernelOptions,
+    seed: u64,
+) -> Result<SmallN> {
+    let mut rng = Rng::new(seed ^ 0x5_0411);
+    let mut inputs = gen_loss_inputs(n, d, v, &mut rng, ignored_frac);
+    shuffle_vocab_ids(&mut inputs, &mut rng);
+    let problem = Problem::from_tensors(&inputs)?;
+    let backend = NativeBackend::from_key("cce", opts)?;
+    let budget = Duration::from_millis(budget_ms);
+    let _ = backend.forward_backward(&problem)?; // warmup
+    let fwd = time_fn("small_n_fwd_cce", budget, || {
+        std::hint::black_box(backend.forward(&problem).expect("native forward"));
+    });
+    let fwdbwd = time_fn("small_n_fwdbwd_cce", budget, || {
+        std::hint::black_box(backend.forward_backward(&problem).expect("native fwdbwd"));
+    });
+    eprintln!(
+        "  [table1/native] cce @ N={n} (decode shape): fwd {} fwd+bwd {}",
+        fmt_duration(fwd.median()),
+        fmt_duration(fwdbwd.median())
+    );
+    Ok(SmallN { n, fwd_secs: fwd.median(), fwdbwd_secs: fwdbwd.median() })
+}
+
 /// Measure all methods at the benchmark grid in the manifest (AOT
 /// artifacts through PJRT).
 #[cfg(feature = "pjrt")]
@@ -297,11 +348,16 @@ pub fn filter_speedup(rows: &[Row]) -> Option<(f64, f64, f64)> {
 pub const BWD_FIXED_FRACTION: f64 = 0.25;
 
 /// Persist rows as machine-readable JSON (`BENCH_table1.json`) so the perf
-/// trajectory is trackable across PRs.
+/// trajectory is trackable across PRs.  `threads` is the *resolved* worker
+/// count (`--threads 0` = auto already applied), `pool_workers` the shared
+/// pool's spawned-worker count after the run, and `small_n` the optional
+/// decode-shape row.
 pub fn write_json(
     rows: &[Row],
     grid: (usize, usize, usize),
     threads: usize,
+    pool_workers: usize,
+    small_n: Option<&SmallN>,
     path: impl AsRef<std::path::Path>,
 ) -> Result<()> {
     let jrows: Vec<Json> = rows
@@ -353,8 +409,20 @@ pub fn write_json(
             ]),
         ),
         ("threads", Json::Int(threads as i64)),
+        ("pool_workers", Json::Int(pool_workers as i64)),
         ("rows", Json::arr(jrows)),
     ];
+    if let Some(small) = small_n {
+        doc.push((
+            "small_n",
+            Json::obj(vec![
+                ("n", Json::Int(small.n as i64)),
+                ("fwd_ms", Json::Float(small.fwd_secs * 1e3)),
+                ("bwd_ms", Json::Float(small.bwd_secs() * 1e3)),
+                ("fwdbwd_ms", Json::Float(small.fwdbwd_secs * 1e3)),
+            ]),
+        ));
+    }
     if let Some((measured, predicted, survival)) = filter_speedup(rows) {
         doc.push((
             "filter_speedup",
@@ -545,16 +613,32 @@ mod tests {
         assert!(predicted > 1.0 && predicted <= 4.0, "{predicted}");
         assert!(survival > 0.0 && survival < 1.0);
 
+        let small = run_native_small(8, 128, 1024, 0.1, 20, opts, 0).unwrap();
+        assert_eq!(small.n, 8);
+        assert!(small.fwd_secs > 0.0 && small.fwdbwd_secs >= small.fwd_secs);
+
         let path = std::env::temp_dir().join("cce_bench_table1_test.json");
-        write_json(&rows, (256, 128, 1024), opts.threads, &path).unwrap();
+        write_json(
+            &rows,
+            (256, 128, 1024),
+            opts.resolved_threads(),
+            crate::exec::pool_workers(),
+            Some(&small),
+            &path,
+        )
+        .unwrap();
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("table1"));
         assert!(parsed.get("simd").and_then(Json::as_str).is_some());
+        assert!(parsed.get("pool_workers").and_then(Json::as_i64).is_some());
         assert_eq!(
             parsed.get("rows").unwrap().as_array().unwrap().len(),
             rows.len()
         );
         assert!(parsed.get("filter_speedup").is_some());
+        let small_json = parsed.get("small_n").expect("small_n section");
+        assert_eq!(small_json.get("n").unwrap().as_i64(), Some(8));
+        assert!(small_json.get("fwdbwd_ms").is_some());
         assert_eq!(
             parsed.get("grid").unwrap().get("v").unwrap().as_i64(),
             Some(1024)

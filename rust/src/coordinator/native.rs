@@ -16,8 +16,10 @@
 //! loss-method ablations on a real training loop, not to be a transformer:
 //! the transformer lives in the AOT artifacts behind the `pjrt` feature.
 //! The bag reduction, the dH scatter, and the SGD update all run on the
-//! same SIMD layer as the kernels (`crate::exec::simd`); `--method`
-//! accepts every native key, including the `cce_kahan*` variants.
+//! same SIMD layer as the kernels (`crate::exec::simd`, dispatch resolved
+//! once per step) and the same persistent fork-join pool
+//! (`crate::exec::pool`); `--method` accepts every native key, including
+//! the `cce_kahan*` variants.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -25,7 +27,8 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::config::{CorpusKind, RunConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::data::{instruct_corpus, web_corpus, Dataset, DatasetConfig, StepBatch};
-use crate::exec::{Backend, KernelOptions, NativeBackend, Problem};
+use crate::exec::simd::{self, Lanes};
+use crate::exec::{pool, Backend, BackwardOut, KernelOptions, NativeBackend, Problem};
 use crate::runtime::HostTensor;
 use crate::tokenizer::{Tokenizer, TokenizerConfig};
 use crate::util::rng::Rng;
@@ -145,26 +148,59 @@ pub struct NativeBundle {
 /// `seq_len`-aligned sequence.  Shared by the trainer, the fig3 native
 /// harness, and (per-context, without the sequence resets) the serving
 /// engine's decode path.
+///
+/// `threads` sizes the fork-join spans (`0` = auto); positions are
+/// independent and spans align to sequence boundaries, so the result is
+/// bitwise identical for every thread count.
 pub fn bag_hidden(
     tokens: &[i32],
     emb: &[f32],
     d: usize,
     window: usize,
     seq_len: usize,
+    threads: usize,
+) -> Vec<f32> {
+    simd::with_lanes!(lanes => bag_hidden_with(tokens, emb, d, window, seq_len, threads, lanes))
+}
+
+fn bag_hidden_with<L: Lanes>(
+    tokens: &[i32],
+    emb: &[f32],
+    d: usize,
+    window: usize,
+    seq_len: usize,
+    threads: usize,
+    lanes: L,
 ) -> Vec<f32> {
     let w = window.max(1);
     let seq = seq_len.max(1);
-    let mut h = vec![0f32; tokens.len() * d];
-    for (i, chunk) in h.chunks_mut(d).enumerate() {
-        let q = i % seq;
-        let lo = i - q.min(w - 1);
-        let len = (i - lo + 1) as f32;
-        for &tok in &tokens[lo..=i] {
-            let row = &emb[tok as usize * d..(tok as usize + 1) * d];
-            crate::exec::simd::add_assign(chunk, row);
-        }
-        crate::exec::simd::scale(chunk, 1.0 / len);
-    }
+    let n = tokens.len();
+    let mut h = vec![0f32; n * d];
+    // Whole sequences per span: a position's window never crosses its own
+    // sequence, so each span reads only its own token slice.
+    let seqs = crate::exec::ceil_div(n, seq);
+    let span_seqs = crate::exec::ceil_div(seqs, crate::exec::resolve_threads(threads)).max(1);
+    let tasks: Vec<_> = h
+        .chunks_mut(span_seqs * seq * d)
+        .enumerate()
+        .map(|(ti, h_chunk)| {
+            let pos0 = ti * span_seqs * seq;
+            move || {
+                for (r, chunk) in h_chunk.chunks_mut(d).enumerate() {
+                    let i = pos0 + r;
+                    let q = i % seq;
+                    let lo = i - q.min(w - 1);
+                    let len = (i - lo + 1) as f32;
+                    for &tok in &tokens[lo..=i] {
+                        let row = &emb[tok as usize * d..(tok as usize + 1) * d];
+                        lanes.add_assign(chunk, row);
+                    }
+                    lanes.scale(chunk, 1.0 / len);
+                }
+            }
+        })
+        .collect();
+    pool::global().run(tasks);
     h
 }
 
@@ -225,40 +261,109 @@ impl NativeTrainer {
     /// so measurement harnesses (`fig3 --backend native`) can probe the
     /// model head directly.
     pub fn hidden(&self, tokens: &[i32], state: &NativeState) -> Vec<f32> {
-        bag_hidden(tokens, &state.emb, self.model.d_model, self.model.window, self.model.seq_len)
+        bag_hidden(
+            tokens,
+            &state.emb,
+            self.model.d_model,
+            self.model.window,
+            self.model.seq_len,
+            self.backend.opts.threads,
+        )
     }
 
     /// One SGD step on a batch; returns `(loss, grad_norm)`.
     pub fn step(&self, state: &mut NativeState, batch: &StepBatch) -> Result<(f64, f64)> {
-        let d = self.model.d_model;
-        let w = self.model.window.max(1);
-        let seq = self.model.seq_len;
         let tokens = batch.tokens.as_i32()?;
         let targets = batch.targets.as_i32()?;
         let h = self.hidden(tokens, state);
         let n = tokens.len();
-        let problem = Problem::new(&h, &state.cls, targets, n, d, self.vocab)?;
+        let problem = Problem::new(&h, &state.cls, targets, n, self.model.d_model, self.vocab)?;
         let (fwd, bwd) = self.backend.forward_backward(&problem)?;
+        let grad_norm = simd::with_lanes!(lanes => self.apply_update(state, tokens, &bwd, lanes));
+        state.step += 1;
+        Ok((fwd.loss, grad_norm))
+    }
 
-        // Scatter dH back through the bag-of-context mean into dEmb.
+    /// Scatter `dH` through the bag-of-context mean into `dEmb`, then apply
+    /// the SGD update — both on the fork-join pool with a resolved SIMD
+    /// token.  The scatter is **token-span parallel**: a sequential
+    /// pre-pass buckets window visits per contiguous embedding-row span
+    /// (in ascending position order), and each task drains only its own
+    /// bucket — so each `dEmb` row receives its contributions in exactly
+    /// the sequential order and the result is bitwise invariant in the
+    /// thread count (same argument as the backward's column-parallel
+    /// `dC`).  The SGD `axpy` is elementwise; its chunk boundaries are
+    /// rounded to the SIMD lane width so every element keeps the same
+    /// FMA-body/scalar-tail role as in the single-chunk sweep — bitwise
+    /// neutral too.  Returns the gradient norm.
+    fn apply_update<L: Lanes>(
+        &self,
+        state: &mut NativeState,
+        tokens: &[i32],
+        bwd: &BackwardOut,
+        lanes: L,
+    ) -> f64 {
+        let d = self.model.d_model;
+        let w = self.model.window.max(1);
+        let seq = self.model.seq_len.max(1);
+        let n = tokens.len();
+        let threads = self.backend.opts.resolved_threads();
         let mut d_emb = vec![0f32; state.emb.len()];
+        let span_rows = crate::exec::ceil_div(self.vocab, threads).max(1);
+        let n_spans = crate::exec::ceil_div(self.vocab, span_rows);
+        // One sequential O(n·window) pre-pass buckets `(token, position,
+        // 1/len)` visits per owning token span, so total scan work stays
+        // O(n·window) no matter the thread count (a per-task rescan would
+        // grow linearly with it).  Bucket order is the sequential visiting
+        // order, so every dEmb row still accumulates in exactly the
+        // single-threaded order — bitwise thread-invariant.
+        let mut buckets: Vec<Vec<(u32, u32, f32)>> = vec![Vec::new(); n_spans];
         for i in 0..n {
             let q = i % seq;
             let lo = i - q.min(w - 1);
-            let len = (i - lo + 1) as f32;
-            let dh_row = &bwd.d_e[i * d..(i + 1) * d];
+            let inv_len = 1.0 / (i - lo + 1) as f32;
             for &tok in &tokens[lo..=i] {
-                let row = &mut d_emb[tok as usize * d..(tok as usize + 1) * d];
-                crate::exec::simd::axpy(row, 1.0 / len, dh_row);
+                let t = tok as usize;
+                buckets[t / span_rows].push((t as u32, i as u32, inv_len));
             }
         }
+        let tasks: Vec<_> = d_emb
+            .chunks_mut(span_rows * d)
+            .zip(&buckets)
+            .enumerate()
+            .map(|(ti, (chunk, bucket))| {
+                let tok0 = ti * span_rows;
+                move || {
+                    for &(t, i, inv_len) in bucket {
+                        let (t, i) = (t as usize, i as usize);
+                        let dh_row = &bwd.d_e[i * d..(i + 1) * d];
+                        let row = &mut chunk[(t - tok0) * d..(t - tok0 + 1) * d];
+                        lanes.axpy(row, inv_len, dh_row);
+                    }
+                }
+            })
+            .collect();
+        pool::global().run(tasks);
         let sq: f64 = bwd.d_c.iter().chain(d_emb.iter()).map(|&g| (g as f64) * g as f64).sum();
-        let grad_norm = sq.sqrt();
         let lr = self.model.lr;
-        crate::exec::simd::axpy(&mut state.cls, -lr, &bwd.d_c);
-        crate::exec::simd::axpy(&mut state.emb, -lr, &d_emb);
-        state.step += 1;
-        Ok((fwd.loss, grad_norm))
+        for (params, grads) in [
+            (&mut state.cls[..], &bwd.d_c[..]),
+            (&mut state.emb[..], &d_emb[..]),
+        ] {
+            // Lane-aligned spans (multiples of 8): an 8-aligned boundary
+            // keeps the AVX2 axpy's vector-body vs scalar-tail split — and
+            // therefore the FMA rounding of every element — identical to
+            // the unchunked sweep, for any thread count.
+            let per = crate::exec::ceil_div(params.len(), threads).max(1);
+            let span = crate::exec::ceil_div(per, 8) * 8;
+            let tasks: Vec<_> = params
+                .chunks_mut(span)
+                .zip(grads.chunks(span))
+                .map(|(pc, gc)| move || lanes.axpy(pc, -lr, gc))
+                .collect();
+            pool::global().run(tasks);
+        }
+        sq.sqrt()
     }
 
     /// Mean validation NLL over all validation batches.

@@ -15,8 +15,8 @@
 use anyhow::{anyhow, Result};
 
 use super::{
-    baseline_forward, baseline_forward_backward, cce_backward, cce_forward, BackwardOut,
-    ForwardOut, KernelOptions, Problem,
+    baseline_forward, baseline_forward_backward, cce_backward, cce_forward, pool, BackwardOut,
+    ForwardOut, KernelOptions, Problem, ThreadPool,
 };
 
 /// A loss-layer compute backend.
@@ -114,6 +114,18 @@ impl NativeBackend {
             },
         };
         Ok(NativeBackend { method, opts })
+    }
+
+    /// The persistent fork-join pool this backend's kernels execute on.
+    /// One pool serves the whole process (per-backend pools would
+    /// oversubscribe the machine when the trainer, the serve batch
+    /// workers, and a bench loop call kernels concurrently) — the backend
+    /// holds and reports it: its worker count is the `pool_workers` field
+    /// of `cce info`, `{"op":"info"}`, and the BENCH metadata.  Repeated
+    /// `NativeBackend` construction spawns nothing (the leak test in
+    /// `tests/native.rs` pins this).
+    pub fn pool(&self) -> &'static ThreadPool {
+        pool::global()
     }
 
     /// Effective kernel options for a problem of `n` rows / `v` columns

@@ -47,13 +47,19 @@
 //! remaining blocks die wholesale (§4.3 "sorted gradient filtering"; the
 //! survival geometry is modelled by [`crate::sparsity::BlockFilterModel`]).
 //!
+//! Both phases execute as span tasks on the persistent fork-join pool
+//! (`super::pool`) with the SIMD dispatch resolved to a [`Lanes`] token
+//! once at kernel entry — no per-call thread spawn/join and no per-`dot`
+//! dispatch probe anywhere in the pass.
+//!
 //! With [`KernelOptions::kahan`] both phases accumulate through
-//! `simd::axpy_kahan` with per-element compensation buffers (doubling
+//! `Lanes::axpy_kahan` with per-element compensation buffers (doubling
 //! the gradient working set, as the paper's CCE-Kahan memory column
 //! records); `full_c` / `full_e` disable filtering for the corresponding
 //! phase only (the `CCE-Kahan-FullC` / `-FullE` rows).
 
-use super::{ceil_div, simd, span_rows, BackwardOut, FilterStats, KernelOptions, Problem};
+use super::simd::{self, Lanes};
+use super::{ceil_div, pool, span_rows, BackwardOut, FilterStats, KernelOptions, Problem};
 use crate::sparsity::FILTER_EPS;
 
 /// Vocabulary permutation ordered by descending label frequency (stable by
@@ -122,6 +128,15 @@ struct BwdCtx<'a> {
 /// Run the backward pass.  `lse` is the per-row log-sum-exp from
 /// [`super::cce_forward`].
 pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardOut {
+    simd::with_lanes!(lanes => backward_with(p, opts, lse, lanes))
+}
+
+fn backward_with<L: Lanes>(
+    p: &Problem,
+    opts: &KernelOptions,
+    lse: &[f32],
+    lanes: L,
+) -> BackwardOut {
     assert_eq!(lse.len(), p.n, "lse length mismatch");
     let (n, d, v) = (p.n, p.d, p.v);
     let count = p.active_count();
@@ -161,18 +176,18 @@ pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardO
 
     // Phase A: row-parallel dE + skip-mask fill.
     let span = span_rows(n, opts.n_block, opts.threads);
-    let a_results: Vec<(FilterStats, usize)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = d_e
+    let a_results: Vec<(FilterStats, usize)> = {
+        let ctx = &ctx;
+        let tasks: Vec<_> = d_e
             .chunks_mut(span * d)
             .zip(mask.chunks_mut((span / nb) * n_vblocks))
             .enumerate()
             .map(|(ti, (de_chunk, mask_chunk))| {
-                let ctx = &ctx;
-                scope.spawn(move || de_phase(ctx, ti * span, de_chunk, mask_chunk))
+                move || de_phase(ctx, ti * span, de_chunk, mask_chunk, lanes)
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("backward dE worker")).collect()
-    });
+        pool::global().run(tasks)
+    };
 
     // Phase B: column-parallel dC over contiguous permuted-column spans.
     // Spans are balanced at *column* granularity (weighted per column by
@@ -189,22 +204,22 @@ pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardO
         })
         .collect();
     let col_weights: Vec<u64> = (0..v).map(|q| surviving[q / vb]).collect();
-    let bounds = balance_spans(&col_weights, opts.threads);
-    let b_results: Vec<usize> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
+    let bounds = balance_spans(&col_weights, opts.resolved_threads());
+    let b_results: Vec<usize> = {
+        let ctx = &ctx;
+        let mask = &mask;
+        let mut tasks = Vec::new();
         let mut rest: &mut [f32] = if identity { &mut d_c } else { &mut dc_perm };
         for w in bounds.windows(2) {
             let (lo, hi) = (w[0], w[1]);
             let (chunk, tail) = rest.split_at_mut((hi - lo) * d);
             rest = tail;
             if hi > lo {
-                let ctx = &ctx;
-                let mask = &mask;
-                handles.push(scope.spawn(move || dc_phase(ctx, lo, hi, chunk, mask)));
+                tasks.push(move || dc_phase(ctx, lo, hi, chunk, mask, lanes));
             }
         }
-        handles.into_iter().map(|h| h.join().expect("backward dC worker")).collect()
-    });
+        pool::global().run(tasks)
+    };
 
     // Un-permute: every original column was accumulated by exactly one
     // phase-B thread, so this is a straight gather (skipped entirely when
@@ -235,11 +250,12 @@ pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardO
 /// Phase A over rows `[row0, row0 + de_chunk.len()/d)`: indicator + softmax
 /// `dE`, filling this span's rows of the skip mask.  Returns the span's
 /// filter stats and its buffer bytes (probability tile + Kahan comp).
-fn de_phase(
+fn de_phase<L: Lanes>(
     ctx: &BwdCtx,
     row0: usize,
     de_chunk: &mut [f32],
     mask_chunk: &mut [u8],
+    lanes: L,
 ) -> (FilterStats, usize) {
     let p = ctx.p;
     let d = p.d;
@@ -264,9 +280,9 @@ fn de_phase(
         let c_row = &p.c[t as usize * d..(t as usize + 1) * d];
         let de_row = &mut de_chunk[r * d..(r + 1) * d];
         if ctx.opts.kahan {
-            simd::axpy_kahan(de_row, &mut comp[r * d..(r + 1) * d], -ctx.inv_count, c_row);
+            lanes.axpy_kahan(de_row, &mut comp[r * d..(r + 1) * d], -ctx.inv_count, c_row);
         } else {
-            simd::axpy(de_row, -ctx.inv_count, c_row);
+            lanes.axpy(de_row, -ctx.inv_count, c_row);
         }
     }
 
@@ -291,7 +307,7 @@ fn de_phase(
                 let row_lse = ctx.lse[i];
                 for (jj, out) in p_row.iter_mut().enumerate() {
                     let j = ctx.perm[j0 + jj] as usize;
-                    let z = simd::dot(e_row, &p.c[j * d..(j + 1) * d]);
+                    let z = lanes.dot(e_row, &p.c[j * d..(j + 1) * d]);
                     let prob = (z - row_lse).exp();
                     *out = prob;
                     sig += (prob >= eps) as u64;
@@ -322,14 +338,14 @@ fn de_phase(
                     let j = ctx.perm[j0 + jj] as usize;
                     let c_row = &p.c[j * d..(j + 1) * d];
                     if ctx.opts.kahan {
-                        simd::axpy_kahan(
+                        lanes.axpy_kahan(
                             de_row,
                             &mut comp[out_row * d..(out_row + 1) * d],
                             g,
                             c_row,
                         );
                     } else {
-                        simd::axpy(de_row, g, c_row);
+                        lanes.axpy(de_row, g, c_row);
                     }
                 }
             }
@@ -347,12 +363,13 @@ fn de_phase(
 /// the shared permuted accumulator.  Skipped blocks (per the phase-A mask)
 /// are never rematerialized.  Returns the buffer bytes (Kahan comp only —
 /// this phase streams logits without a tile buffer).
-fn dc_phase(
+fn dc_phase<L: Lanes>(
     ctx: &BwdCtx,
     col_lo: usize,
     col_hi: usize,
     dc_chunk: &mut [f32],
     mask: &[u8],
+    lanes: L,
 ) -> usize {
     let p = ctx.p;
     let (n, d) = (p.n, p.d);
@@ -378,14 +395,14 @@ fn dc_phase(
         let e_row = &p.e[i * d..(i + 1) * d];
         let dc_row = &mut dc_chunk[(q - col0) * d..(q - col0 + 1) * d];
         if ctx.opts.kahan {
-            simd::axpy_kahan(
+            lanes.axpy_kahan(
                 dc_row,
                 &mut comp[(q - col0) * d..(q - col0 + 1) * d],
                 -ctx.inv_count,
                 e_row,
             );
         } else {
-            simd::axpy(dc_row, -ctx.inv_count, e_row);
+            lanes.axpy(dc_row, -ctx.inv_count, e_row);
         }
     }
 
@@ -420,17 +437,17 @@ fn dc_phase(
                         continue;
                     }
                     let e_row = &p.e[i * d..(i + 1) * d];
-                    let z = simd::dot(e_row, c_row);
+                    let z = lanes.dot(e_row, c_row);
                     let g = (z - ctx.lse[i]).exp() * ctx.inv_count;
                     if ctx.opts.kahan {
-                        simd::axpy_kahan(
+                        lanes.axpy_kahan(
                             dc_row,
                             &mut comp[(q - col0) * d..(q - col0 + 1) * d],
                             g,
                             e_row,
                         );
                     } else {
-                        simd::axpy(dc_row, g, e_row);
+                        lanes.axpy(dc_row, g, e_row);
                     }
                 }
             }

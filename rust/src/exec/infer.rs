@@ -23,7 +23,8 @@
 use anyhow::{bail, Result};
 
 use super::lse::cce_forward;
-use super::{dot, simd, span_rows, KernelOptions, Problem};
+use super::simd::{self, Lanes};
+use super::{pool, span_rows, KernelOptions, Problem};
 
 /// One inference problem: hidden states `E (N×D)` against a classifier
 /// `C (V×D)` — a [`Problem`] without labels.
@@ -78,24 +79,28 @@ pub fn topk(p: &InferProblem, opts: &KernelOptions, k: usize) -> Result<TopKOut>
     if k == 0 || k > p.v {
         bail!("top-k k={k} out of range for vocab {}", p.v);
     }
+    Ok(simd::with_lanes!(lanes => topk_with(p, opts, k, lanes)))
+}
+
+fn topk_with<L: Lanes>(p: &InferProblem, opts: &KernelOptions, k: usize, lanes: L) -> TopKOut {
     let n = p.n;
     let mut rows: Vec<TopKRow> = vec![TopKRow::default(); n];
     let span = span_rows(n, opts.n_block, opts.threads);
-    let buffer_bytes: usize = std::thread::scope(|scope| {
-        let handles: Vec<_> = rows
+    let buffer_bytes: usize = {
+        let tasks: Vec<_> = rows
             .chunks_mut(span)
             .enumerate()
             .map(|(ti, chunk)| {
                 let row0 = ti * span;
                 let opts = *opts;
-                scope.spawn(move || topk_span(p, &opts, k, row0, chunk))
+                move || topk_span(p, &opts, k, row0, chunk, lanes)
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("topk worker")).sum()
-    });
+        pool::global().run(tasks).into_iter().sum()
+    };
     // O(N) output rows (k entries each) + per-thread block buffers.
     let workspace_bytes = n * k * 8 + buffer_bytes;
-    Ok(TopKOut { rows, workspace_bytes })
+    TopKOut { rows, workspace_bytes }
 }
 
 /// Per-kernel accumulation hooks over the shared [`tile_sweep`].  The
@@ -118,12 +123,13 @@ trait TileVisitor {
 /// of rows: compute each logit tile once, fold the online LSE, and hand
 /// the tile to the visitor.  Returns the bytes of tile/LSE buffers this
 /// span allocated (visitor state is accounted by the caller).
-fn tile_sweep<V: TileVisitor>(
+fn tile_sweep<L: Lanes, V: TileVisitor>(
     p: &InferProblem,
     opts: &KernelOptions,
     row0: usize,
     rows_total: usize,
     visitor: &mut V,
+    lanes: L,
 ) -> usize {
     let d = p.d;
     let v = p.v;
@@ -148,13 +154,13 @@ fn tile_sweep<V: TileVisitor>(
                 let e_row = &p.e[i * d..(i + 1) * d];
                 let z_row = &mut logits[r * cols..(r + 1) * cols];
                 for (jj, z) in z_row.iter_mut().enumerate() {
-                    *z = dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
+                    *z = lanes.dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
                 }
             }
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 let z_row = &logits[r * cols..(r + 1) * cols];
-                let tile_max = simd::vmax(z_row);
+                let tile_max = lanes.vmax(z_row);
                 let m_old = run_max[r];
                 let m_new = m_old.max(tile_max);
                 let mut s = if m_old == f32::NEG_INFINITY {
@@ -206,12 +212,13 @@ impl TileVisitor for TopKVisitor<'_> {
     }
 }
 
-fn topk_span(
+fn topk_span<L: Lanes>(
     p: &InferProblem,
     opts: &KernelOptions,
     k: usize,
     row0: usize,
     out: &mut [TopKRow],
+    lanes: L,
 ) -> usize {
     let rows_total = out.len();
     let n_block = opts.n_block.clamp(1, rows_total.max(1));
@@ -219,7 +226,7 @@ fn topk_span(
         heaps: (0..n_block).map(|_| BoundedTopK::new(k)).collect(),
         out,
     };
-    let sweep_bytes = tile_sweep(p, opts, row0, rows_total, &mut visitor);
+    let sweep_bytes = tile_sweep(p, opts, row0, rows_total, &mut visitor, lanes);
     sweep_bytes + visitor.heaps.len() * k * 8
 }
 
@@ -328,27 +335,37 @@ pub fn sample(
     if !temperature.is_finite() || temperature < 0.0 {
         bail!("temperature must be finite and >= 0, got {temperature}");
     }
+    Ok(simd::with_lanes!(lanes => sample_with(p, opts, temperature, seeds, lanes)))
+}
+
+fn sample_with<L: Lanes>(
+    p: &InferProblem,
+    opts: &KernelOptions,
+    temperature: f32,
+    seeds: &[u64],
+    lanes: L,
+) -> SampleOut {
     let n = p.n;
     let mut tokens = vec![0i32; n];
     let mut logprobs = vec![0f32; n];
     let span = span_rows(n, opts.n_block, opts.threads);
-    let buffer_bytes: usize = std::thread::scope(|scope| {
-        let handles: Vec<_> = tokens
+    let buffer_bytes: usize = {
+        let tasks: Vec<_> = tokens
             .chunks_mut(span)
             .zip(logprobs.chunks_mut(span))
             .enumerate()
             .map(|(ti, (tok_chunk, lp_chunk))| {
                 let row0 = ti * span;
                 let opts = *opts;
-                scope.spawn(move || {
-                    sample_span(p, &opts, temperature, seeds, row0, tok_chunk, lp_chunk)
-                })
+                move || {
+                    sample_span(p, &opts, temperature, seeds, row0, (tok_chunk, lp_chunk), lanes)
+                }
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("sample worker")).sum()
-    });
+        pool::global().run(tasks).into_iter().sum()
+    };
     let workspace_bytes = n * 8 + buffer_bytes;
-    Ok(SampleOut { tokens, logprobs, workspace_bytes })
+    SampleOut { tokens, logprobs, workspace_bytes }
 }
 
 struct SampleVisitor<'a> {
@@ -392,14 +409,14 @@ impl TileVisitor for SampleVisitor<'_> {
     }
 }
 
-fn sample_span(
+fn sample_span<L: Lanes>(
     p: &InferProblem,
     opts: &KernelOptions,
     temperature: f32,
     seeds: &[u64],
     row0: usize,
-    tok_out: &mut [i32],
-    lp_out: &mut [f32],
+    (tok_out, lp_out): (&mut [i32], &mut [f32]),
+    lanes: L,
 ) -> usize {
     let rows_total = tok_out.len();
     let n_block = opts.n_block.clamp(1, rows_total.max(1));
@@ -412,7 +429,7 @@ fn sample_span(
         tok_out,
         lp_out,
     };
-    let sweep_bytes = tile_sweep(p, opts, row0, rows_total, &mut visitor);
+    let sweep_bytes = tile_sweep(p, opts, row0, rows_total, &mut visitor, lanes);
     sweep_bytes
         + visitor.best_score.len() * 4
         + visitor.best_token.len() * 4
@@ -490,7 +507,9 @@ mod tests {
         (0..n)
             .map(|i| {
                 let mut z: Vec<(f32, i32)> = (0..v)
-                    .map(|j| (dot(&e[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]), j as i32))
+                    .map(|j| {
+                        (simd::dot(&e[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]), j as i32)
+                    })
                     .collect();
                 z.sort_by(|a, b| {
                     b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
@@ -565,7 +584,7 @@ mod tests {
             let t = out.tokens[i] as usize;
             // Materialized log softmax of the chosen token.
             let z: Vec<f32> = (0..v)
-                .map(|j| dot(&e[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]))
+                .map(|j| simd::dot(&e[i * d..(i + 1) * d], &c[j * d..(j + 1) * d]))
                 .collect();
             let m = z.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
             let lse = m + z.iter().map(|&x| (x - m).exp()).sum::<f32>().ln();

@@ -16,34 +16,41 @@
 //! tiles to cache blocks).
 //!
 //! The tile matmul and the max reduction run on the SIMD layer
-//! (`super::simd`); the exp-accumulate stays sequential per row so the
-//! recurrence is identical across blockings and thread counts.  With
-//! [`KernelOptions::kahan`] the running sum `s` (and the final loss
-//! reduction) carry Kahan compensation terms — the `cce_kahan` long-tail
-//! rows of Table 1, for softmaxes whose mass hides below f32 round-off of
-//! the head.
+//! (`super::simd`) through a [`Lanes`] token resolved once at kernel entry;
+//! the exp-accumulate stays sequential per row so the recurrence is
+//! identical across blockings and thread counts.  Row spans execute on the
+//! persistent fork-join pool (`super::pool`) — single-span calls (small-N
+//! decode steps) run inline on the caller.  With [`KernelOptions::kahan`]
+//! the running sum `s` (and the final loss reduction) carry Kahan
+//! compensation terms — the `cce_kahan` long-tail rows of Table 1, for
+//! softmaxes whose mass hides below f32 round-off of the head.
 
-use super::{dot, simd, span_rows, ForwardOut, KernelOptions, Problem};
+use super::simd::{self, Lanes};
+use super::{pool, span_rows, ForwardOut, KernelOptions, Problem};
 
 /// Run the forward pass.  Multi-threaded over contiguous row spans.
 pub fn cce_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
+    simd::with_lanes!(lanes => forward_with(p, opts, lanes))
+}
+
+fn forward_with<L: Lanes>(p: &Problem, opts: &KernelOptions, lanes: L) -> ForwardOut {
     let n = p.n;
     let mut lse = vec![0f32; n];
     let mut tgt = vec![0f32; n];
     let span = span_rows(n, opts.n_block, opts.threads);
-    let buffer_bytes: usize = std::thread::scope(|scope| {
-        let handles: Vec<_> = lse
+    let buffer_bytes: usize = {
+        let tasks: Vec<_> = lse
             .chunks_mut(span)
             .zip(tgt.chunks_mut(span))
             .enumerate()
             .map(|(ti, (lse_chunk, tgt_chunk))| {
                 let row0 = ti * span;
                 let opts = *opts;
-                scope.spawn(move || forward_span(p, &opts, row0, lse_chunk, tgt_chunk))
+                move || forward_span(p, &opts, row0, lse_chunk, tgt_chunk, lanes)
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("forward worker")).sum()
-    });
+        pool::global().run(tasks).into_iter().sum()
+    };
     let count = p.active_count();
     let terms = p
         .x
@@ -72,12 +79,13 @@ fn kahan_sum(terms: impl Iterator<Item = f64>) -> f64 {
 
 /// Process rows `[row0, row0 + lse_out.len())`; returns the bytes of block
 /// buffers this worker allocated (for the O(N_B·V_B) memory assertion).
-fn forward_span(
+fn forward_span<L: Lanes>(
     p: &Problem,
     opts: &KernelOptions,
     row0: usize,
     lse_out: &mut [f32],
     tgt_out: &mut [f32],
+    lanes: L,
 ) -> usize {
     let d = p.d;
     let v = p.v;
@@ -112,14 +120,14 @@ fn forward_span(
                 let e_row = &p.e[i * d..(i + 1) * d];
                 let z_row = &mut logits[r * cols..(r + 1) * cols];
                 for (jj, z) in z_row.iter_mut().enumerate() {
-                    *z = dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
+                    *z = lanes.dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
                 }
             }
             // Online LSE fold + target-logit capture.
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 let z_row = &logits[r * cols..(r + 1) * cols];
-                let tile_max = simd::vmax(z_row);
+                let tile_max = lanes.vmax(z_row);
                 let m_old = run_max[r];
                 let m_new = m_old.max(tile_max);
                 let rescale = if m_old == f32::NEG_INFINITY {

@@ -33,16 +33,21 @@
 //!   The "Torch Tune (k chunks)" row is the blocked kernel run with
 //!   `N_B = ⌈N/k⌉`, `V_B = V`, and no filtering.
 //!
-//! Parallelism is `std::thread::scope` over contiguous row spans (each a
-//! whole number of `N_B` row-blocks), selected by `--threads` (default:
-//! available parallelism).  Kernel loops index by position on purpose — the
-//! blocked layouts don't map onto iterator chains cleanly.
+//! Parallelism is the persistent fork-join pool in [`pool`]: contiguous row
+//! spans (each a whole number of `N_B` row-blocks), selected by `--threads`
+//! (`0` = auto = available parallelism), executed by condvar-parked workers
+//! that live for the process — no per-call thread spawn/join, and an inline
+//! fast path for single-span (small-N decode) calls.  SIMD dispatch is
+//! resolved to a [`simd::Lanes`] token once per kernel entry and the hot
+//! loops monomorphize over it.  Kernel loops index by position on purpose —
+//! the blocked layouts don't map onto iterator chains cleanly.
 #![allow(clippy::needless_range_loop)]
 
 pub mod backend;
 pub mod backward;
 pub mod infer;
 pub mod lse;
+pub mod pool;
 pub(crate) mod simd;
 
 #[cfg(feature = "pjrt")]
@@ -51,6 +56,7 @@ pub use backend::{Backend, NativeBackend, NativeMethod};
 pub use backward::{cce_backward, frequency_permutation};
 pub use infer::{sample, score, topk, InferProblem, SampleOut, ScoreOut, TopKOut, TopKRow};
 pub use lse::cce_forward;
+pub use pool::ThreadPool;
 
 use anyhow::{bail, Result};
 
@@ -180,6 +186,32 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Resolve a `--threads` request: `0` means "auto" (available parallelism)
+/// on every path — train, table1, serve, and the kernels themselves.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        default_threads()
+    } else {
+        requested
+    }
+}
+
+/// Spawned workers of the shared kernel pool (the calling thread always
+/// participates too, so fork-join parallelism is this plus one).  Starts at
+/// 0 — the pool is lazy — and grows with the largest span count requested.
+/// Surfaced as `pool_workers` in `cce info`, `{"op":"info"}`, and the
+/// BENCH metadata.
+pub fn pool_workers() -> usize {
+    pool::global().workers()
+}
+
+impl KernelOptions {
+    /// [`KernelOptions::threads`] with `0` resolved to auto.
+    pub fn resolved_threads(&self) -> usize {
+        resolve_threads(self.threads)
+    }
+}
+
 /// Resolved SIMD dispatch level of this process (`"avx2+fma"` or
 /// `"portable"`) — surfaced by `cce info` and stamped into
 /// `BENCH_table1.json` so perf baselines are only compared within one
@@ -258,31 +290,36 @@ pub(crate) fn ceil_div(a: usize, b: usize) -> usize {
 }
 
 /// Rows per worker span: a whole number of `n_block` row-blocks, sized so
-/// at most `threads` spans cover `n` rows.
+/// at most `threads` spans cover `n` rows (`threads == 0` = auto).
 pub(crate) fn span_rows(n: usize, n_block: usize, threads: usize) -> usize {
     let nb = n_block.clamp(1, n.max(1));
-    let per = ceil_div(ceil_div(n, nb), threads.max(1));
+    let per = ceil_div(ceil_div(n, nb), resolve_threads(threads));
     (per.max(1)) * nb
 }
-
-// The matmul primitive every kernel builds on: the runtime-dispatched
-// SIMD dot (AVX2+FMA where available, autovectorized 8-lane otherwise).
-pub(crate) use simd::dot;
 
 // ---------------------------------------------------------------- baseline
 
 /// Materialized-logits reference forward (the Table-1 "Baseline" row): the
 /// full `N×V` logit matrix is allocated, which is exactly the allocation
-/// CCE removes.  Multi-threaded over row spans for a fair time comparison.
+/// CCE removes.  Multi-threaded over row spans (through the shared
+/// [`pool`]) for a fair time comparison.
 pub fn baseline_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
-    let (logits, fwd) = baseline_logits_and_forward(p, opts);
+    let (logits, fwd) = simd::with_lanes!(lanes => baseline_logits_and_forward(p, opts, lanes));
     drop(logits);
     fwd
 }
 
 /// Baseline forward + backward from the stored logits.
 pub fn baseline_forward_backward(p: &Problem, opts: &KernelOptions) -> (ForwardOut, BackwardOut) {
-    let (logits, fwd) = baseline_logits_and_forward(p, opts);
+    simd::with_lanes!(lanes => baseline_forward_backward_with(p, opts, lanes))
+}
+
+fn baseline_forward_backward_with<L: simd::Lanes>(
+    p: &Problem,
+    opts: &KernelOptions,
+    lanes: L,
+) -> (ForwardOut, BackwardOut) {
+    let (logits, fwd) = baseline_logits_and_forward(p, opts, lanes);
     let (n, d, v) = (p.n, p.d, p.v);
     let count = fwd.count;
     let inv_count = if count == 0 { 0.0f32 } else { 1.0 / count as f32 };
@@ -290,14 +327,14 @@ pub fn baseline_forward_backward(p: &Problem, opts: &KernelOptions) -> (ForwardO
     let mut d_c = vec![0f32; v * d];
     let span = span_rows(n, opts.n_block, opts.threads);
     let lse = &fwd.lse;
-    let shards: Vec<Vec<f32>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = d_e
+    let shards: Vec<Vec<f32>> = {
+        let logits = &logits;
+        let tasks: Vec<_> = d_e
             .chunks_mut(span * d)
             .enumerate()
             .map(|(ti, de_chunk)| {
                 let row0 = ti * span;
-                let logits = &logits;
-                scope.spawn(move || {
+                move || {
                     let rows = de_chunk.len() / d;
                     let mut dc_local = vec![0f32; v * d];
                     for r in 0..rows {
@@ -316,16 +353,16 @@ pub fn baseline_forward_backward(p: &Problem, opts: &KernelOptions) -> (ForwardO
                             }
                             let c_row = &p.c[j * d..(j + 1) * d];
                             let dc_row = &mut dc_local[j * d..(j + 1) * d];
-                            simd::axpy(de_row, g, c_row);
-                            simd::axpy(dc_row, g, e_row);
+                            lanes.axpy(de_row, g, c_row);
+                            lanes.axpy(dc_row, g, e_row);
                         }
                     }
                     dc_local
-                })
+                }
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("baseline backward worker")).collect()
-    });
+        pool::global().run(tasks)
+    };
     let n_shards = shards.len();
     for shard in shards {
         for (acc, val) in d_c.iter_mut().zip(&shard) {
@@ -344,43 +381,43 @@ pub fn baseline_forward_backward(p: &Problem, opts: &KernelOptions) -> (ForwardO
     )
 }
 
-fn baseline_logits_and_forward(p: &Problem, opts: &KernelOptions) -> (Vec<f32>, ForwardOut) {
+fn baseline_logits_and_forward<L: simd::Lanes>(
+    p: &Problem,
+    opts: &KernelOptions,
+    lanes: L,
+) -> (Vec<f32>, ForwardOut) {
     let (n, d, v) = (p.n, p.d, p.v);
     let mut logits = vec![0f32; n * v];
     let mut lse = vec![0f32; n];
     let mut tgt = vec![0f32; n];
     let span = span_rows(n, opts.n_block, opts.threads);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = logits
-            .chunks_mut(span * v)
-            .zip(lse.chunks_mut(span))
-            .zip(tgt.chunks_mut(span))
-            .enumerate()
-            .map(|(ti, ((lchunk, lse_chunk), tgt_chunk))| {
-                let row0 = ti * span;
-                scope.spawn(move || {
-                    let rows = lse_chunk.len();
-                    for r in 0..rows {
-                        let i = row0 + r;
-                        let e_row = &p.e[i * d..(i + 1) * d];
-                        let z_row = &mut lchunk[r * v..(r + 1) * v];
-                        for j in 0..v {
-                            z_row[j] = dot(e_row, &p.c[j * d..(j + 1) * d]);
-                        }
-                        let m = simd::vmax(z_row);
-                        let s: f32 = z_row.iter().map(|&z| (z - m).exp()).sum();
-                        lse_chunk[r] = m + s.ln();
-                        if p.x[i] >= 0 {
-                            tgt_chunk[r] = z_row[p.x[i] as usize];
-                        }
+    let tasks: Vec<_> = logits
+        .chunks_mut(span * v)
+        .zip(lse.chunks_mut(span))
+        .zip(tgt.chunks_mut(span))
+        .enumerate()
+        .map(|(ti, ((lchunk, lse_chunk), tgt_chunk))| {
+            let row0 = ti * span;
+            move || {
+                let rows = lse_chunk.len();
+                for r in 0..rows {
+                    let i = row0 + r;
+                    let e_row = &p.e[i * d..(i + 1) * d];
+                    let z_row = &mut lchunk[r * v..(r + 1) * v];
+                    for j in 0..v {
+                        z_row[j] = lanes.dot(e_row, &p.c[j * d..(j + 1) * d]);
                     }
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().expect("baseline forward worker");
-        }
-    });
+                    let m = lanes.vmax(z_row);
+                    let s: f32 = z_row.iter().map(|&z| (z - m).exp()).sum();
+                    lse_chunk[r] = m + s.ln();
+                    if p.x[i] >= 0 {
+                        tgt_chunk[r] = z_row[p.x[i] as usize];
+                    }
+                }
+            }
+        })
+        .collect();
+    pool::global().run(tasks);
     let count = p.active_count();
     let loss_sum: f64 = p
         .x

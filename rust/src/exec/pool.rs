@@ -1,0 +1,407 @@
+//! Persistent fork-join worker pool for the exec kernels.
+//!
+//! Before this module every kernel invocation paid per-*call* thread
+//! orchestration: `cce_forward`, both backward phases, the baseline
+//! references, and the inference sweeps each opened a `std::thread::scope`,
+//! spawning and joining fresh OS threads per call.  At the bench grid that
+//! overhead is noise; at the decode shape (N = micro-batch size, one kernel
+//! call per emitted token) it *is* the latency.  This pool makes per-call
+//! cost track FLOPs instead of thread churn:
+//!
+//! * **Persistent, condvar-parked workers.**  Worker threads are spawned
+//!   once, park on a [`Condvar`], and wake only when a batch of tasks is
+//!   queued.  No OS thread is created or destroyed on the kernel hot path.
+//! * **Generation-counted fork-join.**  Each [`ThreadPool::run`] call is
+//!   one fork-join generation: the caller enqueues its task batch, helps
+//!   drain it (the calling thread always participates, so a pool with `W`
+//!   workers gives `W + 1`-way parallelism), then blocks on the batch's
+//!   completion barrier.  Independent callers (e.g. two serve batch
+//!   workers) can run concurrent generations; their tasks interleave in the
+//!   shared queue and complete independently.
+//! * **Inline fast path.**  A batch of one task — every small-N decode
+//!   step, where `span_rows` collapses the row spans to a single span —
+//!   executes directly on the caller with no queue, no locks, and no
+//!   wakeup.  Zero orchestration cost at the shape the serving path runs
+//!   per token.
+//! * **Panic propagation.**  A panicking task is caught on the worker,
+//!   recorded in its generation's state, and re-raised on the *caller*
+//!   after the barrier — the same observable behavior as the old
+//!   `scope.spawn` + `join().expect(..)` sites, with no hang and no
+//!   poisoned pool (workers survive and keep serving later generations).
+//! * **Lazy sizing.**  The [`global`] pool starts with zero workers and
+//!   grows on demand to the largest span count any kernel call has asked
+//!   for (driven by `--threads` / available parallelism).  A process that
+//!   only ever runs single-span work never spawns a thread.
+//!
+//! The pool is deliberately a process-wide singleton ([`global`]): kernel
+//! calls arrive from trainer steps, serve batch workers, and bench loops
+//! concurrently, and per-caller pools would oversubscribe the machine.
+//! [`super::NativeBackend`] holds and reports it (`pool_workers` in `cce
+//! info` and the BENCH metadata).  Correctness never depends on the pool's
+//! size: task partitioning (and therefore every kernel's bitwise output) is
+//! fixed by `KernelOptions::threads`, while the pool only bounds how many
+//! spans make progress at once.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased unit of work (see the SAFETY argument in
+/// [`ThreadPool::run`]).
+type ErasedTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion state of one `run` invocation (one fork-join generation).
+struct Batch {
+    /// Tasks not yet finished (completed or panicked).
+    pending: Mutex<usize>,
+    /// Signalled when `pending` reaches zero.
+    done: Condvar,
+    /// First captured panic payload, re-raised on the caller.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct Queue {
+    tasks: VecDeque<(Arc<Batch>, ErasedTask)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    /// Wakes parked workers when tasks arrive (or at shutdown).
+    work: Condvar,
+    /// Worker threads spawned and not yet exited (incremented at spawn
+    /// time under the handles lock, decremented by the worker on exit) —
+    /// observable race-free by the leak tests, and guaranteed zero once
+    /// [`ThreadPool::drop`] returns.
+    live: AtomicUsize,
+}
+
+/// The persistent fork-join pool.  See the module docs.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: AtomicUsize,
+    generations: AtomicU64,
+}
+
+fn lock<T>(mutex: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // Task panics are caught before they can poison anything, but stay
+    // robust if a lock is ever poisoned by an unforeseen unwind.
+    mutex.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl ThreadPool {
+    /// Pool with `workers` pre-spawned worker threads.  The calling thread
+    /// of [`ThreadPool::run`] always participates too, so total fork-join
+    /// parallelism is `workers + 1`.
+    pub fn new(workers: usize) -> ThreadPool {
+        let pool = ThreadPool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(Queue { tasks: VecDeque::new(), shutdown: false }),
+                work: Condvar::new(),
+                live: AtomicUsize::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+            workers: AtomicUsize::new(0),
+            generations: AtomicU64::new(0),
+        };
+        pool.ensure_workers(workers);
+        pool
+    }
+
+    /// Spawned worker threads (grows lazily, never shrinks).
+    pub fn workers(&self) -> usize {
+        self.workers.load(Ordering::Relaxed)
+    }
+
+    /// Worker threads currently alive (0 after drop — the leak invariant).
+    pub fn live_workers(&self) -> usize {
+        self.shared.live.load(Ordering::SeqCst)
+    }
+
+    /// Fork-join generations dispatched so far (inline fast-path runs are
+    /// not generations — they touch no shared state).
+    pub fn generations(&self) -> u64 {
+        self.generations.load(Ordering::Relaxed)
+    }
+
+    /// Grow the pool to at least `target` workers.  Cheap when already
+    /// large enough (one relaxed load).
+    pub fn ensure_workers(&self, target: usize) {
+        if self.workers.load(Ordering::Relaxed) >= target {
+            return;
+        }
+        let mut handles = lock(&self.handles);
+        for _ in handles.len()..target {
+            // Counted at spawn, not at thread startup: `live` must already
+            // reflect this worker when `ensure_workers` returns (the leak
+            // tests read it without racing thread scheduling); the worker
+            // only ever decrements it, on exit.
+            self.shared.live.fetch_add(1, Ordering::SeqCst);
+            let shared = self.shared.clone();
+            handles.push(std::thread::spawn(move || worker_loop(&shared)));
+        }
+        self.workers.store(handles.len(), Ordering::Relaxed);
+    }
+
+    /// Run `tasks` to completion and return their results in task order —
+    /// the fork-join replacement for the old per-call `std::thread::scope`
+    /// sites.  Tasks may borrow from the caller's stack (`F: FnOnce` with
+    /// any lifetime): this method does not return until every task has
+    /// finished.  If any task panicked, the first payload is re-raised
+    /// here after *all* tasks completed (no hang, pool stays usable).
+    pub fn run<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        if tasks.len() <= 1 {
+            // Inline fast path: a single span (every N=batch-size decode
+            // step) never touches the queue, the condvars, or a worker.
+            return tasks.into_iter().map(|f| f()).collect();
+        }
+        self.ensure_workers(tasks.len() - 1);
+        self.generations.fetch_add(1, Ordering::Relaxed);
+        let batch = Arc::new(Batch {
+            pending: Mutex::new(tasks.len()),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let slots: Vec<Mutex<Option<T>>> = tasks.iter().map(|_| Mutex::new(None)).collect();
+        {
+            let mut queue = lock(&self.shared.queue);
+            for (f, slot) in tasks.into_iter().zip(&slots) {
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let out = f();
+                    *lock(slot) = Some(out);
+                });
+                // SAFETY: the erased box only changes the trait object's
+                // lifetime bound.  This function does not return (or
+                // unwind) before `batch.pending` reaches zero, i.e. before
+                // every task has run to completion or been captured as a
+                // panic on a worker — so everything the tasks borrow
+                // (`slots`, the caller's stack) strictly outlives every
+                // use of the erased closures.
+                let task: ErasedTask = unsafe { std::mem::transmute(task) };
+                queue.tasks.push_back((batch.clone(), task));
+            }
+        }
+        self.shared.work.notify_all();
+        // Fork: the caller participates, draining this generation's
+        // still-queued tasks...
+        loop {
+            let unit = {
+                let mut queue = lock(&self.shared.queue);
+                let pos = queue.tasks.iter().position(|(owner, _)| Arc::ptr_eq(owner, &batch));
+                pos.and_then(|i| queue.tasks.remove(i))
+            };
+            match unit {
+                Some((owner, task)) => execute(&owner, task),
+                None => break,
+            }
+        }
+        // ...then join: wait for stragglers a worker picked up.
+        let mut pending = lock(&batch.pending);
+        while *pending > 0 {
+            pending = batch.done.wait(pending).unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+        drop(pending);
+        if let Some(payload) = lock(&batch.panic).take() {
+            resume_unwind(payload);
+        }
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner())
+                    .expect("completed task left no result")
+            })
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    /// Joins every worker — constructing and dropping pools leaks nothing.
+    fn drop(&mut self) {
+        {
+            let mut queue = lock(&self.shared.queue);
+            queue.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        let mut handles = lock(&self.handles);
+        for handle in handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let unit = {
+            let mut queue = lock(&shared.queue);
+            loop {
+                if let Some(unit) = queue.tasks.pop_front() {
+                    break Some(unit);
+                }
+                if queue.shutdown {
+                    break None;
+                }
+                queue = shared.work.wait(queue).unwrap_or_else(|poisoned| poisoned.into_inner());
+            }
+        };
+        match unit {
+            Some((batch, task)) => execute(&batch, task),
+            None => break,
+        }
+    }
+    shared.live.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Run one task, capturing a panic into its generation, and count it done.
+fn execute(batch: &Batch, task: ErasedTask) {
+    if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+        let mut first = lock(&batch.panic);
+        if first.is_none() {
+            *first = Some(payload);
+        }
+    }
+    let mut pending = lock(&batch.pending);
+    *pending -= 1;
+    if *pending == 0 {
+        batch.done.notify_all();
+    }
+}
+
+/// The process-wide pool shared by every kernel, the trainer, and the
+/// serving engine.  Created with zero workers on first use; grows on demand
+/// (see [`ThreadPool::ensure_workers`]) and lives for the process.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| ThreadPool::new(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_come_back_in_task_order() {
+        let pool = ThreadPool::new(3);
+        let tasks: Vec<_> = (0..16).map(|i| move || i * 2).collect();
+        assert_eq!(pool.run(tasks), (0..16).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(pool.generations(), 1);
+    }
+
+    #[test]
+    fn single_task_runs_inline_without_a_generation() {
+        let pool = ThreadPool::new(0);
+        let caller = std::thread::current().id();
+        let out = pool.run(vec![move || std::thread::current().id() == caller]);
+        assert_eq!(out, vec![true], "single task must run on the caller");
+        assert_eq!(pool.generations(), 0, "inline fast path is not a generation");
+        assert_eq!(pool.workers(), 0, "inline fast path must not spawn workers");
+    }
+
+    #[test]
+    fn pool_grows_lazily_to_the_requested_span_count() {
+        let pool = ThreadPool::new(0);
+        let tasks: Vec<_> = (0..4).map(|i| move || i).collect();
+        assert_eq!(pool.run(tasks), vec![0, 1, 2, 3]);
+        assert_eq!(pool.workers(), 3, "4 tasks need 3 workers beside the caller");
+        // A smaller batch never shrinks it; a larger one grows it.
+        let _ = pool.run((0..2).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(pool.workers(), 3);
+        let _ = pool.run((0..7).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(pool.workers(), 6);
+    }
+
+    #[test]
+    fn worker_panic_propagates_cleanly_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(
+                (0..4)
+                    .map(|i| {
+                        move || {
+                            if i == 2 {
+                                panic!("task {i} exploded");
+                            }
+                            i
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller, not hang");
+        // The pool keeps serving after a panicking generation.
+        let ok = pool.run((0..4).map(|i| move || i + 10).collect::<Vec<_>>());
+        assert_eq!(ok, vec![10, 11, 12, 13]);
+        assert_eq!(pool.live_workers(), pool.workers(), "no worker died to the panic");
+    }
+
+    #[test]
+    fn drop_joins_every_worker() {
+        let pool = ThreadPool::new(4);
+        let shared = pool.shared.clone();
+        let _ = pool.run((0..8).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(shared.live.load(Ordering::SeqCst), pool.workers());
+        assert_eq!(pool.workers(), 7, "8 tasks grow the pool to 7 workers");
+        drop(pool);
+        assert_eq!(shared.live.load(Ordering::SeqCst), 0, "drop must join all workers");
+    }
+
+    #[test]
+    fn concurrent_generations_from_independent_callers() {
+        // Two caller threads (the serve-batcher shape) share one pool.
+        let pool = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let pool = &pool;
+                let hits = &hits;
+                scope.spawn(move || {
+                    for round in 0..50 {
+                        let tasks: Vec<_> = (0..3)
+                            .map(|i| {
+                                move || {
+                                    hits.fetch_add(1, Ordering::Relaxed);
+                                    round * 3 + i
+                                }
+                            })
+                            .collect();
+                        let out = pool.run(tasks);
+                        assert_eq!(out, vec![round * 3, round * 3 + 1, round * 3 + 2]);
+                    }
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2 * 50 * 3);
+    }
+
+    #[test]
+    fn tasks_may_borrow_caller_locals_mutably() {
+        // The scoped contract the kernel call sites rely on: disjoint
+        // &mut chunks of a caller-owned buffer.
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0u64; 64];
+        let tasks: Vec<_> = data
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                move || {
+                    for (k, slot) in chunk.iter_mut().enumerate() {
+                        *slot = (ti * 16 + k) as u64;
+                    }
+                    ti
+                }
+            })
+            .collect();
+        assert_eq!(pool.run(tasks), vec![0, 1, 2, 3]);
+        for (k, &val) in data.iter().enumerate() {
+            assert_eq!(val, k as u64);
+        }
+    }
+}

@@ -11,10 +11,23 @@
 //!   SSE2 / NEON / whatever the target offers; also the semantics
 //!   reference that the parity tests compare the AVX2 path against.
 //!
-//! Dispatch happens once per process (a `OnceLock`'d CPUID probe): the
+//! Detection happens once per process (a `OnceLock`'d CPUID probe): the
 //! AVX2 path is taken only when the CPU reports both `avx2` and `fma`,
 //! everything else (and every non-x86_64 target) uses the portable path.
 //! No nightly features, no `std::simd`.
+//!
+//! **Dispatch is resolved once per kernel entry, not once per call.**  The
+//! hot loops are generic over `L: Lanes`; each kernel entry point resolves
+//! a [`Resolved`] token (via the [`with_lanes!`] macro) and monomorphizes
+//! its whole sweep against the concrete implementation, so the per-call
+//! `OnceLock` load + `Option` branch the old `simd::dot`-style free
+//! functions paid — a few cycles per call, measurable at small `D` — is
+//! gone from the kernels.  On the portable path the vector ops now inline
+//! fully into the sweep; on the AVX2 path the call becomes a direct jump
+//! to the known intrinsic routine (the `#[target_feature]` ABI boundary
+//! itself remains non-inlinable on this MSRV, as documented below).  The
+//! per-call free functions survive only as `#[cfg(test)]` references that
+//! the parity tests compare the token paths against.
 //!
 //! Numerics: both paths keep 8 independent partial accumulators reduced
 //! pairwise at the end, so they differ from a sequential scalar sum only
@@ -29,8 +42,10 @@
 #[cfg(target_arch = "x86_64")]
 use std::sync::OnceLock;
 
-/// The vector operations the kernels are written against.
-pub(crate) trait Lanes {
+/// The vector operations the kernels are written against.  Implementors
+/// are zero-sized capability tokens: `Copy + Send + Sync` so a resolved
+/// token threads freely into the pool's span tasks.
+pub(crate) trait Lanes: Copy + Send + Sync + 'static {
     /// `Σ a[i]·b[i]` over the common prefix of `a` and `b`.
     fn dot(&self, a: &[f32], b: &[f32]) -> f32;
     /// `y[i] += a·x[i]` over the common prefix.
@@ -53,6 +68,7 @@ pub(crate) trait Lanes {
 pub(crate) struct Portable;
 
 impl Lanes for Portable {
+    #[inline]
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         let n = a.len().min(b.len());
         let (a, b) = (&a[..n], &b[..n]);
@@ -93,12 +109,14 @@ impl Lanes for Portable {
         sum
     }
 
+    #[inline]
     fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
         for (yk, xk) in y.iter_mut().zip(x) {
             *yk += a * *xk;
         }
     }
 
+    #[inline]
     fn axpy_kahan(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
         let n = y.len().min(c.len()).min(x.len());
         for k in 0..n {
@@ -112,6 +130,7 @@ impl Lanes for Portable {
         }
     }
 
+    #[inline]
     fn vmax(&self, z: &[f32]) -> f32 {
         let mut lanes = [f32::NEG_INFINITY; 8];
         let mut cz = z.chunks_exact(8);
@@ -127,12 +146,14 @@ impl Lanes for Portable {
         m
     }
 
+    #[inline]
     fn add_assign(&self, y: &mut [f32], x: &[f32]) {
         for (yk, xk) in y.iter_mut().zip(x) {
             *yk += *xk;
         }
     }
 
+    #[inline]
     fn scale(&self, y: &mut [f32], a: f32) {
         for yk in y.iter_mut() {
             *yk *= a;
@@ -159,32 +180,38 @@ impl Avx2 {
 
 #[cfg(target_arch = "x86_64")]
 impl Lanes for Avx2 {
+    #[inline]
     fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         // SAFETY: constructing `Avx2` requires runtime detection of
         // avx2+fma (see `Avx2::detect`).
         unsafe { avx2::dot(a, b) }
     }
 
+    #[inline]
     fn axpy(&self, y: &mut [f32], a: f32, x: &[f32]) {
         // SAFETY: as above.
         unsafe { avx2::axpy(y, a, x) }
     }
 
+    #[inline]
     fn axpy_kahan(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
         // SAFETY: as above.
         unsafe { avx2::axpy_kahan(y, c, a, x) }
     }
 
+    #[inline]
     fn vmax(&self, z: &[f32]) -> f32 {
         // SAFETY: as above.
         unsafe { avx2::vmax(z) }
     }
 
+    #[inline]
     fn add_assign(&self, y: &mut [f32], x: &[f32]) {
         // SAFETY: as above.
         unsafe { avx2::add_assign(y, x) }
     }
 
+    #[inline]
     fn scale(&self, y: &mut [f32], a: f32) {
         // SAFETY: as above.
         unsafe { avx2::scale(y, a) }
@@ -209,9 +236,60 @@ pub(crate) fn dispatch_name() -> &'static str {
     "portable"
 }
 
-// ---------------------------------------------------- dispatched entry points
+// ------------------------------------------------------ once-per-sweep token
 
-/// `Σ a[i]·b[i]` — the kernels' matmul primitive.
+/// The dispatch level resolved for this process, carried as a token so the
+/// kernels monomorphize their hot loops against the concrete [`Lanes`]
+/// implementation (no per-call probe, intrinsics reached by direct call).
+#[derive(Clone, Copy)]
+pub(crate) enum Resolved {
+    #[cfg(target_arch = "x86_64")]
+    Avx2(Avx2),
+    Portable(Portable),
+}
+
+/// Resolve the dispatch level (one `OnceLock` load).  Call once per kernel
+/// entry — never inside a loop; the [`with_lanes!`] macro is the intended
+/// consumer.
+pub(crate) fn resolved() -> Resolved {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(token) = avx2_token() {
+        return Resolved::Avx2(token);
+    }
+    Resolved::Portable(Portable)
+}
+
+/// Resolve the SIMD token once and evaluate `$body` monomorphized over it:
+///
+/// ```ignore
+/// pub fn cce_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
+///     simd::with_lanes!(lanes => forward_with(p, opts, lanes))
+/// }
+/// ```
+///
+/// `$body` is compiled once per dispatch level, with `$lanes` bound to the
+/// concrete token type in each arm — the whole sweep under it inlines the
+/// portable ops and direct-calls the AVX2 routines.
+macro_rules! with_lanes {
+    ($lanes:ident => $body:expr) => {
+        match $crate::exec::simd::resolved() {
+            #[cfg(target_arch = "x86_64")]
+            $crate::exec::simd::Resolved::Avx2($lanes) => $body,
+            $crate::exec::simd::Resolved::Portable($lanes) => $body,
+        }
+    };
+}
+pub(crate) use with_lanes;
+
+// ---------------------------------------------------- dispatched entry points
+//
+// Per-call dispatched wrappers.  The kernels no longer use these — they
+// resolve a token once per sweep ([`with_lanes!`]) — so the wrappers are
+// compiled for tests only, as the semantics reference the parity tests
+// compare the token paths against.
+
+/// `Σ a[i]·b[i]` — per-call-dispatched reference for tests.
+#[cfg(test)]
 #[inline]
 pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
@@ -221,7 +299,8 @@ pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     Portable.dot(a, b)
 }
 
-/// `y[i] += a·x[i]` — the gradient accumulation primitive.
+/// `y[i] += a·x[i]` — per-call-dispatched reference for tests.
+#[cfg(test)]
 #[inline]
 pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     #[cfg(target_arch = "x86_64")]
@@ -232,6 +311,7 @@ pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
 }
 
 /// Kahan-compensated `y[i] += a·x[i]` (compensation in `c`).
+#[cfg(test)]
 #[inline]
 pub(crate) fn axpy_kahan(y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
     #[cfg(target_arch = "x86_64")]
@@ -242,6 +322,7 @@ pub(crate) fn axpy_kahan(y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
 }
 
 /// `max_i z[i]` (`NEG_INFINITY` when empty).
+#[cfg(test)]
 #[inline]
 pub(crate) fn vmax(z: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
@@ -252,6 +333,7 @@ pub(crate) fn vmax(z: &[f32]) -> f32 {
 }
 
 /// `y[i] += x[i]`.
+#[cfg(test)]
 #[inline]
 pub(crate) fn add_assign(y: &mut [f32], x: &[f32]) {
     #[cfg(target_arch = "x86_64")]
@@ -262,6 +344,7 @@ pub(crate) fn add_assign(y: &mut [f32], x: &[f32]) {
 }
 
 /// `y[i] *= a`.
+#[cfg(test)]
 #[inline]
 pub(crate) fn scale(y: &mut [f32], a: f32) {
     #[cfg(target_arch = "x86_64")]
@@ -500,6 +583,27 @@ mod tests {
             axpy_kahan(&mut yk2, &mut c2, -1.25, &b);
             assert_eq!(yk1, yk2, "axpy_kahan y n={n}");
             assert_eq!(c1, c2, "axpy_kahan c n={n}");
+        }
+    }
+
+    #[test]
+    fn resolved_token_matches_dispatched_free_functions() {
+        // The once-per-sweep token and the per-call free functions must be
+        // the same implementation — bitwise.
+        let mut rng = Rng::new(0x70C);
+        for n in shapes() {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let via_token = with_lanes!(lanes => lanes.dot(&a, &b));
+            assert_eq!(via_token.to_bits(), dot(&a, &b).to_bits(), "dot n={n}");
+            let vm = with_lanes!(lanes => lanes.vmax(&a));
+            assert_eq!(vm.to_bits(), vmax(&a).to_bits(), "vmax n={n}");
+        }
+        // The token and the advertised dispatch name agree.
+        match resolved() {
+            #[cfg(target_arch = "x86_64")]
+            Resolved::Avx2(_) => assert_eq!(dispatch_name(), "avx2+fma"),
+            Resolved::Portable(_) => assert_eq!(dispatch_name(), "portable"),
         }
     }
 

@@ -10,7 +10,8 @@
 //! cce servebench [--demo | --checkpoint path] [--requests 64]
 //!             [--concurrency 8] [--json BENCH_serve.json]
 //! cce table1  [--backend native|pjrt] [--json BENCH_table1.json]
-//!             [--n 1024 --d 256 --v 4096] [--threads N] [--check]
+//!             [--n 1024 --d 256 --v 4096] [--threads N] [--small-n 8]
+//!             [--check]
 //! cce tableA1 (= table1 with the Appendix B ignored-token filter)
 //! cce tableA2 / tableA3
 //! cce fig1    [--tokens 65536] [--gpus 16] [--gpu-gb 75]
@@ -24,7 +25,8 @@
 //! runs the multi-threaded SIMD Rust kernels with zero artifacts;
 //! `--backend pjrt` replays the AOT HLO artifacts and needs the `pjrt`
 //! feature plus `make artifacts`.  `--threads N` sizes the native worker
-//! pool (default: available parallelism).  Native `--method` keys:
+//! spans (`0` = auto = available parallelism, the default; workers live in
+//! a persistent process-wide pool).  Native `--method` keys:
 //! `cce`, `cce_no_sort`, `cce_no_filter`, `cce_kahan`, `cce_kahan_fullc`,
 //! `cce_kahan_fulle`, `chunked<k>`, `baseline`.
 
@@ -95,11 +97,14 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
     }
 }
 
-/// Native kernel options from the shared CLI flags.
+/// Native kernel options from the shared CLI flags.  `--threads 0` means
+/// "auto" (available parallelism) on every path — train, eval, serve,
+/// servebench, table1, fig3, figA1, info — and the resolved count is what
+/// `{"op":"info"}` and the BENCH metadata report.
 fn kernel_options(args: &Args) -> Result<KernelOptions> {
     let defaults = KernelOptions::default();
     Ok(KernelOptions {
-        threads: args.get("threads", exec::default_threads())?,
+        threads: exec::resolve_threads(args.get("threads", 0usize)?),
         n_block: args.get("n-block", defaults.n_block)?,
         v_block: args.get("v-block", defaults.v_block)?,
         ..defaults
@@ -452,10 +457,25 @@ fn cmd_table1(args: &Args, ignored: f64) -> Result<()> {
             let budget = args.get("budget-ms", 2000u64)?;
             let seed = args.get("seed", 0u64)?;
             let opts = kernel_options(args)?;
+            // The decode-shape row (0 disables): per-call orchestration
+            // overhead shows here, not at the big grid.
+            let small_n = args.get("small-n", 8usize)?;
             let rows = bench::table1::run_native(n, d, v, ignored, budget, opts, seed)?;
+            let small = if small_n > 0 {
+                Some(bench::table1::run_native_small(small_n, d, v, ignored, budget, opts, seed)?)
+            } else {
+                None
+            };
             bench::table1::print(&rows, &format!("{title_suffix} — native, N={n} D={d} V={v}"));
             if let Some(path) = args.opt("json") {
-                bench::table1::write_json(&rows, (n, d, v), opts.threads, path)?;
+                bench::table1::write_json(
+                    &rows,
+                    (n, d, v),
+                    opts.resolved_threads(),
+                    exec::pool_workers(),
+                    small.as_ref(),
+                    path,
+                )?;
                 println!("  wrote {path}");
             }
             if args.flag("check") {
@@ -482,7 +502,7 @@ fn cmd_table1_pjrt(args: &Args, ignored: f64, title: &str) -> Result<()> {
                 .and_then(|j| j.as_i64())
                 .unwrap_or(0) as usize
         };
-        bench::table1::write_json(&rows, (get("n"), get("d"), get("v")), 1, path)?;
+        bench::table1::write_json(&rows, (get("n"), get("d"), get("v")), 1, 0, None, path)?;
         println!("  wrote {path}");
     }
     if args.flag("check") {
@@ -646,16 +666,24 @@ fn cmd_info(args: &Args) -> Result<()> {
     let opts = kernel_options(args)?;
     println!("native backend: available");
     println!(
-        "  threads: {} (default: available parallelism = {})",
-        opts.threads,
+        "  threads: {} (resolved; --threads 0 = auto = available parallelism = {})",
+        opts.resolved_threads(),
         exec::default_threads()
+    );
+    println!(
+        "  pool: {} persistent workers spawned (lazy; grows to the largest \
+         span count requested)",
+        exec::pool_workers()
     );
     println!("  blocking: N_B={} V_B={}", opts.n_block, opts.v_block);
     println!(
         "  methods: baseline, chunked<k>, cce, cce_no_filter, cce_no_sort, \
          cce_kahan, cce_kahan_fullc, cce_kahan_fulle"
     );
-    println!("  simd: 8-lane f32, dispatch: {}", exec::simd_dispatch());
+    println!(
+        "  simd: 8-lane f32, dispatch: {} (resolved once per kernel sweep)",
+        exec::simd_dispatch()
+    );
     print_pjrt_info()
 }
 

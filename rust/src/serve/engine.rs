@@ -11,7 +11,10 @@
 //!   hidden row per active request and runs ONE blocked kernel over the
 //!   whole batch (top-k heap for greedy/top-k rows, online Gumbel-max for
 //!   full-vocabulary sampling rows), so micro-batching reaches the kernel,
-//!   not just the queue.
+//!   not just the queue.  The per-request hidden mean is an **O(D)
+//!   incremental [`ContextBag`]** — add the emitted token's embedding,
+//!   evict the one leaving the window — not an O(window·D) re-reduction
+//!   per step.
 //! * **score** — all texts of a batch concatenate into a single
 //!   teacher-forced [`exec::score`] problem, then split per request.
 //!
@@ -42,6 +45,69 @@ pub struct GenOut {
     pub logprobs: Vec<f32>,
     /// Decoded text (specials dropped).
     pub text: String,
+}
+
+/// O(D) incremental bag-of-context state for lockstep decoding: the
+/// running *sum* of the last `window` token embeddings, rolled forward per
+/// emitted token (add the entering embedding, subtract the one leaving the
+/// window) instead of re-reducing the whole window each step — the
+/// KV-cache analogue of the bag-of-context head (ROADMAP's serve
+/// follow-up).
+///
+/// The accumulator is f64 per dimension, so long decodes stay within f32
+/// round-off of the full re-reduction (`tests/serve.rs` pins the equality
+/// over multi-thousand-step add/evict streams); [`ContextBag::mean_into`]
+/// rounds to f32 once at read time.
+#[derive(Debug, Clone)]
+pub struct ContextBag {
+    sum: Vec<f64>,
+    window: usize,
+    len: usize,
+}
+
+impl ContextBag {
+    pub fn new(d: usize, window: usize) -> ContextBag {
+        ContextBag { sum: vec![0.0; d], window: window.max(1), len: 0 }
+    }
+
+    /// Roll the window forward by one token: `enter` is the embedding row
+    /// entering the window; `evict` is the row of the token sliding out,
+    /// which the caller must pass exactly when the context already holds
+    /// `window` tokens (the caller owns the context and knows which).
+    pub fn push(&mut self, enter: &[f32], evict: Option<&[f32]>) {
+        match evict {
+            Some(gone) => {
+                debug_assert_eq!(self.len, self.window, "evict implies a full window");
+                for ((acc, &add), &sub) in self.sum.iter_mut().zip(enter).zip(gone) {
+                    *acc += add as f64 - sub as f64;
+                }
+            }
+            None => {
+                debug_assert!(self.len < self.window, "full window needs an evict row");
+                for (acc, &add) in self.sum.iter_mut().zip(enter) {
+                    *acc += add as f64;
+                }
+                self.len += 1;
+            }
+        }
+    }
+
+    /// Write the mean over the current window into `out` (length `d`).
+    pub fn mean_into(&self, out: &mut [f32]) {
+        let inv = 1.0 / self.len.max(1) as f64;
+        for (slot, &acc) in out.iter_mut().zip(&self.sum) {
+            *slot = (acc * inv) as f32;
+        }
+    }
+
+    /// Tokens currently in the window (`<= window`).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
 }
 
 /// One scoring result.
@@ -174,7 +240,11 @@ impl Engine {
             ("d_model", Json::Int(self.d_model as i64)),
             ("window", Json::Int(self.window as i64)),
             ("step", Json::Int(self.state.step as i64)),
-            ("threads", Json::Int(self.opts.threads as i64)),
+            // Resolved worker count (`--threads 0` = auto) plus the shared
+            // kernel pool's state — the orchestration-overhead triage trio.
+            ("threads", Json::Int(self.opts.resolved_threads() as i64)),
+            ("pool_workers", Json::Int(exec::pool_workers() as i64)),
+            ("simd", Json::str(exec::simd_dispatch())),
             ("n_block", Json::Int(self.opts.n_block as i64)),
             ("v_block", Json::Int(self.opts.v_block as i64)),
             ("max_gen_tokens", Json::Int(self.max_gen_tokens as i64)),
@@ -188,8 +258,16 @@ impl Engine {
         self.peak_workspace.fetch_max(bytes as u64, Ordering::Relaxed);
     }
 
-    /// Hidden row for one context: mean embedding of its last `window`
-    /// tokens (same recurrence the trainer uses within a sequence).
+    /// Embedding row of one token.
+    fn emb_row(&self, tok: i32) -> &[f32] {
+        let d = self.d_model;
+        &self.state.emb[tok as usize * d..(tok as usize + 1) * d]
+    }
+
+    /// Hidden row for one context by full re-reduction: mean embedding of
+    /// its last `window` tokens (same recurrence the trainer uses within a
+    /// sequence).  The scoring path uses this; decoding rolls a
+    /// [`ContextBag`] forward in O(D) instead.
     fn context_row(&self, ctx: &[i32], out: &mut [f32]) {
         let d = self.d_model;
         let lo = ctx.len().saturating_sub(self.window);
@@ -268,10 +346,12 @@ impl Engine {
     }
 
     fn open_slot<'a>(&self, params: &'a GenParams) -> Slot<'a> {
+        let ctx = self.context_tokens(&params.prompt);
         let mut slot = Slot {
             params,
             budget: params.max_tokens.min(self.max_gen_tokens),
-            ctx: self.context_tokens(&params.prompt),
+            bag: self.bag_of(&ctx),
+            ctx,
             out_tokens: Vec::new(),
             out_logprobs: Vec::new(),
             rng: Rng::new(params.seed ^ 0x5E12_7E57),
@@ -291,12 +371,37 @@ impl Engine {
         slot
     }
 
-    /// Hidden-state matrix for the listed slots; returns the buffer.
+    /// Build the incremental bag state for a context: only the last
+    /// `window` tokens contribute, so seed the sum from just those — one
+    /// O(window·D) pass at slot open (independent of prompt length, and no
+    /// pointless add/evict cancellation); every decode step afterwards is
+    /// O(D).
+    fn bag_of(&self, ctx: &[i32]) -> ContextBag {
+        let mut bag = ContextBag::new(self.d_model, self.window);
+        let lo = ctx.len().saturating_sub(self.window);
+        for &tok in &ctx[lo..] {
+            bag.push(self.emb_row(tok), None);
+        }
+        bag
+    }
+
+    /// Emit one decoded token for `slot` and roll its O(D) bag state: the
+    /// new token's embedding enters the window, the embedding of
+    /// `ctx[len-1-window]` (if any) leaves it.
+    fn advance(&self, slot: &mut Slot, token: i32, logprob: f32) {
+        slot.emit(token, logprob);
+        let entered = slot.ctx.len() - 1;
+        let evict = entered.checked_sub(self.window).map(|lo| self.emb_row(slot.ctx[lo]));
+        slot.bag.push(self.emb_row(token), evict);
+    }
+
+    /// Hidden-state matrix for the listed slots: one O(D) bag read per
+    /// row — no window re-reduction on the decode path.
     fn hidden_for(&self, slots: &[Slot], rows: &[usize]) -> Vec<f32> {
         let d = self.d_model;
         let mut h = vec![0f32; rows.len() * d];
         for (r, &i) in rows.iter().enumerate() {
-            self.context_row(&slots[i].ctx, &mut h[r * d..(r + 1) * d]);
+            slots[i].bag.mean_into(&mut h[r * d..(r + 1) * d]);
         }
         h
     }
@@ -344,7 +449,7 @@ impl Engine {
                 }
                 (row.tokens[pick], row.logprobs[pick])
             };
-            slot.emit(token, logprob);
+            self.advance(slot, token, logprob);
         }
         Ok(())
     }
@@ -365,7 +470,7 @@ impl Engine {
             let out = exec::sample(&p, &self.opts, temperature, &seeds)?;
             self.note_workspace(out.workspace_bytes + h.len() * 4);
             for (r, &i) in group.iter().enumerate() {
-                slots[i].emit(out.tokens[r], out.logprobs[r]);
+                self.advance(&mut slots[i], out.tokens[r], out.logprobs[r]);
             }
         }
         Ok(())
@@ -461,6 +566,9 @@ struct Slot<'a> {
     params: &'a GenParams,
     budget: usize,
     ctx: Vec<i32>,
+    /// O(D) running window mean (kept in lockstep with `ctx` by
+    /// [`Engine::advance`]).
+    bag: ContextBag,
     out_tokens: Vec<i32>,
     out_logprobs: Vec<f32>,
     rng: Rng,
@@ -561,6 +669,33 @@ mod tests {
         let err = format!("{:#}", mixed[0].as_ref().err().expect("oversized must fail"));
         assert!(err.contains("too large"), "{err}");
         assert!(mixed[1].is_ok());
+    }
+
+    #[test]
+    fn incremental_bag_tracks_full_rereduction_through_decode() {
+        // Drive a real greedy decode through the engine internals and pin
+        // the O(D) bag row against a from-scratch window re-reduction at
+        // every step (the ROADMAP serve follow-up's correctness contract).
+        let engine = tiny_engine();
+        let params =
+            GenParams { prompt: "the cat sat".into(), max_tokens: 24, ..GenParams::default() };
+        let mut slots = vec![engine.open_slot(&params)];
+        let d = engine.d_model;
+        let mut inc = vec![0f32; d];
+        let mut full = vec![0f32; d];
+        for _ in 0..24 {
+            if slots[0].done {
+                break;
+            }
+            slots[0].bag.mean_into(&mut inc);
+            engine.context_row(&slots[0].ctx, &mut full);
+            for (a, b) in inc.iter().zip(&full) {
+                assert!((a - b).abs() <= 1e-5, "bag {a} vs full {b}");
+            }
+            assert_eq!(slots[0].bag.len(), slots[0].ctx.len().min(engine.window));
+            engine.step_heap_rows(&mut slots, &[0]).unwrap();
+        }
+        assert!(!slots[0].out_tokens.is_empty());
     }
 
     #[test]

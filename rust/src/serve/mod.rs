@@ -31,6 +31,6 @@ pub mod server;
 
 pub use batcher::{BatchStats, Batcher, Job};
 pub use client::Client;
-pub use engine::{Engine, GenOut, ScoreRes};
+pub use engine::{ContextBag, Engine, GenOut, ScoreRes};
 pub use protocol::{GenParams, Request, Response};
 pub use server::{serve, ServeConfig, Server};

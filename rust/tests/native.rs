@@ -5,7 +5,7 @@
 
 use cce::exec::{
     baseline_forward, baseline_forward_backward, cce_backward, cce_forward, Backend,
-    KernelOptions, NativeBackend, Problem,
+    KernelOptions, NativeBackend, Problem, ThreadPool,
 };
 use cce::sparsity::FILTER_EPS;
 use cce::util::prop;
@@ -472,6 +472,97 @@ fn backward_is_thread_count_invariant_bitwise() {
             assert_eq!(b1.stats.sig_entries, bt.stats.sig_entries);
         }
     }
+}
+
+// ------------------------------------------------------------------- pool
+
+/// Acceptance: a panicking span surfaces as a clean caller-side panic (no
+/// hang), and the pool keeps serving afterwards.
+#[test]
+fn pool_worker_panic_propagates_cleanly_and_pool_survives() {
+    let pool = ThreadPool::new(2);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(
+            (0..4)
+                .map(|i| {
+                    move || {
+                        if i == 1 {
+                            panic!("span {i} exploded");
+                        }
+                        i
+                    }
+                })
+                .collect::<Vec<_>>(),
+        )
+    }));
+    assert!(result.is_err(), "worker panic must reach the caller, not hang");
+    let after = pool.run((0..4).map(|i| move || i + 100).collect::<Vec<_>>());
+    assert_eq!(after, vec![100, 101, 102, 103]);
+    assert_eq!(pool.live_workers(), pool.workers(), "no worker died to the panic");
+}
+
+/// Acceptance: the pool is persistent — repeated kernel calls and repeated
+/// `NativeBackend` construction never accumulate threads (the old
+/// `thread::scope` sites spawned per call; a leak here would grow with the
+/// call count, not the span count).
+#[test]
+fn repeated_backend_construction_does_not_leak_pool_workers() {
+    let mut rng = Rng::new(0x1EAF);
+    let (n, d, v) = (64, 8, 128);
+    let (e, c, x) = random_problem(&mut rng, n, d, v, 0.0);
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let opts = KernelOptions { n_block: 16, v_block: 32, threads: 2, ..KernelOptions::default() };
+    let _ = NativeBackend::from_key("cce", opts).unwrap().forward_backward(&p).unwrap();
+    let before = cce::exec::pool_workers();
+    for _ in 0..16 {
+        let backend = NativeBackend::from_key("cce", opts).unwrap();
+        let _ = backend.forward_backward(&p).unwrap();
+        assert_eq!(backend.pool().workers(), cce::exec::pool_workers());
+    }
+    // 16 constructions × (forward + two backward phases) would have spawned
+    // dozens of threads under per-call scoping.  Pool growth is bounded by
+    // the largest span count any *concurrent* test requested — never by
+    // the call count (other tests share the global pool, hence max, not eq).
+    let bound = before.max(cce::exec::default_threads()).max(8);
+    assert!(
+        cce::exec::pool_workers() <= bound,
+        "pool grew with call count: {} workers (bound {bound})",
+        cce::exec::pool_workers()
+    );
+
+    // Private pools join their workers on drop: hammer one and observe a
+    // stable worker set while alive (the post-drop live==0 invariant is
+    // pinned by the pool's unit tests, which can watch the shared state).
+    let pool = ThreadPool::new(2);
+    for round in 0..50 {
+        let out = pool.run((0..3).map(|i| move || round * 3 + i).collect::<Vec<_>>());
+        assert_eq!(out, vec![round * 3, round * 3 + 1, round * 3 + 2]);
+    }
+    assert_eq!(pool.workers(), 2);
+    assert_eq!(pool.live_workers(), 2);
+}
+
+/// `--threads 0` means auto everywhere, and (by bitwise thread-count
+/// invariance) computes exactly what any explicit count computes.
+#[test]
+fn threads_zero_is_auto_and_bitwise_equal() {
+    let mut rng = Rng::new(0x0A07);
+    let (n, d, v) = (48, 12, 96);
+    let (e, c, x) = random_problem(&mut rng, n, d, v, 0.1);
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let base = KernelOptions { n_block: 16, v_block: 32, ..KernelOptions::default() };
+    let auto = KernelOptions { threads: 0, ..base };
+    assert_eq!(auto.resolved_threads(), cce::exec::default_threads());
+    assert_eq!(cce::exec::resolve_threads(0), cce::exec::default_threads());
+    assert_eq!(cce::exec::resolve_threads(3), 3);
+    let explicit = KernelOptions { threads: 1, ..base };
+    let fwd_auto = cce_forward(&p, &auto);
+    let fwd_one = cce_forward(&p, &explicit);
+    assert_eq!(fwd_auto.lse, fwd_one.lse, "auto threads changed the forward");
+    let bwd_auto = cce_backward(&p, &auto, &fwd_auto.lse);
+    let bwd_one = cce_backward(&p, &explicit, &fwd_one.lse);
+    assert_eq!(bwd_auto.d_e, bwd_one.d_e);
+    assert_eq!(bwd_auto.d_c, bwd_one.d_c);
 }
 
 #[test]

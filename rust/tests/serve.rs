@@ -9,7 +9,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use cce::exec::{cce_forward, sample, score, topk, InferProblem, KernelOptions, Problem};
-use cce::serve::{serve, Client, Engine, GenParams, Request, Response, ServeConfig};
+use cce::serve::{serve, Client, ContextBag, Engine, GenParams, Request, Response, ServeConfig};
 use cce::util::prop;
 use cce::util::rng::Rng;
 
@@ -184,6 +184,49 @@ fn validate_rejects_labels_below_minus_one() {
     assert!(Problem::new(&e, &c, &[0, -1], 2, 4, 3).is_ok());
     let err = Problem::new(&e, &c, &[0, -5], 2, 4, 3).err().expect("-5 must be rejected");
     assert!(format!("{err:#}").contains("-5"), "{err:#}");
+}
+
+#[test]
+fn context_bag_equals_full_window_rereduction() {
+    // The O(D) incremental decode state (ROADMAP serve follow-up): push a
+    // long random token stream through a ContextBag — add the entering
+    // embedding, evict the one leaving the window — and pin its mean
+    // against a from-scratch re-reduction of the window at every step,
+    // including the warmup steps where the window is not yet full.
+    let mut rng = Rng::new(0xBA6);
+    let (v, d, window) = (64usize, 24usize, 8usize);
+    let emb: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32).collect();
+    let row = |tok: usize| &emb[tok * d..(tok + 1) * d];
+    let mut bag = ContextBag::new(d, window);
+    assert!(bag.is_empty());
+    let mut ctx: Vec<usize> = Vec::new();
+    let mut inc = vec![0f32; d];
+    for step in 0..4000 {
+        let tok = rng.usize_below(v);
+        let evict = (ctx.len() >= window).then(|| row(ctx[ctx.len() - window]));
+        bag.push(row(tok), evict);
+        ctx.push(tok);
+        assert_eq!(bag.len(), ctx.len().min(window));
+        bag.mean_into(&mut inc);
+        // Full re-reduction of the current window (the engine's scoring
+        // path recurrence), in f32.
+        let lo = ctx.len().saturating_sub(window);
+        let tail = &ctx[lo..];
+        let mut full = vec![0f32; d];
+        for &t in tail {
+            for (slot, &val) in full.iter_mut().zip(row(t)) {
+                *slot += val;
+            }
+        }
+        let len = tail.len() as f32;
+        for (a, f) in inc.iter().zip(&full) {
+            let want = f / len;
+            assert!(
+                (a - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "step {step}: incremental {a} vs full {want}"
+            );
+        }
+    }
 }
 
 // -------------------------------------------------------------- workspace

@@ -14,7 +14,12 @@
 #     ratio alone also shrinks when the unfiltered reference simply got
 #     faster, so the gate only fires when cce's own bwd_ms worsened too;
 #   * the cce forward and backward times (fwd_ms[cce] / bwd_ms[cce]),
-#     gated absolutely — the ratio is blind to uniform slowdowns.
+#     gated absolutely — the ratio is blind to uniform slowdowns;
+#   * the small-N decode-shape row ("small_n": cce at N=8), gated
+#     absolutely on fwd_ms and fwdbwd_ms — at that shape per-call
+#     orchestration overhead (thread spawn/join, dispatch probes), not
+#     FLOPs, dominates, so this is the gate that keeps the persistent
+#     worker pool honest.
 #
 # Exit codes: 0 = OK/bootstrap, 1 = regression (suppressible), 2 =
 # structural failure (unreadable fresh file, missing gate rows/fields —
@@ -170,6 +175,40 @@ def main(fresh_path, base_path):
             failures.append(
                 f"cce {label} regressed: {fresh_ms:.2f} ms vs baseline "
                 f"{base_ms:.2f} ms (>{(THRESHOLD - 1) * 100:.0f}%)")
+
+    # Decode-shape (small-N) gate: absolute, like the cce gates above.  A
+    # baseline predating the row bootstraps; a *fresh* run missing the row
+    # while the baseline carries it is structural — the orchestration-
+    # overhead gate must not silently disappear.
+    fresh_sn, base_sn = fresh_doc.get("small_n"), base_doc.get("small_n")
+    if fresh_sn is None:
+        if base_sn is not None:
+            structural.append("fresh bench is missing the small_n (decode-shape) "
+                              "row the baseline carries — the orchestration-"
+                              "overhead gate cannot run")
+    elif base_sn is None:
+        print(f"  small-N (N={fresh_sn.get('n')}): fwd "
+              f"{fresh_sn.get('fwd_ms', 0.0):.3f} ms, fwd+bwd "
+              f"{fresh_sn.get('fwdbwd_ms', 0.0):.3f} ms — baseline has no "
+              "decode-shape row yet, taking this as the reference")
+    elif base_sn.get("n") != fresh_sn.get("n"):
+        print(f"  small-N shape changed ({base_sn.get('n')} -> {fresh_sn.get('n')}) "
+              "— not comparable, taking the fresh row as the new reference")
+    else:
+        for metric, label in [("fwd_ms", "forward"), ("fwdbwd_ms", "forward+backward")]:
+            fresh_ms, base_ms = fresh_sn.get(metric), base_sn.get(metric)
+            if fresh_ms is None:
+                structural.append(f"fresh small_n row is missing {metric} — the "
+                                  "orchestration-overhead gate cannot run")
+            elif base_ms is not None and base_ms > 0:
+                print(f"  small-N {label} (N={fresh_sn.get('n')}): {fresh_ms:.3f} ms "
+                      f"(baseline {base_ms:.3f} ms, {pct(fresh_ms, base_ms)})")
+                if fresh_ms > base_ms * THRESHOLD:
+                    failures.append(
+                        f"small-N (decode shape) {label} regressed: "
+                        f"{fresh_ms:.3f} ms vs baseline {base_ms:.3f} ms "
+                        f"(>{(THRESHOLD - 1) * 100:.0f}%) — per-call "
+                        "orchestration overhead is creeping back")
 
     if structural:
         for f in structural:
