@@ -16,12 +16,17 @@
 # vendored stand-in crates under rust/vendor/ are exercised by `cargo test`
 # but not held to the same lint bar.
 #
-# The bench stage runs `cce table1 --backend native` and `cce servebench` at
-# a small fixed grid and refreshes BENCH_table1.json / BENCH_serve.json in
-# the repo root — commit both with your PR so the perf trajectory exists.
+# The bench stage runs `cce table1 --backend native`, a 3-point `cce figA1`
+# N-sweep, and `cce servebench` at a small fixed grid and refreshes
+# BENCH_table1.json / BENCH_figA1.json / BENCH_serve.json in the repo root —
+# commit all three with your PR so the perf trajectory exists.
 # tools/check_bench.sh fails the build on a >25% regression in the
-# filtered-vs-unfiltered backward gap or in the cce forward time (see
-# docs/benchmarks.md).
+# filtered-vs-unfiltered backward gap or the cce forward time, on a broken
+# figA1 memory-scaling shape (cce workspace must stay flat in N while the
+# baseline grows ~linearly), or on a >35% serve-throughput drop (median
+# req/s; looser than the kernel gates to absorb runner latency variance).
+# A short `--dtype bf16` table1 run then pins the measured memory column
+# within 15% of the analytic model (see docs/benchmarks.md).
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -120,7 +125,7 @@ fi
 grep -q "shut down cleanly" "$SMOKE_DIR/serve.log" || { echo "missing clean-shutdown marker"; exit 1; }
 echo "   serve self-test OK (port $PORT)"
 
-echo "== bench: table1 (native) + servebench at the fixed CI grid =="
+echo "== bench: table1 (native) + figA1 sweep + servebench at the fixed CI grid =="
 # Fixed grid (see docs/benchmarks.md): d >= 128 keeps gen_loss_inputs'
 # softmax peaked enough for real block skipping; threads pinned to 2 so
 # numbers are comparable across differently-sized runners.  --small-n 8
@@ -129,30 +134,55 @@ echo "== bench: table1 (native) + servebench at the fixed CI grid =="
 # cannot silently creep back.
 "$CCE" table1 --backend native --n 512 --d 128 --v 2048 --threads 2 \
     --small-n 8 --budget-ms 400 --seed 0 --json "$SMOKE_DIR/BENCH_table1.json"
+# The figA1 N-sweep (3 points at the CI D/V): the scaling gate below is a
+# *structural* shape check on measured workspace — cce flat in N, the
+# materialized baseline ~linear — not a timing gate, so a short budget is
+# fine.
+"$CCE" figA1 --backend native --ns 128,256,512 --d 128 --v 2048 --threads 2 \
+    --budget-ms 120 --seed 0 --json "$SMOKE_DIR/BENCH_figA1.json"
+# servebench repeats the run and reports the median req/s (one scheduler
+# stall must not fail the serve gate).
 "$CCE" servebench --requests 48 --concurrency 4 --max-tokens 8 --threads 2 \
-    --json "$SMOKE_DIR/BENCH_serve.json"
+    --repeats 3 --json "$SMOKE_DIR/BENCH_serve.json"
 
 UPDATE_FLAG=""
 [[ "${BENCH_UPDATE:-0}" == "1" ]] && UPDATE_FLAG="--update"
 tools/check_bench.sh $UPDATE_FLAG "$SMOKE_DIR/BENCH_table1.json" BENCH_table1.json
+tools/check_bench.sh --figa1 "$SMOKE_DIR/BENCH_figA1.json"
+tools/check_bench.sh --serve $UPDATE_FLAG "$SMOKE_DIR/BENCH_serve.json" BENCH_serve.json
 
-# BENCH_serve.json is not regression-gated (latency percentiles are too
-# machine-sensitive), but it must at least be well-formed before we commit
-# it as the trajectory file.
-python3 - "$SMOKE_DIR/BENCH_serve.json" <<'PY'
+echo "== bench: bf16 measured-memory acceptance (table1 --dtype bf16) =="
+# The paper's memory column is measured under bf16 storage.  One short
+# bf16 table1 run at the same grid; the check asserts the *measured*
+# memory column (grads + peak workspace) lands within 15% of the analytic
+# model for the cce row, and that the bf16 gradient bytes are exactly half
+# the f32 run's.  Not regression-gated (the f32 file is the timing
+# trajectory); this is a correctness gate on the memory accounting.
+"$CCE" table1 --backend native --n 512 --d 128 --v 2048 --threads 2 --dtype bf16 \
+    --small-n 0 --budget-ms 100 --seed 0 --json "$SMOKE_DIR/BENCH_table1_bf16.json"
+python3 - "$SMOKE_DIR/BENCH_table1_bf16.json" "$SMOKE_DIR/BENCH_table1.json" <<'PY'
 import json, sys
-doc = json.load(open(sys.argv[1]))
-assert doc.get("bench") == "serve" and doc.get("schema") == 1, "bad serve bench header"
-endpoints = {r["endpoint"] for r in doc["rows"]}
-assert endpoints == {"generate", "score"}, f"unexpected endpoints {endpoints}"
-assert doc["requests_per_sec"] > 0, "no throughput measured"
-print(f"   BENCH_serve.json OK ({doc['requests']} requests, "
-      f"{doc['requests_per_sec']:.1f} req/s)")
+bf = json.load(open(sys.argv[1]))
+f32 = json.load(open(sys.argv[2]))
+assert bf.get("dtype") == "bf16", f"expected a bf16 run, got {bf.get('dtype')}"
+rows_bf = {r["method"]: r for r in bf["rows"]}
+rows_f32 = {r["method"]: r for r in f32["rows"]}
+cce = rows_bf["cce"]
+ratio = cce["measured_mb"] / cce["mem_scaled_mb"]
+assert abs(ratio - 1.0) <= 0.15, (
+    f"bf16 measured memory {cce['measured_mb']:.3f} MB vs analytic "
+    f"{cce['mem_scaled_mb']:.3f} MB (ratio {ratio:.3f}) breaks the 15% bound")
+gr = rows_bf["cce"]["grad_mb"] / rows_f32["cce"]["grad_mb"]
+assert abs(gr - 0.5) < 0.01, f"bf16 grads not half of f32: ratio {gr:.3f}"
+print(f"   bf16 memory column OK: measured {cce['measured_mb']:.3f} MB vs "
+      f"analytic {cce['mem_scaled_mb']:.3f} MB ({(ratio-1)*100:+.1f}%), "
+      f"grads exactly half of f32")
 PY
 
 # Refresh the committed trajectory files (commit them with the PR).
 cp "$SMOKE_DIR/BENCH_table1.json" BENCH_table1.json
+cp "$SMOKE_DIR/BENCH_figA1.json" BENCH_figA1.json
 cp "$SMOKE_DIR/BENCH_serve.json" BENCH_serve.json
-echo "   wrote BENCH_table1.json + BENCH_serve.json (commit them with this PR)"
+echo "   wrote BENCH_table1.json + BENCH_figA1.json + BENCH_serve.json (commit them with this PR)"
 
 echo "CI OK"

@@ -42,7 +42,10 @@ fn main() -> Result<()> {
     };
 
     let plan = fsdp_plan(&spec, tokens, gpus, gpu_gb);
-    println!("== memory plan: {} on {gpus} x {gpu_gb} GB (usable), batch {tokens} tokens ==\n", spec.name);
+    println!(
+        "== memory plan: {} on {gpus} x {gpu_gb} GB (usable), batch {tokens} tokens ==\n",
+        spec.name
+    );
     println!("  weights + optimizer + grads : {}", fmt_mb(plan.weights_opt_bytes));
     println!("  activation checkpoints      : {}", fmt_mb(plan.activations_bytes));
     println!("  cross-entropy logits        : {}  <- removed by CCE", fmt_mb(plan.logits_bytes));

@@ -22,7 +22,7 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &[])?;
     let opts = KernelOptions::default();
     let engine = match args.opt("checkpoint") {
-        Some(path) => Engine::from_checkpoint(std::path::Path::new(path), None, opts)?,
+        Some(path) => Engine::from_checkpoint(std::path::Path::new(path), None, None, opts)?,
         None => {
             eprintln!("[example] no --checkpoint: training a tiny demo model first");
             Engine::demo(512, 32, 8, opts)?

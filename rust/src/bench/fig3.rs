@@ -51,12 +51,13 @@ pub fn run_native(
         // Fresh measurement corpus, tokenized with the *checkpoint's* own
         // vocabulary so token identities line up with the trained head.
         let docs = crate::data::web_corpus(corpus_docs, seed);
-        let dataset = crate::data::Dataset::build(&docs, &bundle.tokenizer, &crate::data::DatasetConfig {
+        let config = crate::data::DatasetConfig {
             seq_len,
             val_fraction: 0.02,
             seed,
             pad_per_doc: false,
-        })?;
+        };
+        let dataset = crate::data::Dataset::build(&docs, &bundle.tokenizer, &config)?;
         return rank_stats_native(
             &dataset,
             &bundle.state,
@@ -117,16 +118,21 @@ fn rank_stats_native(
     let mut acc = vec![0f64; v];
     let mut rows: u64 = 0;
     let mut probs = vec![0f64; v];
+    // Measurement path, not the hot path: widen the (possibly bf16)
+    // parameters to f32 once — rank statistics are a full-distribution
+    // property and materialize V-vectors anyway.
+    let emb = state.emb.to_f32_vec();
+    let cls = state.cls.to_f32_vec();
     for b in batches.iter().take(max_batches) {
         let tokens = b.tokens.as_i32()?;
-        let h = crate::coordinator::bag_hidden(tokens, &state.emb, d, window, seq_len, 0);
+        let h = crate::coordinator::bag_hidden(tokens, &emb[..], d, window, seq_len, 0);
         for h_row in h.chunks(d) {
             // One V-vector of logits -> softmax -> sorted descending.
             let mut m = f64::NEG_INFINITY;
             for (j, slot) in probs.iter_mut().enumerate() {
                 let z = h_row
                     .iter()
-                    .zip(&state.cls[j * d..(j + 1) * d])
+                    .zip(&cls[j * d..(j + 1) * d])
                     .map(|(&a, &b)| (a as f64) * b as f64)
                     .sum::<f64>();
                 *slot = z;

@@ -60,11 +60,32 @@ pub struct ServeBench {
     pub pool_workers: usize,
     /// Resolved SIMD dispatch level of the run.
     pub simd: &'static str,
+    /// Storage dtype the engine served in.
+    pub dtype: &'static str,
+    /// Tokens per generate request (part of the workload shape — the
+    /// serve gate's comparability key must see a deliberate change here
+    /// as a bootstrap, not a regression).
+    pub max_tokens: usize,
+    /// Throughput of every repeat (req/s, in run order).  The reported
+    /// latency percentiles come from the median-throughput repeat; the
+    /// regression gate compares [`ServeBench::median_rps`].
+    pub rps_runs: Vec<f64>,
 }
 
 impl ServeBench {
     pub fn requests_per_sec(&self) -> f64 {
         self.requests as f64 / self.elapsed_secs.max(1e-9)
+    }
+
+    /// Median throughput over the repeats — the gated number (medians
+    /// absorb the runner-latency variance a single run is hostage to).
+    pub fn median_rps(&self) -> f64 {
+        if self.rps_runs.is_empty() {
+            return self.requests_per_sec();
+        }
+        let mut sorted = self.rps_runs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        sorted[sorted.len() / 2]
     }
 
     /// Mean jobs per micro-batch — > 1 means batching actually happened.
@@ -84,6 +105,7 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
     serve_cfg.port = 0; // never collide
     let (vocab, d_model) = (engine.vocab, engine.d_model);
     let threads = engine.opts.resolved_threads();
+    let dtype = engine.dtype().name();
     let server = serve(engine, &serve_cfg)?;
     let addr = server.addr;
     let concurrency = cfg.concurrency.max(1);
@@ -203,7 +225,35 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
         threads,
         pool_workers: crate::exec::pool_workers(),
         simd: crate::exec::simd_dispatch(),
+        dtype,
+        max_tokens: cfg.max_tokens,
+        rps_runs: Vec::new(),
     })
+}
+
+/// Run the harness `repeats` times against the same engine and report the
+/// **median-throughput** run (with every repeat's req/s recorded), so one
+/// unlucky scheduler stall on a shared runner cannot fail the serve gate.
+pub fn run_repeated(
+    engine: Arc<Engine>,
+    cfg: &ServeBenchConfig,
+    repeats: usize,
+) -> Result<ServeBench> {
+    let repeats = repeats.max(1);
+    let mut runs: Vec<ServeBench> = Vec::with_capacity(repeats);
+    for i in 0..repeats {
+        if repeats > 1 {
+            eprintln!("  [servebench] repeat {}/{repeats}", i + 1);
+        }
+        runs.push(run(engine.clone(), cfg)?);
+    }
+    let rps: Vec<f64> = runs.iter().map(|b| b.requests_per_sec()).collect();
+    let mut order: Vec<usize> = (0..repeats).collect();
+    order.sort_by(|&a, &b| rps[a].partial_cmp(&rps[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let median_idx = order[repeats / 2];
+    let mut bench = runs.swap_remove(median_idx);
+    bench.rps_runs = rps;
+    Ok(bench)
 }
 
 pub fn print(bench: &ServeBench) {
@@ -236,9 +286,18 @@ pub fn print(bench: &ServeBench) {
         bench.peak_workspace_bytes as f64 / (1024.0 * 1024.0)
     );
     println!(
-        "  kernel threads: {}   pool workers: {}   simd: {}",
-        bench.threads, bench.pool_workers, bench.simd
+        "  kernel threads: {}   pool workers: {}   simd: {}   dtype: {}",
+        bench.threads, bench.pool_workers, bench.simd, bench.dtype
     );
+    if bench.rps_runs.len() > 1 {
+        let runs: Vec<String> = bench.rps_runs.iter().map(|r| format!("{r:.1}")).collect();
+        println!(
+            "  repeats: {} (median {:.1} req/s; runs: {})",
+            bench.rps_runs.len(),
+            bench.median_rps(),
+            runs.join(", ")
+        );
+    }
 }
 
 /// Persist as `BENCH_serve.json` (one row per endpoint + run meta).
@@ -255,16 +314,27 @@ pub fn write_json(bench: &ServeBench, path: impl AsRef<std::path::Path>) -> Resu
     };
     let doc = Json::obj(vec![
         ("bench", Json::str("serve")),
-        ("schema", Json::Int(1)),
+        // Schema 2 (PR 5): median-of-repeats throughput (the gated
+        // number), per-repeat rps_runs, and the dtype tag.
+        ("schema", Json::Int(2)),
         ("vocab", Json::Int(bench.vocab as i64)),
         ("d_model", Json::Int(bench.d_model as i64)),
         ("threads", Json::Int(bench.threads as i64)),
         ("pool_workers", Json::Int(bench.pool_workers as i64)),
         ("simd", Json::str(bench.simd)),
+        ("dtype", Json::str(bench.dtype)),
         ("requests", Json::Int(bench.requests as i64)),
         ("concurrency", Json::Int(bench.concurrency as i64)),
+        ("max_tokens", Json::Int(bench.max_tokens as i64)),
+        ("repeats", Json::Int(bench.rps_runs.len().max(1) as i64)),
         ("elapsed_secs", Json::Float(bench.elapsed_secs)),
-        ("requests_per_sec", Json::Float(bench.requests_per_sec())),
+        // Median over the repeats — what tools/check_bench.sh --serve
+        // gates (falls back to the single run's throughput).
+        ("requests_per_sec", Json::Float(bench.median_rps())),
+        (
+            "requests_per_sec_runs",
+            Json::arr(bench.rps_runs.iter().map(|&r| Json::Float(r))),
+        ),
         ("batches", Json::Int(bench.batches as i64)),
         ("mean_batch", Json::Float(bench.mean_batch())),
         ("max_batch_observed", Json::Int(bench.max_batch_observed as i64)),
@@ -296,10 +366,12 @@ mod tests {
             max_tokens: 3,
             serve: ServeConfig { max_batch: 4, ..ServeConfig::default() },
         };
-        let bench = run(engine, &cfg).unwrap();
+        let bench = run_repeated(engine, &cfg, 2).unwrap();
         assert_eq!(bench.requests, 8);
         assert!(bench.generate.n >= 1 && bench.score.n >= 1);
         assert!(bench.requests_per_sec() > 0.0);
+        assert_eq!(bench.rps_runs.len(), 2, "every repeat's throughput is recorded");
+        assert!(bench.median_rps() > 0.0);
         assert!(bench.batches >= 1 && bench.batched_jobs == 8);
         assert!(bench.peak_workspace_bytes > 0);
 
@@ -307,11 +379,19 @@ mod tests {
         write_json(&bench, &path).unwrap();
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
+        assert_eq!(parsed.get("schema").unwrap().as_i64(), Some(2));
         assert_eq!(parsed.get("rows").unwrap().as_array().unwrap().len(), 2);
         assert_eq!(parsed.get("vocab").unwrap().as_i64(), Some(384));
         assert_eq!(parsed.get("d_model").unwrap().as_i64(), Some(16));
         assert_eq!(parsed.get("threads").unwrap().as_i64(), Some(1));
+        assert_eq!(parsed.get("repeats").unwrap().as_i64(), Some(2));
+        assert_eq!(parsed.get("max_tokens").unwrap().as_i64(), Some(3));
+        assert_eq!(
+            parsed.get("requests_per_sec_runs").unwrap().as_array().unwrap().len(),
+            2
+        );
         assert!(parsed.get("pool_workers").and_then(Json::as_i64).is_some());
         assert!(parsed.get("simd").and_then(Json::as_str).is_some());
+        assert_eq!(parsed.get("dtype").unwrap().as_str(), Some("f32"));
     }
 }

@@ -9,6 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::bench::harness::Table;
 use crate::memmodel::{method_memory, LossMethod, Workload};
+use crate::util::json::Json;
 use crate::util::stats::{fmt_duration, fmt_mb};
 
 #[cfg(feature = "pjrt")]
@@ -20,7 +21,15 @@ pub struct SweepPoint {
     pub method: String,
     pub n_tokens: u64,
     pub secs: f64,
+    /// Analytic memory model at this point.
     pub mem_bytes: u64,
+    /// Measured forward kernel workspace (native path): the scaling-gate
+    /// quantity — flat in N for cce (O(N) vectors + fixed tiles), ~linear
+    /// in N for the materialized baseline (the N×V logit matrix).
+    pub fwd_workspace_bytes: Option<u64>,
+    /// Measured peak loss+gradient memory (native path; see
+    /// [`crate::bench::table1::measured_combined_bytes`]).
+    pub measured_bytes: Option<u64>,
 }
 
 fn method_of_key(key: &str) -> Option<LossMethod> {
@@ -36,6 +45,9 @@ fn method_of_key(key: &str) -> Option<LossMethod> {
 
 /// Sweep the native kernels over `ns` token counts at a fixed `(d, v)`
 /// grid — the Fig. A1/A2 time/memory-vs-N curves with zero artifacts.
+/// Each point also records the *measured* forward workspace and peak
+/// loss+gradient memory, which is what the CI scaling gate asserts on
+/// (cce flat in N, baseline ~linear).
 pub fn run_native(
     d: usize,
     v: usize,
@@ -44,45 +56,74 @@ pub fn run_native(
     opts: crate::exec::KernelOptions,
     seed: u64,
 ) -> Result<Vec<SweepPoint>> {
-    use crate::bench::harness::{gen_loss_inputs, time_fn};
-    use crate::exec::{Backend, NativeBackend, Problem};
+    use crate::bench::harness::gen_loss_inputs;
+    use crate::exec::{Problem, Store, StoreDtype, BF16};
     use crate::util::rng::Rng;
 
-    let budget = Duration::from_millis(budget_ms);
     let mut out = Vec::new();
     let mut sorted_ns = ns.to_vec();
     sorted_ns.sort_unstable();
     for &n in &sorted_ns {
         let mut rng = Rng::new(seed ^ (n as u64).wrapping_mul(0x9E37_79B9));
         let inputs = gen_loss_inputs(n, d, v, &mut rng, 0.0);
-        let problem = Problem::from_tensors(&inputs)?;
-        for key in ["baseline", "cce"] {
-            let backend = NativeBackend::from_key(key, opts)?;
-            let res = time_fn(&format!("sweep_{key}_n{n}"), budget, || {
-                std::hint::black_box(
-                    backend.forward_backward(&problem).expect("native sweep"),
-                );
-            });
-            let w = Workload {
-                n_tokens: n as u64,
-                vocab: v as u64,
-                hidden: d as u64,
-                act_bytes: 4,
-                softcap: false,
-            };
-            let mem = method_of_key(key)
-                .map(|lm| method_memory(lm, &w).combined)
-                .unwrap_or(0);
-            eprintln!("  [sweep/native] n={n} {key}: {}", fmt_duration(res.mean()));
-            out.push(SweepPoint {
-                method: key.to_string(),
-                n_tokens: n as u64,
-                secs: res.mean(),
-                mem_bytes: mem,
-            });
+        match opts.dtype {
+            StoreDtype::F32 => {
+                let problem = Problem::from_tensors(&inputs)?;
+                sweep_point(&problem, budget_ms, opts, &mut out)?;
+            }
+            StoreDtype::Bf16 => {
+                let e = BF16::narrow_vec(inputs[0].as_f32()?);
+                let c = BF16::narrow_vec(inputs[1].as_f32()?);
+                let problem = Problem::new(&e, &c, inputs[2].as_i32()?, n, d, v)?;
+                sweep_point(&problem, budget_ms, opts, &mut out)?;
+            }
         }
     }
     Ok(out)
+}
+
+fn sweep_point<S: crate::exec::Store>(
+    problem: &crate::exec::Problem<S>,
+    budget_ms: u64,
+    opts: crate::exec::KernelOptions,
+    out: &mut Vec<SweepPoint>,
+) -> Result<()> {
+    use crate::bench::harness::time_fn;
+    use crate::bench::table1::measured_combined_bytes;
+    use crate::exec::NativeBackend;
+
+    let budget = Duration::from_millis(budget_ms);
+    let (n, d, v) = (problem.n, problem.d, problem.v);
+    for key in ["baseline", "cce"] {
+        let backend = NativeBackend::from_key(key, opts)?;
+        // Untimed warmup pass doubles as the memory measurement.
+        let (fwd0, bwd0) = backend.forward_backward_t(problem)?;
+        let res = time_fn(&format!("sweep_{key}_n{n}"), budget, || {
+            std::hint::black_box(
+                backend.forward_backward_t(problem).expect("native sweep"),
+            );
+        });
+        let w = Workload {
+            n_tokens: n as u64,
+            vocab: v as u64,
+            hidden: d as u64,
+            act_bytes: S::BYTES as u64,
+            softcap: false,
+        };
+        let mem = method_of_key(key)
+            .map(|lm| method_memory(lm, &w).combined)
+            .unwrap_or(0);
+        eprintln!("  [sweep/native] n={n} {key}: {}", fmt_duration(res.mean()));
+        out.push(SweepPoint {
+            method: key.to_string(),
+            n_tokens: n as u64,
+            secs: res.mean(),
+            mem_bytes: mem,
+            fwd_workspace_bytes: Some(fwd0.workspace_bytes as u64),
+            measured_bytes: Some(measured_combined_bytes(n, d, v, &fwd0, &bwd0)),
+        });
+    }
+    Ok(())
 }
 
 /// Time `loss_fwdbwd_{method}` for every token count in the manifest sweep.
@@ -131,6 +172,8 @@ pub fn run(rt: &Runtime, budget_ms: u64) -> Result<Vec<SweepPoint>> {
                 n_tokens: n,
                 secs: res.mean(),
                 mem_bytes: mem,
+                fwd_workspace_bytes: None,
+                measured_bytes: None,
             });
         }
     }
@@ -139,13 +182,17 @@ pub fn run(rt: &Runtime, budget_ms: u64) -> Result<Vec<SweepPoint>> {
 
 pub fn print(points: &[SweepPoint], csv_path: Option<&str>) -> Result<()> {
     println!("\n== Figs. A1/A2: loss+gradient time & memory vs token count ==");
-    let mut t = Table::new(&["N tokens", "Method", "Time", "Memory (analytic)"]);
+    let mut t = Table::new(&[
+        "N tokens", "Method", "Time", "Memory (analytic)", "Fwd ws (measured)", "Measured",
+    ]);
     for p in points {
         t.row(vec![
             p.n_tokens.to_string(),
             p.method.clone(),
             fmt_duration(p.secs),
             fmt_mb(p.mem_bytes),
+            p.fwd_workspace_bytes.map(fmt_mb).unwrap_or_default(),
+            p.measured_bytes.map(fmt_mb).unwrap_or_default(),
         ]);
     }
     t.print();
@@ -166,7 +213,11 @@ pub fn print(points: &[SweepPoint], csv_path: Option<&str>) -> Result<()> {
 }
 
 /// Shape checks for the sweep: time grows ~linearly in N for every method,
-/// and CCE's memory stays flat while baseline's grows linearly.
+/// CCE's memory stays flat while baseline's grows linearly — asserted on
+/// the analytic model always, and on the **measured** forward workspace
+/// when the points carry it (the native path; this is the CI scaling
+/// gate's contract, re-checked by `tools/check_bench.sh --figa1` on the
+/// persisted JSON).
 pub fn check(points: &[SweepPoint]) -> Result<()> {
     let series = |m: &str| -> Vec<&SweepPoint> {
         let mut v: Vec<&SweepPoint> =
@@ -188,6 +239,80 @@ pub fn check(points: &[SweepPoint]) -> Result<()> {
         if cce_mem_ratio > base_mem_ratio / 2.0 {
             return Err(anyhow!("CCE memory grows too fast"));
         }
+        // Measured counterpart (native points): cce's forward workspace is
+        // O(N) vectors + fixed tiles — near-flat; the baseline's is the
+        // N×V logit matrix — within 30% of linear.
+        if let (Some(c0), Some(c1), Some(b0), Some(b1)) = (
+            cce[0].fwd_workspace_bytes,
+            cce.last().unwrap().fwd_workspace_bytes,
+            base[0].fwd_workspace_bytes,
+            base.last().unwrap().fwd_workspace_bytes,
+        ) {
+            let cce_ws_ratio = c1 as f64 / c0.max(1) as f64;
+            let base_ws_ratio = b1 as f64 / b0.max(1) as f64;
+            if cce_ws_ratio > 1.5 {
+                return Err(anyhow!(
+                    "measured cce forward workspace grew {cce_ws_ratio:.2}x over a \
+                     {n_ratio:.0}x N sweep — the O(N_B·V_B) bound broke"
+                ));
+            }
+            if base_ws_ratio < 0.7 * n_ratio {
+                return Err(anyhow!(
+                    "measured baseline workspace grew only {base_ws_ratio:.2}x over a \
+                     {n_ratio:.0}x N sweep — it stopped materializing N×V?"
+                ));
+            }
+        }
     }
+    Ok(())
+}
+
+/// Persist the sweep as `BENCH_figA1.json` for the CI scaling gate
+/// (`tools/check_bench.sh --figa1`): a *structural* shape check — cce's
+/// measured workspace flat in N, baseline's ~linear — not a timing gate.
+pub fn write_json(
+    points: &[SweepPoint],
+    d: usize,
+    v: usize,
+    dtype: crate::exec::StoreDtype,
+    threads: usize,
+    path: impl AsRef<std::path::Path>,
+) -> Result<()> {
+    let jpoints: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut fields = vec![
+                ("method", Json::str(p.method.as_str())),
+                ("n", Json::Int(p.n_tokens as i64)),
+                ("fwdbwd_ms", Json::Float(p.secs * 1e3)),
+                ("mem_analytic_bytes", Json::Int(p.mem_bytes as i64)),
+            ];
+            if let Some(w) = p.fwd_workspace_bytes {
+                fields.push(("fwd_workspace_bytes", Json::Int(w as i64)));
+            }
+            if let Some(m) = p.measured_bytes {
+                fields.push(("measured_bytes", Json::Int(m as i64)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("figA1")),
+        ("schema", Json::Int(1)),
+        ("simd", Json::str(crate::exec::simd_dispatch())),
+        ("dtype", Json::str(dtype.name())),
+        (
+            "grid",
+            Json::obj(vec![("d", Json::Int(d as i64)), ("v", Json::Int(v as i64))]),
+        ),
+        ("threads", Json::Int(threads as i64)),
+        ("points", Json::arr(jpoints)),
+    ]);
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(&path, doc.to_string_pretty())?;
     Ok(())
 }

@@ -114,6 +114,7 @@ fn write_data(out: &mut Vec<u8>, data: &Data) {
         Data::I32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
         Data::U32(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
         Data::F64(v) => v.iter().for_each(|x| out.extend_from_slice(&x.to_le_bytes())),
+        Data::BF16(v) => v.iter().for_each(|x| out.extend_from_slice(&x.0.to_le_bytes())),
     }
 }
 
@@ -131,6 +132,12 @@ fn read_data(dtype: DType, bytes: &[u8]) -> Result<Data> {
         ),
         DType::F64 => Data::F64(
             bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        DType::BF16 => Data::BF16(
+            bytes
+                .chunks_exact(2)
+                .map(|c| crate::exec::BF16(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
         ),
     })
     .and_then(|d: Data| {
@@ -151,7 +158,11 @@ mod tests {
         let ckpt = Checkpoint {
             step: 123,
             tensors: vec![
-                ("embed".into(), HostTensor::f32(vec![4, 3], (0..12).map(|i| i as f32 * 0.5).collect()).unwrap()),
+                (
+                    "embed".into(),
+                    HostTensor::f32(vec![4, 3], (0..12).map(|i| i as f32 * 0.5).collect())
+                        .unwrap(),
+                ),
                 ("step_tensor".into(), HostTensor::scalar_i32(9)),
             ],
         };
@@ -163,6 +174,25 @@ mod tests {
         assert_eq!(loaded.tensors[0].0, "embed");
         assert_eq!(loaded.tensors[0].1, ckpt.tensors[0].1);
         assert_eq!(loaded.tensors[1].1.scalar().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn bf16_tensors_roundtrip() {
+        use crate::exec::BF16;
+        let vals: Vec<BF16> =
+            [0.5f32, -1.25, 3.0e4, -7.5e-3].iter().map(|&x| BF16::from_f32(x)).collect();
+        let ckpt = Checkpoint {
+            step: 7,
+            tensors: vec![("w".into(), HostTensor::bf16(vec![2, 2], vals.clone()).unwrap())],
+        };
+        let path = std::env::temp_dir().join("cce_ckpt_bf16.bin");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.tensors[0].1.dtype(), DType::BF16);
+        assert_eq!(loaded.tensors[0].1, ckpt.tensors[0].1, "bf16 payload must be bit-exact");
+        // The payload really is half-width on disk: 8 header-described
+        // bytes for 4 elements.
+        assert_eq!(loaded.tensors[0].1.size_bytes(), 8);
     }
 
     #[test]

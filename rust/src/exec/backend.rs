@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 
 use super::{
     baseline_forward, baseline_forward_backward, cce_backward, cce_forward, pool, BackwardOut,
-    ForwardOut, KernelOptions, Problem, ThreadPool,
+    ForwardOut, KernelOptions, Problem, Store, ThreadPool,
 };
 
 /// A loss-layer compute backend.
@@ -142,14 +142,11 @@ impl NativeBackend {
             _ => self.opts,
         }
     }
-}
 
-impl Backend for NativeBackend {
-    fn name(&self) -> String {
-        format!("native/{}", self.method.key(&self.opts))
-    }
-
-    fn forward(&self, p: &Problem) -> Result<ForwardOut> {
+    /// Dtype-generic forward: the [`Backend`] trait stays `f32` (so it
+    /// remains object-safe), while drivers that hold a `Problem<BF16>`
+    /// call this monomorphized entry directly.
+    pub fn forward_t<S: Store>(&self, p: &Problem<S>) -> Result<ForwardOut> {
         Ok(match self.method {
             NativeMethod::Baseline => baseline_forward(p, &self.opts),
             NativeMethod::Chunked(_) | NativeMethod::Cce => {
@@ -158,7 +155,11 @@ impl Backend for NativeBackend {
         })
     }
 
-    fn forward_backward(&self, p: &Problem) -> Result<(ForwardOut, BackwardOut)> {
+    /// Dtype-generic forward + backward (see [`NativeBackend::forward_t`]).
+    pub fn forward_backward_t<S: Store>(
+        &self,
+        p: &Problem<S>,
+    ) -> Result<(ForwardOut, BackwardOut<S>)> {
         Ok(match self.method {
             NativeMethod::Baseline => baseline_forward_backward(p, &self.opts),
             NativeMethod::Chunked(_) | NativeMethod::Cce => {
@@ -168,6 +169,20 @@ impl Backend for NativeBackend {
                 (fwd, bwd)
             }
         })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        format!("native/{}", self.method.key(&self.opts))
+    }
+
+    fn forward(&self, p: &Problem) -> Result<ForwardOut> {
+        self.forward_t(p)
+    }
+
+    fn forward_backward(&self, p: &Problem) -> Result<(ForwardOut, BackwardOut)> {
+        self.forward_backward_t(p)
     }
 }
 

@@ -1,6 +1,6 @@
 //! CCE backward: blockwise logit rematerialization with the §4.3 gradient
 //! filter, optional vocabulary sorting, and **column-parallel** `dC`
-//! accumulation.
+//! accumulation, generic over the storage dtype.
 //!
 //! The gradient of the mean NLL splits into a dense indicator part and a
 //! softmax part:
@@ -22,24 +22,27 @@
 //!   blocks skip the `dE` accumulation.  Since each skipped entry
 //!   contributes `< eps/count` to any gradient element, the error is
 //!   bounded far below f32 round-off of the surviving terms (the paper's
-//!   bf16-truncation argument).
+//!   bf16-truncation argument).  A block's `dE` rows accumulate in an
+//!   **f32 staging buffer** (`N_B×D` per thread) and are narrowed into the
+//!   stored output once at block end — with `S = f32` the narrow is a
+//!   copy and the arithmetic is bit-identical to accumulating in place.
 //! * **Phase B — `dC`, column-parallel.**  Threads own disjoint spans of
-//!   *permuted vocabulary columns* and accumulate straight into a single
-//!   shared `V×D` buffer — no atomics (spans are disjoint) and no
-//!   per-thread `V×D` shards, so the backward workspace is `O(V·D)`
-//!   *total* instead of `threads·V·D`; with sorting off the permutation
-//!   is the identity and phase B writes directly into the `dC` output
-//!   (no buffer, no gather — workspace is tiles + mask only).  Sub-eps blocks are consulted from
-//!   the phase-A mask, so they skip the rematerialization *and* the
-//!   accumulation.  Spans are weighted by surviving-block counts
-//!   (`balance_spans`), which counters the head-heavy concentration that
-//!   sorting creates.
+//!   *permuted vocabulary columns*.  Each task receives the actual `&mut`
+//!   row slices of the `dC` output it owns (every row handle moves into
+//!   exactly one task through the permutation — no `V×D` side accumulator
+//!   and no unpermute gather), accumulates a small segment of columns
+//!   ([`GRAD_SEG_COLS`]`×D` f32 scratch) across all surviving row blocks,
+//!   and narrows each finished segment straight into its output rows.
+//!   Sub-eps blocks are consulted from the phase-A mask, so they skip the
+//!   rematerialization *and* the accumulation.  Spans are weighted by
+//!   surviving-block counts (`balance_spans`), which counters the
+//!   head-heavy concentration that sorting creates.
 //!
 //! The indicator terms are applied once per token in the phase that owns
-//! the output (they can never be filtered away).  Because every output
-//! element is accumulated by exactly one thread in a fixed order, `dE` and
-//! `dC` are **bitwise invariant in the thread count** (the old
-//! shard-reduction changed summation order with `--threads`).
+//! the output (they can never be filtered away), *before* the softmax
+//! contributions of the same element.  Because every output element is
+//! accumulated by exactly one thread in a fixed order, `dE` and `dC` are
+//! **bitwise invariant in the thread count**.
 //!
 //! **Vocabulary sorting** visits columns through a permutation ordered by
 //! descending label frequency, concentrating the Zipf head — the entries
@@ -49,18 +52,24 @@
 //!
 //! Both phases execute as span tasks on the persistent fork-join pool
 //! (`super::pool`) with the SIMD dispatch resolved to a [`Lanes`] token
-//! once at kernel entry — no per-call thread spawn/join and no per-`dot`
-//! dispatch probe anywhere in the pass.
+//! once at kernel entry.  With `S = BF16` every parameter read widens on
+//! load inside the SIMD routines and every gradient store narrows (RNE)
+//! from the f32 staging — accumulation is never bf16.
 //!
-//! With [`KernelOptions::kahan`] both phases accumulate through
-//! `Lanes::axpy_kahan` with per-element compensation buffers (doubling
-//! the gradient working set, as the paper's CCE-Kahan memory column
-//! records); `full_c` / `full_e` disable filtering for the corresponding
-//! phase only (the `CCE-Kahan-FullC` / `-FullE` rows).
+//! With [`KernelOptions::kahan`] both staging buffers carry per-element
+//! compensation (`Lanes::axpy_kahan*`); `full_c` / `full_e` disable
+//! filtering for the corresponding phase only (the `CCE-Kahan-FullC` /
+//! `-FullE` rows).
 
 use super::simd::{self, Lanes};
-use super::{ceil_div, pool, span_rows, BackwardOut, FilterStats, KernelOptions, Problem};
+use super::{ceil_div, pool, span_rows, BackwardOut, FilterStats, KernelOptions, Problem, Store};
 use crate::sparsity::FILTER_EPS;
+
+/// Columns per phase-B f32 staging segment.  Chosen small so the measured
+/// backward workspace stays a rounding error next to the gradient outputs
+/// (the Table-1 memory column), while still amortizing each row-block's
+/// `E` tile over 16 columns of rematerialized dots.
+pub const GRAD_SEG_COLS: usize = 16;
 
 /// Vocabulary permutation ordered by descending label frequency (stable by
 /// token id for reproducibility).  Identity when labels are uniform.
@@ -110,8 +119,8 @@ pub(crate) fn balance_spans(weights: &[u64], threads: usize) -> Vec<usize> {
 }
 
 /// Shared read-only state of one backward invocation.
-struct BwdCtx<'a> {
-    p: &'a Problem<'a>,
+struct BwdCtx<'a, S: Store> {
+    p: &'a Problem<'a, S>,
     opts: &'a KernelOptions,
     /// Column visit order (frequency-sorted or identity).
     perm: &'a [u32],
@@ -127,16 +136,20 @@ struct BwdCtx<'a> {
 
 /// Run the backward pass.  `lse` is the per-row log-sum-exp from
 /// [`super::cce_forward`].
-pub fn cce_backward(p: &Problem, opts: &KernelOptions, lse: &[f32]) -> BackwardOut {
+pub fn cce_backward<S: Store>(
+    p: &Problem<S>,
+    opts: &KernelOptions,
+    lse: &[f32],
+) -> BackwardOut<S> {
     simd::with_lanes!(lanes => backward_with(p, opts, lse, lanes))
 }
 
-fn backward_with<L: Lanes>(
-    p: &Problem,
+fn backward_with<S: Store, L: Lanes>(
+    p: &Problem<S>,
     opts: &KernelOptions,
     lse: &[f32],
     lanes: L,
-) -> BackwardOut {
+) -> BackwardOut<S> {
     assert_eq!(lse.len(), p.n, "lse length mismatch");
     let (n, d, v) = (p.n, p.d, p.v);
     let count = p.active_count();
@@ -152,14 +165,8 @@ fn backward_with<L: Lanes>(
     let n_rblocks = ceil_div(n, nb);
     let n_vblocks = ceil_div(v, vb);
 
-    let mut d_e = vec![0f32; n * d];
-    let mut d_c = vec![0f32; v * d];
-    // The shared dC accumulator, laid out in *permuted* column order so
-    // phase-B threads own contiguous disjoint slices.  With sorting off
-    // the permutation is the identity, so phase B writes straight into
-    // `d_c` — no extra buffer and no gather.
-    let identity = !opts.sort;
-    let mut dc_perm = if identity { Vec::new() } else { vec![0f32; v * d] };
+    let mut d_e = vec![S::ZERO; n * d];
+    let mut d_c = vec![S::ZERO; v * d];
     // Skip mask: 1 = every softmax entry of every active row is sub-eps.
     let mut mask = vec![0u8; n_rblocks * n_vblocks];
     let ctx = BwdCtx {
@@ -205,55 +212,60 @@ fn backward_with<L: Lanes>(
         .collect();
     let col_weights: Vec<u64> = (0..v).map(|q| surviving[q / vb]).collect();
     let bounds = balance_spans(&col_weights, opts.resolved_threads());
+    // Hand each task the `&mut` output rows it owns, in permuted order:
+    // `perm` is a bijection, so every row handle moves out of `slots`
+    // exactly once and into exactly one task — disjoint mutable access to
+    // `d_c` with no side accumulator and no gather (the old sorted path
+    // paid a second V×D buffer here).
     let b_results: Vec<usize> = {
+        let mut slots: Vec<Option<&mut [S]>> = d_c.chunks_mut(d).map(Some).collect();
+        let rows_perm: Vec<&mut [S]> = perm
+            .iter()
+            .map(|&j| slots[j as usize].take().expect("perm is a bijection"))
+            .collect();
+        drop(slots);
         let ctx = &ctx;
         let mask = &mask;
+        let mut handles = rows_perm.into_iter();
         let mut tasks = Vec::new();
-        let mut rest: &mut [f32] = if identity { &mut d_c } else { &mut dc_perm };
         for w in bounds.windows(2) {
             let (lo, hi) = (w[0], w[1]);
-            let (chunk, tail) = rest.split_at_mut((hi - lo) * d);
-            rest = tail;
+            let rows: Vec<&mut [S]> = handles.by_ref().take(hi - lo).collect();
             if hi > lo {
-                tasks.push(move || dc_phase(ctx, lo, hi, chunk, mask, lanes));
+                tasks.push(move || {
+                    let mut rows = rows;
+                    dc_phase(ctx, lo, hi, &mut rows, mask, lanes)
+                });
             }
         }
         pool::global().run(tasks)
     };
 
-    // Un-permute: every original column was accumulated by exactly one
-    // phase-B thread, so this is a straight gather (skipped entirely when
-    // the permutation is the identity — phase B already wrote `d_c`).
-    if !identity {
-        for (q, &j) in perm.iter().enumerate() {
-            let j = j as usize;
-            d_c[j * d..(j + 1) * d].copy_from_slice(&dc_perm[q * d..(q + 1) * d]);
-        }
-    }
-
     let mut stats = FilterStats::default();
-    // Working memory beyond the dE/dC outputs: the shared permuted dC
-    // accumulator (O(V·D) total — the former per-thread V×D shards are
-    // gone), the skip mask, the per-thread probability tiles, and the
-    // Kahan compensation buffers.
-    let mut workspace = dc_perm.len() * 4 + mask.len();
-    for (worker_stats, ws) in &a_results {
+    // Peak *concurrent* working memory beyond the outputs: the phases run
+    // sequentially, so it is the larger of the two.  Both hold the
+    // permutation tables and the mask; phase A adds per-thread probability
+    // tiles + f32 staging (+ Kahan comp), phase B adds the per-row output
+    // handles (fat pointers, counted honestly — they are real transient
+    // memory) and the per-thread segment scratch.
+    let common = perm.len() * 4 + inv_perm.len() * 4 + mask.len();
+    let phase_a = common + a_results.iter().map(|(_, ws)| ws).sum::<usize>();
+    let phase_b =
+        common + v * std::mem::size_of::<&mut [S]>() + b_results.iter().sum::<usize>();
+    for (worker_stats, _) in &a_results {
         stats.merge(worker_stats);
-        workspace += ws;
     }
-    for ws in &b_results {
-        workspace += ws;
-    }
-    BackwardOut { d_e, d_c, stats, workspace_bytes: workspace }
+    BackwardOut { d_e, d_c, stats, workspace_bytes: phase_a.max(phase_b) }
 }
 
 /// Phase A over rows `[row0, row0 + de_chunk.len()/d)`: indicator + softmax
-/// `dE`, filling this span's rows of the skip mask.  Returns the span's
-/// filter stats and its buffer bytes (probability tile + Kahan comp).
-fn de_phase<L: Lanes>(
-    ctx: &BwdCtx,
+/// `dE` through an f32 staging block, filling this span's rows of the skip
+/// mask.  Returns the span's filter stats and its buffer bytes
+/// (probability tile + staging + Kahan comp).
+fn de_phase<S: Store, L: Lanes>(
+    ctx: &BwdCtx<S>,
     row0: usize,
-    de_chunk: &mut [f32],
+    de_chunk: &mut [S],
     mask_chunk: &mut [u8],
     lanes: L,
 ) -> (FilterStats, usize) {
@@ -264,37 +276,53 @@ fn de_phase<L: Lanes>(
     let (nb, vb) = (ctx.nb, ctx.vb);
     let rows_total = de_chunk.len() / d;
     let mut probs = vec![0f32; nb * vb];
+    // f32 staging for one row-block of dE: a row's entire vocab sweep
+    // (indicator first, then every surviving tile in j order) accumulates
+    // here and is narrowed into the stored output once per block.
+    let mut acc = vec![0f32; nb * d];
     let mut comp = if ctx.opts.kahan {
-        vec![0f32; de_chunk.len()]
+        vec![0f32; nb * d]
     } else {
         Vec::new()
     };
     let mut stats = FilterStats::default();
 
-    // Indicator part: dE_i -= c_{x_i} / count.
-    for r in 0..rows_total {
-        let t = p.x[row0 + r];
-        if t < 0 {
-            continue;
-        }
-        let c_row = &p.c[t as usize * d..(t as usize + 1) * d];
-        let de_row = &mut de_chunk[r * d..(r + 1) * d];
-        if ctx.opts.kahan {
-            lanes.axpy_kahan(de_row, &mut comp[r * d..(r + 1) * d], -ctx.inv_count, c_row);
-        } else {
-            lanes.axpy(de_row, -ctx.inv_count, c_row);
-        }
-    }
-
-    // Softmax part, blockwise.
     let mut block_start = 0;
     while block_start < rows_total {
         let rows = nb.min(rows_total - block_start);
+        acc[..rows * d].fill(0.0);
+        if ctx.opts.kahan {
+            comp[..rows * d].fill(0.0);
+        }
+
+        // Indicator part: dE_i -= c_{x_i} / count.
+        for r in 0..rows {
+            let t = p.x[row0 + block_start + r];
+            if t < 0 {
+                continue;
+            }
+            let c_row = &p.c[t as usize * d..(t as usize + 1) * d];
+            let acc_row = &mut acc[r * d..(r + 1) * d];
+            if ctx.opts.kahan {
+                S::lanes_axpy_kahan_acc(
+                    lanes,
+                    acc_row,
+                    &mut comp[r * d..(r + 1) * d],
+                    -ctx.inv_count,
+                    c_row,
+                );
+            } else {
+                S::lanes_axpy_acc(lanes, acc_row, -ctx.inv_count, c_row);
+            }
+        }
+
+        // Softmax part, blockwise over the vocabulary.
         let mut j0 = 0;
         let mut vb_idx = 0;
         while j0 < v {
             let cols = vb.min(v - j0);
-            // Rematerialize the block's logits as probabilities (SIMD dot).
+            // Rematerialize the block's logits as probabilities (SIMD dot,
+            // widen-on-load for bf16 storage).
             let mut sig = 0u64;
             for r in 0..rows {
                 let i = row0 + block_start + r;
@@ -307,7 +335,7 @@ fn de_phase<L: Lanes>(
                 let row_lse = ctx.lse[i];
                 for (jj, out) in p_row.iter_mut().enumerate() {
                     let j = ctx.perm[j0 + jj] as usize;
-                    let z = lanes.dot(e_row, &p.c[j * d..(j + 1) * d]);
+                    let z = S::lanes_dot(lanes, e_row, &p.c[j * d..(j + 1) * d]);
                     let prob = (z - row_lse).exp();
                     *out = prob;
                     sig += (prob >= eps) as u64;
@@ -325,137 +353,174 @@ fn de_phase<L: Lanes>(
                     continue;
                 }
             }
-            // dE accumulation: de_row += Σ_jj p·c_perm[jj] / count.
+            // dE accumulation: acc_row += Σ_jj p·c_perm[jj] / count.
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 if p.x[i] < 0 {
                     continue;
                 }
-                let out_row = block_start + r;
-                let de_row = &mut de_chunk[out_row * d..(out_row + 1) * d];
                 for jj in 0..cols {
                     let g = probs[r * cols + jj] * ctx.inv_count;
                     let j = ctx.perm[j0 + jj] as usize;
                     let c_row = &p.c[j * d..(j + 1) * d];
+                    let acc_row = &mut acc[r * d..(r + 1) * d];
                     if ctx.opts.kahan {
-                        lanes.axpy_kahan(
-                            de_row,
-                            &mut comp[out_row * d..(out_row + 1) * d],
+                        S::lanes_axpy_kahan_acc(
+                            lanes,
+                            acc_row,
+                            &mut comp[r * d..(r + 1) * d],
                             g,
                             c_row,
                         );
                     } else {
-                        lanes.axpy(de_row, g, c_row);
+                        S::lanes_axpy_acc(lanes, acc_row, g, c_row);
                     }
                 }
             }
             j0 += cols;
             vb_idx += 1;
         }
+        // Narrow the finished block into the stored output (copy for f32).
+        for r in 0..rows {
+            let out_row = block_start + r;
+            S::narrow_into(&mut de_chunk[out_row * d..(out_row + 1) * d], &acc[r * d..(r + 1) * d]);
+        }
         block_start += rows;
     }
-    (stats, (probs.len() + comp.len()) * 4)
+    (stats, (probs.len() + acc.len() + comp.len()) * 4)
 }
 
 /// Phase B over permuted vocabulary columns `[col_lo, col_hi)` (any
 /// contiguous range — spans need not align to `V_B` blocks): indicator +
-/// softmax `dC`, accumulated directly into this thread's disjoint slice of
-/// the shared permuted accumulator.  Skipped blocks (per the phase-A mask)
-/// are never rematerialized.  Returns the buffer bytes (Kahan comp only —
-/// this phase streams logits without a tile buffer).
-fn dc_phase<L: Lanes>(
-    ctx: &BwdCtx,
+/// softmax `dC`, accumulated in an f32 segment scratch
+/// ([`GRAD_SEG_COLS`]`×D`) across all surviving row blocks, then narrowed
+/// straight into `rows[q - col_lo]` — the task's own `&mut` slices of the
+/// `dC` output.  Skipped blocks (per the phase-A mask) are never
+/// rematerialized.  The block loop sits *outside* the column loop within
+/// each segment, so a row-block's `E` tile stays cache-resident across the
+/// segment's columns; each column still receives its contributions in
+/// blocks-ascending, rows-ascending order, so `dC` is bitwise identical to
+/// the column-outer nest and bitwise thread-count invariant.  Returns the
+/// span's buffer bytes (segment scratch + Kahan comp + the sorted
+/// indicator-visit list).
+fn dc_phase<S: Store, L: Lanes>(
+    ctx: &BwdCtx<S>,
     col_lo: usize,
     col_hi: usize,
-    dc_chunk: &mut [f32],
+    rows: &mut [&mut [S]],
     mask: &[u8],
     lanes: L,
 ) -> usize {
     let p = ctx.p;
     let (n, d) = (p.n, p.d);
     let (nb, vb) = (ctx.nb, ctx.vb);
-    let col0 = col_lo;
-    let cols_owned = dc_chunk.len() / d;
+    let seg_w = GRAD_SEG_COLS.min(col_hi - col_lo).max(1);
+    let mut acc = vec![0f32; seg_w * d];
     let mut comp = if ctx.opts.kahan {
-        vec![0f32; dc_chunk.len()]
+        vec![0f32; seg_w * d]
     } else {
         Vec::new()
     };
-
-    // Indicator part: dC_{x_i} -= e_i / count for targets this span owns.
+    // Indicator visits owned by this span, gathered in ONE O(N) scan and
+    // sorted by (permuted column, token position): segments then drain a
+    // cursor instead of rescanning all N targets per segment (which would
+    // cost O(N·V/GRAD_SEG_COLS) — unskippable by the filter).  Sorting by
+    // (q, i) keeps each column's contributions in ascending-i order — the
+    // sequential accumulation order, so bitwise behavior is unchanged.
+    let mut targets: Vec<(u32, u32)> = Vec::new();
     for i in 0..n {
         let t = p.x[i];
         if t < 0 {
             continue;
         }
         let q = ctx.inv_perm[t as usize] as usize;
-        if q < col0 || q >= col0 + cols_owned {
-            continue;
-        }
-        let e_row = &p.e[i * d..(i + 1) * d];
-        let dc_row = &mut dc_chunk[(q - col0) * d..(q - col0 + 1) * d];
-        if ctx.opts.kahan {
-            lanes.axpy_kahan(
-                dc_row,
-                &mut comp[(q - col0) * d..(q - col0 + 1) * d],
-                -ctx.inv_count,
-                e_row,
-            );
-        } else {
-            lanes.axpy(dc_row, -ctx.inv_count, e_row);
+        if q >= col_lo && q < col_hi {
+            targets.push((q as u32, i as u32));
         }
     }
+    targets.sort_unstable();
+    let mut cursor = 0usize;
 
-    // Softmax part: stream surviving row blocks with the block loop
-    // *outside* the column loop, so the row-block's E tile (nb×D) stays
-    // cache-resident across every column this span owns instead of
-    // re-streaming all of E once per column.  Each column still receives
-    // its contributions in blocks-ascending, rows-ascending order, so dC
-    // stays bitwise identical to the column-outer nest (and bitwise
-    // thread-count invariant even though span boundaries move with
-    // `--threads`).  `q0..q1` walks the span one V_B-block-aligned
-    // segment at a time (a span may start or end mid-block).
     let mut q0 = col_lo;
     while q0 < col_hi {
+        // One segment: at most GRAD_SEG_COLS columns, never crossing a
+        // V_B block boundary (the mask is per block).
         let vb_idx = q0 / vb;
-        let q1 = ((vb_idx + 1) * vb).min(col_hi);
+        let q1 = (q0 + seg_w).min((vb_idx + 1) * vb).min(col_hi);
+        let cols = q1 - q0;
+        acc[..cols * d].fill(0.0);
+        if ctx.opts.kahan {
+            comp[..cols * d].fill(0.0);
+        }
+
+        // Indicator part: dC_{x_i} -= e_i / count for targets in this
+        // segment, applied before any softmax contribution.  Segments
+        // walk [col_lo, col_hi) in ascending q, so the presorted cursor
+        // drains each segment's targets exactly once.
+        while cursor < targets.len() && (targets[cursor].0 as usize) < q1 {
+            let (q, i) = targets[cursor];
+            cursor += 1;
+            let (q, i) = (q as usize, i as usize);
+            let e_row = &p.e[i * d..(i + 1) * d];
+            let acc_col = &mut acc[(q - q0) * d..(q - q0 + 1) * d];
+            if ctx.opts.kahan {
+                S::lanes_axpy_kahan_acc(
+                    lanes,
+                    acc_col,
+                    &mut comp[(q - q0) * d..(q - q0 + 1) * d],
+                    -ctx.inv_count,
+                    e_row,
+                );
+            } else {
+                S::lanes_axpy_acc(lanes, acc_col, -ctx.inv_count, e_row);
+            }
+        }
+
+        // Softmax part: stream surviving row blocks, block loop outside
+        // the segment's column loop.
         let mut block_start = 0;
         while block_start < n {
-            let rows = nb.min(n - block_start);
+            let brows = nb.min(n - block_start);
             let rb = block_start / nb;
             if ctx.opts.filter && !ctx.opts.full_c && mask[rb * ctx.n_vblocks + vb_idx] != 0 {
-                block_start += rows;
+                block_start += brows;
                 continue;
             }
             for q in q0..q1 {
                 let j = ctx.perm[q] as usize;
                 let c_row = &p.c[j * d..(j + 1) * d];
-                let dc_row = &mut dc_chunk[(q - col0) * d..(q - col0 + 1) * d];
-                for r in 0..rows {
+                for r in 0..brows {
                     let i = block_start + r;
                     if p.x[i] < 0 {
                         continue;
                     }
                     let e_row = &p.e[i * d..(i + 1) * d];
-                    let z = lanes.dot(e_row, c_row);
+                    let z = S::lanes_dot(lanes, e_row, c_row);
                     let g = (z - ctx.lse[i]).exp() * ctx.inv_count;
+                    let acc_col = &mut acc[(q - q0) * d..(q - q0 + 1) * d];
                     if ctx.opts.kahan {
-                        lanes.axpy_kahan(
-                            dc_row,
-                            &mut comp[(q - col0) * d..(q - col0 + 1) * d],
+                        S::lanes_axpy_kahan_acc(
+                            lanes,
+                            acc_col,
+                            &mut comp[(q - q0) * d..(q - q0 + 1) * d],
                             g,
                             e_row,
                         );
                     } else {
-                        lanes.axpy(dc_row, g, e_row);
+                        S::lanes_axpy_acc(lanes, acc_col, g, e_row);
                     }
                 }
             }
-            block_start += rows;
+            block_start += brows;
+        }
+
+        // Narrow the finished segment into the owned output rows.
+        for q in q0..q1 {
+            S::narrow_into(&mut rows[q - col_lo], &acc[(q - q0) * d..(q - q0 + 1) * d]);
         }
         q0 = q1;
     }
-    comp.len() * 4
+    (acc.len() + comp.len()) * 4 + targets.len() * 8
 }
 
 #[cfg(test)]
@@ -515,8 +580,8 @@ mod tests {
         let kahan = cce_backward(&p, &ok, &fwd.lse);
         assert!(max_abs_diff(&plain.d_e, &kahan.d_e) < 1e-5);
         assert!(max_abs_diff(&plain.d_c, &kahan.d_c) < 1e-5);
-        // Compensation buffers are accounted: ~double the gradient-sized
-        // working set on top of the shared accumulator.
+        // Compensation buffers ride on the staging blocks and are
+        // accounted in the workspace.
         assert!(kahan.workspace_bytes > plain.workspace_bytes);
     }
 
@@ -680,5 +745,50 @@ mod tests {
         // Both runs compute the same gradients despite different skip sets.
         assert!(max_abs_diff(&sorted.d_e, &unsorted.d_e) < 1e-3);
         assert!(max_abs_diff(&sorted.d_c, &unsorted.d_c) < 1e-3);
+    }
+
+    #[test]
+    fn bf16_backward_tracks_f32_within_storage_rounding() {
+        // The same problem narrowed to bf16 storage must give gradients
+        // within the storage-rounding envelope of the f32 run: inputs are
+        // rounded once (2^-9 relative) and outputs once more on store.
+        use crate::exec::BF16;
+        let mut rng = Rng::new(0xBF);
+        let (n, d, v) = (32, 16, 96);
+        let (e, c, x) = random_problem(&mut rng, n, d, v, 0.15);
+        let o = opts(true, true);
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let fwd = cce_forward(&p, &o);
+        let f32_bwd = cce_backward(&p, &o, &fwd.lse);
+
+        let eb: Vec<BF16> = e.iter().map(|&z| BF16::from_f32(z)).collect();
+        let cb: Vec<BF16> = c.iter().map(|&z| BF16::from_f32(z)).collect();
+        let pb = Problem::new(&eb, &cb, &x, n, d, v).unwrap();
+        let fwd_b = cce_forward(&pb, &o);
+        let bf_bwd = cce_backward(&pb, &o, &fwd_b.lse);
+        assert!(
+            (fwd.loss - fwd_b.loss).abs() < 0.01 * fwd.loss.abs().max(1.0),
+            "bf16 loss {} vs f32 {}",
+            fwd_b.loss,
+            fwd.loss
+        );
+        let scale_e = f32_bwd.d_e.iter().fold(0.0f32, |m, &g| m.max(g.abs()));
+        let scale_c = f32_bwd.d_c.iter().fold(0.0f32, |m, &g| m.max(g.abs()));
+        let diff_e = f32_bwd
+            .d_e
+            .iter()
+            .zip(&bf_bwd.d_e)
+            .map(|(a, b)| (a - b.to_f32()).abs())
+            .fold(0.0f32, f32::max);
+        let diff_c = f32_bwd
+            .d_c
+            .iter()
+            .zip(&bf_bwd.d_c)
+            .map(|(a, b)| (a - b.to_f32()).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff_e <= 0.02 * scale_e + 1e-5, "d_e drift {diff_e} (scale {scale_e})");
+        assert!(diff_c <= 0.02 * scale_c + 1e-5, "d_c drift {diff_c} (scale {scale_c})");
+        // Output gradients really are half-width.
+        assert_eq!(std::mem::size_of_val(&bf_bwd.d_e[0]), 2);
     }
 }

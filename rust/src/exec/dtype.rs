@@ -1,0 +1,484 @@
+//! Storage dtypes for parameters, activations, and gradients: a
+//! dependency-free software `bfloat16` and the [`Store`] trait the native
+//! kernels are generic over.
+//!
+//! The paper's headline memory numbers are measured under **bf16 mixed
+//! precision**: parameters, activations, and gradients are *stored* in
+//! bf16 (2 bytes) while every accumulation happens in f32/f64.  This
+//! module gives the repo the same storage split:
+//!
+//! * [`BF16`] — IEEE bfloat16 as a `u16` bit pattern: the top 16 bits of
+//!   an f32.  Widening ([`BF16::to_f32`]) is exact (a bit shift);
+//!   narrowing ([`BF16::from_f32`]) rounds to nearest, ties to even, and
+//!   is correct for subnormals (the encoding is linear across the
+//!   f32→bf16 truncation, so carry propagation does the right thing),
+//!   infinities (representable exactly, and RNE overflow rounds to
+//!   infinity as IEEE requires), and NaN (quieted, sign preserved, never
+//!   collapsed to infinity).
+//! * [`Store`] — the element trait `Problem`/`BackwardOut` and the
+//!   kernels are generic over.  Its `lanes_*` hooks route each hot-loop
+//!   operation to the matching SIMD routine (widen-on-load fused into
+//!   `dot`/`axpy` — the u16→f32 unpack happens in registers, never as a
+//!   materialized f32 copy of the operand), so the bf16 path stays
+//!   vectorized.  The hooks take a `Lanes` token that is crate-private,
+//!   which seals the trait: only `f32` and [`BF16`] implement it.
+//! * [`StoreDtype`] — the runtime tag (`--dtype f32|bf16`) the CLI,
+//!   checkpoints, and bench metadata carry.
+//! * [`ParamBuf`] — a dtype-tagged parameter buffer (the trainer's
+//!   embedding/classifier tables and the serve engine's weights), so the
+//!   coordination layer stays enum-dispatched while the kernels
+//!   monomorphize.
+//!
+//! Accumulation is **never** done in bf16: the kernels stage partial sums
+//! in f32 scratch (see `exec::backward`) and narrow once on store, which
+//! is both the paper's setting and the only numerically sane option — a
+//! bf16 accumulator truncates any addend below ~2^-8 of the running sum.
+
+use std::borrow::Cow;
+
+use anyhow::{bail, Result};
+
+use super::simd::Lanes;
+
+// ------------------------------------------------------------------- BF16
+
+/// IEEE bfloat16: sign (1) + exponent (8) + mantissa (7), stored as the
+/// raw bit pattern.  Same exponent range as f32, so no overflow/underflow
+/// surprises on conversion — only mantissa rounding.
+#[repr(transparent)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BF16(pub u16);
+
+impl BF16 {
+    pub const ZERO: BF16 = BF16(0);
+
+    /// Narrow an f32 with round-to-nearest-even.
+    ///
+    /// The bf16 encoding is the top half of the f32 encoding, so RNE is
+    /// one add: `bits + 0x7FFF + lsb(upper)` rounds the low 16 bits away
+    /// (the carry walks into the exponent exactly when rounding crosses a
+    /// binade — or reaches infinity from the top of the finite range,
+    /// which is the IEEE-correct overflow result).  NaNs are handled
+    /// first: blind rounding could carry a small NaN payload up to the
+    /// infinity encoding, so they are truncated and quieted instead.
+    #[inline]
+    pub fn from_f32(x: f32) -> BF16 {
+        let bits = x.to_bits();
+        if (bits & 0x7FFF_FFFF) > 0x7F80_0000 {
+            // NaN: keep the sign, force a quiet payload bit.
+            return BF16(((bits >> 16) as u16) | 0x0040);
+        }
+        let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+        BF16((rounded >> 16) as u16)
+    }
+
+    /// Widen to f32 — exact for every bf16 value (subnormals, infinities,
+    /// and NaNs included): the bit pattern is shifted into the f32 slot.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+// ------------------------------------------------------------- StoreDtype
+
+/// Runtime storage-dtype tag: what `--dtype` selects, what checkpoints
+/// record per tensor, and what the BENCH metadata stamps so perf/memory
+/// baselines only compare like with like.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreDtype {
+    F32,
+    Bf16,
+}
+
+impl StoreDtype {
+    pub fn parse(s: &str) -> Result<StoreDtype> {
+        Ok(match s {
+            "f32" | "float32" => StoreDtype::F32,
+            "bf16" | "bfloat16" => StoreDtype::Bf16,
+            other => bail!("unknown dtype {other:?} (f32|bf16)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreDtype::F32 => "f32",
+            StoreDtype::Bf16 => "bf16",
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            StoreDtype::F32 => 4,
+            StoreDtype::Bf16 => 2,
+        }
+    }
+}
+
+// ------------------------------------------------------------------ Store
+
+/// Element type of parameter / activation / gradient storage.  The native
+/// kernels are generic over this; accumulation stays f32/f64 regardless.
+///
+/// Sealed: the `lanes_*` hooks name the crate-private SIMD token, so only
+/// the two in-crate implementations (`f32`, [`BF16`]) can exist — which is
+/// what lets every hook be `#[inline]`-trivial and the kernels
+/// monomorphize to exactly the old f32 code when `S = f32` (bitwise
+/// identical, including the FMA/rounding trees).
+pub trait Store: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static {
+    const ZERO: Self;
+    const BYTES: usize;
+    const DTYPE: StoreDtype;
+
+    fn from_f32(x: f32) -> Self;
+    fn to_f32(self) -> f32;
+
+    /// `Σ a[i]·b[i]` with both operands widened on load.
+    fn lanes_dot<L: Lanes>(lanes: L, a: &[Self], b: &[Self]) -> f32;
+    /// `Σ a[i]·b[i]` with only `b` widened (f32 activations × stored
+    /// classifier — the inference kernels' shape).
+    fn lanes_dot_mixed<L: Lanes>(lanes: L, a: &[f32], b: &[Self]) -> f32;
+    /// `y[i] += a·widen(x[i])` into an f32 accumulator.
+    fn lanes_axpy_acc<L: Lanes>(lanes: L, y: &mut [f32], a: f32, x: &[Self]);
+    /// Kahan-compensated [`Store::lanes_axpy_acc`] (compensation in `c`).
+    fn lanes_axpy_kahan_acc<L: Lanes>(lanes: L, y: &mut [f32], c: &mut [f32], a: f32, x: &[Self]);
+    /// `y[i] += widen(x[i])` (the bag-of-context reduction).
+    fn lanes_add_acc<L: Lanes>(lanes: L, y: &mut [f32], x: &[Self]);
+    /// `y[i] = narrow(widen(y[i]) + a·x[i])` — the SGD update on stored
+    /// parameters (f32 math, one narrow on store).
+    fn lanes_axpy_store<L: Lanes>(lanes: L, y: &mut [Self], a: f32, x: &[f32]);
+    /// [`Store::lanes_axpy_store`] with the gradient *also* in storage
+    /// dtype (widen-on-load) — the classifier update consumes `dC`
+    /// directly, so no widened copy of a gradient ever exists.
+    fn lanes_axpy_store_s<L: Lanes>(lanes: L, y: &mut [Self], a: f32, x: &[Self]);
+
+    /// Narrow `src` into `dst` element-wise (RNE; identity for f32).
+    fn narrow_into(dst: &mut [Self], src: &[f32]);
+    /// Widen `src` into `dst` element-wise (exact).
+    fn widen_into(dst: &mut [f32], src: &[Self]);
+
+    /// Narrowed view: borrows for f32, allocates for bf16 — how f32
+    /// activations take the storage dtype without a copy on the f32 path.
+    fn narrow_cow(v: &[f32]) -> Cow<'_, [Self]>;
+
+    fn widen_vec(v: &[Self]) -> Vec<f32> {
+        v.iter().map(|&x| x.to_f32()).collect()
+    }
+
+    fn narrow_vec(v: &[f32]) -> Vec<Self> {
+        v.iter().map(|&x| Self::from_f32(x)).collect()
+    }
+}
+
+impl Store for f32 {
+    const ZERO: f32 = 0.0;
+    const BYTES: usize = 4;
+    const DTYPE: StoreDtype = StoreDtype::F32;
+
+    #[inline]
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+
+    #[inline]
+    fn lanes_dot<L: Lanes>(lanes: L, a: &[f32], b: &[f32]) -> f32 {
+        lanes.dot(a, b)
+    }
+
+    #[inline]
+    fn lanes_dot_mixed<L: Lanes>(lanes: L, a: &[f32], b: &[f32]) -> f32 {
+        lanes.dot(a, b)
+    }
+
+    #[inline]
+    fn lanes_axpy_acc<L: Lanes>(lanes: L, y: &mut [f32], a: f32, x: &[f32]) {
+        lanes.axpy(y, a, x);
+    }
+
+    #[inline]
+    fn lanes_axpy_kahan_acc<L: Lanes>(lanes: L, y: &mut [f32], c: &mut [f32], a: f32, x: &[f32]) {
+        lanes.axpy_kahan(y, c, a, x);
+    }
+
+    #[inline]
+    fn lanes_add_acc<L: Lanes>(lanes: L, y: &mut [f32], x: &[f32]) {
+        lanes.add_assign(y, x);
+    }
+
+    #[inline]
+    fn lanes_axpy_store<L: Lanes>(lanes: L, y: &mut [f32], a: f32, x: &[f32]) {
+        lanes.axpy(y, a, x);
+    }
+
+    #[inline]
+    fn lanes_axpy_store_s<L: Lanes>(lanes: L, y: &mut [f32], a: f32, x: &[f32]) {
+        lanes.axpy(y, a, x);
+    }
+
+    #[inline]
+    fn narrow_into(dst: &mut [f32], src: &[f32]) {
+        dst.copy_from_slice(src);
+    }
+
+    #[inline]
+    fn widen_into(dst: &mut [f32], src: &[f32]) {
+        dst.copy_from_slice(src);
+    }
+
+    fn narrow_cow(v: &[f32]) -> Cow<'_, [f32]> {
+        Cow::Borrowed(v)
+    }
+}
+
+impl Store for BF16 {
+    const ZERO: BF16 = BF16::ZERO;
+    const BYTES: usize = 2;
+    const DTYPE: StoreDtype = StoreDtype::Bf16;
+
+    #[inline]
+    fn from_f32(x: f32) -> BF16 {
+        BF16::from_f32(x)
+    }
+
+    #[inline]
+    fn to_f32(self) -> f32 {
+        BF16::to_f32(self)
+    }
+
+    #[inline]
+    fn lanes_dot<L: Lanes>(lanes: L, a: &[BF16], b: &[BF16]) -> f32 {
+        lanes.dot_bf16(a, b)
+    }
+
+    #[inline]
+    fn lanes_dot_mixed<L: Lanes>(lanes: L, a: &[f32], b: &[BF16]) -> f32 {
+        lanes.dot_f32_bf16(a, b)
+    }
+
+    #[inline]
+    fn lanes_axpy_acc<L: Lanes>(lanes: L, y: &mut [f32], a: f32, x: &[BF16]) {
+        lanes.axpy_bf16(y, a, x);
+    }
+
+    #[inline]
+    fn lanes_axpy_kahan_acc<L: Lanes>(lanes: L, y: &mut [f32], c: &mut [f32], a: f32, x: &[BF16]) {
+        lanes.axpy_kahan_bf16(y, c, a, x);
+    }
+
+    #[inline]
+    fn lanes_add_acc<L: Lanes>(lanes: L, y: &mut [f32], x: &[BF16]) {
+        lanes.axpy_bf16(y, 1.0, x);
+    }
+
+    #[inline]
+    fn lanes_axpy_store<L: Lanes>(_lanes: L, y: &mut [BF16], a: f32, x: &[f32]) {
+        // Cold path (one pass per optimizer step): widen, f32 FMA-free
+        // update, RNE narrow.  Not worth an intrinsic routine.
+        for (p, &g) in y.iter_mut().zip(x) {
+            *p = BF16::from_f32(p.to_f32() + a * g);
+        }
+    }
+
+    #[inline]
+    fn lanes_axpy_store_s<L: Lanes>(_lanes: L, y: &mut [BF16], a: f32, x: &[BF16]) {
+        for (p, &g) in y.iter_mut().zip(x) {
+            *p = BF16::from_f32(p.to_f32() + a * g.to_f32());
+        }
+    }
+
+    #[inline]
+    fn narrow_into(dst: &mut [BF16], src: &[f32]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = BF16::from_f32(s);
+        }
+    }
+
+    #[inline]
+    fn widen_into(dst: &mut [f32], src: &[BF16]) {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s.to_f32();
+        }
+    }
+
+    fn narrow_cow(v: &[f32]) -> Cow<'_, [BF16]> {
+        Cow::Owned(Self::narrow_vec(v))
+    }
+}
+
+// --------------------------------------------------------------- ParamBuf
+
+/// A dtype-tagged parameter buffer: the coordination layer (trainer,
+/// serving engine, checkpoints) matches on this once per operation and
+/// calls into the monomorphized generic kernels — enums at the boundary,
+/// generics in the hot loops.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamBuf {
+    F32(Vec<f32>),
+    Bf16(Vec<BF16>),
+}
+
+impl ParamBuf {
+    pub fn from_f32_vec(v: Vec<f32>, dtype: StoreDtype) -> ParamBuf {
+        match dtype {
+            StoreDtype::F32 => ParamBuf::F32(v),
+            StoreDtype::Bf16 => ParamBuf::Bf16(BF16::narrow_vec(&v)),
+        }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match self {
+            ParamBuf::F32(v) => v.clone(),
+            ParamBuf::Bf16(v) => BF16::widen_vec(v),
+        }
+    }
+
+    /// Convert to `dtype` (clone when already there; up/down-convert
+    /// otherwise — the checkpoint-load path).
+    pub fn to_dtype(&self, dtype: StoreDtype) -> ParamBuf {
+        match (self, dtype) {
+            (ParamBuf::F32(v), StoreDtype::F32) => ParamBuf::F32(v.clone()),
+            (ParamBuf::Bf16(v), StoreDtype::Bf16) => ParamBuf::Bf16(v.clone()),
+            (_, dtype) => ParamBuf::from_f32_vec(self.to_f32_vec(), dtype),
+        }
+    }
+
+    pub fn dtype(&self) -> StoreDtype {
+        match self {
+            ParamBuf::F32(_) => StoreDtype::F32,
+            ParamBuf::Bf16(_) => StoreDtype::Bf16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ParamBuf::F32(v) => v.len(),
+            ParamBuf::Bf16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage footprint in bytes — the *measured* parameter memory.
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(x: f32) -> f32 {
+        BF16::from_f32(x).to_f32()
+    }
+
+    #[test]
+    fn widen_narrow_roundtrip_is_identity_for_all_bf16_values() {
+        // Every non-NaN bf16 bit pattern survives widen -> narrow exactly
+        // (widening is exact, and an exact value rounds to itself); NaNs
+        // stay NaNs with the sign preserved.
+        for bits in 0..=u16::MAX {
+            let b = BF16(bits);
+            let wide = b.to_f32();
+            let back = BF16::from_f32(wide);
+            if wide.is_nan() {
+                assert!(back.to_f32().is_nan(), "{bits:04x} lost NaN-ness");
+                assert_eq!(back.0 >> 15, bits >> 15, "{bits:04x} lost NaN sign");
+            } else {
+                assert_eq!(back.0, bits, "{bits:04x} changed under roundtrip");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_rounds_to_nearest_even() {
+        // 1.0 has bits 0x3F80_0000; the tie point of its bf16 ulp is at
+        // low-half 0x8000.  Upper lsb 0 => tie rounds DOWN (to even)...
+        assert_eq!(BF16::from_f32(f32::from_bits(0x3F80_8000)).0, 0x3F80);
+        // ...just above the tie rounds up...
+        assert_eq!(BF16::from_f32(f32::from_bits(0x3F80_8001)).0, 0x3F81);
+        // ...and with upper lsb 1 the tie rounds UP (to even).
+        assert_eq!(BF16::from_f32(f32::from_bits(0x3F81_8000)).0, 0x3F82);
+        // Just below a tie always truncates.
+        assert_eq!(BF16::from_f32(f32::from_bits(0x3F81_7FFF)).0, 0x3F81);
+        // Carry across a binade: the top of the 1.x range rounds to 2.0.
+        assert_eq!(rt(1.9999999f32), 2.0);
+        // RNE error bound: |x - rt(x)| <= 2^-9 |x| for normal x.
+        for &x in &[1.0f32, -3.14159, 1234.5678, 1e-3, -2.5e7, 0.3333] {
+            let err = (x - rt(x)).abs();
+            assert!(err <= x.abs() * 3.9e-3, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn narrow_handles_specials_and_subnormals() {
+        assert_eq!(rt(f32::INFINITY), f32::INFINITY);
+        assert_eq!(rt(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(rt(f32::NAN).is_nan());
+        // A negative NaN stays a NaN (blind bit-rounding could carry its
+        // payload into the -inf encoding).
+        assert!(rt(f32::from_bits(0xFF80_0001)).is_nan());
+        assert_eq!(rt(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(rt(-0.0).to_bits(), (-0.0f32).to_bits());
+        // f32 values beyond bf16's last finite step overflow to infinity
+        // (IEEE RNE overflow), including f32::MAX.
+        assert_eq!(rt(f32::MAX), f32::INFINITY);
+        assert_eq!(rt(f32::MIN), f32::NEG_INFINITY);
+        // Subnormals round within the subnormal range, not to garbage:
+        // result must be one of the two neighbouring bf16 values.
+        for &x in &[1e-40f32, 3.7e-39, f32::MIN_POSITIVE / 2.0, 1e-44] {
+            let lo = f32::from_bits((x.to_bits() >> 16) << 16);
+            let hi = f32::from_bits((((x.to_bits() >> 16) + 1) << 16).min(0x7F80_0000));
+            let got = rt(x);
+            assert!(got == lo || got == hi, "x={x:e} got={got:e} lo={lo:e} hi={hi:e}");
+            assert!((got - x).abs() <= (hi - lo), "x={x:e} err too large");
+        }
+    }
+
+    #[test]
+    fn narrow_is_monotonic() {
+        // RNE is monotonic; spot-check across sign, magnitude, binades.
+        let mut rng = crate::util::rng::Rng::new(0xBF16);
+        let mut vals: Vec<f32> = (0..4000).map(|_| (rng.normal() * 10.0) as f32).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in vals.windows(2) {
+            assert!(rt(w[0]) <= rt(w[1]), "{} vs {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn store_dtype_parse_and_meta() {
+        assert_eq!(StoreDtype::parse("f32").unwrap(), StoreDtype::F32);
+        assert_eq!(StoreDtype::parse("bfloat16").unwrap(), StoreDtype::Bf16);
+        assert!(StoreDtype::parse("fp8").is_err());
+        assert_eq!(StoreDtype::Bf16.name(), "bf16");
+        assert_eq!(StoreDtype::Bf16.size_bytes(), 2);
+        assert_eq!(<f32 as Store>::DTYPE, StoreDtype::F32);
+        assert_eq!(<BF16 as Store>::BYTES, 2);
+    }
+
+    #[test]
+    fn param_buf_conversions() {
+        let v: Vec<f32> = vec![1.0, -2.5, 0.33333, 4096.0];
+        let f = ParamBuf::from_f32_vec(v.clone(), StoreDtype::F32);
+        let b = ParamBuf::from_f32_vec(v.clone(), StoreDtype::Bf16);
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.size_bytes(), 16);
+        assert_eq!(b.size_bytes(), 8, "bf16 params are half the footprint");
+        assert_eq!(f.to_f32_vec(), v);
+        for (orig, wide) in v.iter().zip(b.to_f32_vec()) {
+            assert!((orig - wide).abs() <= orig.abs() * 3.9e-3, "{orig} vs {wide}");
+        }
+        // bf16 -> f32 -> bf16 is lossless (widening is exact).
+        let back = b.to_dtype(StoreDtype::F32).to_dtype(StoreDtype::Bf16);
+        assert_eq!(back, b);
+        assert_eq!(b.to_dtype(StoreDtype::Bf16), b);
+    }
+}

@@ -24,21 +24,24 @@ use anyhow::{bail, Result};
 
 use super::lse::cce_forward;
 use super::simd::{self, Lanes};
-use super::{pool, span_rows, KernelOptions, Problem};
+use super::{pool, span_rows, KernelOptions, Problem, Store};
 
 /// One inference problem: hidden states `E (N×D)` against a classifier
-/// `C (V×D)` — a [`Problem`] without labels.
+/// `C (V×D)` — a [`Problem`] without labels.  The hidden states are
+/// always f32 (they are computed per decode step from the context bag);
+/// the classifier carries the checkpoint's storage dtype and is widened
+/// on load inside the SIMD dot.
 #[derive(Debug, Clone, Copy)]
-pub struct InferProblem<'a> {
+pub struct InferProblem<'a, S: Store = f32> {
     pub e: &'a [f32],
-    pub c: &'a [f32],
+    pub c: &'a [S],
     pub n: usize,
     pub d: usize,
     pub v: usize,
 }
 
-impl<'a> InferProblem<'a> {
-    pub fn new(e: &'a [f32], c: &'a [f32], n: usize, d: usize, v: usize) -> Result<Self> {
+impl<'a, S: Store> InferProblem<'a, S> {
+    pub fn new(e: &'a [f32], c: &'a [S], n: usize, d: usize, v: usize) -> Result<Self> {
         if n == 0 || d == 0 || v == 0 {
             bail!("empty inference problem: n={n} d={d} v={v}");
         }
@@ -75,14 +78,19 @@ pub struct TopKOut {
 /// V_B)` logit tile into a bounded min-heap of the `k` best candidates and
 /// the online LSE.  Ties break toward the smaller token id, so the result
 /// is deterministic across blockings and thread counts.
-pub fn topk(p: &InferProblem, opts: &KernelOptions, k: usize) -> Result<TopKOut> {
+pub fn topk<S: Store>(p: &InferProblem<S>, opts: &KernelOptions, k: usize) -> Result<TopKOut> {
     if k == 0 || k > p.v {
         bail!("top-k k={k} out of range for vocab {}", p.v);
     }
     Ok(simd::with_lanes!(lanes => topk_with(p, opts, k, lanes)))
 }
 
-fn topk_with<L: Lanes>(p: &InferProblem, opts: &KernelOptions, k: usize, lanes: L) -> TopKOut {
+fn topk_with<S: Store, L: Lanes>(
+    p: &InferProblem<S>,
+    opts: &KernelOptions,
+    k: usize,
+    lanes: L,
+) -> TopKOut {
     let n = p.n;
     let mut rows: Vec<TopKRow> = vec![TopKRow::default(); n];
     let span = span_rows(n, opts.n_block, opts.threads);
@@ -123,8 +131,8 @@ trait TileVisitor {
 /// of rows: compute each logit tile once, fold the online LSE, and hand
 /// the tile to the visitor.  Returns the bytes of tile/LSE buffers this
 /// span allocated (visitor state is accounted by the caller).
-fn tile_sweep<L: Lanes, V: TileVisitor>(
-    p: &InferProblem,
+fn tile_sweep<S: Store, L: Lanes, V: TileVisitor>(
+    p: &InferProblem<S>,
     opts: &KernelOptions,
     row0: usize,
     rows_total: usize,
@@ -154,7 +162,7 @@ fn tile_sweep<L: Lanes, V: TileVisitor>(
                 let e_row = &p.e[i * d..(i + 1) * d];
                 let z_row = &mut logits[r * cols..(r + 1) * cols];
                 for (jj, z) in z_row.iter_mut().enumerate() {
-                    *z = lanes.dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
+                    *z = S::lanes_dot_mixed(lanes, e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
                 }
             }
             for r in 0..rows {
@@ -212,8 +220,8 @@ impl TileVisitor for TopKVisitor<'_> {
     }
 }
 
-fn topk_span<L: Lanes>(
-    p: &InferProblem,
+fn topk_span<S: Store, L: Lanes>(
+    p: &InferProblem<S>,
     opts: &KernelOptions,
     k: usize,
     row0: usize,
@@ -323,8 +331,8 @@ pub struct SampleOut {
 /// The same sweep folds the *untempered* online LSE so the returned
 /// log-probability is the model's T=1 `log p(token)`, comparable across
 /// temperatures and with [`topk`] / [`score`].
-pub fn sample(
-    p: &InferProblem,
+pub fn sample<S: Store>(
+    p: &InferProblem<S>,
     opts: &KernelOptions,
     temperature: f32,
     seeds: &[u64],
@@ -338,8 +346,8 @@ pub fn sample(
     Ok(simd::with_lanes!(lanes => sample_with(p, opts, temperature, seeds, lanes)))
 }
 
-fn sample_with<L: Lanes>(
-    p: &InferProblem,
+fn sample_with<S: Store, L: Lanes>(
+    p: &InferProblem<S>,
     opts: &KernelOptions,
     temperature: f32,
     seeds: &[u64],
@@ -409,8 +417,8 @@ impl TileVisitor for SampleVisitor<'_> {
     }
 }
 
-fn sample_span<L: Lanes>(
-    p: &InferProblem,
+fn sample_span<S: Store, L: Lanes>(
+    p: &InferProblem<S>,
     opts: &KernelOptions,
     temperature: f32,
     seeds: &[u64],
@@ -470,7 +478,7 @@ pub struct ScoreOut {
 /// Teacher-forced scoring: per-token `log p(x_i) = z_{x_i} − lse_i` from
 /// one blocked forward sweep.  The mean NLL is definitionally the CCE loss,
 /// which the tests pin against [`cce_forward`].
-pub fn score(p: &Problem, opts: &KernelOptions) -> ScoreOut {
+pub fn score<S: Store>(p: &Problem<S>, opts: &KernelOptions) -> ScoreOut {
     let fwd = cce_forward(p, opts);
     let logprobs: Vec<f32> = (0..p.n)
         .map(|i| {

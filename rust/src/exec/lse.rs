@@ -26,14 +26,17 @@
 //! softmaxes whose mass hides below f32 round-off of the head.
 
 use super::simd::{self, Lanes};
-use super::{pool, span_rows, ForwardOut, KernelOptions, Problem};
+use super::{pool, span_rows, ForwardOut, KernelOptions, Problem, Store};
 
 /// Run the forward pass.  Multi-threaded over contiguous row spans.
-pub fn cce_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
+/// Generic over the storage dtype: with `S = BF16` the tile matmul widens
+/// `E`/`C` on load inside the SIMD dot; the logit tile, the LSE
+/// recurrence, and the loss reduction are f32/f64 as always.
+pub fn cce_forward<S: Store>(p: &Problem<S>, opts: &KernelOptions) -> ForwardOut {
     simd::with_lanes!(lanes => forward_with(p, opts, lanes))
 }
 
-fn forward_with<L: Lanes>(p: &Problem, opts: &KernelOptions, lanes: L) -> ForwardOut {
+fn forward_with<S: Store, L: Lanes>(p: &Problem<S>, opts: &KernelOptions, lanes: L) -> ForwardOut {
     let n = p.n;
     let mut lse = vec![0f32; n];
     let mut tgt = vec![0f32; n];
@@ -79,8 +82,8 @@ fn kahan_sum(terms: impl Iterator<Item = f64>) -> f64 {
 
 /// Process rows `[row0, row0 + lse_out.len())`; returns the bytes of block
 /// buffers this worker allocated (for the O(N_B·V_B) memory assertion).
-fn forward_span<L: Lanes>(
-    p: &Problem,
+fn forward_span<S: Store, L: Lanes>(
+    p: &Problem<S>,
     opts: &KernelOptions,
     row0: usize,
     lse_out: &mut [f32],
@@ -120,7 +123,7 @@ fn forward_span<L: Lanes>(
                 let e_row = &p.e[i * d..(i + 1) * d];
                 let z_row = &mut logits[r * cols..(r + 1) * cols];
                 for (jj, z) in z_row.iter_mut().enumerate() {
-                    *z = lanes.dot(e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
+                    *z = S::lanes_dot(lanes, e_row, &p.c[(j0 + jj) * d..(j0 + jj + 1) * d]);
                 }
             }
             // Online LSE fold + target-logit capture.

@@ -1,6 +1,8 @@
 //! Native compute backend: the paper's kernel suite as cache-blocked,
-//! multi-threaded f32 CPU kernels — no XLA, no artifacts, no external
-//! crates.
+//! multi-threaded CPU kernels — no XLA, no artifacts, no external
+//! crates.  Storage is dtype-generic ([`dtype::Store`]: f32 or software
+//! bf16 with widen-on-load / narrow-on-store); accumulation is always
+//! f32/f64.
 //!
 //! This is the "owns the hot path" counterpart to the AOT/PJRT [`crate::runtime`]:
 //!
@@ -13,17 +15,20 @@
 //!   which every softmax entry is below `2^-12`) with optional
 //!   **vocabulary sorting** by token frequency, and accumulates `dE`
 //!   (row-parallel) and `dC` (**column-parallel**: threads own disjoint
-//!   vocabulary column spans of one shared `V×D` accumulator, so the
-//!   workspace is `O(V·D)` total, not `threads·V·D`).  The indicator term
-//!   of the target column is applied separately per token, so filtering
-//!   never drops the `−1[j=y_i]` contribution.
+//!   permuted column spans of the `dC` output itself — block-local f32
+//!   staging, narrow-on-store, no gradient-sized side buffers at all).
+//!   The indicator term of the target column is applied separately per
+//!   token, so filtering never drops the `−1[j=y_i]` contribution.
 //! * [`infer`]    — the logit-free *inference* kernels built on the same
 //!   tiling: blocked top-k (bounded per-row heap + online LSE), online
 //!   Gumbel-max temperature sampling, and teacher-forced scoring — the
 //!   compute layer of [`crate::serve`].
-//! * `simd`       — the 8-lane f32 vector layer under all of the above:
+//! * `simd`       — the 8-lane vector layer under all of the above:
 //!   runtime-dispatched AVX2+FMA intrinsics with a portable autovectorized
-//!   fallback behind one trait (dot / axpy / Kahan-axpy / max).
+//!   fallback behind one trait (dot / axpy / Kahan-axpy / max, each with a
+//!   bf16 widen-on-load variant).
+//! * [`dtype`]    — the storage dtypes: software [`BF16`] and the sealed
+//!   [`Store`] trait the kernels are generic over.
 //! * [`backend`]  — the [`Backend`] trait over loss implementations, with
 //!   [`NativeBackend`] (this module) and, behind the `pjrt` feature, a
 //!   `PjrtBackend` adapter over the artifact runtime.
@@ -45,6 +50,7 @@
 
 pub mod backend;
 pub mod backward;
+pub mod dtype;
 pub mod infer;
 pub mod lse;
 pub mod pool;
@@ -54,6 +60,7 @@ pub(crate) mod simd;
 pub use backend::PjrtBackend;
 pub use backend::{Backend, NativeBackend, NativeMethod};
 pub use backward::{cce_backward, frequency_permutation};
+pub use dtype::{ParamBuf, Store, StoreDtype, BF16};
 pub use infer::{sample, score, topk, InferProblem, SampleOut, ScoreOut, TopKOut, TopKRow};
 pub use lse::cce_forward;
 pub use pool::ThreadPool;
@@ -64,48 +71,33 @@ use crate::runtime::HostTensor;
 
 /// One loss-layer problem instance: embeddings `E (N×D)`, classifier
 /// `C (V×D)`, labels `x (N)` with `-1` marking ignored tokens.
+///
+/// Generic over the storage dtype `S` of `E`/`C` (default `f32`): with
+/// `S = BF16` the kernels read half-width parameters/activations,
+/// widening on load inside the SIMD dot/axpy — accumulation stays f32/f64
+/// either way (the paper's mixed-precision setting).
 #[derive(Debug, Clone, Copy)]
-pub struct Problem<'a> {
-    pub e: &'a [f32],
-    pub c: &'a [f32],
+pub struct Problem<'a, S: Store = f32> {
+    pub e: &'a [S],
+    pub c: &'a [S],
     pub x: &'a [i32],
     pub n: usize,
     pub d: usize,
     pub v: usize,
 }
 
-impl<'a> Problem<'a> {
+impl<'a, S: Store> Problem<'a, S> {
     pub fn new(
-        e: &'a [f32],
-        c: &'a [f32],
+        e: &'a [S],
+        c: &'a [S],
         x: &'a [i32],
         n: usize,
         d: usize,
         v: usize,
-    ) -> Result<Problem<'a>> {
+    ) -> Result<Problem<'a, S>> {
         let p = Problem { e, c, x, n, d, v };
         p.validate()?;
         Ok(p)
-    }
-
-    /// Borrow a problem from `[e (N,D), c (V,D), x (N)]` host tensors — the
-    /// input layout of the loss artifacts and of `gen_loss_inputs`.
-    pub fn from_tensors(tensors: &'a [HostTensor]) -> Result<Problem<'a>> {
-        if tensors.len() != 3 {
-            bail!("expected [e, c, x] tensors, got {}", tensors.len());
-        }
-        let (et, ct, xt) = (&tensors[0], &tensors[1], &tensors[2]);
-        if et.shape.len() != 2 || ct.shape.len() != 2 {
-            bail!("e/c must be rank-2, got {:?} / {:?}", et.shape, ct.shape);
-        }
-        Problem::new(
-            et.as_f32()?,
-            ct.as_f32()?,
-            xt.as_i32()?,
-            et.shape[0],
-            et.shape[1],
-            ct.shape[0],
-        )
     }
 
     fn validate(&self) -> Result<()> {
@@ -137,6 +129,28 @@ impl<'a> Problem<'a> {
     }
 }
 
+impl<'a> Problem<'a> {
+    /// Borrow a problem from `[e (N,D), c (V,D), x (N)]` host tensors — the
+    /// input layout of the loss artifacts and of `gen_loss_inputs`.
+    pub fn from_tensors(tensors: &'a [HostTensor]) -> Result<Problem<'a>> {
+        if tensors.len() != 3 {
+            bail!("expected [e, c, x] tensors, got {}", tensors.len());
+        }
+        let (et, ct, xt) = (&tensors[0], &tensors[1], &tensors[2]);
+        if et.shape.len() != 2 || ct.shape.len() != 2 {
+            bail!("e/c must be rank-2, got {:?} / {:?}", et.shape, ct.shape);
+        }
+        Problem::new(
+            et.as_f32()?,
+            ct.as_f32()?,
+            xt.as_i32()?,
+            et.shape[0],
+            et.shape[1],
+            ct.shape[0],
+        )
+    }
+}
+
 /// Blocking / threading configuration of the native kernels.
 #[derive(Debug, Clone, Copy)]
 pub struct KernelOptions {
@@ -161,6 +175,12 @@ pub struct KernelOptions {
     /// Compute `dE` without the gradient filter even when `filter` is on
     /// (the paper's `CCE-Kahan-FullE`: the full embedding gradient).
     pub full_e: bool,
+    /// Storage dtype of parameters / activations / gradients (`--dtype
+    /// f32|bf16`).  The kernels themselves are generic over [`Store`] —
+    /// this field is the *driver-level* selection that the trainer, the
+    /// benches, and the serve engine dispatch on; accumulation is f32/f64
+    /// regardless.
+    pub dtype: StoreDtype,
 }
 
 impl Default for KernelOptions {
@@ -177,6 +197,7 @@ impl Default for KernelOptions {
             kahan: false,
             full_c: false,
             full_e: false,
+            dtype: StoreDtype::F32,
         }
     }
 }
@@ -236,18 +257,22 @@ pub struct ForwardOut {
     pub workspace_bytes: usize,
 }
 
-/// Backward-pass result.
+/// Backward-pass result.  Gradients are stored in the problem's dtype
+/// (`S = BF16` halves the output-gradient footprint — the paper's `G`
+/// lower bound at `act_bytes = 2`); every accumulation happened in f32.
 #[derive(Debug, Clone)]
-pub struct BackwardOut {
+pub struct BackwardOut<S: Store = f32> {
     /// `dE` — gradient of the mean loss wrt the embeddings (N×D).
-    pub d_e: Vec<f32>,
+    pub d_e: Vec<S>,
     /// `dC` — gradient wrt the classifier (V×D).
-    pub d_c: Vec<f32>,
+    pub d_c: Vec<S>,
     pub stats: FilterStats,
-    /// Peak working memory: the shared permuted `dC` accumulator (`O(V·D)`
-    /// total — column-parallel, no per-thread shards), the block skip
-    /// mask, per-thread probability tiles, and (Kahan) compensation
-    /// buffers.
+    /// Peak *concurrent* working memory beyond the gradient outputs: the
+    /// larger of the two phases (each holds the permutation tables + the
+    /// skip mask, plus its own per-thread staging — probability tiles and
+    /// f32 accumulation scratch for phase A; the per-row output handles
+    /// and segment scratch for phase B; Kahan compensation where enabled).
+    /// There is no `V×D` side accumulator in either phase.
     pub workspace_bytes: usize,
 }
 
@@ -300,31 +325,36 @@ pub(crate) fn span_rows(n: usize, n_block: usize, threads: usize) -> usize {
 // ---------------------------------------------------------------- baseline
 
 /// Materialized-logits reference forward (the Table-1 "Baseline" row): the
-/// full `N×V` logit matrix is allocated, which is exactly the allocation
-/// CCE removes.  Multi-threaded over row spans (through the shared
-/// [`pool`]) for a fair time comparison.
-pub fn baseline_forward(p: &Problem, opts: &KernelOptions) -> ForwardOut {
+/// full `N×V` logit matrix is allocated **in the storage dtype** — exactly
+/// the allocation CCE removes, and exactly the allocation that halves
+/// under `--dtype bf16` (the paper's mixed-precision memory column).
+/// Multi-threaded over row spans (through the shared [`pool`]) for a fair
+/// time comparison.
+pub fn baseline_forward<S: Store>(p: &Problem<S>, opts: &KernelOptions) -> ForwardOut {
     let (logits, fwd) = simd::with_lanes!(lanes => baseline_logits_and_forward(p, opts, lanes));
     drop(logits);
     fwd
 }
 
 /// Baseline forward + backward from the stored logits.
-pub fn baseline_forward_backward(p: &Problem, opts: &KernelOptions) -> (ForwardOut, BackwardOut) {
+pub fn baseline_forward_backward<S: Store>(
+    p: &Problem<S>,
+    opts: &KernelOptions,
+) -> (ForwardOut, BackwardOut<S>) {
     simd::with_lanes!(lanes => baseline_forward_backward_with(p, opts, lanes))
 }
 
-fn baseline_forward_backward_with<L: simd::Lanes>(
-    p: &Problem,
+fn baseline_forward_backward_with<S: Store, L: simd::Lanes>(
+    p: &Problem<S>,
     opts: &KernelOptions,
     lanes: L,
-) -> (ForwardOut, BackwardOut) {
+) -> (ForwardOut, BackwardOut<S>) {
     let (logits, fwd) = baseline_logits_and_forward(p, opts, lanes);
     let (n, d, v) = (p.n, p.d, p.v);
     let count = fwd.count;
     let inv_count = if count == 0 { 0.0f32 } else { 1.0 / count as f32 };
-    let mut d_e = vec![0f32; n * d];
-    let mut d_c = vec![0f32; v * d];
+    let mut d_e = vec![S::ZERO; n * d];
+    let mut d_c = vec![S::ZERO; v * d];
     let span = span_rows(n, opts.n_block, opts.threads);
     let lse = &fwd.lse;
     let shards: Vec<Vec<f32>> = {
@@ -337,6 +367,9 @@ fn baseline_forward_backward_with<L: simd::Lanes>(
                 move || {
                     let rows = de_chunk.len() / d;
                     let mut dc_local = vec![0f32; v * d];
+                    // f32 staging row for dE: accumulate the full vocab
+                    // sweep at f32, narrow once on store.
+                    let mut de_acc = vec![0f32; d];
                     for r in 0..rows {
                         let i = row0 + r;
                         if p.x[i] < 0 {
@@ -344,18 +377,19 @@ fn baseline_forward_backward_with<L: simd::Lanes>(
                         }
                         let t = p.x[i] as usize;
                         let e_row = &p.e[i * d..(i + 1) * d];
-                        let de_row = &mut de_chunk[r * d..(r + 1) * d];
+                        de_acc.fill(0.0);
                         for j in 0..v {
-                            let z = logits[i * v + j];
+                            let z = logits[i * v + j].to_f32();
                             let mut g = (z - lse[i]).exp() * inv_count;
                             if j == t {
                                 g -= inv_count;
                             }
                             let c_row = &p.c[j * d..(j + 1) * d];
                             let dc_row = &mut dc_local[j * d..(j + 1) * d];
-                            lanes.axpy(de_row, g, c_row);
-                            lanes.axpy(dc_row, g, e_row);
+                            S::lanes_axpy_acc(lanes, &mut de_acc, g, c_row);
+                            S::lanes_axpy_acc(lanes, dc_row, g, e_row);
                         }
+                        S::narrow_into(&mut de_chunk[r * d..(r + 1) * d], &de_acc);
                     }
                     dc_local
                 }
@@ -363,13 +397,16 @@ fn baseline_forward_backward_with<L: simd::Lanes>(
             .collect();
         pool::global().run(tasks)
     };
+    // Merge the f32 shards sequentially, then narrow once into the output.
     let n_shards = shards.len();
+    let mut dc_master = vec![0f32; v * d];
     for shard in shards {
-        for (acc, val) in d_c.iter_mut().zip(&shard) {
+        for (acc, val) in dc_master.iter_mut().zip(&shard) {
             *acc += *val;
         }
     }
-    let workspace = logits.len() * 4 + n_shards * v * d * 4;
+    S::narrow_into(&mut d_c, &dc_master);
+    let workspace = logits.len() * S::BYTES + (n_shards + 1) * v * d * 4 + n_shards * d * 4;
     (
         fwd,
         BackwardOut {
@@ -381,13 +418,13 @@ fn baseline_forward_backward_with<L: simd::Lanes>(
     )
 }
 
-fn baseline_logits_and_forward<L: simd::Lanes>(
-    p: &Problem,
+fn baseline_logits_and_forward<S: Store, L: simd::Lanes>(
+    p: &Problem<S>,
     opts: &KernelOptions,
     lanes: L,
-) -> (Vec<f32>, ForwardOut) {
+) -> (Vec<S>, ForwardOut) {
     let (n, d, v) = (p.n, p.d, p.v);
-    let mut logits = vec![0f32; n * v];
+    let mut logits = vec![S::ZERO; n * v];
     let mut lse = vec![0f32; n];
     let mut tgt = vec![0f32; n];
     let span = span_rows(n, opts.n_block, opts.threads);
@@ -400,18 +437,26 @@ fn baseline_logits_and_forward<L: simd::Lanes>(
             let row0 = ti * span;
             move || {
                 let rows = lse_chunk.len();
+                // f32 staging row: dots land here, the row is narrowed
+                // into the stored matrix, and the softmax reduction reads
+                // the *stored* (rounded) values so forward and backward
+                // see the same logits — mirroring a bf16 framework, and
+                // a pure copy when S = f32.
+                let mut zf = vec![0f32; v];
                 for r in 0..rows {
                     let i = row0 + r;
                     let e_row = &p.e[i * d..(i + 1) * d];
                     let z_row = &mut lchunk[r * v..(r + 1) * v];
                     for j in 0..v {
-                        z_row[j] = lanes.dot(e_row, &p.c[j * d..(j + 1) * d]);
+                        zf[j] = S::lanes_dot(lanes, e_row, &p.c[j * d..(j + 1) * d]);
                     }
-                    let m = lanes.vmax(z_row);
-                    let s: f32 = z_row.iter().map(|&z| (z - m).exp()).sum();
+                    S::narrow_into(z_row, &zf);
+                    S::widen_into(&mut zf, z_row);
+                    let m = lanes.vmax(&zf);
+                    let s: f32 = zf.iter().map(|&z| (z - m).exp()).sum();
                     lse_chunk[r] = m + s.ln();
                     if p.x[i] >= 0 {
-                        tgt_chunk[r] = z_row[p.x[i] as usize];
+                        tgt_chunk[r] = zf[p.x[i] as usize];
                     }
                 }
             }
@@ -427,7 +472,8 @@ fn baseline_logits_and_forward<L: simd::Lanes>(
         .map(|(i, _)| (lse[i] - tgt[i]) as f64)
         .sum();
     let loss = if count == 0 { 0.0 } else { loss_sum / count as f64 };
-    let workspace = logits.len() * 4 + n * 8;
+    let workers = ceil_div(n, span);
+    let workspace = logits.len() * S::BYTES + n * 8 + workers * v * 4;
     (
         logits,
         ForwardOut { loss, count, lse, target_logit: tgt, workspace_bytes: workspace },

@@ -42,10 +42,23 @@
 #[cfg(target_arch = "x86_64")]
 use std::sync::OnceLock;
 
+use super::dtype::BF16;
+
 /// The vector operations the kernels are written against.  Implementors
 /// are zero-sized capability tokens: `Copy + Send + Sync` so a resolved
 /// token threads freely into the pool's span tasks.
-pub(crate) trait Lanes: Copy + Send + Sync + 'static {
+///
+/// Declared `pub` inside a crate-private module (the sealed-trait shape):
+/// `exec::dtype::Store`'s lane hooks name it in their bounds, which keeps
+/// `Store` unimplementable outside this crate without exposing any of the
+/// dispatch machinery.
+///
+/// The `*_bf16` variants widen their bf16 operand **on load** — in
+/// registers on the AVX2 path (`u16` load → zero-extend → `<<16` →
+/// bitcast, then the same FMA pipeline as the f32 routine), element-wise
+/// in the portable path — so bf16 storage never forces a materialized f32
+/// copy of a parameter block.
+pub trait Lanes: Copy + Send + Sync + 'static {
     /// `Σ a[i]·b[i]` over the common prefix of `a` and `b`.
     fn dot(&self, a: &[f32], b: &[f32]) -> f32;
     /// `y[i] += a·x[i]` over the common prefix.
@@ -61,11 +74,21 @@ pub(crate) trait Lanes: Copy + Send + Sync + 'static {
     fn add_assign(&self, y: &mut [f32], x: &[f32]);
     /// `y[i] *= a`.
     fn scale(&self, y: &mut [f32], a: f32);
+    /// `Σ widen(a[i])·widen(b[i])` — both operands bf16, widened on load.
+    fn dot_bf16(&self, a: &[BF16], b: &[BF16]) -> f32;
+    /// `Σ a[i]·widen(b[i])` — f32 activations against bf16 storage.
+    fn dot_f32_bf16(&self, a: &[f32], b: &[BF16]) -> f32;
+    /// `y[i] += a·widen(x[i])` into an f32 accumulator.
+    fn axpy_bf16(&self, y: &mut [f32], a: f32, x: &[BF16]);
+    /// Kahan-compensated [`Lanes::axpy_bf16`].  Widening is exact and the
+    /// product uses a plain mul on every path, so this is bitwise
+    /// identical across dispatch levels (same argument as `axpy_kahan`).
+    fn axpy_kahan_bf16(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[BF16]);
 }
 
 /// 8-lane scalar fallback; the shape LLVM autovectorizes on any target.
 #[derive(Debug, Clone, Copy)]
-pub(crate) struct Portable;
+pub struct Portable;
 
 impl Lanes for Portable {
     #[inline]
@@ -159,6 +182,103 @@ impl Lanes for Portable {
             *yk *= a;
         }
     }
+
+    #[inline]
+    fn dot_bf16(&self, a: &[BF16], b: &[BF16]) -> f32 {
+        // Same two-bank / pairwise-reduction shape as `dot`, with the
+        // operands widened element-wise (exact), so the rounding tree
+        // matches the AVX2 widen-load path up to FMA.
+        let n = a.len().min(b.len());
+        let (a, b) = (&a[..n], &b[..n]);
+        let mut lo = [0f32; 8];
+        let mut hi = [0f32; 8];
+        let mut ca = a.chunks_exact(16);
+        let mut cb = b.chunks_exact(16);
+        for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+            for k in 0..8 {
+                lo[k] += xa[k].to_f32() * xb[k].to_f32();
+                hi[k] += xa[k + 8].to_f32() * xb[k + 8].to_f32();
+            }
+        }
+        let (mut ra, mut rb) = (ca.remainder(), cb.remainder());
+        if ra.len() >= 8 {
+            for k in 0..8 {
+                lo[k] += ra[k].to_f32() * rb[k].to_f32();
+            }
+            ra = &ra[8..];
+            rb = &rb[8..];
+        }
+        let mut lanes = [0f32; 8];
+        for k in 0..8 {
+            lanes[k] = lo[k] + hi[k];
+        }
+        let s0 = lanes[0] + lanes[4];
+        let s1 = lanes[1] + lanes[5];
+        let s2 = lanes[2] + lanes[6];
+        let s3 = lanes[3] + lanes[7];
+        let mut sum = (s0 + s1) + (s2 + s3);
+        for (xa, xb) in ra.iter().zip(rb) {
+            sum += xa.to_f32() * xb.to_f32();
+        }
+        sum
+    }
+
+    #[inline]
+    fn dot_f32_bf16(&self, a: &[f32], b: &[BF16]) -> f32 {
+        let n = a.len().min(b.len());
+        let (a, b) = (&a[..n], &b[..n]);
+        let mut lo = [0f32; 8];
+        let mut hi = [0f32; 8];
+        let mut ca = a.chunks_exact(16);
+        let mut cb = b.chunks_exact(16);
+        for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+            for k in 0..8 {
+                lo[k] += xa[k] * xb[k].to_f32();
+                hi[k] += xa[k + 8] * xb[k + 8].to_f32();
+            }
+        }
+        let (mut ra, mut rb) = (ca.remainder(), cb.remainder());
+        if ra.len() >= 8 {
+            for k in 0..8 {
+                lo[k] += ra[k] * rb[k].to_f32();
+            }
+            ra = &ra[8..];
+            rb = &rb[8..];
+        }
+        let mut lanes = [0f32; 8];
+        for k in 0..8 {
+            lanes[k] = lo[k] + hi[k];
+        }
+        let s0 = lanes[0] + lanes[4];
+        let s1 = lanes[1] + lanes[5];
+        let s2 = lanes[2] + lanes[6];
+        let s3 = lanes[3] + lanes[7];
+        let mut sum = (s0 + s1) + (s2 + s3);
+        for (xa, xb) in ra.iter().zip(rb) {
+            sum += xa * xb.to_f32();
+        }
+        sum
+    }
+
+    #[inline]
+    fn axpy_bf16(&self, y: &mut [f32], a: f32, x: &[BF16]) {
+        for (yk, xk) in y.iter_mut().zip(x) {
+            *yk += a * xk.to_f32();
+        }
+    }
+
+    #[inline]
+    fn axpy_kahan_bf16(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[BF16]) {
+        let n = y.len().min(c.len()).min(x.len());
+        for k in 0..n {
+            // Exact widen, plain mul (no FMA): identical bits on every
+            // dispatch level, same as `axpy_kahan`.
+            let t = a * x[k].to_f32() - c[k];
+            let s = y[k] + t;
+            c[k] = (s - y[k]) - t;
+            y[k] = s;
+        }
+    }
 }
 
 /// Token type proving `avx2` + `fma` were detected at runtime; the only
@@ -215,6 +335,30 @@ impl Lanes for Avx2 {
     fn scale(&self, y: &mut [f32], a: f32) {
         // SAFETY: as above.
         unsafe { avx2::scale(y, a) }
+    }
+
+    #[inline]
+    fn dot_bf16(&self, a: &[BF16], b: &[BF16]) -> f32 {
+        // SAFETY: as above.
+        unsafe { avx2::dot_bf16(a, b) }
+    }
+
+    #[inline]
+    fn dot_f32_bf16(&self, a: &[f32], b: &[BF16]) -> f32 {
+        // SAFETY: as above.
+        unsafe { avx2::dot_f32_bf16(a, b) }
+    }
+
+    #[inline]
+    fn axpy_bf16(&self, y: &mut [f32], a: f32, x: &[BF16]) {
+        // SAFETY: as above.
+        unsafe { avx2::axpy_bf16(y, a, x) }
+    }
+
+    #[inline]
+    fn axpy_kahan_bf16(&self, y: &mut [f32], c: &mut [f32], a: f32, x: &[BF16]) {
+        // SAFETY: as above.
+        unsafe { avx2::axpy_kahan_bf16(y, c, a, x) }
     }
 }
 
@@ -359,6 +503,21 @@ pub(crate) fn scale(y: &mut [f32], a: f32) {
 #[cfg(target_arch = "x86_64")]
 mod avx2 {
     use std::arch::x86_64::*;
+
+    use crate::exec::dtype::BF16;
+
+    /// Widen 8 bf16 values to 8 f32 lanes in registers: zero-extend the
+    /// u16s to u32 and shift into the high half — the exact widening, no
+    /// lookup and no f32 staging buffer.
+    ///
+    /// # Safety
+    /// Caller must have verified avx2 support and that `p..p+8` is
+    /// readable.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_bf16_8(p: *const BF16) -> __m256 {
+        let raw = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(raw)))
+    }
 
     /// Horizontal sum: fold the upper 128-bit half onto the lower, then
     /// (s0+s1) + (s2+s3) — mirrored exactly by `Portable::dot`.
@@ -518,6 +677,118 @@ mod avx2 {
             i += 1;
         }
     }
+
+    /// `dot` with both operands widened from bf16 on load (same unroll
+    /// and horizontal sum as the f32 routine).
+    ///
+    /// # Safety
+    /// Caller must have verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_bf16(a: &[BF16], b: &[BF16]) -> f32 {
+        let n = a.len().min(b.len());
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(load_bf16_8(ap.add(i)), load_bf16_8(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(load_bf16_8(ap.add(i + 8)), load_bf16_8(bp.add(i + 8)), acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(load_bf16_8(ap.add(i)), load_bf16_8(bp.add(i)), acc0);
+            i += 8;
+        }
+        let mut sum = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            sum += a[i].to_f32() * b[i].to_f32();
+            i += 1;
+        }
+        sum
+    }
+
+    /// `dot` with only `b` widened from bf16 on load.
+    ///
+    /// # Safety
+    /// Caller must have verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_f32_bf16(a: &[f32], b: &[BF16]) -> f32 {
+        let n = a.len().min(b.len());
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), load_bf16_8(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                load_bf16_8(bp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), load_bf16_8(bp.add(i)), acc0);
+            i += 8;
+        }
+        let mut sum = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            sum += a[i] * b[i].to_f32();
+            i += 1;
+        }
+        sum
+    }
+
+    /// `y += a·widen(x)` into an f32 accumulator.
+    ///
+    /// # Safety
+    /// Caller must have verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy_bf16(y: &mut [f32], a: f32, x: &[BF16]) {
+        let n = y.len().min(x.len());
+        let va = _mm256_set1_ps(a);
+        let (yp, xp) = (y.as_mut_ptr(), x.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_fmadd_ps(va, load_bf16_8(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i].to_f32();
+            i += 1;
+        }
+    }
+
+    /// Kahan `y += a·widen(x)`: widening is exact and the product is a
+    /// plain mul (no FMA), so the bits match `Portable::axpy_kahan_bf16`.
+    ///
+    /// # Safety
+    /// Caller must have verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_kahan_bf16(y: &mut [f32], c: &mut [f32], a: f32, x: &[BF16]) {
+        let n = y.len().min(c.len()).min(x.len());
+        let va = _mm256_set1_ps(a);
+        let (yp, cp, xp) = (y.as_mut_ptr(), c.as_mut_ptr(), x.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let yi = _mm256_loadu_ps(yp.add(i));
+            let ci = _mm256_loadu_ps(cp.add(i));
+            let t = _mm256_sub_ps(_mm256_mul_ps(va, load_bf16_8(xp.add(i))), ci);
+            let s = _mm256_add_ps(yi, t);
+            let cn = _mm256_sub_ps(_mm256_sub_ps(s, yi), t);
+            _mm256_storeu_ps(yp.add(i), s);
+            _mm256_storeu_ps(cp.add(i), cn);
+            i += 8;
+        }
+        while i < n {
+            let t = a * x[i].to_f32() - c[i];
+            let s = y[i] + t;
+            c[i] = (s - y[i]) - t;
+            y[i] = s;
+            i += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -626,6 +897,69 @@ mod tests {
             "kahan {} vs exact {exact}",
             kahan[0]
         );
+    }
+
+    #[test]
+    fn bf16_lanes_match_scalar_reference_across_paths() {
+        // The widen-on-load ops: dispatched (possibly AVX2) path vs the
+        // portable path vs an f64 scalar reference, at remainder shapes.
+        let mut rng = Rng::new(0xBF_16);
+        for n in shapes() {
+            let af = rand_vec(&mut rng, n);
+            let bf = rand_vec(&mut rng, n);
+            let ab: Vec<BF16> = af.iter().map(|&x| BF16::from_f32(x)).collect();
+            let bb: Vec<BF16> = bf.iter().map(|&x| BF16::from_f32(x)).collect();
+            // Scalar f64 reference over the widened values.
+            let exact: f64 = ab
+                .iter()
+                .zip(&bb)
+                .map(|(x, y)| x.to_f32() as f64 * y.to_f32() as f64)
+                .sum();
+            let tol = 1e-5 * (1.0 + exact.abs()) * (1.0 + (n as f64).sqrt());
+            let got = with_lanes!(lanes => lanes.dot_bf16(&ab, &bb)) as f64;
+            let port = Portable.dot_bf16(&ab, &bb) as f64;
+            assert!((got - exact).abs() < tol, "dot_bf16 n={n}: {got} vs {exact}");
+            assert!((port - exact).abs() < tol, "portable dot_bf16 n={n}");
+
+            let exact_m: f64 = af
+                .iter()
+                .zip(&bb)
+                .map(|(&x, y)| x as f64 * y.to_f32() as f64)
+                .sum();
+            let got_m = with_lanes!(lanes => lanes.dot_f32_bf16(&af, &bb)) as f64;
+            assert!((got_m - exact_m).abs() < tol, "dot_f32_bf16 n={n}");
+
+            let mut y1 = rand_vec(&mut rng, n);
+            let mut y2 = y1.clone();
+            Portable.axpy_bf16(&mut y1, 0.41, &bb);
+            with_lanes!(lanes => lanes.axpy_bf16(&mut y2, 0.41, &bb));
+            for (u, v) in y1.iter().zip(&y2) {
+                assert!((u - v).abs() <= 1e-6 * (1.0 + u.abs()), "axpy_bf16 n={n}");
+            }
+
+            // Kahan is specified bitwise-identical across paths.
+            let mut yk1 = rand_vec(&mut rng, n);
+            let mut yk2 = yk1.clone();
+            let mut c1 = vec![0f32; n];
+            let mut c2 = vec![0f32; n];
+            Portable.axpy_kahan_bf16(&mut yk1, &mut c1, -0.75, &ab);
+            with_lanes!(lanes => lanes.axpy_kahan_bf16(&mut yk2, &mut c2, -0.75, &ab));
+            assert_eq!(yk1, yk2, "axpy_kahan_bf16 y n={n}");
+            assert_eq!(c1, c2, "axpy_kahan_bf16 c n={n}");
+        }
+    }
+
+    #[test]
+    fn bf16_dot_of_exact_values_is_exact() {
+        // Small integers are bf16-exact, so the widen-on-load dot must be
+        // exactly the integer dot on every path.
+        let af: Vec<f32> = (0..23).map(|i| (i % 7) as f32 - 3.0).collect();
+        let bf: Vec<f32> = (0..23).map(|i| (i % 5) as f32).collect();
+        let ab: Vec<BF16> = af.iter().map(|&x| BF16::from_f32(x)).collect();
+        let bb: Vec<BF16> = bf.iter().map(|&x| BF16::from_f32(x)).collect();
+        let expect: f32 = af.iter().zip(&bf).map(|(x, y)| x * y).sum();
+        assert_eq!(with_lanes!(lanes => lanes.dot_bf16(&ab, &bb)), expect);
+        assert_eq!(with_lanes!(lanes => lanes.dot_f32_bf16(&af, &bb)), expect);
     }
 
     #[test]

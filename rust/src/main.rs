@@ -8,16 +8,18 @@
 //! cce client  --port P [--op generate|score|info|shutdown]
 //!             [--prompt "..."] [--text "..."] [--top-k K] [--temperature T]
 //! cce servebench [--demo | --checkpoint path] [--requests 64]
-//!             [--concurrency 8] [--json BENCH_serve.json]
+//!             [--concurrency 8] [--repeats 3] [--dtype f32|bf16]
+//!             [--json BENCH_serve.json]
 //! cce table1  [--backend native|pjrt] [--json BENCH_table1.json]
-//!             [--n 1024 --d 256 --v 4096] [--threads N] [--small-n 8]
-//!             [--check]
+//!             [--n 1024 --d 256 --v 4096] [--threads N] [--dtype f32|bf16]
+//!             [--small-n 8] [--check]
 //! cce tableA1 (= table1 with the Appendix B ignored-token filter)
 //! cce tableA2 / tableA3
 //! cce fig1    [--tokens 65536] [--gpus 16] [--gpu-gb 75]
 //! cce fig3    [--backend native|pjrt] [--checkpoint path | --warm-steps N]
 //! cce fig4 / fig5 [--steps N] [--tag e2e|tiny]
-//! cce figA1   [--backend native|pjrt] [--budget-ms 2000]
+//! cce figA1   [--backend native|pjrt] [--budget-ms 2000] [--dtype f32|bf16]
+//!             [--json BENCH_figA1.json]
 //! cce info    — backend + manifest summary
 //! ```
 //!
@@ -26,7 +28,10 @@
 //! `--backend pjrt` replays the AOT HLO artifacts and needs the `pjrt`
 //! feature plus `make artifacts`.  `--threads N` sizes the native worker
 //! spans (`0` = auto = available parallelism, the default; workers live in
-//! a persistent process-wide pool).  Native `--method` keys:
+//! a persistent process-wide pool).  `--dtype f32|bf16` selects the
+//! *storage* dtype of parameters/activations/gradients on
+//! train/eval/table1/figA1/servebench (accumulation stays f32/f64; serve
+//! defaults to the checkpoint's stored dtype).  Native `--method` keys:
 //! `cce`, `cce_no_sort`, `cce_no_filter`, `cce_kahan`, `cce_kahan_fullc`,
 //! `cce_kahan_fulle`, `chunked<k>`, `baseline`.
 
@@ -34,7 +39,7 @@ use anyhow::{bail, Result};
 
 use cce::bench;
 use cce::coordinator::{Metrics, NativeModelConfig, NativeTrainer, RunConfig};
-use cce::exec::{self, KernelOptions};
+use cce::exec::{self, KernelOptions, StoreDtype};
 use cce::util::cli::Args;
 
 #[cfg(feature = "pjrt")]
@@ -100,15 +105,29 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
 /// Native kernel options from the shared CLI flags.  `--threads 0` means
 /// "auto" (available parallelism) on every path — train, eval, serve,
 /// servebench, table1, fig3, figA1, info — and the resolved count is what
-/// `{"op":"info"}` and the BENCH metadata report.
+/// `{"op":"info"}` and the BENCH metadata report.  `--dtype f32|bf16`
+/// selects the storage dtype of parameters / activations / gradients
+/// (accumulation stays f32/f64; serve defaults to the checkpoint's own
+/// dtype instead — see [`dtype_override`]).
 fn kernel_options(args: &Args) -> Result<KernelOptions> {
     let defaults = KernelOptions::default();
     Ok(KernelOptions {
         threads: exec::resolve_threads(args.get("threads", 0usize)?),
         n_block: args.get("n-block", defaults.n_block)?,
         v_block: args.get("v-block", defaults.v_block)?,
+        dtype: match args.opt("dtype") {
+            None => defaults.dtype,
+            Some(s) => StoreDtype::parse(s)?,
+        },
         ..defaults
     })
+}
+
+/// An *explicit* `--dtype` flag, or `None` when absent — the serving path
+/// keeps the checkpoint's stored dtype unless the operator asks for a
+/// load-time conversion.
+fn dtype_override(args: &Args) -> Result<Option<StoreDtype>> {
+    args.opt("dtype").map(StoreDtype::parse).transpose()
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -196,10 +215,15 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         100.0 * trainer.dataset.ignored_fraction()
     );
     let state = match args.opt("checkpoint") {
+        // Resuming keeps the checkpoint's stored dtype unless --dtype
+        // explicitly asks for a conversion (an old f32 checkpoint keeps
+        // loading under --dtype bf16, and a bf16 checkpoint is never
+        // silently widened back to f32).
         Some(path) => cce::coordinator::NativeState::from_checkpoint(
             cce::coordinator::Checkpoint::load(path)?,
             trainer.vocab,
             trainer.model.d_model,
+            dtype_override(args)?,
         )?,
         None => trainer.init(cfg.seed),
     };
@@ -298,11 +322,15 @@ fn cmd_eval_native(args: &Args) -> Result<()> {
         batch: args.get("batch", NativeModelConfig::default().batch)?,
         seq_len: args.get("seq", NativeModelConfig::default().seq_len)?,
     };
-    let trainer = NativeTrainer::build(cfg, model, kernel_options(args)?)?;
+    let opts = kernel_options(args)?;
+    let trainer = NativeTrainer::build(cfg, model, opts)?;
+    // Evaluate in the checkpoint's own dtype unless --dtype asks to
+    // convert at load.
     let state = cce::coordinator::NativeState::from_checkpoint(
         cce::coordinator::Checkpoint::load(&path)?,
         trainer.vocab,
         trainer.model.d_model,
+        dtype_override(args)?,
     )?;
     let val = trainer.evaluate(&state)?;
     println!("val_loss {val:.4}  perplexity {:.2}  (step {})", val.exp(), state.step);
@@ -333,7 +361,11 @@ fn cmd_eval_pjrt(_args: &Args) -> Result<()> {
 /// `default_demo`, a missing `--checkpoint` implies `--demo` (used by
 /// `servebench`, which should run out of the box) — one construction path,
 /// so `serve --demo` and `servebench` always agree on the demo model.
-fn build_engine(args: &Args, opts: KernelOptions, default_demo: bool) -> Result<cce::serve::Engine> {
+fn build_engine(
+    args: &Args,
+    opts: KernelOptions,
+    default_demo: bool,
+) -> Result<cce::serve::Engine> {
     if args.flag("demo") || (default_demo && args.opt("checkpoint").is_none()) {
         let vocab = args.get("vocab-size", 512usize)?;
         let dim = args.get("dim", 32usize)?;
@@ -352,7 +384,12 @@ fn build_engine(args: &Args, opts: KernelOptions, default_demo: bool) -> Result<
             Some(w) => Some(w.parse::<usize>().map_err(|e| anyhow::anyhow!("--window={w}: {e}"))?),
             None => None,
         };
-        cce::serve::Engine::from_checkpoint(std::path::Path::new(path), window, opts)
+        cce::serve::Engine::from_checkpoint(
+            std::path::Path::new(path),
+            window,
+            dtype_override(args)?,
+            opts,
+        )
     }
 }
 
@@ -368,12 +405,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.get("queue-depth", 64usize)?,
     };
     eprintln!(
-        "[serve] model: vocab {} d {} window {} step {} | {} kernel threads, \
-         {} batch workers, max batch {}",
+        "[serve] model: vocab {} d {} window {} step {} dtype {} ({:.1} MB params) | \
+         {} kernel threads, {} batch workers, max batch {}",
         engine.vocab,
         engine.d_model,
         engine.window,
         engine.step(),
+        engine.dtype().name(),
+        engine.param_bytes() as f64 / (1024.0 * 1024.0),
         opts.threads,
         cfg.workers,
         cfg.max_batch
@@ -432,7 +471,8 @@ fn cmd_servebench(args: &Args) -> Result<()> {
             ..cce::serve::ServeConfig::default()
         },
     };
-    let bench = sb::run(std::sync::Arc::new(engine), &cfg)?;
+    let repeats = args.get("repeats", 3usize)?;
+    let bench = sb::run_repeated(std::sync::Arc::new(engine), &cfg, repeats)?;
     sb::print(&bench);
     if let Some(path) = args.opt("json") {
         sb::write_json(&bench, path)?;
@@ -629,9 +669,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     .map_err(|e| anyhow::anyhow!("--ns: {e}"))?,
                 None => vec![256, 512, 1024, 2048],
             };
-            let points =
-                bench::sweep::run_native(d, v, &ns, budget, kernel_options(args)?, seed)?;
+            let opts = kernel_options(args)?;
+            let points = bench::sweep::run_native(d, v, &ns, budget, opts, seed)?;
             bench::sweep::print(&points, args.opt("csv"))?;
+            if let Some(path) = args.opt("json") {
+                bench::sweep::write_json(&points, d, v, opts.dtype, opts.resolved_threads(), path)?;
+                println!("  wrote {path}");
+            }
             if args.flag("check") {
                 bench::sweep::check(&points)?;
                 println!("\n  [check] sweep scaling claims hold");
@@ -683,6 +727,11 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!(
         "  simd: 8-lane f32, dispatch: {} (resolved once per kernel sweep)",
         exec::simd_dispatch()
+    );
+    println!(
+        "  dtype: {} (--dtype f32|bf16: storage of params/activations/grads; \
+         accumulation stays f32/f64)",
+        opts.dtype.name()
     );
     print_pjrt_info()
 }

@@ -28,6 +28,7 @@ pub struct ModelSpec {
 }
 
 /// The 15 models of Table A4.
+#[rustfmt::skip]
 pub const MODEL_ZOO: &[ModelSpec] = &[
     ModelSpec { name: "GPT 2", layers: 12, hidden: 768, vocab: 50_257, params: 136_970_000 },
     ModelSpec { name: "GPT Neo (1.3B)", layers: 24, hidden: 2048, vocab: 50_257, params: 1_365_900_000 },
@@ -142,8 +143,10 @@ mod tests {
                 (ratio, fsdp_plan(m, 65_536, 16, 75).increase())
             })
             .collect();
-        let max_ratio = gains.iter().cloned().fold((0.0, 0.0), |a, b| if b.0 > a.0 { b } else { a });
-        let min_ratio = gains.iter().cloned().fold((f64::MAX, 0.0), |a, b| if b.0 < a.0 { b } else { a });
+        let max_ratio =
+            gains.iter().cloned().fold((0.0, 0.0), |a, b| if b.0 > a.0 { b } else { a });
+        let min_ratio =
+            gains.iter().cloned().fold((f64::MAX, 0.0), |a, b| if b.0 < a.0 { b } else { a });
         assert!(max_ratio.1 > min_ratio.1 * 3.0,
                 "gain at max ratio {max_ratio:?} vs min {min_ratio:?}");
     }

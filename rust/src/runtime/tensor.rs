@@ -6,13 +6,18 @@
 
 use anyhow::{bail, Result};
 
-/// Element dtype of a tensor (the subset our artifacts use).
+use crate::exec::dtype::BF16;
+
+/// Element dtype of a tensor (the subset our artifacts and native
+/// checkpoints use).  `BF16` is native-only: checkpoints store it, the
+/// kernels read it, but there is no PJRT literal bridge for it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
     I32,
     U32,
     F64,
+    BF16,
 }
 
 impl DType {
@@ -22,6 +27,7 @@ impl DType {
             "int32" | "i32" => DType::I32,
             "uint32" | "u32" => DType::U32,
             "float64" | "f64" => DType::F64,
+            "bfloat16" | "bf16" => DType::BF16,
             other => bail!("unsupported dtype {other:?}"),
         })
     }
@@ -32,11 +38,16 @@ impl DType {
             DType::I32 => "int32",
             DType::U32 => "uint32",
             DType::F64 => "float64",
+            DType::BF16 => "bfloat16",
         }
     }
 
     pub fn size_bytes(&self) -> usize {
-        4usize + 4 * matches!(self, DType::F64) as usize
+        match self {
+            DType::BF16 => 2,
+            DType::F64 => 8,
+            _ => 4,
+        }
     }
 }
 
@@ -47,6 +58,7 @@ pub enum Data {
     I32(Vec<i32>),
     U32(Vec<u32>),
     F64(Vec<f64>),
+    BF16(Vec<BF16>),
 }
 
 impl Data {
@@ -56,6 +68,7 @@ impl Data {
             Data::I32(v) => v.len(),
             Data::U32(v) => v.len(),
             Data::F64(v) => v.len(),
+            Data::BF16(v) => v.len(),
         }
     }
 
@@ -69,6 +82,7 @@ impl Data {
             Data::I32(_) => DType::I32,
             Data::U32(_) => DType::U32,
             Data::F64(_) => DType::F64,
+            Data::BF16(_) => DType::BF16,
         }
     }
 }
@@ -102,6 +116,10 @@ impl HostTensor {
         Self::new(shape, Data::I32(v))
     }
 
+    pub fn bf16(shape: Vec<usize>, v: Vec<BF16>) -> Result<HostTensor> {
+        Self::new(shape, Data::BF16(v))
+    }
+
     pub fn scalar_f32(v: f32) -> HostTensor {
         HostTensor { shape: vec![], data: Data::F32(vec![v]) }
     }
@@ -117,6 +135,7 @@ impl HostTensor {
             DType::I32 => Data::I32(vec![0; n]),
             DType::U32 => Data::U32(vec![0; n]),
             DType::F64 => Data::F64(vec![0.0; n]),
+            DType::BF16 => Data::BF16(vec![BF16::ZERO; n]),
         };
         HostTensor { shape, data }
     }
@@ -151,6 +170,17 @@ impl HostTensor {
         }
     }
 
+    /// Widened float view for measurement/printing paths: exact for f32
+    /// and bf16 (int tensors are rejected — widening labels would hide a
+    /// schema error).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        match &self.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::BF16(v) => Ok(v.iter().map(|&x| x.to_f32()).collect()),
+            other => bail!("expected a float tensor, got {:?}", other.dtype()),
+        }
+    }
+
     /// Scalar extraction (0-d or 1-element tensors).
     pub fn scalar(&self) -> Result<f64> {
         if self.len() != 1 {
@@ -161,6 +191,7 @@ impl HostTensor {
             Data::I32(v) => v[0] as f64,
             Data::U32(v) => v[0] as f64,
             Data::F64(v) => v[0],
+            Data::BF16(v) => v[0].to_f32() as f64,
         })
     }
 
@@ -175,6 +206,7 @@ impl HostTensor {
             Data::I32(v) => xla::Literal::vec1(v),
             Data::U32(v) => xla::Literal::vec1(v),
             Data::F64(v) => xla::Literal::vec1(v),
+            Data::BF16(_) => bail!("bf16 tensors are native-only (no PJRT literal bridge)"),
         };
         Ok(lit.reshape(&dims)?)
     }
@@ -222,7 +254,21 @@ mod tests {
     fn dtype_parse() {
         assert_eq!(DType::parse("float32").unwrap(), DType::F32);
         assert_eq!(DType::parse("int32").unwrap(), DType::I32);
-        assert!(DType::parse("bfloat16").is_err());
+        assert_eq!(DType::parse("bfloat16").unwrap(), DType::BF16);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert!(DType::parse("fp8").is_err());
+    }
+
+    #[test]
+    fn bf16_tensor_roundtrips_and_widens() {
+        let vals: Vec<BF16> = [1.0f32, -0.5, 3.25].iter().map(|&x| BF16::from_f32(x)).collect();
+        let t = HostTensor::bf16(vec![3], vals).unwrap();
+        assert_eq!(t.dtype(), DType::BF16);
+        assert_eq!(t.size_bytes(), 6, "bf16 is 2 bytes per element");
+        assert_eq!(t.to_f32_vec().unwrap(), vec![1.0, -0.5, 3.25]);
+        assert!(t.as_f32().is_err(), "as_f32 must not silently widen");
+        let z = HostTensor::zeros(DType::BF16, vec![2, 2]);
+        assert_eq!(z.to_f32_vec().unwrap(), vec![0.0; 4]);
     }
 
     // Literal round-trips are covered by integration tests (tests/runtime.rs)

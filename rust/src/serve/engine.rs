@@ -30,7 +30,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::{
     CorpusKind, Metrics, NativeModelConfig, NativeState, NativeTrainer, RunConfig,
 };
-use crate::exec::{self, InferProblem, KernelOptions, Problem};
+use crate::exec::{self, InferProblem, KernelOptions, ParamBuf, Problem, Store, StoreDtype};
 use crate::serve::protocol::GenParams;
 use crate::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::json::Json;
@@ -74,18 +74,20 @@ impl ContextBag {
     /// entering the window; `evict` is the row of the token sliding out,
     /// which the caller must pass exactly when the context already holds
     /// `window` tokens (the caller owns the context and knows which).
-    pub fn push(&mut self, enter: &[f32], evict: Option<&[f32]>) {
+    /// Generic over the embedding storage dtype (bf16 rows widen exactly
+    /// into the f64 accumulator).
+    pub fn push<S: Store>(&mut self, enter: &[S], evict: Option<&[S]>) {
         match evict {
             Some(gone) => {
                 debug_assert_eq!(self.len, self.window, "evict implies a full window");
                 for ((acc, &add), &sub) in self.sum.iter_mut().zip(enter).zip(gone) {
-                    *acc += add as f64 - sub as f64;
+                    *acc += add.to_f32() as f64 - sub.to_f32() as f64;
                 }
             }
             None => {
                 debug_assert!(self.len < self.window, "full window needs an evict row");
                 for (acc, &add) in self.sum.iter_mut().zip(enter) {
-                    *acc += add as f64;
+                    *acc += add.to_f32() as f64;
                 }
                 self.len += 1;
             }
@@ -142,7 +144,9 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Wrap a state + tokenizer, validating shapes.
+    /// Wrap a state + tokenizer, validating shapes.  The engine serves in
+    /// the state's storage dtype (`opts.dtype` is synced to it, so
+    /// `info_json` reports the truth).
     pub fn new(
         state: NativeState,
         tokenizer: Tokenizer,
@@ -161,6 +165,10 @@ impl Engine {
                 state.cls.len()
             );
         }
+        if state.emb.dtype() != state.cls.dtype() {
+            bail!("state mixes storage dtypes (emb vs cls)");
+        }
+        let opts = KernelOptions { dtype: state.dtype(), ..opts };
         Ok(Engine {
             state,
             tokenizer,
@@ -179,24 +187,37 @@ impl Engine {
     /// / `.model.json` siblings).  `(vocab, d)` come from the tensors and
     /// `window` from the model sidecar; `window_override` (an explicit
     /// `--window` flag) wins over both, and pre-sidecar checkpoints fall
-    /// back to the trainer default.
+    /// back to the trainer default.  The engine serves in the checkpoint's
+    /// stored dtype — a bf16 checkpoint decodes at half the parameter
+    /// footprint — unless `dtype_override` (an explicit `--dtype` flag)
+    /// asks for a load-time conversion.
     pub fn from_checkpoint(
         path: &std::path::Path,
         window_override: Option<usize>,
+        dtype_override: Option<StoreDtype>,
         opts: KernelOptions,
     ) -> Result<Engine> {
         let bundle = NativeState::load_bundle(path)?;
         let window = window_override
             .or(bundle.window)
             .unwrap_or(NativeModelConfig::default().window);
-        Engine::new(bundle.state, bundle.tokenizer, bundle.d_model, window, opts)
+        let mut state = bundle.state;
+        if let Some(want) = dtype_override {
+            state = state.into_dtype(want);
+        }
+        Engine::new(state, bundle.tokenizer, bundle.d_model, window, opts)
     }
 
     /// Self-contained demo engine: build the trainer pipeline on the
     /// synthetic web corpus and (optionally) train a few steps — no
     /// artifacts, no files.  Used by `cce serve --demo`, the benches, and
     /// the integration tests.
-    pub fn demo(vocab_size: usize, d_model: usize, steps: u64, opts: KernelOptions) -> Result<Engine> {
+    pub fn demo(
+        vocab_size: usize,
+        d_model: usize,
+        steps: u64,
+        opts: KernelOptions,
+    ) -> Result<Engine> {
         let cfg = RunConfig {
             tag: "serve-demo".into(),
             method: "cce".into(),
@@ -224,6 +245,16 @@ impl Engine {
         self.state.step
     }
 
+    /// Storage dtype the engine serves in (from the loaded state).
+    pub fn dtype(&self) -> StoreDtype {
+        self.state.dtype()
+    }
+
+    /// Measured parameter footprint (emb + cls) in bytes.
+    pub fn param_bytes(&self) -> usize {
+        self.state.param_bytes()
+    }
+
     pub fn peak_workspace_bytes(&self) -> u64 {
         self.peak_workspace.load(Ordering::Relaxed)
     }
@@ -240,6 +271,8 @@ impl Engine {
             ("d_model", Json::Int(self.d_model as i64)),
             ("window", Json::Int(self.window as i64)),
             ("step", Json::Int(self.state.step as i64)),
+            ("dtype", Json::str(self.dtype().name())),
+            ("param_bytes", Json::Int(self.param_bytes() as i64)),
             // Resolved worker count (`--threads 0` = auto) plus the shared
             // kernel pool's state — the orchestration-overhead triage trio.
             ("threads", Json::Int(self.opts.resolved_threads() as i64)),
@@ -258,10 +291,17 @@ impl Engine {
         self.peak_workspace.fetch_max(bytes as u64, Ordering::Relaxed);
     }
 
-    /// Embedding row of one token.
-    fn emb_row(&self, tok: i32) -> &[f32] {
-        let d = self.d_model;
-        &self.state.emb[tok as usize * d..(tok as usize + 1) * d]
+    /// Roll `bag` forward by one token (dtype-dispatched embedding rows;
+    /// `evict` names the token sliding out of the window, if any).
+    fn bag_push(&self, bag: &mut ContextBag, enter: i32, evict: Option<i32>) {
+        fn go<S: Store>(bag: &mut ContextBag, emb: &[S], d: usize, enter: i32, evict: Option<i32>) {
+            let row = |t: i32| &emb[t as usize * d..(t as usize + 1) * d];
+            bag.push(row(enter), evict.map(row));
+        }
+        match &self.state.emb {
+            ParamBuf::F32(emb) => go(bag, emb, self.d_model, enter, evict),
+            ParamBuf::Bf16(emb) => go(bag, emb, self.d_model, enter, evict),
+        }
     }
 
     /// Hidden row for one context by full re-reduction: mean embedding of
@@ -269,19 +309,83 @@ impl Engine {
     /// sequence).  The scoring path uses this; decoding rolls a
     /// [`ContextBag`] forward in O(D) instead.
     fn context_row(&self, ctx: &[i32], out: &mut [f32]) {
-        let d = self.d_model;
-        let lo = ctx.len().saturating_sub(self.window);
-        let tail = &ctx[lo..];
-        out.fill(0.0);
-        for &tok in tail {
-            let row = &self.state.emb[tok as usize * d..(tok as usize + 1) * d];
-            for (acc, &val) in out.iter_mut().zip(row) {
-                *acc += val;
+        fn go<S: Store>(emb: &[S], d: usize, window: usize, ctx: &[i32], out: &mut [f32]) {
+            let lo = ctx.len().saturating_sub(window);
+            let tail = &ctx[lo..];
+            out.fill(0.0);
+            for &tok in tail {
+                let row = &emb[tok as usize * d..(tok as usize + 1) * d];
+                for (acc, &val) in out.iter_mut().zip(row) {
+                    *acc += val.to_f32();
+                }
+            }
+            let len = tail.len().max(1) as f32;
+            for val in out.iter_mut() {
+                *val /= len;
             }
         }
-        let len = tail.len().max(1) as f32;
-        for val in out.iter_mut() {
-            *val /= len;
+        match &self.state.emb {
+            ParamBuf::F32(emb) => go(emb, self.d_model, self.window, ctx, out),
+            ParamBuf::Bf16(emb) => go(emb, self.d_model, self.window, ctx, out),
+        }
+    }
+
+    /// Blocked top-k against the stored classifier (dtype-dispatched; the
+    /// hidden rows stay f32, the classifier widens on load in the kernel).
+    fn run_topk(&self, h: &[f32], rows: usize, k: usize) -> Result<exec::TopKOut> {
+        match &self.state.cls {
+            ParamBuf::F32(c) => {
+                exec::topk(&InferProblem::new(h, c, rows, self.d_model, self.vocab)?, &self.opts, k)
+            }
+            ParamBuf::Bf16(c) => {
+                exec::topk(&InferProblem::new(h, c, rows, self.d_model, self.vocab)?, &self.opts, k)
+            }
+        }
+    }
+
+    /// Online Gumbel-max sampling against the stored classifier.
+    fn run_sample(
+        &self,
+        h: &[f32],
+        rows: usize,
+        temperature: f32,
+        seeds: &[u64],
+    ) -> Result<exec::SampleOut> {
+        match &self.state.cls {
+            ParamBuf::F32(c) => exec::sample(
+                &InferProblem::new(h, c, rows, self.d_model, self.vocab)?,
+                &self.opts,
+                temperature,
+                seeds,
+            ),
+            ParamBuf::Bf16(c) => exec::sample(
+                &InferProblem::new(h, c, rows, self.d_model, self.vocab)?,
+                &self.opts,
+                temperature,
+                seeds,
+            ),
+        }
+    }
+
+    /// Teacher-forced scoring: activations take the storage dtype (one
+    /// narrowing pass for bf16 — the same mixed-precision convention as
+    /// the trainer), so the fused score problem is storage-homogeneous.
+    fn run_score(&self, h: &[f32], targets: &[i32]) -> Result<exec::ScoreOut> {
+        fn go<S: Store>(
+            h: &[f32],
+            c: &[S],
+            targets: &[i32],
+            d: usize,
+            v: usize,
+            opts: &KernelOptions,
+        ) -> Result<exec::ScoreOut> {
+            let h_s = S::narrow_cow(h);
+            let p = Problem::new(&h_s, c, targets, targets.len(), d, v)?;
+            Ok(exec::score(&p, opts))
+        }
+        match &self.state.cls {
+            ParamBuf::F32(c) => go(h, c, targets, self.d_model, self.vocab, &self.opts),
+            ParamBuf::Bf16(c) => go(h, c, targets, self.d_model, self.vocab, &self.opts),
         }
     }
 
@@ -380,7 +484,7 @@ impl Engine {
         let mut bag = ContextBag::new(self.d_model, self.window);
         let lo = ctx.len().saturating_sub(self.window);
         for &tok in &ctx[lo..] {
-            bag.push(self.emb_row(tok), None);
+            self.bag_push(&mut bag, tok, None);
         }
         bag
     }
@@ -391,8 +495,8 @@ impl Engine {
     fn advance(&self, slot: &mut Slot, token: i32, logprob: f32) {
         slot.emit(token, logprob);
         let entered = slot.ctx.len() - 1;
-        let evict = entered.checked_sub(self.window).map(|lo| self.emb_row(slot.ctx[lo]));
-        slot.bag.push(self.emb_row(token), evict);
+        let evict = entered.checked_sub(self.window).map(|lo| slot.ctx[lo]);
+        self.bag_push(&mut slot.bag, token, evict);
     }
 
     /// Hidden-state matrix for the listed slots: one O(D) bag read per
@@ -420,8 +524,7 @@ impl Engine {
             .max()
             .unwrap_or(1);
         let h = self.hidden_for(slots, rows);
-        let p = InferProblem::new(&h, &self.state.cls, rows.len(), self.d_model, self.vocab)?;
-        let out = exec::topk(&p, &self.opts, k_max)?;
+        let out = self.run_topk(&h, rows.len(), k_max)?;
         self.note_workspace(out.workspace_bytes + h.len() * 4);
         for (r, &i) in rows.iter().enumerate() {
             let slot = &mut slots[i];
@@ -464,10 +567,8 @@ impl Engine {
         for (t_bits, group) in groups {
             let temperature = f32::from_bits(t_bits);
             let h = self.hidden_for(slots, &group);
-            let p =
-                InferProblem::new(&h, &self.state.cls, group.len(), self.d_model, self.vocab)?;
             let seeds: Vec<u64> = group.iter().map(|&i| slots[i].rng.next_u64()).collect();
-            let out = exec::sample(&p, &self.opts, temperature, &seeds)?;
+            let out = self.run_sample(&h, group.len(), temperature, &seeds)?;
             self.note_workspace(out.workspace_bytes + h.len() * 4);
             for (r, &i) in group.iter().enumerate() {
                 self.advance(&mut slots[i], out.tokens[r], out.logprobs[r]);
@@ -522,15 +623,7 @@ impl Engine {
             None
         } else {
             let run = || -> Result<exec::ScoreOut> {
-                let p = Problem::new(
-                    &h_all,
-                    &self.state.cls,
-                    &targets,
-                    targets.len(),
-                    d,
-                    self.vocab,
-                )?;
-                let out = exec::score(&p, &self.opts);
+                let out = self.run_score(&h_all, &targets)?;
                 self.note_workspace(out.workspace_bytes + h_all.len() * 4);
                 Ok(out)
             };
@@ -696,6 +789,43 @@ mod tests {
             engine.step_heap_rows(&mut slots, &[0]).unwrap();
         }
         assert!(!slots[0].out_tokens.is_empty());
+    }
+
+    #[test]
+    fn bf16_demo_engine_decodes_and_scores_at_half_footprint() {
+        let f32_engine = tiny_engine();
+        let opts = KernelOptions {
+            n_block: 16,
+            v_block: 64,
+            threads: 2,
+            dtype: StoreDtype::Bf16,
+            ..KernelOptions::default()
+        };
+        let engine = Engine::demo(384, 24, 6, opts).unwrap();
+        assert_eq!(engine.dtype(), StoreDtype::Bf16);
+        assert_eq!(
+            engine.param_bytes() * 2,
+            f32_engine.param_bytes(),
+            "bf16 weights must be half the f32 footprint"
+        );
+        // Greedy decode is deterministic and valid on the bf16 engine.
+        let req = GenParams { prompt: "the cat".into(), max_tokens: 6, ..GenParams::default() };
+        let a = engine.generate_batch(std::slice::from_ref(&req)).remove(0).unwrap();
+        let b = engine.generate_batch(std::slice::from_ref(&req)).remove(0).unwrap();
+        assert!(!a.tokens.is_empty());
+        assert_eq!(a.tokens, b.tokens, "bf16 greedy decode must be deterministic");
+        assert!(a.logprobs.iter().all(|&lp| lp <= 1e-6 && lp.is_finite()));
+        // Scoring: finite NLL in the same ballpark as the f32 demo (the
+        // two models trained with different storage rounding, so exact
+        // equality is not expected — but both trained the same data).
+        let text = "the cat sat on the mat".to_string();
+        let bf = engine.score_batch(std::slice::from_ref(&text)).remove(0).unwrap();
+        let ff = f32_engine.score_batch(&[text]).remove(0).unwrap();
+        assert!(bf.nll.is_finite() && bf.nll > 0.0);
+        assert!((bf.nll - ff.nll).abs() < 0.15 * ff.nll.abs().max(1.0), "{} vs {}", bf.nll, ff.nll);
+        // info reports the dtype.
+        let info = engine.info_json();
+        assert_eq!(info.get("dtype").and_then(|v| v.as_str()), Some("bf16"));
     }
 
     #[test]

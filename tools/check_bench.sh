@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
-# Cross-PR perf regression gate for the native Table-1 bench.
+# Cross-PR perf/shape gates for the native bench files.
 #
-#   tools/check_bench.sh [--update] <fresh.json> [baseline.json]
+#   tools/check_bench.sh [--update] <fresh.json> [baseline.json]   # table1
+#   tools/check_bench.sh --figa1 <fresh.json>                      # scaling shape
+#   tools/check_bench.sh --serve [--update] <fresh.json> [baseline.json]
 #
-# Compares a freshly measured BENCH_table1.json against the committed
-# baseline (default: BENCH_table1.json in the repo root) and prints a
-# per-method fwd/bwd delta table.  The build FAILS on a >25% regression in
-# either headline metric:
+# Default mode compares a freshly measured BENCH_table1.json against the
+# committed baseline (default: BENCH_table1.json in the repo root) and
+# prints a per-method fwd/bwd delta table.  The build FAILS on a >25%
+# regression in either headline metric:
 #
 #   * the filtered-vs-unfiltered backward gap
 #     (bwd_ms[cce_no_filter] / bwd_ms[cce] — the paper's §4.3 win, and the
@@ -20,6 +22,19 @@
 #     orchestration overhead (thread spawn/join, dispatch probes), not
 #     FLOPs, dominates, so this is the gate that keeps the persistent
 #     worker pool honest.
+#
+# `--figa1` is a *structural* shape check on a fresh BENCH_figA1.json (no
+# baseline involved, never suppressible): across the N-sweep, cce's
+# measured forward workspace must stay ~flat (<= 1.5x over the sweep)
+# while the materialized baseline's must grow ~linearly (>= 0.7x the N
+# ratio) — the paper's memory-scaling claim, enforced on real measured
+# allocations every CI run.
+#
+# `--serve` gates BENCH_serve.json on the **median** requests/sec over the
+# harness repeats: >35% throughput drop fails (suppressible with
+# --update).  The threshold is deliberately looser than the kernel gates —
+# serving latency on shared runners is noisy even after the median — and
+# incomparable runs (different shape/concurrency/simd/dtype) bootstrap.
 #
 # Exit codes: 0 = OK/bootstrap, 1 = regression (suppressible), 2 =
 # structural failure (unreadable fresh file, missing gate rows/fields —
@@ -37,13 +52,20 @@
 
 set -euo pipefail
 
+MODE="table1"
 UPDATE=0
-if [[ "${1:-}" == "--update" ]]; then
-    UPDATE=1
-    shift
-fi
-FRESH="${1:?usage: tools/check_bench.sh [--update] <fresh.json> [baseline.json]}"
-BASELINE="${2:-BENCH_table1.json}"
+while [[ "${1:-}" == --* ]]; do
+    case "$1" in
+        --figa1) MODE="figa1"; shift ;;
+        --serve) MODE="serve"; shift ;;
+        --update) UPDATE=1; shift ;;
+        *) echo "unknown flag $1"; exit 2 ;;
+    esac
+done
+FRESH="${1:?usage: tools/check_bench.sh [--figa1|--serve] [--update] <fresh.json> [baseline.json]}"
+DEFAULT_BASELINE="BENCH_table1.json"
+[[ "$MODE" == "serve" ]] && DEFAULT_BASELINE="BENCH_serve.json"
+BASELINE="${2:-$DEFAULT_BASELINE}"
 
 if ! command -v python3 >/dev/null 2>&1; then
     # Fail hard: a silently skipped gate would let regressions land green.
@@ -53,6 +75,125 @@ if ! command -v python3 >/dev/null 2>&1; then
 fi
 
 STATUS=0
+
+if [[ "$MODE" == "figa1" ]]; then
+    python3 - "$FRESH" <<'PY' || STATUS=$?
+import json, sys
+
+EXIT_STRUCTURAL = 2  # shape gates are never suppressible
+
+try:
+    doc = json.load(open(sys.argv[1]))
+except (OSError, json.JSONDecodeError) as err:
+    print(f"[check_bench] STRUCTURAL: figA1 bench {sys.argv[1]} unreadable ({err})")
+    sys.exit(EXIT_STRUCTURAL)
+
+points = doc.get("points", [])
+series = {}
+for pt in points:
+    series.setdefault(pt.get("method"), []).append(pt)
+for rows in series.values():
+    rows.sort(key=lambda r: r.get("n", 0))
+
+cce, base = series.get("cce", []), series.get("baseline", [])
+if len(cce) < 2 or len(base) < 2:
+    print("[check_bench] STRUCTURAL: figA1 sweep needs >= 2 cce and baseline points "
+          f"(got {len(cce)} / {len(base)}) — the scaling gate cannot run")
+    sys.exit(EXIT_STRUCTURAL)
+if any("fwd_workspace_bytes" not in r for r in cce + base):
+    print("[check_bench] STRUCTURAL: figA1 points lack measured fwd_workspace_bytes")
+    sys.exit(EXIT_STRUCTURAL)
+
+n_ratio = base[-1]["n"] / base[0]["n"]
+cce_ratio = cce[-1]["fwd_workspace_bytes"] / max(cce[0]["fwd_workspace_bytes"], 1)
+base_ratio = base[-1]["fwd_workspace_bytes"] / max(base[0]["fwd_workspace_bytes"], 1)
+print(f"[check_bench] figA1 scaling over N x{n_ratio:.0f} "
+      f"({base[0]['n']} -> {base[-1]['n']}): cce workspace x{cce_ratio:.2f}, "
+      f"baseline x{base_ratio:.2f}")
+failures = []
+if cce_ratio > 1.5:
+    failures.append(f"cce measured forward workspace grew x{cce_ratio:.2f} over the "
+                    "sweep — the O(N_B*V_B) bound broke")
+if base_ratio < 0.7 * n_ratio:
+    failures.append(f"baseline measured workspace grew only x{base_ratio:.2f} over an "
+                    f"x{n_ratio:.0f} N sweep — it stopped materializing N x V")
+if failures:
+    for f in failures:
+        print(f"[check_bench] STRUCTURAL: {f}")
+    sys.exit(EXIT_STRUCTURAL)
+print("[check_bench] OK — memory scaling shape holds (cce flat, baseline linear)")
+PY
+    exit "$STATUS"
+fi
+
+if [[ "$MODE" == "serve" ]]; then
+    python3 - "$FRESH" "$BASELINE" <<'PY' || STATUS=$?
+import json, sys
+
+MAX_DROP = 0.35      # >35% throughput drop fails (runner-noise allowance)
+EXIT_REGRESSION = 1
+EXIT_STRUCTURAL = 2
+
+try:
+    fresh = json.load(open(sys.argv[1]))
+except (OSError, json.JSONDecodeError) as err:
+    print(f"[check_bench] STRUCTURAL: fresh serve bench {sys.argv[1]} unreadable ({err})")
+    sys.exit(EXIT_STRUCTURAL)
+
+rps = fresh.get("requests_per_sec")
+if not isinstance(rps, (int, float)) or rps <= 0:
+    print("[check_bench] STRUCTURAL: fresh serve bench has no positive "
+          "requests_per_sec — the serve gate cannot run")
+    sys.exit(EXIT_STRUCTURAL)
+endpoints = {r.get("endpoint") for r in fresh.get("rows", [])}
+if endpoints != {"generate", "score"}:
+    print(f"[check_bench] STRUCTURAL: fresh serve bench rows cover {sorted(map(str, endpoints))}, "
+          "want both 'generate' and 'score' — the trajectory file would be malformed")
+    sys.exit(EXIT_STRUCTURAL)
+p50 = next((r.get("p50_ms") for r in fresh.get("rows", [])
+            if r.get("endpoint") == "generate"), None)
+runs = fresh.get("requests_per_sec_runs", [])
+print(f"[check_bench] serve: median {rps:.1f} req/s over {max(len(runs), 1)} run(s)"
+      + (f", generate p50 {p50:.2f} ms" if p50 is not None else ""))
+
+try:
+    base = json.load(open(sys.argv[2]))
+except FileNotFoundError:
+    print(f"[check_bench] no committed serve baseline at {sys.argv[2]} — "
+          "accepting the fresh run as the first data point")
+    sys.exit(0)
+except (OSError, json.JSONDecodeError) as err:
+    print(f"[check_bench] serve baseline unreadable ({err}) — accepting fresh run")
+    sys.exit(0)
+
+key = lambda d: (d.get("schema"), d.get("vocab"), d.get("d_model"), d.get("threads"),
+                 d.get("simd"), d.get("dtype"), d.get("requests"), d.get("concurrency"),
+                 d.get("max_tokens"))
+if key(fresh) != key(base):
+    print(f"[check_bench] serve baseline shape {key(base)} != fresh {key(fresh)} — "
+          "not comparable, accepting fresh run")
+    sys.exit(0)
+
+base_rps = base.get("requests_per_sec", 0)
+if base_rps <= 0:
+    print("[check_bench] serve baseline has no throughput — accepting fresh run")
+    sys.exit(0)
+print(f"[check_bench] serve baseline: {base_rps:.1f} req/s "
+      f"({100.0 * (rps - base_rps) / base_rps:+.0f}%)")
+if rps < base_rps * (1.0 - MAX_DROP):
+    print(f"[check_bench] REGRESSION: serve throughput dropped: {rps:.1f} req/s vs "
+          f"baseline {base_rps:.1f} (>{MAX_DROP * 100:.0f}% drop)")
+    print("[check_bench] rerun with BENCH_UPDATE=1 ./ci.sh (or --update) to accept")
+    sys.exit(EXIT_REGRESSION)
+print("[check_bench] OK — serve throughput within the 35% gate")
+PY
+    if [[ "$UPDATE" == "1" && "$STATUS" -eq 1 ]]; then
+        echo "[check_bench] --update: serve regression accepted deliberately"
+        STATUS=0
+    fi
+    exit "$STATUS"
+fi
+
 python3 - "$FRESH" "$BASELINE" <<'PY' || STATUS=$?
 import json, sys
 
@@ -99,13 +240,14 @@ def main(fresh_path, base_path):
               "accepting the fresh run as the new baseline")
         return 0
 
-    # Comparability key: grid, thread count, schema, and the resolved SIMD
-    # dispatch level — a baseline measured on an AVX2 machine must not gate
-    # a portable-path runner (or vice versa); such pairs bootstrap instead.
+    # Comparability key: grid, thread count, schema, the resolved SIMD
+    # dispatch level, and the storage dtype — a baseline measured on an
+    # AVX2 machine must not gate a portable-path runner, and f32 timings
+    # must not gate a bf16 run (or vice versa); such pairs bootstrap.
     key = lambda doc: (doc.get("grid"), doc.get("threads"), doc.get("schema"),
-                       doc.get("simd"))
+                       doc.get("simd"), doc.get("dtype"))
     if key(fresh_doc) != key(base_doc):
-        print(f"[check_bench] baseline grid/threads/schema/simd {key(base_doc)} "
+        print(f"[check_bench] baseline grid/threads/schema/simd/dtype {key(base_doc)} "
               f"!= fresh {key(fresh_doc)} — not comparable, accepting fresh run")
         return 0
 
