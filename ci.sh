@@ -53,11 +53,13 @@ cargo clippy -p cce --all-targets --features pjrt -- -D warnings
 
 if [[ "$QUICK" == "1" ]]; then
     # Includes the exec::pool leak/panic/drop-join tests (unit + the
-    # tests/native.rs integration pair) — the fast loop still covers the
-    # worker-pool invariants.
-    echo "== quick: cargo test -q (debug) =="
+    # tests/native.rs integration pair) and the full tests/chaos.rs
+    # fault-injection suite (the faults are installed in-process) — quick
+    # mode trims only the CCE_FAULTS env smoke, which needs the release
+    # binary.
+    echo "== quick: cargo test -q (debug, incl. chaos suite) =="
     cargo test -q
-    echo "CI OK (quick: release build, serve smoke, and benches skipped)"
+    echo "CI OK (quick: release build, serve smoke, env chaos smoke, and benches skipped)"
     exit 0
 fi
 
@@ -124,6 +126,20 @@ if [[ "$RC" -ne 0 ]]; then
 fi
 grep -q "shut down cleanly" "$SMOKE_DIR/serve.log" || { echo "missing clean-shutdown marker"; exit 1; }
 echo "   serve self-test OK (port $PORT)"
+
+echo "== chaos: fault-injection suite + CCE_FAULTS env smoke =="
+# The suite itself installs its failpoints in-process (panic isolation,
+# overload/retry, deadlines, crash-safe checkpoints, drain under load);
+# rerunning the already-built test target is near-free and keeps the stage
+# independently invocable.
+cargo test --test chaos -q
+# End-to-end env wiring: a representative CCE_FAULTS spec armed through a
+# real process boundary — every request handler stalls 20 ms and the bench
+# clients must still finish clean (retries absorb any shed).
+CCE_FAULTS="conn.stall_ms=20" "$CCE" servebench --requests 8 --concurrency 2 \
+    --max-tokens 2 --threads 1 --repeats 1 --retries 3 >/dev/null \
+    || { echo "CCE_FAULTS-armed servebench smoke failed"; exit 1; }
+echo "   chaos OK (suite + env smoke)"
 
 echo "== bench: table1 (native) + figA1 sweep + servebench at the fixed CI grid =="
 # Fixed grid (see docs/benchmarks.md): d >= 128 keeps gen_loss_inputs'

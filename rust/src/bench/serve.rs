@@ -4,13 +4,16 @@
 //! workspace.  `--json BENCH_serve.json` persists machine-readable rows for
 //! cross-PR perf tracking, like `table1 --json`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::bench::harness::Table;
-use crate::serve::{serve, Client, Engine, GenParams, Response, ServeConfig};
+use crate::serve::{
+    serve, Client, ClientConfig, Engine, GenParams, Response, RetryPolicy, ServeConfig,
+};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -24,6 +27,10 @@ pub struct ServeBenchConfig {
     pub concurrency: usize,
     /// Tokens per generate request.
     pub max_tokens: usize,
+    /// Per-leg client I/O + connect bound (`None` = block forever).
+    pub timeout: Option<Duration>,
+    /// Client retry budget for `overloaded`/transport failures.
+    pub retries: u32,
     pub serve: ServeConfig,
 }
 
@@ -33,6 +40,8 @@ impl Default for ServeBenchConfig {
             requests: 64,
             concurrency: 8,
             max_tokens: 16,
+            timeout: Some(Duration::from_secs(30)),
+            retries: 2,
             serve: ServeConfig::default(),
         }
     }
@@ -70,6 +79,15 @@ pub struct ServeBench {
     /// latency percentiles come from the median-throughput repeat; the
     /// regression gate compares [`ServeBench::median_rps`].
     pub rps_runs: Vec<f64>,
+    /// `overloaded` sheds the clients observed (each may then have been
+    /// retried within budget).
+    pub shed: u64,
+    /// Attempts re-issued by the client retry machinery.
+    pub retried: u64,
+    /// Requests that failed for good after exhausting retries.  The run
+    /// errors when this is non-zero, so a persisted row always has 0 —
+    /// the field exists for the failure message and the printout.
+    pub failed: u64,
 }
 
 impl ServeBench {
@@ -114,6 +132,13 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
     let gen_lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
     let score_lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
     let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let shed = Arc::new(AtomicU64::new(0));
+    let retried = Arc::new(AtomicU64::new(0));
+    let client_cfg = ClientConfig {
+        connect_timeout: cfg.timeout,
+        io_timeout: cfg.timeout,
+        retry: RetryPolicy { retries: cfg.retries, ..RetryPolicy::default() },
+    };
     let started = Instant::now();
     std::thread::scope(|scope| {
         for worker in 0..concurrency {
@@ -127,8 +152,11 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
             let gen_lat = gen_lat.clone();
             let score_lat = score_lat.clone();
             let errors = errors.clone();
+            let shed = shed.clone();
+            let retried = retried.clone();
+            let client_cfg = client_cfg.clone();
             scope.spawn(move || {
-                let mut client = match Client::connect(addr) {
+                let mut client = match Client::connect_with(addr, client_cfg) {
                     Ok(client) => client,
                     Err(err) => {
                         errors.lock().unwrap().push(format!("{err:#}"));
@@ -145,6 +173,7 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
                             top_k: 0,
                             temperature: 1.0,
                             seed: (worker * 1000 + i) as u64,
+                            deadline_ms: 0,
                         })
                     } else {
                         client.score("the cat sat on the mat and the dog sat on the log")
@@ -161,6 +190,8 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
                         Err(err) => errors.lock().unwrap().push(format!("{err:#}")),
                     }
                 }
+                shed.fetch_add(client.stats.shed.load(Ordering::Relaxed), Ordering::Relaxed);
+                retried.fetch_add(client.stats.retries.load(Ordering::Relaxed), Ordering::Relaxed);
             });
         }
     });
@@ -189,10 +220,12 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
         }
     };
 
+    let shed = shed.load(Ordering::Relaxed);
+    let retried = retried.load(Ordering::Relaxed);
     let errors = errors.lock().unwrap();
     if !errors.is_empty() {
         return Err(anyhow!(
-            "{} of {total_requests} requests failed; first: {}",
+            "{} of {total_requests} requests failed (shed {shed}, retried {retried}); first: {}",
             errors.len(),
             errors[0]
         ));
@@ -228,6 +261,9 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
         dtype,
         max_tokens: cfg.max_tokens,
         rps_runs: Vec::new(),
+        shed,
+        retried,
+        failed: 0, // non-zero error counts returned Err above
     })
 }
 
@@ -248,11 +284,17 @@ pub fn run_repeated(
         runs.push(run(engine.clone(), cfg)?);
     }
     let rps: Vec<f64> = runs.iter().map(|b| b.requests_per_sec()).collect();
+    // Resilience counters aggregate over ALL repeats (the median pick is
+    // about latency, not about hiding sheds).
+    let shed: u64 = runs.iter().map(|b| b.shed).sum();
+    let retried: u64 = runs.iter().map(|b| b.retried).sum();
     let mut order: Vec<usize> = (0..repeats).collect();
     order.sort_by(|&a, &b| rps[a].partial_cmp(&rps[b]).unwrap_or(std::cmp::Ordering::Equal));
     let median_idx = order[repeats / 2];
     let mut bench = runs.swap_remove(median_idx);
     bench.rps_runs = rps;
+    bench.shed = shed;
+    bench.retried = retried;
     Ok(bench)
 }
 
@@ -288,6 +330,10 @@ pub fn print(bench: &ServeBench) {
     println!(
         "  kernel threads: {}   pool workers: {}   simd: {}   dtype: {}",
         bench.threads, bench.pool_workers, bench.simd, bench.dtype
+    );
+    println!(
+        "  resilience: {} shed (overloaded), {} retried, {} failed",
+        bench.shed, bench.retried, bench.failed
     );
     if bench.rps_runs.len() > 1 {
         let runs: Vec<String> = bench.rps_runs.iter().map(|r| format!("{r:.1}")).collect();
@@ -335,6 +381,10 @@ pub fn write_json(bench: &ServeBench, path: impl AsRef<std::path::Path>) -> Resu
             "requests_per_sec_runs",
             Json::arr(bench.rps_runs.iter().map(|&r| Json::Float(r))),
         ),
+        // Additive fields (schema 2 stays valid): resilience counters.
+        ("shed", Json::Int(bench.shed as i64)),
+        ("retried", Json::Int(bench.retried as i64)),
+        ("failed", Json::Int(bench.failed as i64)),
         ("batches", Json::Int(bench.batches as i64)),
         ("mean_batch", Json::Float(bench.mean_batch())),
         ("max_batch_observed", Json::Int(bench.max_batch_observed as i64)),
@@ -365,6 +415,7 @@ mod tests {
             concurrency: 2,
             max_tokens: 3,
             serve: ServeConfig { max_batch: 4, ..ServeConfig::default() },
+            ..ServeBenchConfig::default()
         };
         let bench = run_repeated(engine, &cfg, 2).unwrap();
         assert_eq!(bench.requests, 8);
@@ -393,5 +444,9 @@ mod tests {
         assert!(parsed.get("pool_workers").and_then(Json::as_i64).is_some());
         assert!(parsed.get("simd").and_then(Json::as_str).is_some());
         assert_eq!(parsed.get("dtype").unwrap().as_str(), Some("f32"));
+        // Resilience counters persist; a clean run never records failures.
+        assert_eq!(parsed.get("failed").unwrap().as_i64(), Some(0));
+        assert!(parsed.get("shed").and_then(Json::as_i64).is_some());
+        assert!(parsed.get("retried").and_then(Json::as_i64).is_some());
     }
 }

@@ -5,9 +5,18 @@
 //! ```text
 //! magic "CCECKPT1" (8 bytes)
 //! header_len: u64 LE
-//! header: JSON  { step, tensors: [{name, shape, dtype, offset, bytes}] }
+//! header: JSON  { step, tensors: [{name, shape, dtype, offset, bytes}],
+//!                 payload_bytes, payload_crc32 }
 //! payload: concatenated raw tensor data
 //! ```
+//!
+//! Crash safety (PR 6): [`Checkpoint::save`] writes to `*.tmp`, fsyncs,
+//! then atomically renames — a crash mid-save can never corrupt a
+//! previously published checkpoint, and a torn `*.tmp` never loads (wrong
+//! name AND failing integrity checks).  The header's `payload_bytes` +
+//! `payload_crc32` ([`crate::util::crc32`]) let [`Checkpoint::load`]
+//! reject truncation and bit-rot with a precise error; headers written
+//! before these fields existed still load, with a warning.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -16,6 +25,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::{DType, Data, HostTensor};
 use crate::util::json::Json;
+use crate::util::{crc32, faults};
 
 const MAGIC: &[u8; 8] = b"CCECKPT1";
 
@@ -50,16 +60,35 @@ impl Checkpoint {
         let header = Json::obj(vec![
             ("step", Json::Int(self.step as i64)),
             ("tensors", Json::Array(entries)),
+            // Integrity fields: the loader verifies both before trusting
+            // any tensor bytes.
+            ("payload_bytes", Json::Int(payload.len() as i64)),
+            ("payload_crc32", Json::Int(crc32(&payload) as i64)),
         ])
         .to_string();
 
         let tmp = path.as_ref().with_extension("tmp");
         {
-            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-            f.write_all(MAGIC)?;
-            f.write_all(&(header.len() as u64).to_le_bytes())?;
-            f.write_all(header.as_bytes())?;
-            f.write_all(&payload)?;
+            let f = std::fs::File::create(&tmp)?;
+            let mut w = std::io::BufWriter::new(&f);
+            w.write_all(MAGIC)?;
+            w.write_all(&(header.len() as u64).to_le_bytes())?;
+            w.write_all(header.as_bytes())?;
+            // Chaos site: a crash mid-payload leaves a torn tmp file and
+            // must never reach the rename below.
+            if faults::fire("ckpt.short_write") {
+                w.write_all(&payload[..payload.len() / 2])?;
+                w.flush()?;
+                bail!(
+                    "fault injected: ckpt.short_write (simulated crash before atomic \
+                     publish; previous checkpoint untouched)"
+                );
+            }
+            w.write_all(&payload)?;
+            w.flush()?;
+            // Durability before visibility: the rename must not land
+            // before the bytes do.
+            f.sync_all()?;
         }
         std::fs::rename(&tmp, path.as_ref())?; // atomic publish
         Ok(())
@@ -83,6 +112,35 @@ impl Checkpoint {
         let header = Json::parse(std::str::from_utf8(&header_bytes)?)?;
         let mut payload = Vec::new();
         f.read_to_end(&mut payload)?;
+
+        // Integrity gate before any tensor is trusted.  Old headers
+        // (pre-checksum) lack both fields — load them, but say so.
+        match header.get("payload_bytes").and_then(Json::as_i64) {
+            Some(expect) if expect as usize != payload.len() => bail!(
+                "corrupt/truncated checkpoint {:?}: payload is {} bytes, header says {}",
+                path.as_ref(),
+                payload.len(),
+                expect
+            ),
+            Some(_) => {
+                if let Some(expect) = header.get("payload_crc32").and_then(Json::as_i64) {
+                    let got = crc32(&payload);
+                    if got as i64 != expect {
+                        bail!(
+                            "corrupt checkpoint {:?}: payload checksum mismatch \
+                             (crc32 {got:#010x}, header says {:#010x})",
+                            path.as_ref(),
+                            expect as u32
+                        );
+                    }
+                }
+            }
+            None => eprintln!(
+                "[checkpoint] warning: {:?} predates payload checksums; \
+                 integrity not verified",
+                path.as_ref()
+            ),
+        }
 
         let step = header.req("step")?.as_i64().unwrap_or(0) as u64;
         let mut tensors = Vec::new();
@@ -212,6 +270,56 @@ mod tests {
         ckpt.save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt/truncated checkpoint"), "got: {err}");
+    }
+
+    #[test]
+    fn bit_flip_in_payload_detected() {
+        let ckpt = Checkpoint {
+            step: 2,
+            tensors: vec![("x".into(), HostTensor::f32(vec![8], vec![1.0; 8]).unwrap())],
+        };
+        let path = std::env::temp_dir().join("cce_ckpt_flip.bin");
+        ckpt.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 3;
+        bytes[last] ^= 0x10; // flip one payload bit; length unchanged
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+    }
+
+    #[test]
+    fn legacy_checkpoints_without_checksums_still_load() {
+        // Hand-build a pre-PR-6 file: same format, header without the
+        // payload_bytes/payload_crc32 fields.
+        let t = HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let mut payload = Vec::new();
+        write_data(&mut payload, &t.data);
+        let header = Json::obj(vec![
+            ("step", Json::Int(42)),
+            (
+                "tensors",
+                Json::Array(vec![Json::obj(vec![
+                    ("name", Json::str("x")),
+                    ("shape", Json::Array(vec![Json::Int(3)])),
+                    ("dtype", Json::str(DType::F32.name())),
+                    ("offset", Json::Int(0)),
+                    ("bytes", Json::Int(payload.len() as i64)),
+                ])]),
+            ),
+        ])
+        .to_string();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&payload);
+        let path = std::env::temp_dir().join("cce_ckpt_legacy.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.tensors[0].1, t);
     }
 }

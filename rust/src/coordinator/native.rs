@@ -141,10 +141,12 @@ impl NativeState {
                 tokenizer.vocab_size()
             );
         }
-        let (window, seq_len) = match std::fs::read_to_string(path.with_extension("model.json")) {
+        let sidecar = path.with_extension("model.json");
+        let (window, seq_len) = match std::fs::read_to_string(&sidecar) {
             Err(_) => (None, None), // older checkpoint without the sidecar
             Ok(text) => {
                 let meta = crate::util::Json::parse(&text)?;
+                verify_sidecar(&meta, &sidecar)?;
                 let field = |key: &str| meta.get(key).and_then(|v| v.as_i64()).map(|x| x as usize);
                 (field("window"), field("seq_len"))
             }
@@ -572,19 +574,80 @@ impl NativeTrainer {
     /// Save checkpoint + tokenizer vocabulary + model hyperparameters
     /// (`.model.json` sidecar, so serving needs no training flags; the
     /// sidecar carries the storage dtype tag next to the per-tensor dtype
-    /// in the checkpoint header).
+    /// in the checkpoint header).  Like the checkpoint itself, the sidecar
+    /// is written atomically (tmp + fsync + rename) and carries a `crc32`
+    /// over the compact serialization of its other fields, verified by
+    /// [`NativeState::load_bundle`].
     pub fn save_checkpoint(&self, state: &NativeState, path: &std::path::Path) -> Result<()> {
         state.to_checkpoint(self.vocab, self.model.d_model)?.save(path)?;
         self.tokenizer.save(path.with_extension("vocab.json"))?;
-        let meta = crate::util::Json::obj(vec![
+        let mut meta = crate::util::Json::obj(vec![
             ("d_model", crate::util::Json::Int(self.model.d_model as i64)),
             ("window", crate::util::Json::Int(self.model.window as i64)),
             ("seq_len", crate::util::Json::Int(self.model.seq_len as i64)),
             ("vocab", crate::util::Json::Int(self.vocab as i64)),
             ("dtype", crate::util::Json::str(state.dtype().name())),
         ]);
-        std::fs::write(path.with_extension("model.json"), meta.to_string_pretty())?;
+        // Checksum over the compact form of everything above; key order is
+        // preserved by the JSON layer, so the loader can reproduce it.
+        let body = meta.to_string();
+        if let crate::util::Json::Object(fields) = &mut meta {
+            fields.push((
+                "crc32".into(),
+                crate::util::Json::Int(crate::util::crc32(body.as_bytes()) as i64),
+            ));
+        }
+        write_atomic(&path.with_extension("model.json"), &meta.to_string_pretty())?;
         Ok(())
+    }
+}
+
+/// Write a small text file atomically: `<path>.tmp` + fsync + rename, so a
+/// crash mid-write never leaves a torn file at `path`.
+fn write_atomic(path: &std::path::Path, contents: &str) -> Result<()> {
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Validate a parsed `.model.json` sidecar against its embedded `crc32`
+/// (over the compact serialization of the other fields, in stored key
+/// order).  Sidecars from before the checksum existed load with a warning.
+fn verify_sidecar(meta: &crate::util::Json, path: &std::path::Path) -> Result<()> {
+    use crate::util::Json;
+    let fields = match meta {
+        Json::Object(fields) => fields,
+        other => bail!("model sidecar {path:?} is not a JSON object: {other:?}"),
+    };
+    match meta.get("crc32").and_then(Json::as_i64) {
+        None => {
+            eprintln!(
+                "[checkpoint] warning: {path:?} predates sidecar checksums; \
+                 integrity not verified"
+            );
+            Ok(())
+        }
+        Some(expect) => {
+            let body: Vec<(String, Json)> =
+                fields.iter().filter(|(k, _)| k != "crc32").cloned().collect();
+            let got = crate::util::crc32(Json::Object(body).to_string().as_bytes());
+            if got as i64 != expect {
+                bail!(
+                    "corrupt model sidecar {path:?}: checksum mismatch \
+                     (crc32 {got:#010x}, file says {:#010x})",
+                    expect as u32
+                );
+            }
+            Ok(())
+        }
     }
 }
 
@@ -770,8 +833,27 @@ mod tests {
         assert_eq!(bundle.tokenizer.vocab_size(), trainer.vocab);
         assert_eq!(bundle.state.emb, state.emb);
         assert_eq!(bundle.state.cls, state.cls);
+        // A tampered sidecar fails its checksum with a pointed error.
+        let sidecar = path.with_extension("model.json");
+        let pristine = std::fs::read_to_string(&sidecar).unwrap();
+        assert!(pristine.contains("crc32"), "sidecar must carry a checksum");
+        std::fs::write(&sidecar, pristine.replace("\"seq_len\": 64", "\"seq_len\": 65")).unwrap();
+        let err = NativeState::load_bundle(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt model sidecar"), "got: {err}");
+        // A checksum-less (pre-PR-6) sidecar still loads, with a warning.
+        let stripped = crate::util::Json::parse(&pristine)
+            .map(|meta| match meta {
+                crate::util::Json::Object(fields) => crate::util::Json::Object(
+                    fields.into_iter().filter(|(k, _)| k != "crc32").collect(),
+                ),
+                other => other,
+            })
+            .unwrap();
+        std::fs::write(&sidecar, stripped.to_string_pretty()).unwrap();
+        let legacy = NativeState::load_bundle(&path).unwrap();
+        assert_eq!(legacy.seq_len, Some(trainer.model.seq_len));
         // A pre-sidecar checkpoint still loads, with unknown window.
-        std::fs::remove_file(path.with_extension("model.json")).unwrap();
+        std::fs::remove_file(sidecar).unwrap();
         let old = NativeState::load_bundle(&path).unwrap();
         assert_eq!(old.window, None);
         assert_eq!(old.state.emb, state.emb);

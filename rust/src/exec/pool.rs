@@ -343,6 +343,25 @@ mod tests {
     }
 
     #[test]
+    fn inline_fast_path_panic_propagates_and_pool_survives() {
+        // One task takes the inline path (no catch_unwind layer): the
+        // panic must reach the caller raw, and the pool must stay usable
+        // with no generation consumed and no workers spawned.
+        let pool = ThreadPool::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(vec![move || -> usize { panic!("inline task exploded") }])
+        }));
+        assert!(result.is_err(), "inline panic must propagate to the caller");
+        let payload = result.unwrap_err();
+        let msg = payload.downcast_ref::<&'static str>().copied().unwrap_or("");
+        assert!(msg.contains("inline task exploded"), "payload intact, got {msg:?}");
+        assert_eq!(pool.generations(), 0, "a panicked inline run is not a generation");
+        assert_eq!(pool.workers(), 0, "inline fast path must not spawn workers");
+        let ok = pool.run(vec![move || 41 + 1]);
+        assert_eq!(ok, vec![42], "pool serves inline work after the panic");
+    }
+
+    #[test]
     fn drop_joins_every_worker() {
         let pool = ThreadPool::new(4);
         let shared = pool.shared.clone();

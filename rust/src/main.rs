@@ -59,9 +59,12 @@ fn usage() -> ! {
         "usage: cce <command> [options]\n\ncommands:\n  \
          train      run a training job (--backend/--method/--steps/--corpus/...)\n  \
          eval       evaluate a checkpoint (--checkpoint) [--backend]\n  \
-         serve      serve a checkpoint over TCP (--checkpoint|--demo, --port)\n  \
-         client     one-shot client for a running server (--port, --op)\n  \
-         servebench serving throughput/latency harness [--json]\n  \
+         serve      serve a checkpoint over TCP (--checkpoint|--demo, --port,\n             \
+                    --drain-ms, --idle-timeout-ms)\n  \
+         client     one-shot client for a running server (--port, --op,\n             \
+                    --timeout-ms, --retries, --deadline-ms)\n  \
+         servebench serving throughput/latency harness [--json]\n             \
+                    (--timeout-ms, --retries)\n  \
          table1     Table 1: memory & time per method [--backend/--json]\n  \
          tableA1    Table A1: Table 1 with ignored tokens removed\n  \
          tableA2    Table A2: backward-pass breakdown (pjrt)\n  \
@@ -403,6 +406,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get("max-batch", 8usize)?,
         max_wait: std::time::Duration::from_millis(args.get("max-wait-ms", 3u64)?),
         queue_depth: args.get("queue-depth", 64usize)?,
+        idle_timeout: std::time::Duration::from_millis(
+            args.get("idle-timeout-ms", 300_000u64)?,
+        ),
+        drain: std::time::Duration::from_millis(args.get("drain-ms", 5_000u64)?),
     };
     eprintln!(
         "[serve] model: vocab {} d {} window {} step {} dtype {} ({:.1} MB params) | \
@@ -429,10 +436,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
-    use cce::serve::{Client, GenParams};
+    use cce::serve::{Client, ClientConfig, GenParams, RetryPolicy};
     let host = args.get("host", "127.0.0.1".to_string())?;
     let port: u16 = args.get("port", 7343u16)?;
-    let mut client = Client::connect((host.as_str(), port))?;
+    // --timeout-ms 0 = block forever; retries cover `overloaded` responses
+    // and transport failures with backoff + jitter.
+    let timeout_ms = args.get("timeout-ms", 10_000u64)?;
+    let timeout = (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms));
+    let cfg = ClientConfig {
+        connect_timeout: timeout,
+        io_timeout: timeout,
+        retry: RetryPolicy { retries: args.get("retries", 2u32)?, ..RetryPolicy::default() },
+    };
+    let mut client = Client::connect_with((host.as_str(), port), cfg)?;
     let op = args.get("op", "generate".to_string())?;
     let response = match op.as_str() {
         "generate" => client.generate(GenParams {
@@ -441,6 +457,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             top_k: args.get("top-k", 0usize)?,
             temperature: args.get("temperature", 0.0f32)?,
             seed: args.get("seed", 0u64)?,
+            deadline_ms: args.get("deadline-ms", 0u64)?,
         })?,
         "score" => {
             let text = args.get("text", "the cat sat on the mat".to_string())?;
@@ -459,10 +476,13 @@ fn cmd_servebench(args: &Args) -> Result<()> {
     let opts = kernel_options(args)?;
     // No checkpoint: same demo engine `cce serve --demo` would run.
     let engine = build_engine(args, opts, true)?;
+    let timeout_ms = args.get("timeout-ms", 30_000u64)?;
     let cfg = sb::ServeBenchConfig {
         requests: args.get("requests", 64usize)?,
         concurrency: args.get("concurrency", 8usize)?,
         max_tokens: args.get("max-tokens", 16usize)?,
+        timeout: (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms)),
+        retries: args.get("retries", 2u32)?,
         serve: cce::serve::ServeConfig {
             workers: args.get("workers", 2usize)?,
             max_batch: args.get("max-batch", 8usize)?,

@@ -15,17 +15,29 @@
 //! * each job carries its own response [`std::sync::mpsc::Sender`]; results
 //!   route back to exactly the connection that asked.
 //!
+//! Failure domains (PR 6): each engine call is wrapped in
+//! [`std::panic::catch_unwind`], so a poisoned request answers `internal`
+//! while the worker, the rest of the batch, and the server survive (the
+//! same discipline [`crate::exec::pool`] applies one level down).  Jobs
+//! whose [`Job::deadline`] expired while queued are shed *before* kernel
+//! work with `deadline_exceeded`.  Live queue depth and a service-time
+//! EWMA feed [`Batcher::retry_after_ms`], the admission-control hint on
+//! `overloaded` responses, and [`Batcher::drain`] bounds graceful
+//! shutdown.
+//!
 //! Generate jobs in one batch decode in lockstep through a single blocked
 //! kernel per step ([`Engine::generate_batch`]); score jobs fuse into a
 //! single teacher-forced problem ([`Engine::score_batch`]).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::serve::engine::Engine;
-use crate::serve::protocol::{GenParams, Request, Response};
+use crate::serve::protocol::{ErrorCode, GenParams, Request, Response};
+use crate::util::faults;
 
 /// How long an idle worker waits on the queue before re-checking the stop
 /// flag (bounds shutdown latency).
@@ -35,6 +47,19 @@ const IDLE_POLL: Duration = Duration::from_millis(25);
 pub struct Job {
     pub request: Request,
     pub respond: mpsc::Sender<Response>,
+    /// Absolute shed deadline derived from the request's `deadline_ms`;
+    /// checked when the batch is assembled, before any kernel work.
+    pub deadline: Option<Instant>,
+}
+
+impl Job {
+    /// Build a job, starting the request's `deadline_ms` clock now.
+    pub fn new(request: Request, respond: mpsc::Sender<Response>) -> Job {
+        let deadline = request
+            .deadline_ms()
+            .and_then(|ms| Instant::now().checked_add(Duration::from_millis(ms)));
+        Job { request, respond, deadline }
+    }
 }
 
 /// Batcher counters, exposed by the `info` endpoint.
@@ -43,6 +68,10 @@ pub struct BatchStats {
     pub batches: AtomicU64,
     pub jobs: AtomicU64,
     pub max_batch: AtomicU64,
+    /// Jobs shed because their `deadline_ms` expired while queued.
+    pub shed_deadline: AtomicU64,
+    /// Engine panics isolated at the batch boundary (the workers survive).
+    pub panics: AtomicU64,
 }
 
 impl BatchStats {
@@ -57,8 +86,15 @@ impl BatchStats {
 pub struct Batcher {
     tx: mpsc::SyncSender<Job>,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    worker_count: usize,
     stats: Arc<BatchStats>,
     stop: Arc<AtomicBool>,
+    /// Jobs submitted but not yet picked up by a worker.
+    queued: Arc<AtomicU64>,
+    /// Jobs submitted but not yet answered (queued + executing).
+    in_flight: Arc<AtomicU64>,
+    /// EWMA of per-job service time in microseconds (0 until first batch).
+    job_micros: Arc<AtomicU64>,
 }
 
 impl Batcher {
@@ -74,19 +110,45 @@ impl Batcher {
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(BatchStats::default());
         let stop = Arc::new(AtomicBool::new(false));
+        let queued = Arc::new(AtomicU64::new(0));
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let job_micros = Arc::new(AtomicU64::new(0));
         let max_batch = max_batch.max(1);
-        let handles = (0..workers.max(1))
+        let worker_count = workers.max(1);
+        let handles = (0..worker_count)
             .map(|_| {
                 let engine = engine.clone();
                 let rx = rx.clone();
                 let stats = stats.clone();
                 let stop = stop.clone();
+                let queued = queued.clone();
+                let in_flight = in_flight.clone();
+                let job_micros = job_micros.clone();
                 std::thread::spawn(move || {
-                    worker_loop(&engine, &rx, &stats, &stop, max_batch, max_wait)
+                    worker_loop(WorkerCtx {
+                        engine: &engine,
+                        rx: &rx,
+                        stats: &stats,
+                        stop: &stop,
+                        queued: &queued,
+                        in_flight: &in_flight,
+                        job_micros: &job_micros,
+                        max_batch,
+                        max_wait,
+                    })
                 })
             })
             .collect();
-        Batcher { tx, workers: Mutex::new(handles), stats, stop }
+        Batcher {
+            tx,
+            workers: Mutex::new(handles),
+            worker_count,
+            stats,
+            stop,
+            queued,
+            in_flight,
+            job_micros,
+        }
     }
 
     /// Enqueue a job.  `Err(job)` means the queue is full (backpressure) or
@@ -96,19 +158,64 @@ impl Batcher {
         if self.stop.load(Ordering::SeqCst) {
             return Err(job);
         }
-        self.tx.try_send(job).map_err(|err| match err {
-            mpsc::TrySendError::Full(job) => job,
-            mpsc::TrySendError::Disconnected(job) => job,
-        })
+        // Count optimistically so a racing drain() can never observe the
+        // queue push without the in-flight credit.
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .try_send(job)
+            .map_err(|err| {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                match err {
+                    mpsc::TrySendError::Full(job) => job,
+                    mpsc::TrySendError::Disconnected(job) => job,
+                }
+            })
     }
 
     pub fn stats(&self) -> &BatchStats {
         &self.stats
     }
 
+    /// Jobs submitted but not yet answered.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Admission-control hint for `overloaded` responses: roughly how long
+    /// until the current queue has been served, from live depth × the
+    /// service-time EWMA ÷ workers.  Clamped to `[5 ms, 5 s]`; before any
+    /// batch has completed the EWMA defaults to 10 ms/job.
+    pub fn retry_after_ms(&self) -> u64 {
+        let queued = self.queued.load(Ordering::SeqCst);
+        let per_job_micros = match self.job_micros.load(Ordering::Relaxed) {
+            0 => 10_000,
+            micros => micros,
+        };
+        let workers = self.worker_count.max(1) as u64;
+        ((queued + 1).saturating_mul(per_job_micros) / workers / 1000).clamp(5, 5_000)
+    }
+
+    /// Graceful drain: wait (bounded) until every submitted job has been
+    /// answered.  Returns `false` if the deadline hit first.  Workers keep
+    /// running during the drain; pair with a stopped accept loop so no new
+    /// work arrives.
+    pub fn drain(&self, deadline: Duration) -> bool {
+        let until = Instant::now() + deadline;
+        while self.in_flight.load(Ordering::SeqCst) > 0 {
+            if Instant::now() >= until {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
     /// Stop the workers.  Queued-but-unprocessed jobs are dropped, which
     /// closes their response channels — waiting connections observe the
-    /// hangup and answer "shutting down".
+    /// hangup and answer "shutting down".  Call [`Batcher::drain`] first
+    /// for a graceful shutdown.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         let mut workers = match self.workers.lock() {
@@ -121,21 +228,28 @@ impl Batcher {
     }
 }
 
-fn worker_loop(
-    engine: &Engine,
-    rx: &Mutex<mpsc::Receiver<Job>>,
-    stats: &BatchStats,
-    stop: &AtomicBool,
+/// Everything one batch worker needs (bundled to keep the spawn site and
+/// signatures readable).
+struct WorkerCtx<'a> {
+    engine: &'a Engine,
+    rx: &'a Mutex<mpsc::Receiver<Job>>,
+    stats: &'a BatchStats,
+    stop: &'a AtomicBool,
+    queued: &'a AtomicU64,
+    in_flight: &'a AtomicU64,
+    job_micros: &'a AtomicU64,
     max_batch: usize,
     max_wait: Duration,
-) {
+}
+
+fn worker_loop(ctx: WorkerCtx<'_>) {
     loop {
-        if stop.load(Ordering::SeqCst) {
+        if ctx.stop.load(Ordering::SeqCst) {
             return;
         }
         let mut jobs: Vec<Job> = Vec::new();
         {
-            let guard = match rx.lock() {
+            let guard = match ctx.rx.lock() {
                 Ok(guard) => guard,
                 Err(poisoned) => poisoned.into_inner(),
             };
@@ -144,8 +258,8 @@ fn worker_loop(
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => return,
             }
-            let deadline = Instant::now() + max_wait;
-            while jobs.len() < max_batch {
+            let deadline = Instant::now() + ctx.max_wait;
+            while jobs.len() < ctx.max_batch {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -156,55 +270,142 @@ fn worker_loop(
                 }
             }
         }
-        stats.record(jobs.len());
-        run_batch(engine, jobs);
+        ctx.queued.fetch_sub(jobs.len() as u64, Ordering::SeqCst);
+        ctx.stats.record(jobs.len());
+        let batch_len = jobs.len();
+        let started = Instant::now();
+        // Belt + braces: run_batch already isolates engine panics per
+        // sub-batch; this outer guard keeps the worker alive even if the
+        // routing code itself has a bug.  Jobs consumed by such a panic
+        // drop their response senders — connections observe the hangup.
+        let routed = catch_unwind(AssertUnwindSafe(|| {
+            run_batch(ctx.engine, jobs, ctx.stats, ctx.in_flight)
+        }));
+        if routed.is_err() {
+            ctx.stats.panics.fetch_add(1, Ordering::Relaxed);
+            eprintln!("[batcher] worker survived a panic outside the batch boundary");
+        }
+        // Service-time EWMA (per job, in µs): new = 7/8 old + 1/8 sample.
+        if batch_len > 0 {
+            let sample = (started.elapsed().as_micros() as u64 / batch_len as u64).max(1);
+            let old = ctx.job_micros.load(Ordering::Relaxed);
+            let next = if old == 0 { sample } else { old - old / 8 + sample / 8 };
+            ctx.job_micros.store(next, Ordering::Relaxed);
+        }
     }
 }
 
-/// Execute one assembled batch and route the responses.
-fn run_batch(engine: &Engine, jobs: Vec<Job>) {
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Execute one assembled batch and route the responses.  Every job is
+/// answered exactly once and decrements `in_flight` exactly once, on every
+/// path — success, engine error, shed deadline, or isolated panic.
+fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, in_flight: &AtomicU64) {
+    let answer = |respond: &mpsc::Sender<Response>, response: Response| {
+        let _ = respond.send(response); // client may have hung up
+        in_flight.fetch_sub(1, Ordering::SeqCst);
+    };
+    let now = Instant::now();
     let mut gens: Vec<(GenParams, mpsc::Sender<Response>)> = Vec::new();
     let mut scores: Vec<(String, mpsc::Sender<Response>)> = Vec::new();
     for job in jobs {
+        // Deadline shed happens here — after queueing, before kernels.
+        if job.deadline.is_some_and(|deadline| now >= deadline) {
+            stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            answer(
+                &job.respond,
+                Response::err(
+                    ErrorCode::DeadlineExceeded,
+                    "deadline_ms expired while queued; shed before execution",
+                ),
+            );
+            continue;
+        }
         match job.request {
             Request::Generate(params) => gens.push((params, job.respond)),
-            Request::Score { text } => scores.push((text, job.respond)),
+            Request::Score { text, .. } => scores.push((text, job.respond)),
             // Info/shutdown are answered inline by the connection; they
             // never enter the queue.
-            other => {
-                let _ = job
-                    .respond
-                    .send(Response::error(format!("op {other:?} is not batchable")));
-            }
+            other => answer(
+                &job.respond,
+                Response::err(ErrorCode::InvalidRequest, format!("op {other:?} is not batchable")),
+            ),
         }
     }
     if !gens.is_empty() {
         let params: Vec<GenParams> = gens.iter().map(|(p, _)| p.clone()).collect();
-        for ((_, respond), result) in gens.iter().zip(engine.generate_batch(&params)) {
-            let response = match result {
-                Ok(out) => Response::Generate {
-                    text: out.text,
-                    tokens: out.tokens,
-                    logprobs: out.logprobs,
-                },
-                Err(err) => Response::error(format!("{err:#}")),
-            };
-            let _ = respond.send(response); // client may have hung up
+        let results = catch_unwind(AssertUnwindSafe(|| {
+            faults::maybe_panic("batcher.panic");
+            engine.generate_batch(&params)
+        }));
+        match results {
+            Ok(results) => {
+                for ((_, respond), result) in gens.iter().zip(results) {
+                    let response = match result {
+                        Ok(out) => Response::Generate {
+                            text: out.text,
+                            tokens: out.tokens,
+                            logprobs: out.logprobs,
+                        },
+                        // Engine-level rejections are request-shaped
+                        // problems (bad temperature/top_k, oversize).
+                        Err(err) => Response::err(ErrorCode::InvalidRequest, format!("{err:#}")),
+                    };
+                    answer(respond, response);
+                }
+            }
+            Err(payload) => {
+                stats.panics.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "batch execution panicked: {} (request isolated; server still serving)",
+                    panic_message(&payload)
+                );
+                for (_, respond) in &gens {
+                    answer(respond, Response::err(ErrorCode::Internal, &msg));
+                }
+            }
         }
     }
     if !scores.is_empty() {
         let texts: Vec<String> = scores.iter().map(|(t, _)| t.clone()).collect();
-        for ((_, respond), result) in scores.iter().zip(engine.score_batch(&texts)) {
-            let response = match result {
-                Ok(res) => Response::Score {
-                    nll: res.nll,
-                    perplexity: res.perplexity,
-                    count: res.count,
-                    logprobs: res.logprobs,
-                },
-                Err(err) => Response::error(format!("{err:#}")),
-            };
-            let _ = respond.send(response);
+        let results = catch_unwind(AssertUnwindSafe(|| {
+            faults::maybe_panic("batcher.panic");
+            engine.score_batch(&texts)
+        }));
+        match results {
+            Ok(results) => {
+                for ((_, respond), result) in scores.iter().zip(results) {
+                    let response = match result {
+                        Ok(res) => Response::Score {
+                            nll: res.nll,
+                            perplexity: res.perplexity,
+                            count: res.count,
+                            logprobs: res.logprobs,
+                        },
+                        Err(err) => Response::err(ErrorCode::InvalidRequest, format!("{err:#}")),
+                    };
+                    answer(respond, response);
+                }
+            }
+            Err(payload) => {
+                stats.panics.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "batch execution panicked: {} (request isolated; server still serving)",
+                    panic_message(&payload)
+                );
+                for (_, respond) in &scores {
+                    answer(respond, Response::err(ErrorCode::Internal, &msg));
+                }
+            }
         }
     }
 }
@@ -239,9 +440,9 @@ mod tests {
                     ..GenParams::default()
                 })
             } else {
-                Request::Score { text: "the cat sat".into() }
+                Request::Score { text: "the cat sat".into(), deadline_ms: 0 }
             };
-            batcher.submit(Job { request, respond: tx }).map_err(|_| ()).unwrap();
+            batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
             rxs.push((i, rx));
         }
         for (i, rx) in rxs {
@@ -255,6 +456,10 @@ mod tests {
         let stats = batcher.stats();
         assert_eq!(stats.jobs.load(Ordering::Relaxed), 6);
         assert!(stats.batches.load(Ordering::Relaxed) >= 1);
+        assert_eq!(batcher.in_flight(), 0, "all jobs answered");
+        assert!(batcher.drain(Duration::from_millis(50)), "drained batcher reports done");
+        // The service-time EWMA is live, so retry hints are data-driven.
+        assert!(batcher.retry_after_ms() >= 5);
         batcher.shutdown();
     }
 
@@ -271,7 +476,45 @@ mod tests {
         );
         batcher.shutdown(); // workers gone; queue still bounded
         let (tx, _rx) = mpsc::channel();
-        let job = Job { request: Request::Info, respond: tx };
+        let job = Job::new(Request::Info, tx);
         assert!(batcher.submit(job).is_err(), "submit after shutdown must fail");
+        assert_eq!(batcher.in_flight(), 0, "rejected submits leave no credit");
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_before_kernel_work() {
+        let engine = tiny_engine();
+        let served_before = engine.served();
+        let batcher = Batcher::start(
+            engine.clone(),
+            1,
+            4,
+            Duration::from_millis(1),
+            16,
+        );
+        let (tx, rx) = mpsc::channel();
+        // A deadline already in the past when the worker assembles.
+        let mut job = Job::new(
+            Request::Generate(GenParams {
+                prompt: "the".into(),
+                max_tokens: 64,
+                deadline_ms: 1,
+                ..GenParams::default()
+            }),
+            tx,
+        );
+        job.deadline = Some(Instant::now() - Duration::from_millis(5));
+        batcher.submit(job).map_err(|_| ()).unwrap();
+        match rx.recv_timeout(Duration::from_secs(10)).expect("response") {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::DeadlineExceeded),
+            other => panic!("unexpected response: {other:?}"),
+        }
+        assert_eq!(batcher.stats().shed_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            engine.served(),
+            served_before,
+            "a shed job must never reach the engine"
+        );
+        batcher.shutdown();
     }
 }

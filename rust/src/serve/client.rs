@@ -1,29 +1,113 @@
 //! Blocking line-protocol client — used by `cce client`, the serve bench,
 //! the roundtrip example, and the integration tests.
+//!
+//! Resilience (PR 6): [`ClientConfig`] adds connect/read timeouts and a
+//! bounded [`RetryPolicy`].  Retry applies only to *retryable* failures —
+//! `overloaded` responses (honoring the server's `retry_after_ms`
+//! admission hint) and transport errors (reconnect + resend) — with
+//! exponential backoff plus jitter so a thundering herd of clients does
+//! not re-arrive in lockstep.  [`Client::stats`] counts what happened
+//! (sheds observed, retries spent, reconnects) for `cce servebench`.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::serve::protocol::{GenParams, Request, Response};
+use crate::serve::protocol::{ErrorCode, GenParams, Request, Response};
+use crate::util::rng::Rng;
+
+/// Bounded retry with exponential backoff + jitter.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Extra attempts after the first (0 = fail fast, the old behavior).
+    pub retries: u32,
+    /// First backoff step; doubles per attempt up to `max_backoff`.  The
+    /// server's `retry_after_ms` hint overrides when larger.
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            retries: 0,
+            base_backoff: Duration::from_millis(25),
+            max_backoff: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Connection knobs.  `None` timeouts mean "block forever" (the old
+/// behavior, still the [`Client::connect`] default).
+#[derive(Debug, Clone, Default)]
+pub struct ClientConfig {
+    pub connect_timeout: Option<Duration>,
+    /// Read AND write bound per roundtrip leg.
+    pub io_timeout: Option<Duration>,
+    pub retry: RetryPolicy,
+}
+
+/// What the retry machinery observed (monotone counters).
+#[derive(Debug, Default)]
+pub struct ClientStats {
+    /// `overloaded` responses received (whether or not retried).
+    pub shed: AtomicU64,
+    /// Attempts re-issued after a retryable failure.
+    pub retries: AtomicU64,
+    /// Transport-error recoveries that re-dialed the server.
+    pub reconnects: AtomicU64,
+}
+
+/// Distinguishes client instances in the jitter seed so identical
+/// configurations still back off differently.
+static CLIENT_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// One connection to a serve instance.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Resolved once at connect so retries can re-dial without re-resolving.
+    addrs: Vec<SocketAddr>,
+    cfg: ClientConfig,
+    rng: Rng,
+    pub stats: ClientStats,
 }
 
 impl Client {
+    /// Connect with default config: no timeouts, no retries.
     pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Client> {
-        let stream = TcpStream::connect(&addr)
-            .with_context(|| format!("connecting to {addr:?}"))?;
-        stream.set_nodelay(true).ok();
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: stream })
+        Client::connect_with(addr, ClientConfig::default())
     }
 
-    /// One request/response roundtrip.
+    /// Connect with explicit timeout/retry behavior.
+    pub fn connect_with(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        cfg: ClientConfig,
+    ) -> Result<Client> {
+        let addrs: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr:?}"))?
+            .collect();
+        if addrs.is_empty() {
+            bail!("no addresses for {addr:?}");
+        }
+        let (reader, writer) = dial(&addrs, &cfg)?;
+        let seq = CLIENT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let port_salt = (addrs[0].port() as u64) << 32;
+        Ok(Client {
+            reader,
+            writer,
+            addrs,
+            cfg,
+            rng: Rng::new(0xC11E_47B0 ^ port_salt ^ seq),
+            stats: ClientStats::default(),
+        })
+    }
+
+    /// One request/response roundtrip, no retry.
     pub fn call(&mut self, request: &Request) -> Result<Response> {
         let mut line = request.to_line();
         line.push('\n');
@@ -37,10 +121,62 @@ impl Client {
         Response::parse(&reply)
     }
 
-    /// `call` that promotes protocol-level errors to `Err`.
+    /// `call` under the retry policy: `overloaded` responses and transport
+    /// errors are retried (with backoff + jitter, honoring the server's
+    /// `retry_after_ms` hint) up to `retries` extra attempts; every other
+    /// outcome — including non-retryable errors like `invalid_request` —
+    /// returns immediately.
+    pub fn call_retry(&mut self, request: &Request) -> Result<Response> {
+        let retries = self.cfg.retry.retries;
+        let mut attempt: u32 = 0;
+        loop {
+            match self.call(request) {
+                Ok(Response::Error { code, message, retry_after_ms }) if code.retryable() => {
+                    self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    if attempt >= retries {
+                        return Ok(Response::Error { code, message, retry_after_ms });
+                    }
+                    self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    self.sleep_backoff(attempt, retry_after_ms);
+                }
+                Ok(response) => return Ok(response),
+                Err(err) => {
+                    if attempt >= retries {
+                        return Err(err);
+                    }
+                    self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    self.sleep_backoff(attempt, None);
+                    // The old stream may be torn mid-line; start clean.
+                    if let Ok((reader, writer)) = dial(&self.addrs, &self.cfg) {
+                        self.reader = reader;
+                        self.writer = writer;
+                        self.stats.reconnects.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            attempt += 1;
+        }
+    }
+
+    /// Exponential backoff with full-range jitter: the server hint (when
+    /// larger) sets the base, doubled per attempt, capped, then scaled by
+    /// a uniform factor in `[0.5, 1.0]`.
+    fn sleep_backoff(&mut self, attempt: u32, hint_ms: Option<u64>) {
+        let base = (self.cfg.retry.base_backoff.as_millis() as u64) << attempt.min(10);
+        let ms = hint_ms
+            .unwrap_or(0)
+            .max(base)
+            .min(self.cfg.retry.max_backoff.as_millis() as u64);
+        let jittered = ((ms as f64) * (0.5 + 0.5 * self.rng.f64())) as u64;
+        std::thread::sleep(Duration::from_millis(jittered.max(1)));
+    }
+
+    /// `call_retry` that promotes protocol-level errors to `Err`.
     pub fn call_ok(&mut self, request: &Request) -> Result<Response> {
-        match self.call(request)? {
-            Response::Error { message } => Err(anyhow!("server error: {message}")),
+        match self.call_retry(request)? {
+            Response::Error { code, message, .. } => {
+                Err(anyhow!("server error [{}]: {message}", code.as_str()))
+            }
             response => Ok(response),
         }
     }
@@ -50,7 +186,7 @@ impl Client {
     }
 
     pub fn score(&mut self, text: &str) -> Result<Response> {
-        self.call_ok(&Request::Score { text: text.to_string() })
+        self.call_ok(&Request::Score { text: text.to_string(), deadline_ms: 0 })
     }
 
     pub fn info(&mut self) -> Result<Response> {
@@ -59,5 +195,60 @@ impl Client {
 
     pub fn shutdown(&mut self) -> Result<Response> {
         self.call_ok(&Request::Shutdown)
+    }
+}
+
+/// Dial the first address that answers, applying the configured timeouts.
+fn dial(addrs: &[SocketAddr], cfg: &ClientConfig) -> Result<(BufReader<TcpStream>, TcpStream)> {
+    let mut last_err = None;
+    for addr in addrs {
+        let dialed = match cfg.connect_timeout {
+            Some(t) => TcpStream::connect_timeout(addr, t),
+            None => TcpStream::connect(addr),
+        };
+        match dialed {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(cfg.io_timeout).ok();
+                stream.set_write_timeout(cfg.io_timeout).ok();
+                let reader = BufReader::new(stream.try_clone()?);
+                return Ok((reader, stream));
+            }
+            Err(err) => last_err = Some(err),
+        }
+    }
+    Err(anyhow!("connect failed: {}", last_err.expect("addrs checked non-empty")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryable_is_exactly_overloaded() {
+        // call_retry's loop keys off this; pin the contract here too.
+        assert!(ErrorCode::Overloaded.retryable());
+        for code in [
+            ErrorCode::InvalidRequest,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Internal,
+            ErrorCode::ShuttingDown,
+        ] {
+            assert!(!code.retryable(), "{code:?} must not be retried");
+        }
+    }
+
+    #[test]
+    fn backoff_honors_hint_and_cap() {
+        // White-box the arithmetic (not the sleep): hint wins when larger,
+        // the cap always wins, jitter keeps at least half.
+        let retry = RetryPolicy::default();
+        let base = |attempt: u32| (retry.base_backoff.as_millis() as u64) << attempt.min(10);
+        assert_eq!(base(0), 25);
+        assert_eq!(base(2), 100);
+        let capped = base(20).min(retry.max_backoff.as_millis() as u64);
+        assert_eq!(capped, 2_000, "cap bounds runaway exponentials");
+        let with_hint = 150u64.max(base(0));
+        assert_eq!(with_hint, 150, "server hint overrides a smaller base");
     }
 }

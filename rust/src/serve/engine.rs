@@ -403,6 +403,10 @@ impl Engine {
     pub fn generate_batch(&self, reqs: &[GenParams]) -> Vec<Result<GenOut>> {
         let mut slots: Vec<Slot> = reqs.iter().map(|p| self.open_slot(p)).collect();
         loop {
+            // Chaos sites: a mid-decode panic exercises the batcher's
+            // catch_unwind boundary; a stall simulates a slow kernel step.
+            crate::util::faults::maybe_panic("engine.step.panic");
+            crate::util::faults::stall("engine.step.stall_ms");
             let active: Vec<usize> = slots
                 .iter()
                 .enumerate()
@@ -582,6 +586,9 @@ impl Engine {
     /// Score a batch of texts: all rows concatenate into ONE blocked
     /// teacher-forced problem, then split per request.
     pub fn score_batch(&self, texts: &[String]) -> Vec<Result<ScoreRes>> {
+        // Chaos sites mirroring generate_batch (see above).
+        crate::util::faults::maybe_panic("engine.step.panic");
+        crate::util::faults::stall("engine.step.stall_ms");
         // Per-text token streams and their row spans in the fused problem.
         let mut h_all: Vec<f32> = Vec::new();
         let mut targets: Vec<i32> = Vec::new();
@@ -717,6 +724,7 @@ mod tests {
             top_k,
             temperature,
             seed,
+            ..GenParams::default()
         };
         let outs = engine.generate_batch(&[
             mk(0, 0.0, 0),  // greedy

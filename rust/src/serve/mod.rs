@@ -22,6 +22,12 @@
 //! `cce client --port 7343 --prompt "the"`.  `cce servebench` drives a
 //! throughput/latency harness over the full stack
 //! ([`crate::bench::serve`]).
+//!
+//! Failure semantics — structured [`ErrorCode`]s, per-request deadlines,
+//! admission control with `retry_after_ms`, client [`RetryPolicy`], panic
+//! isolation at the batch boundary, graceful drain — are documented in
+//! `docs/serving.md` and exercised by `tests/chaos.rs` via
+//! [`crate::util::faults`].
 
 pub mod batcher;
 pub mod client;
@@ -30,7 +36,7 @@ pub mod protocol;
 pub mod server;
 
 pub use batcher::{BatchStats, Batcher, Job};
-pub use client::Client;
+pub use client::{Client, ClientConfig, ClientStats, RetryPolicy};
 pub use engine::{ContextBag, Engine, GenOut, ScoreRes};
-pub use protocol::{GenParams, Request, Response};
+pub use protocol::{ErrorCode, GenParams, Request, Response};
 pub use server::{serve, ServeConfig, Server};

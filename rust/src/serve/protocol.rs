@@ -1,23 +1,29 @@
 //! Line-delimited JSON wire protocol: one request object per line in, one
 //! response object per line out, over a plain TCP stream.
 //!
-//! Requests (`op` selects the endpoint):
+//! Requests (`op` selects the endpoint; batchable ops may carry a
+//! `deadline_ms` budget — the server sheds the job with
+//! `deadline_exceeded` instead of running kernels for an answer nobody is
+//! waiting for):
 //!
 //! ```text
-//! {"op":"generate","prompt":"...","max_tokens":32,"top_k":8,"temperature":0.7,"seed":1}
-//! {"op":"score","text":"..."}
+//! {"op":"generate","prompt":"...","max_tokens":32,"top_k":8,"temperature":0.7,"seed":1,"deadline_ms":250}
+//! {"op":"score","text":"...","deadline_ms":250}
 //! {"op":"info"}
 //! {"op":"shutdown"}
 //! ```
 //!
-//! Responses always carry `"ok"`; successes echo `"op"`:
+//! Responses always carry `"ok"`; successes echo `"op"`, failures carry a
+//! machine-readable `code` (see [`ErrorCode`]) next to the human-readable
+//! `error`, plus `retry_after_ms` when the server can estimate when retry
+//! will succeed (`overloaded`):
 //!
 //! ```text
 //! {"ok":true,"op":"generate","text":"...","tokens":[...],"logprobs":[...]}
 //! {"ok":true,"op":"score","nll":2.1,"perplexity":8.2,"count":12,"logprobs":[...]}
 //! {"ok":true,"op":"info", ...model/server fields...}
 //! {"ok":true,"op":"shutdown"}
-//! {"ok":false,"error":"..."}
+//! {"ok":false,"code":"overloaded","error":"...","retry_after_ms":40}
 //! ```
 //!
 //! Everything is built on [`crate::util::json`] — no external crates, and
@@ -40,11 +46,22 @@ pub struct GenParams {
     pub top_k: usize,
     pub temperature: f32,
     pub seed: u64,
+    /// Latency budget in milliseconds, measured from server receipt.
+    /// `0` = no deadline.  An expired job is shed *before* kernel work
+    /// with a `deadline_exceeded` error.
+    pub deadline_ms: u64,
 }
 
 impl Default for GenParams {
     fn default() -> GenParams {
-        GenParams { prompt: String::new(), max_tokens: 32, top_k: 0, temperature: 0.0, seed: 0 }
+        GenParams {
+            prompt: String::new(),
+            max_tokens: 32,
+            top_k: 0,
+            temperature: 0.0,
+            seed: 0,
+            deadline_ms: 0,
+        }
     }
 }
 
@@ -52,7 +69,7 @@ impl Default for GenParams {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Generate(GenParams),
-    Score { text: String },
+    Score { text: String, deadline_ms: u64 },
     Info,
     Shutdown,
 }
@@ -60,16 +77,26 @@ pub enum Request {
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Generate(p) => Json::obj(vec![
-                ("op", Json::str("generate")),
-                ("prompt", Json::str(&p.prompt)),
-                ("max_tokens", Json::Int(p.max_tokens as i64)),
-                ("top_k", Json::Int(p.top_k as i64)),
-                ("temperature", Json::Float(p.temperature as f64)),
-                ("seed", Json::Int(p.seed as i64)),
-            ]),
-            Request::Score { text } => {
-                Json::obj(vec![("op", Json::str("score")), ("text", Json::str(text))])
+            Request::Generate(p) => {
+                let mut entries = vec![
+                    ("op", Json::str("generate")),
+                    ("prompt", Json::str(&p.prompt)),
+                    ("max_tokens", Json::Int(p.max_tokens as i64)),
+                    ("top_k", Json::Int(p.top_k as i64)),
+                    ("temperature", Json::Float(p.temperature as f64)),
+                    ("seed", Json::Int(p.seed as i64)),
+                ];
+                if p.deadline_ms > 0 {
+                    entries.push(("deadline_ms", Json::Int(p.deadline_ms as i64)));
+                }
+                Json::obj(entries)
+            }
+            Request::Score { text, deadline_ms } => {
+                let mut entries = vec![("op", Json::str("score")), ("text", Json::str(text))];
+                if *deadline_ms > 0 {
+                    entries.push(("deadline_ms", Json::Int(*deadline_ms as i64)));
+                }
+                Json::obj(entries)
             }
             Request::Info => Json::obj(vec![("op", Json::str("info"))]),
             Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
@@ -97,6 +124,7 @@ impl Request {
                             as f32,
                     },
                     seed: get_u64_wire(j, "seed", 0)?,
+                    deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
                 }))
             }
             "score" => {
@@ -104,7 +132,10 @@ impl Request {
                     .req("text")?
                     .as_str()
                     .ok_or_else(|| anyhow!("text must be a string"))?;
-                Ok(Request::Score { text: text.to_string() })
+                Ok(Request::Score {
+                    text: text.to_string(),
+                    deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
+                })
             }
             "info" => Ok(Request::Info),
             "shutdown" => Ok(Request::Shutdown),
@@ -121,6 +152,73 @@ impl Request {
     pub fn to_line(&self) -> String {
         self.to_json().to_string()
     }
+
+    /// The request's latency budget, if it set one (`deadline_ms > 0`).
+    pub fn deadline_ms(&self) -> Option<u64> {
+        match self {
+            Request::Generate(p) if p.deadline_ms > 0 => Some(p.deadline_ms),
+            Request::Score { deadline_ms, .. } if *deadline_ms > 0 => Some(*deadline_ms),
+            _ => None,
+        }
+    }
+}
+
+/// Machine-readable failure class of an error response — what a client
+/// switches on to decide retry vs give up (the human-readable `error`
+/// message is for logs, not control flow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request itself is unusable (parse failure, bad parameters,
+    /// oversized text).  Retrying the same bytes cannot succeed.
+    InvalidRequest,
+    /// Admission control shed the request: the bounded queue is full.
+    /// Retry after `retry_after_ms`.
+    Overloaded,
+    /// The request's own `deadline_ms` expired before kernel work started.
+    DeadlineExceeded,
+    /// The server failed internally (e.g. a panic isolated at the batch
+    /// boundary).  The request was not necessarily at fault.
+    Internal,
+    /// The server is draining; no new work is admitted.
+    ShuttingDown,
+}
+
+impl ErrorCode {
+    /// Every code, for exhaustive round-trip tests.
+    pub const ALL: [ErrorCode; 5] = [
+        ErrorCode::InvalidRequest,
+        ErrorCode::Overloaded,
+        ErrorCode::DeadlineExceeded,
+        ErrorCode::Internal,
+        ErrorCode::ShuttingDown,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::InvalidRequest => "invalid_request",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::Internal => "internal",
+            ErrorCode::ShuttingDown => "shutting_down",
+        }
+    }
+
+    /// Lenient parse: unknown codes (from a newer server) degrade to
+    /// `internal` rather than failing the whole response.
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "invalid_request" => ErrorCode::InvalidRequest,
+            "overloaded" => ErrorCode::Overloaded,
+            "deadline_exceeded" => ErrorCode::DeadlineExceeded,
+            "shutting_down" => ErrorCode::ShuttingDown,
+            _ => ErrorCode::Internal,
+        }
+    }
+
+    /// Whether the same request can succeed on a later attempt.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ErrorCode::Overloaded)
+    }
 }
 
 /// A server response.
@@ -133,12 +231,33 @@ pub enum Response {
     Info(Json),
     /// Shutdown acknowledged.
     Shutdown,
-    Error { message: String },
+    Error {
+        code: ErrorCode,
+        message: String,
+        /// Server's estimate of when a retry will be admitted
+        /// (`overloaded` only), from live queue depth × service time.
+        retry_after_ms: Option<u64>,
+    },
 }
 
 impl Response {
+    /// An `internal` error (the legacy constructor — prefer [`Response::err`]
+    /// with a precise code).
     pub fn error(message: impl Into<String>) -> Response {
-        Response::Error { message: message.into() }
+        Response::err(ErrorCode::Internal, message)
+    }
+
+    pub fn err(code: ErrorCode, message: impl Into<String>) -> Response {
+        Response::Error { code, message: message.into(), retry_after_ms: None }
+    }
+
+    /// An `overloaded` error carrying the admission-control retry hint.
+    pub fn overloaded(message: impl Into<String>, retry_after_ms: u64) -> Response {
+        Response::Error {
+            code: ErrorCode::Overloaded,
+            message: message.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -172,10 +291,17 @@ impl Response {
                 ("ok", Json::Bool(true)),
                 ("op", Json::str("shutdown")),
             ]),
-            Response::Error { message } => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(message)),
-            ]),
+            Response::Error { code, message, retry_after_ms } => {
+                let mut entries = vec![
+                    ("ok", Json::Bool(false)),
+                    ("code", Json::str(code.as_str())),
+                    ("error", Json::str(message)),
+                ];
+                if let Some(ms) = retry_after_ms {
+                    entries.push(("retry_after_ms", Json::Int(*ms as i64)));
+                }
+                Json::obj(entries)
+            }
         }
     }
 
@@ -183,11 +309,19 @@ impl Response {
         let ok = j.req("ok")?.as_bool().ok_or_else(|| anyhow!("ok must be a bool"))?;
         if !ok {
             return Ok(Response::Error {
+                // Pre-PR-6 servers send no code: degrade to `internal`.
+                code: ErrorCode::parse(
+                    j.get("code").and_then(|v| v.as_str()).unwrap_or("internal"),
+                ),
                 message: j
                     .get("error")
                     .and_then(|v| v.as_str())
                     .unwrap_or("unspecified error")
                     .to_string(),
+                retry_after_ms: j
+                    .get("retry_after_ms")
+                    .and_then(|v| v.as_i64())
+                    .map(|ms| ms.max(0) as u64),
             });
         }
         let op = j.req("op")?.as_str().ok_or_else(|| anyhow!("op must be a string"))?;
@@ -289,8 +423,11 @@ mod tests {
                 top_k: 4,
                 temperature: 0.7,
                 seed: 42,
+                deadline_ms: 0,
             }),
-            Request::Score { text: "hello \"world\"\n".into() },
+            Request::Generate(GenParams { deadline_ms: 250, ..GenParams::default() }),
+            Request::Score { text: "hello \"world\"\n".into(), deadline_ms: 0 },
+            Request::Score { text: "budgeted".into(), deadline_ms: 125 },
             Request::Info,
             Request::Shutdown,
         ];
@@ -327,12 +464,70 @@ mod tests {
             Response::Info(Json::obj(vec![("vocab", Json::Int(512))])),
             Response::Shutdown,
             Response::error("queue full"),
+            Response::overloaded("admission control shed this request", 40),
         ];
         for resp in resps {
             let line = resp.to_line();
             assert!(!line.contains('\n'));
             assert_eq!(Response::parse(&line).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn every_error_code_roundtrips() {
+        for code in ErrorCode::ALL {
+            // String form survives its own parse…
+            assert_eq!(ErrorCode::parse(code.as_str()), code, "{code:?}");
+            // …and the full response wire form survives, with and without
+            // the retry hint.
+            for retry_after_ms in [None, Some(25u64)] {
+                let resp = Response::Error {
+                    code,
+                    message: format!("synthetic {} failure", code.as_str()),
+                    retry_after_ms,
+                };
+                let line = resp.to_line();
+                assert!(line.contains(code.as_str()), "{line}");
+                assert_eq!(Response::parse(&line).unwrap(), resp);
+            }
+        }
+        // Only overload is worth retrying verbatim.
+        assert!(ErrorCode::Overloaded.retryable());
+        assert!(!ErrorCode::InvalidRequest.retryable());
+        assert!(!ErrorCode::DeadlineExceeded.retryable());
+        assert!(!ErrorCode::Internal.retryable());
+        assert!(!ErrorCode::ShuttingDown.retryable());
+    }
+
+    #[test]
+    fn legacy_codeless_errors_degrade_to_internal() {
+        // A pre-PR-6 peer sends {"ok":false,"error":"..."} with no code.
+        let resp = Response::parse(r#"{"ok":false,"error":"boom"}"#).unwrap();
+        assert_eq!(
+            resp,
+            Response::Error {
+                code: ErrorCode::Internal,
+                message: "boom".into(),
+                retry_after_ms: None
+            }
+        );
+        // Unknown future codes degrade rather than fail.
+        let resp = Response::parse(r#"{"ok":false,"code":"quota_exceeded","error":"x"}"#).unwrap();
+        match resp {
+            Response::Error { code, .. } => assert_eq!(code, ErrorCode::Internal),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_budget_is_exposed_only_when_set() {
+        let none = Request::Generate(GenParams::default());
+        assert_eq!(none.deadline_ms(), None);
+        assert!(!none.to_line().contains("deadline_ms"), "unset budget stays off the wire");
+        let some = Request::Score { text: "x".into(), deadline_ms: 75 };
+        assert_eq!(some.deadline_ms(), Some(75));
+        assert_eq!(Request::parse(&some.to_line()).unwrap().deadline_ms(), Some(75));
+        assert_eq!(Request::Info.deadline_ms(), None);
     }
 
     #[test]

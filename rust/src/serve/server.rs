@@ -7,20 +7,37 @@
 //! `shutdown` are answered inline.  Binding port 0 picks an ephemeral port
 //! (the bound address is reported on [`Server::addr`]) — which is how the
 //! CI smoke test and the integration tests avoid port collisions.
+//!
+//! Failure domains (PR 6): connections poll the socket with a short read
+//! timeout instead of blocking forever, so a stalled client holds a thread
+//! for at most [`ServeConfig::idle_timeout`] and shutdown never waits on a
+//! silent peer; writes are bounded too.  Errors carry structured codes
+//! ([`super::protocol::ErrorCode`]): a full queue answers `overloaded`
+//! with a live `retry_after_ms` hint, and [`Server::join`] drains in-flight
+//! work under [`ServeConfig::drain`] before stopping the workers.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::serve::batcher::{Batcher, Job};
 use crate::serve::engine::Engine;
-use crate::serve::protocol::{Request, Response};
+use crate::serve::protocol::{ErrorCode, Request, Response};
+use crate::util::faults;
 use crate::util::json::Json;
+
+/// How often a connection thread wakes from a blocked read to check the
+/// stop flag and the idle budget.
+const READ_POLL: Duration = Duration::from_millis(200);
+
+/// Bound on a single response write; a client that stops reading cannot
+/// wedge its connection thread past this.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Server + batcher knobs (`cce serve` flags map 1:1).
 #[derive(Debug, Clone)]
@@ -37,6 +54,12 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// Bounded request-queue depth (backpressure threshold).
     pub queue_depth: usize,
+    /// Hang up on a connection that sends no complete request for this
+    /// long (slow-loris/stalled-client bound).
+    pub idle_timeout: Duration,
+    /// Graceful-shutdown budget: how long [`Server::join`] waits for
+    /// in-flight jobs to finish before stopping the workers.
+    pub drain: Duration,
 }
 
 impl Default for ServeConfig {
@@ -48,6 +71,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(3),
             queue_depth: 64,
+            idle_timeout: Duration::from_secs(300),
+            drain: Duration::from_secs(5),
         }
     }
 }
@@ -59,6 +84,7 @@ pub struct Server {
     accept: Option<JoinHandle<()>>,
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
+    drain: Duration,
 }
 
 /// Bind, spawn the batcher + accept loop, and return immediately.
@@ -77,9 +103,12 @@ pub fn serve(engine: Arc<Engine>, cfg: &ServeConfig) -> Result<Server> {
     let accept = {
         let batcher = batcher.clone();
         let stop = stop.clone();
-        std::thread::spawn(move || accept_loop(listener, addr, engine, batcher, stop))
+        let idle_timeout = cfg.idle_timeout;
+        std::thread::spawn(move || {
+            accept_loop(listener, addr, engine, batcher, stop, idle_timeout)
+        })
     };
-    Ok(Server { addr, accept: Some(accept), batcher, stop })
+    Ok(Server { addr, accept: Some(accept), batcher, stop, drain: cfg.drain })
 }
 
 impl Server {
@@ -91,10 +120,21 @@ impl Server {
         let _ = TcpStream::connect(self.addr);
     }
 
-    /// Wait for the accept loop to exit, then stop the batch workers.
+    /// Wait for the accept loop to exit, drain in-flight jobs under the
+    /// configured [`ServeConfig::drain`] budget, then stop the workers.
+    /// Once the accept loop is down no new work can arrive, so the drain
+    /// is monotone; if the budget runs out the remaining jobs are dropped
+    /// and their clients observe `shutting_down`.
     pub fn join(mut self) -> Result<()> {
         if let Some(handle) = self.accept.take() {
             handle.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        if !self.batcher.drain(self.drain) {
+            eprintln!(
+                "[serve] drain budget ({:?}) exhausted with {} job(s) in flight; dropping",
+                self.drain,
+                self.batcher.in_flight()
+            );
         }
         self.batcher.shutdown();
         Ok(())
@@ -107,6 +147,7 @@ fn accept_loop(
     engine: Arc<Engine>,
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
+    idle_timeout: Duration,
 ) {
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
@@ -122,62 +163,119 @@ fn accept_loop(
         // One thread per connection: connections are long-lived and few at
         // this substrate's scale; concurrency inside a connection comes
         // from the batcher, not from here.
-        std::thread::spawn(move || connection(stream, addr, &engine, &batcher, &stop));
+        std::thread::spawn(move || {
+            connection(stream, addr, &engine, &batcher, &stop, idle_timeout)
+        });
     }
 }
 
-/// Serve one connection until EOF, error, or shutdown.
+/// Serve one connection until EOF, error, idle timeout, or shutdown.
 fn connection(
     stream: TcpStream,
     addr: SocketAddr,
     engine: &Engine,
     batcher: &Batcher,
     stop: &AtomicBool,
+    idle_timeout: Duration,
 ) {
     let _ = stream.set_nodelay(true);
-    let reader = match stream.try_clone() {
+    // Reads poll so this thread can notice stop/idle; writes are bounded so
+    // a client that stops reading cannot wedge us.
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = match stream.try_clone() {
         Ok(clone) => BufReader::new(clone),
         Err(_) => return,
     };
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(line) => line,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let response = match Request::parse(&line) {
-            Err(err) => Response::error(format!("bad request: {err:#}")),
-            Ok(Request::Info) => Response::Info(info_fields(engine, batcher)),
-            Ok(Request::Shutdown) => {
-                let _ = write_line(&mut writer, &Response::Shutdown);
-                stop.store(true, Ordering::SeqCst);
-                let _ = TcpStream::connect(addr); // wake accept()
-                return;
+    // One line buffer across poll iterations: a read that times out
+    // mid-line leaves its partial bytes here (read_line appends), so
+    // nothing is lost when the next poll resumes.
+    let mut line = String::new();
+    let mut idle_since = Instant::now();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(n) => {
+                // Without a trailing newline the peer hit EOF mid-line;
+                // serve what arrived, then hang up.
+                let at_eof = n == 0 || !line.ends_with('\n');
+                if !line.trim().is_empty()
+                    && handle_line(line.trim(), &mut writer, addr, engine, batcher, stop).is_err()
+                {
+                    return;
+                }
+                line.clear();
+                idle_since = Instant::now();
+                if at_eof {
+                    return;
+                }
             }
-            Ok(request) => dispatch(request, batcher, stop),
-        };
-        if write_line(&mut writer, &response).is_err() {
-            break;
+            Err(err)
+                if matches!(
+                    err.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Poll tick: no complete line yet (partial bytes, if any,
+                // stay in `line`).
+                if stop.load(Ordering::SeqCst) || idle_since.elapsed() >= idle_timeout {
+                    return;
+                }
+            }
+            Err(_) => return,
         }
     }
+}
+
+/// Parse and answer one complete request line.  `Err(())` means the
+/// connection is done (write failed or shutdown was requested).
+fn handle_line(
+    line: &str,
+    writer: &mut TcpStream,
+    addr: SocketAddr,
+    engine: &Engine,
+    batcher: &Batcher,
+    stop: &AtomicBool,
+) -> std::result::Result<(), ()> {
+    // Chaos site: simulate a stalled connection handler.
+    faults::stall("conn.stall_ms");
+    let response = match Request::parse(line) {
+        Err(err) => Response::err(ErrorCode::InvalidRequest, format!("bad request: {err:#}")),
+        Ok(Request::Info) => Response::Info(info_fields(engine, batcher)),
+        Ok(Request::Shutdown) => {
+            let _ = write_line(writer, &Response::Shutdown);
+            stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(addr); // wake accept()
+            return Err(());
+        }
+        Ok(request) => dispatch(request, batcher, stop),
+    };
+    write_line(writer, &response).map_err(|_| ())
 }
 
 /// Route a batchable request through the micro-batcher and wait for its
 /// response.
 fn dispatch(request: Request, batcher: &Batcher, stop: &AtomicBool) -> Response {
     if stop.load(Ordering::SeqCst) {
-        return Response::error("server is shutting down");
+        return Response::err(ErrorCode::ShuttingDown, "server is shutting down");
     }
     let (tx, rx) = mpsc::channel();
-    match batcher.submit(Job { request, respond: tx }) {
-        Err(_) => Response::error("queue full (backpressure): retry later"),
+    match batcher.submit(Job::new(request, tx)) {
+        // Admission control: shed at the door with a live retry hint
+        // rather than buffering unboundedly.
+        Err(_) => Response::overloaded(
+            "queue full (admission control): retry later",
+            batcher.retry_after_ms(),
+        ),
         Ok(()) => match rx.recv_timeout(Duration::from_secs(300)) {
             Ok(response) => response,
-            // Sender dropped (shutdown raced the job) or server wedged.
-            Err(_) => Response::error("request dropped: server shutting down or timed out"),
+            // Sender dropped: shutdown raced the job out of the queue.
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Response::err(ErrorCode::ShuttingDown, "request dropped during shutdown")
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Response::err(ErrorCode::Internal, "request timed out inside the server")
+            }
         },
     }
 }
@@ -200,6 +298,15 @@ fn info_fields(engine: &Engine, batcher: &Batcher) -> Json {
         "max_batch_observed".into(),
         Json::Int(stats.max_batch.load(Ordering::Relaxed) as i64),
     ));
+    fields.push((
+        "shed_deadline".into(),
+        Json::Int(stats.shed_deadline.load(Ordering::Relaxed) as i64),
+    ));
+    fields.push((
+        "batch_panics".into(),
+        Json::Int(stats.panics.load(Ordering::Relaxed) as i64),
+    ));
+    fields.push(("in_flight".into(), Json::Int(batcher.in_flight() as i64)));
     Json::Object(fields)
 }
 

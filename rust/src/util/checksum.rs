@@ -1,0 +1,42 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the checkpoint
+//! and sidecar integrity checksum.
+//!
+//! Bitwise, table-free: checkpoint payloads here are megabytes at most and
+//! integrity checking is off the serving hot path, so simplicity wins over
+//! a 1 KB lookup table.  The polynomial matches zlib/`cksum -o 3`, so a
+//! stored checksum can be cross-checked with standard tooling.
+
+/// CRC-32 of `bytes` (init `0xFFFFFFFF`, final XOR, reflected).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_standard_check_value() {
+        // The canonical CRC-32 test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_and_sensitivity() {
+        assert_eq!(crc32(b""), 0);
+        let a = crc32(b"checkpoint payload");
+        let mut flipped = b"checkpoint payload".to_vec();
+        flipped[3] ^= 0x01; // single bit flip
+        assert_ne!(a, crc32(&flipped));
+        // Truncation changes the checksum too.
+        assert_ne!(a, crc32(b"checkpoint payloa"));
+    }
+}

@@ -1,0 +1,258 @@
+//! Env-driven fault injection (failpoints) for the chaos harness.
+//!
+//! `CCE_FAULTS="batcher.panic=0.05,ckpt.short_write=1,conn.stall_ms=500"`
+//! arms named failpoints at process start; code under test asks the
+//! registry at each site:
+//!
+//! * [`fire`] — one evaluation of a probabilistic site.  `p >= 1` always
+//!   fires; `0 < p < 1` fires deterministically from a seeded hash of the
+//!   site's own evaluation counter, so a given spec reproduces the same
+//!   firing pattern on every run (no wall-clock, no global RNG).
+//! * [`maybe_panic`] — panic with `"fault injected: <site>"` when the site
+//!   fires (exercises the `catch_unwind` isolation boundaries).
+//! * [`stall`] — sleep for the configured value in milliseconds (for
+//!   `*_ms` sites such as `conn.stall_ms`), every evaluation.
+//!
+//! Zero-cost when unset: every query short-circuits on one relaxed atomic
+//! load before touching the registry.  Tests replace the registry in
+//! process with [`install`] / [`clear`] (the chaos suite serializes on a
+//! lock of its own — faults are process-global).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// One armed failpoint.
+struct Site {
+    name: String,
+    /// Probability in `[0, 1)`, or `>= 1` for "always"; `*_ms` sites carry
+    /// a duration in milliseconds instead.
+    value: f64,
+    /// Per-site evaluation counter — the deterministic "randomness" input.
+    hits: AtomicU64,
+    /// Seed for the per-evaluation hash, derived from the site name.
+    seed: u64,
+}
+
+#[derive(Default)]
+struct Registry {
+    sites: Vec<Site>,
+}
+
+/// Fast-path guard: false ⇒ no failpoint is armed anywhere.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+fn lock_registry() -> std::sync::MutexGuard<'static, Registry> {
+    registry().lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Hash of (site seed, evaluation index) mapped to `[0, 1)`.
+fn unit_hash(seed: u64, n: u64) -> f64 {
+    (splitmix64(seed ^ n.wrapping_mul(0xA076_1D64_78BD_642F)) >> 11) as f64
+        * (1.0 / (1u64 << 53) as f64)
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Site>> {
+    let mut sites = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, value) = part
+            .split_once('=')
+            .with_context(|| format!("fault {part:?}: want site=value"))?;
+        let name = name.trim();
+        let value: f64 = value
+            .trim()
+            .parse()
+            .with_context(|| format!("fault {name:?}: bad value {value:?}"))?;
+        if name.is_empty() {
+            bail!("fault {part:?}: empty site name");
+        }
+        if !value.is_finite() || value < 0.0 {
+            bail!("fault {name:?}: value must be finite and >= 0, got {value}");
+        }
+        sites.push(Site {
+            seed: fnv64(name) ^ 0x5EED_FA17,
+            name: name.to_string(),
+            value,
+            hits: AtomicU64::new(0),
+        });
+    }
+    Ok(sites)
+}
+
+fn load_env_once() {
+    ENV_INIT.call_once(|| {
+        let spec = match std::env::var("CCE_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => spec,
+            _ => return,
+        };
+        match parse_spec(&spec) {
+            Ok(sites) => {
+                let armed = !sites.is_empty();
+                lock_registry().sites = sites;
+                ACTIVE.store(armed, Ordering::SeqCst);
+                if armed {
+                    eprintln!("[faults] CCE_FAULTS armed: {}", spec.trim());
+                }
+            }
+            Err(err) => eprintln!("[faults] ignoring CCE_FAULTS: {err:#}"),
+        }
+    });
+}
+
+/// True when any failpoint is armed (env or [`install`]).
+pub fn enabled() -> bool {
+    load_env_once();
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Replace the active fault set (tests).  Empty spec disarms everything.
+pub fn install(spec: &str) -> Result<()> {
+    // Mark env consumed so a later lazy load cannot clobber the install.
+    ENV_INIT.call_once(|| {});
+    let sites = parse_spec(spec)?;
+    let armed = !sites.is_empty();
+    lock_registry().sites = sites;
+    ACTIVE.store(armed, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Disarm every failpoint.
+pub fn clear() {
+    ENV_INIT.call_once(|| {});
+    lock_registry().sites.clear();
+    ACTIVE.store(false, Ordering::SeqCst);
+}
+
+/// The raw configured value of `site`, if armed (no counter advance).
+pub fn value(site: &str) -> Option<f64> {
+    if !enabled() {
+        return None;
+    }
+    lock_registry().sites.iter().find(|s| s.name == site).map(|s| s.value)
+}
+
+/// One evaluation of probabilistic failpoint `site`: advances its counter
+/// and reports whether it fires this time.
+pub fn fire(site: &str) -> bool {
+    if !enabled() {
+        return false;
+    }
+    let reg = lock_registry();
+    match reg.sites.iter().find(|s| s.name == site) {
+        None => false,
+        Some(s) => {
+            let n = s.hits.fetch_add(1, Ordering::Relaxed);
+            s.value >= 1.0 || unit_hash(s.seed, n) < s.value
+        }
+    }
+}
+
+/// Panic if `site` fires — the payload names the site so isolation layers
+/// can surface a precise `internal` error.
+pub fn maybe_panic(site: &str) {
+    if fire(site) {
+        panic!("fault injected: {site}");
+    }
+}
+
+/// Sleep for the configured milliseconds of `site` (e.g. `conn.stall_ms`),
+/// every evaluation while armed.
+pub fn stall(site: &str) {
+    if let Some(ms) = value(site) {
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_millis(ms as u64));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Faults are process-global; these tests serialize on one lock so they
+    // cannot interleave arm/disarm with each other.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    // These tests arm `unit.*` site names on purpose: lib tests run
+    // concurrently in one process, and arming a *live* site (say
+    // `batcher.panic`) here would fire inside whichever batcher/engine/
+    // checkpoint test happens to be running at the same time.
+    #[test]
+    fn unarmed_is_silent() {
+        let _gate = serial();
+        clear();
+        assert!(!fire("unit.panic"));
+        assert_eq!(value("unit.stall_ms"), None);
+        maybe_panic("unit.panic"); // must not panic
+    }
+
+    #[test]
+    fn spec_parses_the_documented_forms() {
+        let _gate = serial();
+        install("unit.panic=0.05, unit.write=1 ,unit.stall_ms=500").unwrap();
+        assert_eq!(value("unit.panic"), Some(0.05));
+        assert_eq!(value("unit.write"), Some(1.0));
+        assert_eq!(value("unit.stall_ms"), Some(500.0));
+        assert!(fire("unit.write"), "p >= 1 always fires");
+        clear();
+        assert!(!fire("unit.write"));
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let _gate = serial();
+        assert!(install("nodelimiter").is_err());
+        assert!(install("site=notanumber").is_err());
+        assert!(install("site=-1").is_err());
+        assert!(install("=5").is_err());
+        clear();
+    }
+
+    #[test]
+    fn probability_is_deterministic_and_roughly_calibrated() {
+        let _gate = serial();
+        install("unit.prob=0.25").unwrap();
+        let first: Vec<bool> = (0..400).map(|_| fire("unit.prob")).collect();
+        // Re-arm: the counter resets, so the firing pattern replays exactly.
+        install("unit.prob=0.25").unwrap();
+        let second: Vec<bool> = (0..400).map(|_| fire("unit.prob")).collect();
+        assert_eq!(first, second, "same spec must reproduce the same pattern");
+        let hits = first.iter().filter(|&&b| b).count();
+        assert!(
+            (40..=160).contains(&hits),
+            "p=0.25 over 400 draws fired {hits} times — hash badly skewed"
+        );
+        clear();
+    }
+}

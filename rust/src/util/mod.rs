@@ -1,15 +1,19 @@
-//! From-scratch substrates: JSON, CLI parsing, RNG, property testing, stats.
+//! From-scratch substrates: JSON, CLI parsing, RNG, property testing,
+//! stats, checksums, fault injection.
 //!
 //! This environment is fully offline with only `xla` + `anyhow` vendored, so
 //! everything a framework would normally pull from crates.io (serde_json,
 //! clap, rand, proptest, criterion) is implemented here from scratch —
 //! small, tested, and sufficient for the coordinator's needs.
 
+pub mod checksum;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use checksum::crc32;
 pub use json::Json;
 pub use rng::Rng;

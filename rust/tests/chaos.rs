@@ -1,0 +1,329 @@
+//! Chaos harness: fault-injection tests for the failure domains hardened
+//! in PR 6 — panic isolation at the batch boundary, admission control +
+//! client retry, per-request deadlines, crash-safe checkpoints, and
+//! graceful drain under load.  Every fault is driven through
+//! [`cce::util::faults`] failpoints (`install`/`clear`); the suite owns a
+//! process-wide gate because the fault registry is global to the test
+//! binary.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use cce::coordinator::Checkpoint;
+use cce::exec::KernelOptions;
+use cce::runtime::HostTensor;
+use cce::serve::{
+    serve, Client, ClientConfig, Engine, ErrorCode, GenParams, Request, Response, RetryPolicy,
+    ServeConfig,
+};
+use cce::util::faults;
+
+/// Faults are process-global: serialize every test in this binary and
+/// start each one from a clean (disarmed) registry.
+fn chaos_gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    let guard = GATE.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    faults::clear();
+    guard
+}
+
+fn tiny_engine() -> Arc<Engine> {
+    let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
+    Arc::new(Engine::demo(384, 16, 2, opts).unwrap())
+}
+
+fn gen(max_tokens: usize, seed: u64) -> GenParams {
+    GenParams { prompt: "the cat".into(), max_tokens, seed, ..GenParams::default() }
+}
+
+fn info_i64(client: &mut Client, key: &str) -> i64 {
+    match client.info().expect("info") {
+        Response::Info(fields) => fields.get(key).and_then(|v| v.as_i64()).unwrap_or(-1),
+        other => panic!("unexpected info response: {other:?}"),
+    }
+}
+
+fn shutdown(server: cce::serve::Server) {
+    server.stop();
+    server.join().expect("clean shutdown");
+}
+
+// ------------------------------------------------------- panic isolation
+
+#[test]
+fn batch_panic_is_isolated_and_the_server_keeps_serving() {
+    let _gate = chaos_gate();
+    let server = serve(tiny_engine(), &ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    // Armed: the engine call panics inside the batcher's catch_unwind.
+    faults::install("batcher.panic=1").unwrap();
+    match client.call(&Request::Generate(gen(3, 0))).expect("transport survives the panic") {
+        Response::Error { code, message, .. } => {
+            assert_eq!(code, ErrorCode::Internal);
+            assert!(
+                message.contains("fault injected: batcher.panic"),
+                "panic payload surfaced, got: {message}"
+            );
+        }
+        other => panic!("expected internal error, got {other:?}"),
+    }
+
+    // Disarmed: the SAME server (same workers, same connection) must keep
+    // answering correctly — no worker death, no hang.
+    faults::clear();
+    for i in 0..5 {
+        match client.generate(gen(3, i)).expect("post-panic request succeeds") {
+            Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+            other => panic!("unexpected response: {other:?}"),
+        }
+    }
+    assert!(info_i64(&mut client, "batch_panics") >= 1, "panic counter exposed via info");
+    shutdown(server);
+}
+
+// ------------------------------------------- admission control + retry
+
+#[test]
+fn overload_sheds_with_retry_hint_and_retries_succeed() {
+    let _gate = chaos_gate();
+    // One slow worker, depth-1 queue: a concurrent flood MUST shed.
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 1,
+        ..ServeConfig::default()
+    };
+    let server = serve(tiny_engine(), &cfg).unwrap();
+    let addr = server.addr;
+    faults::install("engine.step.stall_ms=50").unwrap();
+
+    // Phase A — no-retry clients: at least one must observe `overloaded`
+    // carrying the admission hint.
+    let outcomes: Arc<Mutex<Vec<Response>>> = Arc::new(Mutex::new(Vec::new()));
+    std::thread::scope(|scope| {
+        for i in 0..6u64 {
+            let outcomes = outcomes.clone();
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let resp = client.call(&Request::Generate(gen(2, i))).expect("transport ok");
+                outcomes.lock().unwrap().push(resp);
+            });
+        }
+    });
+    let outcomes = outcomes.lock().unwrap();
+    let sheds: Vec<_> = outcomes
+        .iter()
+        .filter_map(|r| match r {
+            Response::Error { code: ErrorCode::Overloaded, retry_after_ms, .. } => {
+                Some(*retry_after_ms)
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(!sheds.is_empty(), "depth-1 queue under a 6-way flood must shed");
+    for hint in &sheds {
+        let hint = hint.expect("overloaded must carry retry_after_ms");
+        assert!((5..=5000).contains(&hint), "hint {hint} outside the clamp");
+    }
+
+    // Phase B — the same flood with retry budgets: every request must
+    // eventually succeed, and the retry machinery must have been used.
+    let shed_total = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    std::thread::scope(|scope| {
+        for i in 0..6u64 {
+            let shed_total = shed_total.clone();
+            scope.spawn(move || {
+                let cfg = ClientConfig {
+                    connect_timeout: Some(Duration::from_secs(10)),
+                    io_timeout: Some(Duration::from_secs(30)),
+                    retry: RetryPolicy { retries: 12, ..RetryPolicy::default() },
+                };
+                let mut client = Client::connect_with(addr, cfg).unwrap();
+                match client.generate(gen(2, 100 + i)).expect("retries must win through") {
+                    Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+                    other => panic!("unexpected response: {other:?}"),
+                }
+                shed_total
+                    .fetch_add(client.stats.shed.load(Ordering::Relaxed), Ordering::Relaxed);
+            });
+        }
+    });
+    assert!(
+        shed_total.load(Ordering::Relaxed) >= 1,
+        "the flood should have exercised shed-then-retry at least once"
+    );
+    faults::clear();
+    shutdown(server);
+}
+
+// ------------------------------------------------------------- deadlines
+
+#[test]
+fn expired_deadlines_are_shed_before_kernel_work() {
+    let _gate = chaos_gate();
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
+    let server = serve(tiny_engine(), &cfg).unwrap();
+    let addr = server.addr;
+    // Each decode step stalls 60 ms, so a 4-token job occupies the single
+    // worker for ~250 ms — long enough for a queued 1 ms deadline to die.
+    faults::install("engine.step.stall_ms=60").unwrap();
+
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            let mut slow = Client::connect(addr).unwrap();
+            slow.generate(gen(4, 0)).expect("slow request itself succeeds");
+        });
+        scope.spawn(move || {
+            // Let the slow job reach the worker first.
+            std::thread::sleep(Duration::from_millis(60));
+            let mut hurried = Client::connect(addr).unwrap();
+            let params = GenParams { deadline_ms: 1, ..gen(4, 1) };
+            match hurried.call(&Request::Generate(params)).expect("transport ok") {
+                Response::Error { code, message, .. } => {
+                    assert_eq!(code, ErrorCode::DeadlineExceeded);
+                    assert!(message.contains("shed before execution"), "got: {message}");
+                }
+                other => panic!("expected deadline_exceeded, got {other:?}"),
+            }
+        });
+    });
+    faults::clear();
+    let mut admin = Client::connect(addr).unwrap();
+    assert!(info_i64(&mut admin, "shed_deadline") >= 1, "shed counter exposed via info");
+    shutdown(server);
+}
+
+// ------------------------------------------------- checkpoint integrity
+
+fn demo_checkpoint(step: u64) -> Checkpoint {
+    Checkpoint {
+        step,
+        tensors: vec![(
+            "emb".into(),
+            HostTensor::f32(vec![4, 8], (0..32).map(|i| i as f32 * 0.25).collect()).unwrap(),
+        )],
+    }
+}
+
+#[test]
+fn corrupted_checkpoints_are_rejected_with_pointed_errors() {
+    let _gate = chaos_gate();
+    let path = std::env::temp_dir().join("cce_chaos_corrupt.ckpt");
+    demo_checkpoint(3).save(&path).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+
+    // Truncation (a torn copy / partial download).
+    std::fs::write(&path, &pristine[..pristine.len() - 16]).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("corrupt/truncated checkpoint"), "got: {err}");
+
+    // Bit rot: same length, one flipped payload bit.
+    let mut rotten = pristine.clone();
+    let last = rotten.len() - 5;
+    rotten[last] ^= 0x40;
+    std::fs::write(&path, &rotten).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "got: {err}");
+
+    // The pristine bytes still load.
+    std::fs::write(&path, &pristine).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap().step, 3);
+}
+
+#[test]
+fn short_write_crash_never_yields_a_loadable_checkpoint() {
+    let _gate = chaos_gate();
+    let path = std::env::temp_dir().join("cce_chaos_shortwrite.ckpt");
+    let tmp = path.with_extension("tmp");
+    let _ = std::fs::remove_file(&tmp);
+    demo_checkpoint(1).save(&path).unwrap();
+    let published = std::fs::read(&path).unwrap();
+
+    // A simulated crash halfway through writing the NEXT checkpoint.
+    faults::install("ckpt.short_write=1").unwrap();
+    let err = demo_checkpoint(2).save(&path).unwrap_err().to_string();
+    assert!(err.contains("ckpt.short_write"), "got: {err}");
+    faults::clear();
+
+    // The published checkpoint is untouched (atomic rename never ran)...
+    assert_eq!(std::fs::read(&path).unwrap(), published, "previous checkpoint must survive");
+    assert_eq!(Checkpoint::load(&path).unwrap().step, 1);
+    // ...and the torn tmp file can never be mistaken for a checkpoint.
+    let tmp_err = Checkpoint::load(&tmp).unwrap_err().to_string();
+    assert!(tmp_err.contains("corrupt/truncated checkpoint"), "got: {tmp_err}");
+
+    // Recovery: the next clean save publishes normally.
+    demo_checkpoint(2).save(&path).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap().step, 2);
+}
+
+// --------------------------------------------------- graceful drain
+
+#[test]
+fn drain_under_load_delivers_in_flight_responses_within_the_bound() {
+    let _gate = chaos_gate();
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        drain: Duration::from_secs(5),
+        ..ServeConfig::default()
+    };
+    let server = serve(tiny_engine(), &cfg).unwrap();
+    let addr = server.addr;
+    // ~60 ms per decode step: the request is genuinely in flight when the
+    // shutdown lands.
+    faults::install("engine.step.stall_ms=60").unwrap();
+
+    std::thread::scope(|scope| {
+        let slow = scope.spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            client.generate(gen(3, 7)).expect("in-flight response must be delivered")
+        });
+        // Stop while the job is mid-decode, then join: stop-accepting →
+        // drain in-flight → stop workers, all inside the drain bound.
+        std::thread::sleep(Duration::from_millis(80));
+        let started = Instant::now();
+        server.stop();
+        server.join().expect("graceful drain");
+        let elapsed = started.elapsed();
+        assert!(
+            elapsed < Duration::from_secs(5),
+            "drain took {elapsed:?}, past the configured bound"
+        );
+        match slow.join().expect("client thread") {
+            Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+            other => panic!("unexpected response: {other:?}"),
+        }
+    });
+    faults::clear();
+}
+
+// --------------------------------------------------- connection stalls
+
+#[test]
+fn stalled_connection_handling_slows_but_never_breaks_requests() {
+    let _gate = chaos_gate();
+    let server = serve(tiny_engine(), &ServeConfig::default()).unwrap();
+    faults::install("conn.stall_ms=150").unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let t0 = Instant::now();
+    match client.generate(gen(2, 0)).expect("stalled handler still answers") {
+        Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    assert!(
+        t0.elapsed() >= Duration::from_millis(150),
+        "the stall failpoint should have delayed the handler"
+    );
+    faults::clear();
+    shutdown(server);
+}

@@ -367,7 +367,10 @@ fn server_rejects_malformed_and_survives() {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         match Response::parse(&line).unwrap() {
-            Response::Error { message } => assert!(message.contains("bad request")),
+            Response::Error { code, message, .. } => {
+                assert_eq!(code, cce::serve::ErrorCode::InvalidRequest);
+                assert!(message.contains("bad request"));
+            }
             other => panic!("expected error, got {other:?}"),
         }
         // The connection (and server) must still work afterwards.
