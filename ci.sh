@@ -67,7 +67,7 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
-echo "== serve self-test: train -> serve (ephemeral port) -> roundtrip -> shutdown =="
+echo "== serve self-test: train -> serve (ephemeral port) -> roundtrip -> metrics exporter -> shutdown =="
 CCE=target/release/cce
 SMOKE_DIR=$(mktemp -d)
 SERVE_PID=""
@@ -79,6 +79,7 @@ trap '{ [[ -z "$SERVE_PID" ]] || kill "$SERVE_PID" 2>/dev/null || true; } ; rm -
     --dim 32 --seq 64 --batch 4 --out-dir "$SMOKE_DIR/run" >/dev/null
 
 "$CCE" serve --checkpoint "$SMOKE_DIR/run/final.ckpt" --port 0 \
+    --metrics-addr 127.0.0.1:0 \
     --max-batch 4 --max-wait-ms 2 > "$SMOKE_DIR/serve.log" 2>"$SMOKE_DIR/serve.err" &
 SERVE_PID=$!
 
@@ -114,6 +115,59 @@ done
     | grep -q '"ok":true' || { echo "generate roundtrip failed"; exit 1; }
 "$CCE" client --port "$PORT" --op score --text "the cat sat on the mat" \
     | grep -q '"ok":true' || { echo "score roundtrip failed"; exit 1; }
+
+# Metrics exporter smoke: the server echoes its (ephemeral) exporter port
+# as "[serve] metrics on HOST:PORT" on stdout — same contract scripts use
+# for the serving port above.  /healthz must be 200 while serving, and
+# /metrics must expose the core families from every layer (serve, exec,
+# train) in Prometheus text format.  See docs/observability.md.
+MPORT=$(sed -n 's/.*metrics on .*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve.log" | head -1)
+[[ -n "$MPORT" ]] || { echo "serve never announced a metrics port"; cat "$SMOKE_DIR/serve.log"; exit 1; }
+python3 - "$MPORT" <<'PY'
+import http.client, sys
+port = int(sys.argv[1])
+
+conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+conn.request("GET", "/healthz")
+resp = conn.getresponse()
+body = resp.read().decode()
+assert resp.status == 200, f"/healthz returned {resp.status}: {body!r}"
+assert body.strip() == "ok", f"unexpected /healthz body: {body!r}"
+conn.close()
+
+conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+conn.request("GET", "/metrics")
+resp = conn.getresponse()
+text = resp.read().decode()
+assert resp.status == 200, f"/metrics returned {resp.status}"
+conn.close()
+
+required = [
+    "serve_requests_total",
+    "serve_request_us",
+    "serve_stage_kernel_us",
+    "serve_queue_depth",
+    "exec_fwd_sweep_us",
+    "exec_pool_workers",
+    "exec_workspace_peak_bytes",
+    "train_steps_total",
+    "serve_engine_requests_served_total",
+]
+missing = [f for f in required if f"# TYPE {f} " not in text]
+assert not missing, f"/metrics missing families: {missing}"
+families = sum(1 for line in text.splitlines() if line.startswith("# TYPE "))
+assert families >= 12, f"only {families} metric families exported (need >= 12)"
+# The smoke already ran generate + score through this server, so the
+# request histogram cannot be empty.
+for line in text.splitlines():
+    if line.startswith("serve_requests_total "):
+        assert float(line.split()[1]) >= 2, f"request counter did not advance: {line}"
+        break
+else:
+    raise AssertionError("serve_requests_total sample line missing")
+print(f"   metrics exporter OK ({families} families on port {port})")
+PY
+
 "$CCE" client --port "$PORT" --op shutdown >/dev/null
 
 # Clean shutdown: the server process must exit 0 on its own; a non-zero

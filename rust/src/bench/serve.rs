@@ -31,6 +31,9 @@ pub struct ServeBenchConfig {
     pub timeout: Option<Duration>,
     /// Client retry budget for `overloaded`/transport failures.
     pub retries: u32,
+    /// Scrape the server's `{"op":"metrics"}` histograms after the run and
+    /// persist server-side percentiles next to the client-side ones.
+    pub scrape: bool,
     pub serve: ServeConfig,
 }
 
@@ -42,6 +45,7 @@ impl Default for ServeBenchConfig {
             max_tokens: 16,
             timeout: Some(Duration::from_secs(30)),
             retries: 2,
+            scrape: false,
             serve: ServeConfig::default(),
         }
     }
@@ -88,6 +92,14 @@ pub struct ServeBench {
     /// errors when this is non-zero, so a persisted row always has 0 —
     /// the field exists for the failure message and the printout.
     pub failed: u64,
+    /// Server-side percentiles scraped from `{"op":"metrics"}` at the end
+    /// of the run (`--scrape`; log-bucket reconstructions, ≤ ~9% bucket
+    /// error).  All zero when scraping was off.
+    pub server_request_p50_ms: f64,
+    pub server_queue_p50_ms: f64,
+    pub server_kernel_p50_ms: f64,
+    /// Metric families the scrape saw (0 = scraping off).
+    pub server_metric_families: u64,
 }
 
 impl ServeBench {
@@ -197,21 +209,30 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
     });
     let elapsed_secs = started.elapsed().as_secs_f64();
 
-    // Server-side counters, then clean shutdown.  On any admin-path error
-    // the server must still come down — never leak the accept loop.
-    let info = (|| -> Result<Json> {
+    // Server-side counters (and, with `scrape`, the metrics histograms),
+    // then clean shutdown.  On any admin-path error the server must still
+    // come down — never leak the accept loop.
+    let admin_result = (|| -> Result<(Json, Option<Json>)> {
         let mut admin = Client::connect(addr)?;
         let info = match admin.info()? {
             Response::Info(fields) => fields,
             other => return Err(anyhow!("unexpected info response: {other:?}")),
         };
+        let scraped = if cfg.scrape {
+            match admin.metrics()? {
+                Response::Metrics(fields) => Some(fields),
+                other => return Err(anyhow!("unexpected metrics response: {other:?}")),
+            }
+        } else {
+            None
+        };
         admin.shutdown()?;
-        Ok(info)
+        Ok((info, scraped))
     })();
-    let info = match info {
-        Ok(info) => {
+    let (info, scraped) = match admin_result {
+        Ok(pair) => {
             server.join()?;
-            info
+            pair
         }
         Err(err) => {
             server.stop();
@@ -233,6 +254,20 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
     let get_u64 = |key: &str| -> u64 {
         info.get(key).and_then(|v| v.as_i64()).unwrap_or(0) as u64
     };
+    // Server-side p50s come out of the scraped log-bucket histograms in µs.
+    let hist_p50_ms = |family: &str| -> f64 {
+        scraped
+            .as_ref()
+            .and_then(|m| m.get(family))
+            .and_then(|h| h.get("p50"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+            / 1e3
+    };
+    let server_metric_families = scraped
+        .as_ref()
+        .and_then(|m| m.as_object().map(|fields| fields.len() as u64))
+        .unwrap_or(0);
     let gen_lat = gen_lat.lock().unwrap();
     let score_lat = score_lat.lock().unwrap();
     // Tiny runs can leave one endpoint unexercised; Summary needs >= 1.
@@ -264,6 +299,10 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
         shed,
         retried,
         failed: 0, // non-zero error counts returned Err above
+        server_request_p50_ms: hist_p50_ms("serve_request_us"),
+        server_queue_p50_ms: hist_p50_ms("serve_stage_queue_us"),
+        server_kernel_p50_ms: hist_p50_ms("serve_stage_kernel_us"),
+        server_metric_families,
     })
 }
 
@@ -335,6 +374,16 @@ pub fn print(bench: &ServeBench) {
         "  resilience: {} shed (overloaded), {} retried, {} failed",
         bench.shed, bench.retried, bench.failed
     );
+    if bench.server_metric_families > 0 {
+        println!(
+            "  server-side p50 (scraped, {} families): request {:.2} ms \
+             (queue {:.2} ms, kernel {:.2} ms)",
+            bench.server_metric_families,
+            bench.server_request_p50_ms,
+            bench.server_queue_p50_ms,
+            bench.server_kernel_p50_ms
+        );
+    }
     if bench.rps_runs.len() > 1 {
         let runs: Vec<String> = bench.rps_runs.iter().map(|r| format!("{r:.1}")).collect();
         println!(
@@ -358,7 +407,7 @@ pub fn write_json(bench: &ServeBench, path: impl AsRef<std::path::Path>) -> Resu
             ("mean_ms", Json::Float(s.mean * 1e3)),
         ])
     };
-    let doc = Json::obj(vec![
+    let mut fields = vec![
         ("bench", Json::str("serve")),
         // Schema 2 (PR 5): median-of-repeats throughput (the gated
         // number), per-repeat rps_runs, and the dtype tag.
@@ -389,8 +438,17 @@ pub fn write_json(bench: &ServeBench, path: impl AsRef<std::path::Path>) -> Resu
         ("mean_batch", Json::Float(bench.mean_batch())),
         ("max_batch_observed", Json::Int(bench.max_batch_observed as i64)),
         ("peak_workspace_bytes", Json::Int(bench.peak_workspace_bytes as i64)),
-        ("rows", Json::arr([row("generate", &bench.generate), row("score", &bench.score)])),
-    ]);
+    ];
+    // Additive (schema stays 2): server-side percentiles, present only
+    // when the run scraped `{"op":"metrics"}`.
+    if bench.server_metric_families > 0 {
+        fields.push(("server_request_p50_ms", Json::Float(bench.server_request_p50_ms)));
+        fields.push(("server_queue_p50_ms", Json::Float(bench.server_queue_p50_ms)));
+        fields.push(("server_kernel_p50_ms", Json::Float(bench.server_kernel_p50_ms)));
+        fields.push(("server_metric_families", Json::Int(bench.server_metric_families as i64)));
+    }
+    fields.push(("rows", Json::arr([row("generate", &bench.generate), row("score", &bench.score)])));
+    let doc = Json::obj(fields);
     if let Some(parent) = path.as_ref().parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -448,5 +506,59 @@ mod tests {
         assert_eq!(parsed.get("failed").unwrap().as_i64(), Some(0));
         assert!(parsed.get("shed").and_then(Json::as_i64).is_some());
         assert!(parsed.get("retried").and_then(Json::as_i64).is_some());
+        // Without --scrape, no server_* fields appear (schema-2 byte shape
+        // of pre-observability rows is preserved).
+        assert!(parsed.get("server_request_p50_ms").is_none());
+    }
+
+    #[test]
+    fn scrape_persists_server_side_histograms_that_agree_with_clients() {
+        let opts =
+            KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
+        let engine = Arc::new(Engine::demo(384, 16, 2, opts).unwrap());
+        let cfg = ServeBenchConfig {
+            requests: 8,
+            concurrency: 2,
+            max_tokens: 3,
+            scrape: true,
+            serve: ServeConfig { max_batch: 4, ..ServeConfig::default() },
+            ..ServeBenchConfig::default()
+        };
+        let bench = run(engine, &cfg).unwrap();
+        assert!(
+            bench.server_metric_families >= 12,
+            "metrics scrape saw only {} families",
+            bench.server_metric_families
+        );
+        assert!(bench.server_request_p50_ms > 0.0, "request histogram must have samples");
+        assert!(bench.server_kernel_p50_ms > 0.0, "kernel histogram must have samples");
+        // Client-vs-server agreement: the server-side request p50 (receipt
+        // to response written) must sit at or below the slowest client-side
+        // endpoint p50, which additionally pays transport and parsing.
+        // Bounds are generous: log-bucket reconstruction is ~9% and the
+        // server histogram mixes both endpoints.
+        let client_max_p50_ms = bench.generate.p50.max(bench.score.p50) * 1e3;
+        assert!(
+            bench.server_request_p50_ms <= client_max_p50_ms * 3.0 + 2.0,
+            "server p50 {:.3} ms inconsistent with client p50 {:.3} ms",
+            bench.server_request_p50_ms,
+            client_max_p50_ms
+        );
+        // The kernel stage is a subset of every request's wall time.
+        assert!(
+            bench.server_kernel_p50_ms <= bench.server_request_p50_ms * 1.5 + 1.0,
+            "kernel p50 {:.3} ms exceeds request p50 {:.3} ms",
+            bench.server_kernel_p50_ms,
+            bench.server_request_p50_ms
+        );
+
+        let path = std::env::temp_dir().join("cce_bench_serve_scrape_test.json");
+        write_json(&bench, &path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_i64(), Some(2), "scrape stays schema 2");
+        assert!(parsed.get("server_request_p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(parsed.get("server_queue_p50_ms").and_then(Json::as_f64).is_some());
+        assert!(parsed.get("server_kernel_p50_ms").and_then(Json::as_f64).is_some());
+        assert!(parsed.get("server_metric_families").and_then(Json::as_i64).unwrap() >= 12);
     }
 }

@@ -7,10 +7,12 @@
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::obs;
 use crate::util::json::Json;
 
 /// One logged training step.
@@ -37,12 +39,44 @@ pub struct Metrics {
     pub evals: Vec<EvalRecord>,
     jsonl: Option<BufWriter<File>>,
     started: Instant,
+    /// Wall-clock seconds already on the books when [`Metrics::start_run`]
+    /// last re-anchored `started` — keeps `elapsed` monotone across
+    /// resumed runs.
+    elapsed_offset: f64,
+}
+
+/// Handles into the process-global registry for the `train_*` families
+/// (pre-registered by [`obs::global`]), resolved once.
+struct TrainObs {
+    steps: Arc<obs::Counter>,
+    loss: Arc<obs::GaugeF>,
+    grad_norm: Arc<obs::GaugeF>,
+    tokens_per_sec: Arc<obs::GaugeF>,
+}
+
+fn train_obs() -> &'static TrainObs {
+    static OBS: OnceLock<TrainObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        TrainObs {
+            steps: r.counter("train_steps_total", ""),
+            loss: r.gauge_f("train_step_loss", ""),
+            grad_norm: r.gauge_f("train_grad_norm", ""),
+            tokens_per_sec: r.gauge_f("train_tokens_per_sec", ""),
+        }
+    })
 }
 
 impl Metrics {
     /// In-memory only (benches, tests).
     pub fn in_memory() -> Metrics {
-        Metrics { steps: Vec::new(), evals: Vec::new(), jsonl: None, started: Instant::now() }
+        Metrics {
+            steps: Vec::new(),
+            evals: Vec::new(),
+            jsonl: None,
+            started: Instant::now(),
+            elapsed_offset: 0.0,
+        }
     }
 
     /// Stream to `out_dir/metrics.jsonl` as well.
@@ -54,11 +88,26 @@ impl Metrics {
             evals: Vec::new(),
             jsonl: Some(BufWriter::new(file)),
             started: Instant::now(),
+            elapsed_offset: 0.0,
         })
     }
 
+    /// Re-anchor the wall clock at the start of a (possibly resumed) run.
+    ///
+    /// A `Metrics` may be constructed long before training begins, or
+    /// carry step history restored from a checkpoint whose `elapsed`
+    /// values came from an earlier process.  Without re-anchoring, the
+    /// first step of the new run is charged the entire gap (or, with
+    /// restored history, a *negative* delta that the `dt` clamp turns
+    /// into an absurd throughput).  After this call `elapsed` continues
+    /// monotonically from the last recorded step.
+    pub fn start_run(&mut self) {
+        self.elapsed_offset = self.steps.last().map(|r| r.elapsed).unwrap_or(0.0);
+        self.started = Instant::now();
+    }
+
     pub fn elapsed(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
+        self.elapsed_offset + self.started.elapsed().as_secs_f64()
     }
 
     pub fn log_step(&mut self, step: u64, loss: f64, grad_norm: f64, tokens: u64) {
@@ -73,6 +122,13 @@ impl Metrics {
             elapsed,
         };
         self.steps.push(rec);
+        if obs::enabled() {
+            let o = train_obs();
+            o.steps.inc();
+            o.loss.set(loss);
+            o.grad_norm.set(grad_norm);
+            o.tokens_per_sec.set(rec.tokens_per_sec);
+        }
         self.write_json(&Json::obj(vec![
             ("kind", Json::str("step")),
             ("step", Json::Int(step as i64)),
@@ -182,6 +238,37 @@ mod tests {
         let a = mk(&[3.0, 2.0, 1.0]);
         let b = mk(&[3.0, 2.2, 1.05]);
         assert!((curve_max_divergence(&a, &b) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn start_run_reanchors_elapsed_for_resumed_runs() {
+        let mut m = Metrics::in_memory();
+        // Simulate a checkpoint-restored history: the prior run's last step
+        // finished at elapsed = 100 s, but this process's clock just
+        // started.  Without `start_run`, the next step's delta would be
+        // ~0 − 100 s; the `dt` clamp would then report an absurd
+        // throughput and a non-monotone elapsed column.
+        m.steps.push(StepRecord {
+            step: 9,
+            loss: 3.0,
+            grad_norm: 1.0,
+            tokens_per_sec: 1000.0,
+            elapsed: 100.0,
+        });
+        m.start_run();
+        assert!(m.elapsed() >= 100.0, "elapsed must continue from the restored history");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        m.log_step(10, 2.9, 1.0, 1024);
+        let r = *m.steps.last().unwrap();
+        assert!(r.elapsed >= 100.0, "elapsed went backwards: {}", r.elapsed);
+        assert!(
+            r.tokens_per_sec.is_finite() && r.tokens_per_sec > 0.0,
+            "throughput must be positive, got {}",
+            r.tokens_per_sec
+        );
+        // 1024 tokens over >= 10 ms: anything near the clamp floor
+        // (tokens / 1e-9) means the negative delta came back.
+        assert!(r.tokens_per_sec < 1.0e9, "clamped stale delta: {}", r.tokens_per_sec);
     }
 
     #[test]

@@ -530,6 +530,9 @@ impl NativeTrainer {
 
     /// Run the training loop for `cfg.steps` optimizer steps.
     pub fn train(&self, mut state: NativeState, metrics: &mut Metrics) -> Result<NativeState> {
+        // Re-anchor the metrics clock: a resumed run carries restored step
+        // history whose elapsed values came from an earlier process.
+        metrics.start_run();
         let mut done = state.step;
         let mut epoch: u64 = 0;
         'outer: loop {

@@ -158,6 +158,9 @@ impl<'rt> Trainer<'rt> {
 
     /// Run the full training loop; returns the final state.
     pub fn train(&self, mut state: TrainState, metrics: &mut Metrics) -> Result<TrainState> {
+        // Re-anchor the metrics clock: a resumed run carries restored step
+        // history whose elapsed values came from an earlier process.
+        metrics.start_run();
         let mut done: u64 = state.step as u64;
         let mut epoch: u64 = 0;
         let out_dir = std::path::Path::new(&self.cfg.out_dir);

@@ -141,7 +141,12 @@ pub fn cce_backward<S: Store>(
     opts: &KernelOptions,
     lse: &[f32],
 ) -> BackwardOut<S> {
-    simd::with_lanes!(lanes => backward_with(p, opts, lse, lanes))
+    let sweep = crate::obs::Stopwatch::start();
+    let out = simd::with_lanes!(lanes => backward_with(p, opts, lse, lanes));
+    if let Some(us) = sweep.elapsed_us() {
+        super::record_bwd_sweep(us, &out.stats, out.workspace_bytes, p.n, p.v, opts);
+    }
+    out
 }
 
 fn backward_with<S: Store, L: Lanes>(

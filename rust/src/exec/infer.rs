@@ -82,7 +82,12 @@ pub fn topk<S: Store>(p: &InferProblem<S>, opts: &KernelOptions, k: usize) -> Re
     if k == 0 || k > p.v {
         bail!("top-k k={k} out of range for vocab {}", p.v);
     }
-    Ok(simd::with_lanes!(lanes => topk_with(p, opts, k, lanes)))
+    let sweep = crate::obs::Stopwatch::start();
+    let out = simd::with_lanes!(lanes => topk_with(p, opts, k, lanes));
+    if let Some(us) = sweep.elapsed_us() {
+        super::record_infer_sweep(us);
+    }
+    Ok(out)
 }
 
 fn topk_with<S: Store, L: Lanes>(
@@ -343,7 +348,12 @@ pub fn sample<S: Store>(
     if !temperature.is_finite() || temperature < 0.0 {
         bail!("temperature must be finite and >= 0, got {temperature}");
     }
-    Ok(simd::with_lanes!(lanes => sample_with(p, opts, temperature, seeds, lanes)))
+    let sweep = crate::obs::Stopwatch::start();
+    let out = simd::with_lanes!(lanes => sample_with(p, opts, temperature, seeds, lanes));
+    if let Some(us) = sweep.elapsed_us() {
+        super::record_infer_sweep(us);
+    }
+    Ok(out)
 }
 
 fn sample_with<S: Store, L: Lanes>(

@@ -33,7 +33,12 @@ use super::{pool, span_rows, ForwardOut, KernelOptions, Problem, Store};
 /// `E`/`C` on load inside the SIMD dot; the logit tile, the LSE
 /// recurrence, and the loss reduction are f32/f64 as always.
 pub fn cce_forward<S: Store>(p: &Problem<S>, opts: &KernelOptions) -> ForwardOut {
-    simd::with_lanes!(lanes => forward_with(p, opts, lanes))
+    let sweep = crate::obs::Stopwatch::start();
+    let out = simd::with_lanes!(lanes => forward_with(p, opts, lanes));
+    if let Some(us) = sweep.elapsed_us() {
+        super::record_fwd_sweep(us, out.workspace_bytes);
+    }
+    out
 }
 
 fn forward_with<S: Store, L: Lanes>(p: &Problem<S>, opts: &KernelOptions, lanes: L) -> ForwardOut {

@@ -65,9 +65,13 @@ pub use infer::{sample, score, topk, InferProblem, SampleOut, ScoreOut, TopKOut,
 pub use lse::cce_forward;
 pub use pool::ThreadPool;
 
+use std::sync::{Arc, OnceLock};
+
 use anyhow::{bail, Result};
 
+use crate::obs;
 use crate::runtime::HostTensor;
+use crate::sparsity::BlockFilterModel;
 
 /// One loss-layer problem instance: embeddings `E (N×D)`, classifier
 /// `C (V×D)`, labels `x (N)` with `-1` marking ignored tokens.
@@ -305,6 +309,108 @@ impl FilterStats {
         self.blocks_skipped += other.blocks_skipped;
         self.sig_entries += other.sig_entries;
     }
+}
+
+// ---------------------------------------------------------------- telemetry
+
+/// Handles into the process-global metrics registry, resolved once.  The
+/// families are pre-registered by [`obs::global`], so these lookups bind to
+/// the exact storage the exporters render — no registration races, no help
+/// strings to repeat here.
+struct ExecObs {
+    fwd_sweep_us: Arc<obs::Histogram>,
+    bwd_sweep_us: Arc<obs::Histogram>,
+    infer_sweep_us: Arc<obs::Histogram>,
+    filter_survival: Arc<obs::GaugeF>,
+    filter_survival_predicted: Arc<obs::GaugeF>,
+    filter_blocks_total: Arc<obs::Counter>,
+    filter_blocks_skipped: Arc<obs::Counter>,
+    workspace_peak: Arc<obs::Gauge>,
+    pool_workers: Arc<obs::Gauge>,
+    pool_inline: Arc<obs::Counter>,
+    pool_dispatch: Arc<obs::Counter>,
+}
+
+fn exec_obs() -> &'static ExecObs {
+    static OBS: OnceLock<ExecObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        ExecObs {
+            fwd_sweep_us: r.histogram("exec_fwd_sweep_us", ""),
+            bwd_sweep_us: r.histogram("exec_bwd_sweep_us", ""),
+            infer_sweep_us: r.histogram("exec_infer_sweep_us", ""),
+            filter_survival: r.gauge_f("exec_filter_survival", ""),
+            filter_survival_predicted: r.gauge_f("exec_filter_survival_predicted", ""),
+            filter_blocks_total: r.counter("exec_filter_blocks_total", ""),
+            filter_blocks_skipped: r.counter("exec_filter_blocks_skipped_total", ""),
+            workspace_peak: r.gauge("exec_workspace_peak_bytes", ""),
+            pool_workers: r.gauge("exec_pool_workers", ""),
+            pool_inline: r.counter("exec_pool_inline_total", ""),
+            pool_dispatch: r.counter("exec_pool_dispatch_total", ""),
+        }
+    })
+}
+
+/// Per-sweep forward profiling hook.  One enabled-check plus a handful of
+/// relaxed atomics; a single relaxed load when tracing is off.
+pub(crate) fn record_fwd_sweep(us: u64, workspace_bytes: usize) {
+    if !obs::enabled() {
+        return;
+    }
+    let o = exec_obs();
+    o.fwd_sweep_us.record(us);
+    o.workspace_peak.set_max(workspace_bytes as i64);
+}
+
+/// Per-sweep backward profiling hook: sweep time, workspace high-water,
+/// filter block accounting, and the measured block-survival ratio next to
+/// the [`BlockFilterModel`] prediction for the same shape — the live
+/// measured-vs-modelled §4.3 comparison.
+pub(crate) fn record_bwd_sweep(
+    us: u64,
+    stats: &FilterStats,
+    workspace_bytes: usize,
+    n: usize,
+    v: usize,
+    opts: &KernelOptions,
+) {
+    if !obs::enabled() {
+        return;
+    }
+    let o = exec_obs();
+    o.bwd_sweep_us.record(us);
+    o.workspace_peak.set_max(workspace_bytes as i64);
+    o.filter_blocks_total.add(stats.blocks_total);
+    o.filter_blocks_skipped.add(stats.blocks_skipped);
+    o.filter_survival.set(stats.survival());
+    let model = BlockFilterModel {
+        vocab: v,
+        v_block: opts.v_block,
+        n_block: opts.n_block,
+        sig_per_row: (stats.sig_entries / n.max(1) as u64) as usize,
+        // Nominal Zipf head agreement; the gap between measured and
+        // predicted survival is exactly what this pair of gauges surfaces.
+        sort_agreement: 0.7,
+    };
+    let predicted = if opts.sort { model.survival_sorted() } else { model.survival_unsorted() };
+    o.filter_survival_predicted.set(predicted);
+}
+
+/// Per-sweep inference profiling hook (topk / sample / score).
+pub(crate) fn record_infer_sweep(us: u64) {
+    if !obs::enabled() {
+        return;
+    }
+    exec_obs().infer_sweep_us.record(us);
+}
+
+/// Raise the process-wide kernel-workspace high-water mark.  Public so the
+/// serve engine can mirror its per-engine peak into `/metrics`.
+pub fn note_workspace_peak(bytes: u64) {
+    if !obs::enabled() {
+        return;
+    }
+    exec_obs().workspace_peak.set_max(bytes as i64);
 }
 
 /// Ceiling division (formulated to be toolchain-neutral: no `div_ceil`

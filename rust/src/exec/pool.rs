@@ -84,6 +84,10 @@ pub struct ThreadPool {
     handles: Mutex<Vec<JoinHandle<()>>>,
     workers: AtomicUsize,
     generations: AtomicU64,
+    /// Mirror occupancy into the process-global metrics registry
+    /// (`exec_pool_*` families).  Set only for the [`global`] pool so
+    /// test-local pools never pollute the process gauges.
+    observed: bool,
 }
 
 fn lock<T>(mutex: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
@@ -106,6 +110,7 @@ impl ThreadPool {
             handles: Mutex::new(Vec::new()),
             workers: AtomicUsize::new(0),
             generations: AtomicU64::new(0),
+            observed: false,
         };
         pool.ensure_workers(workers);
         pool
@@ -144,6 +149,9 @@ impl ThreadPool {
             handles.push(std::thread::spawn(move || worker_loop(&shared)));
         }
         self.workers.store(handles.len(), Ordering::Relaxed);
+        if self.observed && crate::obs::enabled() {
+            super::exec_obs().pool_workers.set(handles.len() as i64);
+        }
     }
 
     /// Run `tasks` to completion and return their results in task order —
@@ -160,10 +168,16 @@ impl ThreadPool {
         if tasks.len() <= 1 {
             // Inline fast path: a single span (every N=batch-size decode
             // step) never touches the queue, the condvars, or a worker.
+            if self.observed && crate::obs::enabled() {
+                super::exec_obs().pool_inline.inc();
+            }
             return tasks.into_iter().map(|f| f()).collect();
         }
         self.ensure_workers(tasks.len() - 1);
         self.generations.fetch_add(1, Ordering::Relaxed);
+        if self.observed && crate::obs::enabled() {
+            super::exec_obs().pool_dispatch.inc();
+        }
         let batch = Arc::new(Batch {
             pending: Mutex::new(tasks.len()),
             done: Condvar::new(),
@@ -279,7 +293,11 @@ fn execute(batch: &Batch, task: ErasedTask) {
 /// (see [`ThreadPool::ensure_workers`]) and lives for the process.
 pub fn global() -> &'static ThreadPool {
     static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
-    GLOBAL.get_or_init(|| ThreadPool::new(0))
+    GLOBAL.get_or_init(|| {
+        let mut pool = ThreadPool::new(0);
+        pool.observed = true;
+        pool
+    })
 }
 
 #[cfg(test)]

@@ -44,6 +44,10 @@
 //! * [`bench`]     — the table/figure harnesses and a from-scratch timing
 //!   framework (no external bench crate); `table1 --json` emits
 //!   `BENCH_table1.json` for cross-PR perf tracking.
+//! * [`obs`]       — dependency-free observability: metrics registry
+//!   (counters/gauges/log-bucket histograms), per-request trace spans,
+//!   kernel profiling hooks, and the `/metrics` + `/healthz` exporter
+//!   surface (Prometheus text + `{"op":"metrics"}`).
 //! * [`util`]      — substrates built from scratch for the offline
 //!   environment: JSON, CLI parsing, RNG, property testing, stats.
 //!
@@ -56,6 +60,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod memmodel;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod sparsity;

@@ -5,10 +5,13 @@
 //! cce eval    --checkpoint path [--backend native|pjrt] [--tag e2e]
 //! cce serve   --checkpoint path | --demo  [--port 7343, 0 = ephemeral]
 //!             [--max-batch 8] [--max-wait-ms 3] [--queue-depth 64]
-//! cce client  --port P [--op generate|score|info|shutdown]
+//!             [--metrics-addr 127.0.0.1:9464 — /metrics + /healthz HTTP]
+//! cce client  --port P [--op generate|score|info|metrics|shutdown]
 //!             [--prompt "..."] [--text "..."] [--top-k K] [--temperature T]
+//!             [--trace — echo per-stage timings in the response]
 //! cce servebench [--demo | --checkpoint path] [--requests 64]
 //!             [--concurrency 8] [--repeats 3] [--dtype f32|bf16]
+//!             [--scrape — persist server-side histograms]
 //!             [--json BENCH_serve.json]
 //! cce table1  [--backend native|pjrt] [--json BENCH_table1.json]
 //!             [--n 1024 --d 256 --v 4096] [--threads N] [--dtype f32|bf16]
@@ -60,11 +63,11 @@ fn usage() -> ! {
          train      run a training job (--backend/--method/--steps/--corpus/...)\n  \
          eval       evaluate a checkpoint (--checkpoint) [--backend]\n  \
          serve      serve a checkpoint over TCP (--checkpoint|--demo, --port,\n             \
-                    --drain-ms, --idle-timeout-ms)\n  \
+                    --drain-ms, --idle-timeout-ms, --metrics-addr)\n  \
          client     one-shot client for a running server (--port, --op,\n             \
-                    --timeout-ms, --retries, --deadline-ms)\n  \
+                    --timeout-ms, --retries, --deadline-ms, --trace)\n  \
          servebench serving throughput/latency harness [--json]\n             \
-                    (--timeout-ms, --retries)\n  \
+                    (--timeout-ms, --retries, --scrape)\n  \
          table1     Table 1: memory & time per method [--backend/--json]\n  \
          tableA1    Table A1: Table 1 with ignored tokens removed\n  \
          tableA2    Table A2: backward-pass breakdown (pjrt)\n  \
@@ -144,7 +147,7 @@ fn pjrt_unavailable(cmd: &str) -> Result<()> {
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["check", "verbose", "demo"])?;
+    let args = Args::parse(argv, &["check", "verbose", "demo", "scrape", "trace"])?;
     let cmd = match args.positional.first() {
         Some(c) => c.as_str(),
         None => usage(),
@@ -410,6 +413,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.get("idle-timeout-ms", 300_000u64)?,
         ),
         drain: std::time::Duration::from_millis(args.get("drain-ms", 5_000u64)?),
+        metrics_addr: args.opt("metrics-addr").map(|s| s.to_string()),
     };
     eprintln!(
         "[serve] model: vocab {} d {} window {} step {} dtype {} ({:.1} MB params) | \
@@ -428,6 +432,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // One parseable line on stdout: the CI smoke test and scripts read the
     // bound (possibly ephemeral) port from it.
     println!("[serve] listening on {}", server.addr);
+    if let Some(addr) = server.metrics_addr() {
+        // Same contract for the exporter's (possibly ephemeral) port.
+        println!("[serve] metrics on {addr}");
+    }
     use std::io::Write as _;
     std::io::stdout().flush()?;
     server.join()?;
@@ -458,14 +466,20 @@ fn cmd_client(args: &Args) -> Result<()> {
             temperature: args.get("temperature", 0.0f32)?,
             seed: args.get("seed", 0u64)?,
             deadline_ms: args.get("deadline-ms", 0u64)?,
+            trace: args.flag("trace"),
         })?,
         "score" => {
             let text = args.get("text", "the cat sat on the mat".to_string())?;
-            client.score(&text)?
+            client.call_ok(&cce::serve::Request::Score {
+                text,
+                deadline_ms: args.get("deadline-ms", 0u64)?,
+                trace: args.flag("trace"),
+            })?
         }
         "info" => client.info()?,
+        "metrics" => client.metrics()?,
         "shutdown" => client.shutdown()?,
-        other => bail!("unknown --op {other:?} (generate|score|info|shutdown)"),
+        other => bail!("unknown --op {other:?} (generate|score|info|metrics|shutdown)"),
     };
     println!("{}", response.to_line());
     Ok(())
@@ -483,6 +497,7 @@ fn cmd_servebench(args: &Args) -> Result<()> {
         max_tokens: args.get("max-tokens", 16usize)?,
         timeout: (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms)),
         retries: args.get("retries", 2u32)?,
+        scrape: args.flag("scrape"),
         serve: cce::serve::ServeConfig {
             workers: args.get("workers", 2usize)?,
             max_batch: args.get("max-batch", 8usize)?,

@@ -1,0 +1,288 @@
+//! Lock-free fixed-boundary log-bucket histogram.
+//!
+//! Buckets are geometric with four per octave (ratio `2^(1/4) ≈ 1.19`),
+//! spanning `[1, 2^26]` in the recorded unit (microseconds for every
+//! latency family) plus one overflow bucket.  Recording is three relaxed
+//! `AtomicU64` operations — count, sum, one bucket — so concurrent
+//! recorders never contend on a lock and totals are exact (atomic adds
+//! commute).  Percentiles are reconstructed from the bucket counts: the
+//! estimate is the geometric midpoint of the bucket holding the target
+//! rank, so its error is bounded by half a bucket width (`2^(1/8) ≈ 9%`
+//! either way) — pinned by the tests below against sorted references.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Bucket resolution: four buckets per factor of two.
+pub const BUCKETS_PER_OCTAVE: u32 = 4;
+/// Octaves covered by finite buckets: `[1, 2^26]` (~67 s in µs).
+const OCTAVES: u32 = 26;
+/// Finite buckets plus the overflow bucket.
+pub const BUCKET_COUNT: usize = (OCTAVES * BUCKETS_PER_OCTAVE) as usize + 1;
+
+/// Upper bound of finite bucket `i`: `2^((i+1)/4)`.
+pub fn bucket_bound(i: usize) -> f64 {
+    2f64.powf((i as f64 + 1.0) / BUCKETS_PER_OCTAVE as f64)
+}
+
+/// Index of the bucket whose `(lower, upper]` range holds `value`.
+/// `log2` of an exact power of two is exact in f64, so boundary values
+/// land deterministically; everything past the last finite bound goes to
+/// the overflow bucket.
+fn bucket_index(value: u64) -> usize {
+    if value <= 1 {
+        return 0;
+    }
+    let i = ((value as f64).log2() * BUCKETS_PER_OCTAVE as f64).ceil() as usize;
+    i.saturating_sub(1).min(BUCKET_COUNT - 1)
+}
+
+/// A named histogram family registered in a [`crate::obs::Registry`].
+pub struct Histogram {
+    name: String,
+    help: String,
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; BUCKET_COUNT],
+}
+
+impl Histogram {
+    pub(crate) fn new(name: &str, help: &str) -> Histogram {
+        Histogram {
+            name: name.to_string(),
+            help: help.to_string(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Record one observation (three relaxed atomics).
+    pub fn record(&self, value: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.buckets[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    fn snapshot(&self) -> [u64; BUCKET_COUNT] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Representative value reported for bucket `i`: the geometric
+    /// midpoint of its range (the lower edge for the overflow bucket,
+    /// since its range is unbounded above).
+    fn representative(i: usize) -> f64 {
+        if i == 0 {
+            1.0
+        } else if i == BUCKET_COUNT - 1 {
+            bucket_bound(BUCKET_COUNT - 2)
+        } else {
+            (bucket_bound(i - 1) * bucket_bound(i)).sqrt()
+        }
+    }
+
+    /// Reconstruct the `q`-quantile (`0 < q <= 1`) from the bucket counts.
+    /// Returns 0 for an empty histogram.  The estimate is within half a
+    /// bucket (`2^(1/8)`) of the true sample quantile at the same rank.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.snapshot();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Histogram::representative(i);
+            }
+        }
+        Histogram::representative(BUCKET_COUNT - 1)
+    }
+
+    /// Prometheus text exposition: cumulative `_bucket{le=...}` lines for
+    /// every non-empty bucket (plus the mandatory `+Inf`), then `_sum` and
+    /// `_count`.
+    pub(crate) fn render_prometheus(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let counts = self.snapshot();
+        let _ = writeln!(out, "# HELP {} {}", self.name, self.help);
+        let _ = writeln!(out, "# TYPE {} histogram", self.name);
+        let mut cumulative = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cumulative += c;
+            if c > 0 && i < BUCKET_COUNT - 1 {
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{{le=\"{:.3}\"}} {cumulative}",
+                    self.name,
+                    bucket_bound(i)
+                );
+            }
+        }
+        let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {cumulative}", self.name);
+        let _ = writeln!(out, "{}_sum {}", self.name, self.sum());
+        let _ = writeln!(out, "{}_count {}", self.name, self.count());
+    }
+
+    /// JSON summary: exact count/sum plus reconstructed p50/p90/p99.
+    pub(crate) fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Int(self.count() as i64)),
+            ("sum", Json::Int(self.sum() as i64)),
+            ("p50", Json::Float(self.quantile(0.50))),
+            ("p90", Json::Float(self.quantile(0.90))),
+            ("p99", Json::Float(self.quantile(0.99))),
+        ])
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("name", &self.name)
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Max ratio between the reconstructed quantile and the sorted-sample
+    /// reference: half a bucket either way, plus float slack.
+    const HALF_BUCKET: f64 = 1.0905077327; // 2^(1/8)
+    const SLACK: f64 = 1.0001;
+
+    fn reference_quantile(sorted: &[u64], q: f64) -> f64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1] as f64
+    }
+
+    fn check_against_reference(values: &[u64], label: &str) {
+        let h = Histogram::new("test_us", "test");
+        for &v in values {
+            h.record(v);
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_unstable();
+        for q in [0.50, 0.90, 0.99] {
+            let est = h.quantile(q);
+            let want = reference_quantile(&sorted, q);
+            let ratio = est / want;
+            assert!(
+                (1.0 / (HALF_BUCKET * SLACK)..=HALF_BUCKET * SLACK).contains(&ratio),
+                "{label} p{:.0}: estimate {est:.2} vs reference {want:.2} \
+                 (ratio {ratio:.4} breaks the half-bucket bound)",
+                q * 100.0
+            );
+        }
+        assert_eq!(h.count(), values.len() as u64);
+        assert_eq!(h.sum(), values.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn percentiles_track_sorted_reference_on_known_distributions() {
+        let mut rng = Rng::new(0x0B5);
+        // Uniform latencies in [2, 100_000] µs.
+        let uniform: Vec<u64> = (0..5000).map(|_| 2 + rng.usize_below(99_999) as u64).collect();
+        check_against_reference(&uniform, "uniform");
+        // Log-uniform (heavy-tailed, like real service times): 2^u for
+        // u uniform in [1, 20).
+        let loguni: Vec<u64> = (0..5000)
+            .map(|_| 2f64.powf(1.0 + rng.f64() * 19.0) as u64)
+            .collect();
+        check_against_reference(&loguni, "log-uniform");
+        // Bimodal: fast path ~30 µs, slow path ~40 ms.
+        let bimodal: Vec<u64> = (0..5000)
+            .map(|_| if rng.bool(0.8) { 25 + rng.usize_below(10) as u64 } else { 40_000 })
+            .collect();
+        check_against_reference(&bimodal, "bimodal");
+    }
+
+    #[test]
+    fn concurrent_recording_keeps_exact_totals() {
+        let h = Histogram::new("test_concurrent_us", "test");
+        const THREADS: u64 = 4;
+        const PER_THREAD: u64 = 10_000;
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let h = &h;
+                scope.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        // Deterministic per-thread value stream.
+                        h.record(1 + (t * PER_THREAD + i) % 5000);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), THREADS * PER_THREAD);
+        // Exact sum: every (t, i) value summed sequentially.
+        let want: u64 = (0..THREADS)
+            .flat_map(|t| (0..PER_THREAD).map(move |i| 1 + (t * PER_THREAD + i) % 5000))
+            .sum();
+        assert_eq!(h.sum(), want, "concurrent adds must commute exactly");
+        // Bucket totals equal a single-threaded replay.
+        let replay = Histogram::new("test_replay_us", "test");
+        for t in 0..THREADS {
+            for i in 0..PER_THREAD {
+                replay.record(1 + (t * PER_THREAD + i) % 5000);
+            }
+        }
+        assert_eq!(h.snapshot(), replay.snapshot());
+    }
+
+    #[test]
+    fn overflow_bucket_catches_out_of_range_values() {
+        let h = Histogram::new("test_overflow_us", "test");
+        h.record(10); // one in-range value
+        let huge = 1_000_000_000_000u64; // ~11.5 days in µs, far past 2^26
+        h.record(huge);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 10 + huge + u64::MAX / 2);
+        // The top quantile reports the overflow bucket's lower edge — the
+        // last finite bound — not garbage or infinity.
+        let top = h.quantile(1.0);
+        assert!(top.is_finite());
+        assert!((top - bucket_bound(BUCKET_COUNT - 2)).abs() < 1e-6, "{top}");
+        // The +Inf cumulative line covers all three observations.
+        let mut text = String::new();
+        h.render_prometheus(&mut text);
+        assert!(text.contains("test_overflow_us_bucket{le=\"+Inf\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_boundary_exact() {
+        let mut last = 0;
+        for v in 1..10_000u64 {
+            let i = bucket_index(v);
+            assert!(i >= last, "index must be monotone in the value");
+            assert!(v as f64 <= bucket_bound(i) + 1e-9, "value {v} above its bucket bound");
+            if i > 0 {
+                assert!(v as f64 > bucket_bound(i - 1) - 1e-9, "value {v} below its bucket");
+            }
+            last = i;
+        }
+        // Exact powers of two land on their boundary bucket.
+        assert_eq!(bucket_index(2), (BUCKETS_PER_OCTAVE - 1) as usize);
+        assert_eq!(bucket_index(4), (2 * BUCKETS_PER_OCTAVE - 1) as usize);
+    }
+}

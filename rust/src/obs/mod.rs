@@ -1,0 +1,402 @@
+//! Dependency-free observability: a metrics registry (counters, gauges,
+//! log-bucket histograms), per-request trace spans, and rendering to both
+//! Prometheus text exposition and the line-JSON `{"op":"metrics"}` answer.
+//!
+//! Layout follows the rest of the substrate — `std` only, lock-free hot
+//! paths, and the same zero-cost-when-unused discipline as
+//! [`crate::util::faults`]: every timing hook short-circuits on one relaxed
+//! atomic load ([`enabled`]), and recording a sample is a handful of
+//! relaxed `AtomicU64` operations on a handle resolved once at startup.
+//! `CCE_OBS=0` (or `off`/`false`) disarms the layer at process start.
+//!
+//! Two scopes of registry exist on purpose:
+//!
+//! * [`global`] — the process-wide registry for singleton subsystems: the
+//!   exec kernels (`exec_*` families: sweep timings, filter survival, pool
+//!   occupancy, workspace high-water marks) and the trainer (`train_*`).
+//!   Its standard families are pre-registered so an exporter always shows
+//!   them, even before the first sweep or step.
+//! * instance registries ([`Registry::new`]) — the serve stack creates one
+//!   per batcher (`serve_*` families), so concurrent servers in one
+//!   process (the test suite, future multi-tenant serving) never mix
+//!   counts and `{"op":"info"}` stays exact per instance.
+
+pub mod histogram;
+pub mod span;
+
+pub use histogram::Histogram;
+pub use span::{StageTimings, Stopwatch};
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once, OnceLock};
+
+use crate::util::json::Json;
+
+// ------------------------------------------------------------------ gating
+
+/// Fast-path guard: false ⇒ every timing hook is inert.
+static ACTIVE: AtomicBool = AtomicBool::new(true);
+static ENV_INIT: Once = Once::new();
+
+fn load_env_once() {
+    ENV_INIT.call_once(|| {
+        if let Ok(v) = std::env::var("CCE_OBS") {
+            let v = v.trim().to_ascii_lowercase();
+            if v == "0" || v == "off" || v == "false" {
+                ACTIVE.store(false, Ordering::SeqCst);
+            }
+        }
+    });
+}
+
+/// True unless `CCE_OBS=0|off|false` disarmed the layer (or a test did).
+pub fn enabled() -> bool {
+    load_env_once();
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Flip the layer on/off in-process (tests).
+pub fn set_enabled(on: bool) {
+    ENV_INIT.call_once(|| {});
+    ACTIVE.store(on, Ordering::SeqCst);
+}
+
+// ----------------------------------------------------------------- metrics
+
+/// Monotone counter.
+pub struct Counter {
+    name: String,
+    help: String,
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Integer gauge (up/down, or high-water via [`Gauge::set_max`]).  `add`
+/// and `sub` are sequentially consistent so credit/debit pairs that other
+/// threads poll (queue depth, in-flight) never transiently disagree.
+pub struct Gauge {
+    name: String,
+    help: String,
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::SeqCst);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.value.fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.value.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Raise to `v` if larger (high-water marks).
+    pub fn set_max(&self, v: i64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::SeqCst)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Float gauge (ratios, losses, rates) — an f64 stored as bits.
+pub struct GaugeF {
+    name: String,
+    help: String,
+    bits: AtomicU64,
+}
+
+impl GaugeF {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    GaugeF(Arc<GaugeF>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn name(&self) -> &str {
+        match self {
+            Metric::Counter(m) => m.name(),
+            Metric::Gauge(m) => m.name(),
+            Metric::GaugeF(m) => m.name(),
+            Metric::Histogram(m) => m.name(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// An ordered set of named metric families.  Cheap to clone (shared
+/// handle); lookups lock a mutex, so resolve handles once at startup and
+/// record through the returned `Arc`s.
+#[derive(Clone)]
+pub struct Registry {
+    metrics: Arc<Mutex<Vec<Metric>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { metrics: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Metric>> {
+        self.metrics.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Get-or-create a counter named `name`.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut metrics = self.lock();
+        for m in metrics.iter() {
+            if let Metric::Counter(c) = m {
+                if c.name() == name {
+                    return c.clone();
+                }
+            }
+        }
+        let c = Arc::new(Counter {
+            name: name.to_string(),
+            help: help.to_string(),
+            value: AtomicU64::new(0),
+        });
+        metrics.push(Metric::Counter(c.clone()));
+        c
+    }
+
+    /// Get-or-create an integer gauge named `name`.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut metrics = self.lock();
+        for m in metrics.iter() {
+            if let Metric::Gauge(g) = m {
+                if g.name() == name {
+                    return g.clone();
+                }
+            }
+        }
+        let g = Arc::new(Gauge {
+            name: name.to_string(),
+            help: help.to_string(),
+            value: AtomicI64::new(0),
+        });
+        metrics.push(Metric::Gauge(g.clone()));
+        g
+    }
+
+    /// Get-or-create a float gauge named `name`.
+    pub fn gauge_f(&self, name: &str, help: &str) -> Arc<GaugeF> {
+        let mut metrics = self.lock();
+        for m in metrics.iter() {
+            if let Metric::GaugeF(g) = m {
+                if g.name() == name {
+                    return g.clone();
+                }
+            }
+        }
+        let g = Arc::new(GaugeF {
+            name: name.to_string(),
+            help: help.to_string(),
+            bits: AtomicU64::new(0f64.to_bits()),
+        });
+        metrics.push(Metric::GaugeF(g.clone()));
+        g
+    }
+
+    /// Get-or-create a histogram named `name`.
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let mut metrics = self.lock();
+        for m in metrics.iter() {
+            if let Metric::Histogram(h) = m {
+                if h.name() == name {
+                    return h.clone();
+                }
+            }
+        }
+        let h = Arc::new(Histogram::new(name, help));
+        metrics.push(Metric::Histogram(h.clone()));
+        h
+    }
+
+    /// Number of registered metric families.
+    pub fn family_count(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Append Prometheus text exposition (format 0.0.4) for every family.
+    pub fn render_prometheus(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        for m in self.lock().iter() {
+            match m {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# HELP {} {}", c.name, c.help);
+                    let _ = writeln!(out, "# TYPE {} counter", c.name);
+                    let _ = writeln!(out, "{} {}", c.name, c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# HELP {} {}", g.name, g.help);
+                    let _ = writeln!(out, "# TYPE {} gauge", g.name);
+                    let _ = writeln!(out, "{} {}", g.name, g.get());
+                }
+                Metric::GaugeF(g) => {
+                    let _ = writeln!(out, "# HELP {} {}", g.name, g.help);
+                    let _ = writeln!(out, "# TYPE {} gauge", g.name);
+                    let _ = writeln!(out, "{} {}", g.name, g.get());
+                }
+                Metric::Histogram(h) => h.render_prometheus(out),
+            }
+        }
+    }
+
+    /// JSON snapshot: one field per family, in registration order.
+    /// Histograms become `{count, sum, p50, p90, p99}` objects.
+    pub fn to_json_fields(&self) -> Vec<(String, Json)> {
+        self.lock()
+            .iter()
+            .map(|m| {
+                let value = match m {
+                    Metric::Counter(c) => Json::Int(c.get() as i64),
+                    Metric::Gauge(g) => Json::Int(g.get()),
+                    Metric::GaugeF(g) => Json::Float(g.get()),
+                    Metric::Histogram(h) => h.to_json(),
+                };
+                (m.name().to_string(), value)
+            })
+            .collect()
+    }
+}
+
+/// The process-global registry (exec + train families).  Standard families
+/// are pre-registered so exporters always show the full set, zero-valued,
+/// before the first sweep or train step.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let r = Registry::new();
+        r.histogram("exec_fwd_sweep_us", "CCE forward sweep wall time per call");
+        r.histogram("exec_bwd_sweep_us", "CCE backward sweep wall time per call");
+        r.histogram("exec_infer_sweep_us", "Inference kernel (topk/sample/score) wall time");
+        r.gauge_f(
+            "exec_filter_survival",
+            "Measured fraction of gradient blocks surviving the section-4.3 filter (last sweep)",
+        );
+        r.gauge_f(
+            "exec_filter_survival_predicted",
+            "BlockFilterModel-predicted block survival for the same shape",
+        );
+        r.counter("exec_filter_blocks_total", "Gradient blocks considered by the filter");
+        r.counter("exec_filter_blocks_skipped_total", "Gradient blocks skipped by the filter");
+        r.gauge("exec_pool_workers", "Live fork-join pool worker threads");
+        r.counter("exec_pool_inline_total", "Pool runs served entirely on the inline fast path");
+        r.counter("exec_pool_dispatch_total", "Pool runs fanned out to worker threads");
+        r.gauge("exec_workspace_peak_bytes", "High-water mark of kernel workspace bytes");
+        r.counter("train_steps_total", "Optimizer steps completed");
+        r.gauge_f("train_step_loss", "Loss of the most recent train step");
+        r.gauge_f("train_grad_norm", "Gradient norm of the most recent train step");
+        r.gauge_f("train_tokens_per_sec", "Training throughput of the most recent step");
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_by_name_and_render_both_formats() {
+        let r = Registry::new();
+        let c = r.counter("unit_requests_total", "requests");
+        let c2 = r.counter("unit_requests_total", "requests");
+        c.inc();
+        c2.add(2);
+        assert_eq!(c.get(), 3, "same-name handles must share storage");
+        let g = r.gauge("unit_depth", "queue depth");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.set_max(10);
+        g.set_max(7);
+        assert_eq!(g.get(), 10, "set_max keeps the high-water mark");
+        let f = r.gauge_f("unit_ratio", "a ratio");
+        f.set(0.25);
+        assert_eq!(f.get(), 0.25);
+        let h = r.histogram("unit_latency_us", "latency");
+        h.record(100);
+        assert_eq!(r.family_count(), 4);
+
+        let mut text = String::new();
+        r.render_prometheus(&mut text);
+        assert!(text.contains("# TYPE unit_requests_total counter"), "{text}");
+        assert!(text.contains("unit_requests_total 3"), "{text}");
+        assert!(text.contains("# TYPE unit_depth gauge"), "{text}");
+        assert!(text.contains("# TYPE unit_latency_us histogram"), "{text}");
+        assert!(text.contains("unit_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("unit_latency_us_count 1"), "{text}");
+
+        let json = Json::Object(r.to_json_fields());
+        assert_eq!(json.get("unit_requests_total").and_then(Json::as_i64), Some(3));
+        assert_eq!(json.get("unit_depth").and_then(Json::as_i64), Some(10));
+        let hist = json.get("unit_latency_us").expect("histogram field");
+        assert_eq!(hist.get("count").and_then(Json::as_i64), Some(1));
+    }
+
+    #[test]
+    fn global_registry_preregisters_exec_and_train_families() {
+        let fields = global().to_json_fields();
+        let names: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        for want in [
+            "exec_fwd_sweep_us",
+            "exec_bwd_sweep_us",
+            "exec_filter_survival",
+            "exec_pool_workers",
+            "exec_workspace_peak_bytes",
+            "train_steps_total",
+            "train_tokens_per_sec",
+        ] {
+            assert!(names.contains(&want), "missing pre-registered family {want}");
+        }
+        assert!(global().family_count() >= 12);
+    }
+}

@@ -1,0 +1,83 @@
+//! Per-request trace spans.
+//!
+//! A request passing through the serve stack is decomposed into stages —
+//! queue wait, batch assembly, kernel execution, response serialization —
+//! each timed with a [`Stopwatch`] and aggregated into the per-stage
+//! histograms of the batcher's registry.  When a request sets
+//! `"trace":true`, its own [`StageTimings`] are additionally echoed back
+//! in the response as a `timings` object (serialize time is only in the
+//! histograms: it cannot be known before the response is written).
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A start-time capture that is inert when the observability layer is
+/// disabled: no clock read, and every elapsed query returns `None`.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Option<Instant>);
+
+impl Stopwatch {
+    /// Capture now — or nothing, when `CCE_OBS` disabled the layer.
+    pub fn start() -> Stopwatch {
+        if crate::obs::enabled() {
+            Stopwatch(Some(Instant::now()))
+        } else {
+            Stopwatch(None)
+        }
+    }
+
+    /// Microseconds since [`Stopwatch::start`], `None` when disabled.
+    pub fn elapsed_us(&self) -> Option<u64> {
+        self.0.map(|t| t.elapsed().as_micros() as u64)
+    }
+}
+
+/// Stage timings of one request, in microseconds.
+///
+/// * `queue_us` — submit until batch execution began (includes waiting out
+///   the batch-assembly window while stragglers were collected);
+/// * `assemble_us` — the batch-assembly window of the batch this request
+///   rode in (shared by every request in the batch);
+/// * `kernel_us` — engine execution time of the request's sub-batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageTimings {
+    pub queue_us: u64,
+    pub assemble_us: u64,
+    pub kernel_us: u64,
+}
+
+impl StageTimings {
+    /// The `timings` object echoed in traced responses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_us", Json::Int(self.queue_us as i64)),
+            ("assemble_us", Json::Int(self.assemble_us as i64)),
+            ("kernel_us", Json::Int(self.kernel_us as i64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timings_serialize_all_stages() {
+        let t = StageTimings { queue_us: 12, assemble_us: 3, kernel_us: 450 };
+        let j = t.to_json();
+        assert_eq!(j.get("queue_us").and_then(Json::as_i64), Some(12));
+        assert_eq!(j.get("assemble_us").and_then(Json::as_i64), Some(3));
+        assert_eq!(j.get("kernel_us").and_then(Json::as_i64), Some(450));
+    }
+
+    #[test]
+    fn stopwatch_measures_when_enabled() {
+        // The obs layer defaults to enabled; a stopwatch must yield a
+        // finite elapsed time.
+        if crate::obs::enabled() {
+            let sw = Stopwatch::start();
+            assert!(sw.elapsed_us().is_some());
+        }
+    }
+}

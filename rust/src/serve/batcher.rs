@@ -25,16 +25,27 @@
 //! `overloaded` responses, and [`Batcher::drain`] bounds graceful
 //! shutdown.
 //!
+//! Telemetry (PR 7): every counter lives in a per-batcher
+//! [`crate::obs::Registry`] (`serve_*` families) — one source of truth
+//! feeding `{"op":"info"}` (byte-compatible field names), the
+//! `{"op":"metrics"}` endpoint, and `GET /metrics`.  The registry is
+//! per-instance rather than process-global so concurrent servers in one
+//! process (the test suite) never mix counts.  Each job carries its
+//! submit time; [`run_batch`] turns that into queue/assembly/kernel
+//! [`StageTimings`], feeds the per-stage histograms, and echoes the
+//! timings back on jobs whose request set `"trace":true`.
+//!
 //! Generate jobs in one batch decode in lockstep through a single blocked
 //! kernel per step ([`Engine::generate_batch`]); score jobs fuse into a
 //! single teacher-forced problem ([`Engine::score_batch`]).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::obs::{Counter, Gauge, Histogram, Registry, StageTimings};
 use crate::serve::engine::Engine;
 use crate::serve::protocol::{ErrorCode, GenParams, Request, Response};
 use crate::util::faults;
@@ -43,42 +54,134 @@ use crate::util::faults;
 /// flag (bounds shutdown latency).
 const IDLE_POLL: Duration = Duration::from_millis(25);
 
+/// What the batcher routes back per job: the response plus the job's stage
+/// timings (populated when the batch executed; `None` on paths that never
+/// reached execution, e.g. a non-batchable op).
+pub struct Reply {
+    pub response: Response,
+    pub timings: Option<StageTimings>,
+}
+
+impl Reply {
+    /// A reply with no stage timings (inline answers, rejected jobs).
+    pub fn bare(response: Response) -> Reply {
+        Reply { response, timings: None }
+    }
+}
+
 /// One queued request plus its response channel.
 pub struct Job {
     pub request: Request,
-    pub respond: mpsc::Sender<Response>,
+    pub respond: mpsc::Sender<Reply>,
     /// Absolute shed deadline derived from the request's `deadline_ms`;
     /// checked when the batch is assembled, before any kernel work.
     pub deadline: Option<Instant>,
+    /// When the job entered the queue — the start of its queue-wait span.
+    pub submitted: Instant,
+    /// Echo this job's [`StageTimings`] in its response.
+    pub trace: bool,
 }
 
 impl Job {
     /// Build a job, starting the request's `deadline_ms` clock now.
-    pub fn new(request: Request, respond: mpsc::Sender<Response>) -> Job {
+    pub fn new(request: Request, respond: mpsc::Sender<Reply>) -> Job {
+        let submitted = Instant::now();
         let deadline = request
             .deadline_ms()
-            .and_then(|ms| Instant::now().checked_add(Duration::from_millis(ms)));
-        Job { request, respond, deadline }
+            .and_then(|ms| submitted.checked_add(Duration::from_millis(ms)));
+        let trace = request.trace();
+        Job { request, respond, deadline, submitted, trace }
     }
 }
 
-/// Batcher counters, exposed by the `info` endpoint.
-#[derive(Debug, Default)]
+/// Batcher counters — registry-backed handles whose storage is the
+/// batcher's own [`Registry`] (so `info`, `metrics`, and `/metrics` all
+/// read the same atomics).  Field names mirror the pre-registry struct;
+/// reads are `.get()` instead of `.load(..)`.
 pub struct BatchStats {
-    pub batches: AtomicU64,
-    pub jobs: AtomicU64,
-    pub max_batch: AtomicU64,
+    registry: Registry,
+    pub batches: Arc<Counter>,
+    pub jobs: Arc<Counter>,
+    pub max_batch: Arc<Gauge>,
     /// Jobs shed because their `deadline_ms` expired while queued.
-    pub shed_deadline: AtomicU64,
+    pub shed_deadline: Arc<Counter>,
     /// Engine panics isolated at the batch boundary (the workers survive).
-    pub panics: AtomicU64,
+    pub panics: Arc<Counter>,
+    /// Requests refused by admission control (queue full).
+    pub overloaded: Arc<Counter>,
+    /// Requests answered by the server, any op, any outcome.
+    pub requests: Arc<Counter>,
+    /// Jobs submitted but not yet picked up by a worker.
+    queued: Arc<Gauge>,
+    /// Jobs submitted but not yet answered (queued + executing).
+    in_flight: Arc<Gauge>,
+    /// EWMA of per-job service time in microseconds (0 until first batch).
+    job_micros: Arc<Gauge>,
+    /// Per-stage latency histograms (µs).
+    pub stage_queue: Arc<Histogram>,
+    pub stage_assemble: Arc<Histogram>,
+    pub stage_kernel: Arc<Histogram>,
+    pub stage_serialize: Arc<Histogram>,
+    /// End-to-end request latency (receipt → response written), µs.
+    pub request_us: Arc<Histogram>,
 }
 
 impl BatchStats {
+    fn new() -> BatchStats {
+        let r = Registry::new();
+        BatchStats {
+            batches: r.counter("serve_batches_total", "Batches executed by the micro-batcher"),
+            jobs: r.counter("serve_batched_jobs_total", "Jobs executed through batches"),
+            max_batch: r.gauge("serve_batch_max", "Largest batch assembled so far"),
+            shed_deadline: r.counter(
+                "serve_shed_deadline_total",
+                "Jobs shed before kernel work because their deadline_ms expired",
+            ),
+            panics: r.counter(
+                "serve_batch_panics_total",
+                "Engine panics isolated at the batch boundary",
+            ),
+            overloaded: r.counter(
+                "serve_overloaded_total",
+                "Requests refused by admission control (bounded queue full)",
+            ),
+            requests: r.counter("serve_requests_total", "Requests answered, any op, any outcome"),
+            queued: r.gauge("serve_queue_depth", "Jobs waiting for a batch worker"),
+            in_flight: r.gauge("serve_in_flight", "Jobs submitted but not yet answered"),
+            job_micros: r.gauge(
+                "serve_job_service_us",
+                "EWMA of per-job service time in microseconds",
+            ),
+            stage_queue: r.histogram("serve_stage_queue_us", "Queue wait per job"),
+            stage_assemble: r.histogram("serve_stage_assemble_us", "Batch-assembly window"),
+            stage_kernel: r.histogram("serve_stage_kernel_us", "Kernel execution per sub-batch"),
+            stage_serialize: r.histogram(
+                "serve_stage_serialize_us",
+                "Response serialization + socket write per request",
+            ),
+            request_us: r.histogram(
+                "serve_request_us",
+                "End-to-end request latency, receipt to response written",
+            ),
+            registry: r,
+        }
+    }
+
+    /// The registry holding every `serve_*` family (for exporters).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
     fn record(&self, batch_len: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.jobs.fetch_add(batch_len as u64, Ordering::Relaxed);
-        self.max_batch.fetch_max(batch_len as u64, Ordering::Relaxed);
+        self.batches.inc();
+        self.jobs.add(batch_len as u64);
+        self.max_batch.set_max(batch_len as i64);
+    }
+}
+
+impl Default for BatchStats {
+    fn default() -> BatchStats {
+        BatchStats::new()
     }
 }
 
@@ -89,12 +192,6 @@ pub struct Batcher {
     worker_count: usize,
     stats: Arc<BatchStats>,
     stop: Arc<AtomicBool>,
-    /// Jobs submitted but not yet picked up by a worker.
-    queued: Arc<AtomicU64>,
-    /// Jobs submitted but not yet answered (queued + executing).
-    in_flight: Arc<AtomicU64>,
-    /// EWMA of per-job service time in microseconds (0 until first batch).
-    job_micros: Arc<AtomicU64>,
 }
 
 impl Batcher {
@@ -108,11 +205,8 @@ impl Batcher {
     ) -> Batcher {
         let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
-        let stats = Arc::new(BatchStats::default());
+        let stats = Arc::new(BatchStats::new());
         let stop = Arc::new(AtomicBool::new(false));
-        let queued = Arc::new(AtomicU64::new(0));
-        let in_flight = Arc::new(AtomicU64::new(0));
-        let job_micros = Arc::new(AtomicU64::new(0));
         let max_batch = max_batch.max(1);
         let worker_count = workers.max(1);
         let handles = (0..worker_count)
@@ -121,34 +215,19 @@ impl Batcher {
                 let rx = rx.clone();
                 let stats = stats.clone();
                 let stop = stop.clone();
-                let queued = queued.clone();
-                let in_flight = in_flight.clone();
-                let job_micros = job_micros.clone();
                 std::thread::spawn(move || {
                     worker_loop(WorkerCtx {
                         engine: &engine,
                         rx: &rx,
                         stats: &stats,
                         stop: &stop,
-                        queued: &queued,
-                        in_flight: &in_flight,
-                        job_micros: &job_micros,
                         max_batch,
                         max_wait,
                     })
                 })
             })
             .collect();
-        Batcher {
-            tx,
-            workers: Mutex::new(handles),
-            worker_count,
-            stats,
-            stop,
-            queued,
-            in_flight,
-            job_micros,
-        }
+        Batcher { tx, workers: Mutex::new(handles), worker_count, stats, stop }
     }
 
     /// Enqueue a job.  `Err(job)` means the queue is full (backpressure) or
@@ -160,13 +239,13 @@ impl Batcher {
         }
         // Count optimistically so a racing drain() can never observe the
         // queue push without the in-flight credit.
-        self.queued.fetch_add(1, Ordering::SeqCst);
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.stats.queued.add(1);
+        self.stats.in_flight.add(1);
         self.tx
             .try_send(job)
             .map_err(|err| {
-                self.queued.fetch_sub(1, Ordering::SeqCst);
-                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                self.stats.queued.sub(1);
+                self.stats.in_flight.sub(1);
                 match err {
                     mpsc::TrySendError::Full(job) => job,
                     mpsc::TrySendError::Disconnected(job) => job,
@@ -180,7 +259,7 @@ impl Batcher {
 
     /// Jobs submitted but not yet answered.
     pub fn in_flight(&self) -> u64 {
-        self.in_flight.load(Ordering::SeqCst)
+        self.stats.in_flight.get().max(0) as u64
     }
 
     /// Admission-control hint for `overloaded` responses: roughly how long
@@ -188,10 +267,10 @@ impl Batcher {
     /// service-time EWMA ÷ workers.  Clamped to `[5 ms, 5 s]`; before any
     /// batch has completed the EWMA defaults to 10 ms/job.
     pub fn retry_after_ms(&self) -> u64 {
-        let queued = self.queued.load(Ordering::SeqCst);
-        let per_job_micros = match self.job_micros.load(Ordering::Relaxed) {
+        let queued = self.stats.queued.get().max(0) as u64;
+        let per_job_micros = match self.stats.job_micros.get() {
             0 => 10_000,
-            micros => micros,
+            micros => micros.max(1) as u64,
         };
         let workers = self.worker_count.max(1) as u64;
         ((queued + 1).saturating_mul(per_job_micros) / workers / 1000).clamp(5, 5_000)
@@ -203,7 +282,7 @@ impl Batcher {
     /// work arrives.
     pub fn drain(&self, deadline: Duration) -> bool {
         let until = Instant::now() + deadline;
-        while self.in_flight.load(Ordering::SeqCst) > 0 {
+        while self.stats.in_flight.get() > 0 {
             if Instant::now() >= until {
                 return false;
             }
@@ -235,9 +314,6 @@ struct WorkerCtx<'a> {
     rx: &'a Mutex<mpsc::Receiver<Job>>,
     stats: &'a BatchStats,
     stop: &'a AtomicBool,
-    queued: &'a AtomicU64,
-    in_flight: &'a AtomicU64,
-    job_micros: &'a AtomicU64,
     max_batch: usize,
     max_wait: Duration,
 }
@@ -248,6 +324,7 @@ fn worker_loop(ctx: WorkerCtx<'_>) {
             return;
         }
         let mut jobs: Vec<Job> = Vec::new();
+        let assemble_started;
         {
             let guard = match ctx.rx.lock() {
                 Ok(guard) => guard,
@@ -258,7 +335,8 @@ fn worker_loop(ctx: WorkerCtx<'_>) {
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => return,
             }
-            let deadline = Instant::now() + ctx.max_wait;
+            assemble_started = Instant::now();
+            let deadline = assemble_started + ctx.max_wait;
             while jobs.len() < ctx.max_batch {
                 let now = Instant::now();
                 if now >= deadline {
@@ -270,8 +348,10 @@ fn worker_loop(ctx: WorkerCtx<'_>) {
                 }
             }
         }
-        ctx.queued.fetch_sub(jobs.len() as u64, Ordering::SeqCst);
+        let assemble_us = assemble_started.elapsed().as_micros() as u64;
+        ctx.stats.queued.sub(jobs.len() as i64);
         ctx.stats.record(jobs.len());
+        ctx.stats.stage_assemble.record(assemble_us);
         let batch_len = jobs.len();
         let started = Instant::now();
         // Belt + braces: run_batch already isolates engine panics per
@@ -279,18 +359,18 @@ fn worker_loop(ctx: WorkerCtx<'_>) {
         // routing code itself has a bug.  Jobs consumed by such a panic
         // drop their response senders — connections observe the hangup.
         let routed = catch_unwind(AssertUnwindSafe(|| {
-            run_batch(ctx.engine, jobs, ctx.stats, ctx.in_flight)
+            run_batch(ctx.engine, jobs, ctx.stats, assemble_us)
         }));
         if routed.is_err() {
-            ctx.stats.panics.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.panics.inc();
             eprintln!("[batcher] worker survived a panic outside the batch boundary");
         }
         // Service-time EWMA (per job, in µs): new = 7/8 old + 1/8 sample.
         if batch_len > 0 {
-            let sample = (started.elapsed().as_micros() as u64 / batch_len as u64).max(1);
-            let old = ctx.job_micros.load(Ordering::Relaxed);
+            let sample = (started.elapsed().as_micros() as i64 / batch_len as i64).max(1);
+            let old = ctx.stats.job_micros.get();
             let next = if old == 0 { sample } else { old - old / 8 + sample / 8 };
-            ctx.job_micros.store(next, Ordering::Relaxed);
+            ctx.stats.job_micros.set(next);
         }
     }
 }
@@ -306,50 +386,86 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
     }
 }
 
+/// One job of an executing sub-batch: the kernel input plus everything
+/// needed to route and trace the answer.
+struct Pending<T> {
+    payload: T,
+    respond: mpsc::Sender<Reply>,
+    queue_us: u64,
+    trace: bool,
+}
+
+/// Route one executed job: record its stage histograms, attach timings
+/// when the request asked for a trace, answer, release in-flight credit.
+fn resolve<T>(
+    stats: &BatchStats,
+    p: &Pending<T>,
+    response: Response,
+    assemble_us: u64,
+    kernel_us: u64,
+) {
+    stats.stage_queue.record(p.queue_us);
+    stats.stage_kernel.record(kernel_us);
+    let timings = StageTimings { queue_us: p.queue_us, assemble_us, kernel_us };
+    let _ = p.respond.send(Reply { response, timings: p.trace.then_some(timings) });
+    stats.in_flight.sub(1);
+}
+
 /// Execute one assembled batch and route the responses.  Every job is
 /// answered exactly once and decrements `in_flight` exactly once, on every
 /// path — success, engine error, shed deadline, or isolated panic.
-fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, in_flight: &AtomicU64) {
-    let answer = |respond: &mpsc::Sender<Response>, response: Response| {
-        let _ = respond.send(response); // client may have hung up
-        in_flight.fetch_sub(1, Ordering::SeqCst);
+fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u64) {
+    let answer = |respond: &mpsc::Sender<Reply>, reply: Reply| {
+        let _ = respond.send(reply); // client may have hung up
+        stats.in_flight.sub(1);
     };
     let now = Instant::now();
-    let mut gens: Vec<(GenParams, mpsc::Sender<Response>)> = Vec::new();
-    let mut scores: Vec<(String, mpsc::Sender<Response>)> = Vec::new();
+    let mut gens: Vec<Pending<GenParams>> = Vec::new();
+    let mut scores: Vec<Pending<String>> = Vec::new();
     for job in jobs {
         // Deadline shed happens here — after queueing, before kernels.
         if job.deadline.is_some_and(|deadline| now >= deadline) {
-            stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            stats.shed_deadline.inc();
             answer(
                 &job.respond,
-                Response::err(
+                Reply::bare(Response::err(
                     ErrorCode::DeadlineExceeded,
                     "deadline_ms expired while queued; shed before execution",
-                ),
+                )),
             );
             continue;
         }
+        let queue_us = now.saturating_duration_since(job.submitted).as_micros() as u64;
+        let trace = job.trace;
         match job.request {
-            Request::Generate(params) => gens.push((params, job.respond)),
-            Request::Score { text, .. } => scores.push((text, job.respond)),
-            // Info/shutdown are answered inline by the connection; they
-            // never enter the queue.
+            Request::Generate(params) => {
+                gens.push(Pending { payload: params, respond: job.respond, queue_us, trace });
+            }
+            Request::Score { text, .. } => {
+                scores.push(Pending { payload: text, respond: job.respond, queue_us, trace });
+            }
+            // Info/metrics/shutdown are answered inline by the connection;
+            // they never enter the queue.
             other => answer(
                 &job.respond,
-                Response::err(ErrorCode::InvalidRequest, format!("op {other:?} is not batchable")),
+                Reply::bare(Response::err(
+                    ErrorCode::InvalidRequest,
+                    format!("op {other:?} is not batchable"),
+                )),
             ),
         }
     }
     if !gens.is_empty() {
-        let params: Vec<GenParams> = gens.iter().map(|(p, _)| p.clone()).collect();
+        let params: Vec<GenParams> = gens.iter().map(|p| p.payload.clone()).collect();
+        let kernel_started = Instant::now();
         let results = catch_unwind(AssertUnwindSafe(|| {
             faults::maybe_panic("batcher.panic");
             engine.generate_batch(&params)
         }));
+        let kernel_us = kernel_started.elapsed().as_micros() as u64;
         match results {
             Ok(results) => {
-                for ((_, respond), result) in gens.iter().zip(results) {
+                for (pending, result) in gens.iter().zip(results) {
                     let response = match result {
                         Ok(out) => Response::Generate {
                             text: out.text,
@@ -360,30 +476,32 @@ fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, in_flight: &At
                         // problems (bad temperature/top_k, oversize).
                         Err(err) => Response::err(ErrorCode::InvalidRequest, format!("{err:#}")),
                     };
-                    answer(respond, response);
+                    resolve(stats, pending, response, assemble_us, kernel_us);
                 }
             }
             Err(payload) => {
-                stats.panics.fetch_add(1, Ordering::Relaxed);
+                stats.panics.inc();
                 let msg = format!(
                     "batch execution panicked: {} (request isolated; server still serving)",
                     panic_message(&payload)
                 );
-                for (_, respond) in &gens {
-                    answer(respond, Response::err(ErrorCode::Internal, &msg));
+                for pending in &gens {
+                    answer(&pending.respond, Reply::bare(Response::err(ErrorCode::Internal, &msg)));
                 }
             }
         }
     }
     if !scores.is_empty() {
-        let texts: Vec<String> = scores.iter().map(|(t, _)| t.clone()).collect();
+        let texts: Vec<String> = scores.iter().map(|p| p.payload.clone()).collect();
+        let kernel_started = Instant::now();
         let results = catch_unwind(AssertUnwindSafe(|| {
             faults::maybe_panic("batcher.panic");
             engine.score_batch(&texts)
         }));
+        let kernel_us = kernel_started.elapsed().as_micros() as u64;
         match results {
             Ok(results) => {
-                for ((_, respond), result) in scores.iter().zip(results) {
+                for (pending, result) in scores.iter().zip(results) {
                     let response = match result {
                         Ok(res) => Response::Score {
                             nll: res.nll,
@@ -393,17 +511,17 @@ fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, in_flight: &At
                         },
                         Err(err) => Response::err(ErrorCode::InvalidRequest, format!("{err:#}")),
                     };
-                    answer(respond, response);
+                    resolve(stats, pending, response, assemble_us, kernel_us);
                 }
             }
             Err(payload) => {
-                stats.panics.fetch_add(1, Ordering::Relaxed);
+                stats.panics.inc();
                 let msg = format!(
                     "batch execution panicked: {} (request isolated; server still serving)",
                     panic_message(&payload)
                 );
-                for (_, respond) in &scores {
-                    answer(respond, Response::err(ErrorCode::Internal, &msg));
+                for pending in &scores {
+                    answer(&pending.respond, Reply::bare(Response::err(ErrorCode::Internal, &msg)));
                 }
             }
         }
@@ -440,26 +558,49 @@ mod tests {
                     ..GenParams::default()
                 })
             } else {
-                Request::Score { text: "the cat sat".into(), deadline_ms: 0 }
+                Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: false }
             };
             batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
             rxs.push((i, rx));
         }
         for (i, rx) in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response");
-            match (i % 2, resp) {
+            let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            match (i % 2, reply.response) {
                 (0, Response::Generate { tokens, .. }) => assert!(!tokens.is_empty()),
                 (1, Response::Score { count, .. }) => assert!(count > 0),
                 (_, other) => panic!("unexpected response: {other:?}"),
             }
         }
         let stats = batcher.stats();
-        assert_eq!(stats.jobs.load(Ordering::Relaxed), 6);
-        assert!(stats.batches.load(Ordering::Relaxed) >= 1);
+        assert_eq!(stats.jobs.get(), 6);
+        assert!(stats.batches.get() >= 1);
+        // Every executed job fed the stage histograms.
+        assert_eq!(stats.stage_queue.count(), 6);
+        assert_eq!(stats.stage_kernel.count(), 6);
+        assert!(stats.stage_assemble.count() >= 1);
         assert_eq!(batcher.in_flight(), 0, "all jobs answered");
         assert!(batcher.drain(Duration::from_millis(50)), "drained batcher reports done");
         // The service-time EWMA is live, so retry hints are data-driven.
         assert!(batcher.retry_after_ms() >= 5);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn traced_jobs_echo_stage_timings() {
+        let batcher = Batcher::start(tiny_engine(), 1, 2, Duration::from_millis(1), 8);
+        let (tx, rx) = mpsc::channel();
+        let request = Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: true };
+        batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(matches!(reply.response, Response::Score { .. }), "{:?}", reply.response);
+        let timings = reply.timings.expect("traced job must carry timings");
+        assert!(timings.kernel_us > 0, "kernel time must be measured: {timings:?}");
+        // An identical untraced job carries none.
+        let (tx, rx) = mpsc::channel();
+        let request = Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: false };
+        batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(reply.timings.is_none(), "untraced job must not carry timings");
         batcher.shutdown();
     }
 
@@ -505,11 +646,11 @@ mod tests {
         );
         job.deadline = Some(Instant::now() - Duration::from_millis(5));
         batcher.submit(job).map_err(|_| ()).unwrap();
-        match rx.recv_timeout(Duration::from_secs(10)).expect("response") {
+        match rx.recv_timeout(Duration::from_secs(10)).expect("response").response {
             Response::Error { code, .. } => assert_eq!(code, ErrorCode::DeadlineExceeded),
             other => panic!("unexpected response: {other:?}"),
         }
-        assert_eq!(batcher.stats().shed_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(batcher.stats().shed_deadline.get(), 1);
         assert_eq!(
             engine.served(),
             served_before,

@@ -186,11 +186,16 @@ impl Client {
     }
 
     pub fn score(&mut self, text: &str) -> Result<Response> {
-        self.call_ok(&Request::Score { text: text.to_string(), deadline_ms: 0 })
+        self.call_ok(&Request::Score { text: text.to_string(), deadline_ms: 0, trace: false })
     }
 
     pub fn info(&mut self) -> Result<Response> {
         self.call_ok(&Request::Info)
+    }
+
+    /// Snapshot the server's metric families (`{"op":"metrics"}`).
+    pub fn metrics(&mut self) -> Result<Response> {
+        self.call_ok(&Request::Metrics)
     }
 
     pub fn shutdown(&mut self) -> Result<Response> {

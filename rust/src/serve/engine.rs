@@ -289,6 +289,9 @@ impl Engine {
 
     fn note_workspace(&self, bytes: usize) {
         self.peak_workspace.fetch_max(bytes as u64, Ordering::Relaxed);
+        // Mirror into the process-global registry so /metrics sees the
+        // high-water mark without reaching into the engine.
+        exec::note_workspace_peak(bytes as u64);
     }
 
     /// Roll `bag` forward by one token (dtype-dispatched embedding rows;

@@ -10,8 +10,13 @@
 //! {"op":"generate","prompt":"...","max_tokens":32,"top_k":8,"temperature":0.7,"seed":1,"deadline_ms":250}
 //! {"op":"score","text":"...","deadline_ms":250}
 //! {"op":"info"}
+//! {"op":"metrics"}
 //! {"op":"shutdown"}
 //! ```
+//!
+//! Batchable ops may also set `"trace":true` to have the server echo a
+//! per-request `timings` object (queue/assembly/kernel microseconds —
+//! see [`crate::obs::StageTimings`]) next to the normal response fields.
 //!
 //! Responses always carry `"ok"`; successes echo `"op"`, failures carry a
 //! machine-readable `code` (see [`ErrorCode`]) next to the human-readable
@@ -22,6 +27,7 @@
 //! {"ok":true,"op":"generate","text":"...","tokens":[...],"logprobs":[...]}
 //! {"ok":true,"op":"score","nll":2.1,"perplexity":8.2,"count":12,"logprobs":[...]}
 //! {"ok":true,"op":"info", ...model/server fields...}
+//! {"ok":true,"op":"metrics", ...metric families...}
 //! {"ok":true,"op":"shutdown"}
 //! {"ok":false,"code":"overloaded","error":"...","retry_after_ms":40}
 //! ```
@@ -50,6 +56,8 @@ pub struct GenParams {
     /// `0` = no deadline.  An expired job is shed *before* kernel work
     /// with a `deadline_exceeded` error.
     pub deadline_ms: u64,
+    /// Echo per-request stage timings (`timings` object) in the response.
+    pub trace: bool,
 }
 
 impl Default for GenParams {
@@ -61,6 +69,7 @@ impl Default for GenParams {
             temperature: 0.0,
             seed: 0,
             deadline_ms: 0,
+            trace: false,
         }
     }
 }
@@ -69,8 +78,9 @@ impl Default for GenParams {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Generate(GenParams),
-    Score { text: String, deadline_ms: u64 },
+    Score { text: String, deadline_ms: u64, trace: bool },
     Info,
+    Metrics,
     Shutdown,
 }
 
@@ -89,16 +99,23 @@ impl Request {
                 if p.deadline_ms > 0 {
                     entries.push(("deadline_ms", Json::Int(p.deadline_ms as i64)));
                 }
+                if p.trace {
+                    entries.push(("trace", Json::Bool(true)));
+                }
                 Json::obj(entries)
             }
-            Request::Score { text, deadline_ms } => {
+            Request::Score { text, deadline_ms, trace } => {
                 let mut entries = vec![("op", Json::str("score")), ("text", Json::str(text))];
                 if *deadline_ms > 0 {
                     entries.push(("deadline_ms", Json::Int(*deadline_ms as i64)));
                 }
+                if *trace {
+                    entries.push(("trace", Json::Bool(true)));
+                }
                 Json::obj(entries)
             }
             Request::Info => Json::obj(vec![("op", Json::str("info"))]),
+            Request::Metrics => Json::obj(vec![("op", Json::str("metrics"))]),
             Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
         }
     }
@@ -125,6 +142,7 @@ impl Request {
                     },
                     seed: get_u64_wire(j, "seed", 0)?,
                     deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
+                    trace: get_trace(j),
                 }))
             }
             "score" => {
@@ -135,11 +153,13 @@ impl Request {
                 Ok(Request::Score {
                     text: text.to_string(),
                     deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
+                    trace: get_trace(j),
                 })
             }
             "info" => Ok(Request::Info),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
-            other => bail!("unknown op {other:?} (generate|score|info|shutdown)"),
+            other => bail!("unknown op {other:?} (generate|score|info|metrics|shutdown)"),
         }
     }
 
@@ -159,6 +179,15 @@ impl Request {
             Request::Generate(p) if p.deadline_ms > 0 => Some(p.deadline_ms),
             Request::Score { deadline_ms, .. } if *deadline_ms > 0 => Some(*deadline_ms),
             _ => None,
+        }
+    }
+
+    /// Whether the request asked for per-request stage timings.
+    pub fn trace(&self) -> bool {
+        match self {
+            Request::Generate(p) => p.trace,
+            Request::Score { trace, .. } => *trace,
+            _ => false,
         }
     }
 }
@@ -229,6 +258,10 @@ pub enum Response {
     /// `info` payload: an open field set (model dims, step, peak workspace,
     /// batcher counters) so the endpoint can grow without protocol breaks.
     Info(Json),
+    /// `metrics` payload: one field per registered metric family (counters
+    /// and gauges as numbers, histograms as `{count,sum,p50,p90,p99}`) —
+    /// the line-JSON twin of `GET /metrics`, open like `info`.
+    Metrics(Json),
     /// Shutdown acknowledged.
     Shutdown,
     Error {
@@ -281,6 +314,16 @@ impl Response {
                 let mut entries = vec![
                     ("ok".to_string(), Json::Bool(true)),
                     ("op".to_string(), Json::str("info")),
+                ];
+                if let Some(obj) = fields.as_object() {
+                    entries.extend(obj.iter().cloned());
+                }
+                Json::Object(entries)
+            }
+            Response::Metrics(fields) => {
+                let mut entries = vec![
+                    ("ok".to_string(), Json::Bool(true)),
+                    ("op".to_string(), Json::str("metrics")),
                 ];
                 if let Some(obj) = fields.as_object() {
                     entries.extend(obj.iter().cloned());
@@ -354,6 +397,16 @@ impl Response {
                     .collect();
                 Ok(Response::Info(Json::Object(fields)))
             }
+            "metrics" => {
+                let fields: Vec<(String, Json)> = j
+                    .as_object()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter(|(k, _)| k != "ok" && k != "op")
+                    .cloned()
+                    .collect();
+                Ok(Response::Metrics(Json::Object(fields)))
+            }
             "shutdown" => Ok(Response::Shutdown),
             other => bail!("unknown response op {other:?}"),
         }
@@ -377,6 +430,12 @@ fn get_u64_wire(j: &Json, key: &str, default: u64) -> Result<u64> {
         None => Ok(default),
         Some(v) => Ok(v.as_i64().ok_or_else(|| anyhow!("{key} must be an integer"))? as u64),
     }
+}
+
+/// Lenient `trace` flag parse: anything but a literal `true` is off, so
+/// malformed flags never fail an otherwise-good request.
+fn get_trace(j: &Json) -> bool {
+    j.get("trace").and_then(|v| v.as_bool()).unwrap_or(false)
 }
 
 fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
@@ -424,11 +483,15 @@ mod tests {
                 temperature: 0.7,
                 seed: 42,
                 deadline_ms: 0,
+                trace: false,
             }),
             Request::Generate(GenParams { deadline_ms: 250, ..GenParams::default() }),
-            Request::Score { text: "hello \"world\"\n".into(), deadline_ms: 0 },
-            Request::Score { text: "budgeted".into(), deadline_ms: 125 },
+            Request::Generate(GenParams { trace: true, ..GenParams::default() }),
+            Request::Score { text: "hello \"world\"\n".into(), deadline_ms: 0, trace: false },
+            Request::Score { text: "budgeted".into(), deadline_ms: 125, trace: false },
+            Request::Score { text: "traced".into(), deadline_ms: 0, trace: true },
             Request::Info,
+            Request::Metrics,
             Request::Shutdown,
         ];
         for req in reqs {
@@ -462,6 +525,10 @@ mod tests {
             },
             Response::Score { nll: 2.5, perplexity: 12.18, count: 3, logprobs: vec![-2.5] },
             Response::Info(Json::obj(vec![("vocab", Json::Int(512))])),
+            Response::Metrics(Json::obj(vec![
+                ("serve_requests_total", Json::Int(7)),
+                ("train_step_loss", Json::Float(2.5)),
+            ])),
             Response::Shutdown,
             Response::error("queue full"),
             Response::overloaded("admission control shed this request", 40),
@@ -524,10 +591,25 @@ mod tests {
         let none = Request::Generate(GenParams::default());
         assert_eq!(none.deadline_ms(), None);
         assert!(!none.to_line().contains("deadline_ms"), "unset budget stays off the wire");
-        let some = Request::Score { text: "x".into(), deadline_ms: 75 };
+        let some = Request::Score { text: "x".into(), deadline_ms: 75, trace: false };
         assert_eq!(some.deadline_ms(), Some(75));
         assert_eq!(Request::parse(&some.to_line()).unwrap().deadline_ms(), Some(75));
         assert_eq!(Request::Info.deadline_ms(), None);
+    }
+
+    #[test]
+    fn trace_flag_is_exposed_only_when_set() {
+        let off = Request::Score { text: "x".into(), deadline_ms: 0, trace: false };
+        assert!(!off.trace());
+        assert!(!off.to_line().contains("trace"), "unset trace stays off the wire");
+        let on = Request::Generate(GenParams { trace: true, ..GenParams::default() });
+        assert!(on.trace());
+        assert!(Request::parse(&on.to_line()).unwrap().trace());
+        // Lenient parse: a malformed flag is off, not an error.
+        let weird = Request::parse(r#"{"op":"score","text":"x","trace":"yes"}"#).unwrap();
+        assert!(!weird.trace());
+        assert!(!Request::Info.trace());
+        assert!(!Request::Metrics.trace());
     }
 
     #[test]

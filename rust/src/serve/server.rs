@@ -3,10 +3,11 @@
 //!
 //! Dependency-free: [`std::net::TcpListener`] + one thread per connection
 //! reading newline-delimited JSON ([`super::protocol`]).  `generate` and
-//! `score` go through the micro-batcher ([`super::batcher`]); `info` and
-//! `shutdown` are answered inline.  Binding port 0 picks an ephemeral port
-//! (the bound address is reported on [`Server::addr`]) — which is how the
-//! CI smoke test and the integration tests avoid port collisions.
+//! `score` go through the micro-batcher ([`super::batcher`]); `info`,
+//! `metrics`, and `shutdown` are answered inline.  Binding port 0 picks an
+//! ephemeral port (the bound address is reported on [`Server::addr`]) —
+//! which is how the CI smoke test and the integration tests avoid port
+//! collisions.
 //!
 //! Failure domains (PR 6): connections poll the socket with a short read
 //! timeout instead of blocking forever, so a stalled client holds a thread
@@ -15,6 +16,17 @@
 //! ([`super::protocol::ErrorCode`]): a full queue answers `overloaded`
 //! with a live `retry_after_ms` hint, and [`Server::join`] drains in-flight
 //! work under [`ServeConfig::drain`] before stopping the workers.
+//!
+//! Telemetry (PR 7): every answered line feeds the batcher's `serve_*`
+//! registry (request count, end-to-end and serialize-time histograms);
+//! responses to requests that set `"trace":true` gain a spliced `timings`
+//! object.  With [`ServeConfig::metrics_addr`] set, a minimal hand-rolled
+//! HTTP/1.1 listener — the first concrete slice of the ROADMAP front door
+//! — serves `GET /metrics` (Prometheus text exposition merging the serve
+//! registry, the process-global exec/train registry, and engine gauges)
+//! and `GET /healthz` (drain-aware: 200 while serving, 503 once shutdown
+//! began).  The exporter keeps answering through the drain window and
+//! stops only after [`Server::join`] finishes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -25,6 +37,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs::{self, StageTimings};
 use crate::serve::batcher::{Batcher, Job};
 use crate::serve::engine::Engine;
 use crate::serve::protocol::{ErrorCode, Request, Response};
@@ -38,6 +51,9 @@ const READ_POLL: Duration = Duration::from_millis(200);
 /// Bound on a single response write; a client that stops reading cannot
 /// wedge its connection thread past this.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Accept-poll cadence of the metrics HTTP listener.
+const METRICS_POLL: Duration = Duration::from_millis(50);
 
 /// Server + batcher knobs (`cce serve` flags map 1:1).
 #[derive(Debug, Clone)]
@@ -60,6 +76,9 @@ pub struct ServeConfig {
     /// Graceful-shutdown budget: how long [`Server::join`] waits for
     /// in-flight jobs to finish before stopping the workers.
     pub drain: Duration,
+    /// Bind an HTTP exporter here (`host:port`, port 0 = ephemeral)
+    /// serving `GET /metrics` + `GET /healthz`.  `None` = no exporter.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -73,6 +92,7 @@ impl Default for ServeConfig {
             queue_depth: 64,
             idle_timeout: Duration::from_secs(300),
             drain: Duration::from_secs(5),
+            metrics_addr: None,
         }
     }
 }
@@ -82,17 +102,24 @@ impl Default for ServeConfig {
 pub struct Server {
     pub addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
+    metrics: Option<JoinHandle<()>>,
+    metrics_addr: Option<SocketAddr>,
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
+    /// Stops the metrics exporter — separate from `stop` so `/healthz`
+    /// keeps answering 503 through the drain window.
+    metrics_stop: Arc<AtomicBool>,
     drain: Duration,
 }
 
-/// Bind, spawn the batcher + accept loop, and return immediately.
+/// Bind, spawn the batcher + accept loop (+ the metrics exporter when
+/// configured), and return immediately.
 pub fn serve(engine: Arc<Engine>, cfg: &ServeConfig) -> Result<Server> {
     let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
         .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
+    let metrics_stop = Arc::new(AtomicBool::new(false));
     let batcher = Arc::new(Batcher::start(
         engine.clone(),
         cfg.workers,
@@ -100,6 +127,22 @@ pub fn serve(engine: Arc<Engine>, cfg: &ServeConfig) -> Result<Server> {
         cfg.max_wait,
         cfg.queue_depth,
     ));
+    let (metrics, metrics_addr) = match &cfg.metrics_addr {
+        None => (None, None),
+        Some(spec) => {
+            let http = TcpListener::bind(spec.as_str())
+                .with_context(|| format!("binding metrics listener {spec}"))?;
+            let http_addr = http.local_addr()?;
+            let engine = engine.clone();
+            let batcher = batcher.clone();
+            let draining = stop.clone();
+            let metrics_stop = metrics_stop.clone();
+            let handle = std::thread::spawn(move || {
+                metrics_loop(http, &engine, &batcher, &draining, &metrics_stop)
+            });
+            (Some(handle), Some(http_addr))
+        }
+    };
     let accept = {
         let batcher = batcher.clone();
         let stop = stop.clone();
@@ -108,7 +151,16 @@ pub fn serve(engine: Arc<Engine>, cfg: &ServeConfig) -> Result<Server> {
             accept_loop(listener, addr, engine, batcher, stop, idle_timeout)
         })
     };
-    Ok(Server { addr, accept: Some(accept), batcher, stop, drain: cfg.drain })
+    Ok(Server {
+        addr,
+        accept: Some(accept),
+        metrics,
+        metrics_addr,
+        batcher,
+        stop,
+        metrics_stop,
+        drain: cfg.drain,
+    })
 }
 
 impl Server {
@@ -120,11 +172,17 @@ impl Server {
         let _ = TcpStream::connect(self.addr);
     }
 
+    /// Where the HTTP exporter listens, when one was configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
+    }
+
     /// Wait for the accept loop to exit, drain in-flight jobs under the
     /// configured [`ServeConfig::drain`] budget, then stop the workers.
     /// Once the accept loop is down no new work can arrive, so the drain
     /// is monotone; if the budget runs out the remaining jobs are dropped
-    /// and their clients observe `shutting_down`.
+    /// and their clients observe `shutting_down`.  The metrics exporter
+    /// answers `/healthz` 503 through the drain and stops last.
     pub fn join(mut self) -> Result<()> {
         if let Some(handle) = self.accept.take() {
             handle.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
@@ -137,6 +195,10 @@ impl Server {
             );
         }
         self.batcher.shutdown();
+        self.metrics_stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.metrics.take() {
+            let _ = handle.join();
+        }
         Ok(())
     }
 }
@@ -239,42 +301,72 @@ fn handle_line(
 ) -> std::result::Result<(), ()> {
     // Chaos site: simulate a stalled connection handler.
     faults::stall("conn.stall_ms");
-    let response = match Request::parse(line) {
-        Err(err) => Response::err(ErrorCode::InvalidRequest, format!("bad request: {err:#}")),
-        Ok(Request::Info) => Response::Info(info_fields(engine, batcher)),
+    let received = Instant::now();
+    let stats = batcher.stats();
+    let (response, timings) = match Request::parse(line) {
+        Err(err) => {
+            (Response::err(ErrorCode::InvalidRequest, format!("bad request: {err:#}")), None)
+        }
+        Ok(Request::Info) => (Response::Info(info_fields(engine, batcher)), None),
+        Ok(Request::Metrics) => (Response::Metrics(metrics_fields(engine, batcher)), None),
         Ok(Request::Shutdown) => {
-            let _ = write_line(writer, &Response::Shutdown);
+            stats.requests.inc();
+            let _ = write_json(writer, &Response::Shutdown.to_json());
             stop.store(true, Ordering::SeqCst);
             let _ = TcpStream::connect(addr); // wake accept()
             return Err(());
         }
         Ok(request) => dispatch(request, batcher, stop),
     };
-    write_line(writer, &response).map_err(|_| ())
+    // Serialize + write under the stopwatch; the serialize span can only
+    // live in the histogram — it cannot be echoed inside the response it
+    // measures.
+    let mut json = response.to_json();
+    if let Some(t) = timings {
+        if let Json::Object(entries) = &mut json {
+            entries.push(("timings".to_string(), t.to_json()));
+        }
+    }
+    let serialize_started = Instant::now();
+    let wrote = write_json(writer, &json);
+    stats.stage_serialize.record(serialize_started.elapsed().as_micros() as u64);
+    stats.request_us.record(received.elapsed().as_micros() as u64);
+    stats.requests.inc();
+    wrote.map_err(|_| ())
 }
 
 /// Route a batchable request through the micro-batcher and wait for its
-/// response.
-fn dispatch(request: Request, batcher: &Batcher, stop: &AtomicBool) -> Response {
+/// reply (response + optional stage timings).
+fn dispatch(
+    request: Request,
+    batcher: &Batcher,
+    stop: &AtomicBool,
+) -> (Response, Option<StageTimings>) {
     if stop.load(Ordering::SeqCst) {
-        return Response::err(ErrorCode::ShuttingDown, "server is shutting down");
+        return (Response::err(ErrorCode::ShuttingDown, "server is shutting down"), None);
     }
     let (tx, rx) = mpsc::channel();
     match batcher.submit(Job::new(request, tx)) {
         // Admission control: shed at the door with a live retry hint
         // rather than buffering unboundedly.
-        Err(_) => Response::overloaded(
-            "queue full (admission control): retry later",
-            batcher.retry_after_ms(),
-        ),
+        Err(_) => {
+            batcher.stats().overloaded.inc();
+            (
+                Response::overloaded(
+                    "queue full (admission control): retry later",
+                    batcher.retry_after_ms(),
+                ),
+                None,
+            )
+        }
         Ok(()) => match rx.recv_timeout(Duration::from_secs(300)) {
-            Ok(response) => response,
+            Ok(reply) => (reply.response, reply.timings),
             // Sender dropped: shutdown raced the job out of the queue.
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Response::err(ErrorCode::ShuttingDown, "request dropped during shutdown")
+                (Response::err(ErrorCode::ShuttingDown, "request dropped during shutdown"), None)
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                Response::err(ErrorCode::Internal, "request timed out inside the server")
+                (Response::err(ErrorCode::Internal, "request timed out inside the server"), None)
             }
         },
     }
@@ -286,32 +378,139 @@ fn info_fields(engine: &Engine, batcher: &Batcher) -> Json {
         Json::Object(entries) => entries,
         other => vec![("model_info".into(), other)],
     };
-    fields.push((
-        "batches".into(),
-        Json::Int(stats.batches.load(Ordering::Relaxed) as i64),
-    ));
-    fields.push((
-        "batched_jobs".into(),
-        Json::Int(stats.jobs.load(Ordering::Relaxed) as i64),
-    ));
-    fields.push((
-        "max_batch_observed".into(),
-        Json::Int(stats.max_batch.load(Ordering::Relaxed) as i64),
-    ));
-    fields.push((
-        "shed_deadline".into(),
-        Json::Int(stats.shed_deadline.load(Ordering::Relaxed) as i64),
-    ));
-    fields.push((
-        "batch_panics".into(),
-        Json::Int(stats.panics.load(Ordering::Relaxed) as i64),
-    ));
+    fields.push(("batches".into(), Json::Int(stats.batches.get() as i64)));
+    fields.push(("batched_jobs".into(), Json::Int(stats.jobs.get() as i64)));
+    fields.push(("max_batch_observed".into(), Json::Int(stats.max_batch.get())));
+    fields.push(("shed_deadline".into(), Json::Int(stats.shed_deadline.get() as i64)));
+    fields.push(("batch_panics".into(), Json::Int(stats.panics.get() as i64)));
     fields.push(("in_flight".into(), Json::Int(batcher.in_flight() as i64)));
     Json::Object(fields)
 }
 
-fn write_line(writer: &mut TcpStream, response: &Response) -> std::io::Result<()> {
-    let mut line = response.to_line();
+/// The `{"op":"metrics"}` payload: serve registry + process-global
+/// exec/train registry + the engine's own gauges, one field per family.
+fn metrics_fields(engine: &Engine, batcher: &Batcher) -> Json {
+    let mut fields = batcher.stats().registry().to_json_fields();
+    fields.extend(obs::global().to_json_fields());
+    fields.push((
+        "serve_engine_requests_served_total".into(),
+        Json::Int(engine.served() as i64),
+    ));
+    fields.push((
+        "serve_engine_peak_workspace_bytes".into(),
+        Json::Int(engine.peak_workspace_bytes() as i64),
+    ));
+    Json::Object(fields)
+}
+
+/// The `GET /metrics` body: the same three sources in Prometheus text
+/// exposition format.
+fn metrics_prometheus(engine: &Engine, batcher: &Batcher) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    batcher.stats().registry().render_prometheus(&mut out);
+    obs::global().render_prometheus(&mut out);
+    let _ = writeln!(
+        out,
+        "# HELP serve_engine_requests_served_total Requests the engine finished kernels for"
+    );
+    let _ = writeln!(out, "# TYPE serve_engine_requests_served_total counter");
+    let _ = writeln!(out, "serve_engine_requests_served_total {}", engine.served());
+    let _ = writeln!(
+        out,
+        "# HELP serve_engine_peak_workspace_bytes Engine kernel + hidden-buffer high-water mark"
+    );
+    let _ = writeln!(out, "# TYPE serve_engine_peak_workspace_bytes gauge");
+    let _ = writeln!(
+        out,
+        "serve_engine_peak_workspace_bytes {}",
+        engine.peak_workspace_bytes()
+    );
+    out
+}
+
+/// Accept loop of the metrics exporter: nonblocking accept + short sleep
+/// so the thread notices `metrics_stop` promptly, one request per
+/// connection (`Connection: close`).
+fn metrics_loop(
+    listener: TcpListener,
+    engine: &Engine,
+    batcher: &Batcher,
+    draining: &AtomicBool,
+    metrics_stop: &AtomicBool,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Blocking per-request I/O with bounded timeouts; requests
+                // are tiny and rare (scrapes), so inline handling is fine.
+                let _ = stream.set_nonblocking(false);
+                serve_http(stream, engine, batcher, draining);
+            }
+            Err(_) => {
+                if metrics_stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(METRICS_POLL);
+            }
+        }
+    }
+}
+
+/// Answer one HTTP/1.1 request: `GET /metrics`, `GET /healthz`, else 404.
+fn serve_http(stream: TcpStream, engine: &Engine, batcher: &Batcher, draining: &AtomicBool) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = match stream.try_clone() {
+        Ok(clone) => BufReader::new(clone),
+        Err(_) => return,
+    };
+    let mut request_line = String::new();
+    if reader.read_line(&mut request_line).is_err() {
+        return;
+    }
+    // Drain the (bounded) header block so the peer observes a clean close.
+    let mut header = String::new();
+    for _ in 0..64 {
+        header.clear();
+        match reader.read_line(&mut header) {
+            Ok(n) if n > 0 && !header.trim().is_empty() => continue,
+            _ => break,
+        }
+    }
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body) = match (method, path) {
+        ("GET", "/metrics") => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            metrics_prometheus(engine, batcher),
+        ),
+        ("GET", "/healthz") => {
+            if draining.load(Ordering::SeqCst) {
+                ("503 Service Unavailable", "text/plain; charset=utf-8", "draining\n".into())
+            } else {
+                ("200 OK", "text/plain; charset=utf-8", "ok\n".into())
+            }
+        }
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".into()),
+    };
+    let mut writer = stream;
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = writer.write_all(head.as_bytes());
+    let _ = writer.write_all(body.as_bytes());
+    let _ = writer.flush();
+}
+
+fn write_json(writer: &mut TcpStream, json: &Json) -> std::io::Result<()> {
+    let mut line = json.to_string();
     line.push('\n');
     writer.write_all(line.as_bytes())?;
     writer.flush()

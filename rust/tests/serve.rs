@@ -392,3 +392,115 @@ fn server_rejects_malformed_and_survives() {
     admin.shutdown().unwrap();
     server.join().unwrap();
 }
+
+// -------------------------------------------------------------- telemetry
+
+/// Minimal HTTP/1.1 GET against the metrics exporter; returns (status, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (u32, String) {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status: u32 = raw
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("malformed status line: {raw:?}"))
+        .parse()
+        .unwrap();
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn metrics_exporter_and_trace_spans_end_to_end() {
+    use cce::util::json::Json;
+
+    let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
+    let engine = Arc::new(Engine::demo(384, 16, 2, opts).unwrap());
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        workers: 2,
+        metrics_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let server = serve(engine, &cfg).unwrap();
+    let addr = server.addr;
+    let http_addr = server.metrics_addr().expect("exporter bound to an ephemeral port");
+
+    // A traced request echoes its per-stage spans; an untraced one stays
+    // byte-identical to the pre-telemetry wire shape (no `timings` key).
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        stream
+            .write_all(b"{\"op\":\"score\",\"text\":\"the cat sat on the mat\",\"trace\":true}\n")
+            .unwrap();
+        reader.read_line(&mut line).unwrap();
+        let json = Json::parse(&line).unwrap();
+        assert_eq!(json.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+        let timings = json.get("timings").expect("traced response must carry timings");
+        for key in ["queue_us", "assemble_us", "kernel_us"] {
+            assert!(timings.get(key).and_then(Json::as_i64).is_some(), "missing {key}: {line}");
+        }
+        line.clear();
+        stream.write_all(b"{\"op\":\"score\",\"text\":\"the cat sat on the mat\"}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let json = Json::parse(&line).unwrap();
+        assert_eq!(json.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+        assert!(json.get("timings").is_none(), "untraced response grew a timings key: {line}");
+    }
+
+    // {"op":"metrics"}: one snapshot spanning serve, exec, and train
+    // families — at least 12 of them (the acceptance floor).
+    let mut admin = Client::connect(addr).unwrap();
+    let metrics = match admin.metrics().unwrap() {
+        Response::Metrics(fields) => fields,
+        other => panic!("unexpected metrics response: {other:?}"),
+    };
+    let families = metrics.as_object().expect("metrics is an object").len();
+    assert!(families >= 12, "only {families} metric families");
+    for want in [
+        "serve_requests_total",
+        "serve_request_us",
+        "serve_stage_kernel_us",
+        "exec_fwd_sweep_us",
+        "exec_pool_workers",
+        "train_steps_total",
+        "serve_engine_requests_served_total",
+    ] {
+        assert!(metrics.get(want).is_some(), "missing family {want}");
+    }
+    let request_count = metrics
+        .get("serve_request_us")
+        .and_then(|h| h.get("count"))
+        .and_then(Json::as_i64)
+        .unwrap_or(0);
+    assert!(request_count >= 2, "request histogram saw {request_count} samples, want >= 2");
+
+    // HTTP exporter: healthy /healthz, Prometheus-text /metrics, 404 else.
+    let (status, body) = http_get(http_addr, "/healthz");
+    assert_eq!(status, 200, "healthz while serving: {body}");
+    assert_eq!(body.trim(), "ok");
+    let (status, text) = http_get(http_addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(text.contains("# TYPE serve_requests_total counter"), "{text}");
+    assert!(text.contains("# TYPE exec_fwd_sweep_us histogram"), "{text}");
+    assert!(text.contains("serve_request_us_bucket"), "{text}");
+    let type_lines = text.lines().filter(|l| l.starts_with("# TYPE ")).count();
+    assert!(type_lines >= 12, "only {type_lines} families in /metrics:\n{text}");
+    let (status, _) = http_get(http_addr, "/nope");
+    assert_eq!(status, 404);
+
+    // Drain-awareness: once shutdown begins, /healthz flips to 503 while
+    // the exporter keeps answering (it outlives the drain window).
+    server.stop();
+    let (status, body) = http_get(http_addr, "/healthz");
+    assert_eq!(status, 503, "draining healthz: {body}");
+    assert_eq!(body.trim(), "draining");
+    server.join().unwrap();
+}
