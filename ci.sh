@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, the tier-1 build/test cycle, the serve smoke,
-# and the perf-tracking bench stage.
+# CI gate: docs consistency, formatting, lints, the tier-1 build/test cycle,
+# the serve smokes (line-JSON + HTTP/SSE, single- and two-model), and the
+# perf-tracking bench stage.
 #
-#   ./ci.sh            # full pipeline (fmt, clippy incl. --features pjrt,
-#                      #   release build, tests, serve smoke, benches +
-#                      #   regression check against the committed BENCH files)
-#   ./ci.sh --quick    # fmt + clippy + `cargo test -q` only — fast iteration
-#                      #   (skips the release build, serve smoke, and benches)
+#   ./ci.sh            # full pipeline (docs check, fmt, clippy incl.
+#                      #   --features pjrt, release build, tests, serve
+#                      #   smokes, benches + regression check against the
+#                      #   committed BENCH files)
+#   ./ci.sh --quick    # docs check + fmt + clippy + `cargo test -q` only —
+#                      #   fast iteration (skips the release build, serve
+#                      #   smokes, and benches)
 #   BENCH_UPDATE=1 ./ci.sh   # accept a bench regression as the new baseline
 #
 # The pipeline needs no network, no libxla, and no artifacts: the native
@@ -39,6 +42,14 @@ for arg in "$@"; do
         *) echo "usage: ./ci.sh [--quick]"; exit 2 ;;
     esac
 done
+
+echo "== docs: tools/check_docs.sh (+ selftest) =="
+# Docs-vs-code consistency: every error code, metric family, and serve CLI
+# flag must be documented, and every curl example in the docs must be
+# exercised verbatim by examples/http_quickstart.sh.  --selftest doctors
+# copies of the docs and asserts the check fails on them, so the gate
+# cannot rot into a no-op.
+tools/check_docs.sh --selftest
 
 echo "== cargo fmt --check =="
 cargo fmt -p cce -- --check
@@ -79,7 +90,7 @@ trap '{ [[ -z "$SERVE_PID" ]] || kill "$SERVE_PID" 2>/dev/null || true; } ; rm -
     --dim 32 --seq 64 --batch 4 --out-dir "$SMOKE_DIR/run" >/dev/null
 
 "$CCE" serve --checkpoint "$SMOKE_DIR/run/final.ckpt" --port 0 \
-    --metrics-addr 127.0.0.1:0 \
+    --http-addr 127.0.0.1:0 \
     --max-batch 4 --max-wait-ms 2 > "$SMOKE_DIR/serve.log" 2>"$SMOKE_DIR/serve.err" &
 SERVE_PID=$!
 
@@ -100,7 +111,7 @@ serve_alive() {
 # moment the server dies, propagating its real exit status.
 PORT=""
 for _ in $(seq 1 100); do
-    PORT=$(sed -n 's/.*listening on .*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve.log" | head -1)
+    PORT=$(sed -n 's/^\[serve\] ready proto=line addr=.*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve.log" | head -1)
     [[ -n "$PORT" ]] && break
     if ! serve_alive; then
         RC=0; wait "$SERVE_PID" || RC=$?
@@ -116,37 +127,69 @@ done
 "$CCE" client --port "$PORT" --op score --text "the cat sat on the mat" \
     | grep -q '"ok":true' || { echo "score roundtrip failed"; exit 1; }
 
-# Metrics exporter smoke: the server echoes its (ephemeral) exporter port
-# as "[serve] metrics on HOST:PORT" on stdout — same contract scripts use
-# for the serving port above.  /healthz must be 200 while serving, and
-# /metrics must expose the core families from every layer (serve, exec,
-# train) in Prometheus text format.  See docs/observability.md.
-MPORT=$(sed -n 's/.*metrics on .*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve.log" | head -1)
-[[ -n "$MPORT" ]] || { echo "serve never announced a metrics port"; cat "$SMOKE_DIR/serve.log"; exit 1; }
-python3 - "$MPORT" <<'PY'
-import http.client, sys
+# HTTP front door smoke: the server announces its (ephemeral) HTTP port as
+# "[serve] ready proto=http addr=HOST:PORT" on stdout — the contract in
+# docs/http_api.md.  Drive a real REST round-trip (score, generate, and a
+# streamed SSE generate ending in [DONE]), then check /healthz and the
+# /metrics families from every layer (serve, exec, train, serve_http).
+HPORT=$(sed -n 's/^\[serve\] ready proto=http addr=.*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve.log" | head -1)
+[[ -n "$HPORT" ]] || { echo "serve never announced an http port"; cat "$SMOKE_DIR/serve.log"; exit 1; }
+python3 - "$HPORT" <<'PY'
+import http.client, json, sys
 port = int(sys.argv[1])
 
-conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
-conn.request("GET", "/healthz")
-resp = conn.getresponse()
-body = resp.read().decode()
-assert resp.status == 200, f"/healthz returned {resp.status}: {body!r}"
-assert body.strip() == "ok", f"unexpected /healthz body: {body!r}"
-conn.close()
+def call(method, path, body=None, headers=None):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+    conn.request(method, path, body=body, headers=headers or {})
+    resp = conn.getresponse()
+    data = resp.read()
+    conn.close()
+    return resp.status, data
 
-conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
-conn.request("GET", "/metrics")
-resp = conn.getresponse()
-text = resp.read().decode()
-assert resp.status == 200, f"/metrics returned {resp.status}"
-conn.close()
+status, body = call("GET", "/healthz")
+assert status == 200, f"/healthz returned {status}: {body!r}"
+assert body.decode().strip() == "ok", f"unexpected /healthz body: {body!r}"
+
+status, body = call("POST", "/v1/score",
+                    body=json.dumps({"text": "the cat sat on the mat"}),
+                    headers={"Content-Type": "application/json"})
+assert status == 200, f"/v1/score returned {status}: {body!r}"
+score = json.loads(body)
+assert score.get("ok") is True and "nll" in score, f"bad score body: {score}"
+
+status, body = call("POST", "/v1/generate",
+                    body=json.dumps({"prompt": "the cat", "max_tokens": 4}),
+                    headers={"Content-Type": "application/json"})
+assert status == 200, f"/v1/generate returned {status}: {body!r}"
+gen = json.loads(body)
+assert gen.get("ok") is True and len(gen.get("tokens", [])) == 4, f"bad generate body: {gen}"
+
+# Streamed generate: one SSE event per token, a done summary, then [DONE].
+status, body = call("POST", "/v1/generate",
+                    body=json.dumps({"prompt": "the cat", "max_tokens": 4, "stream": True}),
+                    headers={"Content-Type": "application/json"})
+assert status == 200, f"streamed /v1/generate returned {status}: {body!r}"
+events = [chunk[len("data: "):] for chunk in body.decode().split("\n\n")
+          if chunk.startswith("data: ")]
+assert events and events[-1] == "[DONE]", f"SSE stream did not end in [DONE]: {events[-3:]}"
+assert not any('"error"' in e for e in events), f"SSE stream carried an error: {events}"
+tokens = [json.loads(e) for e in events[:-1]]
+assert tokens[-1].get("done") is True, f"missing done summary: {tokens[-1]}"
+assert len(tokens) - 1 == 4, f"expected 4 token events, got {len(tokens) - 1}"
+assert tokens[0].get("token") == gen["tokens"][0], \
+    f"streamed first token {tokens[0]} != batch {gen['tokens'][0]}"
+
+status, text = call("GET", "/metrics")
+text = text.decode()
+assert status == 200, f"/metrics returned {status}"
 
 required = [
     "serve_requests_total",
     "serve_request_us",
     "serve_stage_kernel_us",
     "serve_queue_depth",
+    "serve_http_requests_total",
+    "serve_http_sse_events_total",
     "exec_fwd_sweep_us",
     "exec_pool_workers",
     "exec_workspace_peak_bytes",
@@ -157,15 +200,16 @@ missing = [f for f in required if f"# TYPE {f} " not in text]
 assert not missing, f"/metrics missing families: {missing}"
 families = sum(1 for line in text.splitlines() if line.startswith("# TYPE "))
 assert families >= 12, f"only {families} metric families exported (need >= 12)"
-# The smoke already ran generate + score through this server, so the
-# request histogram cannot be empty.
-for line in text.splitlines():
-    if line.startswith("serve_requests_total "):
-        assert float(line.split()[1]) >= 2, f"request counter did not advance: {line}"
-        break
-else:
-    raise AssertionError("serve_requests_total sample line missing")
-print(f"   metrics exporter OK ({families} families on port {port})")
+# generate + score ran over both protocols, so the counters cannot be empty.
+for family, floor in [("serve_requests_total", 4), ("serve_http_requests_total", 5),
+                      ("serve_http_sse_events_total", 6)]:
+    for line in text.splitlines():
+        if line.startswith(family + " "):
+            assert float(line.split()[1]) >= floor, f"counter did not advance: {line}"
+            break
+    else:
+        raise AssertionError(f"{family} sample line missing")
+print(f"   http front door OK ({families} families on port {port})")
 PY
 
 "$CCE" client --port "$PORT" --op shutdown >/dev/null
@@ -181,6 +225,106 @@ fi
 grep -q "shut down cleanly" "$SMOKE_DIR/serve.log" || { echo "missing clean-shutdown marker"; exit 1; }
 echo "   serve self-test OK (port $PORT)"
 
+echo "== serve self-test 2: two-model routing (--checkpoint tag=path) + drain-aware /healthz =="
+# Same checkpoint under two tags; engine.step.stall_ms keeps an in-flight
+# generate alive long enough to observe /healthz flip 200 -> 503 when
+# shutdown begins (drain-aware readiness, docs/http_api.md).
+CCE_FAULTS="engine.step.stall_ms=150" "$CCE" serve \
+    --checkpoint alpha="$SMOKE_DIR/run/final.ckpt" \
+    --checkpoint beta="$SMOKE_DIR/run/final.ckpt" \
+    --port 0 --http-addr 127.0.0.1:0 --drain-ms 10000 \
+    --max-batch 4 --max-wait-ms 2 > "$SMOKE_DIR/serve2.log" 2>"$SMOKE_DIR/serve2.err" &
+SERVE_PID=$!
+
+PORT2=""
+for _ in $(seq 1 100); do
+    PORT2=$(sed -n 's/^\[serve\] ready proto=line addr=.*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve2.log" | head -1)
+    [[ -n "$PORT2" ]] && break
+    if ! serve_alive; then
+        RC=0; wait "$SERVE_PID" || RC=$?
+        echo "serve 2 exited early (status $RC):"; cat "$SMOKE_DIR/serve2.err"
+        exit $(( RC == 0 ? 1 : RC ))
+    fi
+    sleep 0.1
+done
+[[ -n "$PORT2" ]] || { echo "serve 2 never bound a port"; cat "$SMOKE_DIR/serve2.err"; exit 1; }
+HPORT2=$(sed -n 's/^\[serve\] ready proto=http addr=.*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/serve2.log" | head -1)
+[[ -n "$HPORT2" ]] || { echo "serve 2 never announced an http port"; cat "$SMOKE_DIR/serve2.log"; exit 1; }
+
+python3 - "$HPORT2" "$PORT2" <<'PY'
+import http.client, json, socket, sys, threading, time
+hport, lport = int(sys.argv[1]), int(sys.argv[2])
+
+def call(method, path, body=None):
+    conn = http.client.HTTPConnection("127.0.0.1", hport, timeout=30)
+    conn.request(method, path, body=body,
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    data = resp.read()
+    conn.close()
+    return resp.status, data
+
+# Routing: each tag answers; an unknown tag is a structured 400.
+for model in ("alpha", "beta"):
+    status, body = call("POST", "/v1/generate",
+                        json.dumps({"prompt": "the cat", "max_tokens": 2, "model": model}))
+    assert status == 200, f"model={model} returned {status}: {body!r}"
+    assert json.loads(body).get("ok") is True, f"model={model} bad body: {body!r}"
+status, body = call("POST", "/v1/generate",
+                    json.dumps({"prompt": "the cat", "max_tokens": 2, "model": "nope"}))
+assert status == 400, f"unknown model returned {status}: {body!r}"
+assert b"unknown model" in body and b"alpha" in body, f"unhelpful 400 body: {body!r}"
+
+status, body = call("GET", "/healthz")
+assert status == 200 and body.decode().strip() == "ok", f"pre-drain healthz: {status} {body!r}"
+
+# Park a slow generate in flight (150 ms/step fault x 8 tokens ~= 1.2 s),
+# then start shutdown and watch readiness flip while the drain runs.
+slow = {}
+def slow_generate():
+    slow["result"] = call("POST", "/v1/generate",
+                          json.dumps({"prompt": "the cat", "max_tokens": 8}))
+t = threading.Thread(target=slow_generate)
+t.start()
+time.sleep(0.4)
+
+with socket.create_connection(("127.0.0.1", lport), timeout=10) as s:
+    s.sendall(b'{"op":"shutdown"}\n')
+    s.makefile().readline()
+
+saw_503 = False
+for _ in range(50):
+    try:
+        status, body = call("GET", "/healthz")
+    except OSError:
+        break  # listener already gone: drain finished
+    if status == 503:
+        assert body.decode().strip() == "draining", f"503 body: {body!r}"
+        saw_503 = True
+        break
+    time.sleep(0.05)
+assert saw_503, "/healthz never flipped to 503 during drain"
+
+# New work is refused while draining, with the structured error body.
+status, body = call("POST", "/v1/generate", json.dumps({"prompt": "x"}))
+assert status == 503, f"draining generate returned {status}: {body!r}"
+assert b"shutting_down" in body, f"draining body: {body!r}"
+
+t.join()
+status, body = slow["result"]
+assert status == 200, f"in-flight generate broke during drain: {status} {body!r}"
+print("   two-model routing + drain-aware /healthz OK")
+PY
+
+RC=0; wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+if [[ "$RC" -ne 0 ]]; then
+    echo "serve 2 did not shut down cleanly (status $RC):"; cat "$SMOKE_DIR/serve2.err"
+    exit "$RC"
+fi
+grep -q "shut down cleanly" "$SMOKE_DIR/serve2.log" || { echo "missing clean-shutdown marker (serve 2)"; exit 1; }
+echo "   serve self-test 2 OK (ports $PORT2 / $HPORT2)"
+
 echo "== chaos: fault-injection suite + CCE_FAULTS env smoke =="
 # The suite itself installs its failpoints in-process (panic isolation,
 # overload/retry, deadlines, crash-safe checkpoints, drain under load);
@@ -193,7 +337,13 @@ cargo test --test chaos -q
 CCE_FAULTS="conn.stall_ms=20" "$CCE" servebench --requests 8 --concurrency 2 \
     --max-tokens 2 --threads 1 --repeats 1 --retries 3 >/dev/null \
     || { echo "CCE_FAULTS-armed servebench smoke failed"; exit 1; }
-echo "   chaos OK (suite + env smoke)"
+# Same bench through the HTTP front door (streamed SSE generate + REST
+# score per request) — exercises the in-process server end-to-end over
+# real sockets with no curl dependency.
+"$CCE" servebench --http --requests 8 --concurrency 2 \
+    --max-tokens 2 --threads 1 --repeats 1 >/dev/null \
+    || { echo "servebench --http smoke failed"; exit 1; }
+echo "   chaos OK (suite + env smoke + http bench)"
 
 echo "== bench: table1 (native) + figA1 sweep + servebench at the fixed CI grid =="
 # Fixed grid (see docs/benchmarks.md): d >= 128 keeps gen_loss_inputs'

@@ -1,0 +1,70 @@
+#!/usr/bin/env bash
+# HTTP front-door quickstart: trains a tiny checkpoint, serves it under
+# two model tags on ephemeral ports, and runs every curl example from
+# README.md and docs/http_api.md VERBATIM against it.
+# tools/check_docs.sh asserts the doc lines and these lines stay in sync
+# — if you edit a curl example in the docs, edit it here too.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CCE=${CCE:-target/release/cce}
+[[ -x "$CCE" ]] || { echo "build first: cargo build --release"; exit 1; }
+command -v curl >/dev/null || { echo "this example needs curl"; exit 1; }
+
+WORK=$(mktemp -d)
+SERVE_PID=""
+trap '{ [[ -z "$SERVE_PID" ]] || kill "$SERVE_PID" 2>/dev/null || true; }; rm -rf "$WORK"' EXIT
+
+echo "== training a tiny checkpoint (seconds) =="
+"$CCE" train --backend native --steps 2 --corpus-docs 200 --vocab-size 384 \
+    --dim 32 --seq 64 --batch 4 --out-dir "$WORK/run" >/dev/null
+
+echo "== serving it under two model tags (alpha, beta) =="
+"$CCE" serve --checkpoint alpha="$WORK/run/final.ckpt" \
+    --checkpoint beta="$WORK/run/final.ckpt" \
+    --port 0 --http-addr 127.0.0.1:0 >"$WORK/serve.log" 2>/dev/null &
+SERVE_PID=$!
+
+# The bound ephemeral ports come from the stdout announce lines
+# (documented in docs/http_api.md).
+HTTP_PORT=""
+for _ in $(seq 1 100); do
+    HTTP_PORT=$(sed -n 's/^\[serve\] ready proto=http addr=.*:\([0-9][0-9]*\)$/\1/p' "$WORK/serve.log" | head -1)
+    [[ -n "$HTTP_PORT" ]] && break
+    kill -0 "$SERVE_PID" 2>/dev/null || { echo "server died:"; cat "$WORK/serve.log"; exit 1; }
+    sleep 0.1
+done
+[[ -n "$HTTP_PORT" ]] || { echo "no http port announced"; cat "$WORK/serve.log"; exit 1; }
+export HTTP_PORT
+LINE_PORT=$(sed -n 's/^\[serve\] ready proto=line addr=.*:\([0-9][0-9]*\)$/\1/p' "$WORK/serve.log" | head -1)
+echo "   line port $LINE_PORT, http port $HTTP_PORT"
+
+echo
+echo "== health and metrics =="
+curl -s "http://127.0.0.1:$HTTP_PORT/healthz"
+curl -s "http://127.0.0.1:$HTTP_PORT/metrics" | head -n 20
+
+echo
+echo "== score and generate =="
+curl -s -X POST "http://127.0.0.1:$HTTP_PORT/v1/score" -H 'Content-Type: application/json' -d '{"text":"the cat sat on the mat"}'
+curl -s -X POST "http://127.0.0.1:$HTTP_PORT/v1/generate" -H 'Content-Type: application/json' -d '{"prompt":"the cat","max_tokens":8}'
+
+echo
+echo "== streaming generate (SSE: one event per token, then [DONE]) =="
+curl -sN -X POST "http://127.0.0.1:$HTTP_PORT/v1/generate" -H 'Content-Type: application/json' -d '{"prompt":"the cat","max_tokens":8,"stream":true}'
+
+echo
+echo "== deadline and trace headers =="
+curl -s -X POST "http://127.0.0.1:$HTTP_PORT/v1/score" -H 'X-CCE-Deadline-Ms: 2000' -d '{"text":"the cat sat on the mat"}'
+curl -s -X POST "http://127.0.0.1:$HTTP_PORT/v1/score" -H 'X-CCE-Trace: 1' -d '{"text":"the cat sat on the mat"}'
+
+echo
+echo "== model routing =="
+curl -s -X POST "http://127.0.0.1:$HTTP_PORT/v1/generate" -H 'Content-Type: application/json' -d '{"prompt":"the cat","max_tokens":4,"model":"alpha"}'
+
+echo
+echo "== shutdown (line protocol) =="
+"$CCE" client --port "$LINE_PORT" --op shutdown >/dev/null
+wait "$SERVE_PID"
+SERVE_PID=""
+echo "http_quickstart OK"

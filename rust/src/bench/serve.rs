@@ -3,6 +3,13 @@
 //! percentiles, micro-batch occupancy, and the engine's peak inference
 //! workspace.  `--json BENCH_serve.json` persists machine-readable rows for
 //! cross-PR perf tracking, like `table1 --json`.
+//!
+//! `--http` drives the REST front door instead of the line-JSON protocol:
+//! generate requests stream over SSE (`POST /v1/generate` with
+//! `"stream":true`, terminal `data: [DONE]` verified per request) and
+//! score requests `POST /v1/score`.  Admin traffic (info / metrics /
+//! shutdown) stays on the line listener either way, so the scraped
+//! counters are comparable across both modes.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -11,6 +18,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::bench::harness::Table;
+use crate::serve::http::http_call;
+use crate::serve::sse::parse_data_events;
 use crate::serve::{
     serve, Client, ClientConfig, Engine, GenParams, Response, RetryPolicy, ServeConfig,
 };
@@ -29,11 +38,15 @@ pub struct ServeBenchConfig {
     pub max_tokens: usize,
     /// Per-leg client I/O + connect bound (`None` = block forever).
     pub timeout: Option<Duration>,
-    /// Client retry budget for `overloaded`/transport failures.
+    /// Client retry budget for `overloaded`/transport failures
+    /// (line-JSON mode; the HTTP path has no retry machinery).
     pub retries: u32,
     /// Scrape the server's `{"op":"metrics"}` histograms after the run and
     /// persist server-side percentiles next to the client-side ones.
     pub scrape: bool,
+    /// Drive `POST /v1/generate` (streamed SSE) + `POST /v1/score` over
+    /// the HTTP front door instead of the line-JSON protocol.
+    pub http: bool,
     pub serve: ServeConfig,
 }
 
@@ -46,6 +59,7 @@ impl Default for ServeBenchConfig {
             timeout: Some(Duration::from_secs(30)),
             retries: 2,
             scrape: false,
+            http: false,
             serve: ServeConfig::default(),
         }
     }
@@ -133,11 +147,25 @@ impl ServeBench {
 pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.port = 0; // never collide
+    if cfg.http && serve_cfg.http_addr.is_none() {
+        serve_cfg.http_addr = Some("127.0.0.1:0".to_string());
+    }
     let (vocab, d_model) = (engine.vocab, engine.d_model);
     let threads = engine.opts.resolved_threads();
     let dtype = engine.dtype().name();
     let server = serve(engine, &serve_cfg)?;
     let addr = server.addr;
+    let http_addr: Option<String> = if cfg.http {
+        Some(
+            server
+                .http_addr()
+                .ok_or_else(|| anyhow!("--http bench but no HTTP listener came up"))?
+                .to_string(),
+        )
+    } else {
+        None
+    };
+    let http_timeout = cfg.timeout.unwrap_or(Duration::from_secs(300));
     let concurrency = cfg.concurrency.max(1);
     let total_requests = cfg.requests.max(1);
 
@@ -167,7 +195,38 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
             let shed = shed.clone();
             let retried = retried.clone();
             let client_cfg = client_cfg.clone();
+            let http_addr = http_addr.clone();
             scope.spawn(move || {
+                if let Some(http_addr) = http_addr {
+                    // HTTP front door: one connection per request
+                    // (`Connection: close`), streamed SSE for generate.
+                    for i in 0..per_client {
+                        let is_generate = (worker + i) % 2 == 0;
+                        let t0 = Instant::now();
+                        let result = if is_generate {
+                            http_generate_once(
+                                &http_addr,
+                                cfg.max_tokens,
+                                (worker * 1000 + i) as u64,
+                                http_timeout,
+                            )
+                        } else {
+                            http_score_once(&http_addr, http_timeout)
+                        };
+                        let dt = t0.elapsed().as_secs_f64();
+                        match result {
+                            Ok(()) => {
+                                if is_generate {
+                                    gen_lat.lock().unwrap().push(dt);
+                                } else {
+                                    score_lat.lock().unwrap().push(dt);
+                                }
+                            }
+                            Err(err) => errors.lock().unwrap().push(format!("{err:#}")),
+                        }
+                    }
+                    return;
+                }
                 let mut client = match Client::connect_with(addr, client_cfg) {
                     Ok(client) => client,
                     Err(err) => {
@@ -186,6 +245,7 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
                             temperature: 1.0,
                             seed: (worker * 1000 + i) as u64,
                             deadline_ms: 0,
+                            ..GenParams::default()
                         })
                     } else {
                         client.score("the cat sat on the mat and the dog sat on the log")
@@ -304,6 +364,59 @@ pub fn run(engine: Arc<Engine>, cfg: &ServeBenchConfig) -> Result<ServeBench> {
         server_kernel_p50_ms: hist_p50_ms("serve_stage_kernel_us"),
         server_metric_families,
     })
+}
+
+/// One streamed generate over the REST front door: `POST /v1/generate`
+/// with `"stream":true`, asserting a 200 and a terminal `data: [DONE]`.
+fn http_generate_once(
+    addr: &str,
+    max_tokens: usize,
+    seed: u64,
+    timeout: Duration,
+) -> Result<()> {
+    let body = Json::Object(vec![
+        ("prompt".to_string(), Json::str("the cat sat on")),
+        ("max_tokens".to_string(), Json::Int(max_tokens as i64)),
+        ("temperature".to_string(), Json::Float(1.0)),
+        ("seed".to_string(), Json::Int(seed as i64)),
+        ("stream".to_string(), Json::Bool(true)),
+    ])
+    .to_string();
+    let (status, _headers, bytes) =
+        http_call(addr, "POST", "/v1/generate", body.as_bytes(), timeout)?;
+    if status != 200 {
+        return Err(anyhow!(
+            "generate: HTTP {status}: {}",
+            String::from_utf8_lossy(&bytes).trim()
+        ));
+    }
+    let text = String::from_utf8_lossy(&bytes);
+    let events = parse_data_events(&text);
+    if events.last().map(String::as_str) != Some("[DONE]") {
+        return Err(anyhow!("generate: SSE stream missing terminal [DONE]"));
+    }
+    if let Some(err) = events.iter().find(|e| e.contains("\"error\"")) {
+        return Err(anyhow!("generate: mid-stream error event: {err}"));
+    }
+    Ok(())
+}
+
+/// One `POST /v1/score` over the REST front door, asserting a 200.
+fn http_score_once(addr: &str, timeout: Duration) -> Result<()> {
+    let body = Json::Object(vec![(
+        "text".to_string(),
+        Json::str("the cat sat on the mat and the dog sat on the log"),
+    )])
+    .to_string();
+    let (status, _headers, bytes) =
+        http_call(addr, "POST", "/v1/score", body.as_bytes(), timeout)?;
+    if status != 200 {
+        return Err(anyhow!(
+            "score: HTTP {status}: {}",
+            String::from_utf8_lossy(&bytes).trim()
+        ));
+    }
+    Ok(())
 }
 
 /// Run the harness `repeats` times against the same engine and report the
@@ -509,6 +622,26 @@ mod tests {
         // Without --scrape, no server_* fields appear (schema-2 byte shape
         // of pre-observability rows is preserved).
         assert!(parsed.get("server_request_p50_ms").is_none());
+    }
+
+    #[test]
+    fn http_bench_drives_the_rest_front_door() {
+        let opts =
+            KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
+        let engine = Arc::new(Engine::demo(384, 16, 2, opts).unwrap());
+        let cfg = ServeBenchConfig {
+            requests: 6,
+            concurrency: 2,
+            max_tokens: 3,
+            http: true,
+            serve: ServeConfig { max_batch: 4, ..ServeConfig::default() },
+            ..ServeBenchConfig::default()
+        };
+        let bench = run(engine, &cfg).unwrap();
+        assert_eq!(bench.requests, 6);
+        assert!(bench.generate.n >= 1 && bench.score.n >= 1);
+        // HTTP requests ride the same batcher as line-JSON ones.
+        assert!(bench.batches >= 1 && bench.batched_jobs == 6);
     }
 
     #[test]

@@ -3,14 +3,21 @@
 //! ```text
 //! cce train   [--backend native|pjrt] [--method cce] [--steps N] ...
 //! cce eval    --checkpoint path [--backend native|pjrt] [--tag e2e]
-//! cce serve   --checkpoint path | --demo  [--port 7343, 0 = ephemeral]
+//! cce serve   --checkpoint [tag=]path ... | --demo  [--port 7343, 0 = ephemeral]
 //!             [--max-batch 8] [--max-wait-ms 3] [--queue-depth 64]
-//!             [--metrics-addr 127.0.0.1:9464 — /metrics + /healthz HTTP]
+//!             [--http-addr 127.0.0.1:8080 — REST front door: POST
+//!              /v1/generate (SSE with "stream":true), POST /v1/score,
+//!              GET /metrics, GET /healthz; see docs/http_api.md]
+//!             [--metrics-addr — legacy alias for --http-addr]
+//!             (--checkpoint repeats: the first entry is the default model,
+//!              requests route with their "model" field)
 //! cce client  --port P [--op generate|score|info|metrics|shutdown]
 //!             [--prompt "..."] [--text "..."] [--top-k K] [--temperature T]
+//!             [--model TAG — route to a named model]
 //!             [--trace — echo per-stage timings in the response]
 //! cce servebench [--demo | --checkpoint path] [--requests 64]
 //!             [--concurrency 8] [--repeats 3] [--dtype f32|bf16]
+//!             [--http — drive POST /v1/generate instead of line-JSON]
 //!             [--scrape — persist server-side histograms]
 //!             [--json BENCH_serve.json]
 //! cce table1  [--backend native|pjrt] [--json BENCH_table1.json]
@@ -62,12 +69,13 @@ fn usage() -> ! {
         "usage: cce <command> [options]\n\ncommands:\n  \
          train      run a training job (--backend/--method/--steps/--corpus/...)\n  \
          eval       evaluate a checkpoint (--checkpoint) [--backend]\n  \
-         serve      serve a checkpoint over TCP (--checkpoint|--demo, --port,\n             \
-                    --drain-ms, --idle-timeout-ms, --metrics-addr)\n  \
+         serve      serve checkpoints over TCP + HTTP (--checkpoint [tag=]path\n             \
+                    repeatable, --demo, --port, --http-addr, --drain-ms,\n             \
+                    --idle-timeout-ms; --metrics-addr = legacy --http-addr)\n  \
          client     one-shot client for a running server (--port, --op,\n             \
-                    --timeout-ms, --retries, --deadline-ms, --trace)\n  \
+                    --model, --timeout-ms, --retries, --deadline-ms, --trace)\n  \
          servebench serving throughput/latency harness [--json]\n             \
-                    (--timeout-ms, --retries, --scrape)\n  \
+                    (--timeout-ms, --retries, --scrape, --http)\n  \
          table1     Table 1: memory & time per method [--backend/--json]\n  \
          tableA1    Table A1: Table 1 with ignored tokens removed\n  \
          tableA2    Table A2: backward-pass breakdown (pjrt)\n  \
@@ -147,7 +155,7 @@ fn pjrt_unavailable(cmd: &str) -> Result<()> {
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["check", "verbose", "demo", "scrape", "trace"])?;
+    let args = Args::parse(argv, &["check", "verbose", "demo", "scrape", "trace", "http"])?;
     let cmd = match args.positional.first() {
         Some(c) => c.as_str(),
         None => usage(),
@@ -363,16 +371,19 @@ fn cmd_eval_pjrt(_args: &Args) -> Result<()> {
 
 // ------------------------------------------------------------------- serve
 
-/// Build the serving engine from `--checkpoint` or `--demo`.  With
-/// `default_demo`, a missing `--checkpoint` implies `--demo` (used by
-/// `servebench`, which should run out of the box) — one construction path,
-/// so `serve --demo` and `servebench` always agree on the demo model.
-fn build_engine(
+/// Build the serving model table from `--checkpoint` (repeatable,
+/// `[tag=]path`; an untagged path gets the tag `default`) or `--demo`.
+/// The first entry is the default route.  With `default_demo`, a missing
+/// `--checkpoint` implies `--demo` (used by `servebench`, which should run
+/// out of the box) — one construction path, so `serve --demo` and
+/// `servebench` always agree on the demo model.
+fn build_engines(
     args: &Args,
     opts: KernelOptions,
     default_demo: bool,
-) -> Result<cce::serve::Engine> {
-    if args.flag("demo") || (default_demo && args.opt("checkpoint").is_none()) {
+) -> Result<Vec<(String, std::sync::Arc<cce::serve::Engine>)>> {
+    let specs = args.opt_all("checkpoint");
+    if args.flag("demo") || (default_demo && specs.is_empty()) {
         let vocab = args.get("vocab-size", 512usize)?;
         let dim = args.get("dim", 32usize)?;
         let steps = args.get("demo-steps", 4u64)?;
@@ -380,28 +391,42 @@ fn build_engine(
             "[serve] --demo: training a tiny bag-of-context model \
              ({steps} steps, vocab {vocab}, d {dim}) — no checkpoint needed"
         );
-        cce::serve::Engine::demo(vocab, dim, steps, opts)
-    } else {
-        let path = args.require("checkpoint").map_err(|_| {
-            anyhow::anyhow!("serve needs --checkpoint <path> (or --demo for a throwaway model)")
-        })?;
-        // No --window flag: trust the checkpoint's .model.json sidecar.
-        let window = match args.opt("window") {
-            Some(w) => Some(w.parse::<usize>().map_err(|e| anyhow::anyhow!("--window={w}: {e}"))?),
-            None => None,
+        let engine = cce::serve::Engine::demo(vocab, dim, steps, opts)?;
+        return Ok(vec![("default".to_string(), std::sync::Arc::new(engine))]);
+    }
+    if specs.is_empty() {
+        bail!("serve needs --checkpoint [tag=]path (repeatable; or --demo for a throwaway model)");
+    }
+    // No --window flag: trust the checkpoint's .model.json sidecar.
+    let window = match args.opt("window") {
+        Some(w) => Some(w.parse::<usize>().map_err(|e| anyhow::anyhow!("--window={w}: {e}"))?),
+        None => None,
+    };
+    let dtype = dtype_override(args)?;
+    let mut models = Vec::new();
+    for spec in &specs {
+        // `tag=path`; a bare path serves under the tag `default`.
+        let (tag, path) = match spec.split_once('=') {
+            Some((tag, path)) => (tag.to_string(), path),
+            None => ("default".to_string(), spec.as_str()),
         };
-        cce::serve::Engine::from_checkpoint(
+        if models.iter().any(|(seen, _)| *seen == tag) {
+            bail!("duplicate model tag {tag:?} in --checkpoint");
+        }
+        let engine = cce::serve::Engine::from_checkpoint(
             std::path::Path::new(path),
             window,
-            dtype_override(args)?,
+            dtype,
             opts,
-        )
+        )?;
+        models.push((tag, std::sync::Arc::new(engine)));
     }
+    Ok(models)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = kernel_options(args)?;
-    let engine = std::sync::Arc::new(build_engine(args, opts, false)?);
+    let models = build_engines(args, opts, false)?;
     let cfg = cce::serve::ServeConfig {
         host: args.get("host", "127.0.0.1".to_string())?,
         port: args.get("port", 7343u16)?,
@@ -414,27 +439,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         drain: std::time::Duration::from_millis(args.get("drain-ms", 5_000u64)?),
         metrics_addr: args.opt("metrics-addr").map(|s| s.to_string()),
+        http_addr: args.opt("http-addr").map(|s| s.to_string()),
     };
-    eprintln!(
-        "[serve] model: vocab {} d {} window {} step {} dtype {} ({:.1} MB params) | \
-         {} kernel threads, {} batch workers, max batch {}",
-        engine.vocab,
-        engine.d_model,
-        engine.window,
-        engine.step(),
-        engine.dtype().name(),
-        engine.param_bytes() as f64 / (1024.0 * 1024.0),
-        opts.threads,
-        cfg.workers,
-        cfg.max_batch
-    );
-    let server = cce::serve::serve(engine, &cfg)?;
-    // One parseable line on stdout: the CI smoke test and scripts read the
-    // bound (possibly ephemeral) port from it.
-    println!("[serve] listening on {}", server.addr);
-    if let Some(addr) = server.metrics_addr() {
-        // Same contract for the exporter's (possibly ephemeral) port.
-        println!("[serve] metrics on {addr}");
+    for (tag, engine) in &models {
+        eprintln!(
+            "[serve] model {tag}: vocab {} d {} window {} step {} dtype {} ({:.1} MB params) | \
+             {} kernel threads, {} batch workers, max batch {}",
+            engine.vocab,
+            engine.d_model,
+            engine.window,
+            engine.step(),
+            engine.dtype().name(),
+            engine.param_bytes() as f64 / (1024.0 * 1024.0),
+            opts.threads,
+            cfg.workers,
+            cfg.max_batch
+        );
+    }
+    let server = cce::serve::serve_multi(models, &cfg)?;
+    // Machine-parseable announce lines on stdout (documented in
+    // docs/http_api.md): the CI smoke test and scripts read the bound
+    // (possibly ephemeral) ports from them.
+    println!("[serve] ready proto=line addr={}", server.addr);
+    if let Some(addr) = server.http_addr() {
+        println!("[serve] ready proto=http addr={addr}");
     }
     use std::io::Write as _;
     std::io::stdout().flush()?;
@@ -467,6 +495,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             seed: args.get("seed", 0u64)?,
             deadline_ms: args.get("deadline-ms", 0u64)?,
             trace: args.flag("trace"),
+            model: args.opt("model").map(String::from),
         })?,
         "score" => {
             let text = args.get("text", "the cat sat on the mat".to_string())?;
@@ -474,6 +503,7 @@ fn cmd_client(args: &Args) -> Result<()> {
                 text,
                 deadline_ms: args.get("deadline-ms", 0u64)?,
                 trace: args.flag("trace"),
+                model: args.opt("model").map(String::from),
             })?
         }
         "info" => client.info()?,
@@ -489,7 +519,11 @@ fn cmd_servebench(args: &Args) -> Result<()> {
     use cce::bench::serve as sb;
     let opts = kernel_options(args)?;
     // No checkpoint: same demo engine `cce serve --demo` would run.
-    let engine = build_engine(args, opts, true)?;
+    let engine = build_engines(args, opts, true)?
+        .into_iter()
+        .next()
+        .map(|(_, engine)| engine)
+        .expect("build_engines returns at least one model");
     let timeout_ms = args.get("timeout-ms", 30_000u64)?;
     let cfg = sb::ServeBenchConfig {
         requests: args.get("requests", 64usize)?,
@@ -498,6 +532,7 @@ fn cmd_servebench(args: &Args) -> Result<()> {
         timeout: (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms)),
         retries: args.get("retries", 2u32)?,
         scrape: args.flag("scrape"),
+        http: args.flag("http"),
         serve: cce::serve::ServeConfig {
             workers: args.get("workers", 2usize)?,
             max_batch: args.get("max-batch", 8usize)?,
@@ -507,7 +542,7 @@ fn cmd_servebench(args: &Args) -> Result<()> {
         },
     };
     let repeats = args.get("repeats", 3usize)?;
-    let bench = sb::run_repeated(std::sync::Arc::new(engine), &cfg, repeats)?;
+    let bench = sb::run_repeated(engine, &cfg, repeats)?;
     sb::print(&bench);
     if let Some(path) = args.opt("json") {
         sb::write_json(&bench, path)?;

@@ -69,10 +69,35 @@ impl Reply {
     }
 }
 
+/// One decoded token forwarded mid-flight to a streaming connection
+/// (`POST /v1/generate` with `"stream":true`): what one SSE event carries.
+#[derive(Debug, Clone)]
+pub struct StreamDelta {
+    pub token: i32,
+    pub logprob: f32,
+    /// The token's own decoded piece (specials drop to the empty string).
+    pub text: String,
+}
+
+/// Per-stream channel bound.  Strictly larger than the engine's hard
+/// `max_gen_tokens` cap (256), so a stream's `try_send`s can never hit a
+/// full channel even if the consumer has not started draining yet.
+pub const STREAM_CHANNEL_DEPTH: usize = 512;
+
 /// One queued request plus its response channel.
 pub struct Job {
     pub request: Request,
     pub respond: mpsc::Sender<Reply>,
+    /// Per-token delta channel for streaming generate jobs.  The batcher
+    /// `try_send`s each decoded token as it leaves the lockstep kernel
+    /// loop; dropping the job (any completion path) hangs the channel up,
+    /// which is the consumer's end-of-stream signal.  Size the channel
+    /// with [`STREAM_CHANNEL_DEPTH`] so tokens are never dropped.
+    pub stream: Option<mpsc::SyncSender<StreamDelta>>,
+    /// Engine override for multi-model routing (`None` = the batcher's
+    /// default engine).  Jobs for different engines share the queue and
+    /// admission control but execute as separate kernel sub-batches.
+    pub engine: Option<Arc<Engine>>,
     /// Absolute shed deadline derived from the request's `deadline_ms`;
     /// checked when the batch is assembled, before any kernel work.
     pub deadline: Option<Instant>,
@@ -90,7 +115,7 @@ impl Job {
             .deadline_ms()
             .and_then(|ms| submitted.checked_add(Duration::from_millis(ms)));
         let trace = request.trace();
-        Job { request, respond, deadline, submitted, trace }
+        Job { request, respond, stream: None, engine: None, deadline, submitted, trace }
     }
 }
 
@@ -310,7 +335,7 @@ impl Batcher {
 /// Everything one batch worker needs (bundled to keep the spawn site and
 /// signatures readable).
 struct WorkerCtx<'a> {
-    engine: &'a Engine,
+    engine: &'a Arc<Engine>,
     rx: &'a Mutex<mpsc::Receiver<Job>>,
     stats: &'a BatchStats,
     stop: &'a AtomicBool,
@@ -391,8 +416,26 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 struct Pending<T> {
     payload: T,
     respond: mpsc::Sender<Reply>,
+    stream: Option<mpsc::SyncSender<StreamDelta>>,
     queue_us: u64,
     trace: bool,
+}
+
+/// Append `pending` to the sub-batch bucket of `engine`, opening a new
+/// bucket for an engine the batch has not seen yet (multi-model batches
+/// execute one kernel sub-batch per distinct engine).
+fn bucket_for<T>(
+    groups: &mut Vec<(Arc<Engine>, Vec<Pending<T>>)>,
+    engine: Arc<Engine>,
+    pending: Pending<T>,
+) {
+    for (existing, bucket) in groups.iter_mut() {
+        if Arc::ptr_eq(existing, &engine) {
+            bucket.push(pending);
+            return;
+        }
+    }
+    groups.push((engine, vec![pending]));
 }
 
 /// Route one executed job: record its stage histograms, attach timings
@@ -414,14 +457,17 @@ fn resolve<T>(
 /// Execute one assembled batch and route the responses.  Every job is
 /// answered exactly once and decrements `in_flight` exactly once, on every
 /// path — success, engine error, shed deadline, or isolated panic.
-fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u64) {
+/// Multi-model batches split into one kernel sub-batch per distinct
+/// engine; jobs carrying a [`Job::stream`] channel get their tokens
+/// forwarded as the lockstep decode loop emits them.
+fn run_batch(default_engine: &Arc<Engine>, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u64) {
     let answer = |respond: &mpsc::Sender<Reply>, reply: Reply| {
         let _ = respond.send(reply); // client may have hung up
         stats.in_flight.sub(1);
     };
     let now = Instant::now();
-    let mut gens: Vec<Pending<GenParams>> = Vec::new();
-    let mut scores: Vec<Pending<String>> = Vec::new();
+    let mut gens: Vec<(Arc<Engine>, Vec<Pending<GenParams>>)> = Vec::new();
+    let mut scores: Vec<(Arc<Engine>, Vec<Pending<String>>)> = Vec::new();
     for job in jobs {
         // Deadline shed happens here — after queueing, before kernels.
         if job.deadline.is_some_and(|deadline| now >= deadline) {
@@ -437,13 +483,24 @@ fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u
         }
         let queue_us = now.saturating_duration_since(job.submitted).as_micros() as u64;
         let trace = job.trace;
+        let engine = job.engine.unwrap_or_else(|| default_engine.clone());
         match job.request {
-            Request::Generate(params) => {
-                gens.push(Pending { payload: params, respond: job.respond, queue_us, trace });
-            }
-            Request::Score { text, .. } => {
-                scores.push(Pending { payload: text, respond: job.respond, queue_us, trace });
-            }
+            Request::Generate(params) => bucket_for(
+                &mut gens,
+                engine,
+                Pending {
+                    payload: params,
+                    respond: job.respond,
+                    stream: job.stream,
+                    queue_us,
+                    trace,
+                },
+            ),
+            Request::Score { text, .. } => bucket_for(
+                &mut scores,
+                engine,
+                Pending { payload: text, respond: job.respond, stream: None, queue_us, trace },
+            ),
             // Info/metrics/shutdown are answered inline by the connection;
             // they never enter the queue.
             other => answer(
@@ -455,17 +512,36 @@ fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u
             ),
         }
     }
-    if !gens.is_empty() {
-        let params: Vec<GenParams> = gens.iter().map(|p| p.payload.clone()).collect();
+    for (engine, group) in &gens {
+        let params: Vec<GenParams> = group.iter().map(|p| p.payload.clone()).collect();
+        let streams: Vec<Option<mpsc::SyncSender<StreamDelta>>> =
+            group.iter().map(|p| p.stream.clone()).collect();
+        let any_stream = streams.iter().any(|s| s.is_some());
         let kernel_started = Instant::now();
         let results = catch_unwind(AssertUnwindSafe(|| {
             faults::maybe_panic("batcher.panic");
-            engine.generate_batch(&params)
+            if any_stream {
+                engine.generate_batch_with(&params, &mut |row, token, logprob| {
+                    if let Some(tx) = &streams[row] {
+                        // try_send: the channel is sized past the token cap
+                        // (STREAM_CHANNEL_DEPTH), so Full is impossible; a
+                        // Disconnected receiver means the client hung up,
+                        // and the decode simply finishes unobserved.
+                        let _ = tx.try_send(StreamDelta {
+                            token,
+                            logprob,
+                            text: engine.decode_token(token),
+                        });
+                    }
+                })
+            } else {
+                engine.generate_batch(&params)
+            }
         }));
         let kernel_us = kernel_started.elapsed().as_micros() as u64;
         match results {
             Ok(results) => {
-                for (pending, result) in gens.iter().zip(results) {
+                for (pending, result) in group.iter().zip(results) {
                     let response = match result {
                         Ok(out) => Response::Generate {
                             text: out.text,
@@ -485,14 +561,14 @@ fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u
                     "batch execution panicked: {} (request isolated; server still serving)",
                     panic_message(&payload)
                 );
-                for pending in &gens {
+                for pending in group {
                     answer(&pending.respond, Reply::bare(Response::err(ErrorCode::Internal, &msg)));
                 }
             }
         }
     }
-    if !scores.is_empty() {
-        let texts: Vec<String> = scores.iter().map(|p| p.payload.clone()).collect();
+    for (engine, group) in &scores {
+        let texts: Vec<String> = group.iter().map(|p| p.payload.clone()).collect();
         let kernel_started = Instant::now();
         let results = catch_unwind(AssertUnwindSafe(|| {
             faults::maybe_panic("batcher.panic");
@@ -501,7 +577,7 @@ fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u
         let kernel_us = kernel_started.elapsed().as_micros() as u64;
         match results {
             Ok(results) => {
-                for (pending, result) in scores.iter().zip(results) {
+                for (pending, result) in group.iter().zip(results) {
                     let response = match result {
                         Ok(res) => Response::Score {
                             nll: res.nll,
@@ -520,7 +596,7 @@ fn run_batch(engine: &Engine, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u
                     "batch execution panicked: {} (request isolated; server still serving)",
                     panic_message(&payload)
                 );
-                for pending in &scores {
+                for pending in group {
                     answer(&pending.respond, Reply::bare(Response::err(ErrorCode::Internal, &msg)));
                 }
             }
@@ -558,7 +634,12 @@ mod tests {
                     ..GenParams::default()
                 })
             } else {
-                Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: false }
+                Request::Score {
+                    text: "the cat sat".into(),
+                    deadline_ms: 0,
+                    trace: false,
+                    model: None,
+                }
             };
             batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
             rxs.push((i, rx));
@@ -589,7 +670,8 @@ mod tests {
     fn traced_jobs_echo_stage_timings() {
         let batcher = Batcher::start(tiny_engine(), 1, 2, Duration::from_millis(1), 8);
         let (tx, rx) = mpsc::channel();
-        let request = Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: true };
+        let request =
+            Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: true, model: None };
         batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
         let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
         assert!(matches!(reply.response, Response::Score { .. }), "{:?}", reply.response);
@@ -597,10 +679,61 @@ mod tests {
         assert!(timings.kernel_us > 0, "kernel time must be measured: {timings:?}");
         // An identical untraced job carries none.
         let (tx, rx) = mpsc::channel();
-        let request = Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: false };
+        let request =
+            Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: false, model: None };
         batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
         let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
         assert!(reply.timings.is_none(), "untraced job must not carry timings");
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn streaming_jobs_forward_every_token_and_engines_split_sub_batches() {
+        let engine_a = tiny_engine();
+        let engine_b = tiny_engine();
+        let batcher = Batcher::start(engine_a.clone(), 1, 8, Duration::from_millis(10), 16);
+        let mk = || {
+            Request::Generate(GenParams {
+                prompt: "the".into(),
+                max_tokens: 4,
+                ..GenParams::default()
+            })
+        };
+        // One streaming job on the default engine…
+        let (tx_a, rx_a) = mpsc::channel();
+        let (stream_tx, stream_rx) = mpsc::sync_channel(STREAM_CHANNEL_DEPTH);
+        let mut job_a = Job::new(mk(), tx_a);
+        job_a.stream = Some(stream_tx);
+        // …and one routed to a different engine in the same batch window.
+        let (tx_b, rx_b) = mpsc::channel();
+        let mut job_b = Job::new(mk(), tx_b);
+        job_b.engine = Some(engine_b.clone());
+        batcher.submit(job_a).map_err(|_| ()).unwrap();
+        batcher.submit(job_b).map_err(|_| ()).unwrap();
+        // The stream ends by hangup: the batcher drops the sender once the
+        // job is answered.
+        let mut deltas: Vec<StreamDelta> = Vec::new();
+        loop {
+            match stream_rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(delta) => deltas.push(delta),
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => panic!("stream never completed"),
+            }
+        }
+        let reply = rx_a.recv_timeout(Duration::from_secs(5)).expect("streamed job answered");
+        match reply.response {
+            Response::Generate { tokens, logprobs, .. } => {
+                let streamed: Vec<i32> = deltas.iter().map(|d| d.token).collect();
+                assert_eq!(streamed, tokens, "stream must carry exactly the decoded tokens");
+                assert_eq!(deltas.len(), logprobs.len());
+            }
+            other => panic!("unexpected response: {other:?}"),
+        }
+        match rx_b.recv_timeout(Duration::from_secs(30)).expect("routed job answered").response {
+            Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+            other => panic!("unexpected response: {other:?}"),
+        }
+        assert!(engine_b.served() >= 1, "routed job must run on its own engine");
         batcher.shutdown();
     }
 

@@ -186,7 +186,12 @@ impl Client {
     }
 
     pub fn score(&mut self, text: &str) -> Result<Response> {
-        self.call_ok(&Request::Score { text: text.to_string(), deadline_ms: 0, trace: false })
+        self.call_ok(&Request::Score {
+            text: text.to_string(),
+            deadline_ms: 0,
+            trace: false,
+            model: None,
+        })
     }
 
     pub fn info(&mut self) -> Result<Response> {

@@ -399,12 +399,33 @@ impl Engine {
         ctx
     }
 
+    /// Decode one token id to its text piece (specials dropped) — the SSE
+    /// per-event `"text"` field.
+    pub fn decode_token(&self, token: i32) -> String {
+        self.tokenizer.decode(&[token])
+    }
+
     // ------------------------------------------------------------ generate
 
     /// Decode a batch of requests in lockstep.  Returns one result per
     /// request, in order.
     pub fn generate_batch(&self, reqs: &[GenParams]) -> Vec<Result<GenOut>> {
+        self.generate_batch_with(reqs, &mut |_, _, _| {})
+    }
+
+    /// [`Engine::generate_batch`] with a per-token observer: after every
+    /// lockstep kernel step, `on_token(slot_index, token, logprob)` fires
+    /// once per token emitted that step, in request order.  This is the
+    /// SSE streaming hook — the callback runs on the decode thread, so it
+    /// must be cheap (the HTTP layer just forwards into a bounded
+    /// channel).
+    pub fn generate_batch_with(
+        &self,
+        reqs: &[GenParams],
+        on_token: &mut dyn FnMut(usize, i32, f32),
+    ) -> Vec<Result<GenOut>> {
         let mut slots: Vec<Slot> = reqs.iter().map(|p| self.open_slot(p)).collect();
+        let mut streamed = vec![0usize; slots.len()];
         loop {
             // Chaos sites: a mid-decode panic exercises the batcher's
             // catch_unwind boundary; a stall simulates a slow kernel step.
@@ -439,6 +460,17 @@ impl Engine {
                     for &i in &gumbel_rows {
                         slots[i].err = Some(format!("{err:#}"));
                     }
+                }
+            }
+            // Flush this step's newly emitted tokens to the observer while
+            // the next kernel step is still ahead — the streaming path.
+            for (i, slot) in slots.iter().enumerate() {
+                if slot.err.is_some() {
+                    continue;
+                }
+                while streamed[i] < slot.out_tokens.len() {
+                    on_token(i, slot.out_tokens[streamed[i]], slot.out_logprobs[streamed[i]]);
+                    streamed[i] += 1;
                 }
             }
         }
@@ -837,6 +869,35 @@ mod tests {
         // info reports the dtype.
         let info = engine.info_json();
         assert_eq!(info.get("dtype").and_then(|v| v.as_str()), Some("bf16"));
+    }
+
+    #[test]
+    fn streaming_observer_sees_every_token_in_order() {
+        let engine = tiny_engine();
+        let reqs = vec![
+            GenParams { prompt: "the".into(), max_tokens: 5, ..GenParams::default() },
+            GenParams { prompt: "a dog".into(), max_tokens: 3, ..GenParams::default() },
+        ];
+        let mut seen: Vec<Vec<(i32, f32)>> = vec![Vec::new(); reqs.len()];
+        let outs = engine.generate_batch_with(&reqs, &mut |i, tok, lp| seen[i].push((tok, lp)));
+        for (i, out) in outs.iter().enumerate() {
+            let out = out.as_ref().unwrap();
+            let streamed_tokens: Vec<i32> = seen[i].iter().map(|&(t, _)| t).collect();
+            let streamed_lps: Vec<f32> = seen[i].iter().map(|&(_, lp)| lp).collect();
+            assert_eq!(streamed_tokens, out.tokens, "stream {i} diverged from batch result");
+            assert_eq!(streamed_lps, out.logprobs);
+            // Each streamed piece decodes independently.
+            for &t in &out.tokens {
+                let _ = engine.decode_token(t);
+            }
+        }
+        // The observer must not change the decode itself.
+        let plain = engine.generate_batch(&reqs);
+        assert_eq!(
+            plain[0].as_ref().unwrap().tokens,
+            outs[0].as_ref().unwrap().tokens,
+            "observer changed greedy decode"
+        );
     }
 
     #[test]

@@ -1,0 +1,606 @@
+//! Dependency-free HTTP/1.1 framing for the serve front door.
+//!
+//! This is deliberately a *framing* module, not a framework: it parses one
+//! request (request line, headers, `Content-Length` or `chunked` body) off
+//! a byte stream with hard size bounds, and writes one response back.  The
+//! routing, batching, admission control, and failure semantics all live in
+//! [`crate::serve::server`] — the HTTP layer only translates them:
+//!
+//! | [`ErrorCode`]        | HTTP status | extra                          |
+//! |----------------------|-------------|--------------------------------|
+//! | `invalid_request`    | 400         |                                |
+//! | `overloaded`         | 429         | `Retry-After` (seconds, ceil)  |
+//! | `shutting_down`      | 503         |                                |
+//! | `deadline_exceeded`  | 504         |                                |
+//! | `internal`           | 500         |                                |
+//!
+//! Framing failures have their own statuses: an unparseable request line
+//! or malformed chunked body is `400`, headers past
+//! [`Limits::max_header_bytes`] are `431`, a body past
+//! [`Limits::max_body_bytes`] is `413`.
+//!
+//! [`Conn`] is generic over `Read` so every parse path is unit-testable on
+//! in-memory buffers; over a `TcpStream` the caller sets a read timeout
+//! and gets [`HttpError::Idle`] back while a keep-alive connection sits
+//! quiet, which is what lets the server poll its stop flag between
+//! requests.  A small blocking client ([`http_call`]) rides the same
+//! parser for tests and `servebench --http`.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::serve::protocol::ErrorCode;
+use crate::util::json::Json;
+
+/// Hard size bounds on one request.  Both are generous for an inference
+/// API (prompts are bounded by the engine's own token caps long before
+/// this) and small enough that a hostile peer cannot balloon memory.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Request line + headers, bytes, including the terminating CRLFCRLF.
+    pub max_header_bytes: usize,
+    /// Decoded body bytes (`Content-Length` value or summed chunk sizes).
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits { max_header_bytes: 16 * 1024, max_body_bytes: 1024 * 1024 }
+    }
+}
+
+/// One parsed request.  Header names are lowercased at parse time;
+/// values keep their bytes (trimmed).
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// What the client asked for (HTTP/1.1 defaults to keep-alive,
+    /// HTTP/1.0 to close, `Connection:` overrides either way).  The
+    /// server may still choose to close — e.g. after an SSE stream.
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (names were lowercased at parse).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read.  `Idle` and `Closed` are normal
+/// connection-lifecycle events, not protocol errors.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Read timeout with no request bytes pending: the keep-alive
+    /// connection is just quiet.  Poll your stop flag and call again.
+    Idle,
+    /// Clean EOF with no request bytes pending: the peer hung up.
+    Closed,
+    /// Timeout or EOF *mid-request*: the peer stalled or died partway.
+    Stalled,
+    /// Headers exceeded [`Limits::max_header_bytes`] → `431`.
+    HeadersTooLarge,
+    /// Body exceeded [`Limits::max_body_bytes`] → `413`.
+    BodyTooLarge,
+    /// Unparseable request line / header / chunk framing → `400`.
+    Bad(String),
+    Io(io::Error),
+}
+
+/// Buffered request reader over one connection.  Bytes that arrive ahead
+/// of a full request survive across [`Conn::read_request`] calls, so a
+/// poll-timeout mid-headers resumes where it left off.
+pub struct Conn<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> Conn<R> {
+    pub fn new(r: R) -> Conn<R> {
+        Conn { r, buf: Vec::new() }
+    }
+
+    /// Whether a partial request is already buffered (distinguishes an
+    /// idle keep-alive connection from one that stalled mid-request).
+    pub fn pending(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Read and parse one request, honoring `lim`.
+    pub fn read_request(&mut self, lim: &Limits) -> Result<HttpRequest, HttpError> {
+        let head_end = loop {
+            if let Some(end) = find(&self.buf, b"\r\n\r\n") {
+                break end;
+            }
+            if self.buf.len() > lim.max_header_bytes {
+                return Err(HttpError::HeadersTooLarge);
+            }
+            self.fill()?;
+        };
+        if head_end + 4 > lim.max_header_bytes {
+            return Err(HttpError::HeadersTooLarge);
+        }
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+        self.buf.drain(..head_end + 4);
+
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or_default();
+        let mut parts = request_line.split(' ');
+        let method = parts.next().unwrap_or_default().to_string();
+        let path = parts.next().unwrap_or_default().to_string();
+        let version = parts.next().unwrap_or_default();
+        if method.is_empty()
+            || path.is_empty()
+            || parts.next().is_some()
+            || !method.chars().all(|c| c.is_ascii_uppercase())
+            || !version.starts_with("HTTP/1.")
+        {
+            return Err(HttpError::Bad(format!("malformed request line {request_line:?}")));
+        }
+
+        let mut headers = Vec::new();
+        for line in lines {
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| HttpError::Bad(format!("malformed header line {line:?}")))?;
+            if name.is_empty() || name.ends_with(' ') || name.ends_with('\t') {
+                return Err(HttpError::Bad(format!("malformed header name {name:?}")));
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+
+        let header = |name: &str| {
+            headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+        };
+        let mut keep_alive = version != "HTTP/1.0";
+        if let Some(conn) = header("connection") {
+            let conn = conn.to_ascii_lowercase();
+            if conn.contains("close") {
+                keep_alive = false;
+            } else if conn.contains("keep-alive") {
+                keep_alive = true;
+            }
+        }
+
+        let chunked = header("transfer-encoding")
+            .map(|v| v.to_ascii_lowercase().contains("chunked"))
+            .unwrap_or(false);
+        let body = if chunked {
+            self.read_chunked_body(lim)?
+        } else if let Some(cl) = header("content-length") {
+            let n: usize = cl
+                .trim()
+                .parse()
+                .map_err(|_| HttpError::Bad(format!("bad content-length {cl:?}")))?;
+            if n > lim.max_body_bytes {
+                return Err(HttpError::BodyTooLarge);
+            }
+            self.take(n)?
+        } else {
+            Vec::new()
+        };
+
+        Ok(HttpRequest { method, path, headers, body, keep_alive })
+    }
+
+    fn read_chunked_body(&mut self, lim: &Limits) -> Result<Vec<u8>, HttpError> {
+        let mut body = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            let size_hex = line.split(';').next().unwrap_or_default().trim();
+            let size = usize::from_str_radix(size_hex, 16)
+                .map_err(|_| HttpError::Bad(format!("bad chunk size {line:?}")))?;
+            if body.len() + size > lim.max_body_bytes {
+                return Err(HttpError::BodyTooLarge);
+            }
+            if size == 0 {
+                // Trailer section: header lines until a blank one.
+                loop {
+                    if self.read_line()?.is_empty() {
+                        break;
+                    }
+                }
+                return Ok(body);
+            }
+            body.extend_from_slice(&self.take(size)?);
+            if self.take(2)? != b"\r\n" {
+                return Err(HttpError::Bad("chunk data not CRLF-terminated".into()));
+            }
+        }
+    }
+
+    /// One CRLF-terminated line (CRLF consumed, not returned); bounded so
+    /// a hostile chunk header cannot grow the buffer unboundedly.
+    fn read_line(&mut self) -> Result<String, HttpError> {
+        loop {
+            if let Some(end) = find(&self.buf, b"\r\n") {
+                let line = String::from_utf8_lossy(&self.buf[..end]).into_owned();
+                self.buf.drain(..end + 2);
+                return Ok(line);
+            }
+            if self.buf.len() > 8 * 1024 {
+                return Err(HttpError::Bad("chunk/trailer line too long".into()));
+            }
+            self.fill().map_err(HttpError::mid_request)?;
+        }
+    }
+
+    /// Exactly `n` bytes off the front of the stream.
+    fn take(&mut self, n: usize) -> Result<Vec<u8>, HttpError> {
+        while self.buf.len() < n {
+            self.fill().map_err(HttpError::mid_request)?;
+        }
+        let rest = self.buf.split_off(n);
+        Ok(std::mem::replace(&mut self.buf, rest))
+    }
+
+    /// Pull more bytes off the stream into the buffer.
+    fn fill(&mut self) -> Result<(), HttpError> {
+        let mut chunk = [0u8; 4096];
+        match self.r.read(&mut chunk) {
+            Ok(0) => Err(if self.buf.is_empty() { HttpError::Closed } else { HttpError::Stalled }),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                Err(if self.buf.is_empty() { HttpError::Idle } else { HttpError::Stalled })
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Ok(()),
+            Err(e) => Err(HttpError::Io(e)),
+        }
+    }
+}
+
+impl HttpError {
+    /// Once a request's header section has been consumed, "no bytes
+    /// pending" no longer means idle/closed — the peer stalled mid-body.
+    fn mid_request(self) -> HttpError {
+        match self {
+            HttpError::Idle | HttpError::Closed => HttpError::Stalled,
+            other => other,
+        }
+    }
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// The HTTP status a structured serve error maps onto.
+pub fn status_for(code: ErrorCode) -> u32 {
+    match code {
+        ErrorCode::InvalidRequest => 400,
+        ErrorCode::Overloaded => 429,
+        ErrorCode::ShuttingDown => 503,
+        ErrorCode::DeadlineExceeded => 504,
+        ErrorCode::Internal => 500,
+    }
+}
+
+pub fn status_text(status: u32) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// The JSON error body every non-2xx API response carries:
+/// `{"error":{"code":...,"message":...[,"retry_after_ms":...]}}`.
+pub fn error_body(code: ErrorCode, message: &str, retry_after_ms: Option<u64>) -> String {
+    let mut fields = vec![
+        ("code", Json::str(code.as_str())),
+        ("message", Json::str(message)),
+    ];
+    if let Some(ms) = retry_after_ms {
+        fields.push(("retry_after_ms", Json::Int(ms as i64)));
+    }
+    let mut body = Json::obj(vec![("error", Json::obj(fields))]).to_string();
+    body.push('\n');
+    body
+}
+
+/// `Retry-After` is whole seconds; round the millisecond hint up so a
+/// client that honors it never retries early.
+pub fn retry_after_secs(retry_after_ms: u64) -> u64 {
+    let secs = retry_after_ms / 1000 + u64::from(retry_after_ms % 1000 != 0);
+    secs.max(1)
+}
+
+/// Write one complete response with `Content-Length` framing.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u32,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len()
+    );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write a structured serve error as an HTTP response (status per
+/// [`status_for`], `Retry-After` from the admission-control hint).
+pub fn write_error(
+    w: &mut impl Write,
+    code: ErrorCode,
+    message: &str,
+    retry_after_ms: Option<u64>,
+    keep_alive: bool,
+) -> io::Result<()> {
+    let mut extra = Vec::new();
+    if let Some(ms) = retry_after_ms {
+        extra.push(("Retry-After", retry_after_secs(ms).to_string()));
+    }
+    write_response(
+        w,
+        status_for(code),
+        "application/json",
+        &extra,
+        error_body(code, message, retry_after_ms).as_bytes(),
+        keep_alive,
+    )
+}
+
+/// Minimal blocking HTTP client over one connection: used by
+/// `servebench --http` and the conformance tests, so the bench drives the
+/// server through exactly the parser-visible wire format.
+pub fn http_call(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> io::Result<(u32, Vec<(String, String)>, Vec<u8>)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut stream = stream;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    read_http_response(&mut stream)
+}
+
+/// Parse one `(status, headers, body)` response off a stream.  The body is
+/// read to `Content-Length` when present, else to EOF (SSE responses
+/// arrive whole this way once the server closes).
+pub fn read_http_response(
+    r: &mut impl Read,
+) -> io::Result<(u32, Vec<(String, String)>, Vec<u8>)> {
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(end) = find(&raw, b"\r\n\r\n") {
+            break end;
+        }
+        match r.read(&mut chunk) {
+            Ok(0) => {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in response head"))
+            }
+            Ok(n) => raw.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    };
+    let head = String::from_utf8_lossy(&raw[..head_end]).into_owned();
+    let mut body: Vec<u8> = raw[head_end + 4..].to_vec();
+    let mut lines = head.split("\r\n");
+    let status: u32 = lines
+        .next()
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad status line"))?;
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok());
+    loop {
+        if let Some(cl) = content_length {
+            if body.len() >= cl {
+                body.truncate(cl);
+                break;
+            }
+        }
+        match r.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok((status, headers, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &[u8]) -> Result<HttpRequest, HttpError> {
+        Conn::new(raw).read_request(&Limits::default())
+    }
+
+    #[test]
+    fn parses_simple_get() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn parses_content_length_body_and_pipelining() {
+        let mut conn = Conn::new(
+            &b"POST /v1/score HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcdGET / HTTP/1.1\r\n\r\n"
+                [..],
+        );
+        let req = conn.read_request(&Limits::default()).unwrap();
+        assert_eq!(req.body, b"abcd");
+        // Bytes past the body belong to the next request.
+        let next = conn.read_request(&Limits::default()).unwrap();
+        assert_eq!(next.method, "GET");
+    }
+
+    #[test]
+    fn parses_chunked_body() {
+        let raw = b"POST /v1/score HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                    4\r\nWiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        let req = parse(raw).unwrap();
+        assert_eq!(req.body, b"Wikipedia");
+    }
+
+    #[test]
+    fn connection_header_overrides_version_default() {
+        let req = parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive);
+        let req = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!req.keep_alive, "HTTP/1.0 defaults to close");
+        let req = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn rejects_malformed_framing() {
+        assert!(matches!(parse(b"BLARG\r\n\r\n"), Err(HttpError::Bad(_))));
+        assert!(matches!(parse(b"GET\r\n\r\n"), Err(HttpError::Bad(_))));
+        assert!(matches!(parse(b"get / HTTP/1.1\r\n\r\n"), Err(HttpError::Bad(_))));
+        assert!(matches!(parse(b"GET / SPDY/3\r\n\r\n"), Err(HttpError::Bad(_))));
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"),
+            Err(HttpError::Bad(_))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: pony\r\n\r\n"),
+            Err(HttpError::Bad(_))
+        ));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n"),
+            Err(HttpError::Bad(_))
+        ));
+    }
+
+    #[test]
+    fn bounds_are_enforced() {
+        let lim = Limits { max_header_bytes: 64, max_body_bytes: 8 };
+        let big_header = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(256));
+        assert!(matches!(
+            Conn::new(big_header.as_bytes()).read_request(&lim),
+            Err(HttpError::HeadersTooLarge)
+        ));
+        let big_body = b"POST / HTTP/1.1\r\nContent-Length: 64\r\n\r\n";
+        assert!(matches!(
+            Conn::new(&big_body[..]).read_request(&lim),
+            Err(HttpError::BodyTooLarge)
+        ));
+        let big_chunk = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nff\r\n";
+        assert!(matches!(
+            Conn::new(&big_chunk[..]).read_request(&lim),
+            Err(HttpError::BodyTooLarge)
+        ));
+    }
+
+    #[test]
+    fn eof_classification() {
+        assert!(matches!(parse(b""), Err(HttpError::Closed)));
+        assert!(matches!(parse(b"GET / HT"), Err(HttpError::Stalled)));
+        assert!(matches!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nab"),
+            Err(HttpError::Stalled)
+        ));
+    }
+
+    #[test]
+    fn error_code_status_map_is_total() {
+        for code in ErrorCode::ALL {
+            let status = status_for(code);
+            assert!((400..=504).contains(&status), "{code:?} -> {status}");
+            assert_ne!(status_text(status), "Unknown");
+        }
+        assert_eq!(status_for(ErrorCode::InvalidRequest), 400);
+        assert_eq!(status_for(ErrorCode::Overloaded), 429);
+        assert_eq!(status_for(ErrorCode::ShuttingDown), 503);
+        assert_eq!(status_for(ErrorCode::DeadlineExceeded), 504);
+        assert_eq!(status_for(ErrorCode::Internal), 500);
+    }
+
+    #[test]
+    fn error_body_shape_and_retry_after() {
+        let body = error_body(ErrorCode::Overloaded, "queue full", Some(40));
+        let j = Json::parse(&body).unwrap();
+        let err = j.req("error").unwrap();
+        assert_eq!(err.req("code").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(err.req("retry_after_ms").unwrap().as_i64(), Some(40));
+        assert_eq!(retry_after_secs(40), 1, "sub-second hints round up to 1s");
+        assert_eq!(retry_after_secs(2_400), 3);
+    }
+
+    #[test]
+    fn response_writer_round_trips_through_response_reader() {
+        let mut wire = Vec::new();
+        write_response(
+            &mut wire,
+            429,
+            "application/json",
+            &[("Retry-After", "1".to_string())],
+            b"{}",
+            true,
+        )
+        .unwrap();
+        let (status, headers, body) = read_http_response(&mut &wire[..]).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, b"{}");
+        let get = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.clone());
+        assert_eq!(get("retry-after"), Some("1".to_string()));
+        assert_eq!(get("content-length"), Some("2".to_string()));
+        assert_eq!(get("connection"), Some("keep-alive".to_string()));
+    }
+}

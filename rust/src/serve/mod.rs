@@ -15,8 +15,13 @@
 //!   response routing.
 //! * [`protocol`] — line-delimited JSON over TCP (`generate` / `score` /
 //!   `info` / `shutdown`), built on [`crate::util::json`].
-//! * [`server`]   — `std::net::TcpListener` front end; [`client`] — the
-//!   matching blocking client.
+//! * [`http`] / [`sse`] — dependency-free HTTP/1.1 framing and
+//!   Server-Sent-Events streaming for the REST front door
+//!   (`POST /v1/generate`, `POST /v1/score`, `GET /metrics`,
+//!   `GET /healthz`), documented in `docs/http_api.md`.
+//! * [`server`]   — `std::net::TcpListener` front end (line-JSON + HTTP on
+//!   separate listeners, sharing one batcher); [`client`] — the matching
+//!   blocking client.
 //!
 //! CLI: `cce serve --checkpoint runs/web/final.ckpt --port 7343`, then
 //! `cce client --port 7343 --prompt "the"`.  `cce servebench` drives a
@@ -32,11 +37,13 @@
 pub mod batcher;
 pub mod client;
 pub mod engine;
+pub mod http;
 pub mod protocol;
 pub mod server;
+pub mod sse;
 
-pub use batcher::{BatchStats, Batcher, Job};
+pub use batcher::{BatchStats, Batcher, Job, StreamDelta, STREAM_CHANNEL_DEPTH};
 pub use client::{Client, ClientConfig, ClientStats, RetryPolicy};
 pub use engine::{ContextBag, Engine, GenOut, ScoreRes};
 pub use protocol::{ErrorCode, GenParams, Request, Response};
-pub use server::{serve, ServeConfig, Server};
+pub use server::{serve, serve_multi, ServeConfig, Server};

@@ -58,6 +58,11 @@ pub struct GenParams {
     pub deadline_ms: u64,
     /// Echo per-request stage timings (`timings` object) in the response.
     pub trace: bool,
+    /// Routing tag for multi-checkpoint servers (`--checkpoint tag=path`).
+    /// `None` routes to the server's default model; an unknown tag is an
+    /// `invalid_request`.  Stays off the wire when unset so single-model
+    /// deployments never see it.
+    pub model: Option<String>,
 }
 
 impl Default for GenParams {
@@ -70,7 +75,37 @@ impl Default for GenParams {
             seed: 0,
             deadline_ms: 0,
             trace: false,
+            model: None,
         }
+    }
+}
+
+impl GenParams {
+    /// Parse sampling parameters out of a request body (the `generate`
+    /// fields minus `op`) — shared by the line-JSON protocol and the HTTP
+    /// `POST /v1/generate` body, which carry the same field set.
+    pub fn from_json(j: &Json) -> Result<GenParams> {
+        let defaults = GenParams::default();
+        Ok(GenParams {
+            prompt: j
+                .get("prompt")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            max_tokens: get_usize(j, "max_tokens", defaults.max_tokens)?,
+            top_k: get_usize(j, "top_k", defaults.top_k)?,
+            temperature: match j.get("temperature") {
+                None => defaults.temperature,
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("temperature must be a number"))?
+                    as f32,
+            },
+            seed: get_u64_wire(j, "seed", 0)?,
+            deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
+            trace: get_trace(j),
+            model: get_model(j),
+        })
     }
 }
 
@@ -78,7 +113,7 @@ impl Default for GenParams {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Generate(GenParams),
-    Score { text: String, deadline_ms: u64, trace: bool },
+    Score { text: String, deadline_ms: u64, trace: bool, model: Option<String> },
     Info,
     Metrics,
     Shutdown,
@@ -102,15 +137,21 @@ impl Request {
                 if p.trace {
                     entries.push(("trace", Json::Bool(true)));
                 }
+                if let Some(m) = &p.model {
+                    entries.push(("model", Json::str(m)));
+                }
                 Json::obj(entries)
             }
-            Request::Score { text, deadline_ms, trace } => {
+            Request::Score { text, deadline_ms, trace, model } => {
                 let mut entries = vec![("op", Json::str("score")), ("text", Json::str(text))];
                 if *deadline_ms > 0 {
                     entries.push(("deadline_ms", Json::Int(*deadline_ms as i64)));
                 }
                 if *trace {
                     entries.push(("trace", Json::Bool(true)));
+                }
+                if let Some(m) = model {
+                    entries.push(("model", Json::str(m)));
                 }
                 Json::obj(entries)
             }
@@ -123,39 +164,8 @@ impl Request {
     pub fn from_json(j: &Json) -> Result<Request> {
         let op = j.req("op")?.as_str().ok_or_else(|| anyhow!("op must be a string"))?;
         match op {
-            "generate" => {
-                let defaults = GenParams::default();
-                Ok(Request::Generate(GenParams {
-                    prompt: j
-                        .get("prompt")
-                        .and_then(|v| v.as_str())
-                        .unwrap_or_default()
-                        .to_string(),
-                    max_tokens: get_usize(j, "max_tokens", defaults.max_tokens)?,
-                    top_k: get_usize(j, "top_k", defaults.top_k)?,
-                    temperature: match j.get("temperature") {
-                        None => defaults.temperature,
-                        Some(v) => v
-                            .as_f64()
-                            .ok_or_else(|| anyhow!("temperature must be a number"))?
-                            as f32,
-                    },
-                    seed: get_u64_wire(j, "seed", 0)?,
-                    deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
-                    trace: get_trace(j),
-                }))
-            }
-            "score" => {
-                let text = j
-                    .req("text")?
-                    .as_str()
-                    .ok_or_else(|| anyhow!("text must be a string"))?;
-                Ok(Request::Score {
-                    text: text.to_string(),
-                    deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
-                    trace: get_trace(j),
-                })
-            }
+            "generate" => Ok(Request::Generate(GenParams::from_json(j)?)),
+            "score" => score_from_json(j),
             "info" => Ok(Request::Info),
             "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
@@ -190,6 +200,30 @@ impl Request {
             _ => false,
         }
     }
+
+    /// The routing tag the request asked for, if any.
+    pub fn model(&self) -> Option<&str> {
+        match self {
+            Request::Generate(p) => p.model.as_deref(),
+            Request::Score { model, .. } => model.as_deref(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a `score` request body (the `score` fields minus `op`) — shared
+/// by the line-JSON protocol and the HTTP `POST /v1/score` body.
+pub fn score_from_json(j: &Json) -> Result<Request> {
+    let text = j
+        .req("text")?
+        .as_str()
+        .ok_or_else(|| anyhow!("text must be a string"))?;
+    Ok(Request::Score {
+        text: text.to_string(),
+        deadline_ms: get_u64_wire(j, "deadline_ms", 0)?,
+        trace: get_trace(j),
+        model: get_model(j),
+    })
 }
 
 /// Machine-readable failure class of an error response — what a client
@@ -438,6 +472,13 @@ fn get_trace(j: &Json) -> bool {
     j.get("trace").and_then(|v| v.as_bool()).unwrap_or(false)
 }
 
+/// Lenient `model` routing-tag parse: a missing or non-string tag routes
+/// to the default model (the server rejects *unknown* tags, not absent
+/// ones).
+fn get_model(j: &Json) -> Option<String> {
+    j.get("model").and_then(|v| v.as_str()).map(|s| s.to_string())
+}
+
 fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
     match j.get(key) {
         None => Ok(default),
@@ -484,12 +525,30 @@ mod tests {
                 seed: 42,
                 deadline_ms: 0,
                 trace: false,
+                model: None,
             }),
             Request::Generate(GenParams { deadline_ms: 250, ..GenParams::default() }),
             Request::Generate(GenParams { trace: true, ..GenParams::default() }),
-            Request::Score { text: "hello \"world\"\n".into(), deadline_ms: 0, trace: false },
-            Request::Score { text: "budgeted".into(), deadline_ms: 125, trace: false },
-            Request::Score { text: "traced".into(), deadline_ms: 0, trace: true },
+            Request::Generate(GenParams { model: Some("draft".into()), ..GenParams::default() }),
+            Request::Score {
+                text: "hello \"world\"\n".into(),
+                deadline_ms: 0,
+                trace: false,
+                model: None,
+            },
+            Request::Score {
+                text: "budgeted".into(),
+                deadline_ms: 125,
+                trace: false,
+                model: None,
+            },
+            Request::Score { text: "traced".into(), deadline_ms: 0, trace: true, model: None },
+            Request::Score {
+                text: "routed".into(),
+                deadline_ms: 0,
+                trace: false,
+                model: Some("big".into()),
+            },
             Request::Info,
             Request::Metrics,
             Request::Shutdown,
@@ -591,15 +650,29 @@ mod tests {
         let none = Request::Generate(GenParams::default());
         assert_eq!(none.deadline_ms(), None);
         assert!(!none.to_line().contains("deadline_ms"), "unset budget stays off the wire");
-        let some = Request::Score { text: "x".into(), deadline_ms: 75, trace: false };
+        let some = Request::Score { text: "x".into(), deadline_ms: 75, trace: false, model: None };
         assert_eq!(some.deadline_ms(), Some(75));
         assert_eq!(Request::parse(&some.to_line()).unwrap().deadline_ms(), Some(75));
         assert_eq!(Request::Info.deadline_ms(), None);
     }
 
     #[test]
+    fn model_tag_is_exposed_only_when_set() {
+        let none = Request::Generate(GenParams::default());
+        assert_eq!(none.model(), None);
+        assert!(!none.to_line().contains("model"), "unset tag stays off the wire");
+        let some = Request::Generate(GenParams { model: Some("a".into()), ..GenParams::default() });
+        assert_eq!(some.model(), Some("a"));
+        assert_eq!(Request::parse(&some.to_line()).unwrap().model(), Some("a"));
+        // Lenient parse: a non-string tag routes to the default model.
+        let weird = Request::parse(r#"{"op":"score","text":"x","model":7}"#).unwrap();
+        assert_eq!(weird.model(), None);
+        assert_eq!(Request::Info.model(), None);
+    }
+
+    #[test]
     fn trace_flag_is_exposed_only_when_set() {
-        let off = Request::Score { text: "x".into(), deadline_ms: 0, trace: false };
+        let off = Request::Score { text: "x".into(), deadline_ms: 0, trace: false, model: None };
         assert!(!off.trace());
         assert!(!off.to_line().contains("trace"), "unset trace stays off the wire");
         let on = Request::Generate(GenParams { trace: true, ..GenParams::default() });

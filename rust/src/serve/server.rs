@@ -1,46 +1,57 @@
-//! TCP front end: accept loop, per-connection line protocol, graceful
+//! TCP front end: accept loops, per-connection protocol handling, graceful
 //! shutdown.
 //!
-//! Dependency-free: [`std::net::TcpListener`] + one thread per connection
-//! reading newline-delimited JSON ([`super::protocol`]).  `generate` and
-//! `score` go through the micro-batcher ([`super::batcher`]); `info`,
-//! `metrics`, and `shutdown` are answered inline.  Binding port 0 picks an
-//! ephemeral port (the bound address is reported on [`Server::addr`]) —
-//! which is how the CI smoke test and the integration tests avoid port
-//! collisions.
+//! Two listeners share one batcher:
 //!
-//! Failure domains (PR 6): connections poll the socket with a short read
-//! timeout instead of blocking forever, so a stalled client holds a thread
-//! for at most [`ServeConfig::idle_timeout`] and shutdown never waits on a
-//! silent peer; writes are bounded too.  Errors carry structured codes
-//! ([`super::protocol::ErrorCode`]): a full queue answers `overloaded`
-//! with a live `retry_after_ms` hint, and [`Server::join`] drains in-flight
-//! work under [`ServeConfig::drain`] before stopping the workers.
+//! * the **line-JSON** listener ([`std::net::TcpListener`] + one thread per
+//!   connection reading newline-delimited JSON, [`super::protocol`]) — the
+//!   original wire format, kept for back-compat and the lowest-overhead
+//!   path for `cce client` / `cce servebench`;
+//! * the **HTTP/1.1** listener ([`super::http`] framing) — the REST front
+//!   door from the ROADMAP: `POST /v1/generate` (with `"stream":true`
+//!   emitting one SSE event per token, [`super::sse`]), `POST /v1/score`,
+//!   `GET /metrics` (Prometheus text exposition), and a drain-aware
+//!   `GET /healthz`.  This folds the PR 7 standalone metrics exporter into
+//!   the full API server; [`ServeConfig::metrics_addr`] survives as an
+//!   alias for [`ServeConfig::http_addr`].
 //!
-//! Telemetry (PR 7): every answered line feeds the batcher's `serve_*`
-//! registry (request count, end-to-end and serialize-time histograms);
-//! responses to requests that set `"trace":true` gain a spliced `timings`
-//! object.  With [`ServeConfig::metrics_addr`] set, a minimal hand-rolled
-//! HTTP/1.1 listener — the first concrete slice of the ROADMAP front door
-//! — serves `GET /metrics` (Prometheus text exposition merging the serve
-//! registry, the process-global exec/train registry, and engine gauges)
-//! and `GET /healthz` (drain-aware: 200 while serving, 503 once shutdown
-//! began).  The exporter keeps answering through the drain window and
-//! stops only after [`Server::join`] finishes.
+//! Binding port 0 picks an ephemeral port (bound addresses are reported on
+//! [`Server::addr`] / [`Server::http_addr`]) — which is how the CI smoke
+//! test and the integration tests avoid port collisions.
+//!
+//! Failure domains (PR 6) apply to both protocols: connections poll the
+//! socket with a short read timeout instead of blocking forever, so a
+//! stalled client holds a thread for at most [`ServeConfig::idle_timeout`]
+//! and shutdown never waits on a silent peer; writes are bounded too.
+//! Errors carry structured codes ([`super::protocol::ErrorCode`]); the
+//! HTTP layer translates them ([`super::http::status_for`]): a full queue
+//! answers 429 with a live `Retry-After`, drain answers 503, a
+//! queued-past-deadline request 504.  [`Server::join`] drains in-flight
+//! work under [`ServeConfig::drain`] before stopping the workers; the HTTP
+//! listener keeps answering `/healthz` 503 through the drain window and
+//! stops last.
+//!
+//! Multi-model routing: [`serve_multi`] loads several checkpoints behind
+//! one server.  The first entry is the default; requests pick an engine
+//! with their `"model"` field (unknown tags are `invalid_request`).  All
+//! models share the batcher's queue and admission control — the batcher
+//! splits each batch into per-engine kernel sub-batches.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::obs::{self, StageTimings};
-use crate::serve::batcher::{Batcher, Job};
+use crate::obs::{self, Counter, Gauge, Histogram, Registry, StageTimings};
+use crate::serve::batcher::{Batcher, Job, STREAM_CHANNEL_DEPTH};
 use crate::serve::engine::Engine;
-use crate::serve::protocol::{ErrorCode, Request, Response};
+use crate::serve::http::{self, Conn, HttpError, HttpRequest, Limits};
+use crate::serve::protocol::{score_from_json, ErrorCode, GenParams, Request, Response};
+use crate::serve::sse::SseWriter;
 use crate::util::faults;
 use crate::util::json::Json;
 
@@ -52,8 +63,8 @@ const READ_POLL: Duration = Duration::from_millis(200);
 /// wedge its connection thread past this.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Accept-poll cadence of the metrics HTTP listener.
-const METRICS_POLL: Duration = Duration::from_millis(50);
+/// Accept-poll cadence of the HTTP listener.
+const HTTP_ACCEPT_POLL: Duration = Duration::from_millis(50);
 
 /// Server + batcher knobs (`cce serve` flags map 1:1).
 #[derive(Debug, Clone)]
@@ -76,9 +87,14 @@ pub struct ServeConfig {
     /// Graceful-shutdown budget: how long [`Server::join`] waits for
     /// in-flight jobs to finish before stopping the workers.
     pub drain: Duration,
-    /// Bind an HTTP exporter here (`host:port`, port 0 = ephemeral)
-    /// serving `GET /metrics` + `GET /healthz`.  `None` = no exporter.
+    /// Legacy alias for [`ServeConfig::http_addr`] (PR 7 shipped the
+    /// metrics exporter standalone; it is now one route of the full HTTP
+    /// server).  Used only when `http_addr` is `None`.
     pub metrics_addr: Option<String>,
+    /// Bind the HTTP/1.1 API listener here (`host:port`, port 0 =
+    /// ephemeral): `POST /v1/generate`, `POST /v1/score`, `GET /metrics`,
+    /// `GET /healthz`.  `None` = line-JSON only.
+    pub http_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -93,8 +109,90 @@ impl Default for ServeConfig {
             idle_timeout: Duration::from_secs(300),
             drain: Duration::from_secs(5),
             metrics_addr: None,
+            http_addr: None,
         }
     }
+}
+
+/// Model table: ordered `(tag, engine)` pairs; the first entry is the
+/// default route.  Shared read-only by both listeners.
+struct Router {
+    models: Vec<(String, Arc<Engine>)>,
+}
+
+impl Router {
+    fn default_engine(&self) -> &Arc<Engine> {
+        &self.models[0].1
+    }
+
+    /// Map a request's `"model"` tag onto an engine.  `None` routes to the
+    /// default; an unknown tag is the caller's `invalid_request`.
+    fn resolve(&self, tag: Option<&str>) -> std::result::Result<Arc<Engine>, String> {
+        match tag {
+            None => Ok(self.models[0].1.clone()),
+            Some(t) => self
+                .models
+                .iter()
+                .find(|(name, _)| name == t)
+                .map(|(_, e)| e.clone())
+                .ok_or_else(|| {
+                    let known: Vec<&str> =
+                        self.models.iter().map(|(name, _)| name.as_str()).collect();
+                    format!("unknown model {t:?} (loaded: {})", known.join(", "))
+                }),
+        }
+    }
+}
+
+/// HTTP front-door telemetry, registered on the batcher's registry so
+/// `GET /metrics` and `{"op":"metrics"}` export it with everything else.
+struct HttpStats {
+    /// `serve_http_requests_total`
+    requests: Arc<Counter>,
+    /// `serve_http_errors_total`
+    errors: Arc<Counter>,
+    /// `serve_http_sse_events_total`
+    sse_events: Arc<Counter>,
+    /// `serve_http_connections`
+    connections: Arc<Gauge>,
+    /// `serve_http_request_us`
+    request_us: Arc<Histogram>,
+}
+
+impl HttpStats {
+    fn new(r: &Registry) -> HttpStats {
+        HttpStats {
+            requests: r.counter(
+                "serve_http_requests_total",
+                "HTTP requests answered, any route or status",
+            ),
+            errors: r.counter("serve_http_errors_total", "HTTP responses with status >= 400"),
+            sse_events: r.counter(
+                "serve_http_sse_events_total",
+                "SSE events written (per-token deltas + summaries + terminal [DONE])",
+            ),
+            connections: r.gauge("serve_http_connections", "HTTP connections currently open"),
+            request_us: r.histogram(
+                "serve_http_request_us",
+                "HTTP request latency, request parsed to response written, microseconds",
+            ),
+        }
+    }
+}
+
+/// Everything an HTTP connection thread needs, behind one `Arc`.
+struct HttpCtx {
+    router: Arc<Router>,
+    batcher: Arc<Batcher>,
+    stats: HttpStats,
+    /// The server-wide stop flag: set → `/healthz` answers 503 and API
+    /// routes answer `shutting_down`.
+    draining: Arc<AtomicBool>,
+    /// Stops the HTTP listener — separate from `draining` so `/healthz`
+    /// keeps answering through the drain window.
+    http_stop: Arc<AtomicBool>,
+    idle_timeout: Duration,
+    limits: Limits,
 }
 
 /// A running server.  Dropping the handle does NOT stop it; call
@@ -102,63 +200,84 @@ impl Default for ServeConfig {
 pub struct Server {
     pub addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
-    metrics: Option<JoinHandle<()>>,
-    metrics_addr: Option<SocketAddr>,
+    http: Option<JoinHandle<()>>,
+    http_addr: Option<SocketAddr>,
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
-    /// Stops the metrics exporter — separate from `stop` so `/healthz`
+    /// Stops the HTTP listener — separate from `stop` so `/healthz`
     /// keeps answering 503 through the drain window.
-    metrics_stop: Arc<AtomicBool>,
+    http_stop: Arc<AtomicBool>,
     drain: Duration,
 }
 
-/// Bind, spawn the batcher + accept loop (+ the metrics exporter when
-/// configured), and return immediately.
+/// Single-model [`serve_multi`]: the engine serves every request under the
+/// tag `"default"`.
 pub fn serve(engine: Arc<Engine>, cfg: &ServeConfig) -> Result<Server> {
+    serve_multi(vec![("default".to_string(), engine)], cfg)
+}
+
+/// Bind, spawn the batcher + accept loop (+ the HTTP listener when
+/// configured), and return immediately.  `models` is an ordered
+/// `(tag, engine)` table; the first entry is the default route.
+pub fn serve_multi(models: Vec<(String, Arc<Engine>)>, cfg: &ServeConfig) -> Result<Server> {
+    if models.is_empty() {
+        bail!("serve_multi needs at least one model");
+    }
+    for (i, (tag, _)) in models.iter().enumerate() {
+        if models[..i].iter().any(|(seen, _)| seen == tag) {
+            bail!("duplicate model tag {tag:?}");
+        }
+    }
+    let router = Arc::new(Router { models });
     let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
         .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let metrics_stop = Arc::new(AtomicBool::new(false));
+    let http_stop = Arc::new(AtomicBool::new(false));
     let batcher = Arc::new(Batcher::start(
-        engine.clone(),
+        router.default_engine().clone(),
         cfg.workers,
         cfg.max_batch,
         cfg.max_wait,
         cfg.queue_depth,
     ));
-    let (metrics, metrics_addr) = match &cfg.metrics_addr {
+    let http_spec = cfg.http_addr.as_ref().or(cfg.metrics_addr.as_ref());
+    let (http, http_addr) = match http_spec {
         None => (None, None),
         Some(spec) => {
-            let http = TcpListener::bind(spec.as_str())
-                .with_context(|| format!("binding metrics listener {spec}"))?;
-            let http_addr = http.local_addr()?;
-            let engine = engine.clone();
-            let batcher = batcher.clone();
-            let draining = stop.clone();
-            let metrics_stop = metrics_stop.clone();
-            let handle = std::thread::spawn(move || {
-                metrics_loop(http, &engine, &batcher, &draining, &metrics_stop)
+            let http_listener = TcpListener::bind(spec.as_str())
+                .with_context(|| format!("binding http listener {spec}"))?;
+            let bound = http_listener.local_addr()?;
+            let ctx = Arc::new(HttpCtx {
+                router: router.clone(),
+                batcher: batcher.clone(),
+                stats: HttpStats::new(batcher.stats().registry()),
+                draining: stop.clone(),
+                http_stop: http_stop.clone(),
+                idle_timeout: cfg.idle_timeout,
+                limits: Limits::default(),
             });
-            (Some(handle), Some(http_addr))
+            let handle = std::thread::spawn(move || http_loop(http_listener, &ctx));
+            (Some(handle), Some(bound))
         }
     };
     let accept = {
+        let router = router.clone();
         let batcher = batcher.clone();
         let stop = stop.clone();
         let idle_timeout = cfg.idle_timeout;
         std::thread::spawn(move || {
-            accept_loop(listener, addr, engine, batcher, stop, idle_timeout)
+            accept_loop(listener, addr, router, batcher, stop, idle_timeout)
         })
     };
     Ok(Server {
         addr,
         accept: Some(accept),
-        metrics,
-        metrics_addr,
+        http,
+        http_addr,
         batcher,
         stop,
-        metrics_stop,
+        http_stop,
         drain: cfg.drain,
     })
 }
@@ -172,16 +291,22 @@ impl Server {
         let _ = TcpStream::connect(self.addr);
     }
 
-    /// Where the HTTP exporter listens, when one was configured.
+    /// Where the HTTP listener is bound, when one was configured.
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http_addr
+    }
+
+    /// Legacy name for [`Server::http_addr`]: `GET /metrics` now lives on
+    /// the full HTTP listener.
     pub fn metrics_addr(&self) -> Option<SocketAddr> {
-        self.metrics_addr
+        self.http_addr
     }
 
     /// Wait for the accept loop to exit, drain in-flight jobs under the
     /// configured [`ServeConfig::drain`] budget, then stop the workers.
     /// Once the accept loop is down no new work can arrive, so the drain
     /// is monotone; if the budget runs out the remaining jobs are dropped
-    /// and their clients observe `shutting_down`.  The metrics exporter
+    /// and their clients observe `shutting_down`.  The HTTP listener
     /// answers `/healthz` 503 through the drain and stops last.
     pub fn join(mut self) -> Result<()> {
         if let Some(handle) = self.accept.take() {
@@ -195,8 +320,8 @@ impl Server {
             );
         }
         self.batcher.shutdown();
-        self.metrics_stop.store(true, Ordering::SeqCst);
-        if let Some(handle) = self.metrics.take() {
+        self.http_stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.http.take() {
             let _ = handle.join();
         }
         Ok(())
@@ -206,7 +331,7 @@ impl Server {
 fn accept_loop(
     listener: TcpListener,
     addr: SocketAddr,
-    engine: Arc<Engine>,
+    router: Arc<Router>,
     batcher: Arc<Batcher>,
     stop: Arc<AtomicBool>,
     idle_timeout: Duration,
@@ -219,23 +344,24 @@ fn accept_loop(
             Ok(stream) => stream,
             Err(_) => continue,
         };
-        let engine = engine.clone();
+        let router = router.clone();
         let batcher = batcher.clone();
         let stop = stop.clone();
         // One thread per connection: connections are long-lived and few at
         // this substrate's scale; concurrency inside a connection comes
         // from the batcher, not from here.
         std::thread::spawn(move || {
-            connection(stream, addr, &engine, &batcher, &stop, idle_timeout)
+            connection(stream, addr, &router, &batcher, &stop, idle_timeout)
         });
     }
 }
 
-/// Serve one connection until EOF, error, idle timeout, or shutdown.
+/// Serve one line-JSON connection until EOF, error, idle timeout, or
+/// shutdown.
 fn connection(
     stream: TcpStream,
     addr: SocketAddr,
-    engine: &Engine,
+    router: &Router,
     batcher: &Batcher,
     stop: &AtomicBool,
     idle_timeout: Duration,
@@ -262,7 +388,7 @@ fn connection(
                 // serve what arrived, then hang up.
                 let at_eof = n == 0 || !line.ends_with('\n');
                 if !line.trim().is_empty()
-                    && handle_line(line.trim(), &mut writer, addr, engine, batcher, stop).is_err()
+                    && handle_line(line.trim(), &mut writer, addr, router, batcher, stop).is_err()
                 {
                     return;
                 }
@@ -295,7 +421,7 @@ fn handle_line(
     line: &str,
     writer: &mut TcpStream,
     addr: SocketAddr,
-    engine: &Engine,
+    router: &Router,
     batcher: &Batcher,
     stop: &AtomicBool,
 ) -> std::result::Result<(), ()> {
@@ -307,8 +433,8 @@ fn handle_line(
         Err(err) => {
             (Response::err(ErrorCode::InvalidRequest, format!("bad request: {err:#}")), None)
         }
-        Ok(Request::Info) => (Response::Info(info_fields(engine, batcher)), None),
-        Ok(Request::Metrics) => (Response::Metrics(metrics_fields(engine, batcher)), None),
+        Ok(Request::Info) => (Response::Info(info_fields(router, batcher)), None),
+        Ok(Request::Metrics) => (Response::Metrics(metrics_fields(router, batcher)), None),
         Ok(Request::Shutdown) => {
             stats.requests.inc();
             let _ = write_json(writer, &Response::Shutdown.to_json());
@@ -316,7 +442,7 @@ fn handle_line(
             let _ = TcpStream::connect(addr); // wake accept()
             return Err(());
         }
-        Ok(request) => dispatch(request, batcher, stop),
+        Ok(request) => dispatch(request, router, batcher, stop),
     };
     // Serialize + write under the stopwatch; the serialize span can only
     // live in the histogram — it cannot be echoed inside the response it
@@ -339,14 +465,32 @@ fn handle_line(
 /// reply (response + optional stage timings).
 fn dispatch(
     request: Request,
+    router: &Router,
     batcher: &Batcher,
     stop: &AtomicBool,
 ) -> (Response, Option<StageTimings>) {
     if stop.load(Ordering::SeqCst) {
         return (Response::err(ErrorCode::ShuttingDown, "server is shutting down"), None);
     }
+    let engine = match router.resolve(request.model()) {
+        Ok(engine) => engine,
+        Err(msg) => return (Response::err(ErrorCode::InvalidRequest, msg), None),
+    };
+    wait_reply(request, engine, batcher)
+}
+
+/// Submit one already-routed job and block on its reply.  Shared by the
+/// line-JSON dispatch and the non-streaming HTTP routes so both protocols
+/// see identical admission-control and shutdown semantics.
+fn wait_reply(
+    request: Request,
+    engine: Arc<Engine>,
+    batcher: &Batcher,
+) -> (Response, Option<StageTimings>) {
     let (tx, rx) = mpsc::channel();
-    match batcher.submit(Job::new(request, tx)) {
+    let mut job = Job::new(request, tx);
+    job.engine = Some(engine);
+    match batcher.submit(job) {
         // Admission control: shed at the door with a live retry hint
         // rather than buffering unboundedly.
         Err(_) => {
@@ -372,12 +516,16 @@ fn dispatch(
     }
 }
 
-fn info_fields(engine: &Engine, batcher: &Batcher) -> Json {
+fn info_fields(router: &Router, batcher: &Batcher) -> Json {
     let stats = batcher.stats();
-    let mut fields: Vec<(String, Json)> = match engine.info_json() {
+    let mut fields: Vec<(String, Json)> = match router.default_engine().info_json() {
         Json::Object(entries) => entries,
         other => vec![("model_info".into(), other)],
     };
+    fields.push((
+        "models".into(),
+        Json::Array(router.models.iter().map(|(tag, _)| Json::str(tag)).collect()),
+    ));
     fields.push(("batches".into(), Json::Int(stats.batches.get() as i64)));
     fields.push(("batched_jobs".into(), Json::Int(stats.jobs.get() as i64)));
     fields.push(("max_batch_observed".into(), Json::Int(stats.max_batch.get())));
@@ -387,126 +535,443 @@ fn info_fields(engine: &Engine, batcher: &Batcher) -> Json {
     Json::Object(fields)
 }
 
+/// Engine-side totals summed across every loaded model (single-model
+/// servers see exactly the old per-engine numbers).
+fn engine_totals(router: &Router) -> (u64, u64) {
+    let served = router.models.iter().map(|(_, e)| e.served()).sum();
+    let peak = router.models.iter().map(|(_, e)| e.peak_workspace_bytes()).sum();
+    (served, peak)
+}
+
 /// The `{"op":"metrics"}` payload: serve registry + process-global
-/// exec/train registry + the engine's own gauges, one field per family.
-fn metrics_fields(engine: &Engine, batcher: &Batcher) -> Json {
+/// exec/train registry + the engines' own gauges, one field per family.
+fn metrics_fields(router: &Router, batcher: &Batcher) -> Json {
     let mut fields = batcher.stats().registry().to_json_fields();
     fields.extend(obs::global().to_json_fields());
-    fields.push((
-        "serve_engine_requests_served_total".into(),
-        Json::Int(engine.served() as i64),
-    ));
-    fields.push((
-        "serve_engine_peak_workspace_bytes".into(),
-        Json::Int(engine.peak_workspace_bytes() as i64),
-    ));
+    let (served, peak) = engine_totals(router);
+    fields.push(("serve_engine_requests_served_total".into(), Json::Int(served as i64)));
+    fields.push(("serve_engine_peak_workspace_bytes".into(), Json::Int(peak as i64)));
     Json::Object(fields)
 }
 
 /// The `GET /metrics` body: the same three sources in Prometheus text
 /// exposition format.
-fn metrics_prometheus(engine: &Engine, batcher: &Batcher) -> String {
+fn metrics_prometheus(router: &Router, batcher: &Batcher) -> String {
     use std::fmt::Write as _;
     let mut out = String::new();
     batcher.stats().registry().render_prometheus(&mut out);
     obs::global().render_prometheus(&mut out);
+    let (served, peak) = engine_totals(router);
     let _ = writeln!(
         out,
-        "# HELP serve_engine_requests_served_total Requests the engine finished kernels for"
+        "# HELP serve_engine_requests_served_total Requests the engines finished kernels for"
     );
     let _ = writeln!(out, "# TYPE serve_engine_requests_served_total counter");
-    let _ = writeln!(out, "serve_engine_requests_served_total {}", engine.served());
+    let _ = writeln!(out, "serve_engine_requests_served_total {served}");
     let _ = writeln!(
         out,
         "# HELP serve_engine_peak_workspace_bytes Engine kernel + hidden-buffer high-water mark"
     );
     let _ = writeln!(out, "# TYPE serve_engine_peak_workspace_bytes gauge");
-    let _ = writeln!(
-        out,
-        "serve_engine_peak_workspace_bytes {}",
-        engine.peak_workspace_bytes()
-    );
+    let _ = writeln!(out, "serve_engine_peak_workspace_bytes {peak}");
     out
 }
 
-/// Accept loop of the metrics exporter: nonblocking accept + short sleep
-/// so the thread notices `metrics_stop` promptly, one request per
-/// connection (`Connection: close`).
-fn metrics_loop(
-    listener: TcpListener,
-    engine: &Engine,
-    batcher: &Batcher,
-    draining: &AtomicBool,
-    metrics_stop: &AtomicBool,
-) {
+/// Accept loop of the HTTP listener: nonblocking accept + short sleep so
+/// the thread notices `http_stop` promptly.  Keeps accepting through the
+/// drain window (that is what makes `/healthz` useful to a load balancer)
+/// and exits only once [`Server::join`] sets `http_stop`.
+fn http_loop(listener: TcpListener, ctx: &Arc<HttpCtx>) {
     if listener.set_nonblocking(true).is_err() {
         return;
     }
     loop {
         match listener.accept() {
             Ok((stream, _)) => {
-                // Blocking per-request I/O with bounded timeouts; requests
-                // are tiny and rare (scrapes), so inline handling is fine.
                 let _ = stream.set_nonblocking(false);
-                serve_http(stream, engine, batcher, draining);
+                let ctx = ctx.clone();
+                // Thread per connection, like the line listener: an SSE
+                // stream holds its connection for the whole generation.
+                std::thread::spawn(move || http_conn(stream, &ctx));
             }
             Err(_) => {
-                if metrics_stop.load(Ordering::SeqCst) {
+                if ctx.http_stop.load(Ordering::SeqCst) {
                     return;
                 }
-                std::thread::sleep(METRICS_POLL);
+                std::thread::sleep(HTTP_ACCEPT_POLL);
             }
         }
     }
 }
 
-/// Answer one HTTP/1.1 request: `GET /metrics`, `GET /healthz`, else 404.
-fn serve_http(stream: TcpStream, engine: &Engine, batcher: &Batcher, draining: &AtomicBool) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+/// Serve one HTTP connection: keep-alive request loop with the same
+/// poll-for-stop / idle-timeout discipline as the line listener.
+fn http_conn(stream: TcpStream, ctx: &HttpCtx) {
+    ctx.stats.connections.add(1);
+    http_conn_loop(stream, ctx);
+    ctx.stats.connections.add(-1);
+}
+
+fn http_conn_loop(stream: TcpStream, ctx: &HttpCtx) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-    let mut reader = match stream.try_clone() {
-        Ok(clone) => BufReader::new(clone),
+    let reader = match stream.try_clone() {
+        Ok(clone) => clone,
         Err(_) => return,
     };
-    let mut request_line = String::new();
-    if reader.read_line(&mut request_line).is_err() {
-        return;
-    }
-    // Drain the (bounded) header block so the peer observes a clean close.
-    let mut header = String::new();
-    for _ in 0..64 {
-        header.clear();
-        match reader.read_line(&mut header) {
-            Ok(n) if n > 0 && !header.trim().is_empty() => continue,
-            _ => break,
-        }
-    }
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
-    let (status, content_type, body) = match (method, path) {
-        ("GET", "/metrics") => (
-            "200 OK",
-            "text/plain; version=0.0.4; charset=utf-8",
-            metrics_prometheus(engine, batcher),
-        ),
-        ("GET", "/healthz") => {
-            if draining.load(Ordering::SeqCst) {
-                ("503 Service Unavailable", "text/plain; charset=utf-8", "draining\n".into())
-            } else {
-                ("200 OK", "text/plain; charset=utf-8", "ok\n".into())
-            }
-        }
-        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".into()),
-    };
+    let mut conn = Conn::new(reader);
     let mut writer = stream;
-    let head = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
-    );
-    let _ = writer.write_all(head.as_bytes());
-    let _ = writer.write_all(body.as_bytes());
-    let _ = writer.flush();
+    let mut idle_since = Instant::now();
+    loop {
+        match conn.read_request(&ctx.limits) {
+            Ok(req) => {
+                idle_since = Instant::now();
+                match handle_http_request(req, &mut writer, ctx) {
+                    Ok(true) => {}
+                    _ => return,
+                }
+            }
+            // Quiet keep-alive connection: poll the stop flag and the idle
+            // budget, then resume (buffered partial bytes are kept).
+            Err(HttpError::Idle) => {
+                if ctx.http_stop.load(Ordering::SeqCst)
+                    || idle_since.elapsed() >= ctx.idle_timeout
+                {
+                    return;
+                }
+            }
+            Err(HttpError::Closed) => return,
+            // The peer went silent (or EOF'd) mid-request; a request must
+            // arrive promptly once its first byte does.
+            Err(HttpError::Stalled) => {
+                let _ = http::write_response(
+                    &mut writer,
+                    408,
+                    "text/plain; charset=utf-8",
+                    &[],
+                    b"request timed out\n",
+                    false,
+                );
+                return;
+            }
+            Err(HttpError::HeadersTooLarge) => {
+                ctx.stats.errors.inc();
+                let _ = http::write_response(
+                    &mut writer,
+                    431,
+                    "text/plain; charset=utf-8",
+                    &[],
+                    b"header section too large\n",
+                    false,
+                );
+                return;
+            }
+            Err(HttpError::BodyTooLarge) => {
+                ctx.stats.errors.inc();
+                let _ = http::write_response(
+                    &mut writer,
+                    413,
+                    "text/plain; charset=utf-8",
+                    &[],
+                    b"body too large\n",
+                    false,
+                );
+                return;
+            }
+            Err(HttpError::Bad(msg)) => {
+                ctx.stats.errors.inc();
+                let _ = http::write_error(
+                    &mut writer,
+                    ErrorCode::InvalidRequest,
+                    &format!("malformed http request: {msg}"),
+                    None,
+                    false,
+                );
+                return;
+            }
+            Err(HttpError::Io(_)) => return,
+        }
+    }
+}
+
+/// Answer one parsed HTTP request.  `Ok(true)` keeps the connection open
+/// for the next request.
+fn handle_http_request(
+    req: HttpRequest,
+    writer: &mut TcpStream,
+    ctx: &HttpCtx,
+) -> io::Result<bool> {
+    // Chaos site: simulate a stalled connection handler (same site as the
+    // line listener, so `conn.stall_ms` covers both protocols).
+    faults::stall("conn.stall_ms");
+    let started = Instant::now();
+    ctx.stats.requests.inc();
+    let keep_req = req.keep_alive;
+    let method = req.method.clone();
+    let path = req.path.clone();
+    let (status, keep) = match (method.as_str(), path.as_str()) {
+        ("GET", "/metrics") => {
+            let body = metrics_prometheus(&ctx.router, &ctx.batcher);
+            http::write_response(
+                writer,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                &[],
+                body.as_bytes(),
+                keep_req,
+            )?;
+            (200, keep_req)
+        }
+        ("GET", "/healthz") => {
+            let (status, body): (u32, &[u8]) = if ctx.draining.load(Ordering::SeqCst) {
+                (503, b"draining\n")
+            } else {
+                (200, b"ok\n")
+            };
+            http::write_response(writer, status, "text/plain; charset=utf-8", &[], body, keep_req)?;
+            (status, keep_req)
+        }
+        ("POST", "/v1/generate") => handle_generate(req, writer, ctx)?,
+        ("POST", "/v1/score") => handle_score(req, writer, ctx)?,
+        (_, "/metrics" | "/healthz" | "/v1/generate" | "/v1/score") => {
+            http::write_response(
+                writer,
+                405,
+                "text/plain; charset=utf-8",
+                &[],
+                b"method not allowed\n",
+                keep_req,
+            )?;
+            (405, keep_req)
+        }
+        _ => {
+            http::write_response(
+                writer,
+                404,
+                "text/plain; charset=utf-8",
+                &[],
+                b"not found\n",
+                keep_req,
+            )?;
+            (404, keep_req)
+        }
+    };
+    if status >= 400 {
+        ctx.stats.errors.inc();
+    }
+    ctx.stats.request_us.record(started.elapsed().as_micros() as u64);
+    Ok(keep)
+}
+
+/// Decode the JSON body of an API request.
+fn parse_body(req: &HttpRequest) -> std::result::Result<Json, String> {
+    let text =
+        std::str::from_utf8(&req.body).map_err(|_| "request body is not UTF-8".to_string())?;
+    Json::parse(text).map_err(|err| format!("bad JSON body: {err:#}"))
+}
+
+/// `X-CCE-Deadline-Ms` / `X-CCE-Trace` fill in `deadline_ms` / `trace`
+/// when the body left them unset; body fields are canonical and win.
+fn apply_header_overrides(req: &HttpRequest, deadline_ms: &mut u64, trace: &mut bool) {
+    if *deadline_ms == 0 {
+        if let Some(v) =
+            req.header("x-cce-deadline-ms").and_then(|v| v.trim().parse::<u64>().ok())
+        {
+            *deadline_ms = v;
+        }
+    }
+    if !*trace {
+        if let Some(v) = req.header("x-cce-trace") {
+            let v = v.trim();
+            *trace = v == "1" || v.eq_ignore_ascii_case("true");
+        }
+    }
+}
+
+/// Write a batcher [`Response`] as an HTTP response: errors map through
+/// [`http::status_for`] (with `Retry-After` on 429), successes are the
+/// line-protocol JSON body (plus spliced `timings`) with a trailing
+/// newline, status 200.
+fn write_api_response(
+    writer: &mut TcpStream,
+    response: Response,
+    timings: Option<StageTimings>,
+    keep: bool,
+) -> io::Result<(u32, bool)> {
+    if let Response::Error { code, message, retry_after_ms } = response {
+        let status = http::status_for(code);
+        http::write_error(writer, code, &message, retry_after_ms, keep)?;
+        return Ok((status, keep));
+    }
+    let mut json = response.to_json();
+    if let Some(t) = timings {
+        if let Json::Object(entries) = &mut json {
+            entries.push(("timings".to_string(), t.to_json()));
+        }
+    }
+    let mut body = json.to_string();
+    body.push('\n');
+    http::write_response(writer, 200, "application/json", &[], body.as_bytes(), keep)?;
+    Ok((200, keep))
+}
+
+/// An error shipped inside an established SSE stream (the `200 OK` is
+/// already on the wire): the non-streaming error body as a single-line
+/// `data:` payload.
+fn sse_error_event(code: ErrorCode, message: &str, retry_after_ms: Option<u64>) -> String {
+    http::error_body(code, message, retry_after_ms).trim_end().to_string()
+}
+
+/// `POST /v1/generate`: non-streaming waits the batcher reply out and
+/// answers JSON; `"stream":true` switches the connection to SSE and
+/// forwards per-token deltas straight off the lockstep decode loop.
+fn handle_generate(
+    req: HttpRequest,
+    writer: &mut TcpStream,
+    ctx: &HttpCtx,
+) -> io::Result<(u32, bool)> {
+    let keep = req.keep_alive;
+    let body = match parse_body(&req) {
+        Ok(j) => j,
+        Err(msg) => {
+            http::write_error(writer, ErrorCode::InvalidRequest, &msg, None, keep)?;
+            return Ok((400, keep));
+        }
+    };
+    let stream = body.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    let mut params = match GenParams::from_json(&body) {
+        Ok(p) => p,
+        Err(err) => {
+            let msg = format!("bad request: {err:#}");
+            http::write_error(writer, ErrorCode::InvalidRequest, &msg, None, keep)?;
+            return Ok((400, keep));
+        }
+    };
+    apply_header_overrides(&req, &mut params.deadline_ms, &mut params.trace);
+    let engine = match ctx.router.resolve(params.model.as_deref()) {
+        Ok(engine) => engine,
+        Err(msg) => {
+            http::write_error(writer, ErrorCode::InvalidRequest, &msg, None, keep)?;
+            return Ok((400, keep));
+        }
+    };
+    if ctx.draining.load(Ordering::SeqCst) {
+        http::write_error(writer, ErrorCode::ShuttingDown, "server is shutting down", None, keep)?;
+        return Ok((503, keep));
+    }
+    if !stream {
+        let (response, timings) = wait_reply(Request::Generate(params), engine, &ctx.batcher);
+        return write_api_response(writer, response, timings, keep);
+    }
+
+    // Streaming path.  Admission control still answers plain HTTP (the
+    // stream has not started); once the SSE head is written every outcome
+    // — including errors — travels as events.
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let (delta_tx, delta_rx) = mpsc::sync_channel(STREAM_CHANNEL_DEPTH);
+    let mut job = Job::new(Request::Generate(params), reply_tx);
+    job.engine = Some(engine);
+    job.stream = Some(delta_tx);
+    if ctx.batcher.submit(job).is_err() {
+        ctx.batcher.stats().overloaded.inc();
+        let hint = ctx.batcher.retry_after_ms();
+        http::write_error(
+            writer,
+            ErrorCode::Overloaded,
+            "queue full (admission control): retry later",
+            Some(hint),
+            keep,
+        )?;
+        return Ok((429, keep));
+    }
+    let mut sse = SseWriter::start(&mut *writer)?;
+    let mut client_gone = false;
+    // Token deltas until the batcher hangs the channel up (its end-of-
+    // stream signal).  A dead client stops the writes but not the drain:
+    // the generation is already running and the reply must be collected.
+    while let Ok(delta) = delta_rx.recv() {
+        if client_gone {
+            continue;
+        }
+        let event = Json::obj(vec![
+            ("token", Json::Int(delta.token as i64)),
+            ("logprob", Json::Float(delta.logprob as f64)),
+            ("text", Json::str(&delta.text)),
+        ])
+        .to_string();
+        if sse.event(&event).is_err() {
+            client_gone = true;
+        }
+    }
+    let final_event = match reply_rx.recv_timeout(Duration::from_secs(300)) {
+        Ok(reply) => match reply.response {
+            Response::Generate { text, tokens, .. } => Json::obj(vec![
+                ("done", Json::Bool(true)),
+                ("text", Json::str(&text)),
+                ("tokens", Json::Int(tokens.len() as i64)),
+            ])
+            .to_string(),
+            Response::Error { code, message, retry_after_ms } => {
+                sse_error_event(code, &message, retry_after_ms)
+            }
+            _ => sse_error_event(ErrorCode::Internal, "unexpected reply to generate", None),
+        },
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            sse_error_event(ErrorCode::ShuttingDown, "request dropped during shutdown", None)
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            sse_error_event(ErrorCode::Internal, "request timed out inside the server", None)
+        }
+    };
+    if !client_gone {
+        let _ = sse.event(&final_event);
+    }
+    let events = sse.events();
+    let events = sse.done().unwrap_or(events);
+    ctx.stats.sse_events.add(events);
+    // SSE ends by closing the connection; every client treats it as EOF.
+    Ok((200, false))
+}
+
+/// `POST /v1/score`: same body fields as the line-JSON `score` op.
+fn handle_score(
+    req: HttpRequest,
+    writer: &mut TcpStream,
+    ctx: &HttpCtx,
+) -> io::Result<(u32, bool)> {
+    let keep = req.keep_alive;
+    let body = match parse_body(&req) {
+        Ok(j) => j,
+        Err(msg) => {
+            http::write_error(writer, ErrorCode::InvalidRequest, &msg, None, keep)?;
+            return Ok((400, keep));
+        }
+    };
+    let mut request = match score_from_json(&body) {
+        Ok(r) => r,
+        Err(err) => {
+            let msg = format!("bad request: {err:#}");
+            http::write_error(writer, ErrorCode::InvalidRequest, &msg, None, keep)?;
+            return Ok((400, keep));
+        }
+    };
+    if let Request::Score { deadline_ms, trace, .. } = &mut request {
+        apply_header_overrides(&req, deadline_ms, trace);
+    }
+    let engine = match ctx.router.resolve(request.model()) {
+        Ok(engine) => engine,
+        Err(msg) => {
+            http::write_error(writer, ErrorCode::InvalidRequest, &msg, None, keep)?;
+            return Ok((400, keep));
+        }
+    };
+    if ctx.draining.load(Ordering::SeqCst) {
+        http::write_error(writer, ErrorCode::ShuttingDown, "server is shutting down", None, keep)?;
+        return Ok((503, keep));
+    }
+    let (response, timings) = wait_reply(request, engine, &ctx.batcher);
+    write_api_response(writer, response, timings, keep)
 }
 
 fn write_json(writer: &mut TcpStream, json: &Json) -> std::io::Result<()> {

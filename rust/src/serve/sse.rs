@@ -1,0 +1,119 @@
+//! Server-Sent Events framing for `POST /v1/generate` with `"stream":true`.
+//!
+//! The stream is deliberately minimal — `data:` lines only, one JSON
+//! object per event, flushed per token straight out of the engine's
+//! lockstep decode loop:
+//!
+//! ```text
+//! HTTP/1.1 200 OK
+//! Content-Type: text/event-stream
+//! Cache-Control: no-cache
+//! Connection: close
+//!
+//! data: {"token":17,"logprob":-0.41,"text":" the"}
+//!
+//! data: {"token":93,"logprob":-1.07,"text":" mat"}
+//!
+//! data: {"done":true,"text":" the mat","tokens":2}
+//!
+//! data: [DONE]
+//! ```
+//!
+//! Mid-stream failures keep the framing: the error travels as a
+//! `data: {"error":{...}}` event (same body shape as non-streaming HTTP
+//! errors) followed by the terminal `data: [DONE]`, because the `200 OK`
+//! status is already on the wire once streaming starts.  The response has
+//! no `Content-Length` and is never chunked — the server closes the
+//! connection to end the stream, which every SSE client treats as EOF.
+//!
+//! [`parse_data_events`] is the client half, shared by the conformance
+//! tests and `servebench --http`.
+
+use std::io::{self, Write};
+
+/// Writer half: wraps the connection once the route decides to stream.
+pub struct SseWriter<W: Write> {
+    w: W,
+    events: u64,
+}
+
+impl<W: Write> SseWriter<W> {
+    /// Write the response head and lock the connection into event framing.
+    pub fn start(mut w: W) -> io::Result<SseWriter<W>> {
+        w.write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+              Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+        )?;
+        w.flush()?;
+        Ok(SseWriter { w, events: 0 })
+    }
+
+    /// One event, flushed immediately — this is the per-token latency
+    /// path, so nothing here may buffer.  `data` must be a single line
+    /// (the JSON serializer never emits newlines).
+    pub fn event(&mut self, data: &str) -> io::Result<()> {
+        debug_assert!(!data.contains('\n'), "SSE data must be single-line: {data:?}");
+        self.w.write_all(b"data: ")?;
+        self.w.write_all(data.as_bytes())?;
+        self.w.write_all(b"\n\n")?;
+        self.w.flush()?;
+        self.events += 1;
+        Ok(())
+    }
+
+    /// Terminal sentinel: every stream ends with `data: [DONE]`.
+    pub fn done(mut self) -> io::Result<u64> {
+        self.w.write_all(b"data: [DONE]\n\n")?;
+        self.w.flush()?;
+        Ok(self.events + 1)
+    }
+
+    /// Events written so far (the terminal `[DONE]` counts once sent).
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+}
+
+/// Client half: split a raw SSE body into its `data:` payloads, in order,
+/// including the terminal `[DONE]`.
+pub fn parse_data_events(body: &str) -> Vec<String> {
+    body.split("\n\n")
+        .filter_map(|block| {
+            let line = block.trim();
+            line.strip_prefix("data:").map(|rest| rest.trim_start().to_string())
+        })
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_events_and_terminal_done() {
+        let mut wire = Vec::new();
+        {
+            let mut sse = SseWriter::start(&mut wire).unwrap();
+            sse.event(r#"{"token":1,"logprob":-0.5,"text":"a"}"#).unwrap();
+            sse.event(r#"{"token":2,"logprob":-0.25,"text":"b"}"#).unwrap();
+            assert_eq!(sse.events(), 2);
+            assert_eq!(sse.done().unwrap(), 3);
+        }
+        let raw = String::from_utf8(wire).unwrap();
+        let head_end = raw.find("\r\n\r\n").expect("response head");
+        assert!(raw[..head_end].contains("Content-Type: text/event-stream"));
+        assert!(raw[..head_end].contains("Connection: close"));
+        let events = parse_data_events(&raw[head_end + 4..]);
+        assert_eq!(events.len(), 3);
+        assert!(events[0].contains("\"token\":1"));
+        assert_eq!(events.last().unwrap(), "[DONE]");
+    }
+
+    #[test]
+    fn parser_ignores_noise_between_events() {
+        let events = parse_data_events("data: {\"a\":1}\n\n\n\ndata: [DONE]\n\n");
+        assert_eq!(events, vec!["{\"a\":1}".to_string(), "[DONE]".to_string()]);
+        assert!(parse_data_events("").is_empty());
+    }
+}

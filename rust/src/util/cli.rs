@@ -12,6 +12,10 @@ use anyhow::{anyhow, bail, Result};
 pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
+    /// Every value of every option, in argv order — [`Args::opt`] reads
+    /// the last occurrence, [`Args::opt_all`] reads all of them
+    /// (repeatable options like `cce serve --checkpoint tag=path`).
+    pub repeated: BTreeMap<String, Vec<String>>,
     pub flags: Vec<String>,
     /// Option keys that were consumed via a typed accessor (for validation).
     seen: std::cell::RefCell<Vec<String>>,
@@ -28,20 +32,25 @@ impl Args {
         while let Some(arg) = it.next() {
             if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
-                    out.options.insert(k.to_string(), v.to_string());
+                    out.push_option(k, v.to_string());
                 } else if flag_names.contains(&stripped) {
                     out.flags.push(stripped.to_string());
                 } else {
                     let v = it
                         .next()
                         .ok_or_else(|| anyhow!("--{stripped} expects a value"))?;
-                    out.options.insert(stripped.to_string(), v);
+                    out.push_option(stripped, v);
                 }
             } else {
                 out.positional.push(arg);
             }
         }
         Ok(out)
+    }
+
+    fn push_option(&mut self, name: &str, value: String) {
+        self.repeated.entry(name.to_string()).or_default().push(value.clone());
+        self.options.insert(name.to_string(), value);
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -51,6 +60,13 @@ impl Args {
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.seen.borrow_mut().push(name.to_string());
         self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable option, in argv order (empty when
+    /// the option was never given).
+    pub fn opt_all(&self, name: &str) -> Vec<String> {
+        self.seen.borrow_mut().push(name.to_string());
+        self.repeated.get(name).cloned().unwrap_or_default()
     }
 
     pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
@@ -122,6 +138,19 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(argv("--n"), &[]).is_err());
+    }
+
+    #[test]
+    fn repeated_options_accumulate_and_last_wins() {
+        let a = Args::parse(
+            argv("serve --checkpoint a=x.ckpt --checkpoint=b=y.ckpt --port 0"),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.opt_all("checkpoint"), vec!["a=x.ckpt".to_string(), "b=y.ckpt".to_string()]);
+        assert_eq!(a.opt("checkpoint"), Some("b=y.ckpt"), "single-value view sees the last");
+        assert!(a.opt_all("missing").is_empty());
+        assert!(a.finish(&[]).is_ok(), "opt_all marks the option as consumed");
     }
 
     #[test]

@@ -13,6 +13,8 @@ use std::time::{Duration, Instant};
 use cce::coordinator::Checkpoint;
 use cce::exec::KernelOptions;
 use cce::runtime::HostTensor;
+use cce::serve::http::http_call;
+use cce::serve::sse::parse_data_events;
 use cce::serve::{
     serve, Client, ClientConfig, Engine, ErrorCode, GenParams, Request, Response, RetryPolicy,
     ServeConfig,
@@ -305,6 +307,100 @@ fn drain_under_load_delivers_in_flight_responses_within_the_bound() {
         }
     });
     faults::clear();
+}
+
+// ------------------------------------------------- http failure domains
+
+#[test]
+fn http_overload_sheds_429_with_a_retry_after_header() {
+    let _gate = chaos_gate();
+    // One slow worker, depth-1 queue: a concurrent flood MUST shed, and
+    // over HTTP a shed is a 429 carrying both the `Retry-After` header
+    // (whole seconds) and the millisecond hint in the JSON error body.
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 1,
+        http_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let server = serve(tiny_engine(), &cfg).unwrap();
+    let http = server.http_addr().expect("http listener bound").to_string();
+    faults::install("engine.step.stall_ms=50").unwrap();
+
+    type Outcome = (u32, Vec<(String, String)>, Vec<u8>);
+    let outcomes: Arc<Mutex<Vec<Outcome>>> = Arc::new(Mutex::new(Vec::new()));
+    std::thread::scope(|scope| {
+        for i in 0..6u64 {
+            let outcomes = outcomes.clone();
+            let http = http.clone();
+            scope.spawn(move || {
+                let body =
+                    format!("{{\"prompt\":\"the cat\",\"max_tokens\":2,\"seed\":{i}}}");
+                let out = http_call(
+                    &http,
+                    "POST",
+                    "/v1/generate",
+                    body.as_bytes(),
+                    Duration::from_secs(30),
+                )
+                .expect("transport ok");
+                outcomes.lock().unwrap().push(out);
+            });
+        }
+    });
+    let outcomes = outcomes.lock().unwrap();
+    let sheds: Vec<&Outcome> = outcomes.iter().filter(|(s, _, _)| *s == 429).collect();
+    assert!(!sheds.is_empty(), "depth-1 queue under a 6-way flood must shed a 429");
+    for (_, headers, body) in &sheds {
+        let retry_after = headers
+            .iter()
+            .find(|(k, _)| k == "retry-after")
+            .and_then(|(_, v)| v.parse::<u64>().ok())
+            .expect("429 must carry a parseable Retry-After header");
+        assert!((1..=5).contains(&retry_after), "Retry-After {retry_after}s outside the clamp");
+        let text = String::from_utf8_lossy(body);
+        assert!(
+            text.contains("overloaded") && text.contains("retry_after_ms"),
+            "429 body missing the structured hint: {text}"
+        );
+    }
+    faults::clear();
+    shutdown(server);
+}
+
+#[test]
+fn stalled_connections_slow_but_never_break_sse_streams() {
+    let _gate = chaos_gate();
+    let cfg = ServeConfig {
+        http_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let server = serve(tiny_engine(), &cfg).unwrap();
+    let http = server.http_addr().expect("http listener bound").to_string();
+    faults::install("conn.stall_ms=150").unwrap();
+
+    let t0 = Instant::now();
+    let (status, _, body) = http_call(
+        &http,
+        "POST",
+        "/v1/generate",
+        b"{\"prompt\":\"the cat\",\"max_tokens\":2,\"stream\":true}",
+        Duration::from_secs(30),
+    )
+    .expect("stalled handler still answers");
+    assert_eq!(status, 200);
+    let text = String::from_utf8_lossy(&body);
+    let events = parse_data_events(&text);
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"), "{text}");
+    assert!(events.len() >= 3, "token events + summary + [DONE], got: {text}");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(150),
+        "the stall failpoint should have delayed the handler"
+    );
+    faults::clear();
+    shutdown(server);
 }
 
 // --------------------------------------------------- connection stalls

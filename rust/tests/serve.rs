@@ -9,7 +9,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use cce::exec::{cce_forward, sample, score, topk, InferProblem, KernelOptions, Problem};
-use cce::serve::{serve, Client, ContextBag, Engine, GenParams, Request, Response, ServeConfig};
+use cce::serve::http::{http_call, read_http_response};
+use cce::serve::sse::parse_data_events;
+use cce::serve::{
+    serve, serve_multi, Client, ContextBag, Engine, GenParams, Request, Response, ServeConfig,
+};
 use cce::util::prop;
 use cce::util::rng::Rng;
 
@@ -502,5 +506,298 @@ fn metrics_exporter_and_trace_spans_end_to_end() {
     let (status, body) = http_get(http_addr, "/healthz");
     assert_eq!(status, 503, "draining healthz: {body}");
     assert_eq!(body.trim(), "draining");
+    server.join().unwrap();
+}
+
+// ---------------------------------------------------------- http front door
+
+fn tiny_opts() -> KernelOptions {
+    KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() }
+}
+
+/// Serve `engine` with the REST front door on an ephemeral port; returns
+/// the server plus the HTTP address as a connect string.
+fn http_server(engine: Arc<Engine>) -> (cce::serve::Server, String) {
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        workers: 2,
+        http_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let server = serve(engine, &cfg).unwrap();
+    let addr = server.http_addr().expect("http listener bound").to_string();
+    (server, addr)
+}
+
+#[test]
+fn http_score_and_generate_round_trip_with_sse_stream() {
+    use cce::util::json::Json;
+
+    let engine = Arc::new(Engine::demo(384, 16, 2, tiny_opts()).unwrap());
+    // Deterministic expectation straight off the engine: the HTTP path must
+    // produce the exact same greedy decode as a direct batch call.
+    let gen_req = GenParams { prompt: "the cat".into(), max_tokens: 4, ..GenParams::default() };
+    let expected = engine.generate_batch(std::slice::from_ref(&gen_req)).remove(0).unwrap();
+    let (server, http) = http_server(engine);
+    let t = Duration::from_secs(30);
+
+    // POST /v1/score — plain JSON answer, Content-Length framed.
+    let (status, headers, body) =
+        http_call(&http, "POST", "/v1/score", b"{\"text\":\"the cat sat on the mat\"}", t)
+            .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    assert!(
+        headers.iter().any(|(k, v)| k == "content-type" && v == "application/json"),
+        "{headers:?}"
+    );
+    let json = Json::parse(&String::from_utf8_lossy(&body)).unwrap();
+    assert_eq!(json.get("ok").and_then(Json::as_bool), Some(true));
+    assert!(json.get("nll").and_then(Json::as_f64).is_some(), "{json:?}");
+
+    // POST /v1/generate without "stream" — same shape as the line protocol.
+    let (status, _, body) =
+        http_call(&http, "POST", "/v1/generate", b"{\"prompt\":\"the cat\",\"max_tokens\":4}", t)
+            .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let json = Json::parse(&String::from_utf8_lossy(&body)).unwrap();
+    assert_eq!(json.get("text").and_then(Json::as_str), Some(expected.text.as_str()));
+
+    // "stream":true — SSE: one event per token, a done summary, [DONE].
+    let (status, headers, body) = http_call(
+        &http,
+        "POST",
+        "/v1/generate",
+        b"{\"prompt\":\"the cat\",\"max_tokens\":4,\"stream\":true}",
+        t,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        headers.iter().any(|(k, v)| k == "content-type" && v == "text/event-stream"),
+        "{headers:?}"
+    );
+    let text = String::from_utf8_lossy(&body).into_owned();
+    let events = parse_data_events(&text);
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"), "{text}");
+    let done = Json::parse(&events[events.len() - 2]).unwrap();
+    assert_eq!(done.get("done").and_then(Json::as_bool), Some(true), "{text}");
+    assert_eq!(done.get("text").and_then(Json::as_str), Some(expected.text.as_str()));
+    let token_events = &events[..events.len() - 2];
+    assert_eq!(token_events.len(), expected.tokens.len(), "one SSE event per token: {text}");
+    for (ev, want) in token_events.iter().zip(&expected.tokens) {
+        let ev = Json::parse(ev).unwrap();
+        assert_eq!(ev.get("token").and_then(Json::as_i64), Some(*want as i64), "{text}");
+        assert!(ev.get("logprob").and_then(Json::as_f64).is_some(), "{text}");
+    }
+
+    server.stop();
+    server.join().unwrap();
+}
+
+#[test]
+fn http_malformed_oversized_and_unknown_inputs_get_4xx() {
+    use std::io::Write;
+
+    let engine = Arc::new(Engine::demo(384, 16, 0, tiny_opts()).unwrap());
+    let (server, http) = http_server(engine);
+    let t = Duration::from_secs(5);
+
+    // Malformed request line → structured 400, connection closed.
+    {
+        let mut s = std::net::TcpStream::connect(&http).unwrap();
+        s.set_read_timeout(Some(t)).unwrap();
+        s.write_all(b"NOT A VALID REQUEST LINE\r\n\r\n").unwrap();
+        let (status, _, body) = read_http_response(&mut s).unwrap();
+        assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+        assert!(
+            String::from_utf8_lossy(&body).contains("invalid_request"),
+            "{}",
+            String::from_utf8_lossy(&body)
+        );
+    }
+
+    // Oversized header section → 431.
+    {
+        let mut s = std::net::TcpStream::connect(&http).unwrap();
+        s.set_read_timeout(Some(t)).unwrap();
+        let big = "x".repeat(20 * 1024);
+        write!(s, "GET /healthz HTTP/1.1\r\nX-Big: {big}\r\n\r\n").unwrap();
+        let (status, _, body) = read_http_response(&mut s).unwrap();
+        assert_eq!(status, 431, "{}", String::from_utf8_lossy(&body));
+    }
+
+    // A declared body past the limit → 413 before any of it is read.
+    {
+        let mut s = std::net::TcpStream::connect(&http).unwrap();
+        s.set_read_timeout(Some(t)).unwrap();
+        s.write_all(b"POST /v1/score HTTP/1.1\r\nContent-Length: 10000000\r\n\r\n").unwrap();
+        let (status, _, body) = read_http_response(&mut s).unwrap();
+        assert_eq!(status, 413, "{}", String::from_utf8_lossy(&body));
+    }
+
+    // Wrong method on a known route / unknown route / non-JSON body.
+    let (status, _, _) = http_call(&http, "DELETE", "/metrics", b"", t).unwrap();
+    assert_eq!(status, 405);
+    let (status, _, _) = http_call(&http, "GET", "/nope", b"", t).unwrap();
+    assert_eq!(status, 404);
+    let (status, _, body) =
+        http_call(&http, "POST", "/v1/generate", b"this is not json", t).unwrap();
+    assert_eq!(status, 400);
+    assert!(
+        String::from_utf8_lossy(&body).contains("invalid_request"),
+        "{}",
+        String::from_utf8_lossy(&body)
+    );
+
+    server.stop();
+    server.join().unwrap();
+}
+
+#[test]
+fn http_chunked_body_and_keep_alive_reuse() {
+    use std::io::{Read, Write};
+
+    use cce::util::json::Json;
+
+    let engine = Arc::new(Engine::demo(384, 16, 2, tiny_opts()).unwrap());
+    let (server, http) = http_server(engine);
+    let mut s = std::net::TcpStream::connect(&http).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // Request 1: chunked score body, keep-alive left at the 1.1 default.
+    let body = b"{\"text\":\"the cat sat on the mat\"}";
+    write!(
+        s,
+        "POST /v1/score HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Transfer-Encoding: chunked\r\n\r\n"
+    )
+    .unwrap();
+    write!(s, "{:x}\r\n", body.len()).unwrap();
+    s.write_all(body).unwrap();
+    write!(s, "\r\n0\r\n\r\n").unwrap();
+    let (status, _, resp) = read_http_response(&mut s).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    let json = Json::parse(&String::from_utf8_lossy(&resp)).unwrap();
+    assert_eq!(json.get("ok").and_then(Json::as_bool), Some(true));
+
+    // Request 2 rides the SAME connection.
+    write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let (status, _, resp) = read_http_response(&mut s).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(String::from_utf8_lossy(&resp).trim(), "ok");
+
+    // Request 3 asks to close; the server must EOF afterwards.
+    write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let (status, _, _) = read_http_response(&mut s).unwrap();
+    assert_eq!(status, 200);
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server must close after Connection: close");
+
+    server.stop();
+    server.join().unwrap();
+}
+
+#[test]
+fn http_routes_multiple_models_and_rejects_unknown_tags() {
+    use cce::util::json::Json;
+
+    let alpha = Arc::new(Engine::demo(384, 16, 2, tiny_opts()).unwrap());
+    let beta = Arc::new(Engine::demo(384, 16, 2, tiny_opts()).unwrap());
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(5),
+        workers: 2,
+        http_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let server =
+        serve_multi(vec![("alpha".to_string(), alpha), ("beta".to_string(), beta)], &cfg)
+            .unwrap();
+    let http = server.http_addr().expect("http listener bound").to_string();
+    let t = Duration::from_secs(30);
+
+    // Untagged requests hit the first model; tagged ones route by name.
+    for body in [
+        &b"{\"prompt\":\"the cat\",\"max_tokens\":2}"[..],
+        b"{\"prompt\":\"the cat\",\"max_tokens\":2,\"model\":\"alpha\"}",
+        b"{\"prompt\":\"the cat\",\"max_tokens\":2,\"model\":\"beta\"}",
+    ] {
+        let (status, _, resp) = http_call(&http, "POST", "/v1/generate", body, t).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    }
+    let (status, _, resp) = http_call(
+        &http,
+        "POST",
+        "/v1/score",
+        b"{\"text\":\"the cat sat\",\"model\":\"beta\"}",
+        t,
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+
+    // Unknown tag → 400 invalid_request naming the loaded tags.
+    let (status, _, resp) =
+        http_call(&http, "POST", "/v1/generate", b"{\"prompt\":\"x\",\"model\":\"nope\"}", t)
+            .unwrap();
+    assert_eq!(status, 400);
+    let text = String::from_utf8_lossy(&resp);
+    assert!(text.contains("unknown model") && text.contains("alpha"), "{text}");
+
+    // The line protocol routes through the same router, and info
+    // advertises the loaded tags in order.
+    let mut client = Client::connect(server.addr).unwrap();
+    let tagged = GenParams {
+        prompt: "the cat".into(),
+        max_tokens: 2,
+        model: Some("beta".into()),
+        ..GenParams::default()
+    };
+    match client.call(&Request::Generate(tagged)).unwrap() {
+        Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    let info = match client.info().unwrap() {
+        Response::Info(fields) => fields,
+        other => panic!("unexpected info response: {other:?}"),
+    };
+    let models: Vec<&str> = info
+        .get("models")
+        .and_then(Json::as_array)
+        .expect("info lists models")
+        .iter()
+        .filter_map(|m| m.as_str())
+        .collect();
+    assert_eq!(models, ["alpha", "beta"]);
+    client.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn http_api_refuses_new_work_while_draining() {
+    let engine = Arc::new(Engine::demo(384, 16, 2, tiny_opts()).unwrap());
+    let (server, http) = http_server(engine);
+    let t = Duration::from_secs(5);
+
+    let (status, _, _) = http_call(&http, "GET", "/healthz", b"", t).unwrap();
+    assert_eq!(status, 200);
+
+    // stop() begins the drain: /healthz flips to 503 and the API routes
+    // refuse new work with `shutting_down` while the listener stays up.
+    server.stop();
+    let (status, _, body) = http_call(&http, "GET", "/healthz", b"", t).unwrap();
+    assert_eq!(status, 503);
+    assert_eq!(String::from_utf8_lossy(&body).trim(), "draining");
+    let (status, _, body) =
+        http_call(&http, "POST", "/v1/generate", b"{\"prompt\":\"x\"}", t).unwrap();
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    assert!(
+        String::from_utf8_lossy(&body).contains("shutting_down"),
+        "{}",
+        String::from_utf8_lossy(&body)
+    );
+    let (status, _, body) = http_call(&http, "POST", "/v1/score", b"{\"text\":\"x\"}", t).unwrap();
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
     server.join().unwrap();
 }

@@ -1,0 +1,116 @@
+#!/usr/bin/env bash
+# Docs consistency gate: the docs must cover what the code actually
+# ships.  Extracts ground truth from the Rust sources and asserts:
+#
+#   1. every ErrorCode wire name (serve/protocol.rs as_str) is documented
+#      in docs/http_api.md AND docs/serving.md;
+#   2. every metric family registered in rust/src appears in
+#      docs/observability.md;
+#   3. every `cce serve` CLI option appears as `--flag` somewhere in
+#      README.md or docs/;
+#   4. every `curl ` example line in README.md and docs/http_api.md is
+#      exercised VERBATIM by examples/http_quickstart.sh;
+#   5. the stdout announce-line contract is documented in
+#      docs/http_api.md.
+#
+# `--selftest` proves the checks bite: doctored copies of the docs (one
+# error code row removed, one metric family removed, one curl line
+# dropped from the quickstart) must each FAIL the check.
+#
+# Runs in CI (./ci.sh, docs stage) with no toolchain needed: bash + grep
+# + sed only.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Selftest points these at doctored copies; normal runs use the repo files.
+HTTP_API=${CHECK_DOCS_HTTP_API:-docs/http_api.md}
+SERVING=${CHECK_DOCS_SERVING:-docs/serving.md}
+OBSERVABILITY=${CHECK_DOCS_OBSERVABILITY:-docs/observability.md}
+README=${CHECK_DOCS_README:-README.md}
+QUICKSTART=${CHECK_DOCS_QUICKSTART:-examples/http_quickstart.sh}
+
+fail=0
+complain() { echo "check_docs: $*" >&2; fail=1; }
+
+# ---- 1. error codes ---------------------------------------------------
+codes=$(sed -n '/fn as_str/,/^    }/p' rust/src/serve/protocol.rs \
+    | grep -oE '"[a-z_]+"' | tr -d '"' | sort -u)
+n_codes=$(wc -w <<<"$codes")
+[[ "$n_codes" -ge 5 ]] || { echo "check_docs: extracted only $n_codes ErrorCode names from protocol.rs — extraction broke" >&2; exit 1; }
+for code in $codes; do
+    grep -qF "\`$code\`" "$HTTP_API" || complain "error code '$code' missing from $HTTP_API"
+    grep -qF "\`$code\`" "$SERVING" || complain "error code '$code' missing from $SERVING"
+done
+
+# ---- 2. metric families ----------------------------------------------
+# Registrations span lines (name on its own line), so extract by the
+# family-name prefixes instead of the .counter("...") call shape.
+families=$(grep -rhoE '"(serve|exec|train)_[a-z0-9_]+"' rust/src | tr -d '"' | sort -u)
+n_fam=$(wc -w <<<"$families")
+[[ "$n_fam" -ge 30 ]] || { echo "check_docs: extracted only $n_fam metric families from rust/src — extraction broke" >&2; exit 1; }
+for fam in $families; do
+    grep -qF "$fam" "$OBSERVABILITY" || complain "metric family '$fam' missing from $OBSERVABILITY"
+done
+
+# ---- 3. serve CLI flags ----------------------------------------------
+flags=$(sed -n '/^fn kernel_options(/,/^}/p; /^fn dtype_override(/,/^}/p; /^fn build_engines(/,/^}/p; /^fn cmd_serve(/,/^}/p' rust/src/main.rs \
+    | grep -oE '\.(get|opt|flag|require|opt_all)\("[a-z-]+"' \
+    | grep -oE '"[a-z-]+"' | tr -d '"' | sort -u)
+n_flags=$(wc -w <<<"$flags")
+[[ "$n_flags" -ge 15 ]] || { echo "check_docs: extracted only $n_flags serve flags from main.rs — extraction broke" >&2; exit 1; }
+for flag in $flags; do
+    grep -qrF -- "--$flag" "$README" "$HTTP_API" "$SERVING" "$OBSERVABILITY" docs/benchmarks.md \
+        || complain "serve flag '--$flag' undocumented (README.md or docs/)"
+done
+
+# ---- 4. curl examples run verbatim -----------------------------------
+n_curl=0
+while IFS= read -r line; do
+    n_curl=$((n_curl + 1))
+    grep -qF -- "$line" "$QUICKSTART" \
+        || complain "curl example not exercised verbatim by $QUICKSTART: $line"
+done < <(grep -h '^curl ' "$README" "$HTTP_API" | sort -u)
+[[ "$n_curl" -ge 5 ]] || { echo "check_docs: found only $n_curl curl examples in the docs — extraction broke" >&2; exit 1; }
+
+# ---- 5. announce-line contract ---------------------------------------
+for marker in '[serve] ready proto=line addr=' '[serve] ready proto=http addr=' '[serve] shut down cleanly'; do
+    grep -qF -- "$marker" "$HTTP_API" || complain "announce line '$marker' missing from $HTTP_API"
+done
+
+if [[ "$fail" -ne 0 ]]; then
+    echo "check_docs: FAILED" >&2
+    exit 1
+fi
+
+# ---- selftest: the checks must bite -----------------------------------
+if [[ "${1:-}" == "--selftest" ]]; then
+    tmp=$(mktemp -d)
+    trap 'rm -rf "$tmp"' EXIT
+    expect_fail() {  # <label> <env assignments...>
+        local label=$1; shift
+        if env "$@" "$0" >/dev/null 2>&1; then
+            echo "check_docs --selftest: $label did NOT fail the check" >&2
+            exit 1
+        fi
+    }
+
+    grep -v 'deadline_exceeded' docs/http_api.md > "$tmp/http_api.md"
+    expect_fail "removing an error code from http_api.md" \
+        CHECK_DOCS_HTTP_API="$tmp/http_api.md"
+
+    grep -v 'serve_http_sse_events_total' docs/observability.md > "$tmp/observability.md"
+    expect_fail "removing a metric family from observability.md" \
+        CHECK_DOCS_OBSERVABILITY="$tmp/observability.md"
+
+    grep -v -- '--queue-depth' docs/serving.md > "$tmp/serving.md"
+    expect_fail "removing a CLI flag from serving.md" \
+        CHECK_DOCS_SERVING="$tmp/serving.md"
+
+    grep -v '/v1/score' examples/http_quickstart.sh > "$tmp/quickstart.sh"
+    expect_fail "dropping a curl line from http_quickstart.sh" \
+        CHECK_DOCS_QUICKSTART="$tmp/quickstart.sh"
+
+    echo "check_docs: selftest OK (all doctored docs failed as designed)"
+fi
+
+echo "check_docs: OK ($n_codes error codes, $n_fam metric families, $n_flags serve flags, $n_curl curl examples)"
