@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI gate: docs consistency, formatting, lints, the tier-1 build/test cycle,
-# the serve smokes (line-JSON + HTTP/SSE, single- and two-model), and the
-# perf-tracking bench stage.
+# the serve smokes (line-JSON + HTTP/SSE, single- and two-model), the
+# supervised-serve soak (crash -> restart -> reannounce -> recovery), and
+# the perf-tracking bench stage.
 #
 #   ./ci.sh            # full pipeline (docs check, fmt, clippy incl.
 #                      #   --features pjrt, release build, tests, serve
@@ -344,6 +345,88 @@ CCE_FAULTS="conn.stall_ms=20" "$CCE" servebench --requests 8 --concurrency 2 \
     --max-tokens 2 --threads 1 --repeats 1 >/dev/null \
     || { echo "servebench --http smoke failed"; exit 1; }
 echo "   chaos OK (suite + env smoke + http bench)"
+
+echo "== soak: supervised serve under a crash fault (restart + reannounce + recovery) =="
+# A fault-armed supervised run across a real process boundary: every child
+# incarnation exits(3) abruptly on its 5th work request
+# (CCE_FAULTS is inherited by each restart).  The supervisor must restart
+# the child with backoff, hold the re-announce until /healthz passes, and
+# a fresh client against the re-announced ports must succeed; SIGTERM then
+# drains the whole tree cleanly (docs/serving.md, Supervision).
+CCE_FAULTS="supervisor.child_crash=5" "$CCE" serve --demo --port 0 \
+    --http-addr 127.0.0.1:0 --supervise --supervise-backoff-ms 50 \
+    > "$SMOKE_DIR/soak.log" 2>"$SMOKE_DIR/soak.err" &
+SERVE_PID=$!
+
+soak_ready_count() { grep -c '^\[serve\] ready proto=line ' "$SMOKE_DIR/soak.log" || true; }
+soak_wait_ready() { # $1 = announce generation to wait for
+    local want=$1
+    for _ in $(seq 1 300); do
+        [[ "$(soak_ready_count)" -ge "$want" ]] && return 0
+        if ! serve_alive; then
+            echo "soak: supervisor died waiting for announce #$want"
+            cat "$SMOKE_DIR/soak.err"; exit 1
+        fi
+        sleep 0.1
+    done
+    echo "soak: announce #$want never arrived"; cat "$SMOKE_DIR/soak.log" "$SMOKE_DIR/soak.err"; exit 1
+}
+soak_last_port() { # $1 = proto (line|http)
+    sed -n "s/^\[serve\] ready proto=$1 addr=.*:\([0-9][0-9]*\)$/\1/p" "$SMOKE_DIR/soak.log" | tail -1
+}
+
+soak_wait_ready 1
+SOAK_PORT=$(soak_last_port line)
+# Five work requests: 1-4 succeed, the 5th crashes the child mid-request
+# (the client's transport error is expected — `|| true`).
+for i in $(seq 1 5); do
+    "$CCE" client --port "$SOAK_PORT" --op generate --prompt "the cat" \
+        --max-tokens 2 --retries 1 --timeout-ms 10000 >/dev/null 2>&1 || true
+done
+
+# The supervisor restarts the child on fresh ephemeral ports and
+# re-announces only after health passes; retrying against the *latest*
+# announce must succeed.
+soak_wait_ready 2
+SOAK_PORT=$(soak_last_port line)
+SOAK_HPORT=$(soak_last_port http)
+"$CCE" client --port "$SOAK_PORT" --op generate --prompt "the cat" \
+    --max-tokens 2 --retries 3 --timeout-ms 10000 | grep -q '"ok":true' \
+    || { echo "soak: post-restart generate failed"; cat "$SMOKE_DIR/soak.err"; exit 1; }
+python3 - "$SOAK_HPORT" <<'PY'
+import http.client, sys
+port = int(sys.argv[1])
+conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+conn.request("GET", "/healthz")
+resp = conn.getresponse(); body = resp.read(); conn.close()
+assert resp.status == 200 and body.decode().strip() == "ok", \
+    f"post-restart /healthz: {resp.status} {body!r}"
+conn = http.client.HTTPConnection("127.0.0.1", port, timeout=10)
+conn.request("GET", "/metrics")
+resp = conn.getresponse(); text = resp.read().decode(); conn.close()
+assert resp.status == 200, f"/metrics returned {resp.status}"
+line = next((l for l in text.splitlines()
+             if l.startswith("serve_supervisor_restarts_total ")), None)
+assert line and float(line.split()[1]) >= 1, f"restart counter missing/zero: {line}"
+line = next((l for l in text.splitlines()
+             if l.startswith("serve_supervisor_enabled ")), None)
+assert line and line.split()[1] == "1", f"supervised gauge wrong: {line}"
+print(f"   post-restart child healthy on port {port} (restarts counted)")
+PY
+[[ "$(soak_ready_count)" -ge 2 ]] || { echo "soak: expected >= 2 announces"; exit 1; }
+
+# SIGTERM to the supervisor forwards as a drain; the tree exits 0 and the
+# child's clean-shutdown marker passes through the supervisor's stdout.
+kill -TERM "$SERVE_PID"
+RC=0; wait "$SERVE_PID" || RC=$?
+SERVE_PID=""
+if [[ "$RC" -ne 0 ]]; then
+    echo "soak: supervised tree did not drain cleanly (status $RC)"
+    cat "$SMOKE_DIR/soak.err"; exit "$RC"
+fi
+grep -q "shut down cleanly" "$SMOKE_DIR/soak.log" \
+    || { echo "soak: missing clean-shutdown marker"; cat "$SMOKE_DIR/soak.log"; exit 1; }
+echo "   soak OK (crash -> restart -> reannounce -> recovery -> drain)"
 
 echo "== bench: table1 (native) + figA1 sweep + servebench at the fixed CI grid =="
 # Fixed grid (see docs/benchmarks.md): d >= 128 keeps gen_loss_inputs'

@@ -9,8 +9,16 @@
 //!              /v1/generate (SSE with "stream":true), POST /v1/score,
 //!              GET /metrics, GET /healthz; see docs/http_api.md]
 //!             [--metrics-addr — legacy alias for --http-addr]
+//!             [--supervise — run the listener as a restarted-on-crash
+//!              child: --supervise-max-failures 5 --supervise-window-ms
+//!              60000 --supervise-backoff-ms 200; crash loop → exit 86]
+//!             [--brownout-queue-ms 0 — degrade generate requests when the
+//!              queue-delay EWMA exceeds this (0 = off)]
+//!             [--max-workspace-bytes 0 — reject score requests whose
+//!              O(N·D + threads·N_B·V_B) workspace would exceed this]
 //!             (--checkpoint repeats: the first entry is the default model,
-//!              requests route with their "model" field)
+//!              requests route with their "model" field; SIGTERM/SIGINT
+//!              drain gracefully)
 //! cce client  --port P [--op generate|score|info|metrics|shutdown]
 //!             [--prompt "..."] [--text "..."] [--top-k K] [--temperature T]
 //!             [--model TAG — route to a named model]
@@ -71,7 +79,8 @@ fn usage() -> ! {
          eval       evaluate a checkpoint (--checkpoint) [--backend]\n  \
          serve      serve checkpoints over TCP + HTTP (--checkpoint [tag=]path\n             \
                     repeatable, --demo, --port, --http-addr, --drain-ms,\n             \
-                    --idle-timeout-ms; --metrics-addr = legacy --http-addr)\n  \
+                    --idle-timeout-ms, --supervise, --brownout-queue-ms,\n             \
+                    --max-workspace-bytes; --metrics-addr = legacy --http-addr)\n  \
          client     one-shot client for a running server (--port, --op,\n             \
                     --model, --timeout-ms, --retries, --deadline-ms, --trace)\n  \
          servebench serving throughput/latency harness [--json]\n             \
@@ -155,7 +164,8 @@ fn pjrt_unavailable(cmd: &str) -> Result<()> {
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["check", "verbose", "demo", "scrape", "trace", "http"])?;
+    let args =
+        Args::parse(argv, &["check", "verbose", "demo", "scrape", "trace", "http", "supervise"])?;
     let cmd = match args.positional.first() {
         Some(c) => c.as_str(),
         None => usage(),
@@ -425,6 +435,21 @@ fn build_engines(
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("supervise") {
+        // Parent/supervisor role: re-exec ourselves without the
+        // --supervise* flags as the actual listener, restart it on crash,
+        // forward SIGTERM as drain.  Checkpoints load in the child only.
+        let sup = cce::serve::SupervisorConfig {
+            max_failures: args.get("supervise-max-failures", 5usize)?,
+            window: std::time::Duration::from_millis(args.get("supervise-window-ms", 60_000u64)?),
+            backoff: std::time::Duration::from_millis(args.get("supervise-backoff-ms", 200u64)?),
+            ..cce::serve::SupervisorConfig::default()
+        };
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let child_args = cce::serve::supervisor::strip_supervise_flags(&argv);
+        let code = cce::serve::supervisor::run(&child_args, &sup)?;
+        std::process::exit(code);
+    }
     let opts = kernel_options(args)?;
     let models = build_engines(args, opts, false)?;
     let cfg = cce::serve::ServeConfig {
@@ -440,6 +465,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         drain: std::time::Duration::from_millis(args.get("drain-ms", 5_000u64)?),
         metrics_addr: args.opt("metrics-addr").map(|s| s.to_string()),
         http_addr: args.opt("http-addr").map(|s| s.to_string()),
+        brownout_queue_ms: args.get("brownout-queue-ms", 0u64)?,
+        max_workspace_bytes: args.get("max-workspace-bytes", 0u64)?,
     };
     for (tag, engine) in &models {
         eprintln!(
@@ -466,6 +493,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     use std::io::Write as _;
     std::io::stdout().flush()?;
+    // SIGTERM/SIGINT → graceful drain (same path as the `shutdown` op).
+    // Under `--supervise` the parent forwards its own SIGTERM here.
+    if cce::util::signal::install() {
+        let stopper = server.stopper();
+        std::thread::spawn(move || loop {
+            if cce::util::signal::drain_requested() {
+                eprintln!(
+                    "[serve] signal {} received; draining",
+                    cce::util::signal::last_signal()
+                );
+                stopper.stop();
+                return;
+            }
+            if stopper.stopped() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        });
+    }
     server.join()?;
     println!("[serve] shut down cleanly");
     Ok(())

@@ -1,17 +1,21 @@
-//! Micro-batching scheduler: request queue → batch assembly by
-//! deadline/size → kernel dispatch → response routing.
+//! Micro-batching scheduler: per-model admission lanes → round-robin
+//! batch assembly by deadline/size → kernel dispatch → response routing.
 //!
 //! Architecture (all `std`, no async runtime):
 //!
-//! * submission goes through a **bounded** [`std::sync::mpsc::sync_channel`]
-//!   — when `queue_depth` jobs are already waiting, [`Batcher::submit`]
-//!   fails immediately and the server surfaces backpressure to the client
-//!   instead of buffering unboundedly;
-//! * `workers` threads share the receiver behind a mutex.  A worker blocks
-//!   for the first job, then keeps the lock only while it drains up to
-//!   `max_batch − 1` more jobs or until `max_wait` elapses (the
-//!   latency/throughput knob), then releases the queue and executes the
-//!   batch — so one worker assembles while the others run kernels;
+//! * submission goes through **bounded per-model lanes** ([`Queues`]) —
+//!   each routed engine gets its own FIFO with its own `queue_depth`
+//!   budget, so a hot model saturating its lane backpressures *its own*
+//!   clients while a cold model's requests still admit and still get
+//!   picked up (the PR 8 follow-up the ROADMAP names explicitly).  When a
+//!   lane is full, [`Batcher::submit`] fails immediately and the server
+//!   surfaces backpressure instead of buffering unboundedly;
+//! * `workers` threads share the lanes behind one mutex + condvar.  A
+//!   worker blocks for the first job, then keeps the lock only while it
+//!   drains up to `max_batch − 1` more jobs **round-robin across lanes**
+//!   or until `max_wait` elapses (the latency/throughput knob), then
+//!   releases the queue and executes the batch — so one worker assembles
+//!   while the others run kernels;
 //! * each job carries its own response [`std::sync::mpsc::Sender`]; results
 //!   route back to exactly the connection that asked.
 //!
@@ -24,6 +28,16 @@
 //! EWMA feed [`Batcher::retry_after_ms`], the admission-control hint on
 //! `overloaded` responses, and [`Batcher::drain`] bounds graceful
 //! shutdown.
+//!
+//! Lifecycle hardening (PR 9): jobs may carry a
+//! [`CancelToken`](crate::serve::engine::CancelToken) — a dead SSE client
+//! or an expired `deadline_ms` cancels the remaining decode steps at the
+//! next lockstep step boundary ([`Engine::generate_batch_ctl`]) and frees
+//! the batch slot, counted by `serve_cancelled_{disconnect,deadline}_total`.
+//! Under sustained overload — the queue-wait EWMA (`serve_queue_ewma_us`)
+//! above `--brownout-queue-ms` — **brownout** degrades generate requests
+//! (clamp `max_tokens`, shrink top-k) with a `degraded:true` response
+//! field *before* admission control starts shedding with 429.
 //!
 //! Telemetry (PR 7): every counter lives in a per-batcher
 //! [`crate::obs::Registry`] (`serve_*` families) — one source of truth
@@ -39,14 +53,15 @@
 //! kernel per step ([`Engine::generate_batch`]); score jobs fuse into a
 //! single teacher-forced problem ([`Engine::score_batch`]).
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::obs::{Counter, Gauge, Histogram, Registry, StageTimings};
-use crate::serve::engine::Engine;
+use crate::serve::engine::{CancelReason, CancelToken, Engine, StepCtl};
 use crate::serve::protocol::{ErrorCode, GenParams, Request, Response};
 use crate::util::faults;
 
@@ -54,18 +69,27 @@ use crate::util::faults;
 /// flag (bounds shutdown latency).
 const IDLE_POLL: Duration = Duration::from_millis(25);
 
+/// Brownout cap on `max_tokens` for degraded generate requests.
+pub const BROWNOUT_MAX_TOKENS: usize = 8;
+/// Brownout cap on `top_k` for degraded sampled requests (greedy rows are
+/// already top-1 and stay untouched).
+pub const BROWNOUT_TOP_K: usize = 4;
+
 /// What the batcher routes back per job: the response plus the job's stage
 /// timings (populated when the batch executed; `None` on paths that never
 /// reached execution, e.g. a non-batchable op).
 pub struct Reply {
     pub response: Response,
     pub timings: Option<StageTimings>,
+    /// True when brownout degraded this request's parameters before
+    /// execution; the server echoes it as a `degraded:true` field.
+    pub degraded: bool,
 }
 
 impl Reply {
     /// A reply with no stage timings (inline answers, rejected jobs).
     pub fn bare(response: Response) -> Reply {
-        Reply { response, timings: None }
+        Reply { response, timings: None, degraded: false }
     }
 }
 
@@ -95,16 +119,23 @@ pub struct Job {
     /// with [`STREAM_CHANNEL_DEPTH`] so tokens are never dropped.
     pub stream: Option<mpsc::SyncSender<StreamDelta>>,
     /// Engine override for multi-model routing (`None` = the batcher's
-    /// default engine).  Jobs for different engines share the queue and
-    /// admission control but execute as separate kernel sub-batches.
+    /// default engine).  Each distinct engine gets its own admission lane
+    /// and executes as its own kernel sub-batch.
     pub engine: Option<Arc<Engine>>,
     /// Absolute shed deadline derived from the request's `deadline_ms`;
-    /// checked when the batch is assembled, before any kernel work.
+    /// checked when the batch is assembled (shed before any kernel work)
+    /// *and* at every decode-step boundary once executing.
     pub deadline: Option<Instant>,
     /// When the job entered the queue — the start of its queue-wait span.
     pub submitted: Instant,
     /// Echo this job's [`StageTimings`] in its response.
     pub trace: bool,
+    /// Cooperative cancel handle: the connection cancels it when the
+    /// client disappears, and the engine stops the job's decode at the
+    /// next lockstep step boundary, freeing the slot.
+    pub cancel: Option<CancelToken>,
+    /// Set by [`Batcher::submit`] when brownout degraded the request.
+    pub degraded: bool,
 }
 
 impl Job {
@@ -115,7 +146,17 @@ impl Job {
             .deadline_ms()
             .and_then(|ms| submitted.checked_add(Duration::from_millis(ms)));
         let trace = request.trace();
-        Job { request, respond, stream: None, engine: None, deadline, submitted, trace }
+        Job {
+            request,
+            respond,
+            stream: None,
+            engine: None,
+            deadline,
+            submitted,
+            trace,
+            cancel: None,
+            degraded: false,
+        }
     }
 }
 
@@ -136,6 +177,22 @@ pub struct BatchStats {
     pub overloaded: Arc<Counter>,
     /// Requests answered by the server, any op, any outcome.
     pub requests: Arc<Counter>,
+    /// Decodes cancelled mid-flight because the client disconnected.
+    pub cancelled_disconnect: Arc<Counter>,
+    /// Decodes cancelled mid-flight because `deadline_ms` expired.
+    pub cancelled_deadline: Arc<Counter>,
+    /// Generate requests degraded (clamped) by brownout before execution.
+    pub brownout_degraded: Arc<Counter>,
+    /// EWMA of queue wait in µs — the brownout trigger signal.
+    pub queue_ewma: Arc<Gauge>,
+    /// 1 while the queue-wait EWMA sits above the brownout threshold.
+    pub brownout_active: Arc<Gauge>,
+    /// Child restarts performed by the supervisor (seeded from the
+    /// `CCE_SUPERVISOR_RESTARTS` env the supervisor sets on each child, so
+    /// the *child's* `/metrics` exposes supervisor state).
+    pub supervisor_restarts: Arc<Counter>,
+    /// 1 when this process runs as a `--supervise` child.
+    pub supervisor_enabled: Arc<Gauge>,
     /// Jobs submitted but not yet picked up by a worker.
     queued: Arc<Gauge>,
     /// Jobs submitted but not yet answered (queued + executing).
@@ -149,11 +206,27 @@ pub struct BatchStats {
     pub stage_serialize: Arc<Histogram>,
     /// End-to-end request latency (receipt → response written), µs.
     pub request_us: Arc<Histogram>,
+    /// Brownout threshold in µs of queue-wait EWMA; 0 disables brownout.
+    brownout_us: u64,
 }
 
 impl BatchStats {
-    fn new() -> BatchStats {
+    fn new(brownout_us: u64) -> BatchStats {
         let r = Registry::new();
+        let supervisor_restarts = r.counter(
+            "serve_supervisor_restarts_total",
+            "Child restarts performed by the supervisor so far",
+        );
+        if let Ok(v) = std::env::var("CCE_SUPERVISOR_RESTARTS") {
+            if let Ok(n) = v.trim().parse::<u64>() {
+                supervisor_restarts.add(n);
+            }
+        }
+        let supervisor_enabled =
+            r.gauge("serve_supervisor_enabled", "1 when serving as a --supervise child");
+        if std::env::var("CCE_SUPERVISED").as_deref() == Ok("1") {
+            supervisor_enabled.set(1);
+        }
         BatchStats {
             batches: r.counter("serve_batches_total", "Batches executed by the micro-batcher"),
             jobs: r.counter("serve_batched_jobs_total", "Jobs executed through batches"),
@@ -171,6 +244,25 @@ impl BatchStats {
                 "Requests refused by admission control (bounded queue full)",
             ),
             requests: r.counter("serve_requests_total", "Requests answered, any op, any outcome"),
+            cancelled_disconnect: r.counter(
+                "serve_cancelled_disconnect_total",
+                "Decodes cancelled at a step boundary: client disconnected",
+            ),
+            cancelled_deadline: r.counter(
+                "serve_cancelled_deadline_total",
+                "Decodes cancelled at a step boundary: deadline_ms expired mid-decode",
+            ),
+            brownout_degraded: r.counter(
+                "serve_brownout_degraded_total",
+                "Generate requests degraded (clamped) by brownout",
+            ),
+            queue_ewma: r.gauge("serve_queue_ewma_us", "EWMA of job queue wait in microseconds"),
+            brownout_active: r.gauge(
+                "serve_brownout_active",
+                "1 while sustained queue delay holds brownout engaged",
+            ),
+            supervisor_restarts,
+            supervisor_enabled,
             queued: r.gauge("serve_queue_depth", "Jobs waiting for a batch worker"),
             in_flight: r.gauge("serve_in_flight", "Jobs submitted but not yet answered"),
             job_micros: r.gauge(
@@ -189,6 +281,7 @@ impl BatchStats {
                 "End-to-end request latency, receipt to response written",
             ),
             registry: r,
+            brownout_us,
         }
     }
 
@@ -202,17 +295,125 @@ impl BatchStats {
         self.jobs.add(batch_len as u64);
         self.max_batch.set_max(batch_len as i64);
     }
+
+    /// True while sustained queue delay (the EWMA, not one spike) sits at
+    /// or above the configured brownout threshold.
+    pub fn in_brownout(&self) -> bool {
+        self.brownout_us > 0 && self.queue_ewma.get().max(0) as u64 >= self.brownout_us
+    }
 }
 
 impl Default for BatchStats {
     fn default() -> BatchStats {
-        BatchStats::new()
+        BatchStats::new(0)
+    }
+}
+
+/// One model's FIFO admission lane, keyed by its engine's pointer
+/// identity (the same identity [`run_batch`] buckets sub-batches by).
+struct Lane {
+    key: usize,
+    jobs: VecDeque<Job>,
+}
+
+/// The lanes plus round-robin cursor, behind [`Queues`]' mutex.
+struct QueueState {
+    lanes: Vec<Lane>,
+    /// Round-robin cursor over `lanes`; advances on every probe so no
+    /// lane is favoured across batches.
+    rr: usize,
+    total: usize,
+    closed: bool,
+}
+
+impl QueueState {
+    /// Pop the next job round-robin across non-empty lanes.
+    fn take_rr(&mut self) -> Option<Job> {
+        let n = self.lanes.len();
+        for _ in 0..n {
+            let i = self.rr % n;
+            self.rr = self.rr.wrapping_add(1);
+            if let Some(job) = self.lanes[i].jobs.pop_front() {
+                self.total -= 1;
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+/// Bounded per-model admission lanes.  `depth` bounds each lane
+/// *independently*, so one model's backlog never consumes another
+/// model's admission budget.
+struct Queues {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    depth: usize,
+    default_key: usize,
+}
+
+impl Queues {
+    fn new(default_key: usize, depth: usize) -> Queues {
+        Queues {
+            state: Mutex::new(QueueState { lanes: Vec::new(), rr: 0, total: 0, closed: false }),
+            cv: Condvar::new(),
+            depth: depth.max(1),
+            default_key,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState> {
+        match self.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Enqueue into `key`'s lane; `Err(job)` when the lane is full or the
+    /// queues are closed.
+    fn push(&self, key: usize, job: Job) -> Result<(), Job> {
+        let mut state = self.lock();
+        if state.closed {
+            return Err(job);
+        }
+        let idx = match state.lanes.iter().position(|lane| lane.key == key) {
+            Some(idx) => idx,
+            None => {
+                state.lanes.push(Lane { key, jobs: VecDeque::new() });
+                state.lanes.len() - 1
+            }
+        };
+        if state.lanes[idx].jobs.len() >= self.depth {
+            return Err(job);
+        }
+        state.lanes[idx].jobs.push_back(job);
+        state.total += 1;
+        drop(state);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Refuse new work and wake every waiting worker.
+    fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Drain every remaining queued job (shutdown cleanup).
+    fn clear(&self) -> Vec<Job> {
+        let mut state = self.lock();
+        let mut left = Vec::with_capacity(state.total);
+        for lane in state.lanes.iter_mut() {
+            left.extend(lane.jobs.drain(..));
+        }
+        state.total = 0;
+        left
     }
 }
 
 /// The micro-batching scheduler.
 pub struct Batcher {
-    tx: mpsc::SyncSender<Job>,
+    queues: Arc<Queues>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     worker_count: usize,
     stats: Arc<BatchStats>,
@@ -220,30 +421,32 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn `workers` batch workers over a queue of depth `queue_depth`.
+    /// Spawn `workers` batch workers over per-model lanes of depth
+    /// `queue_depth` each.  `brownout_queue_ms` is the sustained
+    /// queue-delay threshold that engages brownout (0 disables it).
     pub fn start(
         engine: Arc<Engine>,
         workers: usize,
         max_batch: usize,
         max_wait: Duration,
         queue_depth: usize,
+        brownout_queue_ms: u64,
     ) -> Batcher {
-        let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth.max(1));
-        let rx = Arc::new(Mutex::new(rx));
-        let stats = Arc::new(BatchStats::new());
+        let queues = Arc::new(Queues::new(Arc::as_ptr(&engine) as usize, queue_depth));
+        let stats = Arc::new(BatchStats::new(brownout_queue_ms.saturating_mul(1000)));
         let stop = Arc::new(AtomicBool::new(false));
         let max_batch = max_batch.max(1);
         let worker_count = workers.max(1);
         let handles = (0..worker_count)
             .map(|_| {
                 let engine = engine.clone();
-                let rx = rx.clone();
+                let queues = queues.clone();
                 let stats = stats.clone();
                 let stop = stop.clone();
                 std::thread::spawn(move || {
                     worker_loop(WorkerCtx {
                         engine: &engine,
-                        rx: &rx,
+                        queues: &queues,
                         stats: &stats,
                         stop: &stop,
                         max_batch,
@@ -252,30 +455,40 @@ impl Batcher {
                 })
             })
             .collect();
-        Batcher { tx, workers: Mutex::new(handles), worker_count, stats, stop }
+        Batcher { queues, workers: Mutex::new(handles), worker_count, stats, stop }
     }
 
-    /// Enqueue a job.  `Err(job)` means the queue is full (backpressure) or
-    /// the batcher has shut down; the job is handed back so the caller can
-    /// answer the client.
-    pub fn submit(&self, job: Job) -> Result<(), Job> {
+    /// Enqueue a job.  `Err(job)` means the model's lane is full
+    /// (backpressure) or the batcher has shut down; the job is handed back
+    /// so the caller can answer the client.  While brownout is engaged,
+    /// generate jobs are degraded (clamped `max_tokens`/`top_k`) before
+    /// admission and marked [`Job::degraded`].
+    pub fn submit(&self, mut job: Job) -> Result<(), Job> {
         if self.stop.load(Ordering::SeqCst) {
             return Err(job);
         }
+        if self.stats.in_brownout() {
+            if let Request::Generate(params) = &mut job.request {
+                if degrade(params) {
+                    job.degraded = true;
+                    self.stats.brownout_degraded.inc();
+                }
+            }
+        }
+        let key = job
+            .engine
+            .as_ref()
+            .map(|engine| Arc::as_ptr(engine) as usize)
+            .unwrap_or(self.queues.default_key);
         // Count optimistically so a racing drain() can never observe the
         // queue push without the in-flight credit.
         self.stats.queued.add(1);
         self.stats.in_flight.add(1);
-        self.tx
-            .try_send(job)
-            .map_err(|err| {
-                self.stats.queued.sub(1);
-                self.stats.in_flight.sub(1);
-                match err {
-                    mpsc::TrySendError::Full(job) => job,
-                    mpsc::TrySendError::Disconnected(job) => job,
-                }
-            })
+        self.queues.push(key, job).map_err(|job| {
+            self.stats.queued.sub(1);
+            self.stats.in_flight.sub(1);
+            job
+        })
     }
 
     pub fn stats(&self) -> &BatchStats {
@@ -322,6 +535,7 @@ impl Batcher {
     /// for a graceful shutdown.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.queues.close();
         let mut workers = match self.workers.lock() {
             Ok(guard) => guard,
             Err(poisoned) => poisoned.into_inner(),
@@ -329,6 +543,46 @@ impl Batcher {
         for handle in workers.drain(..) {
             let _ = handle.join();
         }
+        // Release the gauge credit of jobs the workers never picked up;
+        // dropping them hangs up their response channels.
+        for _job in self.queues.clear() {
+            self.stats.queued.sub(1);
+            self.stats.in_flight.sub(1);
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Brownout degradation: clamp the expensive knobs of a generate request.
+/// Returns `true` when anything changed (the job is marked `degraded`).
+fn degrade(params: &mut GenParams) -> bool {
+    let mut changed = false;
+    if params.max_tokens > BROWNOUT_MAX_TOKENS {
+        params.max_tokens = BROWNOUT_MAX_TOKENS;
+        changed = true;
+    }
+    if params.temperature > 0.0 && (params.top_k == 0 || params.top_k > BROWNOUT_TOP_K) {
+        params.top_k = BROWNOUT_TOP_K;
+        changed = true;
+    }
+    changed
+}
+
+/// Fold one job's queue wait into the brownout EWMA (`new = 7/8 old +
+/// 1/8 sample`, no bootstrap jump — brownout must reflect *sustained*
+/// delay, so a single spike moves the signal only an eighth of the way).
+fn note_queue_delay(stats: &BatchStats, queue_us: u64) {
+    let sample = queue_us.min(i64::MAX as u64) as i64;
+    let old = stats.queue_ewma.get().max(0);
+    let next = (old - old / 8 + sample / 8).max(0);
+    stats.queue_ewma.set(next);
+    if stats.brownout_us > 0 {
+        stats.brownout_active.set((next as u64 >= stats.brownout_us) as i64);
     }
 }
 
@@ -336,7 +590,7 @@ impl Batcher {
 /// signatures readable).
 struct WorkerCtx<'a> {
     engine: &'a Arc<Engine>,
-    rx: &'a Mutex<mpsc::Receiver<Job>>,
+    queues: &'a Queues,
     stats: &'a BatchStats,
     stop: &'a AtomicBool,
     max_batch: usize,
@@ -351,26 +605,40 @@ fn worker_loop(ctx: WorkerCtx<'_>) {
         let mut jobs: Vec<Job> = Vec::new();
         let assemble_started;
         {
-            let guard = match ctx.rx.lock() {
-                Ok(guard) => guard,
-                Err(poisoned) => poisoned.into_inner(),
-            };
-            match guard.recv_timeout(IDLE_POLL) {
-                Ok(job) => jobs.push(job),
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            let mut state = ctx.queues.lock();
+            loop {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(job) = state.take_rr() {
+                    jobs.push(job);
+                    break;
+                }
+                if state.closed {
+                    return;
+                }
+                let (guard, _) = match ctx.queues.cv.wait_timeout(state, IDLE_POLL) {
+                    Ok(res) => res,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                state = guard;
             }
             assemble_started = Instant::now();
             let deadline = assemble_started + ctx.max_wait;
-            while jobs.len() < ctx.max_batch {
+            while jobs.len() < ctx.max_batch && !ctx.stop.load(Ordering::SeqCst) {
+                if let Some(job) = state.take_rr() {
+                    jobs.push(job);
+                    continue;
+                }
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= deadline || state.closed {
                     break;
                 }
-                match guard.recv_timeout(deadline - now) {
-                    Ok(job) => jobs.push(job),
-                    Err(_) => break,
-                }
+                let (guard, _) = match ctx.queues.cv.wait_timeout(state, deadline - now) {
+                    Ok(res) => res,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                state = guard;
             }
         }
         let assemble_us = assemble_started.elapsed().as_micros() as u64;
@@ -417,8 +685,12 @@ struct Pending<T> {
     payload: T,
     respond: mpsc::Sender<Reply>,
     stream: Option<mpsc::SyncSender<StreamDelta>>,
+    /// Step-boundary controls (cancel token + absolute deadline) the
+    /// engine consults between lockstep decode steps.
+    ctl: StepCtl,
     queue_us: u64,
     trace: bool,
+    degraded: bool,
 }
 
 /// Append `pending` to the sub-batch bucket of `engine`, opening a new
@@ -450,16 +722,20 @@ fn resolve<T>(
     stats.stage_queue.record(p.queue_us);
     stats.stage_kernel.record(kernel_us);
     let timings = StageTimings { queue_us: p.queue_us, assemble_us, kernel_us };
-    let _ = p.respond.send(Reply { response, timings: p.trace.then_some(timings) });
+    let _ = p.respond.send(Reply {
+        response,
+        timings: p.trace.then_some(timings),
+        degraded: p.degraded,
+    });
     stats.in_flight.sub(1);
 }
 
 /// Execute one assembled batch and route the responses.  Every job is
 /// answered exactly once and decrements `in_flight` exactly once, on every
-/// path — success, engine error, shed deadline, or isolated panic.
-/// Multi-model batches split into one kernel sub-batch per distinct
-/// engine; jobs carrying a [`Job::stream`] channel get their tokens
-/// forwarded as the lockstep decode loop emits them.
+/// path — success, engine error, shed deadline, cancellation, or isolated
+/// panic.  Multi-model batches split into one kernel sub-batch per
+/// distinct engine; jobs carrying a [`Job::stream`] channel get their
+/// tokens forwarded as the lockstep decode loop emits them.
 fn run_batch(default_engine: &Arc<Engine>, jobs: Vec<Job>, stats: &BatchStats, assemble_us: u64) {
     let answer = |respond: &mpsc::Sender<Reply>, reply: Reply| {
         let _ = respond.send(reply); // client may have hung up
@@ -469,6 +745,8 @@ fn run_batch(default_engine: &Arc<Engine>, jobs: Vec<Job>, stats: &BatchStats, a
     let mut gens: Vec<(Arc<Engine>, Vec<Pending<GenParams>>)> = Vec::new();
     let mut scores: Vec<(Arc<Engine>, Vec<Pending<String>>)> = Vec::new();
     for job in jobs {
+        let queue_us = now.saturating_duration_since(job.submitted).as_micros() as u64;
+        note_queue_delay(stats, queue_us);
         // Deadline shed happens here — after queueing, before kernels.
         if job.deadline.is_some_and(|deadline| now >= deadline) {
             stats.shed_deadline.inc();
@@ -481,8 +759,9 @@ fn run_batch(default_engine: &Arc<Engine>, jobs: Vec<Job>, stats: &BatchStats, a
             );
             continue;
         }
-        let queue_us = now.saturating_duration_since(job.submitted).as_micros() as u64;
         let trace = job.trace;
+        let degraded = job.degraded;
+        let ctl = StepCtl { cancel: job.cancel, deadline: job.deadline };
         let engine = job.engine.unwrap_or_else(|| default_engine.clone());
         match job.request {
             Request::Generate(params) => bucket_for(
@@ -492,14 +771,24 @@ fn run_batch(default_engine: &Arc<Engine>, jobs: Vec<Job>, stats: &BatchStats, a
                     payload: params,
                     respond: job.respond,
                     stream: job.stream,
+                    ctl,
                     queue_us,
                     trace,
+                    degraded,
                 },
             ),
             Request::Score { text, .. } => bucket_for(
                 &mut scores,
                 engine,
-                Pending { payload: text, respond: job.respond, stream: None, queue_us, trace },
+                Pending {
+                    payload: text,
+                    respond: job.respond,
+                    stream: None,
+                    ctl,
+                    queue_us,
+                    trace,
+                    degraded,
+                },
             ),
             // Info/metrics/shutdown are answered inline by the connection;
             // they never enter the queue.
@@ -514,39 +803,59 @@ fn run_batch(default_engine: &Arc<Engine>, jobs: Vec<Job>, stats: &BatchStats, a
     }
     for (engine, group) in &gens {
         let params: Vec<GenParams> = group.iter().map(|p| p.payload.clone()).collect();
+        let ctls: Vec<StepCtl> = group.iter().map(|p| p.ctl.clone()).collect();
         let streams: Vec<Option<mpsc::SyncSender<StreamDelta>>> =
             group.iter().map(|p| p.stream.clone()).collect();
-        let any_stream = streams.iter().any(|s| s.is_some());
         let kernel_started = Instant::now();
         let results = catch_unwind(AssertUnwindSafe(|| {
             faults::maybe_panic("batcher.panic");
-            if any_stream {
-                engine.generate_batch_with(&params, &mut |row, token, logprob| {
-                    if let Some(tx) = &streams[row] {
-                        // try_send: the channel is sized past the token cap
-                        // (STREAM_CHANNEL_DEPTH), so Full is impossible; a
-                        // Disconnected receiver means the client hung up,
-                        // and the decode simply finishes unobserved.
-                        let _ = tx.try_send(StreamDelta {
-                            token,
-                            logprob,
-                            text: engine.decode_token(token),
-                        });
-                    }
-                })
-            } else {
-                engine.generate_batch(&params)
-            }
+            engine.generate_batch_ctl(&params, &ctls, &mut |row, token, logprob| {
+                if let Some(tx) = &streams[row] {
+                    // try_send: the channel is sized past the token cap
+                    // (STREAM_CHANNEL_DEPTH), so Full is impossible; a
+                    // Disconnected receiver means the client hung up,
+                    // and the decode simply finishes unobserved.
+                    let _ = tx.try_send(StreamDelta {
+                        token,
+                        logprob,
+                        text: engine.decode_token(token),
+                    });
+                }
+            })
         }));
         let kernel_us = kernel_started.elapsed().as_micros() as u64;
         match results {
             Ok(results) => {
                 for (pending, result) in group.iter().zip(results) {
                     let response = match result {
-                        Ok(out) => Response::Generate {
-                            text: out.text,
-                            tokens: out.tokens,
-                            logprobs: out.logprobs,
+                        Ok(out) => match out.cancelled {
+                            // The client is gone: count it, route the
+                            // partial output for uniform accounting (the
+                            // hangup means nobody reads it).
+                            Some(CancelReason::Disconnect) => {
+                                stats.cancelled_disconnect.inc();
+                                Response::Generate {
+                                    text: out.text,
+                                    tokens: out.tokens,
+                                    logprobs: out.logprobs,
+                                }
+                            }
+                            Some(CancelReason::Deadline) => {
+                                stats.cancelled_deadline.inc();
+                                Response::err(
+                                    ErrorCode::DeadlineExceeded,
+                                    format!(
+                                        "deadline_ms expired mid-decode; {} token(s) decoded \
+                                         before cancellation",
+                                        out.tokens.len()
+                                    ),
+                                )
+                            }
+                            None => Response::Generate {
+                                text: out.text,
+                                tokens: out.tokens,
+                                logprobs: out.logprobs,
+                            },
                         },
                         // Engine-level rejections are request-shaped
                         // problems (bad temperature/top_k, oversize).
@@ -623,6 +932,7 @@ mod tests {
             4,
             Duration::from_millis(2),
             16,
+            0,
         );
         let mut rxs = Vec::new();
         for i in 0..6 {
@@ -668,7 +978,7 @@ mod tests {
 
     #[test]
     fn traced_jobs_echo_stage_timings() {
-        let batcher = Batcher::start(tiny_engine(), 1, 2, Duration::from_millis(1), 8);
+        let batcher = Batcher::start(tiny_engine(), 1, 2, Duration::from_millis(1), 8, 0);
         let (tx, rx) = mpsc::channel();
         let request =
             Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: true, model: None };
@@ -691,7 +1001,7 @@ mod tests {
     fn streaming_jobs_forward_every_token_and_engines_split_sub_batches() {
         let engine_a = tiny_engine();
         let engine_b = tiny_engine();
-        let batcher = Batcher::start(engine_a.clone(), 1, 8, Duration::from_millis(10), 16);
+        let batcher = Batcher::start(engine_a.clone(), 1, 8, Duration::from_millis(10), 16, 0);
         let mk = || {
             Request::Generate(GenParams {
                 prompt: "the".into(),
@@ -747,6 +1057,7 @@ mod tests {
             1,
             Duration::from_millis(1),
             1,
+            0,
         );
         batcher.shutdown(); // workers gone; queue still bounded
         let (tx, _rx) = mpsc::channel();
@@ -765,6 +1076,7 @@ mod tests {
             4,
             Duration::from_millis(1),
             16,
+            0,
         );
         let (tx, rx) = mpsc::channel();
         // A deadline already in the past when the worker assembles.
@@ -789,6 +1101,118 @@ mod tests {
             served_before,
             "a shed job must never reach the engine"
         );
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn round_robin_interleaves_lanes() {
+        let mk = |text: &str| {
+            let (tx, _rx) = mpsc::channel();
+            Job::new(
+                Request::Score { text: text.into(), deadline_ms: 0, trace: false, model: None },
+                tx,
+            )
+        };
+        let mut hot = Lane { key: 1, jobs: VecDeque::new() };
+        hot.jobs.extend([mk("hot"), mk("hot"), mk("hot")]);
+        let mut cold = Lane { key: 2, jobs: VecDeque::new() };
+        cold.jobs.extend([mk("cold"), mk("cold")]);
+        let mut state = QueueState { lanes: vec![hot, cold], rr: 0, total: 5, closed: false };
+        let mut order = Vec::new();
+        while let Some(job) = state.take_rr() {
+            if let Request::Score { text, .. } = &job.request {
+                order.push(text.clone());
+            }
+        }
+        // A 3-deep hot lane cannot starve the cold lane: strict alternation
+        // until the cold lane runs dry.
+        assert_eq!(order, ["hot", "cold", "hot", "cold", "hot"]);
+        assert_eq!(state.total, 0);
+    }
+
+    #[test]
+    fn per_lane_depth_bounds_each_model_independently() {
+        let queues = Queues::new(7, 2);
+        let mk = || {
+            let (tx, _rx) = mpsc::channel();
+            Job::new(Request::Info, tx)
+        };
+        assert!(queues.push(7, mk()).is_ok());
+        assert!(queues.push(7, mk()).is_ok());
+        assert!(queues.push(7, mk()).is_err(), "default lane at depth must refuse");
+        assert!(queues.push(9, mk()).is_ok(), "another model's lane has its own budget");
+        queues.close();
+        assert!(queues.push(9, mk()).is_err(), "closed queues accept nothing");
+        assert_eq!(queues.clear().len(), 3);
+    }
+
+    #[test]
+    fn brownout_degrades_generate_params_before_shedding() {
+        let batcher = Batcher::start(tiny_engine(), 1, 4, Duration::from_millis(1), 16, 1);
+        // Force the queue-delay EWMA over the 1 ms threshold directly;
+        // submit() reads it through BatchStats::in_brownout.
+        batcher.stats().queue_ewma.set(1_000_000);
+        assert!(batcher.stats().in_brownout());
+        let (tx, rx) = mpsc::channel();
+        let request = Request::Generate(GenParams {
+            prompt: "the".into(),
+            max_tokens: 64,
+            temperature: 0.7,
+            top_k: 0,
+            seed: 7,
+            ..GenParams::default()
+        });
+        batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(reply.degraded, "brownout must mark the reply degraded");
+        match reply.response {
+            Response::Generate { tokens, .. } => assert!(
+                tokens.len() <= BROWNOUT_MAX_TOKENS,
+                "degraded job must respect the clamped budget: {} tokens",
+                tokens.len()
+            ),
+            other => panic!("unexpected response: {other:?}"),
+        }
+        assert_eq!(batcher.stats().brownout_degraded.get(), 1);
+        // Scores pass through undegraded (nothing to clamp).
+        batcher.stats().queue_ewma.set(1_000_000);
+        let (tx, rx) = mpsc::channel();
+        let request =
+            Request::Score { text: "the cat sat".into(), deadline_ms: 0, trace: false, model: None };
+        batcher.submit(Job::new(request, tx)).map_err(|_| ()).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(!reply.degraded, "scores are never degraded");
+        assert_eq!(batcher.stats().brownout_degraded.get(), 1);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn a_disconnected_clients_job_is_cancelled_and_counted() {
+        let engine = tiny_engine();
+        let batcher = Batcher::start(engine.clone(), 1, 2, Duration::from_millis(1), 8, 0);
+        let (tx, rx) = mpsc::channel();
+        let token = CancelToken::new();
+        token.cancel(); // the client is already gone when the batch assembles
+        let mut job = Job::new(
+            Request::Generate(GenParams {
+                prompt: "the".into(),
+                max_tokens: 64,
+                ..GenParams::default()
+            }),
+            tx,
+        );
+        job.cancel = Some(token);
+        batcher.submit(job).map_err(|_| ()).unwrap();
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        match reply.response {
+            Response::Generate { tokens, .. } => assert!(
+                tokens.is_empty(),
+                "cancelled before the first step boundary must decode nothing: {tokens:?}"
+            ),
+            other => panic!("unexpected response: {other:?}"),
+        }
+        assert_eq!(batcher.stats().cancelled_disconnect.get(), 1);
+        assert_eq!(batcher.in_flight(), 0, "the cancelled job released its slot");
         batcher.shutdown();
     }
 }

@@ -23,7 +23,9 @@
 //! `O(N·D + threads·N_B·V_B)` bound.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -45,6 +47,52 @@ pub struct GenOut {
     pub logprobs: Vec<f32>,
     /// Decoded text (specials dropped).
     pub text: String,
+    /// `Some(reason)` when the decode stopped early at a lockstep step
+    /// boundary (client disconnect or mid-decode deadline); the fields
+    /// above hold everything decoded up to that step.
+    pub cancelled: Option<CancelReason>,
+}
+
+/// Why a cooperative cancel fired (feeds `serve_cancelled_*_total`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The client went away (SSE write error) — nobody will read the rest.
+    Disconnect,
+    /// `deadline_ms` expired while decoding — the caller has given up.
+    Deadline,
+}
+
+/// Shared cancel flag for one in-flight request: the serving layer sets
+/// it (dead SSE client), the engine polls it at every lockstep decode-step
+/// boundary.  Clone freely — all clones observe the same flag.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent, any thread).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-request step control for [`Engine::generate_batch_ctl`]: both
+/// fields optional, both checked once per lockstep decode step.  The
+/// `engine.cancel_ignore` failpoint disables the checks (a simulated
+/// non-cooperative engine, for the chaos suite).
+#[derive(Debug, Clone, Default)]
+pub struct StepCtl {
+    pub cancel: Option<CancelToken>,
+    /// Absolute deadline (same instant the batcher uses for queued
+    /// shedding) — enforced mid-decode here.
+    pub deadline: Option<Instant>,
 }
 
 /// O(D) incremental bag-of-context state for lockstep decoding: the
@@ -287,6 +335,22 @@ impl Engine {
         ])
     }
 
+    /// Analytic upper bound on the working set a score request with `rows`
+    /// next-token positions needs: the fused `N×D` f32 hidden buffer +
+    /// targets, plus the blocked kernel's `threads·N_B·V_B` tile term —
+    /// the O(N·D + threads·N_B·V_B) bound `tests/serve.rs` pins, priced
+    /// per request so admission control (`--max-workspace-bytes`) can
+    /// reject work that would void it *before* any allocation.
+    pub fn score_workspace_bound(&self, rows: usize) -> u64 {
+        let hidden = rows as u64 * self.d_model as u64 * 4;
+        let targets = rows as u64 * 4;
+        let tile = self.opts.resolved_threads() as u64
+            * self.opts.n_block as u64
+            * self.opts.v_block as u64
+            * 4;
+        hidden + targets + tile
+    }
+
     fn note_workspace(&self, bytes: usize) {
         self.peak_workspace.fetch_max(bytes as u64, Ordering::Relaxed);
         // Mirror into the process-global registry so /metrics sees the
@@ -424,6 +488,23 @@ impl Engine {
         reqs: &[GenParams],
         on_token: &mut dyn FnMut(usize, i32, f32),
     ) -> Vec<Result<GenOut>> {
+        self.generate_batch_ctl(reqs, &[], on_token)
+    }
+
+    /// [`Engine::generate_batch_with`] plus per-request step control:
+    /// `ctls[i]` (when present) carries a cancel token and/or an absolute
+    /// deadline for request `i`, both checked at every lockstep decode-step
+    /// boundary.  A fired control marks the slot done — its remaining steps
+    /// are never decoded, the batch slot frees immediately, and the
+    /// returned [`GenOut`] reports the partial output with
+    /// [`GenOut::cancelled`] set.  Requests without a control entry decode
+    /// to completion exactly as before.
+    pub fn generate_batch_ctl(
+        &self,
+        reqs: &[GenParams],
+        ctls: &[StepCtl],
+        on_token: &mut dyn FnMut(usize, i32, f32),
+    ) -> Vec<Result<GenOut>> {
         let mut slots: Vec<Slot> = reqs.iter().map(|p| self.open_slot(p)).collect();
         let mut streamed = vec![0usize; slots.len()];
         loop {
@@ -431,6 +512,27 @@ impl Engine {
             // catch_unwind boundary; a stall simulates a slow kernel step.
             crate::util::faults::maybe_panic("engine.step.panic");
             crate::util::faults::stall("engine.step.stall_ms");
+            // Cooperative cancellation: poll each live slot's control at
+            // the step boundary — the only place a slot can stop early, so
+            // a fired token costs at most one more kernel step.  The
+            // `engine.cancel_ignore` failpoint simulates an engine that
+            // never cooperates (chaos coverage for the old behavior).
+            if !ctls.is_empty() && crate::util::faults::value("engine.cancel_ignore").is_none() {
+                let now = Instant::now();
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    if slot.done || slot.err.is_some() {
+                        continue;
+                    }
+                    let Some(ctl) = ctls.get(i) else { continue };
+                    if ctl.cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                        slot.done = true;
+                        slot.cancelled = Some(CancelReason::Disconnect);
+                    } else if ctl.deadline.is_some_and(|dl| now >= dl) {
+                        slot.done = true;
+                        slot.cancelled = Some(CancelReason::Deadline);
+                    }
+                }
+            }
             let active: Vec<usize> = slots
                 .iter()
                 .enumerate()
@@ -483,6 +585,7 @@ impl Engine {
                     text: self.tokenizer.decode(&s.out_tokens),
                     tokens: s.out_tokens,
                     logprobs: s.out_logprobs,
+                    cancelled: s.cancelled,
                 }),
             })
             .collect()
@@ -499,6 +602,7 @@ impl Engine {
             out_logprobs: Vec::new(),
             rng: Rng::new(params.seed ^ 0x5E12_7E57),
             done: false,
+            cancelled: None,
             err: None,
         };
         if !params.temperature.is_finite() || params.temperature < 0.0 {
@@ -708,6 +812,8 @@ struct Slot<'a> {
     out_logprobs: Vec<f32>,
     rng: Rng,
     done: bool,
+    /// Set when a step-boundary control stopped the decode early.
+    cancelled: Option<CancelReason>,
     err: Option<String>,
 }
 
@@ -898,6 +1004,111 @@ mod tests {
             outs[0].as_ref().unwrap().tokens,
             "observer changed greedy decode"
         );
+    }
+
+    #[test]
+    fn cancel_token_stops_decode_at_the_next_step_boundary() {
+        let engine = tiny_engine();
+        let reqs =
+            vec![GenParams { prompt: "the cat".into(), max_tokens: 32, ..GenParams::default() }];
+        // Cancel from inside the per-token observer: fires between kernel
+        // steps, so the decode must stop within one step of the signal —
+        // deterministic proof, no timing involved.
+        let token = CancelToken::new();
+        let ctls = vec![StepCtl { cancel: Some(token.clone()), deadline: None }];
+        let mut seen = 0usize;
+        let outs = engine.generate_batch_ctl(&reqs, &ctls, &mut |_, _, _| {
+            seen += 1;
+            if seen == 1 {
+                token.cancel();
+            }
+        });
+        let out = outs[0].as_ref().unwrap();
+        // Cancelled after the first emitted token: at most one more step
+        // can decode before the boundary check fires.  (The model may
+        // legitimately finish first by emitting EOS — accept that too.)
+        let finished_naturally = out.tokens.last() == Some(&crate::tokenizer::EOS);
+        assert!(
+            out.cancelled == Some(CancelReason::Disconnect) || finished_naturally,
+            "decode ran to completion past a cancelled token: {:?}",
+            out.tokens
+        );
+        assert!(
+            out.tokens.len() <= 2,
+            "cancel after token 1 must stop within one step, got {} tokens",
+            out.tokens.len()
+        );
+        assert_eq!(out.tokens.len(), out.logprobs.len());
+        // A pre-cancelled slot never decodes a single token, and does not
+        // disturb its batch neighbours.
+        let pre = CancelToken::new();
+        pre.cancel();
+        let pair = vec![
+            GenParams { prompt: "the".into(), max_tokens: 4, ..GenParams::default() },
+            GenParams { prompt: "the".into(), max_tokens: 4, ..GenParams::default() },
+        ];
+        let ctls = vec![StepCtl { cancel: Some(pre), deadline: None }, StepCtl::default()];
+        let outs = engine.generate_batch_ctl(&pair, &ctls, &mut |_, _, _| {});
+        let a = outs[0].as_ref().unwrap();
+        let b = outs[1].as_ref().unwrap();
+        assert_eq!(a.cancelled, Some(CancelReason::Disconnect));
+        assert!(a.tokens.is_empty());
+        assert_eq!(a.text, "");
+        assert!(b.cancelled.is_none());
+        let solo = engine.generate_batch(&pair[1..]);
+        assert_eq!(b.tokens, solo[0].as_ref().unwrap().tokens, "cancel leaked into neighbour");
+    }
+
+    #[test]
+    fn expired_deadline_cancels_mid_decode() {
+        let engine = tiny_engine();
+        let reqs =
+            vec![GenParams { prompt: "the cat".into(), max_tokens: 32, ..GenParams::default() }];
+        // An already-expired deadline is caught at the very first step
+        // boundary: zero tokens decoded, reason = Deadline.
+        let ctls = vec![StepCtl {
+            cancel: None,
+            deadline: Some(Instant::now() - std::time::Duration::from_millis(1)),
+        }];
+        let outs = engine.generate_batch_ctl(&reqs, &ctls, &mut |_, _, _| {});
+        let out = outs[0].as_ref().unwrap();
+        assert_eq!(out.cancelled, Some(CancelReason::Deadline));
+        assert!(out.tokens.is_empty(), "expired deadline still decoded {:?}", out.tokens);
+        // A generous deadline never fires.
+        let ctls = vec![StepCtl {
+            cancel: None,
+            deadline: Some(Instant::now() + std::time::Duration::from_secs(300)),
+        }];
+        let outs = engine.generate_batch_ctl(&reqs, &ctls, &mut |_, _, _| {});
+        assert!(outs[0].as_ref().unwrap().cancelled.is_none());
+        // A disconnect outranks a dead deadline only because it is checked
+        // first — either way the slot stops; pin the precedence so the
+        // counters stay stable.
+        let both = CancelToken::new();
+        both.cancel();
+        let ctls = vec![StepCtl {
+            cancel: Some(both),
+            deadline: Some(Instant::now() - std::time::Duration::from_millis(1)),
+        }];
+        let outs = engine.generate_batch_ctl(&reqs, &ctls, &mut |_, _, _| {});
+        assert_eq!(outs[0].as_ref().unwrap().cancelled, Some(CancelReason::Disconnect));
+    }
+
+    #[test]
+    fn score_workspace_bound_prices_the_fused_problem() {
+        let engine = tiny_engine();
+        let tile = engine.opts.resolved_threads() as u64
+            * engine.opts.n_block as u64
+            * engine.opts.v_block as u64
+            * 4;
+        assert_eq!(engine.score_workspace_bound(0), tile, "zero rows = tile term only");
+        let rows = 100u64;
+        assert_eq!(
+            engine.score_workspace_bound(rows as usize),
+            rows * engine.d_model as u64 * 4 + rows * 4 + tile
+        );
+        // Monotone in rows — admission can binary-search a cap safely.
+        assert!(engine.score_workspace_bound(200) > engine.score_workspace_bound(100));
     }
 
     #[test]

@@ -22,6 +22,9 @@
 //! * [`server`]   — `std::net::TcpListener` front end (line-JSON + HTTP on
 //!   separate listeners, sharing one batcher); [`client`] — the matching
 //!   blocking client.
+//! * [`supervisor`] — the `--supervise` parent: spawn the listener as a
+//!   child process, restart on crash with backoff + jitter, give up on
+//!   crash loops, forward SIGTERM as a drain request.
 //!
 //! CLI: `cce serve --checkpoint runs/web/final.ckpt --port 7343`, then
 //! `cce client --port 7343 --prompt "the"`.  `cce servebench` drives a
@@ -41,9 +44,11 @@ pub mod http;
 pub mod protocol;
 pub mod server;
 pub mod sse;
+pub mod supervisor;
 
 pub use batcher::{BatchStats, Batcher, Job, StreamDelta, STREAM_CHANNEL_DEPTH};
 pub use client::{Client, ClientConfig, ClientStats, RetryPolicy};
-pub use engine::{ContextBag, Engine, GenOut, ScoreRes};
+pub use engine::{CancelReason, CancelToken, ContextBag, Engine, GenOut, ScoreRes, StepCtl};
 pub use protocol::{ErrorCode, GenParams, Request, Response};
 pub use server::{serve, serve_multi, ServeConfig, Server};
+pub use supervisor::{SupervisorConfig, CRASH_LOOP_EXIT};

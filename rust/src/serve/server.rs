@@ -39,7 +39,7 @@
 
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -48,7 +48,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::obs::{self, Counter, Gauge, Histogram, Registry, StageTimings};
 use crate::serve::batcher::{Batcher, Job, STREAM_CHANNEL_DEPTH};
-use crate::serve::engine::Engine;
+use crate::serve::engine::{CancelToken, Engine};
 use crate::serve::http::{self, Conn, HttpError, HttpRequest, Limits};
 use crate::serve::protocol::{score_from_json, ErrorCode, GenParams, Request, Response};
 use crate::serve::sse::SseWriter;
@@ -95,6 +95,14 @@ pub struct ServeConfig {
     /// ephemeral): `POST /v1/generate`, `POST /v1/score`, `GET /metrics`,
     /// `GET /healthz`.  `None` = line-JSON only.
     pub http_addr: Option<String>,
+    /// Sustained queue-delay threshold (ms of queue-wait EWMA) that
+    /// engages brownout: generate requests get clamped (`degraded:true`)
+    /// before admission control sheds with 429.  0 disables brownout.
+    pub brownout_queue_ms: u64,
+    /// Reject score requests whose fused-problem workspace bound
+    /// ([`Engine::score_workspace_bound`]) exceeds this many bytes, before
+    /// they ever queue.  0 disables the guard.
+    pub max_workspace_bytes: u64,
 }
 
 impl Default for ServeConfig {
@@ -110,6 +118,8 @@ impl Default for ServeConfig {
             drain: Duration::from_secs(5),
             metrics_addr: None,
             http_addr: None,
+            brownout_queue_ms: 0,
+            max_workspace_bytes: 0,
         }
     }
 }
@@ -118,6 +128,10 @@ impl Default for ServeConfig {
 /// default route.  Shared read-only by both listeners.
 struct Router {
     models: Vec<(String, Arc<Engine>)>,
+    /// The `--max-workspace-bytes` admission bound (0 = off); carried here
+    /// because the router is the one config-derived object both listeners
+    /// already share.
+    max_workspace_bytes: u64,
 }
 
 impl Router {
@@ -228,7 +242,7 @@ pub fn serve_multi(models: Vec<(String, Arc<Engine>)>, cfg: &ServeConfig) -> Res
             bail!("duplicate model tag {tag:?}");
         }
     }
-    let router = Arc::new(Router { models });
+    let router = Arc::new(Router { models, max_workspace_bytes: cfg.max_workspace_bytes });
     let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
         .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
     let addr = listener.local_addr()?;
@@ -240,6 +254,7 @@ pub fn serve_multi(models: Vec<(String, Arc<Engine>)>, cfg: &ServeConfig) -> Res
         cfg.max_batch,
         cfg.max_wait,
         cfg.queue_depth,
+        cfg.brownout_queue_ms,
     ));
     let http_spec = cfg.http_addr.as_ref().or(cfg.metrics_addr.as_ref());
     let (http, http_addr) = match http_spec {
@@ -291,6 +306,13 @@ impl Server {
         let _ = TcpStream::connect(self.addr);
     }
 
+    /// A detached stop handle: replicates [`Server::stop`] without
+    /// borrowing the server, so a signal-watcher thread can hold it while
+    /// the main thread blocks in [`Server::join`].
+    pub fn stopper(&self) -> Stopper {
+        Stopper { stop: self.stop.clone(), addr: self.addr }
+    }
+
     /// Where the HTTP listener is bound, when one was configured.
     pub fn http_addr(&self) -> Option<SocketAddr> {
         self.http_addr
@@ -325,6 +347,27 @@ impl Server {
             let _ = handle.join();
         }
         Ok(())
+    }
+}
+
+/// A clonable, detached handle that can request server shutdown from any
+/// thread (the SIGTERM/SIGINT watcher uses one; see `cmd_serve`).
+#[derive(Clone)]
+pub struct Stopper {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl Stopper {
+    /// Request shutdown, waking the accept loop (same as [`Server::stop`]).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// True once shutdown has been requested by anyone.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
     }
 }
 
@@ -429,12 +472,12 @@ fn handle_line(
     faults::stall("conn.stall_ms");
     let received = Instant::now();
     let stats = batcher.stats();
-    let (response, timings) = match Request::parse(line) {
+    let (response, timings, degraded) = match Request::parse(line) {
         Err(err) => {
-            (Response::err(ErrorCode::InvalidRequest, format!("bad request: {err:#}")), None)
+            (Response::err(ErrorCode::InvalidRequest, format!("bad request: {err:#}")), None, false)
         }
-        Ok(Request::Info) => (Response::Info(info_fields(router, batcher)), None),
-        Ok(Request::Metrics) => (Response::Metrics(metrics_fields(router, batcher)), None),
+        Ok(Request::Info) => (Response::Info(info_fields(router, batcher)), None, false),
+        Ok(Request::Metrics) => (Response::Metrics(metrics_fields(router, batcher)), None, false),
         Ok(Request::Shutdown) => {
             stats.requests.inc();
             let _ = write_json(writer, &Response::Shutdown.to_json());
@@ -448,9 +491,12 @@ fn handle_line(
     // live in the histogram — it cannot be echoed inside the response it
     // measures.
     let mut json = response.to_json();
-    if let Some(t) = timings {
-        if let Json::Object(entries) = &mut json {
+    if let Json::Object(entries) = &mut json {
+        if let Some(t) = timings {
             entries.push(("timings".to_string(), t.to_json()));
+        }
+        if degraded {
+            entries.push(("degraded".to_string(), Json::Bool(true)));
         }
     }
     let serialize_started = Instant::now();
@@ -461,21 +507,66 @@ fn handle_line(
     wrote.map_err(|_| ())
 }
 
+/// `CCE_FAULTS=supervisor.child_crash=K`: the K-th *work* request
+/// (generate/score — never `/healthz`, `/metrics`, or `info`, so the
+/// supervisor's own health probes can't trip it) hard-exits the process.
+/// Exit code 3 mimics an abrupt crash: no drain, no clean-shutdown line.
+/// Every incarnation crashes on its K-th work request, which is what the
+/// chaos tests and the CI soak stage key their scenarios on.
+fn maybe_child_crash() {
+    static TICKS: AtomicU64 = AtomicU64::new(0);
+    if let Some(k) = faults::value("supervisor.child_crash") {
+        let n = TICKS.fetch_add(1, Ordering::SeqCst) + 1;
+        if n == k as u64 {
+            eprintln!("[serve] fault supervisor.child_crash fired on work request {n}; exiting");
+            std::process::exit(3);
+        }
+    }
+}
+
+/// `--max-workspace-bytes` admission guard: reject a score request whose
+/// fused-problem tile math ([`Engine::score_workspace_bound`]) could
+/// exceed the configured bound, before it ever queues.  `text.len()`
+/// bounds the row count from above (every token costs ≥ 1 byte), so the
+/// check is conservative-safe and needs no tokenization.
+fn workspace_guard(request: &Request, engine: &Engine, max_bytes: u64) -> Option<Response> {
+    if max_bytes == 0 {
+        return None;
+    }
+    if let Request::Score { text, .. } = request {
+        let bound = engine.score_workspace_bound(text.len());
+        if bound > max_bytes {
+            return Some(Response::err(
+                ErrorCode::InvalidRequest,
+                format!(
+                    "score request could need {bound} workspace bytes \
+                     (O(N·D + threads·N_B·V_B)); --max-workspace-bytes is {max_bytes}"
+                ),
+            ));
+        }
+    }
+    None
+}
+
 /// Route a batchable request through the micro-batcher and wait for its
-/// reply (response + optional stage timings).
+/// reply (response + optional stage timings + brownout-degraded flag).
 fn dispatch(
     request: Request,
     router: &Router,
     batcher: &Batcher,
     stop: &AtomicBool,
-) -> (Response, Option<StageTimings>) {
+) -> (Response, Option<StageTimings>, bool) {
+    maybe_child_crash();
     if stop.load(Ordering::SeqCst) {
-        return (Response::err(ErrorCode::ShuttingDown, "server is shutting down"), None);
+        return (Response::err(ErrorCode::ShuttingDown, "server is shutting down"), None, false);
     }
     let engine = match router.resolve(request.model()) {
         Ok(engine) => engine,
-        Err(msg) => return (Response::err(ErrorCode::InvalidRequest, msg), None),
+        Err(msg) => return (Response::err(ErrorCode::InvalidRequest, msg), None, false),
     };
+    if let Some(rejection) = workspace_guard(&request, &engine, router.max_workspace_bytes) {
+        return (rejection, None, false);
+    }
     wait_reply(request, engine, batcher)
 }
 
@@ -486,7 +577,7 @@ fn wait_reply(
     request: Request,
     engine: Arc<Engine>,
     batcher: &Batcher,
-) -> (Response, Option<StageTimings>) {
+) -> (Response, Option<StageTimings>, bool) {
     let (tx, rx) = mpsc::channel();
     let mut job = Job::new(request, tx);
     job.engine = Some(engine);
@@ -501,17 +592,22 @@ fn wait_reply(
                     batcher.retry_after_ms(),
                 ),
                 None,
+                false,
             )
         }
         Ok(()) => match rx.recv_timeout(Duration::from_secs(300)) {
-            Ok(reply) => (reply.response, reply.timings),
+            Ok(reply) => (reply.response, reply.timings, reply.degraded),
             // Sender dropped: shutdown raced the job out of the queue.
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                (Response::err(ErrorCode::ShuttingDown, "request dropped during shutdown"), None)
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                (Response::err(ErrorCode::Internal, "request timed out inside the server"), None)
-            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => (
+                Response::err(ErrorCode::ShuttingDown, "request dropped during shutdown"),
+                None,
+                false,
+            ),
+            Err(mpsc::RecvTimeoutError::Timeout) => (
+                Response::err(ErrorCode::Internal, "request timed out inside the server"),
+                None,
+                false,
+            ),
         },
     }
 }
@@ -532,6 +628,12 @@ fn info_fields(router: &Router, batcher: &Batcher) -> Json {
     fields.push(("shed_deadline".into(), Json::Int(stats.shed_deadline.get() as i64)));
     fields.push(("batch_panics".into(), Json::Int(stats.panics.get() as i64)));
     fields.push(("in_flight".into(), Json::Int(batcher.in_flight() as i64)));
+    fields.push((
+        "cancelled_disconnect".into(),
+        Json::Int(stats.cancelled_disconnect.get() as i64),
+    ));
+    fields.push(("cancelled_deadline".into(), Json::Int(stats.cancelled_deadline.get() as i64)));
+    fields.push(("brownout_degraded".into(), Json::Int(stats.brownout_degraded.get() as i64)));
     Json::Object(fields)
 }
 
@@ -797,6 +899,7 @@ fn write_api_response(
     writer: &mut TcpStream,
     response: Response,
     timings: Option<StageTimings>,
+    degraded: bool,
     keep: bool,
 ) -> io::Result<(u32, bool)> {
     if let Response::Error { code, message, retry_after_ms } = response {
@@ -805,9 +908,12 @@ fn write_api_response(
         return Ok((status, keep));
     }
     let mut json = response.to_json();
-    if let Some(t) = timings {
-        if let Json::Object(entries) = &mut json {
+    if let Json::Object(entries) = &mut json {
+        if let Some(t) = timings {
             entries.push(("timings".to_string(), t.to_json()));
+        }
+        if degraded {
+            entries.push(("degraded".to_string(), Json::Bool(true)));
         }
     }
     let mut body = json.to_string();
@@ -831,6 +937,7 @@ fn handle_generate(
     writer: &mut TcpStream,
     ctx: &HttpCtx,
 ) -> io::Result<(u32, bool)> {
+    maybe_child_crash();
     let keep = req.keep_alive;
     let body = match parse_body(&req) {
         Ok(j) => j,
@@ -861,8 +968,9 @@ fn handle_generate(
         return Ok((503, keep));
     }
     if !stream {
-        let (response, timings) = wait_reply(Request::Generate(params), engine, &ctx.batcher);
-        return write_api_response(writer, response, timings, keep);
+        let (response, timings, degraded) =
+            wait_reply(Request::Generate(params), engine, &ctx.batcher);
+        return write_api_response(writer, response, timings, degraded, keep);
     }
 
     // Streaming path.  Admission control still answers plain HTTP (the
@@ -870,9 +978,11 @@ fn handle_generate(
     // — including errors — travels as events.
     let (reply_tx, reply_rx) = mpsc::channel();
     let (delta_tx, delta_rx) = mpsc::sync_channel(STREAM_CHANNEL_DEPTH);
+    let cancel = CancelToken::new();
     let mut job = Job::new(Request::Generate(params), reply_tx);
     job.engine = Some(engine);
     job.stream = Some(delta_tx);
+    job.cancel = Some(cancel.clone());
     if ctx.batcher.submit(job).is_err() {
         ctx.batcher.stats().overloaded.inc();
         let hint = ctx.batcher.retry_after_ms();
@@ -888,8 +998,10 @@ fn handle_generate(
     let mut sse = SseWriter::start(&mut *writer)?;
     let mut client_gone = false;
     // Token deltas until the batcher hangs the channel up (its end-of-
-    // stream signal).  A dead client stops the writes but not the drain:
-    // the generation is already running and the reply must be collected.
+    // stream signal).  A dead client cancels the work, not just the
+    // writes: the token fires at the engine's next lockstep step
+    // boundary, the slot frees, and the (partial) reply still routes so
+    // accounting stays uniform.
     while let Ok(delta) = delta_rx.recv() {
         if client_gone {
             continue;
@@ -902,16 +1014,22 @@ fn handle_generate(
         .to_string();
         if sse.event(&event).is_err() {
             client_gone = true;
+            cancel.cancel();
         }
     }
     let final_event = match reply_rx.recv_timeout(Duration::from_secs(300)) {
         Ok(reply) => match reply.response {
-            Response::Generate { text, tokens, .. } => Json::obj(vec![
-                ("done", Json::Bool(true)),
-                ("text", Json::str(&text)),
-                ("tokens", Json::Int(tokens.len() as i64)),
-            ])
-            .to_string(),
+            Response::Generate { text, tokens, .. } => {
+                let mut fields = vec![
+                    ("done", Json::Bool(true)),
+                    ("text", Json::str(&text)),
+                    ("tokens", Json::Int(tokens.len() as i64)),
+                ];
+                if reply.degraded {
+                    fields.push(("degraded", Json::Bool(true)));
+                }
+                Json::obj(fields).to_string()
+            }
             Response::Error { code, message, retry_after_ms } => {
                 sse_error_event(code, &message, retry_after_ms)
             }
@@ -940,6 +1058,7 @@ fn handle_score(
     writer: &mut TcpStream,
     ctx: &HttpCtx,
 ) -> io::Result<(u32, bool)> {
+    maybe_child_crash();
     let keep = req.keep_alive;
     let body = match parse_body(&req) {
         Ok(j) => j,
@@ -966,12 +1085,15 @@ fn handle_score(
             return Ok((400, keep));
         }
     };
+    if let Some(rejection) = workspace_guard(&request, &engine, ctx.router.max_workspace_bytes) {
+        return write_api_response(writer, rejection, None, false, keep);
+    }
     if ctx.draining.load(Ordering::SeqCst) {
         http::write_error(writer, ErrorCode::ShuttingDown, "server is shutting down", None, keep)?;
         return Ok((503, keep));
     }
-    let (response, timings) = wait_reply(request, engine, &ctx.batcher);
-    write_api_response(writer, response, timings, keep)
+    let (response, timings, degraded) = wait_reply(request, engine, &ctx.batcher);
+    write_api_response(writer, response, timings, degraded, keep)
 }
 
 fn write_json(writer: &mut TcpStream, json: &Json) -> std::io::Result<()> {

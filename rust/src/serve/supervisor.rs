@@ -1,0 +1,407 @@
+//! The `cce serve --supervise` parent: run the listener as a child
+//! process, restart it on crash, and give up on crash loops.
+//!
+//! The supervisor is deliberately dumb plumbing — spawn, watch, restart —
+//! because dumb plumbing is what the vocab-shard workers on the ROADMAP
+//! will reuse: the same spawn/ready-handshake/heartbeat/drain cycle, one
+//! child per shard instead of one listener.  What it guarantees:
+//!
+//! * **Crash recovery.**  A child that exits nonzero (a panic outside the
+//!   batch boundary, an OOM kill, the `supervisor.child_crash` failpoint)
+//!   is restarted with exponential backoff (`backoff × 2^k`, capped) plus
+//!   deterministic jitter derived from the restart index — no shared-fate
+//!   thundering herd when several supervised servers die together, and no
+//!   RNG so incidents replay identically.
+//! * **Crash-loop detection.**  `max_failures` failures inside `window`
+//!   means restarting is not helping (bad checkpoint, port taken by
+//!   another process, broken config): the supervisor stops and exits with
+//!   the distinct [`CRASH_LOOP_EXIT`] code so orchestration above it can
+//!   tell "gave up" from "crashed".
+//! * **The ready contract.**  The child's `[serve] ready proto=… addr=…`
+//!   stdout lines are *held back* until the child answers a live health
+//!   probe (`GET /healthz` 200 when an HTTP listener is expected, a
+//!   line-JSON `info` round-trip otherwise), then re-announced verbatim on
+//!   the supervisor's stdout.  Scripts that sed the announce lines (ci.sh
+//!   does) work unchanged, and never see an address that isn't serving
+//!   yet.  After a restart the announce repeats with the child's new
+//!   ports — consumers treat the *last* announce as current.
+//! * **Drain forwarding.**  SIGTERM/SIGINT to the supervisor
+//!   ([`crate::util::signal`]) forwards as SIGTERM to the child, whose own
+//!   signal handler runs the PR 6 graceful drain.  `Child::kill` is
+//!   SIGKILL and never used except when the drain grace expires.
+//!
+//! A failed *bind* after a crash (the old port lingering in TIME_WAIT —
+//! std listeners don't set SO_REUSEADDR) surfaces as an immediate child
+//! exit and takes the same backoff-and-retry path; by the next attempt
+//! the port is normally free.  Supervised children see
+//! `CCE_SUPERVISED=1` and `CCE_SUPERVISOR_RESTARTS=<n>` in their
+//! environment, which seeds the `serve_supervisor_*` metric families so
+//! the *child's* `/metrics` exposes its own lifecycle.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::client::Client;
+use crate::serve::http::http_call;
+use crate::serve::protocol::{Request, Response};
+use crate::util::signal;
+
+/// Exit code when the supervisor gives up on a crash loop — distinct from
+/// any child exit code the supervisor passes through.
+pub const CRASH_LOOP_EXIT: i32 = 86;
+
+/// Poll cadence of every supervisor wait loop (ready handshake, serving
+/// watch, backoff sleep): bounds signal-forwarding latency.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Supervision knobs (`--supervise-*` flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Give up (exit [`CRASH_LOOP_EXIT`]) after this many failures inside
+    /// [`SupervisorConfig::window`].
+    pub max_failures: usize,
+    /// Crash-loop detection window.
+    pub window: Duration,
+    /// Base restart backoff; doubles per consecutive failure, capped at
+    /// `base × 2^6`.
+    pub backoff: Duration,
+    /// How long a freshly spawned child may take to announce + pass its
+    /// health probe before the supervisor counts it as a failure.
+    pub ready_timeout: Duration,
+    /// Grace between forwarding SIGTERM and escalating to SIGKILL.
+    pub drain_grace: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            max_failures: 5,
+            window: Duration::from_secs(60),
+            backoff: Duration::from_millis(200),
+            ready_timeout: Duration::from_secs(30),
+            drain_grace: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Drop the `--supervise*` flags from an argv so the child runs the plain
+/// serve path.  `--supervise` is a bare flag; the other `--supervise-*`
+/// knobs each consume one value argument unless given as `--key=value`.
+pub fn strip_supervise_flags(args: &[String]) -> Vec<String> {
+    let mut out = Vec::with_capacity(args.len());
+    let mut skip_value = false;
+    for arg in args {
+        if skip_value {
+            skip_value = false;
+            continue;
+        }
+        if arg == "--supervise" {
+            continue;
+        }
+        if arg.starts_with("--supervise-") {
+            skip_value = !arg.contains('=');
+            continue;
+        }
+        out.push(arg.clone());
+    }
+    out
+}
+
+/// `[serve] ready proto=<p> addr=<a>` → `(proto, addr)`.
+fn ready_proto_addr(line: &str) -> Option<(String, String)> {
+    let rest = line.strip_prefix("[serve] ready ")?;
+    let mut proto = None;
+    let mut addr = None;
+    for field in rest.split_whitespace() {
+        if let Some(v) = field.strip_prefix("proto=") {
+            proto = Some(v.to_string());
+        } else if let Some(v) = field.strip_prefix("addr=") {
+            addr = Some(v.to_string());
+        }
+    }
+    Some((proto?, addr?))
+}
+
+/// Deterministic jitter for restart `n`: a splitmix64-style hash mapped
+/// into `[0, half_ms]`.  No RNG — the same crash history replays the same
+/// backoff schedule.
+fn jitter_ms(restart: u64, half_ms: u64) -> u64 {
+    if half_ms == 0 {
+        return 0;
+    }
+    let mut z = restart.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)) % (half_ms + 1)
+}
+
+/// Backoff before restart `k` of a failure streak: `base × 2^min(k, 6)`
+/// plus jitter in `[0, base/2]`.
+fn backoff_delay(base: Duration, streak: usize, restart: u64) -> Duration {
+    let base_ms = base.as_millis().min(u128::from(u32::MAX)) as u64;
+    let scaled = base_ms.saturating_mul(1u64 << streak.min(6) as u32);
+    Duration::from_millis(scaled + jitter_ms(restart, base_ms / 2))
+}
+
+/// What one child incarnation left behind.
+enum ChildEnd {
+    /// Exited by itself with this code (None = killed by signal).
+    Exited(Option<i32>),
+    /// We forwarded a drain request; the child exited with this code.
+    Drained(Option<i32>),
+    /// Never became ready inside the budget (killed by us).
+    ReadyTimeout,
+}
+
+/// Run the supervision loop: spawn `child_args` as a child of the current
+/// executable, hold its ready announce until health passes, restart on
+/// crash, forward drain signals.  Returns the process exit code the
+/// supervisor should exit with.
+pub fn run(child_args: &[String], cfg: &SupervisorConfig) -> Result<i32> {
+    if !signal::install() {
+        eprintln!("[supervise] warning: no signal shim on this target; drain only via shutdown op");
+    }
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    let expect_http =
+        child_args.iter().any(|a| a == "--http-addr" || a == "--metrics-addr");
+    let mut restarts: u64 = 0;
+    let mut failures: VecDeque<Instant> = VecDeque::new();
+    loop {
+        let mut child = Command::new(&exe)
+            .args(child_args)
+            .env("CCE_SUPERVISED", "1")
+            .env("CCE_SUPERVISOR_RESTARTS", restarts.to_string())
+            .stdout(Stdio::piped())
+            .spawn()
+            .context("spawning supervised child")?;
+        let pid = child.id();
+        if restarts > 0 {
+            eprintln!("[supervise] restart #{restarts}: child pid {pid}");
+        } else {
+            eprintln!("[supervise] child pid {pid}");
+        }
+        let ready: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let reader = child.stdout.take().map(|stdout| {
+            let ready = ready.clone();
+            std::thread::spawn(move || {
+                for line in BufReader::new(stdout).lines() {
+                    let Ok(line) = line else { break };
+                    if line.starts_with("[serve] ready ") {
+                        // Held back until the health probe passes.
+                        match ready.lock() {
+                            Ok(mut guard) => guard.push(line),
+                            Err(poisoned) => poisoned.into_inner().push(line),
+                        }
+                    } else {
+                        println!("{line}");
+                        let _ = std::io::stdout().flush();
+                    }
+                }
+            })
+        });
+        let end = watch_child(&mut child, &ready, expect_http, cfg);
+        let _ = child.wait(); // reap if the watch path killed it
+        if let Some(handle) = reader {
+            let _ = handle.join();
+        }
+        match end {
+            ChildEnd::Drained(code) => {
+                eprintln!("[supervise] child drained and exited");
+                return Ok(code.unwrap_or(0));
+            }
+            ChildEnd::Exited(Some(0)) => {
+                // A clean exit (shutdown op, drained via its own signal
+                // handler) ends supervision too.
+                return Ok(0);
+            }
+            ChildEnd::Exited(code) => {
+                eprintln!(
+                    "[supervise] child exited {} — restarting",
+                    code.map_or("on a signal".to_string(), |c| format!("with code {c}"))
+                );
+            }
+            ChildEnd::ReadyTimeout => {
+                eprintln!("[supervise] child never became ready — restarting");
+            }
+        }
+        let now = Instant::now();
+        failures.push_back(now);
+        while failures.front().is_some_and(|t| now.duration_since(*t) > cfg.window) {
+            failures.pop_front();
+        }
+        if failures.len() >= cfg.max_failures.max(1) {
+            eprintln!(
+                "[supervise] crash loop: {} failures within {:?}; giving up (exit {})",
+                failures.len(),
+                cfg.window,
+                CRASH_LOOP_EXIT
+            );
+            return Ok(CRASH_LOOP_EXIT);
+        }
+        let delay = backoff_delay(cfg.backoff, failures.len() - 1, restarts);
+        eprintln!("[supervise] backing off {delay:?} before restart");
+        let until = Instant::now() + delay;
+        while Instant::now() < until {
+            if signal::drain_requested() {
+                // Drain during backoff: nothing is running; just stop.
+                return Ok(0);
+            }
+            std::thread::sleep(POLL.min(until.saturating_duration_since(Instant::now())));
+        }
+        restarts += 1;
+    }
+}
+
+/// Drive one child incarnation: ready handshake (announce held until the
+/// health probe passes), then watch until it exits or a drain signal
+/// arrives.
+fn watch_child(
+    child: &mut Child,
+    ready: &Mutex<Vec<String>>,
+    expect_http: bool,
+    cfg: &SupervisorConfig,
+) -> ChildEnd {
+    let expected_lines = 1 + usize::from(expect_http);
+    let ready_deadline = Instant::now() + cfg.ready_timeout;
+    let mut announced = false;
+    let mut drain_sent = false;
+    let mut drain_deadline = Instant::now(); // meaningful once drain_sent
+    loop {
+        match child.try_wait() {
+            Ok(Some(status)) => {
+                let code = status.code();
+                return if drain_sent { ChildEnd::Drained(code) } else { ChildEnd::Exited(code) };
+            }
+            Ok(None) => {}
+            Err(_) => return ChildEnd::Exited(None),
+        }
+        if signal::drain_requested() && !drain_sent {
+            eprintln!("[supervise] drain requested; forwarding SIGTERM to child {}", child.id());
+            if !signal::send(child.id(), signal::SIGTERM) {
+                let _ = child.kill();
+            }
+            drain_sent = true;
+            drain_deadline = Instant::now() + cfg.drain_grace;
+        }
+        if drain_sent && Instant::now() >= drain_deadline {
+            eprintln!("[supervise] drain grace expired; killing child");
+            let _ = child.kill();
+            let code = child.wait().ok().and_then(|s| s.code());
+            return ChildEnd::Drained(code);
+        }
+        if !announced {
+            let lines: Vec<String> = match ready.lock() {
+                Ok(guard) => guard.clone(),
+                Err(poisoned) => poisoned.into_inner().clone(),
+            };
+            if lines.len() >= expected_lines && health_passes(&lines, expect_http) {
+                // Re-announce verbatim: the ready contract, now true.
+                for line in &lines {
+                    println!("{line}");
+                }
+                let _ = std::io::stdout().flush();
+                announced = true;
+            } else if Instant::now() >= ready_deadline {
+                let _ = child.kill();
+                let _ = child.wait();
+                return ChildEnd::ReadyTimeout;
+            }
+        }
+        std::thread::sleep(POLL);
+    }
+}
+
+/// One health probe against the child's announced addresses: `/healthz`
+/// must answer 200 when an HTTP listener is expected, otherwise a
+/// line-JSON `info` round-trip must succeed.
+fn health_passes(ready_lines: &[String], expect_http: bool) -> bool {
+    let addr_of = |proto: &str| {
+        ready_lines
+            .iter()
+            .filter_map(|l| ready_proto_addr(l))
+            .find(|(p, _)| p == proto)
+            .map(|(_, a)| a)
+    };
+    if expect_http {
+        let Some(addr) = addr_of("http") else { return false };
+        return matches!(
+            http_call(&addr, "GET", "/healthz", b"", Duration::from_secs(2)),
+            Ok((200, _, _))
+        );
+    }
+    let Some(addr) = addr_of("line") else { return false };
+    let Ok(mut client) = Client::connect(addr.as_str()) else { return false };
+    matches!(client.call(&Request::Info), Ok(Response::Info(_)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn supervise_flags_are_stripped_with_their_values() {
+        let args: Vec<String> = [
+            "serve",
+            "--port",
+            "0",
+            "--supervise",
+            "--supervise-max-failures",
+            "3",
+            "--http-addr",
+            "127.0.0.1:0",
+            "--supervise-backoff-ms",
+            "10",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let child = strip_supervise_flags(&args);
+        assert_eq!(child, ["serve", "--port", "0", "--http-addr", "127.0.0.1:0"]);
+
+        // `--key=value` spellings carry their value inline: nothing after
+        // them is swallowed.
+        let args: Vec<String> =
+            ["serve", "--supervise-window-ms=5000", "--demo", "--supervise", "--port", "0"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(strip_supervise_flags(&args), ["serve", "--demo", "--port", "0"]);
+    }
+
+    #[test]
+    fn ready_lines_parse_proto_and_addr() {
+        assert_eq!(
+            ready_proto_addr("[serve] ready proto=http addr=127.0.0.1:8080"),
+            Some(("http".to_string(), "127.0.0.1:8080".to_string()))
+        );
+        assert_eq!(
+            ready_proto_addr("[serve] ready proto=line addr=127.0.0.1:7343"),
+            Some(("line".to_string(), "127.0.0.1:7343".to_string()))
+        );
+        assert_eq!(ready_proto_addr("[serve] shut down cleanly"), None);
+        assert_eq!(ready_proto_addr("[serve] ready proto=line"), None);
+    }
+
+    #[test]
+    fn backoff_doubles_caps_and_replays_deterministically() {
+        let base = Duration::from_millis(100);
+        let d0 = backoff_delay(base, 0, 0);
+        let d1 = backoff_delay(base, 1, 1);
+        let d6 = backoff_delay(base, 6, 6);
+        let d9 = backoff_delay(base, 9, 9);
+        assert!(d0 >= base && d0 <= base + Duration::from_millis(50), "{d0:?}");
+        assert!(d1 >= 2 * base && d1 <= 2 * base + Duration::from_millis(50), "{d1:?}");
+        // The exponent caps at 2^6 even for longer streaks.
+        assert!(d6 >= 64 * base && d6 <= 64 * base + Duration::from_millis(50), "{d6:?}");
+        assert!(d9 >= 64 * base && d9 <= 64 * base + Duration::from_millis(50), "{d9:?}");
+        // Deterministic: the same (streak, restart) pair always lands on
+        // the same delay.
+        assert_eq!(backoff_delay(base, 3, 7), backoff_delay(base, 3, 7));
+        assert_eq!(jitter_ms(5, 0), 0);
+    }
+}

@@ -12,6 +12,7 @@ pub mod faults;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 
 pub use checksum::crc32;

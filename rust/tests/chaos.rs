@@ -4,7 +4,12 @@
 //! graceful drain under load.  Every fault is driven through
 //! [`cce::util::faults`] failpoints (`install`/`clear`); the suite owns a
 //! process-wide gate because the fault registry is global to the test
-//! binary.
+//! binary.  The lifecycle-hardening tests additionally cover cooperative
+//! cancellation (a dead SSE client frees its decode slot), the
+//! `--supervise` parent (crash → restart → re-announce; crash loop →
+//! give up with [`cce::serve::CRASH_LOOP_EXIT`]), and per-model
+//! round-robin admission (a cold model stays responsive while a hot one
+//! saturates the queue).
 
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -420,6 +425,295 @@ fn stalled_connection_handling_slows_but_never_breaks_requests() {
         t0.elapsed() >= Duration::from_millis(150),
         "the stall failpoint should have delayed the handler"
     );
+    faults::clear();
+    shutdown(server);
+}
+
+// ------------------------------------------------ cooperative cancellation
+
+#[test]
+fn a_dead_sse_client_cancels_decode_and_frees_the_slot() {
+    use std::io::{Read, Write};
+
+    let _gate = chaos_gate();
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        http_addr: Some("127.0.0.1:0".to_string()),
+        ..ServeConfig::default()
+    };
+    let server = serve(tiny_engine(), &cfg).unwrap();
+    let http = server.http_addr().expect("http listener bound").to_string();
+    let line_addr = server.addr;
+    // ~40 ms per decode step: plenty of runway to detect the dead client
+    // long before a 200-token budget runs out.
+    faults::install("engine.step.stall_ms=40").unwrap();
+
+    // A fixed seed makes each attempt deterministic; looping seeds guards
+    // against one seed emitting EOS before the disconnect is observable.
+    let mut admin = Client::connect(line_addr).unwrap();
+    let mut cancelled = false;
+    for seed in 0..5u64 {
+        let mut s = std::net::TcpStream::connect(&http).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let body = format!(
+            "{{\"prompt\":\"the cat\",\"max_tokens\":200,\"stream\":true,\
+             \"temperature\":0.9,\"seed\":{seed}}}"
+        );
+        write!(s, "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}", body.len(), body)
+            .unwrap();
+        // Wait for the stream to actually start (decode is under way),
+        // then vanish without warning.  The unread tail in the receive
+        // buffer turns the close into an RST, so the server's next event
+        // write fails and the cancel token trips at a step boundary.
+        let mut buf = [0u8; 128];
+        let _ = s.read(&mut buf).expect("first stream bytes");
+        drop(s);
+
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_secs(5) {
+            if info_i64(&mut admin, "cancelled_disconnect") >= 1 {
+                cancelled = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        if cancelled {
+            break;
+        }
+    }
+    assert!(cancelled, "a dead SSE client never tripped serve_cancelled_disconnect_total");
+
+    // The cancelled job must release its slot: in_flight returns to 0 and
+    // the (single-worker) server answers a fresh request promptly instead
+    // of grinding through the dead client's remaining 190+ steps.
+    let t0 = Instant::now();
+    while info_i64(&mut admin, "in_flight") != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "cancelled job still holds its slot (in_flight {})",
+            info_i64(&mut admin, "in_flight")
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    faults::clear();
+    match admin.generate(gen(2, 1)).expect("slot reused after cancellation") {
+        Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+        other => panic!("unexpected response: {other:?}"),
+    }
+    shutdown(server);
+}
+
+// --------------------------------------------------------- supervision
+
+/// Spawn the real `cce` binary with piped stdout and a reader thread
+/// collecting its lines (the supervisor re-announces ready lines there).
+fn spawn_cce(
+    args: &[&str],
+    env: &[(&str, &str)],
+) -> (std::process::Child, Arc<Mutex<Vec<String>>>) {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_cce"));
+    cmd.args(args).stdout(std::process::Stdio::piped());
+    for (k, v) in env {
+        cmd.env(k, v);
+    }
+    let mut child = cmd.spawn().expect("spawn cce");
+    let lines: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let stdout = child.stdout.take().expect("piped stdout");
+    let sink = lines.clone();
+    std::thread::spawn(move || {
+        use std::io::BufRead;
+        for line in std::io::BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            sink.lock().unwrap().push(line);
+        }
+    });
+    (child, lines)
+}
+
+/// Block until at least `want` `[serve] ready` lines have been printed,
+/// returning them in order.
+fn wait_ready_lines(lines: &Mutex<Vec<String>>, want: usize, bound: Duration) -> Vec<String> {
+    let t0 = Instant::now();
+    loop {
+        let ready: Vec<String> = lines
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|l| l.starts_with("[serve] ready "))
+            .cloned()
+            .collect();
+        if ready.len() >= want {
+            return ready;
+        }
+        assert!(
+            t0.elapsed() < bound,
+            "timed out waiting for {want} ready announces; stdout so far: {:?}",
+            lines.lock().unwrap()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn ready_addr(line: &str) -> String {
+    line.split("addr=").nth(1).expect("addr= in ready line").trim().to_string()
+}
+
+fn wait_exit(child: &mut std::process::Child, bound: Duration) -> Option<i32> {
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return status.code();
+        }
+        if t0.elapsed() > bound {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("supervisor did not exit within {bound:?}");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn supervised_serve_restarts_after_a_crash_and_reannounces() {
+    let _gate = chaos_gate();
+    // K=2: each incarnation serves its first work request and crashes on
+    // the second.  Health probes (GET /healthz) never count.
+    let (mut child, lines) = spawn_cce(
+        &[
+            "serve",
+            "--demo",
+            "--port",
+            "0",
+            "--http-addr",
+            "127.0.0.1:0",
+            "--supervise",
+            "--supervise-backoff-ms",
+            "10",
+        ],
+        &[("CCE_FAULTS", "supervisor.child_crash=2")],
+    );
+    let bound = Duration::from_secs(60);
+    let t = Duration::from_secs(10);
+    let gen_body = b"{\"prompt\":\"the cat\",\"max_tokens\":2}" as &[u8];
+
+    // First incarnation: announce held until /healthz passed, so the
+    // address must already be serving.
+    let ready = wait_ready_lines(&lines, 2, bound);
+    let http = ready_addr(ready.iter().find(|l| l.contains("proto=http")).unwrap());
+    let (status, _, _) = http_call(&http, "POST", "/v1/generate", gen_body, t).unwrap();
+    assert_eq!(status, 200);
+
+    // Work request #2 kills the child mid-request (transport error is the
+    // client's view of the crash)...
+    let _ = http_call(&http, "POST", "/v1/generate", gen_body, t);
+
+    // ...and the supervisor restarts it on fresh ephemeral ports,
+    // re-announcing only after health passes again.
+    let ready = wait_ready_lines(&lines, 4, bound);
+    let http2 = ready_addr(ready.iter().rev().find(|l| l.contains("proto=http")).unwrap());
+    let (status, _, body) = http_call(&http2, "POST", "/v1/generate", gen_body, t).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+
+    // The restarted child's own metrics record its lifecycle.
+    let (status, _, body) = http_call(&http2, "GET", "/metrics", b"", t).unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8_lossy(&body);
+    assert!(
+        text.contains("serve_supervisor_restarts_total 1"),
+        "restart count missing from child metrics: {text}"
+    );
+    assert!(text.contains("serve_supervisor_enabled 1"), "{text}");
+
+    // SIGTERM to the supervisor forwards as a drain: the whole tree exits
+    // cleanly (code 0, clean-shutdown line passed through).
+    assert!(cce::util::signal::send(child.id(), cce::util::signal::SIGTERM));
+    assert_eq!(wait_exit(&mut child, bound), Some(0));
+    assert!(
+        lines.lock().unwrap().iter().any(|l| l == "[serve] shut down cleanly"),
+        "drained child's clean-shutdown line should pass through: {:?}",
+        lines.lock().unwrap()
+    );
+}
+
+#[test]
+fn a_crash_looping_child_makes_the_supervisor_give_up() {
+    let _gate = chaos_gate();
+    // A child that can never start (missing checkpoint) is the canonical
+    // crash loop: restarting cannot help, so after max-failures inside the
+    // window the supervisor stops with the distinct exit code.
+    let (mut child, _lines) = spawn_cce(
+        &[
+            "serve",
+            "--checkpoint",
+            "/nonexistent/cce_chaos_missing.ckpt",
+            "--port",
+            "0",
+            "--supervise",
+            "--supervise-max-failures",
+            "3",
+            "--supervise-window-ms",
+            "60000",
+            "--supervise-backoff-ms",
+            "10",
+        ],
+        &[],
+    );
+    let code = wait_exit(&mut child, Duration::from_secs(60));
+    assert_eq!(
+        code,
+        Some(cce::serve::CRASH_LOOP_EXIT),
+        "crash loop must exit with the distinct give-up code"
+    );
+}
+
+// ------------------------------------------- per-model admission fairness
+
+#[test]
+fn cold_model_latency_stays_bounded_while_hot_model_saturates() {
+    let _gate = chaos_gate();
+    // Two models on one server, single worker, batch of 2.  The hot lane
+    // holds 12 queued jobs; round-robin batch assembly must pull the cold
+    // lane's single job into one of the next windows instead of FIFO-ing
+    // it behind the entire hot backlog (which would take well over the
+    // asserted bound at ~25 ms per decode step).
+    let models = vec![("hot".to_string(), tiny_engine()), ("cold".to_string(), tiny_engine())];
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 2,
+        max_wait: Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
+    let server = cce::serve::serve_multi(models, &cfg).unwrap();
+    let addr = server.addr;
+    faults::install("engine.step.stall_ms=25").unwrap();
+
+    std::thread::scope(|scope| {
+        for i in 0..12u64 {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let params = GenParams { model: Some("hot".into()), ..gen(6, i) };
+                client.generate(params).expect("hot request succeeds");
+            });
+        }
+        scope.spawn(move || {
+            // Arrive after the hot flood is queued.
+            std::thread::sleep(Duration::from_millis(120));
+            let mut client = Client::connect(addr).unwrap();
+            let params = GenParams { model: Some("cold".into()), ..gen(2, 99) };
+            let t0 = Instant::now();
+            match client.generate(params).expect("cold request succeeds") {
+                Response::Generate { tokens, .. } => assert!(!tokens.is_empty()),
+                other => panic!("unexpected response: {other:?}"),
+            }
+            let cold = t0.elapsed();
+            assert!(
+                cold < Duration::from_millis(900),
+                "cold-model request took {cold:?} behind a saturated hot lane"
+            );
+        });
+    });
     faults::clear();
     shutdown(server);
 }

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use cce::exec::{cce_forward, sample, score, topk, InferProblem, KernelOptions, Problem};
-use cce::serve::http::{http_call, read_http_response};
+use cce::serve::http::{http_call, read_http_response, Conn, HttpError, Limits};
 use cce::serve::sse::parse_data_events;
 use cce::serve::{
     serve, serve_multi, Client, ContextBag, Engine, GenParams, Request, Response, ServeConfig,
@@ -800,4 +800,196 @@ fn http_api_refuses_new_work_while_draining() {
     let (status, _, body) = http_call(&http, "POST", "/v1/score", b"{\"text\":\"x\"}", t).unwrap();
     assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
     server.join().unwrap();
+}
+
+// ------------------------------------------------- parser fuzz regressions
+//
+// Deterministic corpora for the three wire parsers.  Each entry is a
+// minimized regression: hostile or truncated input must fail with a
+// *typed* error (never a panic, never a hang), and well-formed input must
+// parse identically no matter where the stream splits it.
+
+/// A `Read` that hands out its bytes `step` at a time, forcing the HTTP
+/// parser to resume across arbitrarily split reads — including splits in
+/// the middle of a CRLF or a chunk-size line.
+struct DripReader {
+    bytes: Vec<u8>,
+    pos: usize,
+    step: usize,
+}
+
+impl std::io::Read for DripReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.step.min(buf.len()).min(self.bytes.len() - self.pos);
+        buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn drip_parse(raw: &[u8], step: usize) -> Result<cce::serve::http::HttpRequest, HttpError> {
+    let mut conn = Conn::new(DripReader { bytes: raw.to_vec(), pos: 0, step });
+    conn.read_request(&Limits::default())
+}
+
+#[test]
+fn http_parser_fuzz_regressions_split_reads_and_chunk_edges() {
+    // A well-formed request parses the same at every split granularity.
+    let full: &[u8] = b"POST /v1/score HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+    for step in [1usize, 2, 3, 7, 4096] {
+        let req = drip_parse(full, step).unwrap_or_else(|e| panic!("step {step}: {e:?}"));
+        assert_eq!((req.method.as_str(), req.path.as_str()), ("POST", "/v1/score"));
+        assert_eq!(req.body, b"hello");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    // Chunked-framing edges, dripped byte-by-byte: extensions after the
+    // size, a trailer section, uppercase hex sizes.
+    let chunked_ok: &[(&str, &[u8], &[u8])] = &[
+        (
+            "chunk extension ignored",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5;ext=foo\r\nhello\r\n0\r\n\r\n",
+            b"hello",
+        ),
+        (
+            "trailer section skipped",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\nX-T: 1\r\n\r\n",
+            b"hello",
+        ),
+        (
+            "uppercase hex chunk size",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nA\r\nhelloworld\r\n0\r\n\r\n",
+            b"helloworld",
+        ),
+    ];
+    for (what, raw, want_body) in chunked_ok {
+        let req = drip_parse(raw, 1).unwrap_or_else(|e| panic!("{what}: {e:?}"));
+        assert_eq!(&req.body, want_body, "{what}");
+    }
+
+    fn class(e: &HttpError) -> &'static str {
+        match e {
+            HttpError::Idle => "idle",
+            HttpError::Closed => "closed",
+            HttpError::Stalled => "stalled",
+            HttpError::HeadersTooLarge => "headers_too_large",
+            HttpError::BodyTooLarge => "body_too_large",
+            HttpError::Bad(_) => "bad",
+            HttpError::Io(_) => "io",
+        }
+    }
+
+    // Regression corpus: each entry must fail *cleanly* in the listed
+    // class, at both byte-drip and whole-buffer granularity.
+    let bad: &[(&str, &[u8], &str)] = &[
+        ("empty stream", b"", "closed"),
+        ("lowercase method", b"get / HTTP/1.1\r\n\r\n", "bad"),
+        ("extra request-line token", b"GET / HTTP/1.1 x\r\n\r\n", "bad"),
+        ("wrong protocol version", b"GET / SPDY/3\r\n\r\n", "bad"),
+        ("header missing colon", b"GET / HTTP/1.1\r\nnocolon\r\n\r\n", "bad"),
+        ("header name trailing space", b"GET / HTTP/1.1\r\nName : v\r\n\r\n", "bad"),
+        ("content-length not numeric", b"POST / HTTP/1.1\r\nContent-Length: 5x\r\n\r\nhello", "bad"),
+        ("content-length negative", b"POST / HTTP/1.1\r\nContent-Length: -5\r\n\r\nhello", "bad"),
+        (
+            "content-length overflows usize",
+            b"POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999999\r\n\r\n",
+            "bad",
+        ),
+        ("content-length over limit", b"POST / HTTP/1.1\r\nContent-Length: 10000000\r\n\r\n", "body_too_large"),
+        ("chunk size not hex", b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n", "bad"),
+        (
+            "chunk size overflows u64",
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nFFFFFFFFFFFFFFFFF\r\n",
+            "bad",
+        ),
+        (
+            "chunk total over body limit",
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nFFFFFF\r\n",
+            "body_too_large",
+        ),
+        (
+            "chunk data not CRLF-terminated",
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhelloXX0\r\n\r\n",
+            "bad",
+        ),
+        ("body truncated mid-stream", b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nhal", "stalled"),
+        ("headers truncated mid-stream", b"GET / HTTP/1.1\r\nPartial: ", "stalled"),
+        (
+            "chunked body truncated mid-chunk",
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhe",
+            "stalled",
+        ),
+    ];
+    for (what, raw, want) in bad {
+        for step in [1usize, 4096] {
+            let err = drip_parse(raw, step)
+                .map(|r| panic!("{what} (step {step}) parsed: {r:?}"))
+                .unwrap_err();
+            assert_eq!(class(&err), *want, "{what} (step {step}): {err:?}");
+        }
+    }
+}
+
+#[test]
+fn protocol_parser_fuzz_regressions() {
+    // Hostile lines fail with a typed error — never a panic.
+    let rejected = [
+        "",
+        "not json",
+        "{\"op\":\"generate\"",                         // truncated JSON
+        "{\"op\":\"nope\"}",                             // unknown op
+        "{\"prompt\":\"x\"}",                            // missing op
+        "{\"op\":42}",                                   // non-string op
+        "{\"op\":\"generate\",\"max_tokens\":-3}",      // negative count
+        "{\"op\":\"generate\",\"max_tokens\":1.5}",     // fractional count
+        "{\"op\":\"generate\",\"top_k\":-1}",
+        "{\"op\":\"generate\",\"temperature\":\"hot\"}", // non-numeric
+        "{\"op\":\"generate\",\"deadline_ms\":\"soon\"}",
+        "{\"op\":\"score\"}",                            // text is required
+        "{\"op\":\"score\",\"text\":7}",                 // non-string text
+    ];
+    for line in rejected {
+        assert!(Request::parse(line).is_err(), "{line:?} should be rejected");
+    }
+
+    // Oversize numerics saturate instead of wrapping: a count far past
+    // i64::MAX parses as a float and lands on i64::MAX, never a small or
+    // negative value the admission checks would wave through.
+    let huge = "{\"op\":\"generate\",\"max_tokens\":99999999999999999999999}";
+    match Request::parse(huge).unwrap() {
+        Request::Generate(p) => assert_eq!(p.max_tokens, i64::MAX as usize),
+        other => panic!("unexpected parse: {other:?}"),
+    }
+
+    // Lenient fields stay lenient: malformed trace/model never fail an
+    // otherwise-good request, and defaults fill absent sampling params.
+    match Request::parse("{\"op\":\"generate\",\"trace\":\"yes\",\"model\":3}").unwrap() {
+        Request::Generate(p) => {
+            assert!(!p.trace);
+            assert_eq!(p.model, None);
+            assert_eq!(p.max_tokens, GenParams::default().max_tokens);
+        }
+        other => panic!("unexpected parse: {other:?}"),
+    }
+}
+
+#[test]
+fn sse_parser_fuzz_regressions() {
+    // (raw body, expected data payloads): truncated events, CRLF line
+    // endings, comment/blank noise, missing terminators.
+    let cases: &[(&str, &[&str])] = &[
+        ("", &[]),
+        ("data: a\n\ndata: b\n\n", &["a", "b"]),
+        ("data: a\n\ndata: b", &["a", "b"]),     // missing final blank line
+        ("data: a\n\ndata:", &["a"]),            // truncated mid-event
+        ("data: a\n\nda", &["a"]),               // truncated mid-field-name
+        ("data:a\n\n", &["a"]),                  // no space after colon
+        ("data:  spaced\n\n", &["spaced"]),      // extra spaces trimmed
+        (": comment\n\ndata: x\n\n", &["x"]),    // comment lines dropped
+        ("\n\n\n\ndata: x\n\n\n\n", &["x"]),     // blank-event noise
+        ("data: [DONE]\n\n", &["[DONE]"]),
+    ];
+    for (raw, want) in cases {
+        assert_eq!(&parse_data_events(raw), want, "body {raw:?}");
+    }
 }
