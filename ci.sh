@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # CI gate: docs consistency, formatting, lints, the tier-1 build/test cycle,
 # the serve smokes (line-JSON + HTTP/SSE, single- and two-model), the
-# supervised-serve soak (crash -> restart -> reannounce -> recovery), and
-# the perf-tracking bench stage.
+# vocabulary-sharding parity stage (a real 2-worker TCP fleet must
+# reproduce single-process training losses to 1e-5 and greedy decodes
+# token-for-token), the supervised-serve soak (crash -> restart ->
+# reannounce -> recovery), and the perf-tracking bench stage.
 #
 #   ./ci.sh            # full pipeline (docs check, fmt, clippy incl.
 #                      #   --features pjrt, release build, tests, serve
@@ -346,6 +348,85 @@ CCE_FAULTS="conn.stall_ms=20" "$CCE" servebench --requests 8 --concurrency 2 \
     || { echo "servebench --http smoke failed"; exit 1; }
 echo "   chaos OK (suite + env smoke + http bench)"
 
+echo "== shard: 2-worker TCP fleet parity (train curve + greedy decodes vs single process) =="
+# The shard integration suite (LocalTransport merge math, real-process TCP
+# fleet, worker-kill chaos) already ran under tier-1; here the *release*
+# binary trains the same tiny config twice — single-process and through a
+# 2-worker auto-spawned TCP fleet (--shards 2: real process boundaries,
+# real sockets) — and the loss trajectories must agree to 1e-5.
+# --method cce_no_filter because the §4.3 filter's skip mask partitions
+# differently per shard (docs/sharding.md, Exactness), making the
+# unfiltered kernel the 1e-5-comparable one.
+"$CCE" train --backend native --method cce_no_filter --steps 4 --corpus-docs 200 \
+    --vocab-size 384 --dim 32 --seq 64 --batch 4 --threads 2 \
+    --out-dir "$SMOKE_DIR/shard_solo" >/dev/null 2>&1
+"$CCE" train --backend native --method cce_no_filter --steps 4 --corpus-docs 200 \
+    --vocab-size 384 --dim 32 --seq 64 --batch 4 --threads 2 --shards 2 \
+    --out-dir "$SMOKE_DIR/shard_duo" >/dev/null 2>"$SMOKE_DIR/shard_duo.err" \
+    || { echo "sharded train failed:"; cat "$SMOKE_DIR/shard_duo.err"; exit 1; }
+python3 - "$SMOKE_DIR/shard_solo/metrics.jsonl" "$SMOKE_DIR/shard_duo/metrics.jsonl" <<'PY'
+import json, sys
+def load(path):
+    steps, evals = {}, {}
+    for line in open(path):
+        rec = json.loads(line)
+        if rec.get("kind") == "step": steps[rec["step"]] = rec["loss"]
+        elif rec.get("kind") == "eval": evals[rec["step"]] = rec["val_loss"]
+    return steps, evals
+s1, e1 = load(sys.argv[1])
+s2, e2 = load(sys.argv[2])
+assert s1 and e1, "single-process run logged no steps/evals"
+assert s1.keys() == s2.keys() and e1.keys() == e2.keys(), \
+    f"runs logged different steps: {sorted(s1)} vs {sorted(s2)}"
+worst = max(abs(s1[k] - s2[k]) / max(1.0, abs(s1[k])) for k in s1)
+vworst = max(abs(e1[k] - e2[k]) / max(1.0, abs(e1[k])) for k in e1)
+assert worst <= 1e-5, f"sharded train loss diverged from single-process: rel {worst:.2e}"
+assert vworst <= 1e-5, f"sharded val loss diverged from single-process: rel {vworst:.2e}"
+print(f"   sharded train parity OK ({len(s1)} steps; worst rel diff {worst:.2e}, val {vworst:.2e})")
+PY
+
+# Greedy decodes through a sharded engine must be token-for-token
+# IDENTICAL to single-process (the merged arg-max compares raw logit
+# bits; docs/sharding.md, Exactness) — serve the same deterministic
+# --demo model both ways and compare the decoded tokens exactly.
+shard_demo_generate() {  # $1 = output json, $2... = extra serve flags
+    local out=$1; shift
+    "$CCE" serve --demo --port 0 --http-addr 127.0.0.1:0 "$@" \
+        > "$SMOKE_DIR/shard_serve.log" 2>"$SMOKE_DIR/shard_serve.err" &
+    SERVE_PID=$!
+    local port=""
+    for _ in $(seq 1 150); do
+        port=$(sed -n 's/^\[serve\] ready proto=line addr=.*:\([0-9][0-9]*\)$/\1/p' "$SMOKE_DIR/shard_serve.log" | head -1)
+        [[ -n "$port" ]] && break
+        if ! serve_alive; then
+            RC=0; wait "$SERVE_PID" || RC=$?
+            echo "sharded demo serve exited early (status $RC):"; cat "$SMOKE_DIR/shard_serve.err"
+            exit $(( RC == 0 ? 1 : RC ))
+        fi
+        sleep 0.1
+    done
+    [[ -n "$port" ]] || { echo "sharded demo serve never bound a port"; cat "$SMOKE_DIR/shard_serve.err"; exit 1; }
+    "$CCE" client --port "$port" --op generate --prompt "the cat" --max-tokens 16 > "$out"
+    "$CCE" client --port "$port" --op shutdown >/dev/null
+    RC=0; wait "$SERVE_PID" || RC=$?
+    SERVE_PID=""
+    [[ "$RC" -eq 0 ]] || { echo "sharded demo serve did not shut down cleanly ($RC)"; cat "$SMOKE_DIR/shard_serve.err"; exit "$RC"; }
+}
+shard_demo_generate "$SMOKE_DIR/gen_solo.json"
+shard_demo_generate "$SMOKE_DIR/gen_duo.json" --shards 2
+python3 - "$SMOKE_DIR/gen_solo.json" "$SMOKE_DIR/gen_duo.json" <<'PY'
+import json, sys
+solo = json.load(open(sys.argv[1]))
+duo = json.load(open(sys.argv[2]))
+assert solo.get("ok") is True and duo.get("ok") is True, f"generate failed: {solo} / {duo}"
+assert solo["tokens"], "greedy decode produced no tokens"
+assert solo["tokens"] == duo["tokens"] and solo.get("text") == duo.get("text"), (
+    f"sharded greedy decode differs from single-process:\n  solo {solo['tokens']}"
+    f"\n  duo  {duo['tokens']}")
+print(f"   sharded greedy decode identical ({len(solo['tokens'])} tokens)")
+PY
+echo "   shard OK (train parity + identical greedy decodes across a real 2-process fleet)"
+
 echo "== soak: supervised serve under a crash fault (restart + reannounce + recovery) =="
 # A fault-armed supervised run across a real process boundary: every child
 # incarnation exits(3) abruptly on its 5th work request
@@ -447,6 +528,20 @@ echo "== bench: table1 (native) + figA1 sweep + servebench at the fixed CI grid 
 # stall must not fail the serve gate).
 "$CCE" servebench --requests 48 --concurrency 4 --max-tokens 8 --threads 2 \
     --repeats 3 --json "$SMOKE_DIR/BENCH_serve.json"
+# Same harness through a 2-worker vocabulary-shard fleet; the run lands in
+# BENCH_serve.json's additive top-level "sharded" object and
+# check_bench --serve gates the sharded/single throughput *ratio* (see
+# docs/benchmarks.md) so exchange-overhead regressions are caught.
+"$CCE" servebench --shards 2 --requests 48 --concurrency 4 --max-tokens 8 --threads 2 \
+    --repeats 3 --json "$SMOKE_DIR/BENCH_serve_sharded.json"
+python3 - "$SMOKE_DIR/BENCH_serve.json" "$SMOKE_DIR/BENCH_serve_sharded.json" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+sharded = json.load(open(sys.argv[2]))
+sharded["shards"] = 2
+doc["sharded"] = sharded
+json.dump(doc, open(sys.argv[1], "w"), indent=1)
+PY
 
 UPDATE_FLAG=""
 [[ "${BENCH_UPDATE:-0}" == "1" ]] && UPDATE_FLAG="--update"

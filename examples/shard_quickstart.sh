@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Vocabulary-sharding quickstart: trains through an auto-spawned 2-shard
+# fleet, starts two standalone workers and evaluates the checkpoint
+# through them, then serves a demo model sharded.  Every "$CCE" command
+# line from docs/sharding.md runs here VERBATIM — tools/check_docs.sh
+# asserts the doc lines and these lines stay in sync; if you edit a
+# command in the doc, edit it here too.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CCE=${CCE:-target/release/cce}
+[[ -x "$CCE" ]] || { echo "build first: cargo build --release"; exit 1; }
+
+WORK=$(mktemp -d)
+W1_PID=""
+W2_PID=""
+SERVE_PID=""
+cleanup() {
+    for pid in "$SERVE_PID" "$W1_PID" "$W2_PID"; do
+        [[ -z "$pid" ]] || kill "$pid" 2>/dev/null || true
+    done
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== train through an auto-spawned 2-shard fleet (--shards 2) =="
+"$CCE" train --backend native --method cce_no_filter --steps 4 --corpus-docs 200 --vocab-size 384 --dim 32 --seq 64 --batch 4 --shards 2 --out-dir "$WORK/run"
+
+echo
+echo "== start two standalone workers (the multi-node shape) =="
+"$CCE" shard-worker --host 127.0.0.1 --port 7641 --threads 2 > "$WORK/w1.log" & W1_PID=$!
+"$CCE" shard-worker --host 127.0.0.1 --port 7642 --threads 2 > "$WORK/w2.log" & W2_PID=$!
+# Workers announce readiness as "[shard] ready proto=line addr=HOST:PORT"
+# (the contract in docs/sharding.md) — wait for both lines.
+for log in "$WORK/w1.log" "$WORK/w2.log"; do
+    ok=""
+    for _ in $(seq 1 100); do
+        if grep -q '^\[shard\] ready proto=line addr=' "$log" 2>/dev/null; then
+            ok=1; break
+        fi
+        sleep 0.1
+    done
+    [[ -n "$ok" ]] || { echo "worker never announced ($log):"; cat "$log"; exit 1; }
+done
+sed -n 's/^\[shard\] ready proto=line addr=/   worker up at /p' "$WORK/w1.log" "$WORK/w2.log"
+
+echo
+echo "== evaluate the checkpoint through them (--shard-endpoints) =="
+"$CCE" eval --backend native --method cce_no_filter --corpus-docs 200 --vocab-size 384 --dim 32 --seq 64 --batch 4 --checkpoint "$WORK/run/final.ckpt" --shard-endpoints 127.0.0.1:7641,127.0.0.1:7642
+# The fleet owns its workers' lifecycle: dropping it sent both a
+# `shutdown` op, so the processes exit 0 with the clean marker.
+wait "$W1_PID"; W1_PID=""
+wait "$W2_PID"; W2_PID=""
+grep -q 'shut down cleanly' "$WORK/w1.log" || { echo "worker 1 missing clean-shutdown marker"; exit 1; }
+grep -q 'shut down cleanly' "$WORK/w2.log" || { echo "worker 2 missing clean-shutdown marker"; exit 1; }
+echo "   both workers shut down cleanly"
+
+echo
+echo "== serve a demo model sharded, generate, shut down =="
+"$CCE" serve --demo --shards 2 --port 0 --http-addr 127.0.0.1:0 > "$WORK/serve.log" 2>"$WORK/serve.err" & SERVE_PID=$!
+PORT=""
+for _ in $(seq 1 150); do
+    PORT=$(sed -n 's/^\[serve\] ready proto=line addr=.*:\([0-9][0-9]*\)$/\1/p' "$WORK/serve.log" | head -1)
+    [[ -n "$PORT" ]] && break
+    kill -0 "$SERVE_PID" 2>/dev/null || { echo "sharded serve died:"; cat "$WORK/serve.err"; exit 1; }
+    sleep 0.1
+done
+[[ -n "$PORT" ]] || { echo "sharded serve never bound a port"; cat "$WORK/serve.err"; exit 1; }
+"$CCE" client --port "$PORT" --op generate --prompt "the cat" --max-tokens 8
+"$CCE" client --port "$PORT" --op shutdown >/dev/null
+wait "$SERVE_PID"
+SERVE_PID=""
+echo "shard_quickstart OK"

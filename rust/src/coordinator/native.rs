@@ -277,6 +277,14 @@ pub struct NativeTrainer {
     pub dataset: Dataset,
     pub backend: NativeBackend,
     pub vocab: usize,
+    /// Vocabulary-shard fleet (`--shards` / `--shard-endpoints`): when
+    /// attached, the classifier lives on the workers — forward/backward
+    /// sweeps and the classifier SGD update run shard-local, the trainer
+    /// keeps the embedding side and merges the per-row scalar exchange
+    /// (see [`crate::shard`]).  [`NativeTrainer::train`] ships the
+    /// classifier out at the start and fetches it back before returning,
+    /// so checkpoints are oblivious to sharding.
+    fleet: Option<std::sync::Arc<crate::shard::Fleet>>,
 }
 
 impl NativeTrainer {
@@ -305,7 +313,41 @@ impl NativeTrainer {
             pad_per_doc: cfg.corpus == CorpusKind::Instruct,
         })?;
         let vocab = tokenizer.vocab_size();
-        Ok(NativeTrainer { cfg, model, tokenizer, dataset, backend, vocab })
+        Ok(NativeTrainer { cfg, model, tokenizer, dataset, backend, vocab, fleet: None })
+    }
+
+    /// Route the classifier through a vocabulary-shard fleet.  Only the
+    /// `cce*` methods shard (their blocked kernels run shard-local with
+    /// the §4.3 filter against the broadcast global LSE); `baseline` and
+    /// `chunked<k>` materialize logits and stay single-process.
+    pub fn attach_fleet(&mut self, fleet: std::sync::Arc<crate::shard::Fleet>) -> Result<()> {
+        if fleet.vocab() != self.vocab || fleet.dim() != self.model.d_model {
+            bail!(
+                "fleet shape {}×{} does not match model vocab {} × d {}",
+                fleet.vocab(),
+                fleet.dim(),
+                self.vocab,
+                self.model.d_model
+            );
+        }
+        if self.backend.method != crate::exec::NativeMethod::Cce {
+            bail!(
+                "--method {:?} cannot shard along V; vocabulary sharding needs a cce* method",
+                self.cfg.method
+            );
+        }
+        self.fleet = Some(fleet);
+        Ok(())
+    }
+
+    /// Ship `state`'s classifier to the attached fleet (no-op without
+    /// one).  [`NativeTrainer::train`] calls this itself; eval-only
+    /// drivers call it once before [`NativeTrainer::evaluate`].
+    pub fn fleet_load(&self, state: &NativeState) -> Result<()> {
+        if let Some(fleet) = &self.fleet {
+            fleet.load(&state.cls, &self.backend.opts)?;
+        }
+        Ok(())
     }
 
     /// Fresh state in the backend's storage dtype: small random embeddings,
@@ -345,14 +387,49 @@ impl NativeTrainer {
     pub fn step(&self, state: &mut NativeState, batch: &StepBatch) -> Result<(f64, f64)> {
         let tokens = batch.tokens.as_i32()?;
         let targets = batch.targets.as_i32()?;
-        let NativeState { emb, cls, step } = state;
-        let out = match (emb, cls) {
-            (ParamBuf::F32(emb), ParamBuf::F32(cls)) => self.step_t(emb, cls, tokens, targets)?,
-            (ParamBuf::Bf16(emb), ParamBuf::Bf16(cls)) => self.step_t(emb, cls, tokens, targets)?,
-            _ => bail!("state mixes storage dtypes (emb vs cls)"),
+        let out = if self.fleet.is_some() {
+            self.step_sharded(state, tokens, targets)?
+        } else {
+            let NativeState { emb, cls, .. } = state;
+            match (emb, cls) {
+                (ParamBuf::F32(emb), ParamBuf::F32(cls)) => self.step_t(emb, cls, tokens, targets)?,
+                (ParamBuf::Bf16(emb), ParamBuf::Bf16(cls)) => {
+                    self.step_t(emb, cls, tokens, targets)?
+                }
+                _ => bail!("state mixes storage dtypes (emb vs cls)"),
+            }
         };
-        *step += 1;
+        state.step += 1;
         Ok(out)
+    }
+
+    /// The sharded step body: bag hidden locally (f32, identical to the
+    /// single-process path), one `step` collective (shard-local forward,
+    /// exact LSE merge), one `merge` collective (shard-local backward
+    /// against the global LSE + the workers' in-place classifier SGD),
+    /// then the embedding scatter and update locally.  A worker failure
+    /// aborts the step with a pointed error — surviving workers only
+    /// apply SGD inside a successful merge, so their slices are
+    /// unchanged.
+    fn step_sharded(
+        &self,
+        state: &mut NativeState,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, f64)> {
+        let fleet = self.fleet.as_ref().expect("step_sharded requires an attached fleet");
+        let h = self.hidden(tokens, state);
+        let st = fleet.step(&h, targets)?;
+        let mg = fleet.merge_grads(&st.lse, Some(self.model.lr), st.count)?;
+        let gnorm = match &mut state.emb {
+            ParamBuf::F32(emb) => {
+                simd::with_lanes!(lanes => self.apply_update_emb(emb, tokens, &mg.d_e, mg.dc_sqnorm, lanes))
+            }
+            ParamBuf::Bf16(emb) => {
+                simd::with_lanes!(lanes => self.apply_update_emb(emb, tokens, &mg.d_e, mg.dc_sqnorm, lanes))
+            }
+        };
+        Ok((st.loss, gnorm))
     }
 
     /// The monomorphized step body: bag hidden (f32) → activations in the
@@ -487,7 +564,78 @@ impl NativeTrainer {
         sq.sqrt()
     }
 
-    /// Mean validation NLL over all validation batches.
+    /// The embedding half of [`NativeTrainer::apply_update`] for the
+    /// sharded step, reading the fleet's merged f32 `dE` (the classifier
+    /// half already ran on the workers).  Same span-bucketed scatter,
+    /// same lane-aligned SGD spans; returns the global gradient norm,
+    /// `sqrt(Σ_k |dC_k|² + |dEmb|²)`.
+    fn apply_update_emb<S: Store, L: Lanes>(
+        &self,
+        emb: &mut [S],
+        tokens: &[i32],
+        d_e: &[f32],
+        dc_sqnorm: f64,
+        lanes: L,
+    ) -> f64 {
+        let d = self.model.d_model;
+        let w = self.model.window.max(1);
+        let seq = self.model.seq_len.max(1);
+        let n = tokens.len();
+        let threads = self.backend.opts.resolved_threads();
+        let mut d_emb = vec![0f32; emb.len()];
+        let span_rows = crate::exec::ceil_div(self.vocab, threads).max(1);
+        let n_spans = crate::exec::ceil_div(self.vocab, span_rows);
+        let mut buckets: Vec<Vec<(u32, u32, f32)>> = vec![Vec::new(); n_spans];
+        for i in 0..n {
+            let q = i % seq;
+            let lo = i - q.min(w - 1);
+            let inv_len = 1.0 / (i - lo + 1) as f32;
+            for &tok in &tokens[lo..=i] {
+                let t = tok as usize;
+                buckets[t / span_rows].push((t as u32, i as u32, inv_len));
+            }
+        }
+        {
+            let tasks: Vec<_> = d_emb
+                .chunks_mut(span_rows * d)
+                .zip(&buckets)
+                .enumerate()
+                .map(|(ti, (chunk, bucket))| {
+                    let tok0 = ti * span_rows;
+                    move || {
+                        for &(t, i, inv_len) in bucket {
+                            let (t, i) = (t as usize, i as usize);
+                            let dh_row = &d_e[i * d..(i + 1) * d];
+                            let row = &mut chunk[(t - tok0) * d..(t - tok0 + 1) * d];
+                            <f32 as Store>::lanes_axpy_acc(lanes, row, inv_len, dh_row);
+                        }
+                    }
+                })
+                .collect();
+            pool::global().run(tasks);
+        }
+        let sq: f64 = dc_sqnorm + d_emb.iter().map(|&g| (g as f64) * g as f64).sum::<f64>();
+        let lr = self.model.lr;
+        let lane_span = |len: usize| {
+            let per = crate::exec::ceil_div(len, threads).max(1);
+            crate::exec::ceil_div(per, 8) * 8
+        };
+        {
+            let span = lane_span(emb.len());
+            let tasks: Vec<_> = emb
+                .chunks_mut(span)
+                .zip(d_emb.chunks(span))
+                .map(|(pc, gc)| move || S::lanes_axpy_store(lanes, pc, -lr, gc))
+                .collect();
+            pool::global().run(tasks);
+        }
+        sq.sqrt()
+    }
+
+    /// Mean validation NLL over all validation batches.  With a fleet
+    /// attached the forward runs sharded (the workers hold the current
+    /// classifier — mid-train evals see the live weights); `abort` drops
+    /// the step state no backward will consume.
     pub fn evaluate(&self, state: &NativeState) -> Result<f64> {
         let batches = self.dataset.val_batches(self.model.batch);
         if batches.is_empty() {
@@ -497,6 +645,14 @@ impl NativeTrainer {
         for b in &batches {
             let tokens = b.tokens.as_i32()?;
             let targets = b.targets.as_i32()?;
+            if let Some(fleet) = &self.fleet {
+                let h = self.hidden(tokens, state);
+                let st = fleet.step(&h, targets)?;
+                fleet.abort()?;
+                loss_sum += st.loss * st.count as f64;
+                count += st.count;
+                continue;
+            }
             let fwd = match (&state.emb, &state.cls) {
                 (ParamBuf::F32(emb), ParamBuf::F32(cls)) => {
                     self.eval_batch_t(emb, cls, tokens, targets)?
@@ -533,6 +689,8 @@ impl NativeTrainer {
         // Re-anchor the metrics clock: a resumed run carries restored step
         // history whose elapsed values came from an earlier process.
         metrics.start_run();
+        // Ship the classifier out to the shard workers (no-op unsharded).
+        self.fleet_load(&state)?;
         let mut done = state.step;
         let mut epoch: u64 = 0;
         'outer: loop {
@@ -570,6 +728,13 @@ impl NativeTrainer {
                 ));
             }
             epoch += 1;
+        }
+        if let Some(fleet) = &self.fleet {
+            // Bring the trained classifier home: checkpoints and eval-only
+            // paths are oblivious to sharding.  The f32 wire round-trip is
+            // exact for both storage dtypes.
+            let dtype = state.cls.dtype();
+            state.cls = ParamBuf::from_f32_vec(fleet.fetch()?, dtype);
         }
         Ok(state)
     }
@@ -868,5 +1033,61 @@ mod tests {
             .err()
             .expect("fused must be rejected natively");
         assert!(format!("{err:#}").contains("fused"), "{err:#}");
+    }
+
+    #[test]
+    fn sharded_training_curve_matches_single_process() {
+        // The tentpole contract at trainer level: same seed + same data,
+        // 2-shard local fleet vs single process, filter off (the skip mask
+        // partitions differently under sharding, so filtered runs only
+        // match approximately — see docs/sharding.md).  The only float
+        // difference left is the (m, s) LSE merge regrouping, ~1 ulp/row.
+        let run = |shards: Option<usize>| {
+            let mut trainer =
+                NativeTrainer::build(tiny_cfg("cce_no_filter", 6), tiny_model(), fast_opts())
+                    .unwrap();
+            if let Some(k) = shards {
+                let fleet = crate::shard::Fleet::local(k, trainer.vocab, trainer.model.d_model)
+                    .unwrap();
+                trainer.attach_fleet(std::sync::Arc::new(fleet)).unwrap();
+            }
+            let state = trainer.init(7);
+            let mut metrics = Metrics::in_memory();
+            let state = trainer.train(state, &mut metrics).unwrap();
+            let val = trainer.evaluate(&state).unwrap();
+            (metrics, state, val)
+        };
+        let (single, s_state, s_val) = run(None);
+        let (sharded, f_state, f_val) = run(Some(2));
+        let div = crate::coordinator::curve_max_divergence(&single.steps, &sharded.steps);
+        let scale = single.steps[0].loss;
+        assert!(div < 1e-5 * scale.max(1.0), "sharded curve diverged: {div:.4e}");
+        assert!((s_val - f_val).abs() < 1e-5, "val loss diverged: {s_val} vs {f_val}");
+        // The classifier came home from the workers: same shape, and the
+        // trained parameters agree to the merge tolerance.
+        let a = s_state.cls.to_f32_vec();
+        let b = f_state.cls.to_f32_vec();
+        assert_eq!(a.len(), b.len());
+        let worst =
+            a.iter().zip(&b).map(|(x, y)| (x - y).abs() as f64).fold(0.0f64, f64::max);
+        assert!(worst < 1e-4, "classifier drifted across the fleet roundtrip: {worst:.3e}");
+    }
+
+    #[test]
+    fn attach_fleet_rejects_unshardable_methods_and_shapes() {
+        let mut trainer =
+            NativeTrainer::build(tiny_cfg("baseline", 1), tiny_model(), fast_opts()).unwrap();
+        let fleet = std::sync::Arc::new(
+            crate::shard::Fleet::local(2, trainer.vocab, trainer.model.d_model).unwrap(),
+        );
+        let err = trainer.attach_fleet(fleet).unwrap_err().to_string();
+        assert!(err.contains("cannot shard"), "got: {err}");
+
+        let mut trainer =
+            NativeTrainer::build(tiny_cfg("cce", 1), tiny_model(), fast_opts()).unwrap();
+        let wrong =
+            std::sync::Arc::new(crate::shard::Fleet::local(2, trainer.vocab + 1, 8).unwrap());
+        let err = trainer.attach_fleet(wrong).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "got: {err}");
     }
 }

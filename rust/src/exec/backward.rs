@@ -127,6 +127,14 @@ struct BwdCtx<'a, S: Store> {
     /// `inv_perm[token] = permuted position`.
     inv_perm: &'a [u32],
     lse: &'a [f32],
+    /// Row activity for the *softmax* terms.  In the single-process pass
+    /// this is `p.x`; under vocabulary sharding (`cce_backward_sharded`) a
+    /// row whose label lives on another shard still contributes softmax
+    /// mass here, so its global label (any value `>= 0`) marks it active
+    /// even though the shard-local `p.x[i]` is `-1`.  The indicator terms
+    /// always consult `p.x` — only the owning shard holds the target
+    /// column.
+    global_x: &'a [i32],
     inv_count: f32,
     /// Clamped row / column blocking (the global block grid).
     nb: usize,
@@ -141,8 +149,31 @@ pub fn cce_backward<S: Store>(
     opts: &KernelOptions,
     lse: &[f32],
 ) -> BackwardOut<S> {
+    cce_backward_sharded(p, opts, lse, p.x, p.active_count())
+}
+
+/// Shard-local backward for vocabulary-sharded execution (`crate::shard`).
+///
+/// `p` holds one shard's classifier columns with labels remapped to the
+/// shard-local range (`-1` where the label belongs to another shard);
+/// `lse` is the **globally merged** per-row log-sum-exp; `global_x`
+/// carries the original (global) labels so rows whose target lives
+/// elsewhere still accumulate their softmax mass against this shard's
+/// columns; `global_count` is the global active-token count (the loss
+/// denominator).  Because the softmax probabilities are taken against the
+/// global LSE, the §4.3 sub-`eps` filter bound holds per shard exactly as
+/// it does in one process.  With `global_x = p.x` and `global_count =
+/// p.active_count()` this *is* [`cce_backward`], bit for bit.
+pub fn cce_backward_sharded<S: Store>(
+    p: &Problem<S>,
+    opts: &KernelOptions,
+    lse: &[f32],
+    global_x: &[i32],
+    global_count: usize,
+) -> BackwardOut<S> {
     let sweep = crate::obs::Stopwatch::start();
-    let out = simd::with_lanes!(lanes => backward_with(p, opts, lse, lanes));
+    let out =
+        simd::with_lanes!(lanes => backward_with(p, opts, lse, global_x, global_count, lanes));
     if let Some(us) = sweep.elapsed_us() {
         super::record_bwd_sweep(us, &out.stats, out.workspace_bytes, p.n, p.v, opts);
     }
@@ -153,12 +184,14 @@ fn backward_with<S: Store, L: Lanes>(
     p: &Problem<S>,
     opts: &KernelOptions,
     lse: &[f32],
+    global_x: &[i32],
+    global_count: usize,
     lanes: L,
 ) -> BackwardOut<S> {
     assert_eq!(lse.len(), p.n, "lse length mismatch");
+    assert_eq!(global_x.len(), p.n, "global_x length mismatch");
     let (n, d, v) = (p.n, p.d, p.v);
-    let count = p.active_count();
-    let inv_count = if count == 0 { 0.0f32 } else { 1.0 / count as f32 };
+    let inv_count = if global_count == 0 { 0.0f32 } else { 1.0 / global_count as f32 };
     let perm: Vec<u32> = if opts.sort {
         frequency_permutation(p.x, v)
     } else {
@@ -180,6 +213,7 @@ fn backward_with<S: Store, L: Lanes>(
         perm: &perm,
         inv_perm: &inv_perm,
         lse,
+        global_x,
         inv_count,
         nb,
         vb,
@@ -332,7 +366,7 @@ fn de_phase<S: Store, L: Lanes>(
             for r in 0..rows {
                 let i = row0 + block_start + r;
                 let p_row = &mut probs[r * cols..(r + 1) * cols];
-                if p.x[i] < 0 {
+                if ctx.global_x[i] < 0 {
                     p_row.fill(0.0);
                     continue;
                 }
@@ -361,7 +395,7 @@ fn de_phase<S: Store, L: Lanes>(
             // dE accumulation: acc_row += Σ_jj p·c_perm[jj] / count.
             for r in 0..rows {
                 let i = row0 + block_start + r;
-                if p.x[i] < 0 {
+                if ctx.global_x[i] < 0 {
                     continue;
                 }
                 for jj in 0..cols {
@@ -496,7 +530,7 @@ fn dc_phase<S: Store, L: Lanes>(
                 let c_row = &p.c[j * d..(j + 1) * d];
                 for r in 0..brows {
                     let i = block_start + r;
-                    if p.x[i] < 0 {
+                    if ctx.global_x[i] < 0 {
                         continue;
                     }
                     let e_row = &p.e[i * d..(i + 1) * d];

@@ -454,6 +454,270 @@ fn sample_span<S: Store, L: Lanes>(
         + visitor.best_logit.len() * 4
 }
 
+// ----------------------------------------------------------- shard entries
+//
+// Vocabulary-sharded variants (`crate::shard`): each worker owns a
+// contiguous slice `C[col0 .. col0+v)` of the global classifier and runs
+// the same tile sweep over it.  Two things change at the boundary so the
+// coordinator's merge is *exact* over the union:
+//
+// * top-k returns **raw logits** (not logprobs) and globally-offset token
+//   ids — reconstructing `z = logprob + lse` at the coordinator would
+//   reintroduce a rounding step that can flip cross-shard ties, so the
+//   comparison key crosses the wire untouched;
+// * sampling keys its Gumbel noise on the **global** column index, so the
+//   per-(row, token) perturbed scores are bitwise identical to the
+//   single-process sweep and the cross-shard argmax picks the same winner.
+
+/// Per-row shard-local top-k candidates: raw logits (the cross-shard merge
+/// key), globally-offset tokens, and this shard's partial LSE.
+#[derive(Debug, Clone, Default)]
+pub struct ShardTopKRow {
+    /// Global token ids (`col0` already added), best-first.
+    pub tokens: Vec<i32>,
+    /// Raw logits `z`, best-first — *not* normalized by any LSE.
+    pub logits: Vec<f32>,
+    /// This shard's partial log-sum-exp over its own columns.
+    pub lse: f32,
+}
+
+/// [`topk_shard`] output.
+#[derive(Debug, Clone)]
+pub struct ShardTopKOut {
+    pub rows: Vec<ShardTopKRow>,
+    pub workspace_bytes: usize,
+}
+
+/// Shard-local blocked top-k over classifier columns `[col0, col0 + p.v)`
+/// of the global vocabulary.  Identical sweep and candidate order to
+/// [`topk`]; only the emitted row format differs (see module note above).
+pub fn topk_shard<S: Store>(
+    p: &InferProblem<S>,
+    opts: &KernelOptions,
+    k: usize,
+    col0: usize,
+) -> Result<ShardTopKOut> {
+    if k == 0 || k > p.v {
+        bail!("top-k k={k} out of range for shard width {}", p.v);
+    }
+    let sweep = crate::obs::Stopwatch::start();
+    let out = simd::with_lanes!(lanes => topk_shard_with(p, opts, k, col0, lanes));
+    if let Some(us) = sweep.elapsed_us() {
+        super::record_infer_sweep(us);
+    }
+    Ok(out)
+}
+
+fn topk_shard_with<S: Store, L: Lanes>(
+    p: &InferProblem<S>,
+    opts: &KernelOptions,
+    k: usize,
+    col0: usize,
+    lanes: L,
+) -> ShardTopKOut {
+    let n = p.n;
+    let mut rows: Vec<ShardTopKRow> = vec![ShardTopKRow::default(); n];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    let buffer_bytes: usize = {
+        let tasks: Vec<_> = rows
+            .chunks_mut(span)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                let row0 = ti * span;
+                let opts = *opts;
+                move || {
+                    let rows_total = chunk.len();
+                    let n_block = opts.n_block.clamp(1, rows_total.max(1));
+                    let mut visitor = ShardTopKVisitor {
+                        col0,
+                        heaps: (0..n_block).map(|_| BoundedTopK::new(k)).collect(),
+                        out: chunk,
+                    };
+                    let sweep_bytes = tile_sweep(p, &opts, row0, rows_total, &mut visitor, lanes);
+                    sweep_bytes + visitor.heaps.len() * k * 8
+                }
+            })
+            .collect();
+        pool::global().run(tasks).into_iter().sum()
+    };
+    let workspace_bytes = n * k * 8 + buffer_bytes;
+    ShardTopKOut { rows, workspace_bytes }
+}
+
+struct ShardTopKVisitor<'a> {
+    col0: usize,
+    heaps: Vec<BoundedTopK>,
+    out: &'a mut [ShardTopKRow],
+}
+
+impl TileVisitor for ShardTopKVisitor<'_> {
+    fn begin_block(&mut self, rows: usize) {
+        for heap in self.heaps[..rows].iter_mut() {
+            heap.clear();
+        }
+    }
+
+    fn visit_tile_row(&mut self, r: usize, _i: usize, j0: usize, z_row: &[f32]) {
+        for (jj, &z) in z_row.iter().enumerate() {
+            // Global ids preserve the within-shard order (col0 is
+            // constant), so the heap's tie-break behaves exactly as the
+            // single-process sweep over these columns.
+            self.heaps[r].push(z, (self.col0 + j0 + jj) as i32);
+        }
+    }
+
+    fn end_row(&mut self, r: usize, span_row: usize, lse: f32) {
+        let best = self.heaps[r].sorted_desc();
+        let row = &mut self.out[span_row];
+        row.lse = lse;
+        row.tokens = best.iter().map(|&(_, t)| t).collect();
+        row.logits = best.iter().map(|&(z, _)| z).collect();
+    }
+}
+
+/// [`sample_shard`] output: this shard's per-row Gumbel-max candidate.
+#[derive(Debug, Clone)]
+pub struct ShardSampleOut {
+    /// Global token id of the shard-local winner.
+    pub tokens: Vec<i32>,
+    /// Perturbed score of the winner (`z` when `temperature == 0`) — the
+    /// cross-shard comparison key, bitwise equal to the single-process
+    /// sweep's score for the same `(row, token)`.
+    pub scores: Vec<f32>,
+    /// Raw logit of the winner (for the final `log p` against the merged
+    /// LSE).
+    pub logits: Vec<f32>,
+    /// This shard's partial log-sum-exp per row.
+    pub lse: Vec<f32>,
+    pub workspace_bytes: usize,
+}
+
+/// Shard-local Gumbel-max sampling over classifier columns `[col0, col0 +
+/// p.v)`: the noise is keyed on the **global** column index, so merging
+/// the per-shard winners (ascending shard order, strict `>`) reproduces
+/// the single-process [`sample`] token exactly.
+pub fn sample_shard<S: Store>(
+    p: &InferProblem<S>,
+    opts: &KernelOptions,
+    temperature: f32,
+    seeds: &[u64],
+    col0: usize,
+) -> Result<ShardSampleOut> {
+    if seeds.len() != p.n {
+        bail!("sample needs one seed per row: {} seeds for n={}", seeds.len(), p.n);
+    }
+    if !temperature.is_finite() || temperature < 0.0 {
+        bail!("temperature must be finite and >= 0, got {temperature}");
+    }
+    let sweep = crate::obs::Stopwatch::start();
+    let out = simd::with_lanes!(lanes => sample_shard_with(p, opts, temperature, seeds, col0, lanes));
+    if let Some(us) = sweep.elapsed_us() {
+        super::record_infer_sweep(us);
+    }
+    Ok(out)
+}
+
+fn sample_shard_with<S: Store, L: Lanes>(
+    p: &InferProblem<S>,
+    opts: &KernelOptions,
+    temperature: f32,
+    seeds: &[u64],
+    col0: usize,
+    lanes: L,
+) -> ShardSampleOut {
+    let n = p.n;
+    let mut tokens = vec![0i32; n];
+    let mut scores = vec![0f32; n];
+    let mut logits = vec![0f32; n];
+    let mut lse = vec![0f32; n];
+    let span = span_rows(n, opts.n_block, opts.threads);
+    let buffer_bytes: usize = {
+        let tasks: Vec<_> = tokens
+            .chunks_mut(span)
+            .zip(scores.chunks_mut(span))
+            .zip(logits.chunks_mut(span).zip(lse.chunks_mut(span)))
+            .enumerate()
+            .map(|(ti, ((tok_chunk, sc_chunk), (lg_chunk, lse_chunk)))| {
+                let row0 = ti * span;
+                let opts = *opts;
+                move || {
+                    let rows_total = tok_chunk.len();
+                    let n_block = opts.n_block.clamp(1, rows_total.max(1));
+                    let mut visitor = ShardSampleVisitor {
+                        temperature,
+                        seeds,
+                        col0,
+                        best_score: vec![f32::NEG_INFINITY; n_block],
+                        best_token: vec![0i32; n_block],
+                        best_logit: vec![0f32; n_block],
+                        tok_out: tok_chunk,
+                        sc_out: sc_chunk,
+                        lg_out: lg_chunk,
+                        lse_out: lse_chunk,
+                    };
+                    let sweep_bytes = tile_sweep(p, &opts, row0, rows_total, &mut visitor, lanes);
+                    sweep_bytes + visitor.best_score.len() * 12
+                }
+            })
+            .collect();
+        pool::global().run(tasks).into_iter().sum()
+    };
+    let workspace_bytes = n * 16 + buffer_bytes;
+    ShardSampleOut { tokens, scores, logits, lse, workspace_bytes }
+}
+
+struct ShardSampleVisitor<'a> {
+    temperature: f32,
+    seeds: &'a [u64],
+    col0: usize,
+    best_score: Vec<f32>,
+    best_token: Vec<i32>,
+    best_logit: Vec<f32>,
+    tok_out: &'a mut [i32],
+    sc_out: &'a mut [f32],
+    lg_out: &'a mut [f32],
+    lse_out: &'a mut [f32],
+}
+
+impl TileVisitor for ShardSampleVisitor<'_> {
+    fn begin_block(&mut self, rows: usize) {
+        self.best_score[..rows].fill(f32::NEG_INFINITY);
+    }
+
+    fn visit_tile_row(&mut self, r: usize, i: usize, j0: usize, z_row: &[f32]) {
+        let seed = self.seeds[i];
+        for (jj, &z) in z_row.iter().enumerate() {
+            let j = self.col0 + j0 + jj;
+            let score = if self.temperature == 0.0 {
+                z
+            } else {
+                z / self.temperature + gumbel_noise(seed, j as u64)
+            };
+            // Strict > keeps the first (smallest global j) on exact ties —
+            // the same rule the coordinator applies across shards.
+            if score > self.best_score[r] {
+                self.best_score[r] = score;
+                self.best_token[r] = j as i32;
+                self.best_logit[r] = z;
+            }
+        }
+    }
+
+    fn end_row(&mut self, r: usize, span_row: usize, lse: f32) {
+        self.tok_out[span_row] = self.best_token[r];
+        self.sc_out[span_row] = self.best_score[r];
+        self.lg_out[span_row] = self.best_logit[r];
+        self.lse_out[span_row] = lse;
+    }
+}
+
+/// The total order [`topk`] keeps its candidates in: higher logit first,
+/// then smaller token id.  Public so the shard coordinator merges
+/// per-shard candidate lists under *exactly* the kernel's order.
+pub fn topk_candidate_order(a: (f32, i32), b: (f32, i32)) -> std::cmp::Ordering {
+    b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+}
+
 /// splitmix64 finalizer.
 fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);

@@ -59,9 +59,12 @@ pub(crate) mod simd;
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{Backend, NativeBackend, NativeMethod};
-pub use backward::{cce_backward, frequency_permutation};
+pub use backward::{cce_backward, cce_backward_sharded, frequency_permutation};
 pub use dtype::{ParamBuf, Store, StoreDtype, BF16};
-pub use infer::{sample, score, topk, InferProblem, SampleOut, ScoreOut, TopKOut, TopKRow};
+pub use infer::{
+    sample, sample_shard, score, topk, topk_candidate_order, topk_shard, InferProblem, SampleOut,
+    ScoreOut, ShardSampleOut, ShardTopKOut, ShardTopKRow, TopKOut, TopKRow,
+};
 pub use lse::cce_forward;
 pub use pool::ThreadPool;
 

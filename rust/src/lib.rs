@@ -44,6 +44,12 @@
 //! * [`bench`]     — the table/figure harnesses and a from-scratch timing
 //!   framework (no external bench crate); `table1 --json` emits
 //!   `BENCH_table1.json` for cross-PR perf tracking.
+//! * [`shard`]     — vocabulary-sharded tensor parallelism: the classifier
+//!   split into contiguous column shards owned by worker processes
+//!   (`cce shard-worker`), coordinated over a versioned line-JSON
+//!   protocol behind a transport trait; exact `(m, s)` LSE merges, the
+//!   §4.3 filter against the global LSE, merged top-k/Gumbel inference
+//!   (`--shards N` / `--shard-endpoints` on train/eval/serve).
 //! * [`obs`]       — dependency-free observability: metrics registry
 //!   (counters/gauges/log-bucket histograms), per-request trace spans,
 //!   kernel profiling hooks, and the `/metrics` + `/healthz` exporter
@@ -63,6 +69,7 @@ pub mod memmodel;
 pub mod obs;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod sparsity;
 pub mod tokenizer;
 pub mod util;

@@ -39,7 +39,19 @@
 //! cce figA1   [--backend native|pjrt] [--budget-ms 2000] [--dtype f32|bf16]
 //!             [--json BENCH_figA1.json]
 //! cce info    — backend + manifest summary
+//! cce shard-worker [--host 127.0.0.1] [--port 0 = ephemeral]
+//!             [--threads 0 = use the coordinator's kernel options]
+//!             — one vocabulary-shard worker process; announces
+//!             `[shard] ready proto=line addr=HOST:PORT` on stdout
+//!             (see docs/sharding.md)
 //! ```
+//!
+//! Vocabulary sharding (train/eval/serve/servebench): `--shards N`
+//! auto-spawns N loopback worker processes; `--shard-endpoints
+//! host:port,...` attaches already-running `cce shard-worker` processes
+//! (shard k = entry k — the multi-node path).  The classifier splits into
+//! contiguous column shards; see docs/sharding.md for the protocol and
+//! exactness contract.
 //!
 //! `--backend native` (the default in builds without the `pjrt` feature)
 //! runs the multi-threaded SIMD Rust kernels with zero artifacts;
@@ -94,7 +106,10 @@ fn usage() -> ! {
          fig4       Fig. 4: fine-tune loss curves, cce vs fused (pjrt)\n  \
          fig5       Fig. 5: pretrain val perplexity (pjrt)\n  \
          figA1      Figs. A1/A2: time/memory vs token count [--backend]\n  \
-         info       backend + manifest summary"
+         info       backend + manifest summary\n  \
+         shard-worker  one vocabulary-shard worker (--host, --port,\n             \
+                    --threads; coordinator flags: --shards N or\n             \
+                    --shard-endpoints host:port,... on train/eval/serve)"
     );
     std::process::exit(2);
 }
@@ -153,6 +168,55 @@ fn dtype_override(args: &Args) -> Result<Option<StoreDtype>> {
     args.opt("dtype").map(StoreDtype::parse).transpose()
 }
 
+/// Optional vocabulary-shard fleet from the shared CLI flags:
+/// `--shards N` auto-spawns N loopback `cce shard-worker` children on
+/// ephemeral ports; `--shard-endpoints host:port,...` attaches workers
+/// already running elsewhere (shard k serves `endpoints[k]` — the
+/// multi-node deployment path).  The two are mutually exclusive.
+fn shard_fleet(args: &Args, v: usize, d: usize) -> Result<Option<std::sync::Arc<cce::shard::Fleet>>> {
+    let shards = args.get("shards", 0usize)?;
+    let endpoints = args.opt("shard-endpoints");
+    match (shards, endpoints) {
+        (0, None) => Ok(None),
+        (n, None) => Ok(Some(std::sync::Arc::new(cce::shard::Fleet::spawn(n, v, d)?))),
+        (0, Some(list)) => {
+            let eps: Vec<String> = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if eps.is_empty() {
+                bail!("--shard-endpoints needs at least one host:port");
+            }
+            Ok(Some(std::sync::Arc::new(cce::shard::Fleet::connect(&eps, v, d)?)))
+        }
+        (_, Some(_)) => bail!("--shards and --shard-endpoints are mutually exclusive"),
+    }
+}
+
+/// Whether either shard flag is present (used to fail fast on
+/// configurations sharding does not cover before any model loads).
+fn shard_requested(args: &Args) -> bool {
+    args.get("shards", 0usize).map(|n| n > 0).unwrap_or(false)
+        || args.opt("shard-endpoints").is_some()
+}
+
+/// `cce shard-worker`: one vocabulary-shard worker process.  Binds
+/// `--host`/`--port` (0 = ephemeral), announces `[shard] ready
+/// proto=line addr=HOST:PORT` on stdout, then serves shard collectives
+/// until a `shutdown` request.  `--threads 0` (the default) runs with
+/// the kernel options the coordinator ships in `load`; a nonzero value
+/// overrides the thread count for this worker's machine.
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let host = args.get("host", "127.0.0.1".to_string())?;
+    let port = args.get("port", 0u16)?;
+    let threads = match args.get("threads", 0usize)? {
+        0 => None,
+        t => Some(t),
+    };
+    cce::shard::run_worker(&host, port, threads)
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn pjrt_unavailable(cmd: &str) -> Result<()> {
     bail!(
@@ -195,6 +259,7 @@ fn run() -> Result<()> {
         "fig5" => cmd_curves(&args, false),
         "figA1" | "figa1" | "figA2" | "figa2" => cmd_sweep(&args),
         "info" => cmd_info(&args),
+        "shard-worker" => cmd_shard_worker(&args),
         other => {
             eprintln!("unknown command {other:?}\n");
             usage()
@@ -226,7 +291,15 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         seq_len: args.get("seq", NativeModelConfig::default().seq_len)?,
     };
     let opts = kernel_options(args)?;
-    let trainer = NativeTrainer::build(cfg.clone(), model, opts)?;
+    let mut trainer = NativeTrainer::build(cfg.clone(), model, opts)?;
+    if let Some(fleet) = shard_fleet(args, trainer.vocab, model.d_model)? {
+        eprintln!(
+            "[cce] vocab sharding: {} workers ({})",
+            fleet.shard_count(),
+            fleet.endpoints().join(", ")
+        );
+        trainer.attach_fleet(fleet)?;
+    }
     eprintln!(
         "[cce] backend native ({} threads) | bag-of-context head d={} | method {}",
         opts.threads, model.d_model, cfg.method
@@ -347,7 +420,10 @@ fn cmd_eval_native(args: &Args) -> Result<()> {
         seq_len: args.get("seq", NativeModelConfig::default().seq_len)?,
     };
     let opts = kernel_options(args)?;
-    let trainer = NativeTrainer::build(cfg, model, opts)?;
+    let mut trainer = NativeTrainer::build(cfg, model, opts)?;
+    if let Some(fleet) = shard_fleet(args, trainer.vocab, model.d_model)? {
+        trainer.attach_fleet(fleet)?;
+    }
     // Evaluate in the checkpoint's own dtype unless --dtype asks to
     // convert at load.
     let state = cce::coordinator::NativeState::from_checkpoint(
@@ -356,6 +432,7 @@ fn cmd_eval_native(args: &Args) -> Result<()> {
         trainer.model.d_model,
         dtype_override(args)?,
     )?;
+    trainer.fleet_load(&state)?;
     let val = trainer.evaluate(&state)?;
     println!("val_loss {val:.4}  perplexity {:.2}  (step {})", val.exp(), state.step);
     Ok(())
@@ -401,11 +478,25 @@ fn build_engines(
             "[serve] --demo: training a tiny bag-of-context model \
              ({steps} steps, vocab {vocab}, d {dim}) — no checkpoint needed"
         );
-        let engine = cce::serve::Engine::demo(vocab, dim, steps, opts)?;
+        let mut engine = cce::serve::Engine::demo(vocab, dim, steps, opts)?;
+        if let Some(fleet) = shard_fleet(args, engine.vocab, engine.d_model)? {
+            eprintln!(
+                "[serve] vocab sharding: {} workers ({})",
+                fleet.shard_count(),
+                fleet.endpoints().join(", ")
+            );
+            engine.attach_fleet(fleet)?;
+        }
         return Ok(vec![("default".to_string(), std::sync::Arc::new(engine))]);
     }
     if specs.is_empty() {
         bail!("serve needs --checkpoint [tag=]path (repeatable; or --demo for a throwaway model)");
+    }
+    if shard_requested(args) && specs.len() > 1 {
+        bail!(
+            "vocabulary sharding serves a single model: one fleet owns one \
+             classifier (drop the extra --checkpoint entries or the shard flags)"
+        );
     }
     // No --window flag: trust the checkpoint's .model.json sidecar.
     let window = match args.opt("window") {
@@ -423,12 +514,20 @@ fn build_engines(
         if models.iter().any(|(seen, _)| *seen == tag) {
             bail!("duplicate model tag {tag:?} in --checkpoint");
         }
-        let engine = cce::serve::Engine::from_checkpoint(
+        let mut engine = cce::serve::Engine::from_checkpoint(
             std::path::Path::new(path),
             window,
             dtype,
             opts,
         )?;
+        if let Some(fleet) = shard_fleet(args, engine.vocab, engine.d_model)? {
+            eprintln!(
+                "[serve] vocab sharding: {} workers ({})",
+                fleet.shard_count(),
+                fleet.endpoints().join(", ")
+            );
+            engine.attach_fleet(fleet)?;
+        }
         models.push((tag, std::sync::Arc::new(engine)));
     }
     Ok(models)

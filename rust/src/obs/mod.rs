@@ -336,6 +336,12 @@ pub fn global() -> &'static Registry {
         r.gauge_f("train_step_loss", "Loss of the most recent train step");
         r.gauge_f("train_grad_norm", "Gradient norm of the most recent train step");
         r.gauge_f("train_tokens_per_sec", "Training throughput of the most recent step");
+        r.gauge("shard_workers", "Vocabulary-shard workers attached to this process");
+        r.histogram("shard_exchange_bytes", "Wire bytes per shard collective (requests + replies)");
+        r.histogram("shard_exchange_us", "Wall time per shard collective, send through last reply");
+        r.histogram("shard_step_us", "Wall time per sharded forward step collective");
+        r.counter("shard_merges_total", "Coordinator merges of per-shard partial results");
+        r.counter("shard_worker_errors_total", "Shard collectives failed by a worker error");
         r
     })
 }

@@ -181,6 +181,13 @@ pub struct Engine {
     pub d_model: usize,
     pub window: usize,
     pub opts: KernelOptions,
+    /// Vocabulary-shard fleet: when attached, the classifier sweeps
+    /// (top-k, sampling, scoring) run on the shard workers and merge at
+    /// the coordinator; the embedding/bag side stays local.  A worker
+    /// failure surfaces as a per-request `internal` error through the
+    /// same `Result` path as any kernel error — never a hang (the
+    /// transports carry deadlines).
+    fleet: Option<std::sync::Arc<crate::shard::Fleet>>,
     /// Hard per-request cap on generated tokens.
     pub max_gen_tokens: usize,
     /// Hard per-request cap on scored positions — without it a single huge
@@ -224,11 +231,35 @@ impl Engine {
             d_model,
             window,
             opts,
+            fleet: None,
             max_gen_tokens: 256,
             max_score_tokens: 4096,
             peak_workspace: AtomicU64::new(0),
             served: AtomicU64::new(0),
         })
+    }
+
+    /// Route classifier sweeps through a vocabulary-shard fleet.  Ships
+    /// the engine's classifier to the workers immediately; call before
+    /// serving starts.
+    pub fn attach_fleet(&mut self, fleet: std::sync::Arc<crate::shard::Fleet>) -> Result<()> {
+        if fleet.vocab() != self.vocab || fleet.dim() != self.d_model {
+            bail!(
+                "fleet shape {}×{} does not match model vocab {} × d {}",
+                fleet.vocab(),
+                fleet.dim(),
+                self.vocab,
+                self.d_model
+            );
+        }
+        fleet.load(&self.state.cls, &self.opts)?;
+        self.fleet = Some(fleet);
+        Ok(())
+    }
+
+    /// Attached shard count (`0` = single-process).
+    pub fn shard_count(&self) -> usize {
+        self.fleet.as_ref().map(|f| f.shard_count()).unwrap_or(0)
     }
 
     /// Open a `cce train --backend native` checkpoint (+ its `.vocab.json`
@@ -328,6 +359,9 @@ impl Engine {
             ("simd", Json::str(exec::simd_dispatch())),
             ("n_block", Json::Int(self.opts.n_block as i64)),
             ("v_block", Json::Int(self.opts.v_block as i64)),
+            // 0 = single-process; N = classifier sweeps run on N
+            // vocabulary-shard workers (docs/sharding.md).
+            ("shards", Json::Int(self.shard_count() as i64)),
             ("max_gen_tokens", Json::Int(self.max_gen_tokens as i64)),
             ("max_score_tokens", Json::Int(self.max_score_tokens as i64)),
             ("peak_workspace_bytes", Json::Int(self.peak_workspace_bytes() as i64)),
@@ -400,6 +434,9 @@ impl Engine {
     /// Blocked top-k against the stored classifier (dtype-dispatched; the
     /// hidden rows stay f32, the classifier widens on load in the kernel).
     fn run_topk(&self, h: &[f32], rows: usize, k: usize) -> Result<exec::TopKOut> {
+        if let Some(fleet) = &self.fleet {
+            return fleet.topk(h, rows, k);
+        }
         match &self.state.cls {
             ParamBuf::F32(c) => {
                 exec::topk(&InferProblem::new(h, c, rows, self.d_model, self.vocab)?, &self.opts, k)
@@ -418,6 +455,9 @@ impl Engine {
         temperature: f32,
         seeds: &[u64],
     ) -> Result<exec::SampleOut> {
+        if let Some(fleet) = &self.fleet {
+            return fleet.sample(h, rows, temperature, seeds);
+        }
         match &self.state.cls {
             ParamBuf::F32(c) => exec::sample(
                 &InferProblem::new(h, c, rows, self.d_model, self.vocab)?,
@@ -449,6 +489,11 @@ impl Engine {
             let h_s = S::narrow_cow(h);
             let p = Problem::new(&h_s, c, targets, targets.len(), d, v)?;
             Ok(exec::score(&p, opts))
+        }
+        if let Some(fleet) = &self.fleet {
+            // Workers narrow the broadcast f32 hidden rows to the storage
+            // dtype themselves — the same convention as `go` below.
+            return fleet.score(h, targets);
         }
         match &self.state.cls {
             ParamBuf::F32(c) => go(h, c, targets, self.d_model, self.vocab, &self.opts),

@@ -1,0 +1,629 @@
+//! The coordinator side: a [`Fleet`] of shard workers driven in lockstep.
+//!
+//! Collectives are send-all-then-receive-all over the per-worker
+//! [`Transport`] links, so shard work overlaps while the coordinator
+//! blocks only on the slowest reply.  Replies are folded strictly in
+//! ascending shard order, which makes every merge independent of reply
+//! *arrival* order:
+//!
+//! * **LSE** ([`merge_lse`]): `lse = m + ln Σ_k exp(lse_k − m)` with
+//!   `m = max_k lse_k`, folded in f64 — exact in real arithmetic because
+//!   the vocabulary ranges are disjoint.  The 1-shard merge is bitwise
+//!   the identity (`exp(0) = 1`, `ln 1 = 0`, and f32 → f64 → f32 of the
+//!   same value round-trips), so a 1-shard fleet reproduces
+//!   [`crate::exec::cce_forward`] bit-for-bit.
+//! * **top-k / sampling**: candidates carry the kernels' raw comparison
+//!   keys (untempered logits, perturbed Gumbel scores) and global token
+//!   ids, merged under the kernels' exact total orders — merged *tokens*
+//!   are bitwise identical to the single-process kernels for any shard
+//!   count; reported log-probabilities differ from single-process only
+//!   through the merged LSE's final rounding (≤ a few ulps).
+//! * **gradients**: per-shard partial `dE` sums fold in f64; `dC` never
+//!   travels — each worker applies its own SGD slice update in place.
+//!
+//! Failure semantics: any worker error — an `{"ok":false}` reply, a
+//! severed connection, a read timeout — fails the whole collective with
+//! a pointed error naming the worker.  Surviving workers are sent a
+//! best-effort `abort` (request *and* reply, keeping their links in
+//! sync) so the fleet is reusable when the caller continues; a dead
+//! worker cannot be rejoined — callers abort the step (train) or surface
+//! a structured `internal` error (serve), never hang.
+
+use std::io::BufRead;
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::exec::{
+    topk_candidate_order, FilterStats, KernelOptions, ParamBuf, SampleOut, ScoreOut, TopKOut,
+    TopKRow,
+};
+use crate::obs;
+use crate::util::json::Json;
+
+use super::protocol::{
+    check_ok, floats_field, ints_field, req_abort, req_fetch, req_hello, req_load, req_merge,
+    req_sample, req_shutdown, req_step, req_topk, SHARD_PROTO_VERSION,
+};
+use super::transport::{LocalTransport, TcpTransport, Transport};
+use super::{split_vocab, ShardSpec};
+
+/// Merged forward collective: exactly the fields the trainer's step and
+/// the engine's scorer need, with [`ShardStep::loss`] computed the same
+/// way as [`crate::exec::ForwardOut::loss`].
+pub struct ShardStep {
+    pub lse: Vec<f32>,
+    pub target_logit: Vec<f32>,
+    pub loss: f64,
+    pub count: usize,
+}
+
+/// Merged backward collective.  `dC` stays on the workers (applied in
+/// place when a learning rate rides the `merge` request); the coordinator
+/// receives only the summed `dE` and the scalars it reports.
+pub struct ShardMerge {
+    pub d_e: Vec<f32>,
+    /// `Σ_k |dC_k|²` in f64 — the classifier's share of the grad norm.
+    pub dc_sqnorm: f64,
+    pub stats: FilterStats,
+}
+
+/// Merge per-shard partial LSEs (disjoint vocabulary ranges) into the
+/// global per-row LSE.  Folded in f64 in ascending shard order: the
+/// result is independent of reply arrival order, and the 1-shard case is
+/// bitwise the identity.
+pub fn merge_lse(parts: &[Vec<f32>], n: usize) -> Vec<f32> {
+    (0..n).map(|i| merge_lse_row(parts.iter().map(|p| p[i]))).collect()
+}
+
+fn merge_lse_row(parts: impl Iterator<Item = f32> + Clone) -> f32 {
+    let m = parts.clone().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = parts.map(|lse| f64::exp((lse - m) as f64)).sum();
+    (m as f64 + s.ln()) as f32
+}
+
+struct FleetInner {
+    links: Vec<Box<dyn Transport>>,
+    children: Vec<Child>,
+    /// Spawned workers' stdout pipes, held open so their clean-shutdown
+    /// marker has somewhere to go.
+    keepalive: Vec<std::io::BufReader<ChildStdout>>,
+}
+
+/// A fleet of vocabulary-shard workers.  All collectives take `&self`
+/// (links behind a mutex), so an `Arc<Fleet>` drops into the serve
+/// engine and the trainer unchanged.
+pub struct Fleet {
+    v: usize,
+    d: usize,
+    specs: Vec<ShardSpec>,
+    inner: Mutex<FleetInner>,
+}
+
+impl Fleet {
+    /// In-process fleet over [`LocalTransport`] workers — unit tests and
+    /// single-machine debugging; exercises the full wire encoding.
+    pub fn local(count: usize, v: usize, d: usize) -> Result<Fleet> {
+        let specs = split_vocab(v, count)?;
+        let links: Vec<Box<dyn Transport>> =
+            (0..count).map(|k| Box::new(LocalTransport::new(k)) as Box<dyn Transport>).collect();
+        Fleet::finish(v, d, specs, links, Vec::new(), Vec::new())
+    }
+
+    /// Connect to already-running `cce shard-worker` processes
+    /// (`--shard-endpoints`); shard `k` is `endpoints[k]`.  This is the
+    /// multi-node path: the endpoints just stop being loopback.
+    pub fn connect(endpoints: &[String], v: usize, d: usize) -> Result<Fleet> {
+        let specs = split_vocab(v, endpoints.len())?;
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(endpoints.len());
+        for ep in endpoints {
+            links.push(Box::new(TcpTransport::connect(ep)?));
+        }
+        Fleet::finish(v, d, specs, links, Vec::new(), Vec::new())
+    }
+
+    /// Spawn `count` workers of this same binary on loopback ephemeral
+    /// ports (`--shards N`), parsing each `[shard] ready` announce for
+    /// the bound address.  The fleet owns the children: they are shut
+    /// down (or killed) on drop.
+    pub fn spawn(count: usize, v: usize, d: usize) -> Result<Fleet> {
+        let specs = split_vocab(v, count)?;
+        let exe = std::env::current_exe().context("locating the cce binary to spawn workers")?;
+        let mut children = Vec::with_capacity(count);
+        let mut keepalive = Vec::with_capacity(count);
+        let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(count);
+        for k in 0..count {
+            let mut child = Command::new(&exe)
+                .args(["shard-worker", "--host", "127.0.0.1", "--port", "0"])
+                .stdout(Stdio::piped())
+                .spawn()
+                .with_context(|| format!("spawning shard worker {k}"))?;
+            let stdout = child.stdout.take().expect("stdout was piped");
+            let mut reader = std::io::BufReader::new(stdout);
+            let mut line = String::new();
+            let addr = loop {
+                line.clear();
+                let n = reader.read_line(&mut line).context("reading worker announce")?;
+                if n == 0 {
+                    let _ = child.kill();
+                    bail!("shard worker {k} exited before announcing an address");
+                }
+                if let Some(rest) = line.trim().strip_prefix("[shard] ready proto=line addr=") {
+                    break rest.to_string();
+                }
+            };
+            links.push(Box::new(TcpTransport::connect(&addr)?));
+            children.push(child);
+            keepalive.push(reader);
+        }
+        Fleet::finish(v, d, specs, links, children, keepalive)
+    }
+
+    fn finish(
+        v: usize,
+        d: usize,
+        specs: Vec<ShardSpec>,
+        links: Vec<Box<dyn Transport>>,
+        children: Vec<Child>,
+        keepalive: Vec<std::io::BufReader<ChildStdout>>,
+    ) -> Result<Fleet> {
+        let fleet = Fleet { v, d, specs, inner: Mutex::new(FleetInner { links, children, keepalive }) };
+        let replies = fleet.collective("hello", |_| req_hello(), false)?;
+        for (spec, reply) in fleet.specs.iter().zip(&replies) {
+            let proto = reply.get("proto").and_then(|p| p.as_i64()).unwrap_or(0);
+            if proto != SHARD_PROTO_VERSION {
+                bail!(
+                    "shard {} speaks protocol v{proto}, this build speaks v{SHARD_PROTO_VERSION}",
+                    spec.index
+                );
+            }
+        }
+        super::record_workers(fleet.specs.len());
+        Ok(fleet)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.v
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn specs(&self) -> &[ShardSpec] {
+        &self.specs
+    }
+
+    /// Peer descriptions, shard order (for `/v1/models` and logs).
+    pub fn endpoints(&self) -> Vec<String> {
+        let inner = self.lock();
+        inner.links.iter().map(|l| l.describe()).collect()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, FleetInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Run one collective: build a request per shard, send all, receive
+    /// all, fail with a pointed error (and best-effort `abort` resync of
+    /// survivors) if any worker fails.
+    fn collective(&self, op: &str, req_for: impl Fn(&ShardSpec) -> Json, is_step: bool) -> Result<Vec<Json>> {
+        let sw = obs::Stopwatch::start();
+        let mut inner = self.lock();
+        let reqs: Vec<Json> = self.specs.iter().map(&req_for).collect();
+        let mut bytes = 0usize;
+        let mut first_err: Option<String> = None;
+        let mut sent = vec![false; reqs.len()];
+        for (i, (link, req)) in inner.links.iter_mut().zip(&reqs).enumerate() {
+            match link.send(req) {
+                Ok(n) => {
+                    bytes += n;
+                    sent[i] = true;
+                }
+                Err(e) => {
+                    first_err.get_or_insert_with(|| format!("shard {i} ({}): {e}", link.describe()));
+                }
+            }
+        }
+        let mut replies: Vec<Option<Json>> = Vec::with_capacity(reqs.len());
+        for (i, link) in inner.links.iter_mut().enumerate() {
+            if !sent[i] {
+                replies.push(None);
+                continue;
+            }
+            // Receive from every link we wrote to, even after an earlier
+            // failure: a surviving worker's reply must be consumed or the
+            // next collective would read stale lines.
+            match link.recv().and_then(|(reply, n)| {
+                bytes += n;
+                check_ok(&reply).map(|()| reply)
+            }) {
+                Ok(reply) => replies.push(Some(reply)),
+                Err(e) => {
+                    first_err.get_or_insert_with(|| format!("shard {i} ({}): {e}", link.describe()));
+                    replies.push(None);
+                }
+            }
+        }
+        if let Some(msg) = first_err {
+            super::record_worker_error();
+            if op != "abort" && op != "shutdown" {
+                abort_links(&mut inner.links);
+            }
+            bail!(
+                "shard {op} collective failed at {msg}; the step was aborted \
+                 (a crashed worker cannot rejoin — restart the fleet)"
+            );
+        }
+        super::record_exchange(bytes, sw.elapsed_us(), is_step);
+        Ok(replies.into_iter().map(|r| r.expect("no error implies reply")).collect())
+    }
+
+    /// Ship the classifier to the workers, one contiguous column slice
+    /// each (widened to f32 on the wire — exact for both dtypes).
+    pub fn load(&self, cls: &ParamBuf, opts: &KernelOptions) -> Result<()> {
+        if cls.len() != self.v * self.d {
+            bail!("classifier has {} values, fleet expects {}×{}", cls.len(), self.v, self.d);
+        }
+        let full = cls.to_f32_vec();
+        let dtype = cls.dtype();
+        let d = self.d;
+        self.collective(
+            "load",
+            |spec| req_load(spec, self.v, d, dtype, opts, &full[spec.j0 * d..spec.j1 * d]),
+            false,
+        )?;
+        Ok(())
+    }
+
+    /// Forward collective: broadcast `(E, labels)`, merge per-shard LSEs
+    /// exactly, pick each row's target logit off its owner shard, and
+    /// reduce the loss the same way [`crate::exec::cce_forward`] does.
+    pub fn step(&self, e: &[f32], x: &[i32]) -> Result<ShardStep> {
+        let n = x.len();
+        if e.len() != n * self.d {
+            bail!("step: e has {} values, want n×d = {}×{}", e.len(), n, self.d);
+        }
+        let replies = self.collective("step", |_| req_step(e, x), true)?;
+        let mut lse_parts = Vec::with_capacity(replies.len());
+        let mut tgt_parts = Vec::with_capacity(replies.len());
+        for reply in &replies {
+            lse_parts.push(floats_field(reply, "lse", n)?);
+            tgt_parts.push(floats_field(reply, "tgt", n)?);
+        }
+        let lse = merge_lse(&lse_parts, n);
+        let mut target_logit = vec![0.0f32; n];
+        for (i, &t) in x.iter().enumerate() {
+            if t >= 0 {
+                let owner = self
+                    .specs
+                    .iter()
+                    .position(|s| s.owns(t))
+                    .ok_or_else(|| anyhow!("label {t} outside vocab {}", self.v))?;
+                target_logit[i] = tgt_parts[owner][i];
+            }
+        }
+        let count = x.iter().filter(|&&t| t >= 0).count();
+        let loss_sum: f64 = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t >= 0)
+            .map(|(i, _)| (lse[i] - target_logit[i]) as f64)
+            .sum();
+        let loss = if count == 0 { 0.0 } else { loss_sum / count as f64 };
+        Ok(ShardStep { lse, target_logit, loss, count })
+    }
+
+    /// Backward collective: broadcast the merged LSE (so every shard's
+    /// §4.3 filter skips against the *global* distribution), the global
+    /// active count, and optionally the SGD learning rate the workers
+    /// apply to their own slices.  Must follow a [`Fleet::step`].
+    pub fn merge_grads(&self, lse: &[f32], lr: Option<f32>, count: usize) -> Result<ShardMerge> {
+        let n = lse.len();
+        let replies = self.collective("merge", |_| req_merge(lse, lr, count), false)?;
+        let mut d_e = vec![0.0f64; n * self.d];
+        let mut dc_sqnorm = 0.0f64;
+        let mut stats = FilterStats::default();
+        for reply in &replies {
+            let part = floats_field(reply, "de", n * self.d)?;
+            for (acc, &g) in d_e.iter_mut().zip(&part) {
+                *acc += g as f64;
+            }
+            dc_sqnorm += reply
+                .req("dc_sqnorm")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("dc_sqnorm must be a number"))?;
+            stats.merge(&FilterStats {
+                blocks_total: stat_u64(reply, "blocks_total")?,
+                blocks_skipped: stat_u64(reply, "blocks_skipped")?,
+                sig_entries: stat_u64(reply, "sig_entries")?,
+            });
+        }
+        Ok(ShardMerge { d_e: d_e.iter().map(|&g| g as f32).collect(), dc_sqnorm, stats })
+    }
+
+    /// Merged top-k: per-shard bounded heaps carry raw logits + global
+    /// token ids; the union re-sorts under the kernel's exact candidate
+    /// order, so merged tokens are bitwise [`crate::exec::topk`]'s for
+    /// any shard count.  Log-probabilities renormalize against the
+    /// merged LSE.
+    pub fn topk(&self, e: &[f32], rows: usize, k: usize) -> Result<TopKOut> {
+        if k == 0 || k > self.v {
+            bail!("top-k k={k} out of range for vocab {}", self.v);
+        }
+        if e.len() != rows * self.d {
+            bail!("topk: e has {} values, want rows×d = {}×{}", e.len(), rows, self.d);
+        }
+        let replies = self.collective("topk", |_| req_topk(e, rows, k), false)?;
+        let parts = parse_topk_parts(&replies, rows, k)?;
+        let mut out_rows = Vec::with_capacity(rows);
+        for i in 0..rows {
+            let lse = merge_lse_row(parts.iter().map(|p| p[i].lse));
+            let mut cands: Vec<(f32, i32)> = parts
+                .iter()
+                .flat_map(|p| p[i].z.iter().copied().zip(p[i].t.iter().copied()))
+                .collect();
+            cands.sort_by(|a, b| topk_candidate_order(*a, *b));
+            cands.truncate(k);
+            out_rows.push(TopKRow {
+                tokens: cands.iter().map(|c| c.1).collect(),
+                logprobs: cands.iter().map(|c| c.0 - lse).collect(),
+                lse,
+            });
+        }
+        let workspace_bytes = rows * k * 8 * self.specs.len();
+        Ok(TopKOut { rows: out_rows, workspace_bytes })
+    }
+
+    /// Merged Gumbel-max sampling: noise is keyed on global column ids on
+    /// the workers, so the per-shard winners are the same perturbed
+    /// scores the single-process kernel compares; ascending-shard strict
+    /// `>` reproduces its first-max tie-breaking exactly — merged tokens
+    /// are bitwise [`crate::exec::sample`]'s for any shard count.
+    pub fn sample(&self, e: &[f32], rows: usize, temperature: f32, seeds: &[u64]) -> Result<SampleOut> {
+        if seeds.len() != rows {
+            bail!("sample: {} seeds for {rows} rows", seeds.len());
+        }
+        if e.len() != rows * self.d {
+            bail!("sample: e has {} values, want rows×d = {}×{}", e.len(), rows, self.d);
+        }
+        let replies =
+            self.collective("sample", |_| req_sample(e, rows, temperature, seeds), false)?;
+        let mut tokens_parts = Vec::with_capacity(replies.len());
+        let mut scores_parts = Vec::with_capacity(replies.len());
+        let mut logits_parts = Vec::with_capacity(replies.len());
+        let mut lse_parts = Vec::with_capacity(replies.len());
+        for reply in &replies {
+            tokens_parts.push(ints_field(reply, "tokens", rows)?);
+            scores_parts.push(floats_field(reply, "scores", rows)?);
+            logits_parts.push(floats_field(reply, "logits", rows)?);
+            lse_parts.push(floats_field(reply, "lse", rows)?);
+        }
+        let mut tokens = Vec::with_capacity(rows);
+        let mut logprobs = Vec::with_capacity(rows);
+        for i in 0..rows {
+            let lse = merge_lse_row(lse_parts.iter().map(|p| p[i]));
+            let mut win = 0usize;
+            for s in 1..self.specs.len() {
+                if scores_parts[s][i] > scores_parts[win][i] {
+                    win = s;
+                }
+            }
+            tokens.push(tokens_parts[win][i]);
+            logprobs.push(logits_parts[win][i] - lse);
+        }
+        Ok(SampleOut { tokens, logprobs, workspace_bytes: rows * 16 * self.specs.len() })
+    }
+
+    /// Teacher-forced scoring over the fleet: one forward collective,
+    /// per-row `log p(x_i) = z_{x_i} − lse_i`, then an `abort` so the
+    /// workers drop the cached step state no backward will consume.
+    pub fn score(&self, e: &[f32], x: &[i32]) -> Result<ScoreOut> {
+        let st = self.step(e, x)?;
+        self.abort()?;
+        let logprobs: Vec<f32> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| if t >= 0 { st.target_logit[i] - st.lse[i] } else { 0.0 })
+            .collect();
+        Ok(ScoreOut {
+            logprobs,
+            nll: st.loss,
+            perplexity: st.loss.exp(),
+            count: st.count,
+            workspace_bytes: x.len() * 8 * self.specs.len(),
+        })
+    }
+
+    /// Gather the classifier back (checkpointing): shard slices
+    /// concatenate in column order into the full `V×D` table, bit-exact.
+    pub fn fetch(&self) -> Result<Vec<f32>> {
+        let d = self.d;
+        let replies = self.collective("fetch", |_| req_fetch(), false)?;
+        let mut full = Vec::with_capacity(self.v * d);
+        for (spec, reply) in self.specs.iter().zip(&replies) {
+            full.extend(floats_field(reply, "c", spec.width() * d)?);
+        }
+        Ok(full)
+    }
+
+    /// Drop cached step state on every worker (a step whose backward was
+    /// abandoned).
+    pub fn abort(&self) -> Result<()> {
+        self.collective("abort", |_| req_abort(), false)?;
+        Ok(())
+    }
+
+    /// Clean shutdown: every worker replies, spawned children are reaped
+    /// (killed if they linger).  Also runs on drop.
+    pub fn shutdown(&self) {
+        let mut inner = self.lock();
+        shutdown_inner(&mut inner);
+        super::record_workers(0);
+    }
+}
+
+fn abort_links(links: &mut [Box<dyn Transport>]) {
+    for link in links {
+        if link.send(&req_abort()).is_ok() {
+            let _ = link.recv();
+        }
+    }
+}
+
+fn shutdown_inner(inner: &mut FleetInner) {
+    for link in inner.links.iter_mut() {
+        if link.send(&req_shutdown()).is_ok() {
+            let _ = link.recv();
+        }
+    }
+    inner.links.clear();
+    for child in inner.children.iter_mut() {
+        let mut done = false;
+        for _ in 0..100 {
+            if matches!(child.try_wait(), Ok(Some(_))) {
+                done = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        if !done {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+    inner.children.clear();
+    inner.keepalive.clear();
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        let mut inner = self.lock();
+        if !inner.links.is_empty() || !inner.children.is_empty() {
+            shutdown_inner(&mut inner);
+        }
+    }
+}
+
+fn stat_u64(reply: &Json, key: &str) -> Result<u64> {
+    let i = reply.req(key)?.as_i64().ok_or_else(|| anyhow!("{key} must be an integer"))?;
+    Ok(i.max(0) as u64)
+}
+
+struct TopKPart {
+    t: Vec<i32>,
+    z: Vec<f32>,
+    lse: f32,
+}
+
+fn parse_topk_parts(replies: &[Json], rows: usize, k: usize) -> Result<Vec<Vec<TopKPart>>> {
+    replies
+        .iter()
+        .map(|reply| {
+            let arr = reply
+                .req("rows")?
+                .as_array()
+                .ok_or_else(|| anyhow!("topk reply rows must be an array"))?;
+            if arr.len() != rows {
+                bail!("topk reply has {} rows, want {rows}", arr.len());
+            }
+            arr.iter()
+                .map(|row| {
+                    let t_arr = row
+                        .req("t")?
+                        .as_array()
+                        .ok_or_else(|| anyhow!("topk row t must be an array"))?;
+                    let got = t_arr.len();
+                    if got > k {
+                        bail!("topk row returned {got} candidates, want <= {k}");
+                    }
+                    let t = ints_field(row, "t", got)?;
+                    let z = floats_field(row, "z", got)?;
+                    let lse = row
+                        .req("lse")?
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("topk row lse must be a number"))?
+                        as f32;
+                    Ok(TopKPart { t, z, lse })
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{cce_forward, Problem};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merge_lse_single_shard_is_bitwise_identity() {
+        let part = vec![vec![-3.25f32, 0.0, 17.5, 1.0e-20, 88.6]];
+        let merged = merge_lse(&part, 5);
+        for (a, b) in part[0].iter().zip(&merged) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} changed under 1-shard merge");
+        }
+    }
+
+    #[test]
+    fn merge_lse_matches_direct_logsumexp() {
+        // Two shards of known exps: lse of the union must come back.
+        // exp parts: ln(2) and ln(6) → merged = ln(8).
+        let parts = vec![vec![2.0f64.ln() as f32], vec![6.0f64.ln() as f32]];
+        let merged = merge_lse(&parts, 1);
+        assert!((merged[0] as f64 - 8.0f64.ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn local_fleet_forward_matches_single_process() {
+        let (n, d, v) = (6, 8, 50);
+        let mut rng = Rng::new(7);
+        let e: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.4).collect();
+        let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.4).collect();
+        let x: Vec<i32> = vec![3, 49, -1, 0, 17, 25];
+        let opts = KernelOptions { threads: 1, ..KernelOptions::default() };
+
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let single = cce_forward(&p, &opts);
+
+        for shards in [1usize, 2, 3] {
+            let fleet = Fleet::local(shards, v, d).unwrap();
+            fleet.load(&ParamBuf::from_f32_vec(c.clone(), crate::exec::StoreDtype::F32), &opts)
+                .unwrap();
+            let step = fleet.step(&e, &x).unwrap();
+            assert_eq!(step.count, single.count);
+            assert!(
+                (step.loss - single.loss).abs() < 1e-5,
+                "{shards} shards: loss {} vs {}",
+                step.loss,
+                single.loss
+            );
+            for i in 0..n {
+                assert!(
+                    (step.lse[i] - single.lse[i]).abs() < 1e-5,
+                    "{shards} shards row {i}: lse {} vs {}",
+                    step.lse[i],
+                    single.lse[i]
+                );
+                if x[i] >= 0 {
+                    assert_eq!(
+                        step.target_logit[i].to_bits(),
+                        single.target_logit[i].to_bits(),
+                        "target logits come off the owner shard bit-exactly"
+                    );
+                }
+            }
+            fleet.shutdown();
+        }
+    }
+}

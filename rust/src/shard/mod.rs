@@ -1,0 +1,205 @@
+//! Vocabulary-sharded CCE: multi-process tensor parallelism along `V`.
+//!
+//! The paper's online log-sum-exp is associative: partial `(m, s)` pairs
+//! computed over disjoint vocabulary column ranges merge exactly, so the
+//! classifier `C (V×D)` can be split into contiguous column shards owned
+//! by worker processes while the coordinator keeps the embedding table,
+//! the data pipeline, and the event loop.  One step exchanges only the
+//! tiny per-row scalar state — never logits, never `N×V` anything:
+//!
+//! ```text
+//! coordinator                         worker k (owns C[j0_k .. j1_k))
+//!   hidden states E (N×D), labels ──► step:   local forward sweep
+//!   merge per-row partial LSEs    ◄── per-row lse_k, target logit
+//!   global LSE + lr + count      ──►  merge:  shard-local backward
+//!   Σ partial dE, update E        ◄── partial dE, |dC|² (dC applied
+//!                                     in place by the worker's SGD)
+//! ```
+//!
+//! The merge is the log-sum-exp of the partial log-sum-exps: with
+//! `lse_k = m_k + ln s_k` finished per shard, the global value is
+//! `lse = m + ln Σ_k exp(lse_k − m)`, `m = max_k lse_k` — exact in real
+//! arithmetic because `exp` of a disjoint union sums, and computed here
+//! in f64 in ascending shard order so the result is independent of reply
+//! arrival order (see [`merge_lse`]).  The §4.3 gradient filter runs on
+//! each worker against the broadcast *global* LSE, so its sub-`eps`
+//! skip bound (every dropped softmax entry is a true global probability
+//! `< 2^-12`) is the same bound as the single-process kernel.
+//!
+//! Inference merges shard-local candidates at the coordinator: top-k
+//! heaps carry **raw logits** and globally-offset token ids (the kernel's
+//! exact comparison keys — see [`crate::exec::infer`]'s shard entries),
+//! and Gumbel-max winners carry perturbed scores keyed on global column
+//! indices, so merged greedy/top-k/sampled tokens are bitwise identical
+//! to the single-process kernels for any shard count.
+//!
+//! Layout:
+//!
+//! * [`protocol`]  — the versioned line-JSON wire messages
+//!   ([`SHARD_OPS`]), documented field-by-field in `docs/sharding.md`.
+//! * [`transport`] — the [`Transport`] trait with an in-process
+//!   [`LocalTransport`] (unit tests) and a [`TcpTransport`] (real process
+//!   boundaries; multi-node is a config change).
+//! * [`worker`]    — the stateless kernel server behind `cce
+//!   shard-worker`: holds one classifier slice, answers collectives.
+//! * [`fleet`]     — the coordinator side: spawns/connects workers, runs
+//!   collectives, owns the merge math and the failure semantics (a dead
+//!   worker is a structured error, never a hang — transports carry read
+//!   timeouts and EOF detection).
+//!
+//! Memory invariant: the coordinator never materializes per-shard logits
+//! or gradients of the classifier; its transient state per collective is
+//! `O(N)` scalars per shard plus one `N×D` partial-`dE` accumulator.
+//! Workers hold their `(V/S)×D` classifier slice plus the standard
+//! blocked kernel workspace.
+
+pub mod fleet;
+pub mod protocol;
+pub mod transport;
+pub mod worker;
+
+pub use fleet::{merge_lse, Fleet, ShardMerge, ShardStep};
+pub use protocol::{SHARD_OPS, SHARD_PROTO_VERSION};
+pub use transport::{LocalTransport, TcpTransport, Transport};
+pub use worker::{run_worker, ShardWorker};
+
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::obs;
+
+/// One shard's slice of the global vocabulary: contiguous columns
+/// `[j0, j1)` of `C`, shard `index` of `count`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+    pub j0: usize,
+    pub j1: usize,
+}
+
+impl ShardSpec {
+    /// Columns this shard owns.
+    pub fn width(&self) -> usize {
+        self.j1 - self.j0
+    }
+
+    /// Does this shard own global token `t`?
+    pub fn owns(&self, t: i32) -> bool {
+        t >= 0 && (t as usize) >= self.j0 && (t as usize) < self.j1
+    }
+}
+
+/// Split `v` vocabulary columns into `count` contiguous shards, widths
+/// differing by at most one (the remainder goes to the leading shards).
+pub fn split_vocab(v: usize, count: usize) -> Result<Vec<ShardSpec>> {
+    if count == 0 {
+        bail!("shard count must be >= 1");
+    }
+    if count > v {
+        bail!("cannot split vocab {v} into {count} shards (more shards than columns)");
+    }
+    let base = v / count;
+    let rem = v % count;
+    Ok((0..count)
+        .map(|k| {
+            let j0 = k * base + k.min(rem);
+            let j1 = j0 + base + usize::from(k < rem);
+            ShardSpec { index: k, count, j0, j1 }
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------- telemetry
+
+/// Handles into the process-global registry for the `shard_*` families
+/// (pre-registered by [`obs::global`], same pattern as the exec kernels).
+struct ShardObs {
+    workers: Arc<obs::Gauge>,
+    exchange_bytes: Arc<obs::Histogram>,
+    exchange_us: Arc<obs::Histogram>,
+    step_us: Arc<obs::Histogram>,
+    merges_total: Arc<obs::Counter>,
+    worker_errors: Arc<obs::Counter>,
+}
+
+fn shard_obs() -> &'static ShardObs {
+    static OBS: OnceLock<ShardObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        ShardObs {
+            workers: r.gauge("shard_workers", ""),
+            exchange_bytes: r.histogram("shard_exchange_bytes", ""),
+            exchange_us: r.histogram("shard_exchange_us", ""),
+            step_us: r.histogram("shard_step_us", ""),
+            merges_total: r.counter("shard_merges_total", ""),
+            worker_errors: r.counter("shard_worker_errors_total", ""),
+        }
+    })
+}
+
+pub(crate) fn record_workers(n: usize) {
+    if !obs::enabled() {
+        return;
+    }
+    shard_obs().workers.set(n as i64);
+}
+
+pub(crate) fn record_exchange(bytes: usize, us: Option<u64>, is_step: bool) {
+    if !obs::enabled() {
+        return;
+    }
+    let o = shard_obs();
+    o.exchange_bytes.record(bytes as u64);
+    if let Some(us) = us {
+        o.exchange_us.record(us);
+        if is_step {
+            o.step_us.record(us);
+        }
+    }
+    o.merges_total.inc();
+}
+
+pub(crate) fn record_worker_error() {
+    if !obs::enabled() {
+        return;
+    }
+    shard_obs().worker_errors.inc();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_vocab_covers_contiguously() {
+        for (v, count) in [(8, 1), (8, 2), (97, 4), (5, 5), (513, 3)] {
+            let specs = split_vocab(v, count).unwrap();
+            assert_eq!(specs.len(), count);
+            assert_eq!(specs[0].j0, 0);
+            assert_eq!(specs[count - 1].j1, v);
+            for w in specs.windows(2) {
+                assert_eq!(w[0].j1, w[1].j0, "shards must tile contiguously");
+            }
+            let widths: Vec<usize> = specs.iter().map(|s| s.width()).collect();
+            let (lo, hi) = (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+            assert!(hi - lo <= 1, "widths must differ by at most one: {widths:?}");
+            assert!(widths.iter().all(|&w| w > 0));
+        }
+        assert!(split_vocab(4, 0).is_err());
+        assert!(split_vocab(4, 5).is_err());
+    }
+
+    #[test]
+    fn shard_spec_ownership() {
+        let specs = split_vocab(10, 3).unwrap();
+        // 10 into 3: widths 4, 3, 3.
+        assert_eq!(specs[0], ShardSpec { index: 0, count: 3, j0: 0, j1: 4 });
+        for t in 0..10i32 {
+            let owners = specs.iter().filter(|s| s.owns(t)).count();
+            assert_eq!(owners, 1, "token {t} must have exactly one owner");
+        }
+        assert!(!specs[0].owns(-1), "ignored labels have no owner");
+    }
+}

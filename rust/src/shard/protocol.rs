@@ -1,0 +1,274 @@
+//! The shard wire protocol: one line-JSON request, one line-JSON reply,
+//! strictly in order, over whatever [`super::Transport`] carries them.
+//!
+//! Every message is documented field-by-field in `docs/sharding.md`
+//! (versioned; `tools/check_docs.sh` pins the op names below and the
+//! protocol version to that document).  Design rules:
+//!
+//! * **Floats cross the wire exactly.**  `util::json` renders `f64` with
+//!   Rust's shortest-roundtrip formatting, and every f32 is exact as f64,
+//!   so an f32 survives f32 → f64 → text → f64 → f32 bit-for-bit.  That
+//!   is what lets the coordinator's merges reproduce single-process
+//!   results: hidden states, classifier slices, logits, and LSEs are the
+//!   *same bits* on both sides of the socket.
+//! * **Seeds are bit-cast.**  JSON integers are `i64`; `u64` sampling
+//!   seeds ride as their two's-complement `i64` rendering
+//!   ([`seed_to_wire`] / [`seed_from_wire`]).
+//! * **Errors are replies, not disconnects.**  A worker that cannot honor
+//!   a request answers `{"ok":false,"error":...}` and keeps serving; only
+//!   crashes and kills sever the connection (which the coordinator's
+//!   transport turns into a structured error — see `docs/sharding.md`
+//!   failure semantics).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::exec::{KernelOptions, StoreDtype};
+use crate::util::json::Json;
+
+use super::ShardSpec;
+
+/// Protocol version spoken by this build.  Bumped on any incompatible
+/// message change; `hello` fails closed on mismatch.
+pub const SHARD_PROTO_VERSION: i64 = 1;
+
+/// Every operation in the protocol, coordinator → worker.  Pinned to
+/// `docs/sharding.md` by `tools/check_docs.sh`.
+pub const SHARD_OPS: &[&str] = &[
+    "hello", "load", "step", "merge", "topk", "sample", "fetch", "abort", "shutdown",
+];
+
+// ------------------------------------------------------------ wire helpers
+
+pub(crate) fn floats_json(v: &[f32]) -> Json {
+    Json::arr(v.iter().map(|&x| Json::Float(x as f64)))
+}
+
+pub(crate) fn ints_json(v: &[i32]) -> Json {
+    Json::arr(v.iter().map(|&x| Json::Int(x as i64)))
+}
+
+pub(crate) fn floats_field(j: &Json, key: &str, want: usize) -> Result<Vec<f32>> {
+    let arr = j.req(key)?.as_array().ok_or_else(|| anyhow!("{key} must be an array"))?;
+    if arr.len() != want {
+        bail!("{key} has {} elements, want {want}", arr.len());
+    }
+    arr.iter()
+        .map(|v| v.as_f64().map(|f| f as f32).ok_or_else(|| anyhow!("{key} must hold numbers")))
+        .collect()
+}
+
+pub(crate) fn ints_field(j: &Json, key: &str, want: usize) -> Result<Vec<i32>> {
+    let arr = j.req(key)?.as_array().ok_or_else(|| anyhow!("{key} must be an array"))?;
+    if arr.len() != want {
+        bail!("{key} has {} elements, want {want}", arr.len());
+    }
+    arr.iter()
+        .map(|v| v.as_i64().map(|i| i as i32).ok_or_else(|| anyhow!("{key} must hold integers")))
+        .collect()
+}
+
+pub(crate) fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    let i = j.req(key)?.as_i64().ok_or_else(|| anyhow!("{key} must be an integer"))?;
+    if i < 0 {
+        bail!("{key} must be >= 0, got {i}");
+    }
+    Ok(i as usize)
+}
+
+/// `u64` seed → wire `i64` (bit-cast; documented in docs/sharding.md).
+pub fn seed_to_wire(seed: u64) -> i64 {
+    seed as i64
+}
+
+/// Wire `i64` → `u64` seed (bit-cast).
+pub fn seed_from_wire(wire: i64) -> u64 {
+    wire as u64
+}
+
+// --------------------------------------------------------------- requests
+
+pub fn req_hello() -> Json {
+    Json::obj(vec![("op", Json::str("hello")), ("proto", Json::Int(SHARD_PROTO_VERSION))])
+}
+
+/// Ship one shard's classifier slice (widened to f32 — exact for both
+/// storage dtypes) plus the kernel configuration.
+pub fn req_load(
+    spec: &ShardSpec,
+    v: usize,
+    d: usize,
+    dtype: StoreDtype,
+    opts: &KernelOptions,
+    c_rows: &[f32],
+) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("load")),
+        ("proto", Json::Int(SHARD_PROTO_VERSION)),
+        ("index", Json::Int(spec.index as i64)),
+        ("count", Json::Int(spec.count as i64)),
+        ("j0", Json::Int(spec.j0 as i64)),
+        ("j1", Json::Int(spec.j1 as i64)),
+        ("v", Json::Int(v as i64)),
+        ("d", Json::Int(d as i64)),
+        ("dtype", Json::str(dtype.name())),
+        (
+            "opts",
+            Json::obj(vec![
+                ("n_block", Json::Int(opts.n_block as i64)),
+                ("v_block", Json::Int(opts.v_block as i64)),
+                ("threads", Json::Int(opts.threads as i64)),
+                ("filter", Json::Bool(opts.filter)),
+                ("sort", Json::Bool(opts.sort)),
+                ("kahan", Json::Bool(opts.kahan)),
+                ("full_c", Json::Bool(opts.full_c)),
+                ("full_e", Json::Bool(opts.full_e)),
+            ]),
+        ),
+        ("c", floats_json(c_rows)),
+    ])
+}
+
+/// Forward collective: hidden states + **global** labels (the worker maps
+/// them to its local range; `-1` stays ignored everywhere).
+pub fn req_step(e: &[f32], x: &[i32]) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("step")),
+        ("n", Json::Int(x.len() as i64)),
+        ("e", floats_json(e)),
+        ("x", ints_json(x)),
+    ])
+}
+
+/// Backward collective: broadcast the merged global LSE, the global
+/// active-token count, and (when training) the SGD learning rate the
+/// worker applies to its own classifier slice.
+pub fn req_merge(lse: &[f32], lr: Option<f32>, count: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("merge")),
+        ("lse", floats_json(lse)),
+        ("lr", lr.map(|v| Json::Float(v as f64)).unwrap_or(Json::Null)),
+        ("count", Json::Int(count as i64)),
+    ])
+}
+
+pub fn req_topk(e: &[f32], rows: usize, k: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("topk")),
+        ("rows", Json::Int(rows as i64)),
+        ("k", Json::Int(k as i64)),
+        ("e", floats_json(e)),
+    ])
+}
+
+pub fn req_sample(e: &[f32], rows: usize, temperature: f32, seeds: &[u64]) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("sample")),
+        ("rows", Json::Int(rows as i64)),
+        ("temperature", Json::Float(temperature as f64)),
+        ("seeds", Json::arr(seeds.iter().map(|&s| Json::Int(seed_to_wire(s))))),
+        ("e", floats_json(e)),
+    ])
+}
+
+pub fn req_fetch() -> Json {
+    Json::obj(vec![("op", Json::str("fetch"))])
+}
+
+pub fn req_abort() -> Json {
+    Json::obj(vec![("op", Json::str("abort"))])
+}
+
+pub fn req_shutdown() -> Json {
+    Json::obj(vec![("op", Json::str("shutdown"))])
+}
+
+// ---------------------------------------------------------------- replies
+
+/// Successful reply skeleton.
+pub fn resp_ok(mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true))];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+/// Error reply: the worker stays up, the coordinator surfaces the text.
+pub fn resp_err(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+}
+
+/// Check a reply's `ok` field, surfacing the worker's error text.
+pub fn check_ok(resp: &Json) -> Result<()> {
+    match resp.get("ok").and_then(|v| v.as_bool()) {
+        Some(true) => Ok(()),
+        Some(false) => {
+            let msg = resp.get("error").and_then(|v| v.as_str()).unwrap_or("unspecified error");
+            bail!("worker error: {msg}")
+        }
+        None => bail!("malformed worker reply (no ok field): {}", resp.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floats_survive_the_wire_bit_exactly() {
+        // Shortest-roundtrip f64 rendering makes f32 → text → f32 an
+        // identity — the property the whole shard layer leans on.
+        let vals: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            std::f32::consts::PI,
+            1.1754944e-38,
+            3.4028235e38,
+            -2.7182817,
+            1e-45,
+        ];
+        let line = floats_json(&vals).to_string();
+        let back = floats_field(&Json::obj(vec![("v", Json::parse(&line).unwrap())]), "v", vals.len())
+            .unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} changed on the wire");
+        }
+    }
+
+    #[test]
+    fn seeds_bitcast_roundtrip() {
+        for s in [0u64, 1, u64::MAX, 0x9E3779B97F4A7C15, i64::MAX as u64 + 7] {
+            assert_eq!(seed_from_wire(seed_to_wire(s)), s);
+        }
+    }
+
+    #[test]
+    fn ops_cover_the_request_builders() {
+        let reqs = vec![
+            req_hello(),
+            req_step(&[0.0], &[0]),
+            req_merge(&[0.0], Some(0.1), 1),
+            req_topk(&[0.0], 1, 1),
+            req_sample(&[0.0], 1, 1.0, &[1]),
+            req_fetch(),
+            req_abort(),
+            req_shutdown(),
+        ];
+        for req in &reqs {
+            let op = req.get("op").and_then(|v| v.as_str()).unwrap();
+            assert!(SHARD_OPS.contains(&op), "op {op} missing from SHARD_OPS");
+        }
+        // load needs a spec; cover it separately.
+        let spec = ShardSpec { index: 0, count: 1, j0: 0, j1: 2 };
+        let load = req_load(&spec, 2, 1, StoreDtype::F32, &KernelOptions::default(), &[0.0, 1.0]);
+        assert_eq!(load.get("op").and_then(|v| v.as_str()), Some("load"));
+        assert_eq!(SHARD_OPS.len(), 9);
+    }
+
+    #[test]
+    fn check_ok_surfaces_worker_errors() {
+        assert!(check_ok(&resp_ok(vec![])).is_ok());
+        let err = check_ok(&resp_err("no shard loaded")).unwrap_err();
+        assert!(err.to_string().contains("no shard loaded"), "{err}");
+        assert!(check_ok(&Json::obj(vec![("x", Json::Int(1))])).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Transports carry the shard protocol's request/reply lines.
+//!
+//! The [`Transport`] trait is the seam that makes multi-node a config
+//! change: the fleet's collectives are written against `send`/`recv`
+//! pairs and never mention sockets.  Two implementations ship:
+//!
+//! * [`LocalTransport`] — an in-process worker behind the same line-JSON
+//!   text encoding the sockets carry (requests and replies really are
+//!   serialized and re-parsed), for unit tests and single-machine debug.
+//! * [`TcpTransport`]  — one TCP connection per worker with read/write
+//!   timeouts, so a dead or wedged worker surfaces as a structured error
+//!   within [`IO_TIMEOUT`], never a hang.
+//!
+//! Byte counts returned by `send`/`recv` feed the `shard_exchange_bytes`
+//! histogram — the number the paper's "tiny scalar exchange" claim is
+//! audited by (`docs/sharding.md`).
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::faults;
+use crate::util::json::Json;
+
+use super::worker::ShardWorker;
+
+/// Read/write deadline on worker links: a worker that neither answers
+/// nor disconnects inside this window is treated as dead.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One ordered request/reply channel to a shard worker.
+pub trait Transport: Send {
+    /// Ship one request line.  Returns the wire bytes written.
+    fn send(&mut self, req: &Json) -> Result<usize>;
+
+    /// Await the matching reply line.  Returns `(reply, wire bytes)`.
+    fn recv(&mut self) -> Result<(Json, usize)>;
+
+    /// Peer description for error messages (`local#2`, `127.0.0.1:4831`).
+    fn describe(&self) -> String;
+}
+
+// ------------------------------------------------------------------- local
+
+/// An in-process worker reached through the real text encoding: `send`
+/// serializes the request to a line and parses it back before handing it
+/// to the worker, so every byte of the wire format is exercised without
+/// a socket.
+pub struct LocalTransport {
+    worker: ShardWorker,
+    label: String,
+    pending: VecDeque<String>,
+    requests_seen: u64,
+}
+
+impl LocalTransport {
+    pub fn new(index: usize) -> LocalTransport {
+        LocalTransport {
+            worker: ShardWorker::new(None),
+            label: format!("local#{index}"),
+            pending: VecDeque::new(),
+            requests_seen: 0,
+        }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn send(&mut self, req: &Json) -> Result<usize> {
+        // Same chaos site the TCP worker honors, same K-th-request
+        // semantics (`shard.worker_crash=K`): a "crashed" local worker
+        // drops the request on the floor and severs the link.
+        self.requests_seen += 1;
+        if faults::value("shard.worker_crash").is_some_and(|k| self.requests_seen >= k as u64) {
+            bail!("worker {} closed the connection mid-request (crash)", self.label);
+        }
+        let line = req.to_string();
+        let parsed = Json::parse(&line)
+            .with_context(|| format!("worker {}: request did not survive encoding", self.label))?;
+        let reply = self.worker.handle(&parsed).to_string();
+        let bytes = line.len() + 1;
+        self.pending.push_back(reply);
+        Ok(bytes)
+    }
+
+    fn recv(&mut self) -> Result<(Json, usize)> {
+        let line = self
+            .pending
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("worker {}: recv with no request in flight", self.label))?;
+        let bytes = line.len() + 1;
+        let reply = Json::parse(&line)
+            .with_context(|| format!("worker {}: reply did not survive encoding", self.label))?;
+        Ok((reply, bytes))
+    }
+
+    fn describe(&self) -> String {
+        self.label.clone()
+    }
+}
+
+// --------------------------------------------------------------------- tcp
+
+/// One TCP connection to a `cce shard-worker` process.
+pub struct TcpTransport {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    peer: String,
+}
+
+impl TcpTransport {
+    /// Connect to `host:port` and arm the I/O deadlines.
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to shard worker at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(IO_TIMEOUT))
+            .with_context(|| format!("arming read timeout on {addr}"))?;
+        stream
+            .set_write_timeout(Some(IO_TIMEOUT))
+            .with_context(|| format!("arming write timeout on {addr}"))?;
+        let reader = BufReader::new(stream.try_clone().context("cloning worker stream")?);
+        Ok(TcpTransport { reader, writer: stream, peer: addr.to_string() })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, req: &Json) -> Result<usize> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.flush())
+            .with_context(|| format!("worker {} is unreachable (send failed)", self.peer))?;
+        Ok(line.len())
+    }
+
+    fn recv(&mut self) -> Result<(Json, usize)> {
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .with_context(|| format!("worker {} did not answer within {IO_TIMEOUT:?}", self.peer))?;
+        if n == 0 {
+            bail!("worker {} closed the connection mid-request (crash?)", self.peer);
+        }
+        let reply = Json::parse(line.trim())
+            .with_context(|| format!("worker {} sent a malformed reply", self.peer))?;
+        Ok((reply, n))
+    }
+
+    fn describe(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::protocol::{check_ok, req_hello, req_shutdown};
+
+    #[test]
+    fn local_transport_roundtrips_through_text() {
+        let mut t = LocalTransport::new(0);
+        assert!(t.recv().is_err(), "recv with nothing in flight must fail");
+        let sent = t.send(&req_hello()).unwrap();
+        assert!(sent > 10);
+        let (reply, got) = t.recv().unwrap();
+        assert!(got > 10);
+        check_ok(&reply).unwrap();
+        assert_eq!(reply.get("proto").and_then(|v| v.as_i64()), Some(1));
+        // Ordered channel: a second recv has nothing to return.
+        assert!(t.recv().is_err());
+        t.send(&req_shutdown()).unwrap();
+        check_ok(&t.recv().unwrap().0).unwrap();
+    }
+}

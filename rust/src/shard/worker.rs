@@ -1,0 +1,468 @@
+//! The shard worker: one classifier slice, one request at a time.
+//!
+//! A worker is a *stateless kernel server* — it holds no checkpoint, no
+//! tokenizer, no data pipeline.  The coordinator ships it a contiguous
+//! slice of classifier columns (`load`), then drives collectives against
+//! it: `step` (shard-local forward), `merge` (shard-local backward
+//! against the broadcast global LSE, plus the in-place SGD update of its
+//! own columns), `topk` / `sample` (shard-local inference candidates),
+//! `fetch` (return the columns for checkpointing), `abort` (drop cached
+//! step state), `shutdown`.
+//!
+//! [`ShardWorker::handle`] is the whole behavior; [`run_worker`] wraps it
+//! in the TCP accept loop behind `cce shard-worker`, and
+//! [`super::LocalTransport`] calls it in-process.  Both paths serialize
+//! through the same line-JSON text, so unit tests exercise the exact
+//! wire encoding the sockets carry.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::exec::{
+    cce_backward_sharded, cce_forward, sample_shard, simd, topk_shard, FilterStats, InferProblem,
+    KernelOptions, ParamBuf, Problem, Store, StoreDtype,
+};
+use crate::util::faults;
+use crate::util::json::Json;
+
+use super::protocol::{
+    self, floats_field, floats_json, ints_field, ints_json, resp_ok, seed_from_wire, usize_field,
+    SHARD_OPS, SHARD_PROTO_VERSION,
+};
+use super::ShardSpec;
+
+/// Cached inputs of the last `step`, consumed by the following `merge`.
+struct StepState {
+    e: Vec<f32>,
+    x_local: Vec<i32>,
+    x_global: Vec<i32>,
+}
+
+/// State installed by `load`.
+struct Loaded {
+    spec: ShardSpec,
+    v: usize,
+    d: usize,
+    opts: KernelOptions,
+    cls: ParamBuf,
+    step: Option<StepState>,
+}
+
+/// One shard worker.  Drive it with [`ShardWorker::handle`]; protocol
+/// errors become `{"ok":false,...}` replies, never panics or hangs.
+pub struct ShardWorker {
+    /// `--threads` override from the worker's own CLI: a multi-node
+    /// deployment sizes each worker for its own machine rather than
+    /// inheriting the coordinator's thread count.
+    threads_override: Option<usize>,
+    state: Option<Loaded>,
+}
+
+impl ShardWorker {
+    pub fn new(threads_override: Option<usize>) -> ShardWorker {
+        ShardWorker { threads_override, state: None }
+    }
+
+    /// Answer one request.  Infallible at the connection level: every
+    /// failure is an error *reply*.
+    pub fn handle(&mut self, req: &Json) -> Json {
+        match self.dispatch(req) {
+            Ok(resp) => resp,
+            Err(e) => protocol::resp_err(&format!("{e}")),
+        }
+    }
+
+    fn dispatch(&mut self, req: &Json) -> Result<Json> {
+        let op = req
+            .get("op")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("request has no op field"))?;
+        match op {
+            "hello" => {
+                let proto = req.get("proto").and_then(|v| v.as_i64()).unwrap_or(0);
+                if proto != SHARD_PROTO_VERSION {
+                    bail!(
+                        "shard protocol mismatch: coordinator speaks v{proto}, worker speaks v{SHARD_PROTO_VERSION}"
+                    );
+                }
+                Ok(resp_ok(vec![("proto", Json::Int(SHARD_PROTO_VERSION))]))
+            }
+            "load" => self.op_load(req),
+            "step" => self.op_step(req),
+            "merge" => self.op_merge(req),
+            "topk" => self.op_topk(req),
+            "sample" => self.op_sample(req),
+            "fetch" => self.op_fetch(),
+            "abort" => {
+                if let Some(l) = &mut self.state {
+                    l.step = None;
+                }
+                Ok(resp_ok(vec![]))
+            }
+            "shutdown" => Ok(resp_ok(vec![])),
+            other => bail!("unknown op {other:?} (known ops: {})", SHARD_OPS.join(", ")),
+        }
+    }
+
+    fn loaded(&mut self) -> Result<&mut Loaded> {
+        self.state.as_mut().ok_or_else(|| anyhow!("no shard loaded (send load first)"))
+    }
+
+    fn op_load(&mut self, req: &Json) -> Result<Json> {
+        let spec = ShardSpec {
+            index: usize_field(req, "index")?,
+            count: usize_field(req, "count")?,
+            j0: usize_field(req, "j0")?,
+            j1: usize_field(req, "j1")?,
+        };
+        let v = usize_field(req, "v")?;
+        let d = usize_field(req, "d")?;
+        if spec.index >= spec.count || spec.j0 >= spec.j1 || spec.j1 > v {
+            bail!(
+                "bad shard spec: index {} of {}, columns [{}, {}) of vocab {v}",
+                spec.index,
+                spec.count,
+                spec.j0,
+                spec.j1
+            );
+        }
+        let dtype =
+            StoreDtype::parse(req.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype must be a string"))?)?;
+        let o = req.req("opts")?;
+        let mut opts = KernelOptions {
+            n_block: usize_field(o, "n_block")?,
+            v_block: usize_field(o, "v_block")?,
+            threads: usize_field(o, "threads")?,
+            filter: o.get("filter").and_then(|v| v.as_bool()).unwrap_or(true),
+            sort: o.get("sort").and_then(|v| v.as_bool()).unwrap_or(true),
+            kahan: o.get("kahan").and_then(|v| v.as_bool()).unwrap_or(false),
+            full_c: o.get("full_c").and_then(|v| v.as_bool()).unwrap_or(false),
+            full_e: o.get("full_e").and_then(|v| v.as_bool()).unwrap_or(false),
+            dtype,
+        };
+        if let Some(t) = self.threads_override {
+            opts.threads = t;
+        }
+        let c = floats_field(req, "c", spec.width() * d)?;
+        let cls = ParamBuf::from_f32_vec(c, dtype);
+        self.state = Some(Loaded { spec, v, d, opts, cls, step: None });
+        Ok(resp_ok(vec![("rows", Json::Int((spec.j1 - spec.j0) as i64))]))
+    }
+
+    fn op_step(&mut self, req: &Json) -> Result<Json> {
+        let l = self.loaded()?;
+        let n = usize_field(req, "n")?;
+        if n == 0 {
+            bail!("step with n=0");
+        }
+        let e = floats_field(req, "e", n * l.d)?;
+        let x_global = ints_field(req, "x", n)?;
+        if let Some(&bad) = x_global.iter().find(|&&t| t < -1 || t >= l.v as i32) {
+            bail!("global label {bad} out of range for vocab {}", l.v);
+        }
+        // Remap to the local column range: remote labels become ignored
+        // locally (their softmax mass still accumulates — the backward
+        // consults the *global* labels for row activity).
+        let x_local: Vec<i32> = x_global
+            .iter()
+            .map(|&t| if l.spec.owns(t) { t - l.spec.j0 as i32 } else { -1 })
+            .collect();
+        let (lse, tgt) = match &l.cls {
+            ParamBuf::F32(c) => forward_t::<f32>(c, &e, &x_local, l.d, l.spec.width(), &l.opts)?,
+            ParamBuf::Bf16(c) => forward_t::<crate::exec::BF16>(c, &e, &x_local, l.d, l.spec.width(), &l.opts)?,
+        };
+        l.step = Some(StepState { e, x_local, x_global });
+        Ok(resp_ok(vec![("lse", floats_json(&lse)), ("tgt", floats_json(&tgt))]))
+    }
+
+    fn op_merge(&mut self, req: &Json) -> Result<Json> {
+        let l = self.loaded()?;
+        let st = l
+            .step
+            .take()
+            .ok_or_else(|| anyhow!("merge without a preceding step (no cached state)"))?;
+        let n = st.x_local.len();
+        let lse = floats_field(req, "lse", n)?;
+        let count = usize_field(req, "count")?;
+        let lr = match req.get("lr") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| anyhow!("lr must be a number"))? as f32),
+        };
+        let (d, width, opts) = (l.d, l.spec.width(), l.opts);
+        let (de, dc_sqnorm, stats) = match &mut l.cls {
+            ParamBuf::F32(c) => merge_t::<f32>(c, &st, &lse, lr, count, d, width, &opts)?,
+            ParamBuf::Bf16(c) => merge_t::<crate::exec::BF16>(c, &st, &lse, lr, count, d, width, &opts)?,
+        };
+        Ok(resp_ok(vec![
+            ("de", floats_json(&de)),
+            ("dc_sqnorm", Json::Float(dc_sqnorm)),
+            ("blocks_total", Json::Int(stats.blocks_total as i64)),
+            ("blocks_skipped", Json::Int(stats.blocks_skipped as i64)),
+            ("sig_entries", Json::Int(stats.sig_entries as i64)),
+        ]))
+    }
+
+    fn op_topk(&mut self, req: &Json) -> Result<Json> {
+        let l = self.loaded()?;
+        let rows = usize_field(req, "rows")?;
+        let k = usize_field(req, "k")?;
+        if k == 0 {
+            bail!("topk with k=0");
+        }
+        let e = floats_field(req, "e", rows * l.d)?;
+        // A narrow shard answers with every column it has; the merge
+        // still sees >= k candidates over the union whenever k <= V.
+        let k_local = k.min(l.spec.width());
+        let out = match &l.cls {
+            ParamBuf::F32(c) => {
+                let p = InferProblem::new(&e, c, rows, l.d, l.spec.width())?;
+                topk_shard(&p, &l.opts, k_local, l.spec.j0)?
+            }
+            ParamBuf::Bf16(c) => {
+                let p = InferProblem::new(&e, c, rows, l.d, l.spec.width())?;
+                topk_shard(&p, &l.opts, k_local, l.spec.j0)?
+            }
+        };
+        let rows_json = Json::arr(out.rows.iter().map(|r| {
+            Json::obj(vec![
+                ("t", ints_json(&r.tokens)),
+                ("z", floats_json(&r.logits)),
+                ("lse", Json::Float(r.lse as f64)),
+            ])
+        }));
+        Ok(resp_ok(vec![("rows", rows_json)]))
+    }
+
+    fn op_sample(&mut self, req: &Json) -> Result<Json> {
+        let l = self.loaded()?;
+        let rows = usize_field(req, "rows")?;
+        let temperature = req
+            .req("temperature")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("temperature must be a number"))? as f32;
+        let e = floats_field(req, "e", rows * l.d)?;
+        let seeds_arr =
+            req.req("seeds")?.as_array().ok_or_else(|| anyhow!("seeds must be an array"))?;
+        if seeds_arr.len() != rows {
+            bail!("seeds has {} elements, want {rows}", seeds_arr.len());
+        }
+        let seeds: Vec<u64> = seeds_arr
+            .iter()
+            .map(|v| {
+                v.as_i64().map(seed_from_wire).ok_or_else(|| anyhow!("seeds must hold integers"))
+            })
+            .collect::<Result<_>>()?;
+        let out = match &l.cls {
+            ParamBuf::F32(c) => {
+                let p = InferProblem::new(&e, c, rows, l.d, l.spec.width())?;
+                sample_shard(&p, &l.opts, temperature, &seeds, l.spec.j0)?
+            }
+            ParamBuf::Bf16(c) => {
+                let p = InferProblem::new(&e, c, rows, l.d, l.spec.width())?;
+                sample_shard(&p, &l.opts, temperature, &seeds, l.spec.j0)?
+            }
+        };
+        Ok(resp_ok(vec![
+            ("tokens", ints_json(&out.tokens)),
+            ("scores", floats_json(&out.scores)),
+            ("logits", floats_json(&out.logits)),
+            ("lse", floats_json(&out.lse)),
+        ]))
+    }
+
+    fn op_fetch(&mut self) -> Result<Json> {
+        let l = self.loaded()?;
+        Ok(resp_ok(vec![("c", floats_json(&l.cls.to_f32_vec()))]))
+    }
+}
+
+fn forward_t<S: Store>(
+    cls: &[S],
+    e: &[f32],
+    x_local: &[i32],
+    d: usize,
+    width: usize,
+    opts: &KernelOptions,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let n = x_local.len();
+    let e_s = S::narrow_cow(e);
+    let p = Problem::new(e_s.as_ref(), cls, x_local, n, d, width)?;
+    let fwd = cce_forward(&p, opts);
+    Ok((fwd.lse, fwd.target_logit))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn merge_t<S: Store>(
+    cls: &mut [S],
+    st: &StepState,
+    lse: &[f32],
+    lr: Option<f32>,
+    count: usize,
+    d: usize,
+    width: usize,
+    opts: &KernelOptions,
+) -> Result<(Vec<f32>, f64, FilterStats)> {
+    let n = st.x_local.len();
+    let e_s = S::narrow_cow(&st.e);
+    let p = Problem::new(e_s.as_ref(), cls, &st.x_local, n, d, width)?;
+    let bwd = cce_backward_sharded(&p, opts, lse, &st.x_global, count);
+    let de = S::widen_vec(&bwd.d_e);
+    let dc_sqnorm: f64 = bwd
+        .d_c
+        .iter()
+        .map(|&g| {
+            let g = g.to_f32() as f64;
+            g * g
+        })
+        .sum();
+    if let Some(lr) = lr {
+        // The SGD axpy is element-wise, so updating the slice here is
+        // bit-identical to the single-process trainer updating the same
+        // rows of the full table.
+        simd::with_lanes!(lanes => S::lanes_axpy_store_s(lanes, cls, -lr, &bwd.d_c));
+    }
+    Ok((de, dc_sqnorm, bwd.stats))
+}
+
+/// The TCP accept loop behind `cce shard-worker`: announce the bound
+/// address, then answer one line-JSON request per line until `shutdown`.
+/// A dropped connection returns the worker to `accept` (the classifier
+/// slice survives, so a coordinator may reconnect); `shutdown` replies,
+/// prints the clean-exit marker, and returns.
+pub fn run_worker(host: &str, port: u16, threads_override: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind((host, port))
+        .with_context(|| format!("shard-worker failed to bind {host}:{port}"))?;
+    let addr = listener.local_addr()?;
+    // The `[serve] ready`-style announce contract: scripts parse the
+    // resolved address from this exact line (docs/sharding.md).
+    println!("[shard] ready proto=line addr={addr}");
+    std::io::stdout().flush().ok();
+    let mut worker = ShardWorker::new(threads_override);
+    let mut requests_seen: u64 = 0;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone().context("clone worker stream")?);
+        let mut out = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let nread = reader.read_line(&mut line).unwrap_or(0);
+            if nread == 0 {
+                break; // coordinator went away; await a new connection
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            // Chaos hook (`CCE_FAULTS=shard.worker_crash=K`): the K-th
+            // request kills the process the way an OOM kill would —
+            // mid-request, no reply, no shutdown handshake.  K=3 lets
+            // hello + load succeed and dies on the step; the coordinator
+            // must surface it as a structured error, never hang
+            // (rust/tests/shard.rs).
+            requests_seen += 1;
+            if faults::value("shard.worker_crash").is_some_and(|k| requests_seen >= k as u64) {
+                eprintln!("[shard] fault shard.worker_crash fired on request {requests_seen}; exiting");
+                std::process::exit(3);
+            }
+            let req = match Json::parse(trimmed) {
+                Ok(j) => j,
+                Err(e) => {
+                    let resp = protocol::resp_err(&format!("bad request line: {e}"));
+                    if write_line(&mut out, &resp).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+            };
+            let is_shutdown = req.get("op").and_then(|v| v.as_str()) == Some("shutdown");
+            let resp = worker.handle(&req);
+            if write_line(&mut out, &resp).is_err() {
+                break;
+            }
+            if is_shutdown {
+                println!("[shard] shut down cleanly");
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn write_line(out: &mut std::net::TcpStream, resp: &Json) -> std::io::Result<()> {
+    let mut text = resp.to_string();
+    text.push('\n');
+    out.write_all(text.as_bytes())?;
+    out.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::KernelOptions;
+    use crate::shard::protocol::{req_fetch, req_hello, req_load, req_step};
+    use crate::shard::split_vocab;
+    use crate::util::rng::Rng;
+
+    fn check(resp: &Json) {
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{}", resp.to_string());
+    }
+
+    #[test]
+    fn worker_lifecycle_load_step_fetch() {
+        let (v, d, n) = (12, 4, 3);
+        let mut rng = Rng::new(41);
+        let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.3).collect();
+        let e: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.3).collect();
+        let x = vec![0i32, 7, -1];
+        let spec = split_vocab(v, 2).unwrap()[1];
+        let mut w = ShardWorker::new(None);
+
+        // Ops before load fail as replies, not panics.
+        let early = w.handle(&req_step(&e, &x));
+        assert_eq!(early.get("ok").and_then(|j| j.as_bool()), Some(false));
+
+        check(&w.handle(&req_hello()));
+        let opts = KernelOptions { threads: 1, ..KernelOptions::default() };
+        let slice = &c[spec.j0 * d..spec.j1 * d];
+        check(&w.handle(&req_load(&spec, v, d, StoreDtype::F32, &opts, slice)));
+        let step = w.handle(&req_step(&e, &x));
+        check(&step);
+        assert_eq!(step.get("lse").and_then(|j| j.as_array()).unwrap().len(), n);
+        // Row 1's label (7) is owned by shard [6, 12): its target logit is
+        // nonzero here; row 0's label (0) is remote: zero.
+        let tgt: Vec<f64> =
+            step.get("tgt").unwrap().as_array().unwrap().iter().map(|j| j.as_f64().unwrap()).collect();
+        assert_eq!(tgt[0], 0.0);
+        assert_ne!(tgt[1], 0.0);
+        // fetch returns the slice bit-exactly.
+        let fetched = w.handle(&req_fetch());
+        check(&fetched);
+        let got: Vec<f32> = fetched
+            .get("c")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|j| j.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(got, slice);
+    }
+
+    #[test]
+    fn worker_rejects_protocol_mismatch_and_unknown_ops() {
+        let mut w = ShardWorker::new(None);
+        let bad = Json::obj(vec![("op", Json::str("hello")), ("proto", Json::Int(99))]);
+        let resp = w.handle(&bad);
+        assert_eq!(resp.get("ok").and_then(|j| j.as_bool()), Some(false));
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("protocol mismatch"));
+        let resp = w.handle(&Json::obj(vec![("op", Json::str("evaluate"))]));
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+    }
+}

@@ -1,0 +1,421 @@
+//! Vocabulary-sharding suite: the shard math against the single-process
+//! kernels, the serve engine over a local fleet, and the TCP transport
+//! across *real* process boundaries (spawned `cce shard-worker`
+//! children), including the crash chaos case.
+//!
+//! Exactness contract under test (docs/sharding.md):
+//!
+//! * merged loss / LSE match `cce_forward` within 1e-5 for any shard
+//!   count, and a 1-shard fleet is *bitwise* identical (the `(m, s)`
+//!   merge of one part is the identity);
+//! * merged top-k / greedy / Gumbel-sampled **tokens** are bitwise
+//!   identical to the single-process kernels for any shard count
+//!   (candidates carry raw comparison keys and merge under the kernels'
+//!   exact total orders);
+//! * merged gradients match `cce_backward` within 1e-5 with the §4.3
+//!   filter off; with it on, the skip mask partitions differently across
+//!   shards, so gradients agree only approximately;
+//! * a worker crash mid-collective surfaces as a pointed structured
+//!   error, never a hang.
+
+use std::io::BufRead;
+use std::time::{Duration, Instant};
+
+use cce::exec::{
+    cce_backward, cce_forward, sample, score, topk, InferProblem, KernelOptions, ParamBuf,
+    Problem, StoreDtype,
+};
+use cce::serve::{Engine, GenParams};
+use cce::shard::Fleet;
+use cce::util::rng::Rng;
+
+fn opts1() -> KernelOptions {
+    KernelOptions { n_block: 16, v_block: 32, threads: 1, ..KernelOptions::default() }
+}
+
+fn problem_data(n: usize, d: usize, v: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let e: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.4).collect();
+    let c: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.4).collect();
+    let x: Vec<i32> =
+        (0..n).map(|i| if i % 5 == 4 { -1 } else { (rng.next_u64() % v as u64) as i32 }).collect();
+    (e, c, x)
+}
+
+fn local_fleet(shards: usize, v: usize, d: usize, c: &[f32], opts: &KernelOptions) -> Fleet {
+    let fleet = Fleet::local(shards, v, d).expect("local fleet");
+    fleet.load(&ParamBuf::from_f32_vec(c.to_vec(), StoreDtype::F32), opts).expect("load");
+    fleet
+}
+
+// ------------------------------------------------------------ forward math
+
+#[test]
+fn sharded_forward_matches_single_process_for_every_shard_count() {
+    let (n, d, v) = (10, 8, 50);
+    let (e, c, x) = problem_data(n, d, v, 11);
+    let opts = opts1();
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let single = cce_forward(&p, &opts);
+
+    // 3 shards over v=50 is the ragged split (17/17/16); 7 is raggeder.
+    for shards in [1usize, 2, 3, 4, 7] {
+        let fleet = local_fleet(shards, v, d, &c, &opts);
+        let st = fleet.step(&e, &x).unwrap();
+        assert_eq!(st.count, single.count);
+        assert!(
+            (st.loss - single.loss).abs() < 1e-5,
+            "{shards} shards: loss {} vs {}",
+            st.loss,
+            single.loss
+        );
+        for i in 0..n {
+            assert!(
+                (st.lse[i] - single.lse[i]).abs() < 1e-5,
+                "{shards} shards row {i}: lse {} vs {}",
+                st.lse[i],
+                single.lse[i]
+            );
+            if shards == 1 {
+                assert_eq!(
+                    st.lse[i].to_bits(),
+                    single.lse[i].to_bits(),
+                    "1-shard merge must be bitwise the identity (row {i})"
+                );
+            }
+            if x[i] >= 0 {
+                assert_eq!(
+                    st.target_logit[i].to_bits(),
+                    single.target_logit[i].to_bits(),
+                    "target logit comes off the owner shard bit-exactly (row {i})"
+                );
+            }
+        }
+        fleet.shutdown();
+    }
+}
+
+// ----------------------------------------------------------- backward math
+
+#[test]
+fn sharded_backward_matches_unsharded_gradients() {
+    let (n, d, v) = (10, 8, 50);
+    let (e, c, x) = problem_data(n, d, v, 23);
+
+    for filter in [false, true] {
+        let opts = KernelOptions { filter, ..opts1() };
+        let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+        let fwd = cce_forward(&p, &opts);
+        let bwd = cce_backward(&p, &opts, &fwd.lse);
+        let dc_sqnorm: f64 = bwd.d_c.iter().map(|&g| (g as f64) * g as f64).sum();
+        // Filter off: the only float difference is the merged LSE's last
+        // rounding.  Filter on: the per-shard skip masks partition
+        // differently, so sub-2^-12 probability mass lands differently.
+        let (de_tol, sq_tol) = if filter { (1e-3, 1e-2) } else { (1e-5, 1e-4) };
+
+        for shards in [2usize, 4] {
+            let fleet = local_fleet(shards, v, d, &c, &opts);
+            let st = fleet.step(&e, &x).unwrap();
+            let mg = fleet.merge_grads(&st.lse, None, st.count).unwrap();
+            assert_eq!(mg.d_e.len(), bwd.d_e.len());
+            let worst = mg
+                .d_e
+                .iter()
+                .zip(&bwd.d_e)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0f64, f64::max);
+            assert!(
+                worst < de_tol,
+                "{shards} shards (filter={filter}): worst dE gap {worst:.3e}"
+            );
+            let rel = (mg.dc_sqnorm - dc_sqnorm).abs() / dc_sqnorm.max(1e-12);
+            assert!(
+                rel < sq_tol,
+                "{shards} shards (filter={filter}): |dC|^2 {} vs {}",
+                mg.dc_sqnorm,
+                dc_sqnorm
+            );
+            assert!(mg.stats.blocks_total > 0, "filter stats must flow back over the wire");
+            fleet.shutdown();
+        }
+    }
+}
+
+#[test]
+fn worker_sgd_update_matches_the_single_process_update() {
+    // With the filter off and 1 shard, the worker-side axpy is the same
+    // element-wise update the trainer applies — fetch must agree tightly
+    // with the reference update; mismatched shards stay within merge
+    // tolerance.
+    let (n, d, v) = (8, 8, 40);
+    let (e, c, x) = problem_data(n, d, v, 31);
+    let opts = KernelOptions { filter: false, ..opts1() };
+    let lr = 0.3f32;
+
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let fwd = cce_forward(&p, &opts);
+    let bwd = cce_backward(&p, &opts, &fwd.lse);
+    let reference: Vec<f32> = c.iter().zip(&bwd.d_c).map(|(w, g)| w - lr * g).collect();
+
+    for shards in [1usize, 3] {
+        let fleet = local_fleet(shards, v, d, &c, &opts);
+        let st = fleet.step(&e, &x).unwrap();
+        fleet.merge_grads(&st.lse, Some(lr), st.count).unwrap();
+        let got = fleet.fetch().unwrap();
+        let worst = got
+            .iter()
+            .zip(&reference)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0f64, f64::max);
+        let tol = if shards == 1 { 0.0 } else { 1e-5 };
+        assert!(worst <= tol, "{shards} shards: worst cls gap {worst:.3e} after SGD");
+        fleet.shutdown();
+    }
+}
+
+// -------------------------------------------------------------- inference
+
+#[test]
+fn merged_topk_tokens_are_bitwise_single_process_and_match_argsort() {
+    let (rows, d, v, k) = (6, 8, 50, 5);
+    let (e, c, _) = problem_data(rows, d, v, 47);
+    let opts = opts1();
+    let ip = InferProblem::new(&e, &c, rows, d, v).unwrap();
+    let single = topk(&ip, &opts, k).unwrap();
+
+    // Reference: materialized logits, full argsort under the kernel's
+    // total order (z desc, token asc).
+    for (i, row) in single.rows.iter().enumerate() {
+        let mut zs: Vec<(f32, i32)> = (0..v)
+            .map(|j| {
+                let z: f32 = (0..d).map(|q| e[i * d + q] * c[j * d + q]).sum();
+                (z, j as i32)
+            })
+            .collect();
+        zs.sort_by(|a, b| cce::exec::topk_candidate_order(*a, *b));
+        let want: Vec<i32> = zs[..k].iter().map(|t| t.1).collect();
+        assert_eq!(row.tokens, want, "kernel top-k row {i} disagrees with argsort");
+    }
+
+    for shards in [1usize, 2, 3, 4] {
+        let fleet = local_fleet(shards, v, d, &c, &opts);
+        let merged = fleet.topk(&e, rows, k).unwrap();
+        for (i, (m, s)) in merged.rows.iter().zip(&single.rows).enumerate() {
+            assert_eq!(m.tokens, s.tokens, "{shards} shards: top-k tokens differ in row {i}");
+            for (a, b) in m.logprobs.iter().zip(&s.logprobs) {
+                assert!((a - b).abs() < 1e-5, "{shards} shards row {i}: logprob {a} vs {b}");
+            }
+            assert!((m.lse - s.lse).abs() < 1e-5);
+        }
+        fleet.shutdown();
+    }
+}
+
+#[test]
+fn merged_sampling_winners_are_bitwise_single_process() {
+    let (rows, d, v) = (16, 8, 50);
+    let (e, c, _) = problem_data(rows, d, v, 59);
+    let opts = opts1();
+    let seeds: Vec<u64> = (0..rows as u64).map(|i| i.wrapping_mul(0x9E3779B9) ^ 0xC0FFEE).collect();
+    let ip = InferProblem::new(&e, &c, rows, d, v).unwrap();
+
+    for temperature in [0.7f32, 1.0] {
+        let single = sample(&ip, &opts, temperature, &seeds).unwrap();
+        for shards in [1usize, 2, 5] {
+            let fleet = local_fleet(shards, v, d, &c, &opts);
+            let merged = fleet.sample(&e, rows, temperature, &seeds).unwrap();
+            assert_eq!(
+                merged.tokens, single.tokens,
+                "{shards} shards, T={temperature}: sampled tokens must be bitwise invariant"
+            );
+            for (a, b) in merged.logprobs.iter().zip(&single.logprobs) {
+                assert!((a - b).abs() < 1e-5, "T={temperature}: logprob {a} vs {b}");
+            }
+            fleet.shutdown();
+        }
+    }
+}
+
+#[test]
+fn sharded_scoring_matches_single_process() {
+    let (n, d, v) = (12, 8, 50);
+    let (e, c, x) = problem_data(n, d, v, 71);
+    let opts = opts1();
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let single = score(&p, &opts);
+
+    let fleet = local_fleet(3, v, d, &c, &opts);
+    let merged = fleet.score(&e, &x).unwrap();
+    assert_eq!(merged.count, single.count);
+    assert!((merged.nll - single.nll).abs() < 1e-5, "{} vs {}", merged.nll, single.nll);
+    for (i, (a, b)) in merged.logprobs.iter().zip(&single.logprobs).enumerate() {
+        assert!((a - b).abs() < 1e-5, "row {i}: logprob {a} vs {b}");
+    }
+    // score aborts its cached step: a fresh step+merge must still work.
+    let st = fleet.step(&e, &x).unwrap();
+    fleet.merge_grads(&st.lse, None, st.count).unwrap();
+    fleet.shutdown();
+}
+
+// ------------------------------------------------------------- serve engine
+
+#[test]
+fn engine_over_a_fleet_decodes_and_scores_like_single_process() {
+    let opts = KernelOptions { n_block: 16, v_block: 64, threads: 1, ..KernelOptions::default() };
+    let plain = Engine::demo(384, 16, 2, opts).unwrap();
+    let mut sharded = Engine::demo(384, 16, 2, opts).unwrap();
+    let fleet = Fleet::local(2, sharded.vocab, sharded.d_model).unwrap();
+    sharded.attach_fleet(std::sync::Arc::new(fleet)).unwrap();
+    assert_eq!(sharded.shard_count(), 2);
+
+    // Greedy decode: merged argmax tokens are bitwise the kernel's, so
+    // the decoded text is identical.
+    let reqs: Vec<GenParams> = (0..3u64)
+        .map(|s| GenParams { prompt: "the cat sat".into(), max_tokens: 8, seed: s, ..GenParams::default() })
+        .collect();
+    let a = plain.generate_batch(&reqs);
+    let b = sharded.generate_batch(&reqs);
+    for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+        let (pa, pb) = (pa.as_ref().unwrap(), pb.as_ref().unwrap());
+        assert_eq!(pa.tokens, pb.tokens, "greedy decode {i} diverged under sharding");
+        assert_eq!(pa.text, pb.text);
+    }
+
+    // Sampled decode: same Gumbel winners.
+    let reqs: Vec<GenParams> = (0..3u64)
+        .map(|s| GenParams {
+            prompt: "the cat sat".into(),
+            max_tokens: 8,
+            seed: 100 + s,
+            temperature: 0.9,
+            ..GenParams::default()
+        })
+        .collect();
+    let a = plain.generate_batch(&reqs);
+    let b = sharded.generate_batch(&reqs);
+    for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+        let (pa, pb) = (pa.as_ref().unwrap(), pb.as_ref().unwrap());
+        assert_eq!(pa.tokens, pb.tokens, "sampled decode {i} diverged under sharding");
+    }
+
+    // Teacher-forced scoring.
+    let texts = vec!["the cat sat on the mat".to_string(), "a dog".to_string()];
+    let a = plain.score_batch(&texts);
+    let b = sharded.score_batch(&texts);
+    for (sa, sb) in a.iter().zip(&b) {
+        let (sa, sb) = (sa.as_ref().unwrap(), sb.as_ref().unwrap());
+        assert_eq!(sa.count, sb.count);
+        assert!((sa.nll - sb.nll).abs() < 1e-5, "{} vs {}", sa.nll, sb.nll);
+    }
+}
+
+// ------------------------------------------- real process boundaries (TCP)
+
+/// Spawn a real `cce shard-worker` child on an ephemeral loopback port
+/// and parse its `[shard] ready` announce.  The stdout pipe is drained by
+/// a thread so the worker's clean-shutdown line never blocks or EPIPEs.
+fn spawn_worker(envs: &[(&str, &str)]) -> (std::process::Child, String) {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_cce"));
+    cmd.args(["shard-worker", "--host", "127.0.0.1", "--port", "0", "--threads", "1"])
+        .stdout(std::process::Stdio::piped());
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    let mut child = cmd.spawn().expect("spawn shard-worker");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read announce");
+        assert!(n > 0, "worker exited before announcing an address");
+        if let Some(rest) = line.trim().strip_prefix("[shard] ready proto=line addr=") {
+            break rest.to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    (child, addr)
+}
+
+fn reap(mut child: std::process::Child, bound: Duration) -> Option<i32> {
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return status.code();
+        }
+        if t0.elapsed() > bound {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("shard worker did not exit within {bound:?}");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn tcp_fleet_across_real_processes_reproduces_single_process_results() {
+    let (n, d, v) = (8, 8, 40);
+    let (e, c, x) = problem_data(n, d, v, 83);
+    let opts = opts1();
+    let p = Problem::new(&e, &c, &x, n, d, v).unwrap();
+    let single = cce_forward(&p, &opts);
+    let ip = InferProblem::new(&e, &c, n, d, v).unwrap();
+    let single_topk = topk(&ip, &opts, 4).unwrap();
+
+    let (w0, a0) = spawn_worker(&[]);
+    let (w1, a1) = spawn_worker(&[]);
+    let fleet = Fleet::connect(&[a0, a1], v, d).unwrap();
+    assert_eq!(fleet.shard_count(), 2);
+    fleet.load(&ParamBuf::from_f32_vec(c.clone(), StoreDtype::F32), &opts).unwrap();
+
+    let st = fleet.step(&e, &x).unwrap();
+    assert!((st.loss - single.loss).abs() < 1e-5, "{} vs {}", st.loss, single.loss);
+    for i in 0..n {
+        assert!((st.lse[i] - single.lse[i]).abs() < 1e-5);
+    }
+    fleet.merge_grads(&st.lse, Some(0.1), st.count).unwrap();
+
+    let merged = fleet.topk(&e, n, 4).unwrap();
+    for (m, s) in merged.rows.iter().zip(&single_topk.rows) {
+        assert_eq!(m.tokens, s.tokens, "TCP-merged top-k tokens must be bitwise the kernel's");
+    }
+
+    // Clean shutdown handshake: both children exit 0 promptly.
+    fleet.shutdown();
+    assert_eq!(reap(w0, Duration::from_secs(10)), Some(0));
+    assert_eq!(reap(w1, Duration::from_secs(10)), Some(0));
+}
+
+#[test]
+fn a_worker_crash_mid_step_is_a_pointed_error_never_a_hang() {
+    let (n, d, v) = (6, 8, 40);
+    let (e, c, x) = problem_data(n, d, v, 97);
+    let opts = opts1();
+
+    // Worker 1 dies on its 3rd request: hello and load succeed, the step
+    // kills it mid-collective with no reply — the OOM-kill shape.
+    let (w0, a0) = spawn_worker(&[]);
+    let (w1, a1) = spawn_worker(&[("CCE_FAULTS", "shard.worker_crash=3")]);
+    let fleet = Fleet::connect(&[a0, a1], v, d).unwrap();
+    fleet.load(&ParamBuf::from_f32_vec(c.clone(), StoreDtype::F32), &opts).unwrap();
+
+    let t0 = Instant::now();
+    let err = fleet.step(&e, &x).unwrap_err().to_string();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "crash detection took {:?} — that is a hang, not an error",
+        t0.elapsed()
+    );
+    assert!(err.contains("step collective failed"), "got: {err}");
+    assert!(err.contains("shard 1"), "the error must name the dead worker: {err}");
+    assert!(err.contains("restart the fleet"), "got: {err}");
+
+    assert_eq!(reap(w1, Duration::from_secs(10)), Some(3), "the faulted worker exited by fault");
+    fleet.shutdown();
+    assert_eq!(reap(w0, Duration::from_secs(10)), Some(0), "the survivor drains cleanly");
+}

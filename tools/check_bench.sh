@@ -35,6 +35,12 @@
 # --update).  The threshold is deliberately looser than the kernel gates —
 # serving latency on shared runners is noisy even after the median — and
 # incomparable runs (different shape/concurrency/simd/dtype) bootstrap.
+# When the fresh file carries the additive top-level "sharded" object (a
+# second servebench run through a --shards N worker fleet; see
+# docs/benchmarks.md), the sharded/single throughput *ratio* is gated the
+# same way: a baseline without the field bootstraps, a fresh file missing
+# a field the baseline carries is structural — the sharding-overhead gate
+# must not silently disappear.
 #
 # Exit codes: 0 = OK/bootstrap, 1 = regression (suppressible), 2 =
 # structural failure (unreadable fresh file, missing gate rows/fields —
@@ -156,6 +162,21 @@ runs = fresh.get("requests_per_sec_runs", [])
 print(f"[check_bench] serve: median {rps:.1f} req/s over {max(len(runs), 1)} run(s)"
       + (f", generate p50 {p50:.2f} ms" if p50 is not None else ""))
 
+# Sharded/single throughput ratio (additive "sharded" field: the same
+# harness through a --shards N worker fleet).  Computed on the fresh file
+# alone first so a malformed sharded row is structural even on bootstrap.
+sharded = fresh.get("sharded")
+fresh_ratio = None
+if sharded is not None:
+    srps = sharded.get("requests_per_sec")
+    if not isinstance(srps, (int, float)) or srps <= 0:
+        print("[check_bench] STRUCTURAL: fresh sharded serve row has no positive "
+              "requests_per_sec — the sharding-overhead gate cannot run")
+        sys.exit(EXIT_STRUCTURAL)
+    fresh_ratio = srps / rps
+    print(f"[check_bench] serve sharded ({sharded.get('shards')} shards): "
+          f"{srps:.1f} req/s — x{fresh_ratio:.2f} of single-process")
+
 try:
     base = json.load(open(sys.argv[2]))
 except FileNotFoundError:
@@ -180,12 +201,48 @@ if base_rps <= 0:
     sys.exit(0)
 print(f"[check_bench] serve baseline: {base_rps:.1f} req/s "
       f"({100.0 * (rps - base_rps) / base_rps:+.0f}%)")
+failures = []
 if rps < base_rps * (1.0 - MAX_DROP):
-    print(f"[check_bench] REGRESSION: serve throughput dropped: {rps:.1f} req/s vs "
-          f"baseline {base_rps:.1f} (>{MAX_DROP * 100:.0f}% drop)")
+    failures.append(f"serve throughput dropped: {rps:.1f} req/s vs "
+                    f"baseline {base_rps:.1f} (>{MAX_DROP * 100:.0f}% drop)")
+
+# Sharding-overhead gate: the sharded/single ratio, not the absolute
+# sharded req/s, so a uniformly slower runner cannot fire it — only the
+# fleet's own exchange overhead growing relative to the engine can.
+base_sharded = base.get("sharded")
+if fresh_ratio is None:
+    if base_sharded is not None:
+        print("[check_bench] STRUCTURAL: fresh serve bench is missing the sharded "
+              "row the baseline carries — the sharding-overhead gate cannot run")
+        sys.exit(EXIT_STRUCTURAL)
+elif base_sharded is None:
+    print("[check_bench] baseline has no sharded row yet — taking the fresh "
+          f"ratio (x{fresh_ratio:.2f}) as the reference")
+elif base_sharded.get("shards") != sharded.get("shards"):
+    print(f"[check_bench] sharded shape changed ({base_sharded.get('shards')} -> "
+          f"{sharded.get('shards')} shards) — not comparable, taking the fresh "
+          "ratio as the new reference")
+else:
+    base_srps = base_sharded.get("requests_per_sec", 0)
+    base_ratio = (base_srps / base_rps) if base_srps and base_rps else None
+    if base_ratio is None:
+        print("[check_bench] baseline sharded row has no throughput — "
+              "taking the fresh ratio as the reference")
+    else:
+        print(f"[check_bench] sharded/single ratio: x{fresh_ratio:.2f} "
+              f"(baseline x{base_ratio:.2f})")
+        if fresh_ratio < base_ratio * (1.0 - MAX_DROP):
+            failures.append(
+                f"sharded/single throughput ratio regressed: x{fresh_ratio:.2f} vs "
+                f"baseline x{base_ratio:.2f} (>{MAX_DROP * 100:.0f}% drop) — the "
+                "shard exchange overhead is growing")
+
+if failures:
+    for f in failures:
+        print(f"[check_bench] REGRESSION: {f}")
     print("[check_bench] rerun with BENCH_UPDATE=1 ./ci.sh (or --update) to accept")
     sys.exit(EXIT_REGRESSION)
-print("[check_bench] OK — serve throughput within the 35% gate")
+print("[check_bench] OK — serve throughput (and sharded ratio) within the 35% gate")
 PY
     if [[ "$UPDATE" == "1" && "$STATUS" -eq 1 ]]; then
         echo "[check_bench] --update: serve regression accepted deliberately"

@@ -11,11 +11,16 @@
 #   4. every `curl ` example line in README.md and docs/http_api.md is
 #      exercised VERBATIM by examples/http_quickstart.sh;
 #   5. the stdout announce-line contract is documented in
-#      docs/http_api.md.
+#      docs/http_api.md (serve) and docs/sharding.md (shard workers);
+#   6. the shard wire protocol doc (docs/sharding.md) covers every op in
+#      shard/protocol.rs SHARD_OPS, states the pinned protocol version,
+#      and every `"$CCE" ` command line in its code blocks is exercised
+#      VERBATIM by examples/shard_quickstart.sh.
 #
 # `--selftest` proves the checks bite: doctored copies of the docs (one
 # error code row removed, one metric family removed, one curl line
-# dropped from the quickstart) must each FAIL the check.
+# dropped from the quickstart, one shard op row removed, one shard
+# command dropped) must each FAIL the check.
 #
 # Runs in CI (./ci.sh, docs stage) with no toolchain needed: bash + grep
 # + sed only.
@@ -28,6 +33,8 @@ SERVING=${CHECK_DOCS_SERVING:-docs/serving.md}
 OBSERVABILITY=${CHECK_DOCS_OBSERVABILITY:-docs/observability.md}
 README=${CHECK_DOCS_README:-README.md}
 QUICKSTART=${CHECK_DOCS_QUICKSTART:-examples/http_quickstart.sh}
+SHARDING=${CHECK_DOCS_SHARDING:-docs/sharding.md}
+SHARD_QUICKSTART=${CHECK_DOCS_SHARD_QUICKSTART:-examples/shard_quickstart.sh}
 
 fail=0
 complain() { echo "check_docs: $*" >&2; fail=1; }
@@ -45,7 +52,7 @@ done
 # ---- 2. metric families ----------------------------------------------
 # Registrations span lines (name on its own line), so extract by the
 # family-name prefixes instead of the .counter("...") call shape.
-families=$(grep -rhoE '"(serve|exec|train)_[a-z0-9_]+"' rust/src | tr -d '"' | sort -u)
+families=$(grep -rhoE '"(serve|exec|train|shard)_[a-z0-9_]+"' rust/src | tr -d '"' | sort -u)
 n_fam=$(wc -w <<<"$families")
 [[ "$n_fam" -ge 30 ]] || { echo "check_docs: extracted only $n_fam metric families from rust/src — extraction broke" >&2; exit 1; }
 for fam in $families; do
@@ -53,13 +60,13 @@ for fam in $families; do
 done
 
 # ---- 3. serve CLI flags ----------------------------------------------
-flags=$(sed -n '/^fn kernel_options(/,/^}/p; /^fn dtype_override(/,/^}/p; /^fn build_engines(/,/^}/p; /^fn cmd_serve(/,/^}/p' rust/src/main.rs \
+flags=$(sed -n '/^fn kernel_options(/,/^}/p; /^fn dtype_override(/,/^}/p; /^fn build_engines(/,/^}/p; /^fn cmd_serve(/,/^}/p; /^fn shard_fleet(/,/^}/p; /^fn cmd_shard_worker(/,/^}/p' rust/src/main.rs \
     | grep -oE '\.(get|opt|flag|require|opt_all)\("[a-z-]+"' \
     | grep -oE '"[a-z-]+"' | tr -d '"' | sort -u)
 n_flags=$(wc -w <<<"$flags")
-[[ "$n_flags" -ge 15 ]] || { echo "check_docs: extracted only $n_flags serve flags from main.rs — extraction broke" >&2; exit 1; }
+[[ "$n_flags" -ge 17 ]] || { echo "check_docs: extracted only $n_flags serve flags from main.rs — extraction broke" >&2; exit 1; }
 for flag in $flags; do
-    grep -qrF -- "--$flag" "$README" "$HTTP_API" "$SERVING" "$OBSERVABILITY" docs/benchmarks.md \
+    grep -qrF -- "--$flag" "$README" "$HTTP_API" "$SERVING" "$OBSERVABILITY" "$SHARDING" docs/benchmarks.md \
         || complain "serve flag '--$flag' undocumented (README.md or docs/)"
 done
 
@@ -76,6 +83,36 @@ done < <(grep -h '^curl ' "$README" "$HTTP_API" | sort -u)
 for marker in '[serve] ready proto=line addr=' '[serve] ready proto=http addr=' '[serve] shut down cleanly'; do
     grep -qF -- "$marker" "$HTTP_API" || complain "announce line '$marker' missing from $HTTP_API"
 done
+for marker in '[shard] ready proto=line addr=' '[shard] shut down cleanly'; do
+    grep -qF -- "$marker" "$SHARDING" || complain "announce line '$marker' missing from $SHARDING"
+done
+
+# ---- 6. shard wire protocol ------------------------------------------
+# Every op in SHARD_OPS must have a section/row in docs/sharding.md
+# (backquoted, as `op`), and the doc must state the pinned protocol
+# version extracted from the source constant.
+ops=$(sed -n '/^pub const SHARD_OPS/,/^\];/p' rust/src/shard/protocol.rs \
+    | grep -oE '"[a-z]+"' | tr -d '"' | sort -u)
+n_ops=$(wc -w <<<"$ops")
+[[ "$n_ops" -ge 8 ]] || { echo "check_docs: extracted only $n_ops shard ops from shard/protocol.rs — extraction broke" >&2; exit 1; }
+for op in $ops; do
+    grep -qF "\`$op\`" "$SHARDING" || complain "shard op '$op' missing from $SHARDING"
+done
+proto_ver=$(grep -oE 'SHARD_PROTO_VERSION: i64 = [0-9]+' rust/src/shard/protocol.rs | grep -oE '[0-9]+$')
+[[ -n "$proto_ver" ]] || { echo "check_docs: could not extract SHARD_PROTO_VERSION from shard/protocol.rs" >&2; exit 1; }
+grep -qE "[Pp]rotocol version.*\b$proto_ver\b|\"proto\":\s*$proto_ver" "$SHARDING" \
+    || complain "protocol version $proto_ver not stated in $SHARDING"
+
+# Every command line in docs/sharding.md code blocks that invokes the
+# binary must be exercised VERBATIM by examples/shard_quickstart.sh —
+# the same docs-don't-rot contract the curl examples live under.
+n_shard_cmds=0
+while IFS= read -r line; do
+    n_shard_cmds=$((n_shard_cmds + 1))
+    grep -qF -- "$line" "$SHARD_QUICKSTART" \
+        || complain "shard command not exercised verbatim by $SHARD_QUICKSTART: $line"
+done < <(grep -hE '^"\$CCE" ' "$SHARDING" | sort -u)
+[[ "$n_shard_cmds" -ge 3 ]] || { echo "check_docs: found only $n_shard_cmds \"\$CCE\" command lines in $SHARDING — extraction broke" >&2; exit 1; }
 
 if [[ "$fail" -ne 0 ]]; then
     echo "check_docs: FAILED" >&2
@@ -110,7 +147,19 @@ if [[ "${1:-}" == "--selftest" ]]; then
     expect_fail "dropping a curl line from http_quickstart.sh" \
         CHECK_DOCS_QUICKSTART="$tmp/quickstart.sh"
 
+    grep -v '`merge`' docs/sharding.md > "$tmp/sharding_op.md"
+    expect_fail "removing a shard op from sharding.md" \
+        CHECK_DOCS_SHARDING="$tmp/sharding_op.md"
+
+    grep -v 'shard_exchange_bytes' docs/observability.md > "$tmp/observability_shard.md"
+    expect_fail "removing a shard metric family from observability.md" \
+        CHECK_DOCS_OBSERVABILITY="$tmp/observability_shard.md"
+
+    grep -v -- 'shard-worker' examples/shard_quickstart.sh > "$tmp/shard_quickstart.sh"
+    expect_fail "dropping a command line from shard_quickstart.sh" \
+        CHECK_DOCS_SHARD_QUICKSTART="$tmp/shard_quickstart.sh"
+
     echo "check_docs: selftest OK (all doctored docs failed as designed)"
 fi
 
-echo "check_docs: OK ($n_codes error codes, $n_fam metric families, $n_flags serve flags, $n_curl curl examples)"
+echo "check_docs: OK ($n_codes error codes, $n_fam metric families, $n_flags serve flags, $n_curl curl examples, $n_ops shard ops, $n_shard_cmds shard commands)"
